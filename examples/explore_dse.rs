@@ -1,0 +1,66 @@
+//! Design-space exploration (paper §4.2): the two-pass topological search
+//! over per-layer representations, with the hardware cost model as the
+//! pass-1 objective and accuracy as the constraint.
+//!
+//!     cargo run --release --example explore_dse
+
+use anyhow::Result;
+use lop::coordinator::eval::Evaluator;
+use lop::coordinator::explorer::{explore, ExploreOpts, Family};
+use lop::coordinator::ranges::profile_ranges;
+use lop::data::Dataset;
+use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
+use lop::nn::network::Dcnn;
+use lop::runtime::{ArtifactDir, ModelRunner};
+
+fn main() -> Result<()> {
+    let art = ArtifactDir::discover()?;
+    let dcnn = Dcnn::load(&art.weights_path())?;
+    let ds = Dataset::load(&art.dataset_path())?;
+
+    // Table 1 first: the ranges bound the integral/exponent BCIs
+    let ranges = profile_ranges(&dcnn, &ds, 1_000, 0);
+    println!("WBA ranges (drive the range-determined BCI fields):");
+    for r in &ranges {
+        let c = r.combined();
+        println!("  {:<6} [{:>7.2}, {:>6.2}]", r.layer, c.0, c.1);
+    }
+
+    let runner = ModelRunner::new(art)?;
+    let dcnn2 = Dcnn::load(&runner.art.weights_path())?;
+    let mut ev = Evaluator::new(dcnn2, Some(runner), ds, 300, 0);
+
+    let opts = ExploreOpts {
+        accuracy_bound: 0.01,
+        frac_bci: (5, 10),
+        int_headroom: 1,
+        families: vec![Family::Fixed, Family::Float],
+        second_pass: true,
+        ..Default::default()
+    };
+    println!("\nexploring: bound {:.0}%, frac BCI {:?}, families {:?}",
+             opts.accuracy_bound * 100.0, opts.frac_bci, opts.families);
+    let res = explore(&mut ev, &ranges, &opts)?;
+
+    println!("\nbaseline (subset) : {:.4}", res.baseline);
+    println!("pass-1 (cost-min) : {}  acc {:.4}", res.pass1.name(),
+             res.pass1_accuracy);
+    println!("pass-2 (recovery) : {}  acc {:.4}", res.chosen.name(),
+             res.accuracy);
+    println!("distinct configs evaluated: {}", res.evals);
+
+    // hardware verdict on the chosen per-layer representations
+    println!("\nhardware cost of the chosen per-layer domains:");
+    for (li, kind) in res.chosen.layers.iter().enumerate() {
+        let dp = Datapath::synthesize(kind, N_PE);
+        let (a, d) = dp.utilization(&ARRIA10);
+        println!(
+            "  layer {} {:<12} {:>8.0} ALMs ({:>4.1}%)  {:>4} DSPs \
+             ({:>4.1}%)  {:>6.2} Gops/J",
+            li, kind.name(), dp.alms, a * 100.0, dp.dsps, d * 100.0,
+            dp.gops_per_j
+        );
+    }
+    println!("\nexplore_dse OK");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Hardware cost analysis (paper Table 5) plus two ablation sweeps the
+//! paper's discussion motivates: energy efficiency vs fixed-point width,
+//! and the DRUM width trade-off.
+//!
+//!     cargo run --release --example hw_report
+
+use anyhow::Result;
+use lop::approx::arith::ArithKind;
+use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
+use lop::hw::report::{format_table, hw_report, table5_kinds};
+use lop::hw::rtl::datapath_verilog;
+
+fn main() -> Result<()> {
+    // --- the paper's Table 5 ------------------------------------------------
+    println!("Table 5 — {} x PE datapath on {}:\n", N_PE, ARRIA10.name);
+    print!("{}", format_table(&hw_report(&table5_kinds())));
+
+    // --- ablation 1: FI(6, f) width sweep ------------------------------------
+    println!("\nAblation: energy efficiency vs fixed-point fractional \
+              width (FI(6, f)):");
+    println!("{:<10} {:>9} {:>11} {:>9} {:>10}", "repr", "ALMs",
+             "clock MHz", "power W", "Gops/J");
+    for f in [4u32, 6, 8, 10, 12, 14] {
+        let k = ArithKind::parse(&format!("FI(6,{f})")).unwrap();
+        let dp = Datapath::synthesize(&k, N_PE);
+        println!("{:<10} {:>9.0} {:>11.2} {:>9.2} {:>10.2}", k.name(),
+                 dp.alms, dp.fmax_mhz, dp.power_w, dp.gops_per_j);
+    }
+
+    // --- ablation 2: DRUM width on H(6, 8, t) --------------------------------
+    println!("\nAblation: DRUM multiplier width t on H(6, 8, t) \
+              (smaller t = smaller multiplier, larger error):");
+    println!("{:<12} {:>9} {:>6} {:>11} {:>10}", "repr", "ALMs", "DSPs",
+             "clock MHz", "Gops/J");
+    for t in [4u32, 6, 8, 10, 12, 14] {
+        let k = ArithKind::parse(&format!("H(6,8,{t})")).unwrap();
+        let dp = Datapath::synthesize(&k, N_PE);
+        println!("{:<12} {:>9.0} {:>6} {:>11.2} {:>10.2}", k.name(),
+                 dp.alms, dp.dsps, dp.fmax_mhz, dp.gops_per_j);
+    }
+
+    // --- the ScaLop netlist view (paper §4.4) --------------------------------
+    let k = ArithKind::parse("FI(6,8)").unwrap();
+    println!("\nStructural netlist for one FI(6,8) PE (ScaLop view):");
+    let v = datapath_verilog(&k, 1);
+    println!("{v}");
+    println!("hw_report OK");
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Perf utility: batch-64 PJRT forward latency per artifact variant —
+//! the measurement behind EXPERIMENTS.md §Perf (L2 path).
+//!
+//!     cargo run --release --example pjrt_speed
+
+use lop::approx::arith::ArithKind;
+use lop::data::Dataset;
+use lop::nn::network::NetConfig;
+use lop::runtime::{ArtifactDir, ModelRunner};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let art = ArtifactDir::discover()?;
+    let ds = Dataset::load(&art.dataset_path())?;
+    let mut runner = ModelRunner::new(art)?;
+    let idx: Vec<usize> = (0..64).collect();
+    let x = ds.batch(&ds.test, &idx);
+    for cfg in [
+        NetConfig::uniform(ArithKind::Float32),
+        NetConfig::parse("FI(6,8)").unwrap(),
+        NetConfig::parse("FL(4,9)").unwrap(),
+    ] {
+        runner.forward(&cfg, &x)?; // compile + warm
+        let t0 = Instant::now();
+        for _ in 0..5 {
+            runner.forward(&cfg, &x)?;
+        }
+        let per = t0.elapsed() / 5;
+        println!("{:<10} batch64 fwd: {:?} ({:.1} img/s)", cfg.name(),
+                 per, 64.0 / per.as_secs_f64());
+    }
+    Ok(())
+}

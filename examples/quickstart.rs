@@ -1,0 +1,64 @@
+//! Quickstart: load the AOT artifacts, classify a few test digits under
+//! float32 and FI(6, 8), and show that the narrow fixed-point
+//! representation keeps the predictions (the paper's headline claim for
+//! FI(6, 8), Table 4).
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use lop::approx::arith::ArithKind;
+use lop::data::Dataset;
+use lop::nn::network::{Dcnn, NetConfig};
+use lop::runtime::{ArtifactDir, ModelRunner};
+
+fn main() -> Result<()> {
+    // 1. artifacts: HLO text + weights + dataset, produced by `make
+    //    artifacts` (python runs once at build time, never here)
+    let art = ArtifactDir::discover()?;
+    println!("artifacts at {:?} (baseline accuracy {:.4})", art.root,
+             art.baseline_accuracy);
+    let dcnn = Dcnn::load(&art.weights_path())?;
+    let ds = Dataset::load(&art.dataset_path())?;
+
+    // 2. a batch of test digits
+    let idx: Vec<usize> = (0..16).collect();
+    let x = ds.batch(&ds.test, &idx);
+    let labels = &ds.test.labels[0..16];
+
+    // 3. run float32 on the PJRT runtime (XLA-compiled artifact)
+    let mut runner = ModelRunner::new(art)?;
+    let f32cfg = NetConfig::uniform(ArithKind::Float32);
+    let f32_pred = runner.forward(&f32cfg, &x)?.argmax_rows();
+
+    // 4. the same batch under the paper's winning FI(6, 8) config —
+    //    PJRT fake-quant path and the bit-accurate Rust engine agree
+    let fi = NetConfig::parse("FI(6,8)").map_err(anyhow::Error::msg)?;
+    let fi_pjrt = runner.forward(&fi, &x)?.argmax_rows();
+    let fi_engine = dcnn.prepare(fi).predict(&x, 0);
+
+    println!("\n{:<8} {:>6} {:>8} {:>10} {:>12}", "image", "label",
+             "float32", "FI(6,8)", "FI engine");
+    for i in 0..16 {
+        println!("{:<8} {:>6} {:>8} {:>10} {:>12}", i, labels[i],
+                 f32_pred[i], fi_pjrt[i], fi_engine[i]);
+    }
+    let agree = fi_pjrt.iter().zip(&f32_pred).filter(|(a, b)| a == b)
+        .count();
+    println!("\nFI(6,8) agrees with float32 on {agree}/16 predictions");
+    assert_eq!(fi_pjrt, fi_engine,
+               "PJRT fake-quant and bit-accurate engine must agree");
+
+    // 5. what that representation costs in hardware (Table 5 model)
+    use lop::hw::datapath::{Datapath, N_PE};
+    for cfg in [&f32cfg, &fi] {
+        let dp = Datapath::synthesize(&cfg.layers[0], N_PE);
+        println!(
+            "{:<10} {:>9.0} ALMs  {:>4} DSPs  {:>7.2} MHz  {:>6.2} W  \
+             {:>6.2} Gops/J",
+            cfg.name(), dp.alms, dp.dsps, dp.fmax_mhz, dp.power_w,
+            dp.gops_per_j
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! END-TO-END DRIVER (DESIGN.md Fig.-1 row): the full Lop stack serving a
+//! real workload — router → per-config dynamic batcher → PJRT worker
+//! (exact-arithmetic configs, XLA-compiled AOT artifacts) + bit-accurate
+//! engine workers (approximate-multiplier configs) — under an open-loop
+//! request stream, reporting latency percentiles, throughput and stream
+//! accuracy.  Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//!     make artifacts && cargo run --release --example serve_inference
+
+use anyhow::Result;
+use lop::coordinator::server::{Server, ServerOpts};
+use lop::data::synth;
+use lop::nn::network::NetConfig;
+use lop::util::prng::Rng;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    let configs = vec![
+        NetConfig::parse("float32").unwrap(),
+        NetConfig::parse("FI(6,8)").unwrap(),
+        NetConfig::parse("FL(4,9)").unwrap(),
+        NetConfig::parse("H(6,8,12)").unwrap(), // engine-backed
+    ];
+    let names: Vec<String> = configs.iter().map(|c| c.name()).collect();
+    let opts = ServerOpts {
+        configs,
+        max_batch: 16,
+        max_wait: Duration::from_millis(4),
+        queue_capacity: 8_192,
+        engine_workers: 3,
+        engine_gemm_threads: 2,
+        use_pjrt: true,
+    };
+    let requests = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(2_000usize);
+    let rate = 400.0; // offered load, req/s
+
+    println!("configs: {names:?}");
+    println!("load: {requests} requests at {rate} req/s (open loop)");
+
+    let server = Server::start(opts)?;
+    let metrics = server.metrics.clone();
+
+    // warm up: run one request per config through to force compilation
+    let (wtx, wrx) = channel();
+    for ci in 0..names.len() {
+        server
+            .router
+            .submit(ci, vec![0.0; 784], wtx.clone())
+            .expect("warmup submit");
+    }
+    for _ in 0..names.len() {
+        wrx.recv_timeout(Duration::from_secs(120)).expect("warmup");
+    }
+    println!("warmup complete (executables compiled, weights resident)");
+
+    // open-loop generator
+    let (tx, rx) = channel();
+    let (images, labels) = synth::generate(512, 777);
+    let mut rng = Rng::new(5);
+    let t0 = Instant::now();
+    let gap = Duration::from_secs_f64(1.0 / rate);
+    let mut next = Instant::now();
+    let mut rejected = 0usize;
+    let mut submitted_cfg = vec![0usize; requests];
+    for i in 0..requests {
+        let now = Instant::now();
+        if now < next {
+            std::thread::sleep(next - now);
+        }
+        next += gap;
+        let img_idx = i % 512;
+        let img: Vec<f32> = images[img_idx * 784..(img_idx + 1) * 784]
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect();
+        let ci = rng.below(names.len() as u64) as usize;
+        submitted_cfg[i] = ci;
+        if server.router.submit(ci, img, tx.clone()).is_err() {
+            rejected += 1;
+        }
+    }
+    drop(tx);
+
+    let mut got = 0usize;
+    let mut correct = 0usize;
+    while got + rejected < requests {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(resp) => {
+                got += 1;
+                // warmup used ids 0..n_cfg; offset stream ids
+                let sid = resp.id as usize - names.len();
+                if resp.pred == labels[sid % 512] as usize {
+                    correct += 1;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let wall = t0.elapsed();
+    server.shutdown();
+
+    println!("\n================ end-to-end results ================");
+    println!("served     : {got} / {requests} (rejected {rejected})");
+    println!("throughput : {:.1} req/s (offered {rate})",
+             got as f64 / wall.as_secs_f64());
+    println!("accuracy   : {:.4} over the mixed-config stream",
+             correct as f64 / got.max(1) as f64);
+    println!("{}", metrics.summary(wall));
+    assert!(got > 0, "server returned no responses");
+    let acc = correct as f64 / got.max(1) as f64;
+    assert!(acc > 0.8, "stream accuracy {acc} suspiciously low");
+    println!("serve_inference OK");
+    Ok(())
+}

@@ -1,0 +1,293 @@
+"""AOT exporter: the single build-time entry point (``make artifacts``).
+
+Produces everything the Rust side consumes:
+
+  artifacts/
+    weights.npz           trained float32 parameters (python-side cache)
+    weights.bin           LOPW format for rust/src/nn/loader.rs
+    dataset.bin           LOPD format for rust/src/data/loader.rs
+    ranges.json           per-layer WBA value ranges (paper Table 1)
+    meta.json             baseline accuracy + artifact inventory
+    fwd_f32_b{B}.hlo.txt  baseline forward, batch B
+    fwd_fi_b{B}.hlo.txt   fixed-point fake-quant forward (runtime widths)
+    fwd_fl_b{B}.hlo.txt   float(e,m) fake-quant forward (runtime widths)
+    golden/*.bin          golden vectors from bitref.py for cargo test
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Parameter order of every fwd artifact (the Rust runtime mirrors this):
+    x, conv1_w, conv1_b, conv2_w, conv2_b, fc1_w, fc1_b, fc2_w, fc2_b
+    [, q0..q7]   (fi/fl variants: two quant scalars per layer, f32)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitref
+from . import data as dataset
+from . import train as trainer
+from .model import activation_ranges, forward, param_names
+
+BATCH_SIZES = (1, 16, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_forward(params: dict, batch: int, mode: str) -> str:
+    """Lower one forward variant to HLO text with weights as parameters."""
+    names = param_names()
+
+    if mode == "none":
+        def fn(x, *weights):
+            p = dict(zip(names, weights))
+            return (forward(p, x, "none"),)
+        args = [jax.ShapeDtypeStruct((batch, 28, 28, 1), jnp.float32)]
+        args += [jax.ShapeDtypeStruct(np.asarray(params[n]).shape,
+                                      jnp.float32) for n in names]
+    else:
+        def fn(x, *rest):
+            weights, qs = rest[:8], rest[8:]
+            p = dict(zip(names, weights))
+            return (forward(p, x, mode, qs),)
+        args = [jax.ShapeDtypeStruct((batch, 28, 28, 1), jnp.float32)]
+        args += [jax.ShapeDtypeStruct(np.asarray(params[n]).shape,
+                                      jnp.float32) for n in names]
+        args += [jax.ShapeDtypeStruct((), jnp.float32)] * 8
+
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# golden vectors (bitref -> rust cross-validation)
+# ---------------------------------------------------------------------------
+
+
+def _write_golden(path: str, fmt: str, records: list[tuple]) -> None:
+    rec = struct.Struct("<" + fmt)
+    with open(path, "wb") as fh:
+        fh.write(b"LOPG")
+        fh.write(struct.pack("<III", 1, len(records), rec.size))
+        for r in records:
+            fh.write(rec.pack(*r))
+
+
+def write_golden_vectors(outdir: str, seed: int = 42) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    inventory = {}
+
+    # ---- FI quantization: (x f32, i u32, f u32, y f32)
+    recs = []
+    cfgs = [(4, 8), (6, 8), (5, 10), (2, 3), (0, 7), (8, 0), (1, 1)]
+    xs = np.concatenate([
+        rng.normal(0, 10, 400), rng.normal(0, 0.05, 200),
+        np.array([0.0, -0.0, 1e-9, -1e-9, 1e6, -1e6, 0.5, -0.5]),
+    ]).astype(np.float32)
+    for i, f in cfgs:
+        # exact-tie inputs for the rounding path
+        ties = (np.arange(-8, 8) + 0.5) / float(2 ** f)
+        for x in np.concatenate([xs, ties.astype(np.float32)]):
+            recs.append((float(x), i, f, bitref.fi_quantize(float(x), i, f)))
+    _write_golden(os.path.join(outdir, "fi_quant.bin"), "fIIf", recs)
+    inventory["fi_quant"] = len(recs)
+
+    # ---- FL quantization: (x f32, e u32, m u32, y f32)
+    recs = []
+    cfgs = [(4, 8), (4, 9), (5, 10), (3, 4), (2, 2), (7, 15), (4, 1)]
+    mags = np.exp(rng.uniform(np.log(1e-6), np.log(1e6), 500))
+    signs = rng.choice([-1.0, 1.0], 500)
+    xs = np.concatenate([
+        (mags * signs), np.array([0.0, -0.0, 1.0, -1.0, 1.5, 2.0 ** 20,
+                                  -2.0 ** 20, 3e-5, 2.0 ** -40]),
+    ]).astype(np.float32)
+    for e, m in cfgs:
+        for x in xs:
+            recs.append((float(x), e, m, bitref.fl_quantize(float(x), e, m)))
+    _write_golden(os.path.join(outdir, "fl_quant.bin"), "fIIf", recs)
+    inventory["fl_quant"] = len(recs)
+
+    # ---- DRUM: (a u64, b u64, k u32, pad u32, prod u64)
+    recs = []
+    for nbits, k in [(8, 4), (14, 6), (16, 12), (16, 14), (22, 8)]:
+        a = rng.integers(0, 1 << nbits, 300)
+        b = rng.integers(0, 1 << nbits, 300)
+        for aa, bb in zip(a, b):
+            recs.append((int(aa), int(bb), k, 0,
+                         bitref.drum_mul(int(aa), int(bb), k)))
+    _write_golden(os.path.join(outdir, "drum.bin"), "QQIIQ", recs)
+    inventory["drum"] = len(recs)
+
+    # ---- CFPU: (x f32, y f32, e u32, m u32, w u32, pad u32, res f32, pad f32)
+    recs = []
+    for e, m, w in [(4, 9, 2), (5, 10, 3), (4, 8, 4), (4, 9, 9)]:
+        mags = np.exp(rng.uniform(np.log(1e-3), np.log(1e3), 400))
+        xs_ = (mags * rng.choice([-1.0, 1.0], 400)).astype(np.float32)
+        ys_ = np.roll(xs_, 1) * 0.7
+        special = np.array([1.0, 2.0, 0.5, 1.999, 1.0 + 2 ** -9, 0.0],
+                           np.float32)
+        xs2 = np.concatenate([xs_, special])
+        ys2 = np.concatenate([ys_, np.full(len(special), 3.3, np.float32)])
+        for x, y in zip(xs2, ys2):
+            recs.append((float(x), float(y), e, m, w, 0,
+                         bitref.cfpu_mul(float(x), float(y), e, m, w), 0.0))
+    _write_golden(os.path.join(outdir, "cfpu.bin"), "ffIIIIff", recs)
+    inventory["cfpu"] = len(recs)
+
+    # ---- H multiplier: (x f32, y f32, i u32, f u32, t u32, pad u32, res f32,
+    #                     pad f32)
+    recs = []
+    for i, f, t in [(6, 8, 12), (8, 8, 14), (6, 8, 6), (4, 4, 3)]:
+        xs_ = rng.normal(0, 3, 400).astype(np.float32)
+        ys_ = rng.normal(0, 3, 400).astype(np.float32)
+        for x, y in zip(xs_, ys_):
+            recs.append((float(x), float(y), i, f, t, 0,
+                         bitref.h_mul(float(x), float(y), i, f, t), 0.0))
+    _write_golden(os.path.join(outdir, "h_mul.bin"), "ffIIIIff", recs)
+    inventory["h_mul"] = len(recs)
+
+    # ---- Mitchell: (a u64, b u64, nfrac u32, pad u32, prod u64)
+    recs = []
+    for nbits, nf in [(8, 16), (16, 16), (16, 8)]:
+        a = rng.integers(0, 1 << nbits, 300)
+        b = rng.integers(0, 1 << nbits, 300)
+        for aa, bb in zip(a, b):
+            recs.append((int(aa), int(bb), nf, 0,
+                         bitref.mitchell_mul(int(aa), int(bb), nf)))
+    _write_golden(os.path.join(outdir, "mitchell.bin"), "QQIIQ", recs)
+    inventory["mitchell"] = len(recs)
+
+    # ---- Truncated mul: (a u64, b u64, n u32, keep u32, prod u64)
+    recs = []
+    for n, keep in [(8, 6), (16, 12), (16, 16), (14, 8)]:
+        a = rng.integers(0, 1 << n, 300)
+        b = rng.integers(0, 1 << n, 300)
+        for aa, bb in zip(a, b):
+            recs.append((int(aa), int(bb), n, keep,
+                         bitref.truncated_mul(int(aa), int(bb), n, keep)))
+    _write_golden(os.path.join(outdir, "truncated.bin"), "QQIIQ", recs)
+    inventory["truncated"] = len(recs)
+
+    # ---- SSM: (a u64, b u64, w u32, n u32, prod u64)
+    recs = []
+    for w, n in [(16, 8), (16, 10), (8, 4), (24, 12)]:
+        a = rng.integers(0, 1 << w, 300)
+        b = rng.integers(0, 1 << w, 300)
+        for aa, bb in zip(a, b):
+            recs.append((int(aa), int(bb), w, n,
+                         bitref.ssm_mul(int(aa), int(bb), w, n)))
+    _write_golden(os.path.join(outdir, "ssm.bin"), "QQIIQ", recs)
+    inventory["ssm"] = len(recs)
+
+    # ---- LOA adder: (a u64, b u64, l u32, pad u32, sum u64)
+    recs = []
+    for nbits, l in [(8, 3), (16, 6), (16, 0), (24, 10)]:
+        a = rng.integers(0, 1 << nbits, 300)
+        b = rng.integers(0, 1 << nbits, 300)
+        for aa, bb in zip(a, b):
+            recs.append((int(aa), int(bb), l, 0,
+                         bitref.loa_add(int(aa), int(bb), l)))
+    _write_golden(os.path.join(outdir, "loa.bin"), "QQIIQ", recs)
+    inventory["loa"] = len(recs)
+
+    return inventory
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--retrain", action="store_true",
+                    help="retrain even if weights.npz exists")
+    ap.add_argument("--skip-hlo", action="store_true",
+                    help="skip HLO lowering (tests that only need data)")
+    args = ap.parse_args()
+
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    meta = {"paper": "Nazemi & Pedram, Lop (2018)", "batch_sizes":
+            list(BATCH_SIZES)}
+
+    # ---- train or reload --------------------------------------------------
+    wpath = os.path.join(out, "weights.npz")
+    if os.path.exists(wpath) and not args.retrain:
+        print(f"reusing trained weights: {wpath}", flush=True)
+        params = trainer.load_weights_npz(wpath)
+        tr_u8, tr_y = dataset.generate(2000, seed=7)
+        te_u8, te_y = dataset.generate(2000, seed=8)
+        acc = trainer.evaluate(params, dataset.to_float(te_u8), te_y)
+    else:
+        params, (tr_u8full, tr_y_full), (te_u8, te_y), acc = trainer.train(
+            steps=args.steps, n_train=8000, n_test=2000, seed=7)
+        trainer.save_weights_npz(wpath, params)
+        # keep a 2000-image slice of the training set for range profiling
+        tr_u8, tr_y = tr_u8full[:2000], tr_y_full[:2000]
+    print(f"baseline float32 test accuracy: {acc:.4f}", flush=True)
+    meta["baseline_accuracy"] = acc
+
+    trainer.save_weights_bin(os.path.join(out, "weights.bin"), params)
+    dataset.write_dataset_bin(os.path.join(out, "dataset.bin"),
+                              tr_u8, tr_y, te_u8, te_y)
+
+    # ---- Table 1: value ranges --------------------------------------------
+    ranges = activation_ranges(params,
+                               jnp.asarray(dataset.to_float(tr_u8))[..., None])
+    with open(os.path.join(out, "ranges.json"), "w") as fh:
+        json.dump(ranges, fh, indent=1)
+    print("ranges.json written (Table 1):", flush=True)
+    for layer, r in ranges.items():
+        print(f"  {layer:6s} range [{r['range'][0]:.2f}, "
+              f"{r['range'][1]:.2f}]", flush=True)
+
+    # ---- golden vectors ----------------------------------------------------
+    inv = write_golden_vectors(os.path.join(out, "golden"))
+    meta["golden"] = inv
+    print(f"golden vectors: {sum(inv.values())} records", flush=True)
+
+    # ---- HLO artifacts ------------------------------------------------------
+    hashes = {}
+    if not args.skip_hlo:
+        for mode, tag in (("none", "f32"), ("fi", "fi"), ("fl", "fl")):
+            for b in BATCH_SIZES:
+                name = f"fwd_{tag}_b{b}.hlo.txt"
+                print(f"lowering {name} ...", flush=True)
+                text = lower_forward(params, b, mode)
+                p = os.path.join(out, name)
+                with open(p, "w") as fh:
+                    fh.write(text)
+                hashes[name] = hashlib.sha256(text.encode()).hexdigest()[:16]
+                print(f"  {len(text)} chars", flush=True)
+    meta["hlo"] = hashes
+
+    with open(os.path.join(out, "meta.json"), "w") as fh:
+        json.dump(meta, fh, indent=1)
+    print("artifacts complete.", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,374 @@
+"""Bit-accurate pure-Python reference for Lop's numeric formats and
+approximate arithmetic units.
+
+This module is the *single source of truth* for arithmetic semantics:
+
+  * the jnp fake-quant emulation (``quant.py``) is tested against it in
+    pytest, and
+  * the Rust implementations (``rust/src/numeric``, ``rust/src/approx``) are
+    tested against golden vectors generated from it (``aot.py`` writes
+    ``artifacts/golden/*.bin``).
+
+Formats (paper Table 2):
+  FI(i, f)    sign-magnitude fixed point, i integral + f fractional bits.
+  FL(e, m)    float with e exponent bits, m mantissa bits, implied leading 1,
+              IEEE-like bias, exponent field 0 reserved for zero
+              (subnormals flushed), no inf/nan (top exponent is ordinary).
+  H(i, f, t)  FI(i, f) with the DRUM(t) approximate multiplier
+              [Hashemi et al., ICCAD'15].
+  I(e, m)     FL(e, m) with the CFPU approximate multiplier
+              [Imani et al., DAC'17].
+
+Everything here is deliberately scalar and simple — clarity over speed.
+"""
+
+from __future__ import annotations
+
+import math
+
+# ---------------------------------------------------------------------------
+# Fixed point FI(i, f) — sign magnitude
+# ---------------------------------------------------------------------------
+
+
+def fi_max(i: int, f: int) -> float:
+    """Largest representable magnitude: 2^i - 2^-f."""
+    return (2 ** (i + f) - 1) / float(2 ** f)
+
+
+def fi_quantize(x: float, i: int, f: int) -> float:
+    """Round ``x`` to the nearest FI(i, f) value.
+
+    Rounding is round-half-away-from-zero on the magnitude (matches a simple
+    hardware round-and-saturate unit); magnitudes saturate at fi_max.
+    """
+    scale = float(2 ** f)
+    maxk = 2 ** (i + f) - 1
+    mag = abs(x) * scale
+    k = math.floor(mag + 0.5)
+    if k > maxk:
+        k = maxk
+    v = k / scale
+    return -v if (x < 0 and v != 0.0) else v
+
+
+def fi_encode(x: float, i: int, f: int) -> int:
+    """Encode to the (1+i+f)-bit sign-magnitude integer pattern."""
+    scale = float(2 ** f)
+    maxk = 2 ** (i + f) - 1
+    mag = abs(x) * scale
+    k = min(math.floor(mag + 0.5), maxk)
+    sign = 1 if (x < 0 and k != 0) else 0
+    return (sign << (i + f)) | k
+
+
+def fi_decode(bits: int, i: int, f: int) -> float:
+    mask = (1 << (i + f)) - 1
+    k = bits & mask
+    sign = (bits >> (i + f)) & 1
+    v = k / float(2 ** f)
+    return -v if sign else v
+
+
+# ---------------------------------------------------------------------------
+# Floating point FL(e, m)
+# ---------------------------------------------------------------------------
+
+
+def fl_bias(e: int) -> int:
+    return 2 ** (e - 1) - 1
+
+
+def fl_emin(e: int) -> int:
+    # Exponent field 0 is reserved for zero -> smallest normal has field 1.
+    return 1 - fl_bias(e)
+
+
+def fl_emax(e: int) -> int:
+    # No inf/nan: the top exponent field encodes an ordinary value.
+    return (2 ** e - 1) - fl_bias(e)
+
+
+def fl_max(e: int, m: int) -> float:
+    return (2.0 - 2.0 ** (-m)) * (2.0 ** fl_emax(e))
+
+
+def fl_min_normal(e: int) -> float:
+    return 2.0 ** fl_emin(e)
+
+
+def _round_half_even_int(x: float) -> int:
+    lo = math.floor(x)
+    frac = x - lo
+    if frac > 0.5:
+        return lo + 1
+    if frac < 0.5:
+        return lo
+    return lo + (lo & 1)
+
+
+def fl_quantize(x: float, e: int, m: int) -> float:
+    """Round ``x`` to the nearest FL(e, m) value.
+
+    Mantissa rounding is round-half-to-even; overflow saturates to fl_max;
+    values whose rounded magnitude is below the smallest normal round to
+    the nearer of {0, min_normal} (ties to min_normal); -0 normalizes to 0.
+
+    Requires m >= 1: a 0-bit mantissa degenerates into the logarithmic
+    representation, whose tie-breaking has no mantissa parity to round to.
+    """
+    assert m >= 1, "FL requires at least one mantissa bit (see docstring)"
+    if x == 0.0 or x != x:  # zero (or nan guard: treat as 0 -- no nan format)
+        return 0.0
+    sign = -1.0 if x < 0 else 1.0
+    a = abs(x)
+    eu = math.floor(math.log2(a))
+    # Guard logarithm edge cases: ensure 1 <= sig < 2.
+    sig = a / (2.0 ** eu)
+    if sig >= 2.0:
+        eu += 1
+        sig /= 2.0
+    elif sig < 1.0:
+        eu -= 1
+        sig *= 2.0
+    k = _round_half_even_int(sig * (2 ** m))
+    if k == 2 ** (m + 1):
+        k = 2 ** m
+        eu += 1
+    y = (k / float(2 ** m)) * (2.0 ** eu)
+
+    if y > fl_max(e, m):
+        return sign * fl_max(e, m)
+    mn = fl_min_normal(e)
+    if y < mn:
+        # round to nearer of 0 / min-normal, ties to min-normal
+        return sign * (mn if a * 2.0 >= mn else 0.0)
+    return sign * y
+
+
+def fl_encode(x: float, e: int, m: int) -> int:
+    """Encode to the (1+e+m)-bit pattern (sign | exponent | mantissa)."""
+    q = fl_quantize(x, e, m)
+    if q == 0.0:
+        return 0
+    sign = 1 if q < 0 else 0
+    a = abs(q)
+    eu = math.floor(math.log2(a))
+    sig = a / (2.0 ** eu)
+    if sig >= 2.0:
+        eu += 1
+        sig /= 2.0
+    elif sig < 1.0:
+        eu -= 1
+        sig *= 2.0
+    field = eu + fl_bias(e)
+    man = int(round((sig - 1.0) * (2 ** m)))
+    assert 1 <= field <= 2 ** e - 1, (x, e, m, field)
+    return (sign << (e + m)) | (field << m) | man
+
+
+def fl_decode(bits: int, e: int, m: int) -> float:
+    man = bits & ((1 << m) - 1)
+    field = (bits >> m) & ((1 << e) - 1)
+    sign = (bits >> (e + m)) & 1
+    if field == 0:
+        return 0.0
+    v = (1.0 + man / float(2 ** m)) * 2.0 ** (field - fl_bias(e))
+    return -v if sign else v
+
+
+# ---------------------------------------------------------------------------
+# DRUM(k) — dynamic-range unbiased multiplier (unsigned integer core)
+# ---------------------------------------------------------------------------
+
+
+def drum_approx_operand(a: int, k: int) -> int:
+    """DRUM operand conditioning: keep the k bits below/at the leading one,
+    force the LSB of the kept window to 1 (unbiasing), zero the rest."""
+    if a < (1 << k):
+        return a
+    t = a.bit_length() - 1        # leading-one position
+    sh = t - k + 1                # bits dropped
+    return ((a >> sh) | 1) << sh
+
+
+def drum_mul(a: int, b: int, k: int) -> int:
+    """DRUM(k) product of two unsigned integers."""
+    return drum_approx_operand(a, k) * drum_approx_operand(b, k)
+
+
+def h_mul(x: float, y: float, i: int, f: int, t: int) -> float:
+    """H(i, f, t): quantize to FI(i,f), multiply magnitudes with DRUM(t),
+    saturate the product back into FI(i,f) (the datapath keeps 2f fractional
+    bits internally; the result is re-quantized to the representation)."""
+    ka = fi_encode(x, i, f)
+    kb = fi_encode(y, i, f)
+    mask = (1 << (i + f)) - 1
+    sa, ma = (ka >> (i + f)) & 1, ka & mask
+    sb, mb = (kb >> (i + f)) & 1, kb & mask
+    prod = drum_mul(ma, mb, t)           # 2(i+f) bits, 2f fractional
+    v = prod / float(2 ** (2 * f))
+    v = fi_quantize(v, i, f)
+    neg = (sa ^ sb) == 1 and v != 0.0
+    return -v if neg else v
+
+
+# ---------------------------------------------------------------------------
+# CFPU — configurable floating-point multiplier (approximate)
+# ---------------------------------------------------------------------------
+
+
+def _fl_parts(x: float, e: int, m: int):
+    """Decompose a (quantized) FL(e,m) value into (sign, exp_field, mantissa).
+    Returns None for zero."""
+    bits = fl_encode(x, e, m)
+    man = bits & ((1 << m) - 1)
+    field = (bits >> m) & ((1 << e) - 1)
+    sign = (bits >> (e + m)) & 1
+    if field == 0:
+        return None
+    return sign, field, man
+
+
+def cfpu_mul(x: float, y: float, e: int, m: int, w: int) -> float:
+    """CFPU(w): approximate FL(e,m) multiply.
+
+    The mantissa multiplier is skipped when one operand's mantissa is close
+    to a power of two: if the top ``w`` mantissa bits of an operand are all
+    zero the product is approximated by the *other* operand with exponents
+    added; if they are all one, the same with an exponent increment
+    (operand ~ next power of two).  Otherwise falls back to the exact
+    multiply (rounded to FL(e,m)).  This is the "configurable" tuning knob
+    of Imani et al. (DAC'17) generalized to arbitrary e/m.
+    """
+    px = _fl_parts(x, e, m)
+    py = _fl_parts(y, e, m)
+    if px is None or py is None:
+        return 0.0
+    sx, fx, mx = px
+    sy, fy, my = py
+    sign = -1.0 if (sx ^ sy) else 1.0
+    top = (1 << w) - 1
+    bias = fl_bias(e)
+
+    def approx(keep_field: int, keep_man: int, drop_field: int,
+               round_up: bool) -> float:
+        eu = (keep_field - bias) + (drop_field - bias) + (1 if round_up else 0)
+        y_ = (1.0 + keep_man / float(2 ** m)) * 2.0 ** eu
+        y_ = min(y_, fl_max(e, m))
+        mn = fl_min_normal(e)
+        if y_ < mn:
+            y_ = mn if y_ * 2.0 >= mn else 0.0
+        return sign * y_
+
+    if w <= m:
+        ytop = (my >> (m - w)) & top
+        if ytop == 0:
+            return approx(fx, mx, fy, False)
+        if ytop == top:
+            return approx(fx, mx, fy, True)
+        xtop = (mx >> (m - w)) & top
+        if xtop == 0:
+            return approx(fy, my, fx, False)
+        if xtop == top:
+            return approx(fy, my, fx, True)
+    # exact fallback
+    xv = fl_decode(fl_encode(x, e, m), e, m)
+    yv = fl_decode(fl_encode(y, e, m), e, m)
+    return fl_quantize(xv * yv, e, m)
+
+
+# ---------------------------------------------------------------------------
+# Mitchell logarithmic multiplier (unsigned integer core)
+# ---------------------------------------------------------------------------
+
+
+def mitchell_mul(a: int, b: int, nfrac: int = 16) -> int:
+    """Mitchell's log-multiply on unsigned ints with nfrac-bit log fraction.
+
+    log2(v) ~ t + (v - 2^t)/2^t for v = 2^t + r.  The antilog uses the same
+    linear approximation.  Returns an integer approximation of a*b.
+    """
+    if a == 0 or b == 0:
+        return 0
+
+    def log2_fix(v: int) -> int:
+        t = v.bit_length() - 1
+        frac = ((v - (1 << t)) << nfrac) >> t
+        return (t << nfrac) | frac
+
+    s = log2_fix(a) + log2_fix(b)
+    t = s >> nfrac
+    frac = s & ((1 << nfrac) - 1)
+    # antilog: 2^(t+frac) ~ 2^t * (1 + frac)
+    if t >= nfrac:
+        return ((1 << nfrac) + frac) << (t - nfrac)
+    return ((1 << nfrac) + frac) >> (nfrac - t)
+
+
+# ---------------------------------------------------------------------------
+# Truncated multiplier (Chang & Satzoda style, generalized width)
+# ---------------------------------------------------------------------------
+
+
+def truncated_mul(a: int, b: int, n: int, keep: int) -> int:
+    """n x n unsigned multiply that discards partial-product columns below
+    column ``n - keep`` and adds a constant compensation term of half the
+    expected dropped weight."""
+    if keep >= n:
+        return a * b
+    cut = n - keep            # lowest `cut` columns dropped
+    acc = 0
+    for j in range(n):
+        if not ((b >> j) & 1):
+            continue
+        pp = a << j
+        acc += (pp >> cut) << cut
+    comp = 1 << (cut - 1) if cut >= 1 else 0
+    return acc + comp
+
+
+# ---------------------------------------------------------------------------
+# Lower-part-OR adder (LOA)
+# ---------------------------------------------------------------------------
+
+
+def loa_add(a: int, b: int, l: int) -> int:
+    """Approximate adder: exact add on the high part, bitwise OR on the low
+    ``l`` bits, carry-in generated by AND of the MSBs of the low parts."""
+    if l == 0:
+        return a + b
+    mask = (1 << l) - 1
+    lo = (a & mask) | (b & mask)
+    cin = ((a >> (l - 1)) & 1) & ((b >> (l - 1)) & 1)
+    hi = (a >> l) + (b >> l) + cin
+    return (hi << l) | lo
+
+
+# ---------------------------------------------------------------------------
+# SSM — static segment multiplier (Narayanamoorthy et al., TVLSI'15)
+# ---------------------------------------------------------------------------
+
+
+def ssm_segment(a: int, w: int, n: int) -> tuple[int, int]:
+    """Pick the n-bit segment of a w-bit operand: the high segment
+    [w-1 .. w-n] when any of its bits is set, else the low segment
+    [n-1 .. 0].  Returns (segment_value, shift).
+
+    Requires 2n >= w so the two static positions cover every operand
+    (the TVLSI'15 design point, e.g. 8-bit segments of 16-bit operands);
+    narrower segments need the multi-position variant."""
+    assert 0 < n <= w and 2 * n >= w, (w, n)
+    hi = a >> (w - n)
+    if hi != 0:
+        return hi, w - n
+    return a & ((1 << n) - 1), 0
+
+
+def ssm_mul(a: int, b: int, w: int, n: int) -> int:
+    """SSM product: multiply the two n-bit segments exactly, shift back.
+    Unlike DRUM the segment positions are static (two choices), which
+    simplifies the mux network at a higher worst-case error."""
+    sa, sha = ssm_segment(a, w, n)
+    sb, shb = ssm_segment(b, w, n)
+    return (sa * sb) << (sha + shb)

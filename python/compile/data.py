@@ -1,0 +1,165 @@
+"""Synthetic handwritten-digit dataset (MNIST substitute).
+
+The paper evaluates Lop on MNIST, which is used purely as a *quality probe*
+for data-representation choices.  This environment has no network access, so
+we procedurally generate a deterministic 10-class 28x28 grayscale digit set:
+a 5x7 bitmap glyph per class, rendered through a random affine transform
+(rotation / scale / shear / translation), stroke dilation, blur, contrast
+jitter and additive noise.  The accuracy-vs-bit-width cliffs the paper
+studies are a property of the trained network, not of MNIST itself; see
+DESIGN.md section 3 (Substitutions).
+
+Pixels are quantized to u8 before use so the dataset is bit-identical when
+re-read from ``artifacts/dataset.bin`` by the Rust side.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+H = W = 28
+
+# Classic 5x7 dot-matrix font, rows top->bottom, '#' = on.
+_GLYPHS = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00010", "00100", "01000", "11111"],
+    3: ["11111", "00010", "00100", "00010", "00001", "10001", "01110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+
+def _glyph_array(d: int) -> np.ndarray:
+    rows = _GLYPHS[d]
+    return np.array([[1.0 if c == "1" else 0.0 for c in r] for r in rows],
+                    dtype=np.float32)
+
+
+def _render_one(d: int, rng: np.random.Generator) -> np.ndarray:
+    """Render digit ``d`` as a 28x28 float image in [0, 1]."""
+    glyph = _glyph_array(d)  # 7x5
+    # Optional stroke dilation (thicker pen).
+    if rng.random() < 0.5:
+        g = glyph
+        pad = np.zeros((9, 7), dtype=np.float32)
+        pad[1:8, 1:6] = g
+        dil = np.maximum.reduce([
+            pad[1:8, 1:6],
+            pad[0:7, 1:6], pad[2:9, 1:6],
+            pad[1:8, 0:5], pad[1:8, 2:7],
+        ])
+        glyph = np.clip(dil, 0.0, 1.0)
+
+    # Random affine parameters.
+    ang = rng.uniform(-0.25, 0.25)          # radians, ~±14°
+    scale = rng.uniform(0.75, 1.10)
+    shear = rng.uniform(-0.25, 0.25)
+    tx = rng.uniform(-2.5, 2.5)
+    ty = rng.uniform(-2.5, 2.5)
+
+    # Glyph cell size in output pixels (before affine).
+    cell_h = 20.0 / 7.0 * scale
+    cell_w = 14.0 / 5.0 * scale
+
+    ca, sa = np.cos(ang), np.sin(ang)
+    # forward map: out = R @ S @ (glyph coords) + center; we sample inverse.
+    cy, cx = H / 2.0 + ty, W / 2.0 + tx
+
+    ys, xs = np.mgrid[0:H, 0:W].astype(np.float32)
+    # translate to center
+    u = xs - cx
+    v = ys - cy
+    # inverse rotation
+    ur = ca * u + sa * v
+    vr = -sa * u + ca * v
+    # inverse shear (x-shear)
+    ur = ur - shear * vr
+    # to glyph coordinates (center of glyph is (3.5, 2.5) cells)
+    gx = ur / cell_w + 2.5
+    gy = vr / cell_h + 3.5
+
+    # Bilinear sample from the 7x5 glyph (zero outside).
+    x0 = np.floor(gx).astype(np.int32)
+    y0 = np.floor(gy).astype(np.int32)
+    fx = gx - x0
+    fy = gy - y0
+
+    def at(yy: np.ndarray, xx: np.ndarray) -> np.ndarray:
+        ok = (yy >= 0) & (yy < 7) & (xx >= 0) & (xx < 5)
+        yc = np.clip(yy, 0, 6)
+        xc = np.clip(xx, 0, 4)
+        return np.where(ok, glyph[yc, xc], 0.0)
+
+    img = ((1 - fy) * (1 - fx) * at(y0, x0)
+           + (1 - fy) * fx * at(y0, x0 + 1)
+           + fy * (1 - fx) * at(y0 + 1, x0)
+           + fy * fx * at(y0 + 1, x0 + 1))
+
+    # 3x3 box blur (cheap, separable would be overkill at 28x28).
+    padded = np.zeros((H + 2, W + 2), dtype=np.float32)
+    padded[1:-1, 1:-1] = img
+    img = (
+        padded[0:-2, 0:-2] + padded[0:-2, 1:-1] + padded[0:-2, 2:]
+        + padded[1:-1, 0:-2] + padded[1:-1, 1:-1] * 2.0 + padded[1:-1, 2:]
+        + padded[2:, 0:-2] + padded[2:, 1:-1] + padded[2:, 2:]
+    ) / 10.0
+
+    # Contrast jitter + additive noise.
+    gain = rng.uniform(0.85, 1.25)
+    img = np.clip(img * gain, 0.0, 1.0)
+    img = img + rng.normal(0.0, 0.03, size=img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` images; returns (images u8 [n,28,28], labels u8 [n])."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.uint8)
+    imgs = np.empty((n, H, W), dtype=np.uint8)
+    for k in range(n):
+        f = _render_one(int(labels[k]), rng)
+        imgs[k] = np.round(f * 255.0).astype(np.uint8)
+    return imgs, labels
+
+
+def to_float(imgs_u8: np.ndarray) -> np.ndarray:
+    """u8 images -> float32 in [0,1] (the canonical network input)."""
+    return imgs_u8.astype(np.float32) / 255.0
+
+
+def write_dataset_bin(path: str, train_x: np.ndarray, train_y: np.ndarray,
+                      test_x: np.ndarray, test_y: np.ndarray) -> None:
+    """Serialize to the LOPD binary format read by rust/src/data/loader.rs."""
+    import struct
+
+    with open(path, "wb") as fh:
+        fh.write(b"LOPD")
+        fh.write(struct.pack("<IIIII", 1, train_x.shape[0], test_x.shape[0],
+                             H, W))
+        fh.write(train_x.astype(np.uint8).tobytes())
+        fh.write(train_y.astype(np.uint8).tobytes())
+        fh.write(test_x.astype(np.uint8).tobytes())
+        fh.write(test_y.astype(np.uint8).tobytes())
+
+
+def load_dataset_bin(path: str):
+    """Read the LOPD format back (used by tests for round-trip checks)."""
+    import struct
+
+    with open(path, "rb") as fh:
+        magic = fh.read(4)
+        assert magic == b"LOPD", f"bad magic {magic!r}"
+        ver, ntr, nte, h, w = struct.unpack("<IIIII", fh.read(20))
+        assert ver == 1 and h == H and w == W
+        trx = np.frombuffer(fh.read(ntr * h * w), dtype=np.uint8)
+        trx = trx.reshape(ntr, h, w)
+        try_ = np.frombuffer(fh.read(ntr), dtype=np.uint8)
+        tex = np.frombuffer(fh.read(nte * h * w), dtype=np.uint8)
+        tex = tex.reshape(nte, h, w)
+        tey = np.frombuffer(fh.read(nte), dtype=np.uint8)
+    return trx, try_, tex, tey

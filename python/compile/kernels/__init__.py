@@ -1,0 +1,3 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .qmatmul import qmatmul  # noqa: F401
+from .ref import qmatmul_ref  # noqa: F401

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: fake-quantized tiled matmul (the paper's MAC datapath).
+
+The FPGA datapath in the paper is a 500-PE MAC array fed by narrow
+fixed/floating-point operands.  The TPU analogue is an MXU-shaped GEMM tile:
+operands are snapped onto the FI(i, f) / FL(e, m) lattice as they enter the
+tile (the narrow datapath), products accumulate wide (the paper widens the
+integral-bit BCI for exactly this reason — §4.2), and tiles are staged
+HBM→VMEM via BlockSpec (the block-RAM double-buffering of the FPGA design).
+
+Lowered with ``interpret=True``: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel is structured for TPU (128-aligned tiles sized
+for VMEM) but numerically validated through the interpret path.  See
+DESIGN.md §8 (Hardware Adaptation) for the VMEM/MXU estimates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import fake_quant_fi, fake_quant_fl
+
+# MXU-aligned tile sizes.  VMEM working set per grid cell:
+#   x tile  BM x K   (bounded by X_TILE_BYTES)
+#   w tile  K x BN   (K <= 3136 at BN = 128 -> 1.6 MiB)
+#   o tile  BM x BN
+# BM adapts to K: small-K layers (the convs, K = 25·C) take tall tiles so
+# the grid stays coarse — fewer grid cells means less per-cell dispatch
+# overhead on every backend, while the x-tile stays inside the VMEM
+# budget.  (§Perf iteration 5: the fixed 128x128 grid spent most of the
+# batch-64 forward on grid dispatch, 56 -> ~400 img/s on CPU-PJRT.)
+BN = 128
+X_TILE_BYTES = 2 * 1024 * 1024  # VMEM budget for the x tile
+
+
+def pick_bm(m: int, k: int) -> int:
+    """Largest 128-multiple M-tile that (a) keeps the x tile under the
+    VMEM budget and (b) doesn't exceed ~16 grid rows."""
+    cap = max(128, min(4096, (X_TILE_BYTES // max(k * 4, 1)) // 128 * 128))
+    need_rows = (m + 15) // 16
+    bm = ((need_rows + 127) // 128) * 128
+    return int(max(128, min(cap, bm)))
+
+
+def _pad_to(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = a.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths)
+
+
+def _kernel(q0_ref, q1_ref, x_ref, w_ref, o_ref, *, mode: str):
+    x = x_ref[...]
+    if mode == "fi":
+        x = fake_quant_fi(x, q0_ref[0], q1_ref[0])
+    elif mode == "fl":
+        x = fake_quant_fl(x, q0_ref[0].astype(jnp.int32),
+                          q1_ref[0].astype(jnp.int32))
+    o_ref[...] = jnp.dot(x, w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def qmatmul(x: jnp.ndarray, w: jnp.ndarray, mode: str = "none",
+            q0=0.0, q1=0.0) -> jnp.ndarray:
+    """``fake_quant(x) @ w`` with f32 accumulation, as a Pallas kernel.
+
+    x: [M, K] f32;  w: [K, N] f32 (pre-quantized by the caller — weights are
+    snapped onto the representation lattice once, on the Rust side).
+    mode: 'none' | 'fi' | 'fl';  q0/q1: the two quantization scalars.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+
+    bm = pick_bm(m, k)
+    xp = _pad_to(x, 0, bm)
+    wp = _pad_to(w, 1, BN)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    grid = (mp // bm, np_ // BN)
+
+    q0a = jnp.asarray(q0, jnp.float32).reshape(1)
+    q1a = jnp.asarray(q1, jnp.float32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(q0a, q1a, xp, wp)
+    return out[:m, :n]

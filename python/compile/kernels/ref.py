@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the L1 Pallas kernel (``qmatmul.py``).
+
+This is the correctness reference: pytest asserts the Pallas kernel matches
+these functions exactly (they share the fake-quant primitives from
+``quant.py``, which are themselves bit-checked against ``bitref.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quant import fake_quant_fi, fake_quant_fl
+
+
+def qmatmul_ref(x: jnp.ndarray, w: jnp.ndarray, mode: str = "none",
+                q0=None, q1=None) -> jnp.ndarray:
+    """Reference quantized matmul: fake-quantize ``x`` (mode 'fi'/'fl'),
+    then a plain matmul with f32 accumulation.
+
+    ``q0``/``q1`` are the two quantization scalars:
+      mode 'fi' -> (scale, maxk)      (f32; see quant.fi_params)
+      mode 'fl' -> (e_bits, m_bits)   (i32)
+    """
+    if mode == "fi":
+        x = fake_quant_fi(x, q0, q1)
+    elif mode == "fl":
+        x = fake_quant_fl(x, jnp.asarray(q0, jnp.int32),
+                          jnp.asarray(q1, jnp.int32))
+    elif mode != "none":
+        raise ValueError(f"unknown mode {mode!r}")
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

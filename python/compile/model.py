@@ -1,0 +1,204 @@
+"""L2: the paper's DCNN (Fig. 2) in JAX, calling the L1 Pallas kernel.
+
+Architecture (paper Fig. 2, MNIST-shaped):
+
+    input  [B, 28, 28, 1]
+    CONV1  5x5x1x32, pad 2, ReLU, 2x2 maxpool   -> [B, 14, 14, 32]
+    CONV2  5x5x32x64, pad 2, ReLU, 2x2 maxpool  -> [B, 7, 7, 64]
+    FC1    3136x1024, ReLU                      -> [B, 1024]
+    FC2    1024x10                              -> [B, 10]  (logits)
+
+Two forward implementations share the same parameter pytree:
+
+  * ``forward``       — im2col + the Pallas ``qmatmul`` kernel; this is what
+    gets AOT-lowered to HLO for the Rust runtime (variants f32 / fi / fl,
+    with per-layer quantization scalars as runtime parameters).
+  * ``forward_train`` — ``lax.conv_general_dilated``-based, used by the
+    build-time trainer (fast under jit on CPU) and as a cross-check oracle.
+
+Quantization semantics (must mirror rust/src/nn): values are snapped onto
+the representation lattice as they enter each layer's MAC array (weights and
+biases are pre-quantized by the caller); partial sums accumulate wide — the
+paper widens the integral-bit BCI to cover partial-sum range (§4.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels.qmatmul import qmatmul
+from .quant import fake_quant_fi, fake_quant_fl
+
+LAYERS = ("conv1", "conv2", "fc1", "fc2")
+CONV_SHAPES = {"conv1": (5, 5, 1, 32), "conv2": (5, 5, 32, 64)}
+FC_SHAPES = {"fc1": (3136, 1024), "fc2": (1024, 10)}
+
+
+def init_params(seed: int = 0) -> dict:
+    """Glorot-uniform initialization for all four layers."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shp in CONV_SHAPES.items():
+        fan_in = shp[0] * shp[1] * shp[2]
+        fan_out = shp[0] * shp[1] * shp[3]
+        lim = np.sqrt(6.0 / (fan_in + fan_out))
+        params[f"{name}_w"] = rng.uniform(-lim, lim, shp).astype(np.float32)
+        params[f"{name}_b"] = np.zeros(shp[3], np.float32)
+    for name, shp in FC_SHAPES.items():
+        lim = np.sqrt(6.0 / (shp[0] + shp[1]))
+        params[f"{name}_w"] = rng.uniform(-lim, lim, shp).astype(np.float32)
+        params[f"{name}_b"] = np.zeros(shp[1], np.float32)
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+def param_names() -> list[str]:
+    """Canonical parameter order used by every artifact and weights.bin."""
+    return [f"{l}_{s}" for l in LAYERS for s in ("w", "b")]
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, pad: int) -> jnp.ndarray:
+    """[B,H,W,C] -> [B*H*W, kh*kw*C] patches (stride 1, zero padding).
+
+    Patch layout is (ky, kx, c) fastest-last — the Rust engine's im2col in
+    rust/src/nn/conv.rs uses the identical layout so weights interchange.
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            cols.append(xp[:, ky:ky + h, kx:kx + w, :])
+    patches = jnp.stack(cols, axis=3)          # [B,H,W,kh*kw,C]
+    return patches.reshape(b * h * w, kh * kw * c)
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max pooling, stride 2, on [B,H,W,C]."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def _quant(x: jnp.ndarray, mode: str, q0, q1) -> jnp.ndarray:
+    if mode == "fi":
+        return fake_quant_fi(x, q0, q1)
+    if mode == "fl":
+        return fake_quant_fl(x, jnp.asarray(q0, jnp.int32),
+                             jnp.asarray(q1, jnp.int32))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Pallas-backed forward (this is what gets AOT-lowered)
+# ---------------------------------------------------------------------------
+
+
+def forward(params: dict, x: jnp.ndarray, mode: str = "none",
+            qscalars=None) -> jnp.ndarray:
+    """Forward pass through im2col + the Pallas qmatmul kernel.
+
+    x: [B, 28, 28, 1] f32 in [0, 1].
+    mode: 'none' (f32 baseline) | 'fi' | 'fl'.
+    qscalars: sequence of 8 scalars (q0, q1 per layer, in LAYERS order);
+      runtime parameters of the lowered HLO.
+    Returns logits [B, 10].
+    """
+    if mode == "none":
+        q = [(0.0, 0.0)] * 4
+    else:
+        assert qscalars is not None and len(qscalars) == 8
+        q = [(qscalars[2 * i], qscalars[2 * i + 1]) for i in range(4)]
+
+    b = x.shape[0]
+
+    # CONV1
+    w, bias = params["conv1_w"], params["conv1_b"]
+    cols = im2col(x, 5, 5, 2)
+    z = qmatmul(cols, w.reshape(-1, w.shape[-1]), mode, q[0][0], q[0][1])
+    z = (z + bias).reshape(b, 28, 28, 32)
+    a = maxpool2(jax.nn.relu(z))               # [B,14,14,32]
+
+    # CONV2
+    w, bias = params["conv2_w"], params["conv2_b"]
+    cols = im2col(a, 5, 5, 2)
+    z = qmatmul(cols, w.reshape(-1, w.shape[-1]), mode, q[1][0], q[1][1])
+    z = (z + bias).reshape(b, 14, 14, 64)
+    a = maxpool2(jax.nn.relu(z))               # [B,7,7,64]
+
+    # FC1  (flatten layout (h, w, c) — Rust engine flattens identically)
+    a = a.reshape(b, -1)
+    z = qmatmul(a, params["fc1_w"], mode, q[2][0], q[2][1])
+    a = jax.nn.relu(z + params["fc1_b"])
+
+    # FC2
+    z = qmatmul(a, params["fc2_w"], mode, q[3][0], q[3][1])
+    return z + params["fc2_b"]
+
+
+# ---------------------------------------------------------------------------
+# lax.conv-backed forward (trainer + oracle)
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params: dict, x: jnp.ndarray, mode: str = "none",
+                  qscalars=None) -> jnp.ndarray:
+    """Same math as ``forward`` but with lax.conv — fast under jit."""
+    if mode == "none":
+        q = [(0.0, 0.0)] * 4
+    else:
+        q = [(qscalars[2 * i], qscalars[2 * i + 1]) for i in range(4)]
+    b = x.shape[0]
+
+    def conv(inp, w, q0, q1):
+        inp = _quant(inp, mode, q0, q1)
+        return lax.conv_general_dilated(
+            inp, w, window_strides=(1, 1), padding=((2, 2), (2, 2)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    z = conv(x, params["conv1_w"], *q[0]) + params["conv1_b"]
+    a = maxpool2(jax.nn.relu(z))
+    z = conv(a, params["conv2_w"], *q[1]) + params["conv2_b"]
+    a = maxpool2(jax.nn.relu(z))
+    a = a.reshape(b, -1)
+    a = _quant(a, mode, *q[2])
+    a = jax.nn.relu(a @ params["fc1_w"] + params["fc1_b"])
+    a = _quant(a, mode, *q[3])
+    return a @ params["fc2_w"] + params["fc2_b"]
+
+
+def activation_ranges(params: dict, x: jnp.ndarray) -> dict:
+    """Per-layer [min, max] over weights, biases and layer outputs —
+    reproduces the paper's Table 1 (value range of the WBA set)."""
+    b = x.shape[0]
+    outs = {}
+
+    def conv(inp, w):
+        return lax.conv_general_dilated(
+            inp, w, window_strides=(1, 1), padding=((2, 2), (2, 2)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    z1 = conv(x, params["conv1_w"]) + params["conv1_b"]
+    a1 = maxpool2(jax.nn.relu(z1))
+    z2 = conv(a1, params["conv2_w"]) + params["conv2_b"]
+    a2 = maxpool2(jax.nn.relu(z2))
+    f = a2.reshape(b, -1)
+    z3 = f @ params["fc1_w"] + params["fc1_b"]
+    a3 = jax.nn.relu(z3)
+    z4 = a3 @ params["fc2_w"] + params["fc2_b"]
+    for name, z in zip(LAYERS, (z1, z2, z3, z4)):
+        w, bias = params[f"{name}_w"], params[f"{name}_b"]
+        vals = [float(jnp.min(w)), float(jnp.max(w)),
+                float(jnp.min(bias)), float(jnp.max(bias)),
+                float(jnp.min(z)), float(jnp.max(z))]
+        outs[name] = {"w": vals[0:2], "b": vals[2:4], "a": vals[4:6],
+                      "range": [min(vals[0], vals[2], vals[4]),
+                                max(vals[1], vals[3], vals[5])]}
+    return outs

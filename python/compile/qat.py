@@ -1,0 +1,116 @@
+"""Quantization-aware retraining (paper §1, question 4):
+
+    "How would converting some pre-trained floating-point weights to
+     fixed-point numbers with a predefined bit-width affect prediction
+     accuracy ...?  Would retraining using the new representation improve
+     the accuracy loss due to conversion?"
+
+Retraining runs the fake-quantized forward (the same `quant.py` primitives
+the AOT artifacts use) with a straight-through estimator: gradients flow
+through the quantizer as identity, weights update in float32, and the
+loss is always computed through the quantized datapath.  Build-path-only
+Python, like the trainer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as dataset
+from .model import forward_train
+from .quant import fi_params
+from .train import adam_init, adam_update, cross_entropy, evaluate
+
+
+def ste_quant_params(params: dict, qscalars) -> dict:
+    """Fake-quantize weights with a straight-through estimator: the
+    quantization error is treated as a constant offset, so d(quant(w))/dw
+    = 1 while the forward sees the quantized values."""
+    out = {}
+    for k, v in params.items():
+        layer_idx = {"conv1": 0, "conv2": 1, "fc1": 2, "fc2": 3}[
+            k.split("_")[0]]
+        scale = qscalars[2 * layer_idx]
+        maxk = qscalars[2 * layer_idx + 1]
+        mag = jnp.abs(v) * scale
+        q = jnp.sign(v) * jnp.minimum(jnp.floor(mag + 0.5), maxk) / scale
+        out[k] = v + jax.lax.stop_gradient(q - v)
+    return out
+
+
+def qat_loss(params, xb, yb, qscalars):
+    """Cross-entropy through the fully fake-quantized forward: quantized
+    weights (STE) and quantized activations (the `fi` fake-quant mode)."""
+    qp = ste_quant_params(params, qscalars)
+    logits = forward_train(qp, xb, "fi", qscalars)
+    return cross_entropy(logits, yb)
+
+
+def quantized_accuracy(params, x, y, qscalars, batch: int = 250) -> float:
+    """Accuracy of the quantized datapath (weights + activations)."""
+    correct = 0
+    qp = {k: np.asarray(v) for k, v in
+          ste_quant_params(params, qscalars).items()}
+    qp = {k: jnp.asarray(v) for k, v in qp.items()}
+    for i in range(0, len(x), batch):
+        xb = jnp.asarray(x[i:i + batch])[..., None]
+        logits = forward_train(qp, xb, "fi", qscalars)
+        pred = np.asarray(jnp.argmax(logits, axis=1))
+        correct += int((pred == y[i:i + batch]).sum())
+    return correct / len(x)
+
+
+def retrain(params: dict, fi_cfg: list[tuple[int, int]], steps: int = 150,
+            batch: int = 64, lr: float = 5e-4, n_train: int = 4000,
+            seed: int = 7, verbose: bool = True):
+    """Retrain `params` under per-layer FI(i, f) quantization.
+
+    Returns (new_params, history) where history records the quantized
+    accuracy before and after.
+    """
+    qscalars = []
+    for i, f in fi_cfg:
+        qscalars.extend(fi_params(i, f))
+    qscalars = [jnp.float32(v) for v in qscalars]
+
+    tr_u8, tr_y = dataset.generate(n_train, seed=seed)
+    te_u8, te_y = dataset.generate(1000, seed=seed + 1)
+    tr_x = dataset.to_float(tr_u8)
+    te_x = dataset.to_float(te_u8)
+
+    before_float = evaluate(params, te_x, te_y)
+    before_quant = quantized_accuracy(params, te_x, te_y, qscalars)
+
+    state = adam_init(params)
+    step_fn = jax.jit(
+        lambda p, s, xb, yb, lr_: _qat_step(p, s, xb, yb, lr_, qscalars))
+    rng = np.random.default_rng(11)
+    for step in range(steps):
+        idx = rng.integers(0, n_train, size=batch)
+        xb = jnp.asarray(tr_x[idx])[..., None]
+        yb = jnp.asarray(tr_y[idx].astype(np.int32))
+        params, state, loss = step_fn(params, state, xb, yb,
+                                      jnp.float32(lr))
+        if verbose and step % 25 == 0:
+            print(f"qat step {step:4d} loss {float(loss):.4f}",
+                  flush=True)
+
+    after_quant = quantized_accuracy(params, te_x, te_y, qscalars)
+    history = {
+        "float_accuracy_before": before_float,
+        "quantized_accuracy_before": before_quant,
+        "quantized_accuracy_after": after_quant,
+    }
+    if verbose:
+        print(f"quantized accuracy: {before_quant:.4f} -> "
+              f"{after_quant:.4f} (float baseline {before_float:.4f})")
+    return params, history
+
+
+def _qat_step(params, state, xb, yb, lr, qscalars):
+    loss, grads = jax.value_and_grad(
+        lambda p: qat_loss(p, xb, yb, qscalars))(params)
+    params, state = adam_update(params, grads, state, lr)
+    return params, state, loss

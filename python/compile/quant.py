@@ -1,0 +1,114 @@
+"""jnp fake-quantization emulation of Lop's data representations.
+
+These functions run inside the L2 JAX model (and the L1 Pallas kernel) and
+are *bit-exact* against the scalar reference in ``bitref.py`` — pytest
+enforces this (``python/tests/test_quant.py``).  Widths are runtime scalars
+so a single AOT-lowered HLO artifact serves every FI / FL configuration:
+the Rust coordinator feeds the widths as ordinary parameters.
+
+Precision notes (why f32 arithmetic is exact here):
+  * FI: ``|x| * 2^f`` is a power-of-two scaling (exact); ``mag + 0.5`` is
+    exact while i+f <= 22 because both operands are multiples of the ulp.
+    BCIs are restricted to i+f <= 22 (coordinator enforces the same bound).
+  * FL: rounding happens directly on the f32 bit pattern, so it is RNE on
+    the true significand; exponent clamping uses integer exponent fields.
+    BCIs are restricted to e <= 7 so min/max normals stay inside f32 range.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def fake_quant_fi(x: jnp.ndarray, scale: jnp.ndarray,
+                  maxk: jnp.ndarray) -> jnp.ndarray:
+    """Quantize to FI(i, f): ``scale = 2^f``, ``maxk = 2^(i+f) - 1``.
+
+    Round-half-away-from-zero on the magnitude, saturation at
+    ``maxk / scale`` — matches ``bitref.fi_quantize`` bit-for-bit.
+    """
+    mag = jnp.abs(x) * scale
+    k = jnp.floor(mag + 0.5)
+    k = jnp.minimum(k, maxk)
+    return jnp.sign(x) * (k / scale)
+
+
+def fi_params(i: int, f: int) -> tuple[float, float]:
+    """Scalar parameters fed to ``fake_quant_fi`` for a given FI(i, f)."""
+    return float(2 ** f), float(2 ** (i + f) - 1)
+
+
+def fake_quant_fl(x: jnp.ndarray, e_bits: jnp.ndarray,
+                  m_bits: jnp.ndarray) -> jnp.ndarray:
+    """Quantize to FL(e, m) — matches ``bitref.fl_quantize`` bit-for-bit.
+
+    ``e_bits`` / ``m_bits`` are i32 scalars (runtime parameters).  Semantics:
+    RNE mantissa rounding, saturate to the max finite value, magnitudes
+    below the smallest normal round to the nearer of {0, min_normal} (ties
+    to min_normal), exponent field 0 reserved for zero, no inf/nan.
+    """
+    e_bits = e_bits.astype(jnp.int32)
+    m_bits = m_bits.astype(jnp.int32)
+    bits = lax.bitcast_convert_type(x, jnp.int32)
+    sign = bits & jnp.int32(-0x80000000)
+    comb = bits & jnp.int32(0x7FFFFFFF)
+
+    shift = jnp.int32(23) - m_bits
+    one = jnp.int32(1)
+    half = (one << (shift - one)) - one
+    tie = (comb >> shift) & one
+    comb2 = comb + half + tie
+    comb2 = comb2 & ~((one << shift) - one)
+
+    bias = (one << (e_bits - one)) - one
+    emin = one - bias
+    emax = ((one << e_bits) - one) - bias
+
+    e_rounded = (comb2 >> jnp.int32(23)) - jnp.int32(127)
+    y = lax.bitcast_convert_type(comb2 | sign, jnp.float32)
+
+    # Build min-normal and max-finite by bit construction — XLA CPU's exp2
+    # is inexact even at integer arguments, which would corrupt the
+    # threshold comparisons below.
+    minn = lax.bitcast_convert_type((emin + jnp.int32(127)) << jnp.int32(23),
+                                    jnp.float32)
+    man_mask = jnp.int32(0x7FFFFF) & ~((one << shift) - one)
+    maxv = lax.bitcast_convert_type(
+        ((emax + jnp.int32(127)) << jnp.int32(23)) | man_mask, jnp.float32)
+
+    sgn = jnp.where(bits < 0, -1.0, 1.0).astype(jnp.float32)
+    a = jnp.abs(x)
+
+    y = jnp.where(e_rounded > emax, sgn * maxv, y)
+    sub = sgn * jnp.where(a * 2.0 >= minn, minn, 0.0)
+    y = jnp.where(e_rounded < emin, sub, y)
+    # f32 subnormal inputs have exponent field 0; they flush via the branch
+    # above (e_rounded = -127 < emin always since emin >= -63 for e<=7).
+    return jnp.where(x == 0.0, 0.0, y)
+
+
+# ---------------------------------------------------------------------------
+# DRUM(k) emulation on integer arrays (used by pytest cross-checks; the
+# full-network approximate-multiplier path runs on the Rust engine).
+# ---------------------------------------------------------------------------
+
+
+def drum_approx_operand(a: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Vectorized ``bitref.drum_approx_operand`` for non-negative int32."""
+    a = a.astype(jnp.int32)
+    af = a.astype(jnp.float32)
+    # exponent field of the f32 representation = floor(log2(a)) for a>0;
+    # exact because a < 2^24 converts to f32 without rounding in our BCIs.
+    t = (lax.bitcast_convert_type(af, jnp.int32) >> jnp.int32(23)) \
+        - jnp.int32(127)
+    sh = jnp.maximum(t - jnp.int32(k - 1), 0)
+    approx = ((a >> sh) | jnp.int32(1)) << sh
+    return jnp.where(a < jnp.int32(1 << k), a, approx)
+
+
+def drum_mul(a: jnp.ndarray, b: jnp.ndarray, k: int) -> jnp.ndarray:
+    """DRUM(k) product (int64 — enable jax_enable_x64 before tracing)."""
+    aa = drum_approx_operand(a, k).astype(jnp.int64)
+    bb = drum_approx_operand(b, k).astype(jnp.int64)
+    return aa * bb

@@ -1,0 +1,125 @@
+"""Build-time trainer: float32 DCNN on the synthetic digit set.
+
+Runs once inside ``make artifacts`` (invoked from aot.py) and produces the
+trained parameter set every downstream experiment uses.  Hand-rolled Adam —
+no optax in this environment; this is build-path-only Python anyway.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as dataset
+from .model import forward_train, init_params, param_names
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logz, labels[:, None], axis=1))
+
+
+def adam_init(params: dict) -> dict:
+    return {
+        "m": {k: jnp.zeros_like(v) for k, v in params.items()},
+        "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(params: dict, grads: dict, state: dict, lr: float,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    tf = t.astype(jnp.float32)
+    sc = lr * jnp.sqrt(1 - b2 ** tf) / (1 - b1 ** tf)
+    new = {k: params[k] - sc * m[k] / (jnp.sqrt(v[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+@jax.jit
+def _train_step(params, state, xb, yb, lr):
+    def loss_fn(p):
+        return cross_entropy(forward_train(p, xb), yb)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, state = adam_update(params, grads, state, lr)
+    return params, state, loss
+
+
+@jax.jit
+def _predict(params, xb):
+    return jnp.argmax(forward_train(params, xb), axis=1)
+
+
+def evaluate(params: dict, x: np.ndarray, y: np.ndarray,
+             batch: int = 250) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        xb = jnp.asarray(x[i:i + batch])[..., None]
+        pred = np.asarray(_predict(params, xb))
+        correct += int((pred == y[i:i + batch]).sum())
+    return correct / len(x)
+
+
+def train(steps: int = 300, batch: int = 64, lr: float = 2e-3,
+          n_train: int = 8000, n_test: int = 2000, seed: int = 7,
+          verbose: bool = True):
+    """Train and return (params, train_set, test_set, test_accuracy)."""
+    tr_u8, tr_y = dataset.generate(n_train, seed=seed)
+    te_u8, te_y = dataset.generate(n_test, seed=seed + 1)
+    tr_x = dataset.to_float(tr_u8)
+    te_x = dataset.to_float(te_u8)
+
+    params = init_params(seed=0)
+    state = adam_init(params)
+    rng = np.random.default_rng(123)
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, n_train, size=batch)
+        xb = jnp.asarray(tr_x[idx])[..., None]
+        yb = jnp.asarray(tr_y[idx].astype(np.int32))
+        # cosine decay keeps late steps stable at these few-hundred budgets
+        cur_lr = lr * 0.5 * (1.0 + np.cos(np.pi * step / steps))
+        params, state, loss = _train_step(params, state, xb, yb,
+                                          jnp.float32(cur_lr))
+        if verbose and (step % 25 == 0 or step == steps - 1):
+            print(f"step {step:4d}  loss {float(loss):.4f}  "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+
+    acc = evaluate(params, te_x, te_y)
+    if verbose:
+        print(f"test accuracy (float32 baseline): {acc:.4f}")
+    return params, (tr_u8, tr_y), (te_u8, te_y), acc
+
+
+def save_weights_npz(path: str, params: dict) -> None:
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_weights_npz(path: str) -> dict:
+    z = np.load(path)
+    return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+def save_weights_bin(path: str, params: dict) -> None:
+    """LOPW binary format read by rust/src/nn/loader.rs."""
+    import struct
+
+    names = param_names()
+    with open(path, "wb") as fh:
+        fh.write(b"LOPW")
+        fh.write(struct.pack("<II", 1, len(names)))
+        for name in names:
+            arr = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            fh.write(struct.pack("<I", len(nb)))
+            fh.write(nb)
+            fh.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                fh.write(struct.pack("<I", d))
+            fh.write(arr.tobytes())

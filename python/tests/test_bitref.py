@@ -1,0 +1,252 @@
+"""Property tests on the bit-accurate reference itself (bitref.py).
+
+bitref is the root of the cross-language correctness chain, so its own
+invariants get checked independently: grid membership, monotonicity,
+encode/decode round trips, approximation error bounds from the source
+papers.
+"""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import bitref
+
+settings.register_profile("lop", max_examples=80, deadline=None)
+settings.load_profile("lop")
+
+# ---------------------------------------------------------------------------
+# fixed point
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(-1e5, 1e5), st.integers(0, 10), st.integers(0, 12))
+def test_fi_on_grid(x, i, f):
+    q = bitref.fi_quantize(x, i, f)
+    k = q * 2 ** f
+    assert k == int(k), "quantized value is not on the FI grid"
+    assert abs(q) <= bitref.fi_max(i, f)
+
+
+@given(st.floats(-100, 100), st.floats(-100, 100), st.integers(0, 8),
+       st.integers(0, 10))
+def test_fi_monotone(a, b, i, f):
+    if a > b:
+        a, b = b, a
+    assert bitref.fi_quantize(a, i, f) <= bitref.fi_quantize(b, i, f)
+
+
+@given(st.floats(-300, 300), st.integers(0, 8), st.integers(0, 10))
+def test_fi_encode_decode_roundtrip(x, i, f):
+    q = bitref.fi_quantize(x, i, f)
+    assert bitref.fi_decode(bitref.fi_encode(x, i, f), i, f) == q
+
+
+@given(st.floats(-15, 15), st.integers(1, 8), st.integers(1, 10))
+def test_fi_error_bound(x, i, f):
+    q = bitref.fi_quantize(x, i, f)
+    if abs(x) <= bitref.fi_max(i, f):
+        assert abs(q - x) <= 0.5 / 2 ** f + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# floating point
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(-1e6, 1e6), st.integers(2, 7), st.integers(1, 16))
+def test_fl_quantize_idempotent(x, e, m):
+    q = bitref.fl_quantize(x, e, m)
+    assert bitref.fl_quantize(q, e, m) == q
+
+
+@given(st.floats(-1e4, 1e4), st.floats(-1e4, 1e4), st.integers(2, 7),
+       st.integers(1, 12))
+def test_fl_monotone(a, b, e, m):
+    if a > b:
+        a, b = b, a
+    assert bitref.fl_quantize(a, e, m) <= bitref.fl_quantize(b, e, m)
+
+
+@given(st.floats(-1e5, 1e5), st.integers(2, 7), st.integers(1, 14))
+def test_fl_encode_decode_roundtrip(x, e, m):
+    q = bitref.fl_quantize(x, e, m)
+    assert bitref.fl_decode(bitref.fl_encode(x, e, m), e, m) == q
+
+
+@given(st.integers(2, 7), st.integers(1, 14),
+       st.floats(1e-3, 1e3))
+def test_fl_relative_error_bound(e, m, x):
+    """Inside the normal range, relative error <= 2^-(m+1)."""
+    q = bitref.fl_quantize(x, e, m)
+    if bitref.fl_min_normal(e) <= x <= bitref.fl_max(e, m):
+        assert abs(q - x) / x <= 2.0 ** -(m + 1) + 1e-12
+
+
+def test_fl_specials():
+    assert bitref.fl_quantize(0.0, 4, 9) == 0.0
+    assert bitref.fl_quantize(-0.0, 4, 9) == 0.0
+    mx = bitref.fl_max(4, 9)
+    assert bitref.fl_quantize(1e30, 4, 9) == mx
+    assert bitref.fl_quantize(-1e30, 4, 9) == -mx
+    mn = bitref.fl_min_normal(4)
+    assert bitref.fl_quantize(mn * 0.49, 4, 9) == 0.0
+    assert bitref.fl_quantize(mn * 0.51, 4, 9) == mn
+    assert bitref.fl_quantize(mn * 0.5, 4, 9) == mn  # tie -> min normal
+
+
+# ---------------------------------------------------------------------------
+# DRUM
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2 ** 30 - 1), st.integers(0, 2 ** 30 - 1),
+       st.integers(2, 20))
+def test_drum_error_bound(a, b, k):
+    """DRUM's worst-case relative error is bounded: each operand is off
+    by at most a factor (1 + 2^-(k-1)), so the product by
+    (1 + 2^-(k-1))^2 - 1; the product of zero is zero."""
+    exact = a * b
+    approx = bitref.drum_mul(a, b, k)
+    if exact == 0:
+        assert approx == 0
+    else:
+        rel = abs(approx - exact) / exact
+        assert rel <= (1.0 + 2.0 ** -(k - 1)) ** 2 - 1.0 + 1e-12
+
+
+@given(st.integers(0, 2 ** 24 - 1), st.integers(2, 24))
+def test_drum_operand_preserves_msbs(a, k):
+    aa = bitref.drum_approx_operand(a, k)
+    assert aa.bit_length() == a.bit_length()
+    if a >= (1 << k):
+        sh = a.bit_length() - k
+        assert (aa >> sh) >> 1 == (a >> sh) >> 1  # top k-1 bits identical
+        assert aa & ((1 << sh) - 1) == 0 or sh == 0
+
+
+@given(st.integers(0, 255), st.integers(0, 255))
+def test_drum_commutative(a, b):
+    assert bitref.drum_mul(a, b, 6) == bitref.drum_mul(b, a, 6)
+
+
+# ---------------------------------------------------------------------------
+# CFPU
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(0.01, 100.0), st.integers(0, 6))
+def test_cfpu_power_of_two_exact(x, p):
+    """Multiplying by an exact power of two must be error-free (the
+    mantissa-skip path): that is CFPU's design point."""
+    e, m, w = 4, 9, 3
+    xq = bitref.fl_quantize(x, e, m)
+    y = float(2 ** p)
+    got = bitref.cfpu_mul(xq, y, e, m, w)
+    want = bitref.fl_quantize(xq * y, e, m)
+    assert got == want
+
+
+@given(st.floats(-50, 50), st.floats(-50, 50))
+def test_cfpu_sign_correct(x, y):
+    got = bitref.cfpu_mul(x, y, 4, 9, 3)
+    if got != 0.0:
+        assert (got > 0) == ((x > 0) == (y > 0))
+
+
+@given(st.floats(0.1, 10), st.floats(0.1, 10), st.integers(1, 4))
+def test_cfpu_error_bound(x, y, w):
+    """Approximate path error is bounded by the discarded mantissa:
+    relative error < 2^-w (plus representation rounding)."""
+    e, m = 5, 10
+    got = bitref.cfpu_mul(x, y, e, m, w)
+    exact = bitref.fl_quantize(bitref.fl_quantize(x, e, m)
+                               * bitref.fl_quantize(y, e, m), e, m)
+    if exact != 0:
+        assert abs(got - exact) / abs(exact) <= 2.0 ** -w + 2.0 ** -(m - 1)
+
+
+def test_cfpu_large_w_is_exact():
+    """With w > m the top-bits check can never pass -> exact fallback."""
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        x, y = rng.normal(0, 5, 2)
+        got = bitref.cfpu_mul(float(x), float(y), 4, 9, 10)
+        want = bitref.fl_quantize(
+            bitref.fl_quantize(float(x), 4, 9)
+            * bitref.fl_quantize(float(y), 4, 9), 4, 9)
+        assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Mitchell / truncated / LOA
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 2 ** 16 - 1), st.integers(1, 2 ** 16 - 1))
+def test_mitchell_error_bound(a, b):
+    """Mitchell's classic worst-case underestimate is ~11.1%."""
+    exact = a * b
+    approx = bitref.mitchell_mul(a, b, 16)
+    assert approx <= exact + max(4, exact // 8)
+    assert approx >= exact * 0.885 - 4
+
+
+def test_mitchell_powers_of_two_exact():
+    for ta in range(0, 12):
+        for tb in range(0, 12):
+            a, b = 1 << ta, 1 << tb
+            assert bitref.mitchell_mul(a, b, 16) == a * b
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1))
+def test_truncated_keep_all_exact(a, b):
+    assert bitref.truncated_mul(a, b, 16, 16) == a * b
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1),
+       st.integers(1, 15))
+def test_truncated_error_bound(a, b, keep):
+    exact = a * b
+    approx = bitref.truncated_mul(a, b, 16, keep)
+    cut = 16 - keep
+    # dropped columns carry at most n * 2^cut weight; compensation halves it
+    assert abs(approx - exact) <= 16 * (1 << cut)
+
+
+@given(st.integers(0, 2 ** 20 - 1), st.integers(0, 2 ** 20 - 1),
+       st.integers(0, 12))
+def test_loa_error_bound(a, b, l):
+    exact = a + b
+    approx = bitref.loa_add(a, b, l)
+    assert abs(approx - exact) < (1 << max(l, 1))
+    if l == 0:
+        assert approx == exact
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 12))
+def test_loa_add_zero(a, l):
+    assert bitref.loa_add(a, 0, l) == a
+
+
+# ---------------------------------------------------------------------------
+# SSM
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1),
+       st.integers(8, 16))
+def test_ssm_error_bound(a, b, n):
+    exact = a * b
+    approx = bitref.ssm_mul(a, b, 16, n)
+    assert approx <= exact, "SSM must never overestimate"
+    # each operand drops < 2^(w-n); error <= da*b + db*a
+    drop = 2 ** (16 - n)
+    assert exact - approx <= drop * (a + b)
+
+
+@given(st.integers(0, 2 ** 8 - 1), st.integers(0, 2 ** 8 - 1))
+def test_ssm_small_operands_exact(a, b):
+    assert bitref.ssm_mul(a, b, 16, 8) == a * b

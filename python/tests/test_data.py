@@ -1,0 +1,66 @@
+"""Synthetic dataset generator tests: determinism, format round-trip,
+class coverage, and basic image sanity."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import data
+
+
+def test_deterministic():
+    a_x, a_y = data.generate(50, seed=9)
+    b_x, b_y = data.generate(50, seed=9)
+    np.testing.assert_array_equal(a_x, b_x)
+    np.testing.assert_array_equal(a_y, b_y)
+
+
+def test_seed_changes_data():
+    a_x, _ = data.generate(50, seed=1)
+    b_x, _ = data.generate(50, seed=2)
+    assert not np.array_equal(a_x, b_x)
+
+
+def test_shapes_and_dtype():
+    x, y = data.generate(20, seed=0)
+    assert x.shape == (20, 28, 28) and x.dtype == np.uint8
+    assert y.shape == (20,) and y.dtype == np.uint8
+    assert y.max() <= 9
+
+
+def test_all_classes_present():
+    _, y = data.generate(500, seed=4)
+    assert set(np.unique(y)) == set(range(10))
+
+
+def test_images_have_ink():
+    x, _ = data.generate(100, seed=5)
+    frac_on = (x > 64).mean(axis=(1, 2))
+    assert (frac_on > 0.01).all(), "some image is (almost) blank"
+    assert (frac_on < 0.7).all(), "some image is mostly ink"
+
+
+def test_roundtrip_bin():
+    trx, try_ = data.generate(30, seed=0)
+    tex, tey = data.generate(10, seed=1)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "ds.bin")
+        data.write_dataset_bin(p, trx, try_, tex, tey)
+        rx, ry, sx, sy = data.load_dataset_bin(p)
+    np.testing.assert_array_equal(rx, trx)
+    np.testing.assert_array_equal(ry, try_)
+    np.testing.assert_array_equal(sx, tex)
+    np.testing.assert_array_equal(sy, tey)
+
+
+def test_classes_visually_distinct():
+    """Mean images of different classes should differ substantially —
+    otherwise the classification task is degenerate."""
+    x, y = data.generate(400, seed=6)
+    xf = data.to_float(x)
+    means = np.stack([xf[y == c].mean(axis=0) for c in range(10)])
+    for a in range(10):
+        for b in range(a + 1, 10):
+            d = np.abs(means[a] - means[b]).mean()
+            assert d > 0.01, f"classes {a} and {b} look identical"

@@ -1,0 +1,109 @@
+"""pytest: Pallas kernel vs the pure-jnp oracle — the CORE L1 correctness
+signal.  Hypothesis sweeps shapes and quantization widths."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import qmatmul, qmatmul_ref
+from compile.quant import fi_params
+
+settings.register_profile("lop", max_examples=25, deadline=None)
+settings.load_profile("lop")
+
+
+def _rand(rng, m, k, n):
+    x = rng.normal(0, 2, (m, k)).astype(np.float32)
+    w = rng.normal(0, 1, (k, n)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+@given(st.integers(1, 200), st.integers(1, 64), st.integers(1, 150),
+       st.integers(0, 2 ** 32 - 1))
+def test_qmatmul_none_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k, n)
+    got = qmatmul(x, w, "none")
+    want = qmatmul_ref(x, w, "none")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+@given(st.integers(1, 140), st.integers(1, 50), st.integers(1, 140),
+       st.integers(2, 8), st.integers(2, 12), st.integers(0, 2 ** 32 - 1))
+def test_qmatmul_fi_matches_ref(m, k, n, i, f, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k, n)
+    scale, maxk = fi_params(i, f)
+    got = qmatmul(x, w, "fi", scale, maxk)
+    want = qmatmul_ref(x, w, "fi", jnp.float32(scale), jnp.float32(maxk))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+@given(st.integers(1, 140), st.integers(1, 50), st.integers(1, 140),
+       st.integers(2, 7), st.integers(1, 15), st.integers(0, 2 ** 32 - 1))
+def test_qmatmul_fl_matches_ref(m, k, n, e, mm, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k, n)
+    got = qmatmul(x, w, "fl", float(e), float(mm))
+    want = qmatmul_ref(x, w, "fl", e, mm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_qmatmul_tile_boundaries():
+    """Shapes straddling the 128-tile boundaries of the BlockSpec."""
+    rng = np.random.default_rng(0)
+    for m, k, n in [(127, 25, 32), (128, 25, 32), (129, 25, 32),
+                    (256, 3136, 1024), (1, 1, 1), (1, 3136, 10)]:
+        x, w = _rand(rng, m, k, n)
+        got = qmatmul(x, w, "none")
+        want = qmatmul_ref(x, w, "none")
+        assert got.shape == (m, n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul_quantizes_x_not_w():
+    """The kernel snaps x onto the lattice; w passes through untouched
+    (weights are pre-quantized on the Rust side)."""
+    x = jnp.asarray([[0.3]], jnp.float32)       # not on FI(2,1) grid
+    w = jnp.asarray([[0.3]], jnp.float32)
+    scale, maxk = fi_params(2, 1)
+    got = float(qmatmul(x, w, "fi", scale, maxk)[0, 0])
+    # x -> 0.5 (round .6 half away), w stays 0.3
+    np.testing.assert_allclose(got, 0.5 * 0.3, rtol=1e-6)
+
+
+def test_pick_bm_vmem_budget():
+    """Adaptive M-tile must stay 128-aligned and inside the x-tile VMEM
+    budget for every layer shape in the network (and generally)."""
+    from compile.kernels.qmatmul import X_TILE_BYTES, pick_bm
+
+    shapes = [(64 * 784, 25), (64 * 196, 800), (64, 3136), (64, 1024),
+              (1, 25), (100_000, 3136), (7, 7)]
+    for m, k in shapes:
+        bm = pick_bm(m, k)
+        assert bm % 128 == 0
+        assert bm >= 128
+        # budget holds whenever the budget allows >= one 128-row tile
+        if k * 4 * 128 <= X_TILE_BYTES:
+            assert bm * k * 4 <= max(X_TILE_BYTES, 128 * k * 4), (m, k, bm)
+        # grid stays coarse: at most ~16 rows unless the budget caps it
+        rows = -(-m // bm)
+        assert rows <= 17 or bm * k * 4 > X_TILE_BYTES - k * 4 * 128, \
+            (m, k, bm, rows)
+
+
+def test_qmatmul_tall_tiles_still_correct():
+    """Shapes that trigger the tall-tile path (small K, big M)."""
+    rng = np.random.default_rng(3)
+    m, k, n = 2000, 25, 32
+    x = jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (k, n)).astype(np.float32))
+    got = qmatmul(x, w, "none")
+    want = qmatmul_ref(x, w, "none")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)

@@ -1,0 +1,113 @@
+"""L2 model tests: Pallas-backed forward vs the lax.conv oracle, shape
+contracts, quantization plumbing, and Table-1 range extraction."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import (activation_ranges, forward, forward_train,
+                           im2col, init_params, maxpool2, param_names)
+from compile.quant import fi_params
+
+
+def _params():
+    return init_params(seed=3)
+
+
+def _x(b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, 1, (b, 28, 28, 1)).astype(np.float32))
+
+
+def test_param_names_order():
+    assert param_names() == [
+        "conv1_w", "conv1_b", "conv2_w", "conv2_b",
+        "fc1_w", "fc1_b", "fc2_w", "fc2_b",
+    ]
+
+
+def test_shapes_match_paper_fig2():
+    p = _params()
+    assert p["conv1_w"].shape == (5, 5, 1, 32)
+    assert p["conv2_w"].shape == (5, 5, 32, 64)
+    assert p["fc1_w"].shape == (3136, 1024)
+    assert p["fc2_w"].shape == (1024, 10)
+    logits = forward_train(p, _x(3))
+    assert logits.shape == (3, 10)
+
+
+def test_im2col_layout():
+    """Patch layout (ky, kx, c) must match rust/src/nn/conv.rs."""
+    b, h, w, c = 1, 4, 4, 2
+    x = jnp.arange(b * h * w * c, dtype=jnp.float32).reshape(b, h, w, c)
+    cols = im2col(x, 3, 3, 1)
+    assert cols.shape == (16, 18)
+    # center pixel of patch at (y=1, x=1) is x[0,1,1,:] at offset (ky=1,kx=1)
+    patch = np.asarray(cols[1 * 4 + 1]).reshape(3, 3, 2)
+    np.testing.assert_array_equal(patch[1, 1], np.asarray(x[0, 1, 1]))
+    # top-left of patch at (0,0) is zero padding
+    patch00 = np.asarray(cols[0]).reshape(3, 3, 2)
+    np.testing.assert_array_equal(patch00[0, 0], [0.0, 0.0])
+
+
+def test_maxpool2():
+    x = jnp.asarray(np.arange(16, dtype=np.float32).reshape(1, 4, 4, 1))
+    y = np.asarray(maxpool2(x))
+    np.testing.assert_array_equal(y[0, :, :, 0], [[5, 7], [13, 15]])
+
+
+def test_forward_pallas_matches_oracle_f32():
+    p = _params()
+    x = _x(2)
+    got = np.asarray(forward(p, x, "none"))
+    want = np.asarray(forward_train(p, x, "none"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_pallas_matches_oracle_fi():
+    p = _params()
+    x = _x(2, seed=1)
+    qs = []
+    for i, f in [(5, 8), (6, 8), (6, 8), (6, 8)]:
+        qs.extend(fi_params(i, f))
+    got = np.asarray(forward(p, x, "fi", [jnp.float32(v) for v in qs]))
+    want = np.asarray(forward_train(p, x, "fi",
+                                    [jnp.float32(v) for v in qs]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_pallas_matches_oracle_fl():
+    p = _params()
+    x = _x(2, seed=2)
+    qs = []
+    for e, m in [(4, 9), (4, 9), (4, 9), (4, 9)]:
+        qs.extend((float(e), float(m)))
+    got = np.asarray(forward(p, x, "fl", [jnp.float32(v) for v in qs]))
+    want = np.asarray(forward_train(p, x, "fl",
+                                    [jnp.float32(v) for v in qs]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_quantization_changes_logits():
+    """A brutally narrow representation must actually perturb the output
+    (guards against fake-quant being silently skipped)."""
+    p = _params()
+    x = _x(2, seed=3)
+    base = np.asarray(forward_train(p, x, "none"))
+    qs = []
+    for i, f in [(1, 1)] * 4:
+        qs.extend(fi_params(i, f))
+    coarse = np.asarray(forward_train(p, x, "fi",
+                                      [jnp.float32(v) for v in qs]))
+    assert not np.allclose(base, coarse, atol=1e-3)
+
+
+def test_activation_ranges_structure():
+    p = _params()
+    r = activation_ranges(p, _x(4))
+    assert set(r.keys()) == {"conv1", "conv2", "fc1", "fc2"}
+    for layer in r.values():
+        lo, hi = layer["range"]
+        assert lo <= hi
+        assert layer["w"][0] <= layer["w"][1]
+    # input is non-negative, relu outputs non-negative: conv1 max > 0
+    assert r["conv1"]["a"][1] > 0

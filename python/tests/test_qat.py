@@ -1,0 +1,65 @@
+"""Quantization-aware retraining (paper question 4): conversion to an
+aggressive representation costs accuracy; retraining under the quantized
+datapath recovers a meaningful part of it."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import qat
+from compile.model import init_params
+from compile.quant import fi_params
+from compile import train as trainer
+
+
+def test_ste_preserves_gradient_path():
+    import jax
+
+    params = init_params(seed=0)
+    qscalars = []
+    for i, f in [(2, 3)] * 4:
+        qscalars.extend(fi_params(i, f))
+    qscalars = [jnp.float32(v) for v in qscalars]
+
+    def loss(p):
+        # linear functional of the quantized params: its true gradient
+        # through the quantizer is 0 a.e., but the STE passes identity,
+        # so d(loss)/dp must be exactly 1 for every element
+        qp = qat.ste_quant_params(p, qscalars)
+        return sum(jnp.sum(v) for v in qp.values())
+
+    g = jax.grad(loss)(params)
+    for k, v in g.items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.ones_like(np.asarray(v)),
+                                      err_msg=k)
+
+
+def test_ste_forward_is_quantized():
+    params = init_params(seed=1)
+    qscalars = []
+    for i, f in [(1, 1)] * 4:
+        qscalars.extend(fi_params(i, f))
+    qp = qat.ste_quant_params(params, [jnp.float32(v) for v in qscalars])
+    w = np.asarray(qp["fc1_w"])
+    # FI(1,1) grid: multiples of 0.5 clamped at 1.5
+    assert np.all(np.abs(w * 2 - np.round(w * 2)) < 1e-6)
+    assert np.abs(w).max() <= 1.5 + 1e-6
+
+
+def test_retraining_recovers_accuracy():
+    """Train a small float model, convert to an aggressive FI config
+    (accuracy drops), retrain (accuracy recovers)."""
+    params, _, _, _ = trainer.train(steps=120, batch=64, n_train=2000,
+                                    n_test=400, seed=5, verbose=False)
+    cfg = [(1, 3), (2, 3), (3, 3), (6, 3)]  # 3 fractional bits everywhere
+    _, hist = qat.retrain(params, cfg, steps=80, n_train=2000,
+                          verbose=False)
+    drop = hist["float_accuracy_before"] - hist["quantized_accuracy_before"]
+    gain = (hist["quantized_accuracy_after"]
+            - hist["quantized_accuracy_before"])
+    # conversion must actually hurt for the question to be meaningful...
+    assert drop > 0.02, f"conversion only cost {drop:.4f}"
+    # ...and retraining must recover a meaningful part of the loss
+    assert gain > drop * 0.3, (
+        f"retraining recovered too little: drop {drop:.4f}, gain {gain:.4f}"
+    )

@@ -1,0 +1,114 @@
+"""jnp fake-quant emulation vs the bit-accurate scalar reference.
+
+These are the bit-exactness contracts: quant.py (which runs inside the AOT
+artifacts) must agree with bitref.py (which generates the Rust golden
+vectors) on every value.  Hypothesis sweeps values and widths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import bitref
+from compile.quant import drum_mul, fake_quant_fi, fake_quant_fl, fi_params
+
+settings.register_profile("lop", max_examples=60, deadline=None)
+settings.load_profile("lop")
+
+
+def _check_fi(xs, i, f):
+    scale, maxk = fi_params(i, f)
+    got = np.asarray(fake_quant_fi(jnp.asarray(xs, jnp.float32),
+                                   jnp.float32(scale), jnp.float32(maxk)))
+    want = np.array([bitref.fi_quantize(float(x), i, f) for x in
+                     np.asarray(xs, np.float32)], np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def _check_fl(xs, e, m):
+    got = np.asarray(fake_quant_fl(jnp.asarray(xs, jnp.float32),
+                                   jnp.int32(e), jnp.int32(m)))
+    want = np.array([bitref.fl_quantize(float(x), e, m) for x in
+                     np.asarray(xs, np.float32)], np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(0, 8), st.integers(0, 12),
+       st.lists(st.floats(-1e4, 1e4, width=32), min_size=1, max_size=50))
+def test_fi_matches_bitref(i, f, xs):
+    _check_fi(np.array(xs, np.float32), i, f)
+
+
+def test_fi_edge_values():
+    for i, f in [(4, 8), (6, 8), (0, 7), (8, 0), (11, 11)]:
+        maxv = bitref.fi_max(i, f)
+        xs = np.array([0.0, -0.0, maxv, -maxv, maxv * 2, -maxv * 2,
+                       0.5 / 2 ** f, 1.5 / 2 ** f, -0.5 / 2 ** f,
+                       1e-30, -1e-30], np.float32)
+        _check_fi(xs, i, f)
+
+
+def test_fi_tie_rounding_half_away():
+    # magnitude ties round away from zero
+    _check_fi(np.array([0.5, -0.5, 1.5, -1.5, 2.5], np.float32), 4, 0)
+    got = np.asarray(fake_quant_fi(jnp.float32(0.5), jnp.float32(1.0),
+                                   jnp.float32(15.0)))
+    assert got == 1.0
+
+
+@given(st.integers(2, 7), st.integers(1, 15),
+       st.lists(st.floats(-1e6, 1e6, width=32), min_size=1, max_size=50))
+def test_fl_matches_bitref(e, m, xs):
+    _check_fl(np.array(xs, np.float32), e, m)
+
+
+def test_fl_edge_values():
+    for e, m in [(4, 9), (4, 8), (5, 10), (2, 2), (7, 15), (4, 1)]:
+        mn = bitref.fl_min_normal(e)
+        mx = bitref.fl_max(e, m)
+        xs = np.array([0.0, -0.0, 1.0, -1.0, mn, mn / 2, mn / 2.0001,
+                       mn * 0.50001, -mn / 2, mx, -mx, mx * 4, 1.0 + 2.0 ** -(m + 1),
+                       2.0 ** -40, 3.0], np.float32)
+        _check_fl(xs, e, m)
+
+
+def test_fl_rne_ties_to_even():
+    # value exactly halfway between two mantissa grid points, even below
+    e, m = 4, 2
+    x = 1.0 + 2.0 ** -3  # 1.125: between 1.00 (even) and 1.25 -> 1.0
+    assert bitref.fl_quantize(x, e, m) == 1.0
+    got = float(np.asarray(fake_quant_fl(jnp.float32(x), jnp.int32(e),
+                                         jnp.int32(m))))
+    assert got == 1.0
+
+
+@given(st.integers(2, 22), st.integers(2, 16), st.integers(0, 2 ** 22 - 1),
+       st.integers(0, 2 ** 22 - 1))
+def test_drum_matches_bitref(nbits, k, a, b):
+    a &= (1 << nbits) - 1
+    b &= (1 << nbits) - 1
+    with jax.experimental.enable_x64():
+        got = int(drum_mul(jnp.asarray([a]), jnp.asarray([b]), k)[0])
+    assert got == bitref.drum_mul(a, b, k)
+
+
+def test_drum_exact_below_threshold():
+    # operands below 2^k are not approximated at all
+    for k in (4, 8, 12):
+        for a in (0, 1, (1 << k) - 1):
+            assert bitref.drum_approx_operand(a, k) == a
+
+
+def test_quantize_idempotent():
+    rng = np.random.default_rng(0)
+    xs = rng.normal(0, 5, 200).astype(np.float32)
+    for i, f in [(4, 8), (6, 8)]:
+        q1 = np.array([bitref.fi_quantize(float(x), i, f) for x in xs])
+        q2 = np.array([bitref.fi_quantize(float(x), i, f) for x in q1])
+        np.testing.assert_array_equal(q1, q2)
+    for e, m in [(4, 9), (5, 10)]:
+        q1 = np.array([bitref.fl_quantize(float(x), e, m) for x in xs])
+        q2 = np.array([bitref.fl_quantize(float(x), e, m) for x in q1])
+        np.testing.assert_array_equal(q1, q2)

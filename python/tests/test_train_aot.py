@@ -1,0 +1,81 @@
+"""Trainer + AOT exporter smoke tests (fast variants — the real run happens
+in `make artifacts`)."""
+
+import os
+import struct
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import bitref, data
+from compile import train as trainer
+from compile.aot import lower_forward, write_golden_vectors
+from compile.model import forward_train, init_params, param_names
+
+
+def test_loss_decreases_quickly():
+    params, _, _, acc = trainer.train(steps=30, batch=32, n_train=300,
+                                      n_test=200, seed=3, verbose=False)
+    # 30 steps on an easy synthetic task: must beat chance comfortably
+    assert acc > 0.3
+
+
+def test_weights_bin_format():
+    params = init_params(seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "w.bin")
+        trainer.save_weights_bin(p, params)
+        with open(p, "rb") as fh:
+            assert fh.read(4) == b"LOPW"
+            ver, n = struct.unpack("<II", fh.read(8))
+            assert ver == 1 and n == 8
+            names = []
+            for _ in range(n):
+                ln = struct.unpack("<I", fh.read(4))[0]
+                name = fh.read(ln).decode()
+                names.append(name)
+                nd = struct.unpack("<I", fh.read(4))[0]
+                dims = struct.unpack(f"<{nd}I", fh.read(4 * nd))
+                count = int(np.prod(dims))
+                raw = fh.read(4 * count)
+                arr = np.frombuffer(raw, np.float32).reshape(dims)
+                np.testing.assert_array_equal(arr, np.asarray(params[name]))
+            assert names == param_names()
+
+
+def test_adam_moves_params():
+    params = init_params(seed=0)
+    st = trainer.adam_init(params)
+    grads = {k: jnp.ones_like(v) for k, v in params.items()}
+    new, st2 = trainer.adam_update(params, grads, st, lr=1e-2)
+    assert int(st2["t"]) == 1
+    assert not np.allclose(np.asarray(new["fc2_w"]),
+                           np.asarray(params["fc2_w"]))
+
+
+def test_golden_vectors_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        inv = write_golden_vectors(d, seed=1)
+        assert set(inv) == {"fi_quant", "fl_quant", "drum", "cfpu",
+                            "h_mul", "mitchell", "truncated", "loa",
+                            "ssm"}
+        # spot-check fi_quant records against bitref
+        with open(os.path.join(d, "fi_quant.bin"), "rb") as fh:
+            assert fh.read(4) == b"LOPG"
+            ver, count, recsz = struct.unpack("<III", fh.read(12))
+            assert ver == 1 and count == inv["fi_quant"] and recsz == 16
+            for _ in range(50):
+                x, i, f, y = struct.unpack("<fIIf", fh.read(16))
+                assert y == np.float32(bitref.fi_quantize(x, i, f))
+
+
+def test_lower_forward_produces_hlo_text():
+    params = init_params(seed=0)
+    text = lower_forward(params, batch=1, mode="none")
+    assert "HloModule" in text
+    assert "parameter(0)" in text
+    # 9 parameters: x + 8 weight tensors
+    assert "parameter(8)" in text and "parameter(9)" not in text
+    text_fi = lower_forward(params, batch=1, mode="fi")
+    assert "parameter(16)" in text_fi  # + 8 quant scalars

@@ -1,0 +1,83 @@
+//! GEMM kernel microbenchmarks — the L3 hot path the §Perf pass iterates
+//! on.  Reports per-provider throughput in M MAC/s on the network's real
+//! layer shapes.
+
+use lop::approx::arith::ArithKind;
+use lop::nn::gemm::gemm;
+use lop::util::bench::{bench, header};
+use lop::util::prng::Rng;
+
+fn mats(m: usize, k: usize, n: usize, kind: &ArithKind)
+        -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(42);
+    let x: Vec<f32> = (0..m * k).map(|_| (rng.normal() * 2.0) as f32)
+        .collect();
+    let w: Vec<f32> = (0..k * n)
+        .map(|_| kind.quantize(rng.normal() as f32))
+        .collect();
+    (x, w, vec![0.0; m * n])
+}
+
+fn run_shape(label: &str, m: usize, k: usize, n: usize, iters: usize,
+             kinds: &[(&str, usize)]) {
+    println!("\n--- {label}: [{m} x {k}] @ [{k} x {n}] ---");
+    header();
+    let macs = (m * k * n) as f64;
+    for (ks, threads) in kinds {
+        let kind = ArithKind::parse(ks).unwrap();
+        let (x, w, mut out) = mats(m, k, n, &kind);
+        let r = bench(
+            &format!("{ks} (threads={threads})"),
+            1,
+            iters,
+            || {
+                gemm(&kind, &x, &w, m, k, n, &mut out, *threads);
+                std::hint::black_box(&out);
+            },
+        );
+        let mmacs = macs / (r.mean_ns() / 1e9) / 1e6;
+        println!("{}  -> {:.0} M MAC/s", r.summary(), mmacs);
+    }
+}
+
+fn main() {
+    println!("=== GEMM kernels: M MAC/s per arithmetic provider ===");
+
+    // FC1 shape (the network's dominant GEMM): batch 64
+    run_shape(
+        "FC1, batch 64",
+        64,
+        3136,
+        1024,
+        5,
+        &[
+            ("float32", 1),
+            ("float32", 0),
+            ("FI(6,8)", 1),
+            ("FI(6,8)", 0),
+            ("H(6,8,12)", 0),
+            ("FL(4,9)", 0),
+            ("binxnor", 0),
+        ],
+    );
+
+    // CFPU is the expensive provider: smaller shape, same layout
+    run_shape(
+        "FC-small (CFPU-viable)",
+        64,
+        784,
+        256,
+        5,
+        &[("I(5,10)", 1), ("I(5,10)", 0), ("FL(5,10)", 0)],
+    );
+
+    // CONV2 as im2col: [batch*14*14, 800] @ [800, 64]
+    run_shape(
+        "CONV2 im2col, batch 16",
+        16 * 196,
+        800,
+        64,
+        5,
+        &[("float32", 0), ("FI(6,8)", 0), ("H(6,8,12)", 0)],
+    );
+}

@@ -1,0 +1,73 @@
+//! Serving throughput/latency bench: the router → dynamic batcher →
+//! worker stack under closed bursts at several batching policies.
+//! (The open-loop end-to-end run is `examples/serve_inference.rs`.)
+
+use lop::coordinator::server::{Server, ServerOpts};
+use lop::data::synth;
+use lop::nn::network::NetConfig;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+fn burst(server: &Server, images: &[u8], n: usize)
+         -> (usize, Duration, f64, f64) {
+    let (tx, rx) = channel();
+    let t0 = Instant::now();
+    for i in 0..n {
+        let idx = i % 256;
+        let img: Vec<f32> = images[idx * 784..(idx + 1) * 784]
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect();
+        server
+            .router
+            .submit(0, img, tx.clone())
+            .expect("submit");
+    }
+    drop(tx);
+    let mut got = 0;
+    while got < n {
+        if rx.recv_timeout(Duration::from_secs(60)).is_err() {
+            break;
+        }
+        got += 1;
+    }
+    let wall = t0.elapsed();
+    let p50 = server.metrics.percentile_us(50.0) as f64 / 1e3;
+    let p99 = server.metrics.percentile_us(99.0) as f64 / 1e3;
+    (got, wall, p50, p99)
+}
+
+fn main() {
+    let (images, _) = synth::generate(256, 31);
+    println!("=== serving throughput: closed 512-request bursts, \
+              float32 on PJRT ===\n");
+    println!("{:>10} {:>12} {:>12} {:>12} {:>12} {:>12}", "max_batch",
+             "max_wait", "served", "req/s", "p50 (ms)", "p99 (ms)");
+    for (max_batch, wait_ms) in
+        [(1usize, 0.5f64), (8, 2.0), (16, 2.0), (16, 8.0), (64, 4.0)]
+    {
+        let opts = ServerOpts {
+            configs: vec![NetConfig::parse("float32").unwrap()],
+            max_batch,
+            max_wait: Duration::from_micros((wait_ms * 1e3) as u64),
+            queue_capacity: 8_192,
+            engine_workers: 1,
+            engine_gemm_threads: 1,
+            use_pjrt: true,
+        };
+        let server = Server::start(opts).expect("server");
+        // warm up the executable cache outside the timed burst
+        let (wtx, wrx) = channel();
+        server.router.submit(0, vec![0.0; 784], wtx).unwrap();
+        let _ = wrx.recv_timeout(Duration::from_secs(120));
+
+        let n = 512;
+        let (got, wall, p50, p99) = burst(&server, &images, n);
+        println!("{:>10} {:>10.1}ms {:>12} {:>12.1} {:>12.2} {:>12.2}",
+                 max_batch, wait_ms, got,
+                 got as f64 / wall.as_secs_f64(), p50, p99);
+        server.shutdown();
+    }
+    println!("\n(batching ablation: throughput should rise with \
+              max_batch until the PJRT artifact batch cap, trading p99)");
+}

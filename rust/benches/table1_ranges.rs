@@ -1,0 +1,40 @@
+//! Bench + regeneration of paper Table 1: per-layer WBA value ranges.
+//! Prints the table rows (the experiment artifact) and times the range
+//! profiling pass.
+
+use lop::coordinator::ranges::{format_table1, int_bits_for,
+                               profile_ranges};
+use lop::data::Dataset;
+use lop::nn::network::Dcnn;
+use lop::runtime::ArtifactDir;
+use lop::util::bench::{bench, header};
+
+fn main() {
+    let art = ArtifactDir::discover().expect("run `make artifacts`");
+    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let ds = Dataset::load(&art.dataset_path()).unwrap();
+
+    println!("=== Table 1: value range of weights, biases and \
+              activations per layer ===\n");
+    let ranges = profile_ranges(&dcnn, &ds, 2_000, 0);
+    print!("{}", format_table1(&ranges));
+    println!("\nderived range-determined BCI lower bounds (integral \
+              bits, sign-magnitude):");
+    for r in &ranges {
+        let c = r.combined();
+        let mag = c.0.abs().max(c.1.abs()) as f64;
+        println!("  {:<6} |range| {:>6.2} -> {} integral bits (paper \
+                  widens by +[0,3] for partial sums)",
+                 r.layer, mag, int_bits_for(mag));
+    }
+
+    println!("\n=== timing ===");
+    header();
+    for n in [100usize, 500, 2_000] {
+        let r = bench(&format!("profile_ranges(n={n})"), 1, 5, || {
+            let rr = profile_ranges(&dcnn, &ds, n, 0);
+            std::hint::black_box(rr);
+        });
+        println!("{}", r.summary());
+    }
+}

@@ -1,0 +1,57 @@
+//! Bench + regeneration of paper Table 3: classification accuracy of the
+//! floating-point-based customized computations (FL rows on the PJRT
+//! fake-quant path, I rows — CFPU approximate multiplier — on the
+//! bit-accurate engine).
+//!
+//! The bench uses a reduced subset to stay fast; EXPERIMENTS.md records
+//! the full-test-set run (`lop table3`).
+
+use lop::approx::arith::ArithKind;
+use lop::coordinator::eval::Evaluator;
+use lop::data::Dataset;
+use lop::nn::network::{Dcnn, NetConfig};
+use lop::runtime::{ArtifactDir, ModelRunner};
+use std::time::Instant;
+
+const ROWS: [&str; 5] = [
+    "FL(4,8)|FL(4,9)|FL(4,8)|FL(4,9)",
+    "FL(4,9)",
+    "I(4,8)|I(4,9)|I(4,8)|I(4,9)",
+    "I(4,9)",
+    "I(5,10)",
+];
+
+// paper-reported relative accuracies for the same rows
+const PAPER: [f64; 5] = [0.9898, 1.0, 0.9490, 0.9490, 1.0];
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(200);
+    let art = ArtifactDir::discover().expect("run `make artifacts`");
+    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let ds = Dataset::load(&art.dataset_path()).unwrap();
+    let runner = ModelRunner::new(art).unwrap();
+    let mut ev = Evaluator::new(dcnn, Some(runner), ds, n, 0);
+
+    let base = ev
+        .accuracy(&NetConfig::uniform(ArithKind::Float32))
+        .unwrap();
+    println!("=== Table 3: accuracy of floating-point customized \
+              computations (n = {n}, baseline {base:.4}) ===\n");
+    println!("{:<46} {:>9} {:>9} {:>11} {:>9}",
+             "CONV1|CONV2|FC1|FC2", "accuracy", "relative", "paper rel.",
+             "time");
+    println!("{}", "-".repeat(88));
+    for (row, paper) in ROWS.iter().zip(PAPER) {
+        let cfg = NetConfig::parse(row).unwrap();
+        let t0 = Instant::now();
+        let acc = ev.accuracy(&cfg).unwrap();
+        println!("{:<46} {:>9.4} {:>8.2}% {:>10.2}% {:>8.1?}", row, acc,
+                 acc / base * 100.0, paper * 100.0, t0.elapsed());
+    }
+    println!("\n(shape check: FL(4,9) uniform should reach ~100% \
+              relative; narrow-mantissa CFPU rows degrade; I(5,10) \
+              recovers — the paper's qualitative ordering)");
+}

@@ -1,0 +1,60 @@
+//! Bench + regeneration of paper Table 5: hardware cost of the 500-PE
+//! datapath per representation, plus the width-sweep ablations and the
+//! analytical-synthesis timing.
+
+use lop::approx::arith::ArithKind;
+use lop::hw::datapath::{Datapath, N_PE};
+use lop::hw::report::{format_table, hw_report, table5_kinds};
+use lop::util::bench::{bench, black_box, header};
+
+fn main() {
+    println!("=== Table 5: hardware cost of various implementations ===\n");
+    print!("{}", format_table(&hw_report(&table5_kinds())));
+
+    println!("\npaper reference rows (Arria 10, Quartus):");
+    println!("  float32  209,805 ALMs  500 DSPs   94.41 MHz  12.38 W   \
+              3.81 Gops/J");
+    println!("  float16  101,644 ALMs  500 DSPs  113.86 MHz   7.30 W   \
+              7.80 Gops/J");
+    println!("  FL(4,9)   93,500 ALMs  500 DSPs  115.89 MHz   6.68 W   \
+              8.67 Gops/J");
+    println!("  I(5,10)   92,111 ALMs    0 DSPs  116.80 MHz   6.28 W   \
+              9.30 Gops/J");
+    println!("  FI(6,8)   15,452 ALMs  500 DSPs  201.13 MHz   4.90 W  \
+              20.52 Gops/J");
+
+    println!("\n=== FI(6, f) fractional-width sweep ===");
+    println!("{:<10} {:>9} {:>11} {:>9} {:>10}", "repr", "ALMs",
+             "clock MHz", "power W", "Gops/J");
+    for f in [4u32, 6, 8, 10, 12, 14, 16] {
+        let k = ArithKind::parse(&format!("FI(6,{f})")).unwrap();
+        let dp = Datapath::synthesize(&k, N_PE);
+        println!("{:<10} {:>9.0} {:>11.2} {:>9.2} {:>10.2}", k.name(),
+                 dp.alms, dp.fmax_mhz, dp.power_w, dp.gops_per_j);
+    }
+
+    println!("\n=== FL(4, m) mantissa-width sweep ===");
+    println!("{:<10} {:>9} {:>11} {:>9} {:>10}", "repr", "ALMs",
+             "clock MHz", "power W", "Gops/J");
+    for m in [4u32, 6, 8, 9, 10, 12, 16, 23] {
+        let k = ArithKind::parse(&format!("FL(4,{m})")).unwrap();
+        let dp = Datapath::synthesize(&k, N_PE);
+        println!("{:<10} {:>9.0} {:>11.2} {:>9.2} {:>10.2}", k.name(),
+                 dp.alms, dp.fmax_mhz, dp.power_w, dp.gops_per_j);
+    }
+
+    println!("\n=== timing (analytical synthesis is the explorer's inner \
+              objective) ===");
+    header();
+    let kinds: Vec<ArithKind> = ["float32", "FI(6,8)", "H(6,8,12)",
+                                 "FL(4,9)", "I(5,10)"]
+        .iter()
+        .map(|s| ArithKind::parse(s).unwrap())
+        .collect();
+    let r = bench("Datapath::synthesize x5 kinds", 10, 200, || {
+        for k in &kinds {
+            black_box(Datapath::synthesize(k, N_PE));
+        }
+    });
+    println!("{}", r.summary());
+}

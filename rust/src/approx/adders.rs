@@ -1,0 +1,67 @@
+//! Approximate adders: lower-part-OR adder (LOA, Mahdiani et al.) — exact
+//! ripple add on the high part, bitwise OR on the low `l` bits with a
+//! carry-in generated from the AND of the low parts' MSBs.
+//! Matches `bitref.loa_add`.
+
+/// LOA: approximate `a + b` with an `l`-bit OR-ed lower part.
+#[inline]
+pub fn loa_add(a: u64, b: u64, l: u32) -> u64 {
+    if l == 0 {
+        return a + b;
+    }
+    let mask = (1u64 << l) - 1;
+    let lo = (a & mask) | (b & mask);
+    let cin = ((a >> (l - 1)) & 1) & ((b >> (l - 1)) & 1);
+    let hi = (a >> l) + (b >> l) + cin;
+    (hi << l) | lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn l_zero_is_exact() {
+        prop::check(
+            "loa(l=0) exact",
+            81,
+            prop::DEFAULT_CASES,
+            |rng| (rng.below(1 << 30), rng.below(1 << 30)),
+            |&(a, b)| loa_add(a, b, 0) == a + b,
+        );
+    }
+
+    #[test]
+    fn prop_error_bound() {
+        prop::check(
+            "loa error < 2^l",
+            82,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let l = rng.below(13) as u32;
+                (rng.below(1 << 20), rng.below(1 << 20), l)
+            },
+            |&(a, b, l)| loa_add(a, b, l).abs_diff(a + b) < (1u64 << l.max(1)),
+        );
+    }
+
+    #[test]
+    fn prop_add_zero_identity() {
+        prop::check(
+            "loa(a, 0) == a",
+            83,
+            prop::DEFAULT_CASES,
+            |rng| (rng.below(1 << 24), rng.below(13) as u32),
+            |&(a, l)| loa_add(a, 0, l) == a,
+        );
+    }
+
+    #[test]
+    fn known_values() {
+        // low 3 bits OR: 0b101 | 0b011 = 0b111; high: 0 + 0 + (1&0)=0
+        assert_eq!(loa_add(0b101, 0b011, 3), 0b111);
+        // carry-in from MSB AND of low parts
+        assert_eq!(loa_add(0b100, 0b100, 3), 0b100 | (1 << 3));
+    }
+}

@@ -1,0 +1,243 @@
+//! Arithmetic providers: a (data representation, multiplier) pairing — the
+//! paper's notion of a *domain* choice ("within each domain the choice of
+//! data representation and exact vs. approximate arithmetic operation is
+//! fixed", §3).  One provider is attached per partition part (per layer in
+//! layer-wise optimization).
+//!
+//! The scalar semantics live here; the optimized GEMM kernels that the NN
+//! engine actually runs are in `nn/gemm.rs` (one monomorphized kernel per
+//! provider kind — no dispatch inside MAC loops).
+
+use super::cfpu::CfpuMul;
+use super::drum::DrumMul;
+use crate::numeric::{BinXnor, FixedPoint, FloatRep, Representation};
+
+/// All supported (representation × arithmetic) pairings (paper Table 2
+/// plus the baseline and the §4.5 extension).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArithKind {
+    /// float32 baseline (exact IEEE mul/add).
+    Float32,
+    /// FI(i, f) with exact multiply, wide accumulation.
+    FixedExact(FixedPoint),
+    /// H(i, f, t): FI(i, f) with the DRUM(t) approximate multiplier.
+    FixedDrum(DrumMul),
+    /// FL(e, m) with exact multiply, wide accumulation.
+    FloatExact(FloatRep),
+    /// I(e, m): FL(e, m) with the CFPU(w) approximate multiplier.
+    FloatCfpu(CfpuMul),
+    /// Binary 0/1 representation with XNOR multiply (paper §4.5).
+    Binary,
+}
+
+impl ArithKind {
+    /// Paper notation, e.g. `FI(6, 8)`, `H(6, 8, 12)`, `FL(4, 9)`,
+    /// `I(5, 10)`, `float32`, `BinXNOR`.
+    pub fn name(&self) -> String {
+        match self {
+            ArithKind::Float32 => "float32".to_string(),
+            ArithKind::FixedExact(r) => r.name(),
+            ArithKind::FixedDrum(d) => d.name(),
+            ArithKind::FloatExact(r) => r.name(),
+            ArithKind::FloatCfpu(c) => c.name(),
+            ArithKind::Binary => "BinXNOR".to_string(),
+        }
+    }
+
+    /// Storage bits per value (used by the hardware cost model).
+    pub fn total_bits(&self) -> u32 {
+        match self {
+            ArithKind::Float32 => 32,
+            ArithKind::FixedExact(r) => r.total_bits(),
+            ArithKind::FixedDrum(d) => d.rep.total_bits(),
+            ArithKind::FloatExact(r) => r.total_bits(),
+            ArithKind::FloatCfpu(c) => c.rep.total_bits(),
+            ArithKind::Binary => 1,
+        }
+    }
+
+    /// True when the PJRT fake-quant path computes this config exactly
+    /// (exact multipliers only; approximate multipliers need the
+    /// bit-accurate engine).
+    pub fn pjrt_expressible(&self) -> bool {
+        matches!(
+            self,
+            ArithKind::Float32
+                | ArithKind::FixedExact(_)
+                | ArithKind::FloatExact(_)
+        )
+    }
+
+    /// Snap a value onto the provider's representation lattice.
+    pub fn quantize(&self, x: f32) -> f32 {
+        match self {
+            ArithKind::Float32 => x,
+            ArithKind::FixedExact(r) => r.quantize(x),
+            ArithKind::FixedDrum(d) => d.rep.quantize(x),
+            ArithKind::FloatExact(r) => r.quantize(x),
+            ArithKind::FloatCfpu(c) => c.rep.quantize(x),
+            ArithKind::Binary => BinXnor.quantize(x),
+        }
+    }
+
+    /// Scalar multiply through the provider's datapath (operands are
+    /// quantized internally where the unit requires it).
+    pub fn mul(&self, a: f32, b: f32) -> f32 {
+        match self {
+            ArithKind::Float32 => a * b,
+            ArithKind::FixedExact(r) => {
+                // exact product of two FI values carried at 2f fractional
+                // bits (no intermediate re-quantization)
+                let pa = r.quantize(a) as f64;
+                let pb = r.quantize(b) as f64;
+                (pa * pb) as f32
+            }
+            ArithKind::FixedDrum(d) => d.mul(a, b),
+            ArithKind::FloatExact(r) => {
+                let pa = r.quantize(a) as f64;
+                let pb = r.quantize(b) as f64;
+                (pa * pb) as f32
+            }
+            ArithKind::FloatCfpu(c) => c.mul(a, b),
+            ArithKind::Binary => {
+                BinXnor.quantize(a) * BinXnor.quantize(b)
+            }
+        }
+    }
+
+    /// The MAC-array product fed to the *wide* accumulator: the full-width
+    /// product before any re-quantization (the paper widens the
+    /// integral-bit BCI so partial sums never need narrowing, §4.2).
+    /// This is the semantics the GEMM kernels in `nn/gemm.rs` implement;
+    /// [`ArithKind::mul`] by contrast models the standalone scalar unit,
+    /// whose output register is in the representation (it re-quantizes).
+    pub fn mul_wide(&self, a: f32, b: f32) -> f64 {
+        match self {
+            ArithKind::Float32 => (a * b) as f64,
+            ArithKind::FixedExact(r) => {
+                r.quantize(a) as f64 * r.quantize(b) as f64
+            }
+            ArithKind::FixedDrum(d) => {
+                let ka = d.rep.code_of(a);
+                let kb = d.rep.code_of(b);
+                let p = d.mul_codes(ka, kb) as f64
+                    / (1u64 << (2 * d.rep.f_bits)) as f64;
+                let neg = (a < 0.0 && ka != 0) ^ (b < 0.0 && kb != 0);
+                if neg {
+                    -p
+                } else {
+                    p
+                }
+            }
+            ArithKind::FloatExact(r) => {
+                r.quantize(a) as f64 * r.quantize(b) as f64
+            }
+            ArithKind::FloatCfpu(c) => c.mul(a, b) as f64,
+            ArithKind::Binary => {
+                (BinXnor.quantize(a) * BinXnor.quantize(b)) as f64
+            }
+        }
+    }
+
+    /// Parse paper notation: `f32` | `float32` | `FI(i,f)` | `H(i,f,t)` |
+    /// `FL(e,m)` | `I(e,m)` | `I(e,m,w)` | `binxnor`.
+    pub fn parse(s: &str) -> Result<ArithKind, String> {
+        let t = s.trim();
+        let lower = t.to_ascii_lowercase();
+        if lower == "f32" || lower == "float32" {
+            return Ok(ArithKind::Float32);
+        }
+        if lower == "binxnor" || lower == "binary" {
+            return Ok(ArithKind::Binary);
+        }
+        let (head, args) = t
+            .split_once('(')
+            .ok_or_else(|| format!("cannot parse arith '{s}'"))?;
+        let args = args
+            .strip_suffix(')')
+            .ok_or_else(|| format!("missing ')' in '{s}'"))?;
+        let nums: Result<Vec<u32>, _> = args
+            .split(',')
+            .map(|a| a.trim().parse::<u32>())
+            .collect();
+        let nums = nums.map_err(|e| format!("bad number in '{s}': {e}"))?;
+        match (head.trim().to_ascii_uppercase().as_str(), nums.as_slice()) {
+            ("FI", [i, f]) => Ok(ArithKind::FixedExact(FixedPoint::new(*i, *f))),
+            ("H", [i, f, t]) => Ok(ArithKind::FixedDrum(DrumMul::new(
+                FixedPoint::new(*i, *f),
+                *t,
+            ))),
+            ("FL", [e, m]) => Ok(ArithKind::FloatExact(FloatRep::new(*e, *m))),
+            // paper writes I(e, m); the CFPU tuning width defaults to 3
+            ("I", [e, m]) => Ok(ArithKind::FloatCfpu(CfpuMul::new(
+                FloatRep::new(*e, *m),
+                3,
+            ))),
+            ("I", [e, m, w]) => Ok(ArithKind::FloatCfpu(CfpuMul::new(
+                FloatRep::new(*e, *m),
+                *w,
+            ))),
+            _ => Err(format!("unknown arith notation '{s}'")),
+        }
+    }
+}
+
+/// Object-safe alias used by code that holds heterogeneous providers.
+pub trait Arith: Send + Sync {
+    fn kind(&self) -> ArithKind;
+}
+
+impl Arith for ArithKind {
+    fn kind(&self) -> ArithKind {
+        *self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["float32", "FI(6, 8)", "H(6, 8, 12)", "FL(4, 9)",
+                  "I(5, 10)", "BinXNOR"] {
+            let k = ArithKind::parse(s).unwrap();
+            assert_eq!(ArithKind::parse(&k.name()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(ArithKind::parse("FI(6)").is_err());
+        assert!(ArithKind::parse("XX(1,2)").is_err());
+        assert!(ArithKind::parse("FI(6,8").is_err());
+        assert!(ArithKind::parse("").is_err());
+    }
+
+    #[test]
+    fn bits_accounting() {
+        assert_eq!(ArithKind::parse("FI(6,8)").unwrap().total_bits(), 15);
+        assert_eq!(ArithKind::parse("FL(4,9)").unwrap().total_bits(), 14);
+        assert_eq!(ArithKind::Float32.total_bits(), 32);
+        assert_eq!(ArithKind::Binary.total_bits(), 1);
+    }
+
+    #[test]
+    fn pjrt_expressibility() {
+        assert!(ArithKind::parse("FI(6,8)").unwrap().pjrt_expressible());
+        assert!(ArithKind::parse("FL(4,9)").unwrap().pjrt_expressible());
+        assert!(!ArithKind::parse("H(6,8,12)").unwrap().pjrt_expressible());
+        assert!(!ArithKind::parse("I(5,10)").unwrap().pjrt_expressible());
+    }
+
+    #[test]
+    fn scalar_mul_kinds() {
+        let fi = ArithKind::parse("FI(6,8)").unwrap();
+        assert_eq!(fi.mul(0.5, 0.25), 0.125);
+        let f32k = ArithKind::Float32;
+        assert_eq!(f32k.mul(0.3, 0.3), 0.3f32 * 0.3f32);
+        let bin = ArithKind::Binary;
+        assert_eq!(bin.mul(2.0, -3.0), -1.0);
+        assert_eq!(bin.mul(-2.0, -3.0), 1.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! CFPU: Configurable Floating-Point Unit multiplier (Imani, Peroni &
+//! Rosing, DAC'17) — the approximate multiplier behind the paper's
+//! I(e, m) configurations (Table 2).
+//!
+//! The mantissa multiplier is *skipped* when one operand's mantissa is
+//! close to a power of two: if the top `w` mantissa bits are all 0 the
+//! product is approximated by the other operand with exponents added; if
+//! all 1, the same with an exponent increment.  Otherwise it falls back to
+//! the exact (rounded) multiply.  `w` is the configurability knob trading
+//! error for how often the expensive exact path runs.  The realization is
+//! multiplier-free when the fallback is disabled in hardware; the cost
+//! model (`hw/`) accounts for both.  Matches `bitref.cfpu_mul`.
+
+use crate::numeric::{FloatRep, Representation};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CfpuMul {
+    pub rep: FloatRep,
+    pub w: u32,
+}
+
+impl CfpuMul {
+    pub fn new(rep: FloatRep, w: u32) -> Self {
+        assert!(w >= 1, "CFPU tuning width must be >= 1");
+        CfpuMul { rep, w }
+    }
+
+    pub fn name(&self) -> String {
+        format!("I({}, {})", self.rep.e_bits, self.rep.m_bits)
+    }
+
+    /// Saturate/flush a positive product magnitude into the representation
+    /// (approximate path only scales by powers of two, so no re-rounding).
+    fn clamp(&self, y: f64) -> f64 {
+        let mx = self.rep.max_finite();
+        if y > mx {
+            return mx;
+        }
+        let mn = self.rep.min_normal();
+        if y < mn {
+            return if y * 2.0 >= mn { mn } else { 0.0 };
+        }
+        y
+    }
+
+    pub fn mul(&self, x: f32, y: f32) -> f32 {
+        self.mul_bits(self.rep.encode(x), self.rep.encode(y))
+    }
+
+    /// Multiply two already-encoded FL(e, m) bit patterns (the GEMM hot
+    /// path pre-encodes operands once instead of per MAC).
+    pub fn mul_bits(&self, bx: u64, by: u64) -> f32 {
+        let (e, m) = (self.rep.e_bits, self.rep.m_bits);
+        let man_mask = (1u64 << m) - 1;
+        let fx = (bx >> m) & ((1u64 << e) - 1);
+        let fy = (by >> m) & ((1u64 << e) - 1);
+        if fx == 0 || fy == 0 {
+            return 0.0;
+        }
+        let (mx, my) = (bx & man_mask, by & man_mask);
+        let sx = (bx >> (e + m)) & 1;
+        let sy = (by >> (e + m)) & 1;
+        let sign = if (sx ^ sy) == 1 { -1.0 } else { 1.0 };
+        let bias = self.rep.bias() as i64;
+        let top = (1u64 << self.w) - 1;
+
+        let approx = |keep_field: u64, keep_man: u64, drop_field: u64,
+                      round_up: bool| -> f32 {
+            let eu = (keep_field as i64 - bias) + (drop_field as i64 - bias)
+                + i64::from(round_up);
+            let sig = 1.0 + keep_man as f64 / (1u64 << m) as f64;
+            let val = sig * pow2(eu as i32);
+            (sign * self.clamp(val)) as f32
+        };
+
+        if self.w <= m {
+            let ytop = (my >> (m - self.w)) & top;
+            if ytop == 0 {
+                return approx(fx, mx, fy, false);
+            }
+            if ytop == top {
+                return approx(fx, mx, fy, true);
+            }
+            let xtop = (mx >> (m - self.w)) & top;
+            if xtop == 0 {
+                return approx(fy, my, fx, false);
+            }
+            if xtop == top {
+                return approx(fy, my, fx, true);
+            }
+        }
+        // exact fallback: multiply the decoded values, round to FL(e, m)
+        let xv = self.rep.decode(bx) as f64;
+        let yv = self.rep.decode(by) as f64;
+        self.rep.quantize_f64(xv * yv) as f32
+    }
+}
+
+#[inline]
+fn pow2(n: i32) -> f64 {
+    // n stays within [-2*bias-1, 2*emax+1] ⊆ [-255, 257] for e <= 8
+    f64::from_bits(((n + 1023) as u64) << 52)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn exact(rep: FloatRep, x: f32, y: f32) -> f32 {
+        let xq = rep.quantize(x) as f64;
+        let yq = rep.quantize(y) as f64;
+        rep.quantize_f64(xq * yq) as f32
+    }
+
+    #[test]
+    fn power_of_two_operand_exact() {
+        let c = CfpuMul::new(FloatRep::new(4, 9), 3);
+        for p in [0.25f32, 0.5, 1.0, 2.0, 4.0, 64.0] {
+            for x in [1.3f32, -2.7, 0.11, 9.9] {
+                let xq = c.rep.quantize(x);
+                assert_eq!(c.mul(xq, p), exact(c.rep, xq, p),
+                           "x={xq} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_operands() {
+        let c = CfpuMul::new(FloatRep::new(4, 9), 3);
+        assert_eq!(c.mul(0.0, 5.0), 0.0);
+        assert_eq!(c.mul(5.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn prop_sign_correct() {
+        prop::check(
+            "cfpu sign follows operand signs",
+            51,
+            prop::DEFAULT_CASES,
+            |rng| ((rng.normal() * 10.0) as f32, (rng.normal() * 10.0) as f32),
+            |&(x, y)| {
+                let c = CfpuMul::new(FloatRep::new(4, 9), 3);
+                let p = c.mul(x, y);
+                p == 0.0 || (p > 0.0) == ((x > 0.0) == (y > 0.0))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_error_bound() {
+        prop::check_msg(
+            "cfpu relative error <= 2^-w + 2^-(m-1)",
+            52,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let w = 1 + rng.below(4) as u32;
+                let x = rng.range_f32(0.1, 10.0);
+                let y = rng.range_f32(0.1, 10.0);
+                (w, x, y)
+            },
+            |&(w, x, y)| {
+                let rep = FloatRep::new(5, 10);
+                let c = CfpuMul::new(rep, w);
+                let got = c.mul(x, y) as f64;
+                let want = exact(rep, x, y) as f64;
+                if want == 0.0 {
+                    return Ok(());
+                }
+                let rel = (got - want).abs() / want.abs();
+                let bound = (2.0f64).powi(-(w as i32))
+                    + (2.0f64).powi(-(rep.m_bits as i32 - 1));
+                if rel <= bound {
+                    Ok(())
+                } else {
+                    Err(format!("rel={rel} > bound={bound}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn large_w_falls_back_to_exact() {
+        let rep = FloatRep::new(4, 9);
+        let c = CfpuMul::new(rep, 10); // w > m: check can never pass
+        let mut rng = crate::util::prng::Rng::new(7);
+        for _ in 0..300 {
+            let x = (rng.normal() * 5.0) as f32;
+            let y = (rng.normal() * 5.0) as f32;
+            assert_eq!(c.mul(x, y), exact(rep, x, y));
+        }
+    }
+
+    #[test]
+    fn name_matches_paper_notation() {
+        assert_eq!(CfpuMul::new(FloatRep::new(5, 10), 3).name(), "I(5, 10)");
+    }
+}

@@ -1,0 +1,163 @@
+//! DRUM(k): Dynamic Range Unbiased Multiplier (Hashemi, Bahar & Reda,
+//! ICCAD'15) — the approximate multiplier behind the paper's H(i, f, t)
+//! configurations (Table 2), generalized to arbitrary widths.
+//!
+//! Each operand keeps only the `k` bits at/below its leading one; the LSB
+//! of the kept window is forced to 1 (the unbiasing trick that centers the
+//! truncation error), everything below is zeroed.  The k x k product is
+//! then exact.  Matches `bitref.drum_approx_operand` / `drum_mul`.
+
+use super::lod::bit_length;
+use crate::numeric::{FixedPoint, Representation};
+
+/// DRUM operand conditioning.
+#[inline]
+pub fn drum_approx_operand(a: u64, k: u32) -> u64 {
+    if a < (1u64 << k) {
+        return a;
+    }
+    let t = bit_length(a) - 1; // leading-one position
+    let sh = t - k + 1; // dropped low bits
+    ((a >> sh) | 1) << sh
+}
+
+/// DRUM(k) product of two unsigned integers.
+#[inline]
+pub fn drum_mul(a: u64, b: u64, k: u32) -> u64 {
+    drum_approx_operand(a, k) * drum_approx_operand(b, k)
+}
+
+/// The H(i, f, t) multiplier: sign-magnitude FI operands, DRUM(t) on the
+/// magnitude codes, product re-quantized into FI(i, f).
+/// Matches `bitref.h_mul`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DrumMul {
+    pub rep: FixedPoint,
+    pub t: u32,
+}
+
+impl DrumMul {
+    pub fn new(rep: FixedPoint, t: u32) -> Self {
+        assert!(t >= 2, "DRUM needs k >= 2 (got {t})");
+        DrumMul { rep, t }
+    }
+
+    pub fn name(&self) -> String {
+        format!("H({}, {}, {})", self.rep.i_bits, self.rep.f_bits, self.t)
+    }
+
+    /// Multiply two reals through the H datapath.
+    pub fn mul(&self, x: f32, y: f32) -> f32 {
+        let ka = self.rep.code_of(x);
+        let kb = self.rep.code_of(y);
+        let prod = drum_mul(ka, kb, self.t); // 2f fractional bits
+        let v = prod as f64 / exp2u(2 * self.rep.f_bits);
+        let q = self.rep.quantize(v as f32);
+        let neg = ((x < 0.0 && ka != 0) ^ (y < 0.0 && kb != 0)) && q != 0.0;
+        if neg {
+            -q
+        } else {
+            q
+        }
+    }
+
+    /// The raw magnitude-code product with 2f fractional bits (used by the
+    /// wide-accumulation GEMM path, which defers re-quantization).
+    #[inline]
+    pub fn mul_codes(&self, ka: u64, kb: u64) -> u64 {
+        drum_mul(ka, kb, self.t)
+    }
+}
+
+#[inline]
+fn exp2u(n: u32) -> f64 {
+    (1u64 << n) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn exact_below_threshold() {
+        for k in [4u32, 8, 12] {
+            for a in [0u64, 1, (1 << k) - 1] {
+                assert_eq!(drum_approx_operand(a, k), a);
+            }
+        }
+    }
+
+    #[test]
+    fn known_conditioning() {
+        // a = 0b110110, k = 3: keep bits 5..3 -> 0b110, force bit 3 LSB=1
+        // window is bits [5,4,3] = 110 -> set bit3 -> 111, shifted back
+        assert_eq!(drum_approx_operand(0b110110, 3), 0b111000);
+        assert_eq!(drum_approx_operand(0b100000, 3), 0b101000);
+    }
+
+    #[test]
+    fn prop_error_bound() {
+        prop::check(
+            "drum relative error <= 2^-(k-2)",
+            41,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let k = 2 + rng.below(18) as u32;
+                let a = rng.next_u64() >> (34 + rng.below(20));
+                let b = rng.next_u64() >> (34 + rng.below(20));
+                (a, b, k)
+            },
+            |&(a, b, k)| {
+                let exact = (a as u128) * (b as u128);
+                let approx = drum_mul(a, b, k) as u128;
+                if exact == 0 {
+                    approx == 0
+                } else {
+                    // per-operand factor <= (1 + 2^-(k-1))
+                    let f = 1.0 + (2.0f64).powi(-(k as i32 - 1));
+                    let diff = exact.abs_diff(approx) as f64;
+                    diff / exact as f64 <= f * f - 1.0 + 1e-12
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_commutative() {
+        prop::check(
+            "drum commutative",
+            42,
+            prop::DEFAULT_CASES,
+            |rng| (rng.below(1 << 20), rng.below(1 << 20),
+                   3 + rng.below(12) as u32),
+            |&(a, b, k)| drum_mul(a, b, k) == drum_mul(b, a, k),
+        );
+    }
+
+    #[test]
+    fn h_mul_sign_and_zero() {
+        let h = DrumMul::new(FixedPoint::new(6, 8), 12);
+        assert_eq!(h.mul(0.0, 3.0), 0.0);
+        assert_eq!(h.mul(3.0, 0.0), 0.0);
+        let p = h.mul(1.5, 2.0);
+        assert!(p > 0.0);
+        assert_eq!(h.mul(-1.5, 2.0), -p);
+        assert_eq!(h.mul(1.5, -2.0), -p);
+        assert_eq!(h.mul(-1.5, -2.0), p);
+    }
+
+    #[test]
+    fn h_mul_small_operands_exact() {
+        // both magnitudes below 2^t: DRUM passes through, product exact
+        let h = DrumMul::new(FixedPoint::new(6, 8), 14);
+        let (x, y) = (0.25f32, 0.5f32);
+        assert_eq!(h.mul(x, y), 0.125);
+    }
+
+    #[test]
+    fn name_matches_paper_notation() {
+        let h = DrumMul::new(FixedPoint::new(8, 8), 14);
+        assert_eq!(h.name(), "H(8, 8, 14)");
+    }
+}

@@ -1,0 +1,64 @@
+//! Leading-one detector (LOD) / priority encoder — the building block of
+//! dynamic-range approximate multipliers like DRUM (and the hardware cost
+//! driver the paper calls out for [21]: "leading-one detector and barrel
+//! shifter").
+
+/// Position of the leading one (0-based from the LSB); `None` for 0.
+#[inline]
+pub fn leading_one(a: u64) -> Option<u32> {
+    if a == 0 {
+        None
+    } else {
+        Some(63 - a.leading_zeros())
+    }
+}
+
+/// Bit length: number of bits needed to represent `a` (0 -> 0).
+#[inline]
+pub fn bit_length(a: u64) -> u32 {
+    64 - a.leading_zeros()
+}
+
+/// One-hot mask of the leading one (hardware LOD output); 0 for 0.
+#[inline]
+pub fn lod_mask(a: u64) -> u64 {
+    match leading_one(a) {
+        Some(t) => 1u64 << t,
+        None => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(leading_one(0), None);
+        assert_eq!(leading_one(1), Some(0));
+        assert_eq!(leading_one(0b1000_0000), Some(7));
+        assert_eq!(leading_one(u64::MAX), Some(63));
+        assert_eq!(bit_length(0), 0);
+        assert_eq!(bit_length(255), 8);
+        assert_eq!(lod_mask(0b0110), 0b0100);
+    }
+
+    #[test]
+    fn prop_mask_dominates() {
+        prop::check(
+            "lod mask <= a < 2*mask",
+            31,
+            prop::DEFAULT_CASES,
+            |rng| rng.next_u64() >> rng.below(64),
+            |&a| {
+                if a == 0 {
+                    lod_mask(a) == 0
+                } else {
+                    let m = lod_mask(a);
+                    m <= a && a < m.saturating_mul(2).max(m)
+                }
+            },
+        );
+    }
+}

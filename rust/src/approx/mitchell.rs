@@ -1,0 +1,86 @@
+//! Mitchell's logarithmic multiplier (1962) — the classic log-domain
+//! approximate multiplier the logarithmic-representation line of work
+//! builds on.  log2(v) ≈ t + (v - 2^t)/2^t; the antilog uses the same
+//! linear approximation.  Matches `bitref.mitchell_mul`.
+
+use super::lod::bit_length;
+
+/// Fixed-point log2 with `nfrac` fractional bits: (t << nfrac) | frac.
+#[inline]
+pub fn log2_fix(v: u64, nfrac: u32) -> u64 {
+    debug_assert!(v > 0);
+    let t = bit_length(v) - 1;
+    let frac = ((v - (1u64 << t)) << nfrac) >> t;
+    ((t as u64) << nfrac) | frac
+}
+
+/// Mitchell product of two unsigned integers.
+#[inline]
+pub fn mitchell_mul(a: u64, b: u64, nfrac: u32) -> u64 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let s = log2_fix(a, nfrac) + log2_fix(b, nfrac);
+    let t = (s >> nfrac) as u32;
+    let frac = s & ((1u64 << nfrac) - 1);
+    if t >= nfrac {
+        ((1u64 << nfrac) + frac) << (t - nfrac)
+    } else {
+        ((1u64 << nfrac) + frac) >> (nfrac - t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn powers_of_two_exact() {
+        for ta in 0..12 {
+            for tb in 0..12 {
+                let (a, b) = (1u64 << ta, 1u64 << tb);
+                assert_eq!(mitchell_mul(a, b, 16), a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_product() {
+        assert_eq!(mitchell_mul(0, 123, 16), 0);
+        assert_eq!(mitchell_mul(123, 0, 16), 0);
+    }
+
+    #[test]
+    fn prop_error_bound() {
+        // Mitchell's well-known worst case: underestimates by at most
+        // ~11.1%, never overestimates (beyond truncation noise).
+        prop::check_msg(
+            "mitchell within (-11.2%, +0.1%)",
+            61,
+            prop::DEFAULT_CASES,
+            |rng| (1 + rng.below((1 << 16) - 1), 1 + rng.below((1 << 16) - 1)),
+            |&(a, b)| {
+                let exact = a * b;
+                let approx = mitchell_mul(a, b, 16);
+                let rel = (approx as f64 - exact as f64) / exact as f64;
+                if (-0.112..=0.001).contains(&rel) {
+                    Ok(())
+                } else {
+                    Err(format!("a={a} b={b} rel={rel}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_monotone_in_magnitude() {
+        prop::check(
+            "mitchell roughly monotone (scaling one operand up)",
+            62,
+            prop::DEFAULT_CASES,
+            |rng| (1 + rng.below(1 << 12), 1 + rng.below(1 << 12)),
+            |&(a, b)| mitchell_mul(a * 2, b, 16) >= mitchell_mul(a, b, 16),
+        );
+    }
+}

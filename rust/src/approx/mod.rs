@@ -1,0 +1,19 @@
+//! Approximate arithmetic operations (paper §4.1.3), generalized to
+//! arbitrary bit-widths as the paper requires.
+//!
+//! Every unit is bit-identical to its reference in
+//! `python/compile/bitref.py`; `rust/tests/golden_vectors.rs` enforces
+//! this against Python-generated vectors.
+
+pub mod adders;
+pub mod arith;
+pub mod cfpu;
+pub mod drum;
+pub mod lod;
+pub mod mitchell;
+pub mod ssm;
+pub mod truncated;
+
+pub use arith::{Arith, ArithKind};
+pub use cfpu::CfpuMul;
+pub use drum::DrumMul;

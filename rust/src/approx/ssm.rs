@@ -1,0 +1,91 @@
+//! SSM: static segment multiplier (Narayanamoorthy, Moghaddam, Liu, Park
+//! & Kim, TVLSI'15) — multiply only an n-bit segment of each w-bit
+//! operand, the segment being one of two *static* positions (high when it
+//! has any set bit, else low).  Cheaper selection logic than DRUM's
+//! arbitrary-position LOD + barrel shifter, at a higher worst-case error.
+//! Matches `bitref.ssm_mul`.
+
+/// Segment select: (segment value, shift to restore weight).
+/// Requires 2n >= w so the two static positions cover every operand
+/// (the TVLSI'15 design point); narrower segments need the
+/// multi-position variant.
+#[inline]
+pub fn ssm_segment(a: u64, w: u32, n: u32) -> (u64, u32) {
+    debug_assert!(n > 0 && n <= w && 2 * n >= w
+                  && (w == 64 || a < (1u64 << w)));
+    let hi = a >> (w - n);
+    if hi != 0 {
+        (hi, w - n)
+    } else {
+        (a & ((1u64 << n) - 1), 0)
+    }
+}
+
+/// SSM product of two w-bit unsigned integers with n-bit segments.
+#[inline]
+pub fn ssm_mul(a: u64, b: u64, w: u32, n: u32) -> u64 {
+    let (sa, sha) = ssm_segment(a, w, n);
+    let (sb, shb) = ssm_segment(b, w, n);
+    (sa * sb) << (sha + shb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn small_operands_exact() {
+        // both operands fit their low segment: product is exact
+        for (a, b) in [(3u64, 5u64), (15, 15), (0, 9)] {
+            assert_eq!(ssm_mul(a, b, 16, 8), a * b);
+        }
+    }
+
+    #[test]
+    fn known_segmentation() {
+        // w=8, n=4: a=0b1011_0000 -> high segment 0b1011, shift 4
+        assert_eq!(ssm_segment(0b1011_0000, 8, 4), (0b1011, 4));
+        // a=0b0000_1011 -> low segment
+        assert_eq!(ssm_segment(0b0000_1011, 8, 4), (0b1011, 0));
+    }
+
+    #[test]
+    fn prop_error_bounded_by_segment_truncation() {
+        // error comes only from dropped low bits below a high segment
+        prop::check_msg(
+            "ssm relative error < 2^-(n-2)",
+            91,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let n = 8 + rng.below(9) as u32;
+                let a = rng.below(1 << 16);
+                let b = rng.below(1 << 16);
+                (a, b, n)
+            },
+            |&(a, b, n)| {
+                let exact = a * b;
+                let approx = ssm_mul(a, b, 16, n);
+                // each operand drops < 2^(w-n); error <= da*b + db*a
+                let drop = 1u64 << (16 - n);
+                if exact - approx <= drop * (a + b) {
+                    Ok(())
+                } else {
+                    Err(format!("err {} > bound", exact - approx))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_never_overestimates() {
+        // segments drop bits, never add them
+        prop::check(
+            "ssm <= exact",
+            92,
+            prop::DEFAULT_CASES,
+            |rng| (rng.below(1 << 20), rng.below(1 << 20)),
+            |&(a, b)| ssm_mul(a, b, 20, 10) <= a * b,
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! Truncation-based multiplier (after Chang & Satzoda, TVLSI'10),
+//! generalized to arbitrary width: an n x n array multiplier that drops
+//! partial-product columns below column `n - keep` and adds a constant
+//! compensation of half the expected dropped weight.
+//! Matches `bitref.truncated_mul`.
+
+/// n x n unsigned multiply keeping the top `keep` partial-product columns.
+pub fn truncated_mul(a: u64, b: u64, n: u32, keep: u32) -> u64 {
+    debug_assert!(n <= 32 && a < (1u64 << n) && b < (1u64 << n));
+    if keep >= n {
+        return a * b;
+    }
+    let cut = n - keep;
+    let mut acc = 0u64;
+    for j in 0..n {
+        if (b >> j) & 1 == 1 {
+            let pp = a << j;
+            acc += (pp >> cut) << cut;
+        }
+    }
+    let comp = if cut >= 1 { 1u64 << (cut - 1) } else { 0 };
+    acc + comp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn keep_all_is_exact() {
+        prop::check(
+            "truncated(n, n) == exact",
+            71,
+            prop::DEFAULT_CASES,
+            |rng| (rng.below(1 << 16), rng.below(1 << 16)),
+            |&(a, b)| truncated_mul(a, b, 16, 16) == a * b,
+        );
+    }
+
+    #[test]
+    fn prop_bounded_error() {
+        prop::check_msg(
+            "truncated error <= n * 2^cut",
+            72,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let keep = 1 + rng.below(15) as u32;
+                (rng.below(1 << 16), rng.below(1 << 16), keep)
+            },
+            |&(a, b, keep)| {
+                let exact = a * b;
+                let approx = truncated_mul(a, b, 16, keep);
+                let bound = 16u64 << (16 - keep);
+                if exact.abs_diff(approx) <= bound {
+                    Ok(())
+                } else {
+                    Err(format!("diff {} > {bound}", exact.abs_diff(approx)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn zero_operand() {
+        // only the compensation constant remains
+        assert_eq!(truncated_mul(0, 0, 16, 8), 1 << 7);
+        assert_eq!(truncated_mul(0, 0, 16, 16), 0);
+    }
+}

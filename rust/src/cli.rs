@@ -1,0 +1,132 @@
+//! Hand-rolled CLI argument parser (clap is not in the offline crate set).
+//!
+//! Grammar: `lop <command> [--flag value | --flag=value | --switch]
+//! [positional ...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter();
+        let mut out = Args { cmd: it.next().unwrap_or_default(),
+                             ..Default::default() };
+        let mut pending: Option<String> = None;
+        for a in it {
+            if let Some(flag) = a.strip_prefix("--") {
+                // a new flag: any pending key was a boolean switch
+                if let Some(key) = pending.take() {
+                    out.switches.push(key);
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    pending = Some(flag.to_string());
+                }
+            } else if let Some(key) = pending.take() {
+                out.flags.insert(key, a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        // a trailing `--flag` with no value is a switch
+        if let Some(k) = pending {
+            out.switches.push(k);
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let mut argv: Vec<String> = std::env::args().skip(1).collect();
+        if argv.is_empty() {
+            argv.push("help".to_string());
+        }
+        Args::parse(argv)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+            || self
+                .flags
+                .get(key)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse("eval --config FI(6,8) --n 500 extra");
+        assert_eq!(a.cmd, "eval");
+        assert_eq!(a.str("config", ""), "FI(6,8)");
+        assert_eq!(a.usize("n", 0), 500);
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve --rate=250.5 --max-batch=32");
+        assert_eq!(a.f64("rate", 0.0), 250.5);
+        assert_eq!(a.usize("max-batch", 0), 32);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("explore --with-approx");
+        assert!(a.switch("with-approx"));
+        assert!(!a.switch("other"));
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("serve --no-pjrt --requests 10");
+        assert!(a.switch("no-pjrt"));
+        assert_eq!(a.usize("requests", 0), 10);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.str("missing", "dflt"), "dflt");
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.f64("missing", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Run-configuration system: a TOML-subset parser (no external crates in
+//! the offline set) plus typed configs for the server and explorer.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{ExploreFileConfig, ServeFileConfig};
+pub use toml::TomlDoc;

@@ -1,0 +1,155 @@
+//! Typed configuration schemas loaded from TOML files (see
+//! `examples/configs/*.toml`).
+
+use super::toml::TomlDoc;
+use crate::coordinator::explorer::{ExploreOpts, Family};
+use crate::nn::network::NetConfig;
+use std::time::Duration;
+
+/// `[serve]` section.
+#[derive(Clone, Debug)]
+pub struct ServeFileConfig {
+    pub configs: Vec<NetConfig>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_capacity: usize,
+    pub engine_workers: usize,
+    pub use_pjrt: bool,
+}
+
+impl ServeFileConfig {
+    pub fn from_toml(doc: &TomlDoc) -> Result<ServeFileConfig, String> {
+        let configs = match doc.get("serve", "configs") {
+            Some(v) => {
+                let arr = v.as_array().ok_or("serve.configs must be array")?;
+                arr.iter()
+                    .map(|x| {
+                        NetConfig::parse(
+                            x.as_str().ok_or("config must be string")?,
+                        )
+                    })
+                    .collect::<Result<Vec<_>, _>>()?
+            }
+            None => vec![NetConfig::parse("float32").unwrap()],
+        };
+        Ok(ServeFileConfig {
+            configs,
+            max_batch: doc.get_int("serve", "max_batch").unwrap_or(16)
+                as usize,
+            max_wait: Duration::from_micros(
+                (doc.get_float("serve", "max_wait_ms").unwrap_or(2.0)
+                    * 1_000.0) as u64,
+            ),
+            queue_capacity: doc
+                .get_int("serve", "queue_capacity")
+                .unwrap_or(4_096) as usize,
+            engine_workers: doc
+                .get_int("serve", "engine_workers")
+                .unwrap_or(2) as usize,
+            use_pjrt: doc.get_bool("serve", "use_pjrt").unwrap_or(true),
+        })
+    }
+}
+
+/// `[explore]` section.
+#[derive(Clone, Debug)]
+pub struct ExploreFileConfig {
+    pub opts: ExploreOpts,
+    pub subset: usize,
+}
+
+impl ExploreFileConfig {
+    pub fn from_toml(doc: &TomlDoc) -> Result<ExploreFileConfig, String> {
+        let mut opts = ExploreOpts::default();
+        if let Some(b) = doc.get_float("explore", "accuracy_bound") {
+            opts.accuracy_bound = b;
+        }
+        if let Some(lo) = doc.get_int("explore", "frac_lo") {
+            opts.frac_bci.0 = lo as u32;
+        }
+        if let Some(hi) = doc.get_int("explore", "frac_hi") {
+            opts.frac_bci.1 = hi as u32;
+        }
+        if let Some(h) = doc.get_int("explore", "int_headroom") {
+            opts.int_headroom = h as u32;
+        }
+        if let Some(sp) = doc.get_bool("explore", "second_pass") {
+            opts.second_pass = sp;
+        }
+        if let Some(fams) = doc.get("explore", "families") {
+            let arr = fams.as_array().ok_or("families must be array")?;
+            opts.families = arr
+                .iter()
+                .map(|f| match f.as_str() {
+                    Some("fixed") => Ok(Family::Fixed),
+                    Some("float") => Ok(Family::Float),
+                    Some("drum") => Ok(Family::FixedDrum),
+                    Some("cfpu") => Ok(Family::FloatCfpu),
+                    other => Err(format!("unknown family {other:?}")),
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+        }
+        Ok(ExploreFileConfig {
+            opts,
+            subset: doc.get_int("explore", "subset").unwrap_or(500)
+                as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_parses() {
+        let doc = TomlDoc::parse(
+            r#"
+[serve]
+configs = ["float32", "FI(6,8)", "H(6,8,12)"]
+max_batch = 32
+max_wait_ms = 1.5
+use_pjrt = false
+"#,
+        )
+        .unwrap();
+        let c = ServeFileConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.configs.len(), 3);
+        assert_eq!(c.max_batch, 32);
+        assert_eq!(c.max_wait, Duration::from_micros(1_500));
+        assert!(!c.use_pjrt);
+    }
+
+    #[test]
+    fn explore_config_parses() {
+        let doc = TomlDoc::parse(
+            r#"
+[explore]
+accuracy_bound = 0.02
+frac_lo = 6
+frac_hi = 10
+families = ["fixed", "drum"]
+subset = 250
+second_pass = false
+"#,
+        )
+        .unwrap();
+        let c = ExploreFileConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.opts.accuracy_bound, 0.02);
+        assert_eq!(c.opts.frac_bci, (6, 10));
+        assert_eq!(c.opts.families,
+                   vec![Family::Fixed, Family::FixedDrum]);
+        assert!(!c.opts.second_pass);
+        assert_eq!(c.subset, 250);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        let c = ServeFileConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.max_batch, 16);
+        assert!(c.use_pjrt);
+        let e = ExploreFileConfig::from_toml(&doc).unwrap();
+        assert_eq!(e.subset, 500);
+    }
+}

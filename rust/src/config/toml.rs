@@ -1,0 +1,239 @@
+//! Minimal TOML-subset parser: `[section]` headers, `key = value` pairs
+//! with string / integer / float / boolean / array-of-scalar values, `#`
+//! comments.  This covers Lop's config files; it is not a full TOML
+//! implementation (no nested tables, no multi-line strings, no dates).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value.  Top-level keys live in the
+/// "" section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section"))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let value = parse_value(v.trim())
+                .map_err(|m| err(lineno, &m))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key)?.as_str()
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key)?.as_int()
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_float()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> String {
+    format!("toml line {}: {msg}", lineno + 1)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside a quoted string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Split on commas that are not inside quotes (arrays of strings may
+/// contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+name = "lop"
+count = 42
+[serve]
+max_batch = 16        # trailing comment
+max_wait_ms = 2.5
+use_pjrt = true
+configs = ["FI(6,8)", "float32"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("lop"));
+        assert_eq!(doc.get_int("", "count"), Some(42));
+        assert_eq!(doc.get_int("serve", "max_batch"), Some(16));
+        assert_eq!(doc.get_float("serve", "max_wait_ms"), Some(2.5));
+        assert_eq!(doc.get_bool("serve", "use_pjrt"), Some(true));
+        let arr = doc.get("serve", "configs").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].as_str(), Some("FI(6,8)"));
+    }
+
+    #[test]
+    fn string_with_hash_and_comma() {
+        let doc = TomlDoc::parse(r#"x = "a # not comment, really""#)
+            .unwrap();
+        assert_eq!(doc.get_str("", "x"), Some("a # not comment, really"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+        assert!(TomlDoc::parse("x = [1, ").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.5\nc = -2").unwrap();
+        assert_eq!(doc.get_int("", "a"), Some(3));
+        assert_eq!(doc.get_float("", "b"), Some(3.5));
+        assert_eq!(doc.get_int("", "c"), Some(-2));
+        // ints coerce to float on demand
+        assert_eq!(doc.get_float("", "a"), Some(3.0));
+    }
+}

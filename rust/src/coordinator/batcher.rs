@@ -1,0 +1,238 @@
+//! Dynamic batcher: per-configuration request queues with a
+//! max-batch / max-wait batching policy (the vLLM-style continuous-batching
+//! core, sized for this workload).
+//!
+//! Workers block on `next_batch` with a mask of configurations they can
+//! serve (the PJRT worker serves exact-arithmetic configs, engine workers
+//! serve everything); a batch is released when a queue reaches
+//! `max_batch` or its oldest request has waited `max_wait`.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    /// flattened 28x28 image in [0, 1]
+    pub image: Vec<f32>,
+    pub config_id: usize,
+    pub submitted: Instant,
+    pub reply: Sender<Response>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub pred: usize,
+    pub latency: Duration,
+}
+
+struct Inner {
+    queues: Vec<VecDeque<Request>>,
+    closed: bool,
+}
+
+pub struct BatchQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// per-queue capacity: submit() rejects beyond this (backpressure)
+    pub capacity: usize,
+}
+
+impl BatchQueue {
+    pub fn new(n_configs: usize, max_batch: usize, max_wait: Duration,
+               capacity: usize) -> BatchQueue {
+        BatchQueue {
+            inner: Mutex::new(Inner {
+                queues: (0..n_configs).map(|_| VecDeque::new()).collect(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            max_batch,
+            max_wait,
+            capacity,
+        }
+    }
+
+    /// Enqueue; `Err(req)` when the target queue is full (backpressure).
+    pub fn push(&self, req: Request) -> Result<(), Request> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(req);
+        }
+        let q = &mut g.queues[req.config_id];
+        if q.len() >= self.capacity {
+            return Err(req);
+        }
+        q.push_back(req);
+        drop(g);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    pub fn depth(&self, config_id: usize) -> usize {
+        self.inner.lock().unwrap().queues[config_id].len()
+    }
+
+    /// Blocking: next batch from any queue accepted by `mask`.  Returns
+    /// `None` once closed and drained (for this worker's mask).
+    pub fn next_batch(&self, mask: &[bool])
+                      -> Option<(usize, Vec<Request>)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            // pick the ready queue with the oldest head (FIFO fairness)
+            let mut pick: Option<(usize, Instant)> = None;
+            let mut soonest_deadline: Option<Duration> = None;
+            for (ci, q) in g.queues.iter().enumerate() {
+                if !mask[ci] || q.is_empty() {
+                    continue;
+                }
+                let head = q.front().unwrap().submitted;
+                let age = now.duration_since(head);
+                let ready = q.len() >= self.max_batch
+                    || age >= self.max_wait
+                    || g.closed;
+                if ready {
+                    if pick.map(|(_, h)| head < h).unwrap_or(true) {
+                        pick = Some((ci, head));
+                    }
+                } else {
+                    let remain = self.max_wait - age;
+                    if soonest_deadline.map(|d| remain < d).unwrap_or(true)
+                    {
+                        soonest_deadline = Some(remain);
+                    }
+                }
+            }
+            if let Some((ci, _)) = pick {
+                let q = &mut g.queues[ci];
+                let take = q.len().min(self.max_batch);
+                let batch: Vec<Request> = q.drain(..take).collect();
+                return Some((ci, batch));
+            }
+            if g.closed {
+                // nothing ready and closed: drained for this mask?
+                let empty = g
+                    .queues
+                    .iter()
+                    .enumerate()
+                    .all(|(ci, q)| !mask[ci] || q.is_empty());
+                if empty {
+                    return None;
+                }
+                continue; // closed flushes partial batches via `ready`
+            }
+            g = match soonest_deadline {
+                Some(d) => self.cv.wait_timeout(g, d).unwrap().0,
+                None => self.cv.wait(g).unwrap(),
+            };
+        }
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn req(id: u64, config_id: usize, tx: &Sender<Response>) -> Request {
+        Request {
+            id,
+            image: vec![0.0; 4],
+            config_id,
+            submitted: Instant::now(),
+            reply: tx.clone(),
+        }
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let q = BatchQueue::new(1, 4, Duration::from_secs(60), 100);
+        let (tx, _rx) = channel();
+        for i in 0..4 {
+            q.push(req(i, 0, &tx)).unwrap();
+        }
+        let (ci, batch) = q.next_batch(&[true]).unwrap();
+        assert_eq!(ci, 0);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0); // FIFO
+    }
+
+    #[test]
+    fn partial_batch_released_after_max_wait() {
+        let q = BatchQueue::new(1, 64, Duration::from_millis(30), 100);
+        let (tx, _rx) = channel();
+        q.push(req(7, 0, &tx)).unwrap();
+        let t0 = Instant::now();
+        let (_, batch) = q.next_batch(&[true]).unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(25), "waited {waited:?}");
+        assert!(waited < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn mask_filters_queues() {
+        let q = BatchQueue::new(2, 1, Duration::from_millis(5), 100);
+        let (tx, _rx) = channel();
+        q.push(req(1, 0, &tx)).unwrap();
+        q.push(req(2, 1, &tx)).unwrap();
+        let (ci, _) = q.next_batch(&[false, true]).unwrap();
+        assert_eq!(ci, 1);
+        assert_eq!(q.depth(0), 1);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let q = BatchQueue::new(1, 4, Duration::from_secs(1), 2);
+        let (tx, _rx) = channel();
+        q.push(req(1, 0, &tx)).unwrap();
+        q.push(req(2, 0, &tx)).unwrap();
+        assert!(q.push(req(3, 0, &tx)).is_err());
+    }
+
+    #[test]
+    fn close_flushes_then_returns_none() {
+        let q = Arc::new(BatchQueue::new(1, 64, Duration::from_secs(60),
+                                         100));
+        let (tx, _rx) = channel();
+        q.push(req(1, 0, &tx)).unwrap();
+        q.close();
+        let (_, batch) = q.next_batch(&[true]).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(q.next_batch(&[true]).is_none());
+        assert!(q.push(req(2, 0, &tx)).is_err());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let q = Arc::new(BatchQueue::new(1, 8, Duration::from_millis(5),
+                                         10_000));
+        let (tx, _rx) = channel();
+        let n = 200u64;
+        let qp = q.clone();
+        let prod = std::thread::spawn(move || {
+            for i in 0..n {
+                qp.push(req(i, 0, &tx)).unwrap();
+            }
+            qp.close();
+        });
+        let mut got = 0;
+        while let Some((_, b)) = q.next_batch(&[true]) {
+            got += b.len();
+        }
+        prod.join().unwrap();
+        assert_eq!(got as u64, n);
+    }
+}

@@ -1,0 +1,113 @@
+//! Accuracy evaluation with backend selection + memoization.
+//!
+//! Exact-arithmetic configs run on the PJRT fake-quant artifacts (fast,
+//! XLA-compiled); approximate-multiplier and mixed-family configs run on
+//! the bit-accurate Rust engine (the ground truth for approximate
+//! datapaths).  Results are memoized by configuration name — the §4.2
+//! explorer re-visits configurations constantly.
+
+use crate::data::Dataset;
+use crate::nn::network::{Dcnn, NetConfig};
+use crate::runtime::{ModelRunner, Variant};
+use anyhow::Result;
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Pjrt,
+    Engine,
+}
+
+/// Evaluator over a fixed test subset.
+pub struct Evaluator {
+    dcnn: Dcnn,
+    runner: Option<ModelRunner>,
+    ds: Dataset,
+    /// evaluation subset indices (explorer uses a reduced subset; final
+    /// frontier re-scores on the full test set)
+    pub subset: Vec<usize>,
+    pub threads: usize,
+    cache: HashMap<String, f64>,
+    pub eval_count: usize,
+}
+
+impl Evaluator {
+    pub fn new(dcnn: Dcnn, runner: Option<ModelRunner>, ds: Dataset,
+               subset_n: usize, threads: usize) -> Evaluator {
+        let n = subset_n.min(ds.test.len());
+        Evaluator {
+            dcnn,
+            runner,
+            ds,
+            subset: (0..n).collect(),
+            threads,
+            cache: HashMap::new(),
+            eval_count: 0,
+        }
+    }
+
+    pub fn backend_for(&self, cfg: &NetConfig) -> Backend {
+        if self.runner.is_some() && Variant::for_config(cfg).is_some() {
+            Backend::Pjrt
+        } else {
+            Backend::Engine
+        }
+    }
+
+    /// Accuracy of `cfg` on the evaluation subset (memoized).
+    pub fn accuracy(&mut self, cfg: &NetConfig) -> Result<f64> {
+        let key = cfg.name();
+        if let Some(&a) = self.cache.get(&key) {
+            return Ok(a);
+        }
+        let acc = self.accuracy_on(cfg, &self.subset.clone())?;
+        self.cache.insert(key, acc);
+        self.eval_count += 1;
+        Ok(acc)
+    }
+
+    /// Accuracy on an explicit index set (not memoized).
+    pub fn accuracy_on(&mut self, cfg: &NetConfig, idx: &[usize])
+                       -> Result<f64> {
+        let labels: Vec<usize> =
+            idx.iter().map(|&i| self.ds.test.labels[i] as usize).collect();
+        let preds = match self.backend_for(cfg) {
+            Backend::Pjrt => {
+                let x = self.ds.batch(&self.ds.test, idx);
+                let runner = self.runner.as_mut().unwrap();
+                runner.forward(cfg, &x)?.argmax_rows()
+            }
+            Backend::Engine => {
+                let net = self.dcnn.prepare(*cfg);
+                // chunk to bound memory (im2col of large batches is big)
+                let mut preds = Vec::with_capacity(idx.len());
+                for chunk in idx.chunks(64) {
+                    let x = self.ds.batch(&self.ds.test, chunk);
+                    preds.extend(net.predict(&x, self.threads));
+                }
+                preds
+            }
+        };
+        let correct =
+            preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        Ok(correct as f64 / idx.len().max(1) as f64)
+    }
+
+    /// Full-test-set accuracy (used for final reporting).
+    pub fn accuracy_full(&mut self, cfg: &NetConfig) -> Result<f64> {
+        let idx: Vec<usize> = (0..self.ds.test.len()).collect();
+        self.accuracy_on(cfg, &idx)
+    }
+
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    pub fn dcnn(&self) -> &Dcnn {
+        &self.dcnn
+    }
+}

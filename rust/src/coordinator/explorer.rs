@@ -1,0 +1,345 @@
+//! The paper's exploration strategy (§4.2), implemented verbatim:
+//!
+//! 1. Partition the network layer-wise; profile WBA value ranges
+//!    (Table 1) to lower-bound the range-determined field (integral bits /
+//!    exponent bits), widened for partial-sum growth.
+//! 2. Enumerate the accuracy-determined field (fractional / mantissa bits)
+//!    over a bit-count interval (BCI).
+//! 3. **Pass 1** (topological, input → output): per part, pick the
+//!    cheapest (hardware cost model) candidate whose accuracy loss is
+//!    within the bound — earlier parts frozen at their chosen configs,
+//!    later parts at full precision.
+//! 4. **Pass 2** (optional quality recovery): same order, later parts now
+//!    at their pass-1 configs; maximize accuracy subject to a bounded
+//!    hardware-cost increase (here: at most one extra accuracy bit, the
+//!    paper's own example of the constraint).
+
+use super::eval::Evaluator;
+use super::ranges::{exp_bits_for, int_bits_for};
+use crate::approx::arith::ArithKind;
+use crate::approx::cfpu::CfpuMul;
+use crate::approx::drum::DrumMul;
+use crate::hw::datapath::{Datapath, ARRIA10, N_PE};
+use crate::nn::network::{LayerRanges, NetConfig};
+use crate::numeric::{FixedPoint, FloatRep};
+use anyhow::Result;
+
+/// Which representation families the search enumerates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Fixed,
+    Float,
+    FixedDrum,
+    FloatCfpu,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExploreOpts {
+    /// relative accuracy loss bound vs float32 baseline (e.g. 0.01 = 1%)
+    pub accuracy_bound: f64,
+    /// BCI for the accuracy-determined field (fraction / mantissa bits)
+    pub frac_bci: (u32, u32),
+    /// extra integral-bit headroom enumerated beyond the range bound
+    /// (partial-sum widening, §4.2)
+    pub int_headroom: u32,
+    pub families: Vec<Family>,
+    /// run the quality-recovery second pass
+    pub second_pass: bool,
+    /// DRUM widths / CFPU tuning widths enumerated for approx families
+    pub drum_ts: Vec<u32>,
+    pub cfpu_ws: Vec<u32>,
+}
+
+impl Default for ExploreOpts {
+    fn default() -> Self {
+        ExploreOpts {
+            accuracy_bound: 0.01,
+            frac_bci: (4, 12),
+            int_headroom: 2,
+            families: vec![Family::Fixed, Family::Float],
+            second_pass: true,
+            drum_ts: vec![10, 12, 14],
+            cfpu_ws: vec![3],
+        }
+    }
+}
+
+/// One explored candidate at one part.
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    pub part: usize,
+    pub candidate: String,
+    pub accuracy: f64,
+    pub cost: f64,
+    pub feasible: bool,
+    pub chosen: bool,
+    pub pass: u8,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExploreResult {
+    pub baseline: f64,
+    pub pass1: NetConfig,
+    pub pass1_accuracy: f64,
+    pub chosen: NetConfig,
+    pub accuracy: f64,
+    pub evals: usize,
+    pub trace: Vec<TraceEntry>,
+}
+
+/// Candidate providers for one part given its value range.
+pub fn candidates_for(range_mag: f64, opts: &ExploreOpts)
+                      -> Vec<ArithKind> {
+    let mut out = Vec::new();
+    let ilb = int_bits_for(range_mag);
+    let elb = exp_bits_for(range_mag);
+    for fam in &opts.families {
+        match fam {
+            Family::Fixed => {
+                for i in ilb..=ilb + opts.int_headroom {
+                    for f in opts.frac_bci.0..=opts.frac_bci.1 {
+                        if i + f <= 22 {
+                            out.push(ArithKind::FixedExact(
+                                FixedPoint::new(i, f),
+                            ));
+                        }
+                    }
+                }
+            }
+            Family::Float => {
+                // exponent is range-determined ("only a few bits needed")
+                for m in opts.frac_bci.0..=opts.frac_bci.1 {
+                    out.push(ArithKind::FloatExact(FloatRep::new(
+                        elb.clamp(2, 7),
+                        m.max(1),
+                    )));
+                }
+            }
+            Family::FixedDrum => {
+                for i in ilb..=ilb + opts.int_headroom {
+                    for f in opts.frac_bci.0..=opts.frac_bci.1 {
+                        for &t in &opts.drum_ts {
+                            if i + f <= 22 && t >= 2 && t <= i + f {
+                                out.push(ArithKind::FixedDrum(
+                                    DrumMul::new(FixedPoint::new(i, f), t),
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Family::FloatCfpu => {
+                for m in opts.frac_bci.0..=opts.frac_bci.1 {
+                    for &w in &opts.cfpu_ws {
+                        out.push(ArithKind::FloatCfpu(CfpuMul::new(
+                            FloatRep::new(elb.clamp(2, 7), m.max(1)),
+                            w,
+                        )));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Hardware cost of a *uniform* datapath built from one part's provider —
+/// the per-part objective the greedy pass minimizes.
+fn part_cost(kind: &ArithKind) -> f64 {
+    Datapath::synthesize(kind, N_PE).explore_cost(&ARRIA10)
+}
+
+/// Run the full §4.2 exploration.
+pub fn explore(ev: &mut Evaluator, ranges: &[LayerRanges],
+               opts: &ExploreOpts) -> Result<ExploreResult> {
+    assert_eq!(ranges.len(), 4, "layer-wise partition of the Fig. 2 DCNN");
+    let baseline = ev.accuracy(&NetConfig::uniform(ArithKind::Float32))?;
+    let floor = baseline * (1.0 - opts.accuracy_bound);
+    let mut trace = Vec::new();
+
+    // ---------- pass 1: cost-min subject to accuracy ----------
+    let mut cfg = NetConfig::uniform(ArithKind::Float32);
+    for part in 0..4 {
+        let mag = {
+            let c = ranges[part].combined();
+            (c.0.abs()).max(c.1.abs()) as f64
+        };
+        let cands = candidates_for(mag, opts);
+        let mut best: Option<(f64, ArithKind, f64)> = None; // (cost, k, acc)
+        let mut fallback: Option<(f64, ArithKind, f64)> = None; // max acc
+        for cand in cands {
+            let mut trial = cfg;
+            trial.layers[part] = cand;
+            let acc = ev.accuracy(&trial)?;
+            let cost = part_cost(&cand);
+            let feasible = acc >= floor;
+            trace.push(TraceEntry {
+                part,
+                candidate: cand.name(),
+                accuracy: acc,
+                cost,
+                feasible,
+                chosen: false,
+                pass: 1,
+            });
+            if feasible
+                && best.as_ref().map(|(c, _, _)| cost < *c).unwrap_or(true)
+            {
+                best = Some((cost, cand, acc));
+            }
+            if fallback
+                .as_ref()
+                .map(|(_, _, a)| acc > *a)
+                .unwrap_or(true)
+            {
+                fallback = Some((cost, cand, acc));
+            }
+        }
+        let (_, chosen_kind, _) = best.or(fallback).expect("no candidates");
+        cfg.layers[part] = chosen_kind;
+        let name = chosen_kind.name();
+        if let Some(t) = trace
+            .iter_mut()
+            .rev()
+            .find(|t| t.part == part && t.pass == 1 && t.candidate == name)
+        {
+            t.chosen = true;
+        }
+    }
+    let pass1 = cfg;
+    let pass1_accuracy = ev.accuracy(&pass1)?;
+
+    // ---------- pass 2: quality recovery under bounded cost ----------
+    let mut chosen = pass1;
+    if opts.second_pass {
+        for part in 0..4 {
+            let mut best_acc = ev.accuracy(&chosen)?;
+            let mut best_kind = chosen.layers[part];
+            for cand in widen_by_one(&chosen.layers[part]) {
+                let mut trial = chosen;
+                trial.layers[part] = cand;
+                let acc = ev.accuracy(&trial)?;
+                trace.push(TraceEntry {
+                    part,
+                    candidate: cand.name(),
+                    accuracy: acc,
+                    cost: part_cost(&cand),
+                    feasible: true,
+                    chosen: false,
+                    pass: 2,
+                });
+                if acc > best_acc {
+                    best_acc = acc;
+                    best_kind = cand;
+                }
+            }
+            chosen.layers[part] = best_kind;
+        }
+    }
+    let accuracy = ev.accuracy(&chosen)?;
+
+    Ok(ExploreResult {
+        baseline,
+        pass1,
+        pass1_accuracy,
+        chosen,
+        accuracy,
+        evals: ev.eval_count,
+        trace,
+    })
+}
+
+/// Pass-2 neighborhood: one extra bit on the accuracy-determined field
+/// (the paper's example of "bounded increase in hardware cost").
+fn widen_by_one(kind: &ArithKind) -> Vec<ArithKind> {
+    match kind {
+        ArithKind::FixedExact(r) if r.i_bits + r.f_bits < 22 => {
+            vec![ArithKind::FixedExact(FixedPoint::new(r.i_bits,
+                                                       r.f_bits + 1))]
+        }
+        ArithKind::FloatExact(r) if r.m_bits < 23 => {
+            vec![ArithKind::FloatExact(FloatRep::new(r.e_bits,
+                                                     r.m_bits + 1))]
+        }
+        ArithKind::FixedDrum(d) if d.rep.i_bits + d.rep.f_bits < 22 => {
+            vec![ArithKind::FixedDrum(DrumMul::new(
+                FixedPoint::new(d.rep.i_bits, d.rep.f_bits + 1),
+                d.t,
+            ))]
+        }
+        ArithKind::FloatCfpu(c) if c.rep.m_bits < 23 => {
+            vec![ArithKind::FloatCfpu(CfpuMul::new(
+                FloatRep::new(c.rep.e_bits, c.rep.m_bits + 1),
+                c.w,
+            ))]
+        }
+        _ => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_generation_respects_bci() {
+        let opts = ExploreOpts {
+            families: vec![Family::Fixed],
+            frac_bci: (4, 6),
+            int_headroom: 1,
+            ..Default::default()
+        };
+        let cands = candidates_for(9.85, &opts); // paper FC1 range
+        // i in {4, 5}, f in {4, 5, 6} -> 6 candidates
+        assert_eq!(cands.len(), 6);
+        for c in &cands {
+            match c {
+                ArithKind::FixedExact(r) => {
+                    assert!(r.i_bits >= 4 && r.i_bits <= 5);
+                    assert!(r.f_bits >= 4 && r.f_bits <= 6);
+                }
+                _ => panic!("unexpected family"),
+            }
+        }
+    }
+
+    #[test]
+    fn float_candidates_have_range_determined_exponent() {
+        let opts = ExploreOpts {
+            families: vec![Family::Float],
+            frac_bci: (8, 9),
+            ..Default::default()
+        };
+        // paper FC2 range |35.76| -> e = 4 suffices (2^8 = 256)
+        for c in candidates_for(35.76, &opts) {
+            match c {
+                ArithKind::FloatExact(r) => assert_eq!(r.e_bits, 4),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn widen_adds_one_accuracy_bit() {
+        let k = ArithKind::parse("FI(6,8)").unwrap();
+        assert_eq!(widen_by_one(&k)[0].name(), "FI(6, 9)");
+        let k = ArithKind::parse("FL(4,9)").unwrap();
+        assert_eq!(widen_by_one(&k)[0].name(), "FL(4, 10)");
+        assert!(widen_by_one(&ArithKind::Float32).is_empty());
+    }
+
+    #[test]
+    fn approx_families_enumerate() {
+        let opts = ExploreOpts {
+            families: vec![Family::FixedDrum, Family::FloatCfpu],
+            frac_bci: (8, 8),
+            int_headroom: 0,
+            drum_ts: vec![12],
+            cfpu_ws: vec![3],
+            ..Default::default()
+        };
+        let cands = candidates_for(9.85, &opts);
+        assert!(cands.iter().any(|c| c.name().starts_with("H(")));
+        assert!(cands.iter().any(|c| c.name().starts_with("I(")));
+    }
+}

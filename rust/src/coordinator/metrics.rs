@@ -1,0 +1,134 @@
+//! Serving metrics: lock-free counters + a log-bucketed latency histogram
+//! (p50/p99 without storing every sample).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-bucketed histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
+const BUCKETS: usize = 40;
+
+#[derive(Debug)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_items: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate percentile (upper bound of the bucket containing it).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.completed.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self, wall: Duration) -> String {
+        let n = self.completed.load(Ordering::Relaxed);
+        format!(
+            "completed {} reqs in {:.2}s  ({:.1} req/s)\n\
+             latency: mean {:.2} ms  p50 <= {:.2} ms  p99 <= {:.2} ms\n\
+             batching: {} batches, mean size {:.1}",
+            n,
+            wall.as_secs_f64(),
+            n as f64 / wall.as_secs_f64().max(1e-9),
+            self.mean_latency_us() / 1e3,
+            self.percentile_us(50.0) as f64 / 1e3,
+            self.percentile_us(99.0) as f64 / 1e3,
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_bracket_samples() {
+        let m = Metrics::new();
+        for us in [100u64, 200, 400, 800, 100_000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let p50 = m.percentile_us(50.0);
+        assert!((128..=512).contains(&p50), "p50 {p50}");
+        let p99 = m.percentile_us(99.0);
+        assert!(p99 >= 100_000, "p99 {p99}");
+        assert!(m.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.mean_batch_size(), 6.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.percentile_us(99.0), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the paper's system contribution, Rust-side:
+//!
+//! * `ranges`   — WBA value-range profiling (paper Table 1, §4.2)
+//! * `eval`     — accuracy evaluation with backend selection + memoization
+//! * `explorer` — the two-pass topological exploration strategy (§4.2)
+//! * `batcher`/`server`/`router` — the inference serving runtime: request
+//!   routing, per-config dynamic batching, worker pools, metrics (the
+//!   vLLM-router-shaped part of the stack)
+//! * `metrics`  — latency/throughput accounting
+
+pub mod batcher;
+pub mod eval;
+pub mod explorer;
+pub mod metrics;
+pub mod ranges;
+pub mod router;
+pub mod server;

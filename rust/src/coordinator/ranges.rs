@@ -1,0 +1,110 @@
+//! Value-range profiling (paper §4.2 / Table 1): dump the [min, max] of
+//! weights, biases and activations per partition part by running the
+//! trained float32 network over (a slice of) the training set, and derive
+//! the range-determined BCI lower bounds from them.
+
+use crate::data::Dataset;
+use crate::nn::network::{Dcnn, LayerRanges};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Profile WBA ranges over the first `n` training images.
+pub fn profile_ranges(dcnn: &Dcnn, ds: &Dataset, n: usize,
+                      threads: usize) -> Vec<LayerRanges> {
+    let n = n.min(ds.train.len()).max(1);
+    let idx: Vec<usize> = (0..n).collect();
+    let x = ds.batch(&ds.train, &idx);
+    dcnn.ranges(&x, threads)
+}
+
+/// Integral bits needed to represent |v| <= `mag` in sign-magnitude
+/// fixed point: ceil(log2(mag)) clamped at >= 0 (the sign bit is separate).
+pub fn int_bits_for(mag: f64) -> u32 {
+    if mag <= 1.0 {
+        0
+    } else {
+        (mag.log2().ceil() as i64).max(0) as u32
+    }
+}
+
+/// Exponent bits needed for a float representation to cover `mag`:
+/// the max exponent `emax = 2^(e-1)` must satisfy `2^emax >= mag`.
+pub fn exp_bits_for(mag: f64) -> u32 {
+    let need = if mag <= 2.0 { 1 } else { mag.log2().ceil() as i64 };
+    let mut e = 2u32;
+    while (1i64 << (e - 1)) < need {
+        e += 1;
+    }
+    e
+}
+
+/// Table-1 row rendering.
+pub fn format_table1(ranges: &[LayerRanges]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<7} {:>18} {:>18} {:>18} {:>18}\n",
+        "Layer", "weights", "biases", "activations", "combined range"
+    ));
+    s.push_str(&"-".repeat(84));
+    s.push('\n');
+    for r in ranges {
+        let c = r.combined();
+        s.push_str(&format!(
+            "{:<7} [{:>7.2}, {:>6.2}] [{:>7.2}, {:>6.2}] \
+             [{:>7.2}, {:>6.2}] [{:>7.2}, {:>6.2}]\n",
+            r.layer, r.w.0, r.w.1, r.b.0, r.b.1, r.a.0, r.a.1, c.0, c.1
+        ));
+    }
+    s
+}
+
+/// Cross-check against the python-side dump (`artifacts/ranges.json`):
+/// returns the maximum absolute deviation of the combined range bounds.
+pub fn compare_with_python(ranges: &[LayerRanges], json_path: &Path)
+                           -> Result<f64> {
+    let raw = std::fs::read_to_string(json_path)
+        .with_context(|| format!("reading {json_path:?}"))?;
+    let j = Json::parse(&raw).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut worst = 0f64;
+    for r in ranges {
+        let lr = j
+            .get(r.layer)
+            .and_then(|l| l.get("range"))
+            .and_then(Json::as_arr)
+            .with_context(|| format!("ranges.json missing {}", r.layer))?;
+        let (plo, phi) = (
+            lr[0].as_f64().context("bad lo")?,
+            lr[1].as_f64().context("bad hi")?,
+        );
+        let c = r.combined();
+        worst = worst.max((c.0 as f64 - plo).abs());
+        worst = worst.max((c.1 as f64 - phi).abs());
+    }
+    Ok(worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_bits_examples() {
+        // paper: FC1 range [-9.85, 6.80] -> 4 integral bits
+        assert_eq!(int_bits_for(9.85), 4);
+        assert_eq!(int_bits_for(35.76), 6);
+        assert_eq!(int_bits_for(1.45), 1);
+        assert_eq!(int_bits_for(0.5), 0);
+        assert_eq!(int_bits_for(16.0), 4);
+        assert_eq!(int_bits_for(16.01), 5);
+    }
+
+    #[test]
+    fn exp_bits_examples() {
+        // 4 exponent bits (emax = 8) cover |v| < 2^8
+        assert_eq!(exp_bits_for(35.76), 4);
+        assert_eq!(exp_bits_for(200.0), 4);
+        assert_eq!(exp_bits_for(300.0), 5);
+        assert_eq!(exp_bits_for(1.0), 2);
+    }
+}

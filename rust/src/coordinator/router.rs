@@ -1,0 +1,128 @@
+//! Request router: the serving front door.  Maps a requested network
+//! configuration (the paper's "domain choice") to its queue, assigns
+//! request ids, applies admission control, and tracks submission metrics.
+
+use super::batcher::{BatchQueue, Request, Response};
+use super::metrics::Metrics;
+use crate::nn::network::NetConfig;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub struct Router {
+    pub configs: Vec<NetConfig>,
+    queue: Arc<BatchQueue>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    UnknownConfig,
+    Overloaded,
+}
+
+impl Router {
+    pub fn new(configs: Vec<NetConfig>, queue: Arc<BatchQueue>,
+               metrics: Arc<Metrics>) -> Router {
+        Router { configs, queue, metrics, next_id: AtomicU64::new(0) }
+    }
+
+    pub fn config_id(&self, name: &str) -> Option<usize> {
+        self.configs.iter().position(|c| c.name() == name)
+    }
+
+    /// Submit one image for classification under configuration
+    /// `config_id`; the response arrives on `reply`.
+    pub fn submit(&self, config_id: usize, image: Vec<f32>,
+                  reply: Sender<Response>) -> Result<u64, SubmitError> {
+        if config_id >= self.configs.len() {
+            return Err(SubmitError::UnknownConfig);
+        }
+        debug_assert_eq!(image.len(), 784);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            image,
+            config_id,
+            submitted: Instant::now(),
+            reply,
+        };
+        match self.queue.push(req) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(id)
+            }
+            Err(_) => Err(SubmitError::Overloaded),
+        }
+    }
+
+    pub fn queue_depth(&self, config_id: usize) -> usize {
+        self.queue.depth(config_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::arith::ArithKind;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn mk_router(cap: usize) -> (Router, Arc<BatchQueue>) {
+        let configs = vec![
+            NetConfig::uniform(ArithKind::Float32),
+            NetConfig::parse("FI(6,8)").unwrap(),
+        ];
+        let q = Arc::new(BatchQueue::new(configs.len(), 8,
+                                         Duration::from_millis(10), cap));
+        let r = Router::new(configs, q.clone(), Arc::new(Metrics::new()));
+        (r, q)
+    }
+
+    #[test]
+    fn routes_by_config() {
+        let (r, q) = mk_router(100);
+        let (tx, _rx) = channel();
+        r.submit(1, vec![0.0; 784], tx.clone()).unwrap();
+        r.submit(1, vec![0.0; 784], tx.clone()).unwrap();
+        r.submit(0, vec![0.0; 784], tx).unwrap();
+        assert_eq!(q.depth(0), 1);
+        assert_eq!(q.depth(1), 2);
+    }
+
+    #[test]
+    fn unknown_config_rejected() {
+        let (r, _) = mk_router(100);
+        let (tx, _rx) = channel();
+        assert_eq!(r.submit(9, vec![0.0; 784], tx),
+                   Err(SubmitError::UnknownConfig));
+    }
+
+    #[test]
+    fn overload_rejected() {
+        let (r, _) = mk_router(1);
+        let (tx, _rx) = channel();
+        r.submit(0, vec![0.0; 784], tx.clone()).unwrap();
+        assert_eq!(r.submit(0, vec![0.0; 784], tx),
+                   Err(SubmitError::Overloaded));
+    }
+
+    #[test]
+    fn config_lookup_by_name() {
+        let (r, _) = mk_router(10);
+        assert_eq!(r.config_id("float32"), Some(0));
+        assert_eq!(r.config_id("FI(6, 8)"), Some(1));
+        assert_eq!(r.config_id("nope"), None);
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let (r, _) = mk_router(100);
+        let (tx, _rx) = channel();
+        let a = r.submit(0, vec![0.0; 784], tx.clone()).unwrap();
+        let b = r.submit(0, vec![0.0; 784], tx).unwrap();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,183 @@
+//! The inference server: router → dynamic batcher → worker pool.
+//!
+//! Two worker kinds, matching the two evaluation backends:
+//!  * one PJRT worker (the XLA client is not Send, so it is constructed
+//!    inside its thread) serving every exact-arithmetic configuration;
+//!  * N engine workers running the bit-accurate Rust engine, serving the
+//!    approximate-multiplier configurations (and acting as overflow for
+//!    everything when PJRT is unavailable).
+
+use super::batcher::{BatchQueue, Request, Response};
+use super::metrics::Metrics;
+use super::router::Router;
+use crate::nn::network::{Dcnn, NetConfig};
+use crate::nn::tensor::Tensor;
+use crate::runtime::{ArtifactDir, ModelRunner, Variant};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ServerOpts {
+    pub configs: Vec<NetConfig>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_capacity: usize,
+    pub engine_workers: usize,
+    /// threads each engine worker hands to its GEMM calls
+    pub engine_gemm_threads: usize,
+    pub use_pjrt: bool,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts {
+            configs: vec![NetConfig::uniform(
+                crate::approx::arith::ArithKind::Float32,
+            )],
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 4_096,
+            engine_workers: 2,
+            engine_gemm_threads: 1,
+            use_pjrt: true,
+        }
+    }
+}
+
+pub struct Server {
+    pub router: Arc<Router>,
+    pub metrics: Arc<Metrics>,
+    queue: Arc<BatchQueue>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(opts: ServerOpts) -> Result<Server> {
+        let art = ArtifactDir::discover()?;
+        let dcnn = Arc::new(
+            Dcnn::load(&art.weights_path()).context("loading weights")?,
+        );
+        let metrics = Arc::new(Metrics::new());
+        let queue = Arc::new(BatchQueue::new(
+            opts.configs.len(),
+            opts.max_batch,
+            opts.max_wait,
+            opts.queue_capacity,
+        ));
+        let router = Arc::new(Router::new(
+            opts.configs.clone(),
+            queue.clone(),
+            metrics.clone(),
+        ));
+
+        let pjrt_mask: Vec<bool> = opts
+            .configs
+            .iter()
+            .map(|c| opts.use_pjrt && Variant::for_config(c).is_some())
+            .collect();
+        // engine workers cover what PJRT does not
+        let engine_mask: Vec<bool> =
+            pjrt_mask.iter().map(|p| !p).collect();
+
+        let mut workers = Vec::new();
+        if pjrt_mask.iter().any(|&b| b) {
+            let q = queue.clone();
+            let m = metrics.clone();
+            let cfgs = opts.configs.clone();
+            let art2 = art.clone();
+            workers.push(std::thread::spawn(move || {
+                pjrt_worker(art2, cfgs, q, m, pjrt_mask);
+            }));
+        }
+        if engine_mask.iter().any(|&b| b) || !opts.use_pjrt {
+            for _ in 0..opts.engine_workers.max(1) {
+                let q = queue.clone();
+                let m = metrics.clone();
+                let d = dcnn.clone();
+                let cfgs = opts.configs.clone();
+                let mask = engine_mask.clone();
+                let threads = opts.engine_gemm_threads;
+                workers.push(std::thread::spawn(move || {
+                    engine_worker(d, cfgs, q, m, mask, threads);
+                }));
+            }
+        }
+        Ok(Server { router, metrics, queue, workers })
+    }
+
+    /// Close the queue, drain in-flight work, join workers.
+    pub fn shutdown(self) {
+        self.queue.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn respond(batch: Vec<Request>, preds: &[usize], metrics: &Metrics) {
+    let now = Instant::now();
+    for (req, &pred) in batch.into_iter().zip(preds) {
+        let latency = now.duration_since(req.submitted);
+        metrics.record_latency(latency);
+        let _ = req.reply.send(Response { id: req.id, pred, latency });
+    }
+}
+
+fn batch_tensor(batch: &[Request]) -> Tensor {
+    let mut data = Vec::with_capacity(batch.len() * 784);
+    for r in batch {
+        data.extend_from_slice(&r.image);
+    }
+    Tensor::new(vec![batch.len(), 28, 28, 1], data)
+}
+
+fn pjrt_worker(art: ArtifactDir, configs: Vec<NetConfig>,
+               queue: Arc<BatchQueue>, metrics: Arc<Metrics>,
+               mask: Vec<bool>) {
+    let mut runner = match ModelRunner::new(art) {
+        Ok(r) => r,
+        Err(e) => {
+            log::error!("pjrt worker failed to start: {e:#}");
+            return;
+        }
+    };
+    while let Some((ci, batch)) = queue.next_batch(&mask) {
+        let x = batch_tensor(&batch);
+        match runner.forward(&configs[ci], &x) {
+            Ok(logits) => {
+                metrics.record_batch(batch.len());
+                respond(batch, &logits.argmax_rows(), &metrics);
+            }
+            Err(e) => {
+                log::error!("pjrt forward failed: {e:#}");
+                respond(batch, &vec![usize::MAX; 1_000], &metrics);
+            }
+        }
+    }
+}
+
+fn engine_worker(dcnn: Arc<Dcnn>, configs: Vec<NetConfig>,
+                 queue: Arc<BatchQueue>, metrics: Arc<Metrics>,
+                 mask: Vec<bool>, threads: usize) {
+    let mut prepared: HashMap<usize, crate::nn::network::PreparedNet> =
+        HashMap::new();
+    while let Some((ci, batch)) = queue.next_batch(&mask) {
+        let net = prepared
+            .entry(ci)
+            .or_insert_with(|| dcnn.prepare(configs[ci]));
+        let x = batch_tensor(&batch);
+        let preds = net.predict(&x, threads);
+        metrics.record_batch(batch.len());
+        respond(batch, &preds, &metrics);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Server integration tests live in rust/tests/serving.rs (they need
+    // artifacts); unit coverage for the queue/router/metrics pieces is in
+    // their own modules.
+}

@@ -1,0 +1,140 @@
+//! LOPD dataset loader — reads `artifacts/dataset.bin` written by
+//! `python/compile/data.py::write_dataset_bin`.
+//!
+//! Format: magic "LOPD", u32 version, u32 n_train, u32 n_test, u32 h,
+//! u32 w, then train pixels u8[n*h*w], train labels u8[n], test pixels,
+//! test labels.  Pixels are u8; `to_float` divides by 255 exactly as the
+//! Python side does, so both languages feed bit-identical inputs.
+
+use crate::nn::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub images: Vec<u8>, // n * h * w
+    pub labels: Vec<u8>, // n
+}
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub h: usize,
+    pub w: usize,
+    pub train: Split,
+    pub test: Split,
+}
+
+impl Split {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading dataset from {path:?}"))?;
+        Self::parse(&raw)
+    }
+
+    pub fn parse(raw: &[u8]) -> Result<Dataset> {
+        if raw.len() < 24 || &raw[0..4] != b"LOPD" {
+            bail!("bad LOPD header");
+        }
+        let u = |i: usize| {
+            u32::from_le_bytes(raw[i..i + 4].try_into().unwrap()) as usize
+        };
+        let (ver, ntr, nte, h, w) = (u(4), u(8), u(12), u(16), u(20));
+        if ver != 1 {
+            bail!("unsupported LOPD version {ver}");
+        }
+        let px = h * w;
+        let need = 24 + ntr * px + ntr + nte * px + nte;
+        if raw.len() != need {
+            bail!("LOPD size mismatch: have {}, need {need}", raw.len());
+        }
+        let mut off = 24;
+        let mut take = |n: usize| {
+            let s = raw[off..off + n].to_vec();
+            off += n;
+            s
+        };
+        let train = Split { images: take(ntr * px), labels: take(ntr) };
+        let test = Split { images: take(nte * px), labels: take(nte) };
+        Ok(Dataset { h, w, train, test })
+    }
+
+    /// A batch of images as an f32 tensor [n, h, w, 1] in [0, 1].
+    pub fn batch(&self, split: &Split, idx: &[usize]) -> Tensor {
+        let px = self.h * self.w;
+        let mut data = Vec::with_capacity(idx.len() * px);
+        for &i in idx {
+            assert!(i < split.len(), "index {i} out of range");
+            data.extend(
+                split.images[i * px..(i + 1) * px]
+                    .iter()
+                    .map(|&p| p as f32 / 255.0),
+            );
+        }
+        Tensor::new(vec![idx.len(), self.h, self.w, 1], data)
+    }
+
+    /// The full split as one tensor (careful: test split is ~6 MB as f32).
+    pub fn all(&self, split: &Split) -> Tensor {
+        let idx: Vec<usize> = (0..split.len()).collect();
+        self.batch(split, &idx)
+    }
+
+    /// Labels of a split as usize.
+    pub fn labels(split: &Split) -> Vec<usize> {
+        split.labels.iter().map(|&l| l as usize).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_lopd() -> Vec<u8> {
+        let (ntr, nte, h, w) = (2u32, 1u32, 2u32, 2u32);
+        let mut raw = b"LOPD".to_vec();
+        for v in [1u32, ntr, nte, h, w] {
+            raw.extend(v.to_le_bytes());
+        }
+        raw.extend([0u8, 64, 128, 255, 10, 20, 30, 40]); // train px
+        raw.extend([3u8, 7]); // train labels
+        raw.extend([255u8, 0, 0, 255]); // test px
+        raw.extend([9u8]); // test labels
+        raw
+    }
+
+    #[test]
+    fn parse_and_batch() {
+        let ds = Dataset::parse(&tiny_lopd()).unwrap();
+        assert_eq!(ds.train.len(), 2);
+        assert_eq!(ds.test.len(), 1);
+        let b = ds.batch(&ds.train, &[0]);
+        assert_eq!(b.shape, vec![1, 2, 2, 1]);
+        assert_eq!(b.data, vec![0.0, 64.0 / 255.0, 128.0 / 255.0, 1.0]);
+        assert_eq!(Dataset::labels(&ds.test), vec![9]);
+    }
+
+    #[test]
+    fn rejects_size_mismatch() {
+        let mut raw = tiny_lopd();
+        raw.pop();
+        assert!(Dataset::parse(&raw).is_err());
+        raw.push(0);
+        raw.push(0);
+        assert!(Dataset::parse(&raw).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Dataset::parse(b"XXXX").is_err());
+    }
+}

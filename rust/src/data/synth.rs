@@ -1,0 +1,174 @@
+//! Dependency-free synthetic digit generator (Rust port of the *shape* of
+//! `python/compile/data.py`, not bit-identical to it) — used by unit tests
+//! and by the serving load generator so they never need artifacts on disk.
+//! Canonical experiment data always comes from `dataset.bin`.
+
+use crate::nn::tensor::Tensor;
+use crate::util::prng::Rng;
+
+pub const H: usize = 28;
+pub const W: usize = 28;
+
+/// 5x7 dot-matrix font (same glyphs as the Python generator).
+const GLYPHS: [[u8; 7]; 10] = [
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111], // 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+fn glyph_at(d: usize, gy: i64, gx: i64) -> f32 {
+    if !(0..7).contains(&gy) || !(0..5).contains(&gx) {
+        return 0.0;
+    }
+    ((GLYPHS[d][gy as usize] >> (4 - gx as usize)) & 1) as f32
+}
+
+/// Render one digit with random affine jitter + noise; u8 pixels.
+pub fn render(digit: usize, rng: &mut Rng) -> [u8; H * W] {
+    let ang = rng.range_f32(-0.25, 0.25) as f64;
+    let scale = rng.range_f32(0.75, 1.10) as f64;
+    let shear = rng.range_f32(-0.25, 0.25) as f64;
+    let tx = rng.range_f32(-2.5, 2.5) as f64;
+    let ty = rng.range_f32(-2.5, 2.5) as f64;
+    let cell_h = 20.0 / 7.0 * scale;
+    let cell_w = 14.0 / 5.0 * scale;
+    let (ca, sa) = (ang.cos(), ang.sin());
+    let (cy, cx) = (H as f64 / 2.0 + ty, W as f64 / 2.0 + tx);
+
+    let mut img = [0f32; H * W];
+    for y in 0..H {
+        for x in 0..W {
+            let u = x as f64 - cx;
+            let v = y as f64 - cy;
+            let ur = ca * u + sa * v - shear * (-sa * u + ca * v);
+            let vr = -sa * u + ca * v;
+            let gx = ur / cell_w + 2.5;
+            let gy = vr / cell_h + 3.5;
+            let (x0, y0) = (gx.floor(), gy.floor());
+            let (fx, fy) = ((gx - x0) as f32, (gy - y0) as f32);
+            let (x0, y0) = (x0 as i64, y0 as i64);
+            let s = (1.0 - fy) * (1.0 - fx) * glyph_at(digit, y0, x0)
+                + (1.0 - fy) * fx * glyph_at(digit, y0, x0 + 1)
+                + fy * (1.0 - fx) * glyph_at(digit, y0 + 1, x0)
+                + fy * fx * glyph_at(digit, y0 + 1, x0 + 1);
+            img[y * W + x] = s;
+        }
+    }
+    // light blur + noise
+    let mut out = [0u8; H * W];
+    for y in 0..H {
+        for x in 0..W {
+            let mut acc = 0f32;
+            let mut wsum = 0f32;
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    let yy = y as i64 + dy;
+                    let xx = x as i64 + dx;
+                    if (0..H as i64).contains(&yy)
+                        && (0..W as i64).contains(&xx)
+                    {
+                        let wgt = if dy == 0 && dx == 0 { 2.0 } else { 1.0 };
+                        acc += wgt * img[yy as usize * W + xx as usize];
+                        wsum += wgt;
+                    }
+                }
+            }
+            let mut v = acc / wsum + (rng.normal() as f32) * 0.03;
+            v = v.clamp(0.0, 1.0);
+            out[y * W + x] = (v * 255.0).round() as u8;
+        }
+    }
+    out
+}
+
+/// Generate `n` labeled images.
+pub fn generate(n: usize, seed: u64) -> (Vec<u8>, Vec<u8>) {
+    let mut rng = Rng::new(seed);
+    let mut images = Vec::with_capacity(n * H * W);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let d = rng.below(10) as usize;
+        labels.push(d as u8);
+        images.extend_from_slice(&render(d, &mut rng));
+    }
+    (images, labels)
+}
+
+/// Generate directly as an input tensor [n, 28, 28, 1] plus labels.
+pub fn generate_tensor(n: usize, seed: u64) -> (Tensor, Vec<usize>) {
+    let (images, labels) = generate(n, seed);
+    let data: Vec<f32> = images.iter().map(|&p| p as f32 / 255.0).collect();
+    (
+        Tensor::new(vec![n, H, W, 1], data),
+        labels.iter().map(|&l| l as usize).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let (a, la) = generate(20, 9);
+        let (b, lb) = generate(20, 9);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn images_have_ink_but_not_too_much() {
+        let (imgs, _) = generate(50, 1);
+        for img in imgs.chunks(H * W) {
+            let on = img.iter().filter(|&&p| p > 64).count() as f64
+                / (H * W) as f64;
+            assert!(on > 0.01, "blank image");
+            assert!(on < 0.7, "image mostly ink");
+        }
+    }
+
+    #[test]
+    fn all_classes_appear() {
+        let (_, labels) = generate(500, 2);
+        for c in 0..10u8 {
+            assert!(labels.contains(&c), "class {c} missing");
+        }
+    }
+
+    #[test]
+    fn classes_distinct() {
+        // mean images of class pairs must differ
+        let (imgs, labels) = generate(400, 3);
+        let mut means = vec![[0f64; H * W]; 10];
+        let mut counts = [0usize; 10];
+        for (img, &l) in imgs.chunks(H * W).zip(&labels) {
+            counts[l as usize] += 1;
+            for (m, &p) in means[l as usize].iter_mut().zip(img) {
+                *m += p as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= (c.max(1) * 255) as f64;
+            }
+        }
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let d: f64 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y).abs())
+                    .sum::<f64>()
+                    / (H * W) as f64;
+                assert!(d > 0.01, "classes {a}/{b} indistinct ({d})");
+            }
+        }
+    }
+}

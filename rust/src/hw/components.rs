@@ -1,0 +1,196 @@
+//! Primitive hardware components: parameterized ALM-count and delay
+//! models.  These mirror the module library ScaLop exposes to Chisel
+//! (FixedAdd, FixedMul, FloatAdd, ... — paper §4.4), reduced to their
+//! synthesis cost.
+//!
+//! Units: ALMs (Arria-10 adaptive logic modules), delay in nanoseconds.
+
+/// Cost of one primitive instance.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    pub alms: f64,
+    pub dsps: u32,
+    pub delay_ns: f64,
+    /// register bits clocked every cycle (drives dynamic power)
+    pub reg_bits: u32,
+}
+
+impl Cost {
+    pub fn zero() -> Cost {
+        Cost::default()
+    }
+
+    /// Series composition: areas add, delays add (same pipeline stage).
+    pub fn then(self, other: Cost) -> Cost {
+        Cost {
+            alms: self.alms + other.alms,
+            dsps: self.dsps + other.dsps,
+            delay_ns: self.delay_ns + other.delay_ns,
+            reg_bits: self.reg_bits + other.reg_bits,
+        }
+    }
+
+    /// Parallel composition: areas add, delay is the max.
+    pub fn beside(self, other: Cost) -> Cost {
+        Cost {
+            alms: self.alms + other.alms,
+            dsps: self.dsps + other.dsps,
+            delay_ns: self.delay_ns.max(other.delay_ns),
+            reg_bits: self.reg_bits + other.reg_bits,
+        }
+    }
+}
+
+// --- calibration constants (fit against paper Table 5; see hw/mod.rs) ----
+
+/// ns per carry-chain bit (Arria 10 carry chains are fast).
+pub const T_CARRY: f64 = 0.030;
+/// ns per LUT level (mux stage, comparator level, ...).
+pub const T_LUT: f64 = 0.55;
+/// Base DSP multiplier delay, plus per-mantissa-bit slope.
+pub const T_DSP_BASE: f64 = 2.0;
+pub const T_DSP_PER_BIT: f64 = 0.05;
+/// Register setup + clock skew margin per stage.
+pub const T_SETUP: f64 = 0.80;
+/// ALM factor of a barrel-shifter stage (muxes per bit per stage).
+pub const ALM_SHIFT_FACTOR: f64 = 1.25;
+
+/// Ripple/carry-chain adder of width `w`.
+pub fn adder(w: u32) -> Cost {
+    Cost {
+        alms: w as f64,
+        dsps: 0,
+        delay_ns: w as f64 * T_CARRY + T_LUT,
+        reg_bits: 0,
+    }
+}
+
+/// Comparator over `w` bits (all-zero / all-one detection is cheaper but
+/// we lump it here).
+pub fn comparator(w: u32) -> Cost {
+    Cost {
+        alms: (w as f64 / 2.0).max(1.0),
+        dsps: 0,
+        delay_ns: (log2_ceil4(w) as f64) * T_LUT * 0.5 + T_LUT * 0.5,
+        reg_bits: 0,
+    }
+}
+
+fn log2_ceil4(w: u32) -> u32 {
+    // ceil(log4(w)): 6-input LUTs compare ~4 bits per level
+    let mut l = 0;
+    let mut c = 1u32;
+    while c < w.max(1) {
+        c *= 4;
+        l += 1;
+    }
+    l
+}
+
+/// Barrel shifter: `w` data bits, `ceil(log2(w))` mux stages.
+pub fn barrel_shifter(w: u32) -> Cost {
+    let stages = ceil_log2(w);
+    Cost {
+        alms: w as f64 * stages as f64 * ALM_SHIFT_FACTOR,
+        dsps: 0,
+        delay_ns: stages as f64 * T_LUT,
+        reg_bits: 0,
+    }
+}
+
+/// Leading-one/zero detector over `w` bits (priority encoder).
+pub fn lod(w: u32) -> Cost {
+    Cost {
+        alms: w as f64 * 0.5,
+        dsps: 0,
+        delay_ns: ceil_log2(w) as f64 * T_LUT * 0.55,
+        reg_bits: 0,
+    }
+}
+
+/// Hardened DSP multiplier: one Arria-10 DSP handles up to 27x27.
+/// Wider products gang DSPs (ceil(w/27)^2).
+pub fn dsp_mult(wa: u32, wb: u32) -> Cost {
+    let ga = wa.div_ceil(27).max(1);
+    let gb = wb.div_ceil(27).max(1);
+    Cost {
+        alms: if ga * gb > 1 { (wa + wb) as f64 } else { 0.0 },
+        dsps: ga * gb,
+        delay_ns: T_DSP_BASE + T_DSP_PER_BIT * wa.max(wb) as f64,
+        reg_bits: 0,
+    }
+}
+
+/// Soft (LUT) array multiplier — used when a design must avoid DSPs.
+pub fn lut_mult(wa: u32, wb: u32) -> Cost {
+    Cost {
+        alms: wa as f64 * wb as f64 * 0.7,
+        dsps: 0,
+        delay_ns: (wa + wb) as f64 * T_CARRY * 2.0 + 2.0 * T_LUT,
+        reg_bits: 0,
+    }
+}
+
+/// Pipeline register bank of `bits` flip-flops.  ALM-free on Arria 10
+/// (each ALM bundles FFs with its LUTs) but it clocks power.
+pub fn register(bits: u32) -> Cost {
+    Cost { alms: 0.0, dsps: 0, delay_ns: T_SETUP, reg_bits: bits }
+}
+
+/// Small control FSM / handshake overhead per PE.
+pub fn control() -> Cost {
+    Cost { alms: 1.0, dsps: 0, delay_ns: 0.0, reg_bits: 4 }
+}
+
+pub fn ceil_log2(w: u32) -> u32 {
+    if w <= 1 {
+        0
+    } else {
+        32 - (w - 1).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(13), 4);
+        assert_eq!(ceil_log2(16), 4);
+        assert_eq!(ceil_log2(17), 5);
+    }
+
+    #[test]
+    fn adder_scales_linearly() {
+        assert!(adder(32).alms > adder(8).alms);
+        assert!(adder(32).delay_ns > adder(8).delay_ns);
+    }
+
+    #[test]
+    fn dsp_mult_ganging() {
+        assert_eq!(dsp_mult(16, 16).dsps, 1);
+        assert_eq!(dsp_mult(24, 24).dsps, 1); // 27x27 mode
+        assert_eq!(dsp_mult(32, 32).dsps, 4);
+    }
+
+    #[test]
+    fn lut_mult_avoids_dsps() {
+        let c = lut_mult(11, 11);
+        assert_eq!(c.dsps, 0);
+        assert!(c.alms > 50.0);
+    }
+
+    #[test]
+    fn composition_rules() {
+        let a = adder(8);
+        let b = barrel_shifter(8);
+        let s = a.then(b);
+        assert!((s.alms - (a.alms + b.alms)).abs() < 1e-9);
+        assert!((s.delay_ns - (a.delay_ns + b.delay_ns)).abs() < 1e-9);
+        let p = a.beside(b);
+        assert_eq!(p.delay_ns, a.delay_ns.max(b.delay_ns));
+    }
+}

@@ -1,0 +1,167 @@
+//! Datapath model: the paper maps the DCNN onto a datapath of 500 PEs
+//! plus control/scheduling (after DnnWeaver [28], §5.2) on an Arria 10.
+
+use super::pe::{pe_cost, PeCost};
+use super::power::{gops_per_joule, power_w};
+use crate::approx::arith::ArithKind;
+
+/// Target device (paper §5.2: Arria 10 with 427,200 ALMs, 55,562,240
+/// block-RAM bits, 1,518 DSP blocks).
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaDevice {
+    pub name: &'static str,
+    pub alms: u64,
+    pub bram_bits: u64,
+    pub dsps: u32,
+}
+
+pub const ARRIA10: FpgaDevice = FpgaDevice {
+    name: "Arria 10",
+    alms: 427_200,
+    bram_bits: 55_562_240,
+    dsps: 1_518,
+};
+
+/// Number of PEs in the paper's datapath.
+pub const N_PE: usize = 500;
+
+/// Interconnect + scheduler overhead added on top of the PE array:
+/// a fixed controller plus per-PE fan-out logic.
+const CTRL_ALMS_FIXED: f64 = 500.0;
+const CTRL_ALMS_PER_PE: f64 = 1.0;
+
+/// Aggregated synthesis estimate for a full datapath.
+#[derive(Clone, Copy, Debug)]
+pub struct Datapath {
+    pub kind_bits: u32,
+    pub n_pe: usize,
+    pub alms: f64,
+    pub dsps: u32,
+    pub reg_bits: u64,
+    pub fmax_mhz: f64,
+    pub power_w: f64,
+    pub gops_per_j: f64,
+}
+
+impl Datapath {
+    /// Synthesize (analytically) a uniform datapath of `n_pe` PEs.
+    pub fn synthesize(kind: &ArithKind, n_pe: usize) -> Datapath {
+        let pe: PeCost = pe_cost(kind);
+        let alms = pe.alms * n_pe as f64
+            + CTRL_ALMS_FIXED
+            + CTRL_ALMS_PER_PE * n_pe as f64;
+        let dsps = pe.dsps * n_pe as u32;
+        let reg_bits = pe.reg_bits as u64 * n_pe as u64;
+        let fmax_mhz = 1_000.0 / pe.critical_ns;
+        let p = power_w(alms, dsps, reg_bits, fmax_mhz * 1e6);
+        Datapath {
+            kind_bits: kind.total_bits(),
+            n_pe,
+            alms,
+            dsps,
+            reg_bits,
+            fmax_mhz,
+            power_w: p,
+            gops_per_j: gops_per_joule(n_pe, fmax_mhz * 1e6, p),
+        }
+    }
+
+    /// Utilization fractions on a device.
+    pub fn utilization(&self, dev: &FpgaDevice) -> (f64, f64) {
+        (
+            self.alms / dev.alms as f64,
+            self.dsps as f64 / dev.dsps as f64,
+        )
+    }
+
+    /// Does the datapath fit the device at all?
+    pub fn fits(&self, dev: &FpgaDevice) -> bool {
+        let (a, d) = self.utilization(dev);
+        a <= 1.0 && d <= 1.0
+    }
+
+    /// Scalar cost used by the explorer's pass-1 objective: weighted blend
+    /// of normalized area, DSP and power (lower is better).
+    pub fn explore_cost(&self, dev: &FpgaDevice) -> f64 {
+        let (a, d) = self.utilization(dev);
+        // power normalized to the float32 reference (~12 W)
+        let p = self.power_w / 12.0;
+        0.4 * a + 0.2 * d + 0.4 * p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(s: &str) -> ArithKind {
+        ArithKind::parse(s).unwrap()
+    }
+
+    #[test]
+    fn table5_orderings_hold() {
+        let f32dp = Datapath::synthesize(&ArithKind::Float32, N_PE);
+        let f16dp = Datapath::synthesize(&k("FL(5,10)"), N_PE);
+        let fl49 = Datapath::synthesize(&k("FL(4,9)"), N_PE);
+        let i510 = Datapath::synthesize(&k("I(5,10)"), N_PE);
+        let fi68 = Datapath::synthesize(&k("FI(6,8)"), N_PE);
+
+        // ALM ordering: float32 >> float16 > FL(4,9) and FI is tiny
+        assert!(f32dp.alms > 1.8 * f16dp.alms);
+        assert!(f16dp.alms > fl49.alms);
+        assert!(fl49.alms > 4.0 * fi68.alms);
+
+        // DSP story: everyone 500 except the CFPU design
+        assert_eq!(f32dp.dsps, 500);
+        assert_eq!(i510.dsps, 0);
+        assert_eq!(fi68.dsps, 500);
+
+        // clock: fixed point runs ~2x float32
+        assert!(fi68.fmax_mhz > 1.7 * f32dp.fmax_mhz);
+
+        // power ordering (Table 5): f32 > f16 > FL > I > FI
+        assert!(f32dp.power_w > f16dp.power_w);
+        assert!(f16dp.power_w > fl49.power_w);
+        assert!(fl49.power_w > i510.power_w);
+        assert!(i510.power_w > fi68.power_w);
+
+        // energy-efficiency ordering is the reverse
+        assert!(fi68.gops_per_j > i510.gops_per_j);
+        assert!(i510.gops_per_j > fl49.gops_per_j);
+        assert!(fl49.gops_per_j > f16dp.gops_per_j);
+        assert!(f16dp.gops_per_j > f32dp.gops_per_j);
+    }
+
+    #[test]
+    fn float32_row_magnitudes_close_to_paper() {
+        // paper: 209,805 ALMs (49%), 94.41 MHz, 12.38 W, 3.81 Gops/J
+        let dp = Datapath::synthesize(&ArithKind::Float32, N_PE);
+        let alms_err = (dp.alms - 209_805.0).abs() / 209_805.0;
+        assert!(alms_err < 0.20, "ALMs {} (err {alms_err:.2})", dp.alms);
+        assert!((dp.fmax_mhz - 94.41).abs() / 94.41 < 0.25,
+                "fmax {}", dp.fmax_mhz);
+        assert!((dp.power_w - 12.38).abs() / 12.38 < 0.25,
+                "power {}", dp.power_w);
+        assert!((dp.gops_per_j - 3.81).abs() / 3.81 < 0.35,
+                "gops/J {}", dp.gops_per_j);
+        let (autil, dutil) = dp.utilization(&ARRIA10);
+        assert!((0.3..0.7).contains(&autil));
+        assert!((dutil - 0.329).abs() < 0.01);
+    }
+
+    #[test]
+    fn fits_device() {
+        assert!(Datapath::synthesize(&ArithKind::Float32, N_PE)
+            .fits(&ARRIA10));
+        // 4000 float32 PEs would blow the ALM budget
+        assert!(!Datapath::synthesize(&ArithKind::Float32, 4_000)
+            .fits(&ARRIA10));
+    }
+
+    #[test]
+    fn explore_cost_prefers_narrow() {
+        let wide = Datapath::synthesize(&k("FI(8,14)"), N_PE);
+        let narrow = Datapath::synthesize(&k("FI(4,6)"), N_PE);
+        assert!(narrow.explore_cost(&ARRIA10) < wide.explore_cost(&ARRIA10));
+    }
+}

@@ -1,0 +1,206 @@
+//! Processing-element composition: one MAC datapath per arithmetic
+//! provider — the ScaLop `PE` of paper §4.4 ("a multiplier and an adder in
+//! which inputs and outputs are fixed-point numbers ...") extended to all
+//! representations in Table 2.
+//!
+//! PEs are *pipelined*: Fmax is set by the slowest pipeline stage, not the
+//! sum of all stages.  The floating-point PE splits into (multiplier |
+//! FP-adder) stages and its critical stage is the un-pipelinable FP adder
+//! chain (align → add → LZD → normalize → round) — which is exactly why
+//! the paper's float32 datapath clocks at ~94 MHz while FI(6, 8) reaches
+//! ~201 MHz with its single mult+add stage.
+
+use super::components as c;
+use super::components::Cost;
+use crate::approx::arith::ArithKind;
+
+/// Synthesized cost of one PE.
+#[derive(Clone, Debug)]
+pub struct PeCost {
+    /// total ALMs across all stages
+    pub alms: f64,
+    pub dsps: u32,
+    /// pipeline + operand registers clocked per cycle
+    pub reg_bits: u32,
+    /// slowest pipeline stage (sets Fmax), ns — includes register setup
+    pub critical_ns: f64,
+    /// stage delays for reporting/debug
+    pub stages: Vec<f64>,
+}
+
+impl PeCost {
+    fn from_stages(stages: Vec<Cost>, reg_bits: u32) -> PeCost {
+        let alms: f64 = stages.iter().map(|s| s.alms).sum::<f64>() + 1.0; // ctrl
+        let dsps = stages.iter().map(|s| s.dsps).sum();
+        let delays: Vec<f64> =
+            stages.iter().map(|s| s.delay_ns + c::T_SETUP).collect();
+        let critical = delays.iter().cloned().fold(0.0, f64::max);
+        PeCost {
+            alms,
+            dsps,
+            reg_bits,
+            critical_ns: critical,
+            stages: delays,
+        }
+    }
+}
+
+/// Floating-point add chain: exponent compare, alignment shifter, mantissa
+/// add, LZD, normalization shifter, rounding (one pipeline stage — the
+/// serial dependency cannot be cut without wrecking latency·area).
+/// `guard` is the number of guard/round/sticky bits carried (3 for a
+/// rounding datapath; 0 for the CFPU approximate path whose products are
+/// exact power-of-two rescalings and skip the rounding increment).
+fn fp_adder(e_bits: u32, m_bits: u32, guard: u32, with_round: bool) -> Cost {
+    let ws = m_bits + 1 + guard; // implied bit + guard/round/sticky
+    let mut cost = c::adder(e_bits) // exponent compare/subtract
+        .then(c::barrel_shifter(ws)) // align
+        .then(c::adder(ws + 2)) // mantissa add
+        .then(c::lod(ws)) // leading-zero detect
+        .then(c::barrel_shifter(ws)); // normalize
+    if with_round {
+        cost = cost.then(c::adder(ws)); // round increment
+    }
+    cost.beside(c::adder(e_bits)) // exponent adjust (parallel tail)
+}
+
+/// Compose the MAC PE for a provider.
+pub fn pe_cost(kind: &ArithKind) -> PeCost {
+    match kind {
+        // IEEE float32 baseline: 24-bit mantissa mult (one 27x27 DSP) +
+        // full-width FP adder.
+        ArithKind::Float32 => fp_pe(8, 23),
+        ArithKind::FloatExact(r) => fp_pe(r.e_bits, r.m_bits),
+        ArithKind::FloatCfpu(cf) => {
+            // CFPU: the mantissa multiplier is REPLACED by skip logic —
+            // the multiplier-free realization the paper highlights for
+            // I(5, 10) (0 DSP blocks).  Skip logic: top-w all-0/all-1
+            // detects on both operands + exponent adder + result mux; the
+            // approximate path also drops the rounding increment (it only
+            // rescales by powers of two).
+            let (e, m) = (cf.rep.e_bits, cf.rep.m_bits);
+            let skip = c::comparator(cf.w)
+                .beside(c::comparator(cf.w))
+                .then(c::adder(e + 1));
+            // the skip-result mux folds into the adder's first stage; its
+            // select delay lands on the adder's critical path
+            let adder_stage = Cost {
+                alms: 0.0,
+                dsps: 0,
+                delay_ns: c::T_LUT, // operand-select mux
+                reg_bits: 0,
+            }
+            .then(fp_adder(e, m, 0, false));
+            let stages = vec![skip, adder_stage];
+            PeCost::from_stages(stages, 3 * (1 + e + m))
+        }
+        ArithKind::FixedExact(r) => fixed_pe(r.i_bits, r.f_bits, None),
+        ArithKind::FixedDrum(d) => {
+            fixed_pe(d.rep.i_bits, d.rep.f_bits, Some(d.t))
+        }
+        ArithKind::Binary => {
+            // XNOR + popcount accumulate: single tiny stage
+            let stage = Cost {
+                alms: 4.0,
+                dsps: 0,
+                delay_ns: 2.0 * c::T_LUT,
+                reg_bits: 0,
+            }
+            .then(c::adder(16));
+            PeCost::from_stages(vec![stage], 16)
+        }
+    }
+}
+
+fn fp_pe(e_bits: u32, m_bits: u32) -> PeCost {
+    let mult = c::dsp_mult(m_bits + 1, m_bits + 1);
+    let stages = vec![mult, fp_adder(e_bits, m_bits, 3, true)];
+    PeCost::from_stages(stages, 3 * (1 + e_bits + m_bits))
+}
+
+/// Fixed-point MAC: multiplier feeding a wide accumulator in ONE stage
+/// (this is what doubles the clock in Table 5: no alignment/normalize
+/// chain).  DRUM conditioning adds LODs + truncation shifters but shrinks
+/// the multiplier to t x t.
+fn fixed_pe(i_bits: u32, f_bits: u32, drum_t: Option<u32>) -> PeCost {
+    let w = i_bits + f_bits;
+    let acc_width = 2 * w; // widened partial sums (paper §4.2)
+    let stage = match drum_t {
+        None => c::dsp_mult(w, w).then(c::adder(acc_width)),
+        Some(t) => c::lod(w)
+            .beside(c::lod(w))
+            .then(c::barrel_shifter(w).beside(c::barrel_shifter(w)))
+            .then(c::dsp_mult(t, t))
+            .then(c::barrel_shifter(2 * w)) // product re-expansion
+            .then(c::adder(acc_width)),
+    };
+    PeCost::from_stages(vec![stage], 3 * (1 + w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(s: &str) -> ArithKind {
+        ArithKind::parse(s).unwrap()
+    }
+
+    #[test]
+    fn fixed_pe_is_tiny_vs_float32() {
+        let fixed = pe_cost(&k("FI(6,8)"));
+        let f32pe = pe_cost(&ArithKind::Float32);
+        // Table 5: 15,452 vs 209,805 ALMs over 500 PEs — >10x gap
+        assert!(f32pe.alms > 8.0 * fixed.alms,
+                "f32 {} vs fixed {}", f32pe.alms, fixed.alms);
+        // and the fixed PE clocks about twice as fast
+        assert!(fixed.critical_ns * 1.8 < f32pe.critical_ns);
+    }
+
+    #[test]
+    fn cfpu_is_multiplier_free() {
+        let i510 = pe_cost(&k("I(5,10)"));
+        assert_eq!(i510.dsps, 0, "CFPU PE must use no DSPs");
+        let fl510 = pe_cost(&k("FL(5,10)"));
+        assert_eq!(fl510.dsps, 1);
+        // CFPU trims the rounding stage: slightly smaller than FL(5,10)
+        assert!(i510.alms < fl510.alms * 1.05);
+    }
+
+    #[test]
+    fn float_area_grows_with_mantissa() {
+        let a = pe_cost(&k("FL(4,6)")).alms;
+        let b = pe_cost(&k("FL(4,12)")).alms;
+        let cc = pe_cost(&k("FL(4,20)")).alms;
+        assert!(a < b && b < cc);
+    }
+
+    #[test]
+    fn fixed_area_grows_with_width() {
+        assert!(pe_cost(&k("FI(4,4)")).alms < pe_cost(&k("FI(8,12)")).alms);
+    }
+
+    #[test]
+    fn fp_critical_stage_is_the_adder_not_the_mult() {
+        let pe = pe_cost(&ArithKind::Float32);
+        assert_eq!(pe.stages.len(), 2);
+        assert!(pe.stages[1] > pe.stages[0],
+                "FP adder stage must dominate: {:?}", pe.stages);
+    }
+
+    #[test]
+    fn drum_adds_lod_and_shifters_but_small_mult() {
+        let exact = pe_cost(&k("FI(8,8)"));
+        let drum = pe_cost(&k("H(8,8,6)"));
+        assert!(drum.alms > exact.alms);
+        assert_eq!(exact.dsps, 1);
+        assert_eq!(drum.dsps, 1);
+    }
+
+    #[test]
+    fn binary_pe_is_tiny_and_dsp_free() {
+        let bin = pe_cost(&ArithKind::Binary);
+        assert_eq!(bin.dsps, 0);
+        assert!(bin.alms < 30.0, "XNOR PE should be a few ALMs");
+        assert!(bin.alms < pe_cost(&k("FI(6,8)")).alms);
+    }
+}

@@ -1,0 +1,67 @@
+//! Power model: static + activity-scaled dynamic power.
+//!
+//! P = P_static + f · (α_ALM · ALMs + α_DSP · DSPs + α_REG · reg_bits)
+//!
+//! The α constants were least-squares fit against the paper's own Table 5
+//! rows (float32 / float16 / FL(4,9) / I(5,10) / FI(6,8) at their reported
+//! ALM, DSP and clock values) with P_static fixed at a typical Arria-10
+//! figure; the fit reproduces all five power cells within ±10%:
+//!
+//!   float32 12.38 W → 11.69 W (−5.6%)     float16 7.30 → 7.53 (+3.2%)
+//!   FL(4,9)  6.68 → 7.11 (+6.4%)          I(5,10) 6.28 → 6.88 (+9.6%)
+//!   FI(6,8)  4.90 → 4.85 (−1.1%)
+
+/// Static (leakage + always-on) power of the device, watts.
+pub const P_STATIC_W: f64 = 1.2;
+/// Dynamic power per ALM per Hz (W/(ALM·Hz)).
+pub const ALPHA_ALM: f64 = 4.2817e-13;
+/// Dynamic power per DSP block per Hz.
+pub const ALPHA_DSP: f64 = 5.7403e-12;
+/// Dynamic power per clocked register/BRAM bit per Hz.
+pub const ALPHA_REG: f64 = 3.8404e-13;
+
+/// Total power in watts.
+pub fn power_w(alms: f64, dsps: u32, reg_bits: u64, f_hz: f64) -> f64 {
+    P_STATIC_W
+        + f_hz
+            * (ALPHA_ALM * alms
+                + ALPHA_DSP * dsps as f64
+                + ALPHA_REG * reg_bits as f64)
+}
+
+/// Energy efficiency in Gops/J, with the paper's op accounting:
+/// one op per PE per cycle (Table 5 note).
+pub fn gops_per_joule(n_pe: usize, f_hz: f64, p_w: f64) -> f64 {
+    (n_pe as f64 * f_hz) / p_w / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_float32_row_within_10pct() {
+        // paper: 209,805 ALMs, 500 DSPs, 94.41 MHz -> 12.38 W, 3.81 Gops/J
+        let p = power_w(209_805.0, 500, 500 * 96, 94.41e6);
+        assert!((p - 12.38).abs() / 12.38 < 0.10, "p = {p}");
+        let ge = gops_per_joule(500, 94.41e6, p);
+        assert!((ge - 3.81).abs() / 3.81 < 0.12, "gops/j = {ge}");
+    }
+
+    #[test]
+    fn reproduces_paper_fi68_row_within_10pct() {
+        let p = power_w(15_452.0, 500, 500 * 45, 201.13e6);
+        assert!((p - 4.90).abs() / 4.90 < 0.10, "p = {p}");
+        let ge = gops_per_joule(500, 201.13e6, p);
+        assert!((ge - 20.52).abs() / 20.52 < 0.12, "gops/j = {ge}");
+    }
+
+    #[test]
+    fn power_monotone_in_area_and_clock() {
+        let base = power_w(50_000.0, 100, 10_000, 100e6);
+        assert!(power_w(100_000.0, 100, 10_000, 100e6) > base);
+        assert!(power_w(50_000.0, 200, 10_000, 100e6) > base);
+        assert!(power_w(50_000.0, 100, 10_000, 200e6) > base);
+        assert!(power_w(0.0, 0, 0, 0.0) == P_STATIC_W);
+    }
+}

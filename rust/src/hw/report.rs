@@ -1,0 +1,106 @@
+//! Table-5 report generator: "Hardware Cost of Various Implementations".
+
+use super::datapath::{Datapath, FpgaDevice, ARRIA10, N_PE};
+use crate::approx::arith::ArithKind;
+
+#[derive(Clone, Debug)]
+pub struct HwRow {
+    pub representation: String,
+    pub alms: u64,
+    pub alm_util: f64,
+    pub dsps: u32,
+    pub dsp_util: f64,
+    pub clock_mhz: f64,
+    pub power_w: f64,
+    pub gops_per_j: f64,
+}
+
+impl HwRow {
+    pub fn from_datapath(name: &str, dp: &Datapath, dev: &FpgaDevice)
+                         -> HwRow {
+        let (a, d) = dp.utilization(dev);
+        HwRow {
+            representation: name.to_string(),
+            alms: dp.alms.round() as u64,
+            alm_util: a,
+            dsps: dp.dsps,
+            dsp_util: d,
+            clock_mhz: dp.fmax_mhz,
+            power_w: dp.power_w,
+            gops_per_j: dp.gops_per_j,
+        }
+    }
+}
+
+/// Build the Table-5 rows for a set of representations (defaults to the
+/// paper's five).
+pub fn hw_report(kinds: &[(&str, ArithKind)]) -> Vec<HwRow> {
+    kinds
+        .iter()
+        .map(|(name, k)| {
+            let dp = Datapath::synthesize(k, N_PE);
+            HwRow::from_datapath(name, &dp, &ARRIA10)
+        })
+        .collect()
+}
+
+/// The paper's Table-5 representation set.
+pub fn table5_kinds() -> Vec<(&'static str, ArithKind)> {
+    vec![
+        ("float32", ArithKind::Float32),
+        ("float16", ArithKind::parse("FL(5,10)").unwrap()),
+        ("FL(4, 9)", ArithKind::parse("FL(4,9)").unwrap()),
+        ("I(5, 10)", ArithKind::parse("I(5,10)").unwrap()),
+        ("FI(6, 8)", ArithKind::parse("FI(6,8)").unwrap()),
+    ]
+}
+
+/// Render rows in the paper's table layout.
+pub fn format_table(rows: &[HwRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<12} {:>9} {:>7} {:>6} {:>7} {:>10} {:>9} {:>12}\n",
+        "Repr", "ALMs", "(util)", "DSPs", "(util)", "Clock(MHz)",
+        "Power(W)", "Gops/J"
+    ));
+    s.push_str(&"-".repeat(80));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:<12} {:>9} {:>6.0}% {:>6} {:>6.0}% {:>10.2} {:>9.2} {:>12.2}\n",
+            r.representation,
+            r.alms,
+            r.alm_util * 100.0,
+            r.dsps,
+            r.dsp_util * 100.0,
+            r.clock_mhz,
+            r.power_w,
+            r.gops_per_j
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_has_five_paper_rows() {
+        let rows = hw_report(&table5_kinds());
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].representation, "float32");
+        let txt = format_table(&rows);
+        assert!(txt.contains("FI(6, 8)"));
+        assert!(txt.contains("Gops/J"));
+    }
+
+    #[test]
+    fn i510_row_is_dsp_free() {
+        let rows = hw_report(&table5_kinds());
+        let i510 = rows.iter().find(|r| r.representation == "I(5, 10)")
+            .unwrap();
+        assert_eq!(i510.dsps, 0);
+        assert_eq!(i510.dsp_util, 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Lop: customized data representations + approximate computing for ML —
+//! a three-layer Rust + JAX + Pallas reproduction of Nazemi & Pedram
+//! (2018).  See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod approx;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod nn;
+pub mod numeric;
+pub mod runtime;
+pub mod util;

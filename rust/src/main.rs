@@ -1,0 +1,412 @@
+//! `lop` — CLI for the Lop reproduction: quality simulation (LopPy half),
+//! hardware cost analysis (ScaLop half), the §4.2 design-space explorer,
+//! and the inference serving runtime.
+//!
+//! Run `lop help` for the command list.  Everything operates on the AOT
+//! artifacts produced by `make artifacts`.
+
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use lop::approx::arith::ArithKind;
+use lop::cli::Args;
+use lop::config::{ExploreFileConfig, ServeFileConfig, TomlDoc};
+use lop::coordinator::eval::Evaluator;
+use lop::coordinator::explorer::{explore, ExploreOpts, Family};
+use lop::coordinator::ranges::{format_table1, profile_ranges};
+use lop::coordinator::server::{Server, ServerOpts};
+use lop::data::{synth, Dataset};
+use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
+use lop::hw::report::{format_table, hw_report, table5_kinds};
+use lop::hw::rtl::datapath_verilog;
+use lop::nn::network::{Dcnn, NetConfig};
+use lop::runtime::{ArtifactDir, ModelRunner};
+use lop::util::prng::Rng;
+
+const HELP: &str = "\
+lop — customized data representations + approximate computing for ML
+(reproduction of Nazemi & Pedram, 2018; see DESIGN.md)
+
+USAGE: lop <command> [flags]
+
+COMMANDS
+  summary                     print the Fig. 2 DCNN architecture
+  ranges    [--n 2000]        Table 1: per-layer WBA value ranges
+  eval      --config C        accuracy of a configuration
+            [--n N] [--engine] [--threads T]
+  table3    [--n N]           Table 3: floating-point configurations
+  table4    [--n N]           Table 4: fixed-point configurations
+  hw-report [--repr \"a;b\"]    Table 5: hardware cost model
+  netlist   --repr C          ScaLop structural netlist (Verilog-flavored)
+  explore   [--bound 0.01] [--subset 400] [--with-approx]
+            [--no-second-pass] [--trace] [--config-file F]  §4.2 DSE
+  serve     [--requests 2000] [--rate 500] [--configs \"a;b\"]
+            [--max-batch 16] [--max-wait-ms 2] [--engine-workers 2]
+            [--no-pjrt] [--config-file F]          serving benchmark
+  help                        this message
+
+Config syntax: float32 | FI(i,f) | FL(e,m) | H(i,f,t) | I(e,m[,w]) |
+binxnor — uniform, or 'a|b|c|d' for per-layer (CONV1|CONV2|FC1|FC2).";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "summary" => cmd_summary(),
+        "ranges" => cmd_ranges(args),
+        "eval" => cmd_eval(args),
+        "table3" => cmd_table(args, true),
+        "table4" => cmd_table(args, false),
+        "hw-report" => cmd_hw_report(args),
+        "netlist" => cmd_netlist(args),
+        "explore" => cmd_explore(args),
+        "serve" => cmd_serve(args),
+        "help" | "" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `lop help`)"),
+    }
+}
+
+fn load_all() -> Result<(ArtifactDir, Dcnn, Dataset)> {
+    let art = ArtifactDir::discover()?;
+    let dcnn = Dcnn::load(&art.weights_path())?;
+    let ds = Dataset::load(&art.dataset_path())?;
+    Ok((art, dcnn, ds))
+}
+
+fn evaluator(subset: usize, threads: usize, use_pjrt: bool)
+             -> Result<Evaluator> {
+    let (art, dcnn, ds) = load_all()?;
+    let runner = if use_pjrt {
+        Some(ModelRunner::new(art)?)
+    } else {
+        None
+    };
+    Ok(Evaluator::new(dcnn, runner, ds, subset, threads))
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_summary() -> Result<()> {
+    println!("DCNN architecture (paper Fig. 2):");
+    println!("{:<8} {:>18} {:>8} {:>12} {:>14}", "layer", "weights",
+             "padding", "activation", "output");
+    println!("{}", "-".repeat(66));
+    println!("{:<8} {:>18} {:>8} {:>12} {:>14}", "CONV1", "5x5x1x32", "2",
+             "ReLU+pool", "[B,14,14,32]");
+    println!("{:<8} {:>18} {:>8} {:>12} {:>14}", "CONV2", "5x5x32x64",
+             "2", "ReLU+pool", "[B,7,7,64]");
+    println!("{:<8} {:>18} {:>8} {:>12} {:>14}", "FC1", "3136x1024", "-",
+             "ReLU", "[B,1024]");
+    println!("{:<8} {:>18} {:>8} {:>12} {:>14}", "FC2", "1024x10", "-",
+             "-", "[B,10]");
+    let params = 5 * 5 * 32 + 32 + 5 * 5 * 32 * 64 + 64
+        + 3136 * 1024 + 1024 + 1024 * 10 + 10;
+    println!("total parameters: {params}");
+    if let Ok(art) = ArtifactDir::discover() {
+        println!("trained float32 baseline accuracy: {:.4}",
+                 art.baseline_accuracy);
+    }
+    Ok(())
+}
+
+fn cmd_ranges(args: &Args) -> Result<()> {
+    let (art, dcnn, ds) = load_all()?;
+    let n = args.usize("n", 2_000);
+    let r = profile_ranges(&dcnn, &ds, n, 0);
+    println!("Table 1 — value ranges of weights/biases/activations");
+    println!("(profiled over {n} training images)\n");
+    print!("{}", format_table1(&r));
+    match lop::coordinator::ranges::compare_with_python(
+        &r, &art.ranges_path()) {
+        Ok(dev) => println!(
+            "\ncross-check vs python dump (ranges.json): max deviation \
+             {dev:.4}"),
+        Err(e) => println!("\n(python cross-check unavailable: {e})"),
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = NetConfig::parse(
+        args.opt_str("config").context("--config required")?,
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let n = args.usize("n", 2_000);
+    let threads = args.usize("threads", 0);
+    let use_pjrt = !args.switch("engine");
+    let mut ev = evaluator(n, threads, use_pjrt)?;
+    let t0 = Instant::now();
+    let acc = ev.accuracy(&cfg)?;
+    let base = ev.accuracy(&NetConfig::uniform(ArithKind::Float32))?;
+    println!("config       : {}", cfg.name());
+    println!("backend      : {:?}", ev.backend_for(&cfg));
+    println!("images       : {}", ev.subset.len());
+    println!("accuracy     : {acc:.4}");
+    println!("baseline     : {base:.4}");
+    println!("relative     : {:.2}%", acc / base * 100.0);
+    println!("elapsed      : {:.2?}", t0.elapsed());
+    Ok(())
+}
+
+/// The exact configuration mixes from the paper's Table 3.
+pub fn table3_rows() -> Vec<&'static str> {
+    vec![
+        "FL(4,8)|FL(4,9)|FL(4,8)|FL(4,9)",
+        "FL(4,9)",
+        "I(4,8)|I(4,9)|I(4,8)|I(4,9)",
+        "I(4,9)",
+        "I(5,10)",
+    ]
+}
+
+/// The exact configuration mixes from the paper's Table 4.
+pub fn table4_rows() -> Vec<&'static str> {
+    vec![
+        "FI(5,8)|FI(5,8)|FI(6,8)|FI(6,8)",
+        "FI(6,8)|FI(6,8)|H(8,8,14)|H(8,8,14)",
+        "H(6,8,12)|H(6,8,12)|H(8,8,14)|H(8,8,14)",
+        "FI(6,8)",
+    ]
+}
+
+fn cmd_table(args: &Args, float_table: bool) -> Result<()> {
+    let rows = if float_table { table3_rows() } else { table4_rows() };
+    let (no, what) = if float_table {
+        ("Table 3", "floating-point")
+    } else {
+        ("Table 4", "fixed-point")
+    };
+    let n = args.usize("n", 2_000);
+    let threads = args.usize("threads", 0);
+    let mut ev = evaluator(n, threads, true)?;
+    let base = ev.accuracy(&NetConfig::uniform(ArithKind::Float32))?;
+    println!("{no} — classification accuracy, {what} configurations");
+    println!("(n = {} test images, float32 baseline = {base:.4})\n",
+             ev.subset.len());
+    println!("{:<48} {:>9} {:>10}", "CONV1 | CONV2 | FC1 | FC2",
+             "accuracy", "relative");
+    println!("{}", "-".repeat(70));
+    for row in rows {
+        let cfg = NetConfig::parse(row).map_err(|e| anyhow::anyhow!(e))?;
+        let t0 = Instant::now();
+        let acc = ev.accuracy(&cfg)?;
+        println!("{:<48} {:>9.4} {:>9.2}%   ({:.1?})", row, acc,
+                 acc / base * 100.0, t0.elapsed());
+    }
+    Ok(())
+}
+
+fn cmd_hw_report(args: &Args) -> Result<()> {
+    let kinds: Vec<(String, ArithKind)> = match args.opt_str("repr") {
+        Some(list) => list
+            .split(';')
+            .map(|s| {
+                ArithKind::parse(s.trim())
+                    .map(|k| (s.trim().to_string(), k))
+                    .map_err(|e| anyhow::anyhow!(e))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => table5_kinds()
+            .into_iter()
+            .map(|(n, k)| (n.to_string(), k))
+            .collect(),
+    };
+    let refs: Vec<(&str, ArithKind)> =
+        kinds.iter().map(|(n, k)| (n.as_str(), *k)).collect();
+    println!(
+        "Table 5 — hardware cost of the {}-PE datapath on {} \
+         (analytical model, see DESIGN.md §3)\n",
+        N_PE, ARRIA10.name
+    );
+    print!("{}", format_table(&hw_report(&refs)));
+    Ok(())
+}
+
+fn cmd_netlist(args: &Args) -> Result<()> {
+    let kind = ArithKind::parse(
+        args.opt_str("repr").context("--repr required")?,
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let n_pe = args.usize("n-pe", N_PE);
+    print!("{}", datapath_verilog(&kind, n_pe));
+    let dp = Datapath::synthesize(&kind, n_pe);
+    eprintln!(
+        "// model: {:.0} ALMs, {} DSPs, {:.1} MHz, {:.2} W",
+        dp.alms, dp.dsps, dp.fmax_mhz, dp.power_w
+    );
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    let mut opts = ExploreOpts::default();
+    let mut subset = args.usize("subset", 400);
+    if let Some(f) = args.opt_str("config-file") {
+        let doc = TomlDoc::parse(&std::fs::read_to_string(f)?)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let fc = ExploreFileConfig::from_toml(&doc)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        opts = fc.opts;
+        subset = fc.subset;
+    }
+    opts.accuracy_bound = args.f64("bound", opts.accuracy_bound);
+    if args.switch("with-approx") {
+        opts.families = vec![
+            Family::Fixed,
+            Family::Float,
+            Family::FixedDrum,
+            Family::FloatCfpu,
+        ];
+    }
+    if args.switch("no-second-pass") {
+        opts.second_pass = false;
+    }
+    let threads = args.usize("threads", 0);
+
+    let (_, dcnn, ds) = load_all()?;
+    let ranges = profile_ranges(&dcnn, &ds, 1_000, threads);
+    let mut ev = evaluator(subset, threads, !args.switch("engine"))?;
+
+    println!("§4.2 exploration: bound {:.1}%, subset {}, families {:?}",
+             opts.accuracy_bound * 100.0, subset, opts.families);
+    let t0 = Instant::now();
+    let res = explore(&mut ev, &ranges, &opts)?;
+    println!("\nbaseline accuracy (subset): {:.4}", res.baseline);
+    println!("pass 1 choice : {}   (accuracy {:.4})", res.pass1.name(),
+             res.pass1_accuracy);
+    println!("pass 2 choice : {}   (accuracy {:.4})", res.chosen.name(),
+             res.accuracy);
+    println!("evaluations   : {} distinct configs in {:.1?}", res.evals,
+             t0.elapsed());
+
+    // re-score the frontier on the full test set
+    let full = ev.accuracy_full(&res.chosen)?;
+    let full_base =
+        ev.accuracy_full(&NetConfig::uniform(ArithKind::Float32))?;
+    println!("full test set : {:.4} (baseline {:.4}, relative {:.2}%)",
+             full, full_base, full / full_base * 100.0);
+
+    if args.switch("trace") {
+        println!("\ntrace:");
+        for t in &res.trace {
+            println!(
+                "  pass{} part{} {:<14} acc {:.4} cost {:.4} {}{}",
+                t.pass, t.part, t.candidate, t.accuracy, t.cost,
+                if t.feasible { "feasible" } else { "infeasible" },
+                if t.chosen { "  <= chosen" } else { "" }
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut sopts = ServerOpts::default();
+    if let Some(f) = args.opt_str("config-file") {
+        let doc = TomlDoc::parse(&std::fs::read_to_string(f)?)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let fc = ServeFileConfig::from_toml(&doc)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        sopts.configs = fc.configs;
+        sopts.max_batch = fc.max_batch;
+        sopts.max_wait = fc.max_wait;
+        sopts.queue_capacity = fc.queue_capacity;
+        sopts.engine_workers = fc.engine_workers;
+        sopts.use_pjrt = fc.use_pjrt;
+    }
+    if let Some(list) = args.opt_str("configs") {
+        sopts.configs = list
+            .split(';')
+            .map(|s| NetConfig::parse(s.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    sopts.max_batch = args.usize("max-batch", sopts.max_batch);
+    sopts.max_wait = Duration::from_micros(
+        (args.f64("max-wait-ms", sopts.max_wait.as_secs_f64() * 1e3)
+            * 1e3) as u64,
+    );
+    sopts.engine_workers =
+        args.usize("engine-workers", sopts.engine_workers);
+    if args.switch("no-pjrt") {
+        sopts.use_pjrt = false;
+    }
+    let requests = args.usize("requests", 2_000);
+    let rate = args.f64("rate", 500.0); // req/s, open loop
+
+    println!("serving benchmark: {requests} requests at {rate} req/s \
+              over configs {:?}",
+             sopts.configs.iter().map(|c| c.name()).collect::<Vec<_>>());
+    println!("batching: max_batch {}, max_wait {:?}, pjrt {}",
+             sopts.max_batch, sopts.max_wait, sopts.use_pjrt);
+
+    let n_cfg = sopts.configs.len();
+    let server = Server::start(sopts)?;
+    let metrics = server.metrics.clone();
+    let (tx, rx) = channel();
+    let mut rng = Rng::new(99);
+    let (images, labels) = synth::generate(256, 4242);
+
+    let t0 = Instant::now();
+    let gap = Duration::from_secs_f64(1.0 / rate.max(1.0));
+    let mut next = Instant::now();
+    let mut rejected = 0usize;
+    for i in 0..requests {
+        let now = Instant::now();
+        if now < next {
+            std::thread::sleep(next - now);
+        }
+        next += gap;
+        let img_idx = i % 256;
+        let img: Vec<f32> = images[img_idx * 784..(img_idx + 1) * 784]
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect();
+        let cfg = rng.below(n_cfg as u64) as usize;
+        if server.router.submit(cfg, img, tx.clone()).is_err() {
+            rejected += 1;
+        }
+    }
+    drop(tx);
+
+    // collect responses (ids are sequential == submission order)
+    let mut correct = 0usize;
+    let mut got = 0usize;
+    while got + rejected < requests {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(resp) => {
+                got += 1;
+                let lbl = labels[(resp.id as usize) % 256] as usize;
+                if resp.pred == lbl {
+                    correct += 1;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let wall = t0.elapsed();
+    server.shutdown();
+
+    println!("\n{}", "-".repeat(60));
+    println!("completed {got} (rejected {rejected}) in {:.2}s — \
+              offered {rate} req/s, served {:.1} req/s",
+             wall.as_secs_f64(),
+             got as f64 / wall.as_secs_f64().max(1e-9));
+    println!("stream accuracy {:.3}",
+             correct as f64 / got.max(1) as f64);
+    println!("{}", metrics.summary(wall));
+    Ok(())
+}

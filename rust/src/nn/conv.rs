@@ -1,0 +1,91 @@
+//! im2col patch extraction — stride-1, zero-padded, patch layout
+//! (ky, kx, c) fastest-last, identical to `python/compile/model.py::im2col`
+//! so weight tensors interchange between the PJRT artifacts and this
+//! engine.
+
+use super::tensor::Tensor;
+
+/// [B,H,W,C] -> [B*H*W, kh*kw*C] patches (stride 1, zero padding `pad`).
+pub fn im2col(x: &Tensor, kh: usize, kw: usize, pad: usize) -> Tensor {
+    assert_eq!(x.ndim(), 4, "im2col expects [B,H,W,C]");
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let kcols = kh * kw * c;
+    let mut out = vec![0.0f32; b * h * w * kcols];
+    let xs = &x.data;
+
+    for bi in 0..b {
+        let xbase = bi * h * w * c;
+        let obase = bi * h * w * kcols;
+        for oy in 0..h {
+            for ox in 0..w {
+                let orow = obase + (oy * w + ox) * kcols;
+                for ky in 0..kh {
+                    let iy = oy as isize + ky as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // zero padding: leave zeros
+                    }
+                    let iy = iy as usize;
+                    for kx in 0..kw {
+                        let ix = ox as isize + kx as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let ix = ix as usize;
+                        let src = xbase + (iy * w + ix) * c;
+                        let dst = orow + (ky * kw + kx) * c;
+                        out[dst..dst + c]
+                            .copy_from_slice(&xs[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![b * h * w, kcols], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_python() {
+        // same fixture as python/tests/test_model.py::test_im2col_layout
+        let (b, h, w, c) = (1, 4, 4, 2);
+        let data: Vec<f32> = (0..(b * h * w * c)).map(|v| v as f32).collect();
+        let x = Tensor::new(vec![b, h, w, c], data);
+        let cols = im2col(&x, 3, 3, 1);
+        assert_eq!(cols.shape, vec![16, 18]);
+        // patch at (y=1, x=1): center offset (ky=1, kx=1) is x[0,1,1,:]
+        let patch = &cols.data[(1 * 4 + 1) * 18..(1 * 4 + 1 + 1) * 18];
+        let center = &patch[(1 * 3 + 1) * 2..(1 * 3 + 1) * 2 + 2];
+        let want = &x.data[(1 * 4 + 1) * 2..(1 * 4 + 1) * 2 + 2];
+        assert_eq!(center, want);
+        // top-left of patch (0,0) is padding
+        let p00 = &cols.data[0..18];
+        assert_eq!(&p00[0..2], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn identity_kernel_1x1() {
+        let x = Tensor::new(vec![1, 2, 2, 3],
+                            (0..12).map(|v| v as f32).collect());
+        let cols = im2col(&x, 1, 1, 0);
+        assert_eq!(cols.shape, vec![4, 3]);
+        assert_eq!(cols.data, x.data);
+    }
+
+    #[test]
+    fn batch_independence() {
+        let mut d = vec![0.0f32; 2 * 3 * 3 * 1];
+        for (i, v) in d.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let x = Tensor::new(vec![2, 3, 3, 1], d.clone());
+        let cols = im2col(&x, 3, 3, 1);
+        // batch 1 patches only reference batch-1 pixels (>= 9)
+        let b1 = &cols.data[9 * 9..];
+        for &v in b1 {
+            assert!(v == 0.0 || v >= 9.0, "batch leakage: {v}");
+        }
+    }
+}

@@ -1,0 +1,495 @@
+//! Monomorphized GEMM kernels — one per arithmetic provider, no dispatch
+//! inside MAC loops.  This is the L3 performance hot path (§Perf in
+//! EXPERIMENTS.md records the optimization iterations).
+//!
+//! All kernels compute `out[m,n] = quant(x)[m,k] · w[k,n]` with *wide*
+//! accumulation (i64 for fixed-point codes, f64 for float lattices),
+//! mirroring the widened-partial-sum datapath of the paper (§4.2) and the
+//! f32-accumulation semantics of the PJRT artifacts.
+//!
+//! Key optimizations (kept because they measured >5% each, see
+//! EXPERIMENTS.md §Perf):
+//!   * operand conditioning is hoisted out of the inner loop — quantize /
+//!     encode / DRUM-condition each operand once (O(mk + kn)), so inner
+//!     loops are plain integer/float MACs;
+//!   * row-parallel execution over a scoped thread pool;
+//!   * 4-wide j-unrolling on the integer kernels (autovectorizes).
+
+use crate::approx::arith::ArithKind;
+use crate::approx::cfpu::CfpuMul;
+use crate::approx::drum::{drum_approx_operand, DrumMul};
+use crate::numeric::{BinXnor, FixedPoint, FloatRep, Representation};
+
+/// Threads used by row-parallel GEMM (0 = all available cores).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// `out = quant(x) @ w` for any provider.  `w` must already be quantized
+/// (the layer does this once at load time).  `out.len() == m * n`.
+pub fn gemm(kind: &ArithKind, x: &[f32], w: &[f32], m: usize, k: usize,
+            n: usize, out: &mut [f32], threads: usize) {
+    assert_eq!(x.len(), m * k, "x shape mismatch");
+    assert_eq!(w.len(), k * n, "w shape mismatch");
+    assert_eq!(out.len(), m * n, "out shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    match kind {
+        ArithKind::Float32 => gemm_f32(x, w, m, k, n, out, threads),
+        ArithKind::FixedExact(rep) => {
+            let xc = encode_fixed(rep, x);
+            let wc = encode_fixed(rep, w);
+            gemm_int(&xc, &wc, m, k, n, out, 2 * rep.f_bits, threads);
+        }
+        ArithKind::FixedDrum(d) => {
+            let xc = encode_fixed_drum(d, x);
+            let wc = encode_fixed_drum(d, w);
+            gemm_int(&xc, &wc, m, k, n, out, 2 * d.rep.f_bits, threads);
+        }
+        ArithKind::FloatExact(rep) => {
+            let xq = quantize_f64(rep, x);
+            let wq = quantize_f64(rep, w);
+            gemm_f64(&xq, &wq, m, k, n, out, threads);
+        }
+        ArithKind::FloatCfpu(c) => {
+            gemm_cfpu(c, x, w, m, k, n, out, threads);
+        }
+        ArithKind::Binary => gemm_binary(x, w, m, k, n, out, threads),
+    }
+}
+
+/// Split `out` into row chunks and run `body(row0, rows_chunk)` on a scoped
+/// thread pool.
+fn row_parallel<F>(out: &mut [f32], m: usize, n: usize, threads: usize,
+                   body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let threads = threads.min(m.max(1));
+    if threads <= 1 || m * n < 16 * 1024 {
+        body(0, out);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let body = &body;
+            s.spawn(move || body(t * rows_per, chunk));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// float32 baseline
+// ---------------------------------------------------------------------------
+
+fn gemm_f32(x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
+            out: &mut [f32], threads: usize) {
+    row_parallel(out, m, n, threads, |row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            let xrow = &x[(row0 + r) * k..(row0 + r + 1) * k];
+            orow.fill(0.0);
+            // (i,k,j) loop order: stream w rows, accumulate into out row —
+            // autovectorizes on the j axis.
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// fixed-point code paths (exact and DRUM)
+// ---------------------------------------------------------------------------
+
+/// Signed magnitude code: sign(x) * code_of(|x|); fits i32 for i+f <= 30.
+fn encode_fixed(rep: &FixedPoint, xs: &[f32]) -> Vec<i32> {
+    xs.iter()
+        .map(|&x| {
+            let k = rep.code_of(x) as i32;
+            if x < 0.0 {
+                -k
+            } else {
+                k
+            }
+        })
+        .collect()
+}
+
+/// Signed DRUM-conditioned code: conditioning commutes with the product
+/// (drum_mul(a,b) = approx(a) * approx(b)), so hoisting it out of the MAC
+/// loop is exact, not an approximation of the approximation.
+fn encode_fixed_drum(d: &DrumMul, xs: &[f32]) -> Vec<i32> {
+    xs.iter()
+        .map(|&x| {
+            let k = drum_approx_operand(d.rep.code_of(x), d.t) as i32;
+            if x < 0.0 {
+                -k
+            } else {
+                k
+            }
+        })
+        .collect()
+}
+
+/// Integer GEMM over signed codes with i64 accumulation; result scaled by
+/// 2^-frac2 (`frac2 = 2f`: products carry doubled fractional bits).
+fn gemm_int(xc: &[i32], wc: &[i32], m: usize, k: usize, n: usize,
+            out: &mut [f32], frac2: u32, threads: usize) {
+    let inv = 1.0f64 / (1u64 << frac2) as f64;
+    row_parallel(out, m, n, threads, |row0, chunk| {
+        let mut acc = vec![0i64; n];
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            acc.fill(0);
+            let xrow = &xc[(row0 + r) * k..(row0 + r + 1) * k];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0 {
+                    continue;
+                }
+                let xv = xv as i64;
+                let wrow = &wc[kk * n..(kk + 1) * n];
+                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                    *a += xv * wv as i64;
+                }
+            }
+            for (o, &a) in orow.iter_mut().zip(&acc) {
+                *o = (a as f64 * inv) as f32;
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// float lattice paths
+// ---------------------------------------------------------------------------
+
+fn quantize_f64(rep: &FloatRep, xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&x| rep.quantize_f64(x as f64)).collect()
+}
+
+fn gemm_f64(xq: &[f64], wq: &[f64], m: usize, k: usize, n: usize,
+            out: &mut [f32], threads: usize) {
+    row_parallel(out, m, n, threads, |row0, chunk| {
+        let mut acc = vec![0f64; n];
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            acc.fill(0.0);
+            let xrow = &xq[(row0 + r) * k..(row0 + r + 1) * k];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &wq[kk * n..(kk + 1) * n];
+                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                    *a += xv * wv;
+                }
+            }
+            for (o, &a) in orow.iter_mut().zip(&acc) {
+                *o = a as f32;
+            }
+        }
+    });
+}
+
+/// Pre-conditioned CFPU operand (§Perf iteration 4): field extraction,
+/// top-w classification and the power-of-two exponent factor are hoisted
+/// out of the MAC loop, so the inner loop is a 3-way class dispatch with
+/// one multiply on the approximate paths and a bit-trick re-quantization
+/// on the exact-fallback path.
+#[derive(Clone, Copy)]
+struct CfpuOp {
+    /// decoded signed value (0.0 for the zero encoding)
+    dec: f64,
+    /// 2^(unbiased exponent) — the factor the skip path multiplies by
+    pow: f64,
+    /// 0: top-w mantissa bits all zero (operand ~ 2^e, round down)
+    /// 1: all one (operand ~ 2^(e+1), round up)
+    /// 2: neither -> exact multiply path
+    class: u8,
+}
+
+fn condition_cfpu(c: &CfpuMul, xs: &[f32]) -> Vec<CfpuOp> {
+    let (e, m) = (c.rep.e_bits, c.rep.m_bits);
+    let man_mask = (1u64 << m) - 1;
+    let bias = c.rep.bias();
+    xs.iter()
+        .map(|&x| {
+            let bits = c.rep.encode(x);
+            let field = ((bits >> m) & ((1u64 << e) - 1)) as i32;
+            if field == 0 {
+                return CfpuOp { dec: 0.0, pow: 0.0, class: 2 };
+            }
+            let man = bits & man_mask;
+            let class = if c.w > m {
+                2
+            } else {
+                let top = (1u64 << c.w) - 1;
+                let t = (man >> (m - c.w)) & top;
+                if t == 0 {
+                    0
+                } else if t == top {
+                    1
+                } else {
+                    2
+                }
+            };
+            CfpuOp {
+                dec: c.rep.decode(bits) as f64,
+                pow: crate::numeric::float::exp2i(field - bias),
+                class,
+            }
+        })
+        .collect()
+}
+
+/// One CFPU product from pre-conditioned operands.  Matches
+/// `CfpuMul::mul_bits` bit-for-bit (the gemm unit tests pin this against
+/// the scalar path).
+#[inline]
+fn cfpu_product(c: &CfpuMul, x: &CfpuOp, w: &CfpuOp) -> f64 {
+    if x.dec == 0.0 || w.dec == 0.0 {
+        return 0.0;
+    }
+    // skip path: |kept| * 2^(dropped exponent) [ * 2 when rounding up ]
+    let (val, sign_src) = match (w.class, x.class) {
+        (0, _) => (x.dec.abs() * w.pow, x.dec * w.dec),
+        (1, _) => (x.dec.abs() * w.pow * 2.0, x.dec * w.dec),
+        (_, 0) => (w.dec.abs() * x.pow, x.dec * w.dec),
+        (_, 1) => (w.dec.abs() * x.pow * 2.0, x.dec * w.dec),
+        _ => {
+            // exact fallback: multiply + RNE re-quantization
+            return c.rep.quantize_f64(x.dec * w.dec);
+        }
+    };
+    let clamped = cfpu_clamp(c, val);
+    if sign_src < 0.0 {
+        -clamped
+    } else {
+        clamped
+    }
+}
+
+#[inline]
+fn cfpu_clamp(c: &CfpuMul, y: f64) -> f64 {
+    let mx = c.rep.max_finite();
+    if y > mx {
+        return mx;
+    }
+    let mn = c.rep.min_normal();
+    if y < mn {
+        return if y * 2.0 >= mn { mn } else { 0.0 };
+    }
+    y
+}
+
+fn gemm_cfpu(c: &CfpuMul, xs: &[f32], ws: &[f32], m: usize, k: usize,
+             n: usize, out: &mut [f32], threads: usize) {
+    let xo = condition_cfpu(c, xs);
+    let wo = condition_cfpu(c, ws);
+    row_parallel(out, m, n, threads, |row0, chunk| {
+        let mut acc = vec![0f64; n];
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            acc.fill(0.0);
+            let xrow = &xo[(row0 + r) * k..(row0 + r + 1) * k];
+            for (kk, xv) in xrow.iter().enumerate() {
+                if xv.dec == 0.0 {
+                    continue;
+                }
+                let wrow = &wo[kk * n..(kk + 1) * n];
+                for (a, wv) in acc.iter_mut().zip(wrow) {
+                    *a += cfpu_product(c, xv, wv);
+                }
+            }
+            for (o, &a) in orow.iter_mut().zip(&acc) {
+                *o = a as f32;
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// binary XNOR path (paper §4.5): bit-packed popcount GEMM
+// ---------------------------------------------------------------------------
+
+fn gemm_binary(x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
+               out: &mut [f32], threads: usize) {
+    let words = k.div_ceil(64);
+    // pack x rows and w columns as sign bitmaps
+    let mut xp = vec![0u64; m * words];
+    for r in 0..m {
+        for kk in 0..k {
+            let bit = BinXnor::binarize(x[r * k + kk]);
+            xp[r * words + kk / 64] |= bit << (kk % 64);
+        }
+    }
+    let mut wp = vec![0u64; n * words];
+    for j in 0..n {
+        for kk in 0..k {
+            let bit = BinXnor::binarize(w[kk * n + j]);
+            wp[j * words + kk / 64] |= bit << (kk % 64);
+        }
+    }
+    // tail mask: bits >= k in the last word must not count as agreements
+    let tail_bits = k % 64;
+    let tail_mask = if tail_bits == 0 { u64::MAX } else { (1u64 << tail_bits) - 1 };
+    row_parallel(out, m, n, threads, |row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            let xr = &xp[(row0 + r) * words..(row0 + r + 1) * words];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let wc = &wp[j * words..(j + 1) * words];
+                let mut agree = 0u32;
+                for ww in 0..words {
+                    let mut eq = !(xr[ww] ^ wc[ww]);
+                    if ww == words - 1 {
+                        eq &= tail_mask;
+                    }
+                    agree += eq.count_ones();
+                }
+                // dot of ±1 vectors = agreements - disagreements
+                *o = (2 * agree as i64 - k as i64) as f32;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn naive(kind: &ArithKind, x: &[f32], w: &[f32], m: usize, k: usize,
+             n: usize) -> Vec<f32> {
+        // reference: scalar quantize + wide scalar mul + f64 accumulate
+        let mut out = vec![0.0f32; m * n];
+        for r in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for kk in 0..k {
+                    let a = kind.quantize(x[r * k + kk]);
+                    acc += kind.mul_wide(a, w[kk * n + j]);
+                }
+                out[r * n + j] = acc as f32;
+            }
+        }
+        out
+    }
+
+    fn rand_mats(seed: u64, m: usize, k: usize, n: usize)
+                 -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..m * k).map(|_| (rng.normal() * 2.0) as f32)
+            .collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        (x, w)
+    }
+
+    fn check_kind(kind: ArithKind, seed: u64) {
+        let (m, k, n) = (13, 37, 11);
+        let (x, mut w) = rand_mats(seed, m, k, n);
+        // weights pre-quantized, as the layer contract requires
+        for wv in &mut w {
+            *wv = kind.quantize(*wv);
+        }
+        let mut out = vec![0.0; m * n];
+        gemm(&kind, &x, &w, m, k, n, &mut out, 1);
+        let want = naive(&kind, &x, &w, m, k, n);
+        for (idx, (g, ww)) in out.iter().zip(&want).enumerate() {
+            let tol = 1e-4 * ww.abs().max(1.0);
+            assert!(
+                (g - ww).abs() <= tol,
+                "{}: out[{idx}] = {g}, want {ww}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn f32_matches_naive() {
+        check_kind(ArithKind::Float32, 1);
+    }
+
+    #[test]
+    fn fixed_exact_matches_naive() {
+        check_kind(ArithKind::parse("FI(6,8)").unwrap(), 2);
+        check_kind(ArithKind::parse("FI(3,4)").unwrap(), 3);
+    }
+
+    #[test]
+    fn fixed_drum_matches_naive() {
+        check_kind(ArithKind::parse("H(6,8,6)").unwrap(), 4);
+        check_kind(ArithKind::parse("H(8,8,14)").unwrap(), 5);
+    }
+
+    #[test]
+    fn float_exact_matches_naive() {
+        check_kind(ArithKind::parse("FL(4,9)").unwrap(), 6);
+        check_kind(ArithKind::parse("FL(5,10)").unwrap(), 7);
+    }
+
+    #[test]
+    fn float_cfpu_matches_naive() {
+        check_kind(ArithKind::parse("I(5,10)").unwrap(), 8);
+        check_kind(ArithKind::parse("I(4,9,2)").unwrap(), 9);
+    }
+
+    #[test]
+    fn binary_matches_pm1_dot() {
+        let (m, k, n) = (5, 130, 7); // k > 2 words incl. tail
+        let (x, w) = rand_mats(10, m, k, n);
+        let mut out = vec![0.0; m * n];
+        gemm(&ArithKind::Binary, &x, &w, m, k, n, &mut out, 1);
+        for r in 0..m {
+            for j in 0..n {
+                let mut dot = 0f32;
+                for kk in 0..k {
+                    let a = if x[r * k + kk] >= 0.0 { 1.0 } else { -1.0 };
+                    let b = if w[kk * n + j] >= 0.0 { 1.0 } else { -1.0 };
+                    dot += a * b;
+                }
+                assert_eq!(out[r * n + j], dot, "r={r} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn multithreaded_matches_single() {
+        for kind in [
+            ArithKind::Float32,
+            ArithKind::parse("FI(6,8)").unwrap(),
+            ArithKind::parse("H(6,8,12)").unwrap(),
+            ArithKind::parse("FL(4,9)").unwrap(),
+        ] {
+            let (m, k, n) = (64, 100, 96); // big enough to engage threads
+            let (x, mut w) = rand_mats(11, m, k, n);
+            for wv in &mut w {
+                *wv = kind.quantize(*wv);
+            }
+            let mut a = vec![0.0; m * n];
+            let mut b = vec![0.0; m * n];
+            gemm(&kind, &x, &w, m, k, n, &mut a, 1);
+            gemm(&kind, &x, &w, m, k, n, &mut b, 4);
+            assert_eq!(a, b, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn zero_sized_edges() {
+        let kind = ArithKind::Float32;
+        let mut out = vec![0.0; 0];
+        gemm(&kind, &[], &[], 0, 0, 0, &mut out, 1);
+        let mut out1 = vec![0.0; 1];
+        gemm(&kind, &[2.0], &[3.0], 1, 1, 1, &mut out1, 1);
+        assert_eq!(out1[0], 6.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Elementwise / structural layers: bias add, ReLU, 2x2 max pooling,
+//! softmax.  All mirror `python/compile/model.py`.
+
+use super::tensor::Tensor;
+
+/// ReLU in place.
+pub fn relu(t: &mut Tensor) {
+    for v in &mut t.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Add a per-channel bias to the last axis.
+pub fn add_bias(t: &mut Tensor, bias: &[f32]) {
+    let c = *t.shape.last().expect("bias needs >= 1 axis");
+    assert_eq!(c, bias.len(), "bias length mismatch");
+    for row in t.data.chunks_mut(c) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// 2x2 max pooling, stride 2, [B,H,W,C] with even H and W.
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    assert_eq!(x.ndim(), 4);
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert!(h % 2 == 0 && w % 2 == 0, "maxpool2 needs even H, W");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
+    for bi in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let src = ((bi * h + y) * w + xx) * c;
+                let dst = ((bi * oh + y / 2) * ow + xx / 2) * c;
+                for ch in 0..c {
+                    let v = x.data[src + ch];
+                    if v > out[dst + ch] {
+                        out[dst + ch] = v;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![b, oh, ow, c], out)
+}
+
+/// Numerically-stable softmax over the last axis of a 2-D tensor.
+pub fn softmax(t: &Tensor) -> Tensor {
+    assert_eq!(t.ndim(), 2);
+    let c = t.shape[1];
+    let mut out = t.data.clone();
+    for row in out.chunks_mut(c) {
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    Tensor::new(t.shape.clone(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps() {
+        let mut t = Tensor::new(vec![4], vec![-1.0, 0.0, 2.0, -0.5]);
+        relu(&mut t);
+        assert_eq!(t.data, vec![0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn bias_broadcasts_last_axis() {
+        let mut t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        add_bias(&mut t, &[1.0, 2.0, 3.0]);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn maxpool_matches_python_fixture() {
+        // same as python test: arange(16) in [1,4,4,1] -> [[5,7],[13,15]]
+        let t = Tensor::new(vec![1, 4, 4, 1],
+                            (0..16).map(|v| v as f32).collect());
+        let p = maxpool2(&t);
+        assert_eq!(p.shape, vec![1, 2, 2, 1]);
+        assert_eq!(p.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn maxpool_multichannel() {
+        let mut d = vec![0.0f32; 2 * 2 * 2];
+        d[0 * 2 + 0] = 9.0; // (0,0,c0)
+        d[3 * 2 + 1] = 7.0; // (1,1,c1)
+        let t = Tensor::new(vec![1, 2, 2, 2], d);
+        let p = maxpool2(&t);
+        assert_eq!(p.data, vec![9.0, 7.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::new(vec![2, 3],
+                            vec![1.0, 2.0, 3.0, -5.0, 0.0, 5.0]);
+        let s = softmax(&t);
+        for row in s.data.chunks(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            assert!(row.iter().all(|&v| v > 0.0));
+        }
+        // monotone: larger logit -> larger probability
+        assert!(s.data[2] > s.data[1] && s.data[1] > s.data[0]);
+    }
+}

@@ -1,0 +1,158 @@
+//! LOPW weight-file loader — reads `artifacts/weights.bin` written by
+//! `python/compile/train.py::save_weights_bin`.
+//!
+//! Format: magic "LOPW", u32 version, u32 ntensors, then per tensor:
+//! u32 name_len, name bytes, u32 ndim, u32 dims[ndim], f32 data (LE).
+
+use super::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub const PARAM_NAMES: [&str; 8] = [
+    "conv1_w", "conv1_b", "conv2_w", "conv2_b",
+    "fc1_w", "fc1_b", "fc2_w", "fc2_b",
+];
+
+pub fn load_weights(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let raw = std::fs::read(path)
+        .with_context(|| format!("reading weights from {path:?}"))?;
+    parse_weights(&raw)
+}
+
+pub fn parse_weights(raw: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > raw.len() {
+            bail!("weights file truncated at byte {}", *off);
+        }
+        let s = &raw[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    let u32le = |off: &mut usize| -> Result<u32> {
+        Ok(u32::from_le_bytes(take(off, 4)?.try_into().unwrap()))
+    };
+
+    if take(&mut off, 4)? != b"LOPW" {
+        bail!("bad magic (expected LOPW)");
+    }
+    let ver = u32le(&mut off)?;
+    if ver != 1 {
+        bail!("unsupported LOPW version {ver}");
+    }
+    let ntensors = u32le(&mut off)? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..ntensors {
+        let nlen = u32le(&mut off)? as usize;
+        let name = String::from_utf8(take(&mut off, nlen)?.to_vec())
+            .context("tensor name is not utf-8")?;
+        let ndim = u32le(&mut off)? as usize;
+        if ndim > 8 {
+            bail!("implausible ndim {ndim} for tensor '{name}'");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(u32le(&mut off)? as usize);
+        }
+        let count: usize = dims.iter().product();
+        let bytes = take(&mut off, count * 4)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.insert(name, Tensor::new(dims, data));
+    }
+    if off != raw.len() {
+        bail!("{} trailing bytes in weights file", raw.len() - off);
+    }
+    Ok(out)
+}
+
+/// Validate the parameter set against the paper's Fig. 2 architecture.
+pub fn validate_dcnn(params: &BTreeMap<String, Tensor>) -> Result<()> {
+    let want: &[(&str, &[usize])] = &[
+        ("conv1_w", &[5, 5, 1, 32]),
+        ("conv1_b", &[32]),
+        ("conv2_w", &[5, 5, 32, 64]),
+        ("conv2_b", &[64]),
+        ("fc1_w", &[3136, 1024]),
+        ("fc1_b", &[1024]),
+        ("fc2_w", &[1024, 10]),
+        ("fc2_b", &[10]),
+    ];
+    for (name, shape) in want {
+        let t = params
+            .get(*name)
+            .with_context(|| format!("missing tensor '{name}'"))?;
+        if t.shape != *shape {
+            bail!(
+                "tensor '{name}' has shape {:?}, want {shape:?}",
+                t.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(tensors: &[(&str, Vec<usize>, Vec<f32>)]) -> Vec<u8> {
+        let mut raw = b"LOPW".to_vec();
+        raw.extend(1u32.to_le_bytes());
+        raw.extend((tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            raw.extend((name.len() as u32).to_le_bytes());
+            raw.extend(name.as_bytes());
+            raw.extend((dims.len() as u32).to_le_bytes());
+            for d in dims {
+                raw.extend((*d as u32).to_le_bytes());
+            }
+            for v in data {
+                raw.extend(v.to_le_bytes());
+            }
+        }
+        raw
+    }
+
+    #[test]
+    fn roundtrip() {
+        let raw = encode(&[
+            ("a", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            ("b", vec![3], vec![-1.0, 0.0, 1.0]),
+        ]);
+        let m = parse_weights(&raw).unwrap();
+        assert_eq!(m["a"].shape, vec![2, 2]);
+        assert_eq!(m["a"].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m["b"].data, vec![-1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_weights(b"NOPE").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut raw = encode(&[("a", vec![4], vec![1.0, 2.0, 3.0, 4.0])]);
+        raw.truncate(raw.len() - 3);
+        assert!(parse_weights(&raw).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut raw = encode(&[("a", vec![1], vec![1.0])]);
+        raw.push(0);
+        assert!(parse_weights(&raw).is_err());
+    }
+
+    #[test]
+    fn validates_architecture() {
+        let raw = encode(&[("conv1_w", vec![5, 5, 1, 32],
+                            vec![0.0; 800])]);
+        let m = parse_weights(&raw).unwrap();
+        assert!(validate_dcnn(&m).is_err()); // missing the rest
+    }
+}

@@ -1,0 +1,21 @@
+//! Bit-accurate NN inference engine — the Rust analogue of "LopPy
+//! integrated into an ML framework" (paper §4.3): the same DCNN the AOT
+//! artifacts implement, but with every MAC routed through a configurable
+//! (representation × arithmetic) provider, including the approximate
+//! multipliers the PJRT path cannot express.
+//!
+//! Layer semantics mirror `python/compile/model.py` exactly: values are
+//! snapped onto the representation lattice as they enter each layer's MAC
+//! array (weights/biases pre-quantized), partial sums accumulate wide
+//! (the paper widens the integral-bit BCI for partial-sum range, §4.2).
+
+pub mod conv;
+pub mod gemm;
+pub mod layers;
+pub mod loader;
+pub mod network;
+pub mod quantizer;
+pub mod tensor;
+
+pub use network::{Dcnn, LayerConfig, NetConfig};
+pub use tensor::Tensor;

@@ -1,0 +1,322 @@
+//! The paper's DCNN (Fig. 2) with per-layer arithmetic providers — the
+//! layer-wise *partition* of §3/§4.2: each layer is one part, each part has
+//! one (representation × arithmetic) domain.
+
+use super::conv::im2col;
+use super::gemm::gemm;
+use super::layers::{add_bias, maxpool2, relu};
+use super::loader::validate_dcnn;
+use super::quantizer::quantize_tensor;
+use super::tensor::Tensor;
+use crate::approx::arith::ArithKind;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+pub const LAYER_NAMES: [&str; 4] = ["conv1", "conv2", "fc1", "fc2"];
+
+/// One partition part = one layer's domain choice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerConfig {
+    pub arith: ArithKind,
+}
+
+/// A full network configuration (one provider per layer).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetConfig {
+    pub layers: [ArithKind; 4],
+}
+
+impl NetConfig {
+    pub fn uniform(kind: ArithKind) -> Self {
+        NetConfig { layers: [kind; 4] }
+    }
+
+    pub fn name(&self) -> String {
+        if self.layers.iter().all(|l| l == &self.layers[0]) {
+            self.layers[0].name()
+        } else {
+            self.layers.iter().map(|l| l.name()).collect::<Vec<_>>()
+                .join(" | ")
+        }
+    }
+
+    /// Parse "FI(6,8)" (uniform) or "FI(5,8)|FI(5,8)|FI(6,8)|FI(6,8)".
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let parts: Vec<&str> = s.split('|').map(str::trim).collect();
+        match parts.len() {
+            1 => Ok(NetConfig::uniform(ArithKind::parse(parts[0])?)),
+            4 => {
+                let mut layers = [ArithKind::Float32; 4];
+                for (l, p) in layers.iter_mut().zip(&parts) {
+                    *l = ArithKind::parse(p)?;
+                }
+                Ok(NetConfig { layers })
+            }
+            n => Err(format!("expected 1 or 4 layer configs, got {n}")),
+        }
+    }
+
+    /// True when every layer is PJRT-expressible (exact arithmetic).
+    pub fn pjrt_expressible(&self) -> bool {
+        self.layers.iter().all(|l| l.pjrt_expressible())
+    }
+}
+
+/// Trained float32 parameters + architecture checks.
+pub struct Dcnn {
+    pub params: BTreeMap<String, Tensor>,
+}
+
+/// Per-layer activation/weight ranges (reproduces paper Table 1).
+#[derive(Clone, Debug)]
+pub struct LayerRanges {
+    pub layer: &'static str,
+    pub w: (f32, f32),
+    pub b: (f32, f32),
+    pub a: (f32, f32), // pre-activation outputs (the WBA "activation")
+}
+
+impl LayerRanges {
+    pub fn combined(&self) -> (f32, f32) {
+        (
+            self.w.0.min(self.b.0).min(self.a.0),
+            self.w.1.max(self.b.1).max(self.a.1),
+        )
+    }
+}
+
+impl Dcnn {
+    pub fn new(params: BTreeMap<String, Tensor>) -> Result<Self> {
+        validate_dcnn(&params)?;
+        Ok(Dcnn { params })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Dcnn::new(super::loader::load_weights(path)?)
+    }
+
+    /// Quantize weights/biases for `cfg` and return a runnable network.
+    pub fn prepare(&self, cfg: NetConfig) -> PreparedNet {
+        let mut wq = Vec::with_capacity(4);
+        let mut bq = Vec::with_capacity(4);
+        for (li, lname) in LAYER_NAMES.iter().enumerate() {
+            let kind = &cfg.layers[li];
+            let w = &self.params[&format!("{lname}_w")];
+            let b = &self.params[&format!("{lname}_b")];
+            // conv weights flatten to (kh*kw*cin, cout) for the GEMM
+            let w2 = if w.ndim() == 4 {
+                let cout = w.shape[3];
+                let rows = w.len() / cout;
+                quantize_tensor(kind, w).reshape(vec![rows, cout])
+            } else {
+                quantize_tensor(kind, w)
+            };
+            wq.push(w2);
+            bq.push(quantize_tensor(kind, b));
+        }
+        PreparedNet { cfg, wq, bq }
+    }
+
+    /// Float32 forward that records per-layer WBA ranges (Table 1).
+    pub fn ranges(&self, x: &Tensor, threads: usize) -> Vec<LayerRanges> {
+        let net = self.prepare(NetConfig::uniform(ArithKind::Float32));
+        let (_, zs) = net.forward_capture(x, threads);
+        LAYER_NAMES
+            .iter()
+            .enumerate()
+            .map(|(li, lname)| {
+                let w = &self.params[&format!("{lname}_w")];
+                let b = &self.params[&format!("{lname}_b")];
+                LayerRanges {
+                    layer: LAYER_NAMES[li],
+                    w: w.minmax(),
+                    b: b.minmax(),
+                    a: zs[li],
+                }
+            })
+            .collect()
+    }
+}
+
+/// A network with weights snapped to a configuration, ready for inference.
+pub struct PreparedNet {
+    pub cfg: NetConfig,
+    wq: Vec<Tensor>, // flattened (rows, cout) weights, quantized
+    bq: Vec<Tensor>,
+}
+
+impl PreparedNet {
+    /// Forward pass: x is [B,28,28,1] in [0,1]; returns logits [B,10].
+    pub fn forward(&self, x: &Tensor, threads: usize) -> Tensor {
+        self.forward_capture(x, threads).0
+    }
+
+    /// Forward returning per-layer pre-activation (min,max) as well.
+    pub fn forward_capture(&self, x: &Tensor, threads: usize)
+                           -> (Tensor, Vec<(f32, f32)>) {
+        assert_eq!(x.ndim(), 4, "input must be [B,28,28,1]");
+        assert_eq!(&x.shape[1..], &[28, 28, 1]);
+        let b = x.shape[0];
+        let mut ranges = Vec::with_capacity(4);
+
+        // CONV1: quantization of the input happens inside gemm (the MAC
+        // entry point), matching model.py where cols are fake-quantized.
+        let mut z = self.conv_block(x, 0, 28, 32, threads);
+        ranges.push(z.minmax());
+        relu(&mut z);
+        let a = maxpool2(&z); // [B,14,14,32]
+
+        let mut z = self.conv_block(&a, 1, 14, 64, threads);
+        ranges.push(z.minmax());
+        relu(&mut z);
+        let a = maxpool2(&z); // [B,7,7,64]
+
+        // FC1: flatten (h, w, c) row-major — same layout as python
+        let a = a.reshape(vec![b, 3136]);
+        let mut z = self.fc_block(&a, 2, threads);
+        ranges.push(z.minmax());
+        relu(&mut z);
+
+        let z = self.fc_block(&z, 3, threads);
+        ranges.push(z.minmax());
+        (z, ranges)
+    }
+
+    fn conv_block(&self, x: &Tensor, li: usize, hw: usize, cout: usize,
+                  threads: usize) -> Tensor {
+        let b = x.shape[0];
+        let cols = im2col(x, 5, 5, 2);
+        let k = cols.shape[1];
+        let m = cols.shape[0];
+        let mut out = Tensor::zeros(vec![m, cout]);
+        gemm(&self.cfg.layers[li], &cols.data, &self.wq[li].data, m, k,
+             cout, &mut out.data, threads);
+        add_bias(&mut out, &self.bq[li].data);
+        out.reshape(vec![b, hw, hw, cout])
+    }
+
+    fn fc_block(&self, x: &Tensor, li: usize, threads: usize) -> Tensor {
+        let (m, k) = (x.shape[0], x.shape[1]);
+        let n = self.wq[li].shape[1];
+        let mut out = Tensor::zeros(vec![m, n]);
+        gemm(&self.cfg.layers[li], &x.data, &self.wq[li].data, m, k, n,
+             &mut out.data, threads);
+        add_bias(&mut out, &self.bq[li].data);
+        out
+    }
+
+    /// Classify: argmax of logits.
+    pub fn predict(&self, x: &Tensor, threads: usize) -> Vec<usize> {
+        self.forward(x, threads).argmax_rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    pub fn tiny_dcnn(seed: u64) -> Dcnn {
+        let mut rng = Rng::new(seed);
+        let mut t = |shape: Vec<usize>, sigma: f64| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape,
+                        (0..n).map(|_| (rng.normal() * sigma) as f32)
+                            .collect())
+        };
+        let mut params = BTreeMap::new();
+        params.insert("conv1_w".into(), t(vec![5, 5, 1, 32], 0.2));
+        params.insert("conv1_b".into(), t(vec![32], 0.05));
+        params.insert("conv2_w".into(), t(vec![5, 5, 32, 64], 0.05));
+        params.insert("conv2_b".into(), t(vec![64], 0.05));
+        params.insert("fc1_w".into(), t(vec![3136, 1024], 0.02));
+        params.insert("fc1_b".into(), t(vec![1024], 0.02));
+        params.insert("fc2_w".into(), t(vec![1024, 10], 0.05));
+        params.insert("fc2_b".into(), t(vec![10], 0.02));
+        Dcnn::new(params).unwrap()
+    }
+
+    fn rand_input(b: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(vec![b, 28, 28, 1],
+                    (0..b * 784).map(|_| rng.range_f32(0.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let net = tiny_dcnn(1).prepare(NetConfig::uniform(ArithKind::Float32));
+        let logits = net.forward(&rand_input(3, 2), 1);
+        assert_eq!(logits.shape, vec![3, 10]);
+    }
+
+    #[test]
+    fn quantized_forward_close_to_f32_with_wide_config() {
+        let dcnn = tiny_dcnn(3);
+        let x = rand_input(2, 4);
+        let base = dcnn
+            .prepare(NetConfig::uniform(ArithKind::Float32))
+            .forward(&x, 1);
+        let fine = dcnn
+            .prepare(NetConfig::uniform(
+                ArithKind::parse("FI(8,14)").unwrap(),
+            ))
+            .forward(&x, 1);
+        for (a, b) in base.data.iter().zip(&fine.data) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn coarse_quantization_perturbs() {
+        let dcnn = tiny_dcnn(5);
+        let x = rand_input(2, 6);
+        let base = dcnn
+            .prepare(NetConfig::uniform(ArithKind::Float32))
+            .forward(&x, 1);
+        let coarse = dcnn
+            .prepare(NetConfig::uniform(ArithKind::parse("FI(1,1)").unwrap()))
+            .forward(&x, 1);
+        let diff: f32 = base
+            .data
+            .iter()
+            .zip(&coarse.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 0.1, "coarse quantization had no effect ({diff})");
+    }
+
+    #[test]
+    fn mixed_config_parses_and_runs() {
+        let cfg = NetConfig::parse("FI(6,8)|FI(6,8)|H(8,8,14)|H(8,8,14)")
+            .unwrap();
+        assert!(!cfg.pjrt_expressible());
+        let net = tiny_dcnn(7).prepare(cfg);
+        let out = net.forward(&rand_input(1, 8), 1);
+        assert_eq!(out.shape, vec![1, 10]);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn ranges_structure() {
+        let dcnn = tiny_dcnn(9);
+        let r = dcnn.ranges(&rand_input(4, 10), 1);
+        assert_eq!(r.len(), 4);
+        for lr in &r {
+            assert!(lr.w.0 <= lr.w.1);
+            let (lo, hi) = lr.combined();
+            assert!(lo <= hi);
+        }
+        // conv1 pre-activations on positive inputs: max must be > 0
+        assert!(r[0].a.1 > 0.0);
+    }
+
+    #[test]
+    fn threads_do_not_change_results() {
+        let dcnn = tiny_dcnn(11);
+        let x = rand_input(4, 12);
+        let cfg = NetConfig::uniform(ArithKind::parse("FI(6,8)").unwrap());
+        let a = dcnn.prepare(cfg).forward(&x, 1);
+        let b = dcnn.prepare(cfg).forward(&x, 4);
+        assert_eq!(a.data, b.data);
+    }
+}

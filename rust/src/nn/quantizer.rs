@@ -1,0 +1,62 @@
+//! Weight quantization: snap trained float32 parameters onto a target
+//! representation once, ahead of inference — the paper's "converting some
+//! pre-trained floating-point weights to fixed-point numbers with a
+//! predefined bit-width" (§1), applied per partition part.
+
+use super::tensor::Tensor;
+use crate::approx::arith::ArithKind;
+
+/// Quantize a tensor onto the provider's lattice (returns a new tensor).
+pub fn quantize_tensor(kind: &ArithKind, t: &Tensor) -> Tensor {
+    let mut out = t.clone();
+    for v in &mut out.data {
+        *v = kind.quantize(*v);
+    }
+    out
+}
+
+/// Mean squared quantization error — a quick proxy used in reports.
+pub fn quantization_mse(kind: &ArithKind, t: &Tensor) -> f64 {
+    if t.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0f64;
+    for &v in &t.data {
+        let d = (kind.quantize(v) - v) as f64;
+        acc += d * d;
+    }
+    acc / t.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn randn(n: usize, seed: u64, sigma: f64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(vec![n],
+                    (0..n).map(|_| (rng.normal() * sigma) as f32).collect())
+    }
+
+    #[test]
+    fn quantized_values_on_lattice() {
+        let kind = ArithKind::parse("FI(4,6)").unwrap();
+        let t = randn(500, 1, 3.0);
+        let q = quantize_tensor(&kind, &t);
+        for &v in &q.data {
+            assert_eq!(kind.quantize(v), v);
+        }
+    }
+
+    #[test]
+    fn mse_decreases_with_more_bits() {
+        let t = randn(2000, 2, 1.0);
+        let coarse = quantization_mse(&ArithKind::parse("FI(2,3)").unwrap(),
+                                      &t);
+        let fine = quantization_mse(&ArithKind::parse("FI(2,10)").unwrap(),
+                                    &t);
+        assert!(fine < coarse, "fine {fine} >= coarse {coarse}");
+        assert!(quantization_mse(&ArithKind::Float32, &t) == 0.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Dense row-major f32 tensor — the engine's only data type (bit patterns
+//! of custom representations are materialized transiently inside GEMM
+//! kernels, not stored).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "cannot reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        self.shape = shape;
+        self
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for d in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[d] = s[d + 1] * self.shape[d + 1];
+        }
+        s
+    }
+
+    /// (min, max) over all elements; (0, 0) when empty.
+    pub fn minmax(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in &self.data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if self.data.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Argmax per row of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.ndim(), 2);
+        let (n, c) = (self.shape[0], self.shape[1]);
+        let mut out = Vec::with_capacity(n);
+        for r in 0..n {
+            let row = &self.data[r * c..(r + 1) * c];
+            let mut best = 0;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            out.push(best);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(vec![2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let r = t.clone().reshape(vec![3, 2]);
+        assert_eq!(r.data, t.data);
+        assert_eq!(r.shape, vec![3, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot reshape")]
+    fn reshape_bad_count() {
+        Tensor::zeros(vec![2, 2]).reshape(vec![5]);
+    }
+
+    #[test]
+    fn minmax_and_argmax() {
+        let t = Tensor::new(vec![2, 3],
+                            vec![1.0, 5.0, 2.0, -7.0, 0.0, 3.0]);
+        assert_eq!(t.minmax(), (-7.0, 5.0));
+        assert_eq!(t.argmax_rows(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,94 @@
+//! BinXnor: the paper's §4.5 extensibility example — a binary (0/1)
+//! representation whose multiply is XNOR, as in binarized neural networks
+//! (Courbariaux et al.).  It is "a new data representation based on
+//! fixed-point in which the number of integral bits is one and there are
+//! no fractional bits", with `__mul__` overridden to XNOR.
+
+use super::traits::Representation;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct BinXnor;
+
+impl BinXnor {
+    /// The XNOR "multiply": 1 when both bits agree, else 0.
+    #[inline]
+    pub fn xnor_mul(a: u64, b: u64) -> u64 {
+        !(a ^ b) & 1
+    }
+
+    /// Binarize a real value: x >= threshold -> 1 else 0.
+    #[inline]
+    pub fn binarize(x: f32) -> u64 {
+        (x >= 0.0) as u64
+    }
+
+    /// The +1/-1 interpretation used when mapping XNOR counts back to
+    /// real-valued dot products: popcount(xnor) * 2 - n.
+    #[inline]
+    pub fn to_pm1(bit: u64) -> f32 {
+        if bit == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+impl Representation for BinXnor {
+    fn name(&self) -> String {
+        "BinXNOR".to_string()
+    }
+
+    fn total_bits(&self) -> u32 {
+        1
+    }
+
+    fn quantize(&self, x: f32) -> f32 {
+        Self::to_pm1(Self::binarize(x))
+    }
+
+    fn encode(&self, x: f32) -> u64 {
+        Self::binarize(x)
+    }
+
+    fn decode(&self, bits: u64) -> f32 {
+        Self::to_pm1(bits & 1)
+    }
+
+    fn max_value(&self) -> f32 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xnor_truth_table() {
+        assert_eq!(BinXnor::xnor_mul(0, 0), 1);
+        assert_eq!(BinXnor::xnor_mul(0, 1), 0);
+        assert_eq!(BinXnor::xnor_mul(1, 0), 0);
+        assert_eq!(BinXnor::xnor_mul(1, 1), 1);
+    }
+
+    #[test]
+    fn xnor_equals_pm1_product() {
+        // XNOR in {0,1} corresponds to multiplication in {-1,+1}
+        for a in 0..2u64 {
+            for b in 0..2u64 {
+                let pm = BinXnor::to_pm1(a) * BinXnor::to_pm1(b);
+                assert_eq!(BinXnor::to_pm1(BinXnor::xnor_mul(a, b)), pm);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_signs() {
+        let r = BinXnor;
+        assert_eq!(r.quantize(3.2), 1.0);
+        assert_eq!(r.quantize(-0.1), -1.0);
+        assert_eq!(r.quantize(0.0), 1.0);
+        assert_eq!(r.decode(r.encode(-5.0)), -1.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! FI(i, f): sign-magnitude fixed point with `i` integral and `f`
+//! fractional bits (+ 1 sign bit).  Paper §4.1.1 / Table 2.
+//!
+//! Semantics are bit-identical to `bitref.fi_quantize` / `fi_encode` /
+//! `fi_decode`: round-half-away-from-zero on the magnitude, saturation at
+//! `2^i - 2^-f`, -0 normalizes to +0.
+
+use super::traits::Representation;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FixedPoint {
+    pub i_bits: u32,
+    pub f_bits: u32,
+}
+
+impl FixedPoint {
+    /// The coordinator restricts BCIs to i+f <= 22 so the PJRT fake-quant
+    /// path (f32 arithmetic) stays bit-exact with this implementation.
+    pub const MAX_TOTAL: u32 = 30;
+
+    pub fn new(i_bits: u32, f_bits: u32) -> Self {
+        assert!(
+            i_bits + f_bits >= 1 && i_bits + f_bits <= Self::MAX_TOTAL,
+            "FI({i_bits}, {f_bits}) out of supported range"
+        );
+        FixedPoint { i_bits, f_bits }
+    }
+
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.f_bits) as f64
+    }
+
+    /// Largest magnitude code: 2^(i+f) - 1.
+    #[inline]
+    pub fn max_code(&self) -> u64 {
+        (1u64 << (self.i_bits + self.f_bits)) - 1
+    }
+
+    /// Quantize to the magnitude code (no sign): round-half-away, saturate.
+    #[inline]
+    pub fn code_of(&self, x: f32) -> u64 {
+        let mag = (x.abs() as f64) * self.scale();
+        let k = (mag + 0.5).floor() as u64;
+        k.min(self.max_code())
+    }
+
+    /// The quantization step (one fractional ulp).
+    #[inline]
+    pub fn ulp(&self) -> f32 {
+        (1.0 / self.scale()) as f32
+    }
+}
+
+impl Representation for FixedPoint {
+    fn name(&self) -> String {
+        format!("FI({}, {})", self.i_bits, self.f_bits)
+    }
+
+    fn total_bits(&self) -> u32 {
+        1 + self.i_bits + self.f_bits
+    }
+
+    #[inline]
+    fn quantize(&self, x: f32) -> f32 {
+        let k = self.code_of(x);
+        let v = (k as f64 / self.scale()) as f32;
+        if x < 0.0 && v != 0.0 {
+            -v
+        } else {
+            v
+        }
+    }
+
+    fn encode(&self, x: f32) -> u64 {
+        let k = self.code_of(x);
+        let sign = if x < 0.0 && k != 0 { 1u64 } else { 0 };
+        (sign << (self.i_bits + self.f_bits)) | k
+    }
+
+    fn decode(&self, bits: u64) -> f32 {
+        let nb = self.i_bits + self.f_bits;
+        let k = bits & ((1u64 << nb) - 1);
+        let sign = (bits >> nb) & 1;
+        let v = (k as f64 / self.scale()) as f32;
+        if sign == 1 {
+            -v
+        } else {
+            v
+        }
+    }
+
+    fn max_value(&self) -> f32 {
+        (self.max_code() as f64 / self.scale()) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::Rng, prop};
+
+    #[test]
+    fn known_values() {
+        let r = FixedPoint::new(4, 8);
+        assert_eq!(r.quantize(0.0), 0.0);
+        assert_eq!(r.quantize(-0.0), 0.0);
+        assert_eq!(r.quantize(1.0), 1.0);
+        assert_eq!(r.quantize(1.0 / 512.0), 1.0 / 256.0); // tie away from 0
+        assert_eq!(r.quantize(-1.0 / 512.0), -1.0 / 256.0);
+        assert_eq!(r.quantize(100.0), r.max_value());
+        assert_eq!(r.quantize(-100.0), -r.max_value());
+        assert_eq!(r.total_bits(), 13);
+        assert_eq!(r.name(), "FI(4, 8)");
+    }
+
+    #[test]
+    fn integer_special_case() {
+        // paper §4.1.1: integer = fixed point with f = 0
+        let r = FixedPoint::new(8, 0);
+        assert_eq!(r.quantize(3.4), 3.0);
+        assert_eq!(r.quantize(3.5), 4.0);
+        assert_eq!(r.quantize(-3.5), -4.0);
+        assert_eq!(r.max_value(), 255.0);
+    }
+
+    #[test]
+    fn prop_on_grid_and_saturated() {
+        prop::check(
+            "fi quantized value is on the grid and within range",
+            11,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let i = rng.below(9) as u32;
+                let f = rng.below(12) as u32;
+                let x = (rng.normal() * 20.0) as f32;
+                (FixedPoint::new(i.max(1), f), x)
+            },
+            |(rep, x)| {
+                let q = rep.quantize(*x);
+                let k = q as f64 * rep.scale();
+                k == k.round() && q.abs() <= rep.max_value()
+            },
+        );
+    }
+
+    #[test]
+    fn prop_monotone() {
+        prop::check(
+            "fi quantize is monotone",
+            12,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let rep = FixedPoint::new(1 + rng.below(8) as u32,
+                                          rng.below(10) as u32);
+                let a = (rng.normal() * 10.0) as f32;
+                let b = (rng.normal() * 10.0) as f32;
+                (rep, a.min(b), a.max(b))
+            },
+            |(rep, lo, hi)| rep.quantize(*lo) <= rep.quantize(*hi),
+        );
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        prop::check_msg(
+            "fi encode/decode roundtrip equals quantize",
+            13,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let rep = FixedPoint::new(1 + rng.below(8) as u32,
+                                          rng.below(10) as u32);
+                (rep, (rng.normal() * 50.0) as f32)
+            },
+            |(rep, x)| {
+                let want = rep.quantize(*x);
+                let got = rep.decode(rep.encode(*x));
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("got {got}, want {want}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_error_bound() {
+        prop::check(
+            "fi error <= half ulp inside range",
+            14,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let rep = FixedPoint::new(5, 1 + rng.below(10) as u32);
+                (rep, rng.range_f32(-30.0, 30.0))
+            },
+            |(rep, x)| {
+                (rep.quantize(*x) - x).abs() <= rep.ulp() / 2.0 + 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        let mut rng = Rng::new(5);
+        let rep = FixedPoint::new(6, 8);
+        for _ in 0..500 {
+            let x = (rng.normal() * 30.0) as f32;
+            let q = rep.quantize(x);
+            assert_eq!(rep.quantize(q), q);
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! The `Representation` trait: what every customizable data representation
+//! implements (paper §4.1 — "a Numeric class for each data representation").
+
+/// A customizable data representation: a finite lattice of representable
+/// values plus an encoding to hardware bit patterns.
+pub trait Representation: Send + Sync + std::fmt::Debug {
+    /// Short notation used in reports, e.g. `FI(6, 8)` / `FL(4, 9)`.
+    fn name(&self) -> String;
+
+    /// Total storage bits (sign included).
+    fn total_bits(&self) -> u32;
+
+    /// Snap `x` onto the representation lattice (round + saturate).
+    fn quantize(&self, x: f32) -> f32;
+
+    /// Encode the quantized value of `x` as a bit pattern.
+    fn encode(&self, x: f32) -> u64;
+
+    /// Decode a bit pattern back to its real value.
+    fn decode(&self, bits: u64) -> f32;
+
+    /// Largest representable magnitude.
+    fn max_value(&self) -> f32;
+
+    /// Quantize a whole slice in place (hot path for weight conversion).
+    fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::FixedPoint;
+
+    #[test]
+    fn quantize_slice_matches_scalar() {
+        let rep = FixedPoint::new(4, 6);
+        let xs = [0.37f32, -2.11, 100.0, -100.0, 0.0];
+        let mut ys = xs;
+        rep.quantize_slice(&mut ys);
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(rep.quantize(*x), *y);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Artifact directory discovery and inventory (`artifacts/` produced by
+//! `make artifacts`): HLO text modules, weights, dataset, ranges, meta.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+    /// batch sizes the fwd artifacts were lowered for (ascending)
+    pub batch_sizes: Vec<usize>,
+    pub baseline_accuracy: f64,
+}
+
+impl ArtifactDir {
+    /// Resolve the artifact directory: `$LOP_ARTIFACTS`, or `./artifacts`,
+    /// or `<manifest>/artifacts`.
+    pub fn discover() -> Result<ArtifactDir> {
+        let mut candidates = Vec::new();
+        if let Ok(p) = std::env::var("LOP_ARTIFACTS") {
+            candidates.push(PathBuf::from(p));
+        }
+        candidates.push(PathBuf::from("artifacts"));
+        candidates.push(
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        );
+        for c in candidates {
+            if c.join("meta.json").is_file() {
+                return Self::open(&c);
+            }
+        }
+        bail!(
+            "artifacts not found — run `make artifacts` first \
+             (or set LOP_ARTIFACTS)"
+        )
+    }
+
+    pub fn open(root: &Path) -> Result<ArtifactDir> {
+        let meta_raw = std::fs::read_to_string(root.join("meta.json"))
+            .with_context(|| format!("reading {:?}", root.join("meta.json")))?;
+        let meta = Json::parse(&meta_raw)
+            .map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let batch_sizes: Vec<usize> = meta
+            .get("batch_sizes")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(Json::as_f64)
+                    .map(|f| f as usize)
+                    .collect()
+            })
+            .unwrap_or_default();
+        if batch_sizes.is_empty() {
+            bail!("meta.json has no batch_sizes");
+        }
+        let baseline_accuracy = meta
+            .get("baseline_accuracy")
+            .and_then(Json::as_f64)
+            .context("meta.json missing baseline_accuracy")?;
+        Ok(ArtifactDir {
+            root: root.to_path_buf(),
+            batch_sizes,
+            baseline_accuracy,
+        })
+    }
+
+    pub fn hlo_path(&self, variant: &str, batch: usize) -> PathBuf {
+        self.root.join(format!("fwd_{variant}_b{batch}.hlo.txt"))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.root.join("weights.bin")
+    }
+
+    pub fn dataset_path(&self) -> PathBuf {
+        self.root.join("dataset.bin")
+    }
+
+    pub fn ranges_path(&self) -> PathBuf {
+        self.root.join("ranges.json")
+    }
+
+    /// Smallest lowered batch size >= n, or the largest available.
+    pub fn batch_for(&self, n: usize) -> usize {
+        for &b in &self.batch_sizes {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.batch_sizes.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_for_picks_smallest_fit() {
+        let a = ArtifactDir {
+            root: PathBuf::from("/x"),
+            batch_sizes: vec![1, 16, 64],
+            baseline_accuracy: 0.95,
+        };
+        assert_eq!(a.batch_for(1), 1);
+        assert_eq!(a.batch_for(2), 16);
+        assert_eq!(a.batch_for(16), 16);
+        assert_eq!(a.batch_for(17), 64);
+        assert_eq!(a.batch_for(1000), 64);
+    }
+
+    #[test]
+    fn hlo_path_naming() {
+        let a = ArtifactDir {
+            root: PathBuf::from("/art"),
+            batch_sizes: vec![1],
+            baseline_accuracy: 0.9,
+        };
+        assert_eq!(
+            a.hlo_path("fi", 16),
+            PathBuf::from("/art/fwd_fi_b16.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,269 @@
+//! Model executor: compiles the HLO artifacts once per (variant, batch)
+//! and runs batched forward passes with weights resident on the device.
+//!
+//! Performance notes (§Perf): weight tensors are uploaded once per network
+//! configuration and cached as `PjRtBuffer`s (12.8 MB — re-uploading them
+//! per batch dominated early profiles); executables are compiled lazily
+//! and cached; inputs are padded to the nearest lowered batch size.
+
+use super::artifact::ArtifactDir;
+use crate::approx::arith::ArithKind;
+use crate::nn::loader::load_weights;
+use crate::nn::loader::PARAM_NAMES;
+use crate::nn::network::NetConfig;
+use crate::nn::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Which AOT artifact family a configuration runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    F32,
+    Fi,
+    Fl,
+}
+
+impl Variant {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Variant::F32 => "f32",
+            Variant::Fi => "fi",
+            Variant::Fl => "fl",
+        }
+    }
+
+    /// Decide the artifact for a network configuration, or None when the
+    /// config needs the bit-accurate engine (approximate multipliers or
+    /// mixed representation families).
+    pub fn for_config(cfg: &NetConfig) -> Option<Variant> {
+        if cfg.layers.iter().all(|l| matches!(l, ArithKind::Float32)) {
+            return Some(Variant::F32);
+        }
+        if cfg.layers.iter().all(|l| matches!(l, ArithKind::FixedExact(_)))
+        {
+            return Some(Variant::Fi);
+        }
+        if cfg.layers.iter().all(|l| matches!(l, ArithKind::FloatExact(_)))
+        {
+            return Some(Variant::Fl);
+        }
+        None
+    }
+}
+
+/// Quantization scalars (q0, q1) per layer for the fi/fl artifacts.
+pub fn quant_scalars(cfg: &NetConfig) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(8);
+    for l in &cfg.layers {
+        match l {
+            ArithKind::Float32 => out.extend([0.0, 0.0]),
+            ArithKind::FixedExact(r) => {
+                out.push((1u64 << r.f_bits) as f32); // scale
+                out.push(r.max_code() as f32); // maxk
+            }
+            ArithKind::FloatExact(r) => {
+                out.push(r.e_bits as f32);
+                out.push(r.m_bits as f32);
+            }
+            other => bail!(
+                "config {} is not PJRT-expressible",
+                other.name()
+            ),
+        }
+    }
+    Ok(out)
+}
+
+pub struct ModelRunner {
+    client: xla::PjRtClient,
+    pub art: ArtifactDir,
+    /// float32 parameters in artifact order: (dims, data)
+    weights: Vec<(Vec<usize>, Vec<f32>)>,
+    execs: HashMap<(Variant, usize), xla::PjRtLoadedExecutable>,
+    /// uploaded (possibly quantized) weight buffers, keyed by config name
+    wbufs: HashMap<String, Vec<xla::PjRtBuffer>>,
+    pub compile_count: usize,
+}
+
+impl ModelRunner {
+    pub fn new(art: ArtifactDir) -> Result<ModelRunner> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        let params = load_weights(&art.weights_path())?;
+        crate::nn::loader::validate_dcnn(&params)?;
+        let weights = PARAM_NAMES
+            .iter()
+            .map(|n| {
+                let t = &params[*n];
+                (t.shape.clone(), t.data.clone())
+            })
+            .collect();
+        Ok(ModelRunner {
+            client,
+            art,
+            weights,
+            execs: HashMap::new(),
+            wbufs: HashMap::new(),
+            compile_count: 0,
+        })
+    }
+
+    fn executable(&mut self, variant: Variant, batch: usize)
+                  -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.execs.contains_key(&(variant, batch)) {
+            let path = self.art.hlo_path(variant.tag(), batch);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e}"))?;
+            self.compile_count += 1;
+            self.execs.insert((variant, batch), exe);
+        }
+        Ok(&self.execs[&(variant, batch)])
+    }
+
+    /// Upload (quantizing first when required) the weight set for `cfg`.
+    fn weight_buffers(&mut self, cfg: &NetConfig)
+                      -> Result<&Vec<xla::PjRtBuffer>> {
+        let key = cfg.name();
+        if !self.wbufs.contains_key(&key) {
+            let mut bufs = Vec::with_capacity(8);
+            for (pi, (dims, data)) in self.weights.iter().enumerate() {
+                let kind = &cfg.layers[pi / 2]; // w, b alternate per layer
+                let qdata: Vec<f32> = match kind {
+                    ArithKind::Float32 => data.clone(),
+                    k => data.iter().map(|&v| k.quantize(v)).collect(),
+                };
+                let buf = self
+                    .client
+                    .buffer_from_host_buffer::<f32>(&qdata, dims, None)
+                    .map_err(|e| anyhow::anyhow!("uploading weights: {e}"))?;
+                bufs.push(buf);
+            }
+            self.wbufs.insert(key.clone(), bufs);
+        }
+        Ok(&self.wbufs[&key])
+    }
+
+    /// Run a forward pass for `cfg` over `x` ([n,28,28,1] tensor); returns
+    /// logits [n,10].  Pads to the nearest lowered batch size internally.
+    pub fn forward(&mut self, cfg: &NetConfig, x: &Tensor) -> Result<Tensor> {
+        let variant = Variant::for_config(cfg).with_context(|| {
+            format!("config {} is not PJRT-expressible", cfg.name())
+        })?;
+        let n = x.shape[0];
+        assert_eq!(&x.shape[1..], &[28, 28, 1]);
+        let mut logits = Vec::with_capacity(n * 10);
+        let mut done = 0;
+        while done < n {
+            let chunk = (n - done).min(*self.art.batch_sizes.last().unwrap());
+            let batch = self.art.batch_for(chunk);
+            let mut padded = vec![0.0f32; batch * 784];
+            padded[..chunk * 784]
+                .copy_from_slice(&x.data[done * 784..(done + chunk) * 784]);
+            let out = self.forward_padded(cfg, variant, &padded, batch)?;
+            logits.extend_from_slice(&out[..chunk * 10]);
+            done += chunk;
+        }
+        Ok(Tensor::new(vec![n, 10], logits))
+    }
+
+    fn forward_padded(&mut self, cfg: &NetConfig, variant: Variant,
+                      padded: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let scalars = if variant == Variant::F32 {
+            Vec::new()
+        } else {
+            quant_scalars(cfg)?
+        };
+        // upload input + scalars
+        let xbuf = self
+            .client
+            .buffer_from_host_buffer::<f32>(padded, &[batch, 28, 28, 1],
+                                            None)
+            .map_err(|e| anyhow::anyhow!("uploading input: {e}"))?;
+        let mut sbufs = Vec::with_capacity(scalars.len());
+        for s in &scalars {
+            sbufs.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(&[*s], &[], None)
+                    .map_err(|e| anyhow::anyhow!("uploading scalar: {e}"))?,
+            );
+        }
+        // ensure weights + executable exist (two-phase to appease borrows)
+        self.weight_buffers(cfg)?;
+        self.executable(variant, batch)?;
+        let wbufs = &self.wbufs[&cfg.name()];
+        let exe = &self.execs[&(variant, batch)];
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(17);
+        args.push(&xbuf);
+        args.extend(wbufs.iter());
+        args.extend(sbufs.iter());
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        let v = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        anyhow::ensure!(v.len() == batch * 10, "bad output size {}", v.len());
+        Ok(v)
+    }
+
+    /// Number of executables compiled so far (for cache-behavior tests).
+    pub fn cached_executables(&self) -> usize {
+        self.execs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::{FixedPoint, FloatRep};
+
+    #[test]
+    fn variant_selection() {
+        let f32cfg = NetConfig::uniform(ArithKind::Float32);
+        assert_eq!(Variant::for_config(&f32cfg), Some(Variant::F32));
+        let fi = NetConfig::uniform(ArithKind::FixedExact(
+            FixedPoint::new(6, 8),
+        ));
+        assert_eq!(Variant::for_config(&fi), Some(Variant::Fi));
+        let fl = NetConfig::uniform(ArithKind::FloatExact(
+            FloatRep::new(4, 9),
+        ));
+        assert_eq!(Variant::for_config(&fl), Some(Variant::Fl));
+        let h = NetConfig::parse("H(6,8,12)").unwrap();
+        assert_eq!(Variant::for_config(&h), None);
+        let mixed = NetConfig::parse("FI(6,8)|FI(6,8)|FL(4,9)|FL(4,9)")
+            .unwrap();
+        assert_eq!(Variant::for_config(&mixed), None);
+    }
+
+    #[test]
+    fn scalar_packing() {
+        let cfg = NetConfig::parse("FI(5,8)|FI(5,8)|FI(6,8)|FI(6,8)")
+            .unwrap();
+        let s = quant_scalars(&cfg).unwrap();
+        assert_eq!(s.len(), 8);
+        assert_eq!(s[0], 256.0); // 2^8
+        assert_eq!(s[1], (1u64 << 13) as f32 - 1.0); // 2^(5+8)-1
+        assert_eq!(s[4], 256.0);
+        assert_eq!(s[5], (1u64 << 14) as f32 - 1.0);
+        let flc = NetConfig::parse("FL(4,9)").unwrap();
+        let s = quant_scalars(&flc).unwrap();
+        assert_eq!(&s[0..2], &[4.0, 9.0]);
+        assert!(quant_scalars(&NetConfig::parse("I(5,10)").unwrap())
+            .is_err());
+    }
+}

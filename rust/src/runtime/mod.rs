@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `make artifacts` and executes them on the CPU PJRT client from the L3
+//! request path — Python never runs at inference time.
+//!
+//! Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and python/compile/aot.py).
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::ArtifactDir;
+pub use executor::{ModelRunner, Variant};

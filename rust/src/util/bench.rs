@@ -1,0 +1,117 @@
+//! Bench timing harness (criterion is not in the offline crate set).
+//!
+//! `cargo bench` targets are declared with `harness = false` and drive this
+//! module: warmup, timed iterations, and a summary with mean / p50 / p99.
+
+use std::time::Instant;
+
+/// Result of one benchmark: per-iteration wall times in nanoseconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub ns: Vec<u64>,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.ns.iter().sum::<u64>() as f64 / self.ns.len().max(1) as f64
+    }
+
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.ns.is_empty() {
+            return 0;
+        }
+        let mut v = self.ns.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.percentile_ns(50.0) as f64),
+            fmt_ns(self.percentile_ns(99.0) as f64),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut ns = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        ns.push(t0.elapsed().as_nanos() as u64);
+    }
+    BenchResult { name: name.to_string(), iters, ns }
+}
+
+/// Print the standard header row for a bench table.
+pub fn header() {
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "p50", "p99"
+    );
+    println!("{}", "-".repeat(86));
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_iterations() {
+        let r = bench("noop", 2, 16, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(r.ns.len(), 16);
+        assert!(r.mean_ns() >= 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 5,
+            ns: vec![50, 10, 30, 20, 40],
+        };
+        assert_eq!(r.percentile_ns(0.0), 10);
+        assert_eq!(r.percentile_ns(50.0), 30);
+        assert_eq!(r.percentile_ns(100.0), 50);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(fmt_ns(2_000_000_000.0), "2.000 s");
+    }
+}

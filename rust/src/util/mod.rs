@@ -1,0 +1,8 @@
+//! Infrastructure substrates built from scratch (no external crates are
+//! available offline beyond the vendored set): PRNG, a mini property-test
+//! harness, a bench timing harness, and a small JSON parser.
+
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod prop;

@@ -1,0 +1,140 @@
+//! §4.2 exploration strategy over real artifacts: the two-pass greedy
+//! search must find a configuration within the accuracy bound and cheaper
+//! than the float32 baseline.
+
+use lop::approx::arith::ArithKind;
+use lop::coordinator::eval::Evaluator;
+use lop::coordinator::explorer::{explore, ExploreOpts, Family};
+use lop::coordinator::ranges::profile_ranges;
+use lop::data::Dataset;
+use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
+use lop::nn::network::{Dcnn, NetConfig};
+use lop::runtime::{ArtifactDir, ModelRunner};
+
+fn setup(subset: usize) -> (Evaluator, Vec<lop::nn::network::LayerRanges>) {
+    let art = ArtifactDir::discover().expect("run `make artifacts`");
+    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let ds = Dataset::load(&art.dataset_path()).unwrap();
+    let ranges = profile_ranges(&dcnn, &ds, 500, 0);
+    let runner = ModelRunner::new(art).unwrap();
+    let dcnn2 = Dcnn::load(&runner.art.weights_path()).unwrap();
+    (Evaluator::new(dcnn2, Some(runner), ds, subset, 0), ranges)
+}
+
+#[test]
+fn explore_finds_config_within_bound_and_cheaper_than_f32() {
+    let (mut ev, ranges) = setup(200);
+    let opts = ExploreOpts {
+        accuracy_bound: 0.02,
+        frac_bci: (6, 9),
+        int_headroom: 1,
+        families: vec![Family::Fixed],
+        second_pass: true,
+        ..Default::default()
+    };
+    let res = explore(&mut ev, &ranges, &opts).unwrap();
+
+    // accuracy within bound on the evaluation subset
+    assert!(
+        res.accuracy >= res.baseline * (1.0 - opts.accuracy_bound) - 1e-9,
+        "chosen {} acc {} vs baseline {}",
+        res.chosen.name(), res.accuracy, res.baseline
+    );
+    // every chosen layer is fixed point and cheaper than float32
+    let f32cost = Datapath::synthesize(&ArithKind::Float32, N_PE)
+        .explore_cost(&ARRIA10);
+    for l in &res.chosen.layers {
+        assert!(matches!(l, ArithKind::FixedExact(_)), "layer {l:?}");
+        let c = Datapath::synthesize(l, N_PE).explore_cost(&ARRIA10);
+        assert!(c < f32cost, "{} not cheaper than float32", l.name());
+    }
+    // the trace marks exactly one chosen candidate per part in pass 1
+    for part in 0..4 {
+        let chosen: Vec<_> = res
+            .trace
+            .iter()
+            .filter(|t| t.part == part && t.pass == 1 && t.chosen)
+            .collect();
+        assert_eq!(chosen.len(), 1, "part {part}");
+    }
+    // memoization kept the eval count sane: <= candidates * parts + extras
+    assert!(res.evals <= 120, "evals {}", res.evals);
+}
+
+#[test]
+fn pass2_never_hurts_accuracy() {
+    let (mut ev, ranges) = setup(150);
+    let opts = ExploreOpts {
+        accuracy_bound: 0.03,
+        frac_bci: (5, 8),
+        int_headroom: 1,
+        families: vec![Family::Fixed],
+        second_pass: true,
+        ..Default::default()
+    };
+    let res = explore(&mut ev, &ranges, &opts).unwrap();
+    assert!(
+        res.accuracy >= res.pass1_accuracy - 1e-9,
+        "pass 2 degraded accuracy: {} -> {}",
+        res.pass1_accuracy, res.accuracy
+    );
+}
+
+#[test]
+fn integral_bits_respect_ranges() {
+    let (mut ev, ranges) = setup(100);
+    let opts = ExploreOpts {
+        accuracy_bound: 0.05,
+        frac_bci: (6, 7),
+        int_headroom: 1,
+        families: vec![Family::Fixed],
+        second_pass: false,
+        ..Default::default()
+    };
+    let res = explore(&mut ev, &ranges, &opts).unwrap();
+    // FC2 range is ~±36 -> needs >= 6 integral bits; CONV1 ~±1 -> small
+    match (&res.chosen.layers[3], &res.chosen.layers[0]) {
+        (ArithKind::FixedExact(fc2), ArithKind::FixedExact(c1)) => {
+            assert!(fc2.i_bits >= 6, "fc2 i_bits {}", fc2.i_bits);
+            assert!(c1.i_bits <= 3, "conv1 i_bits {}", c1.i_bits);
+        }
+        _ => panic!("expected fixed-point layers"),
+    }
+}
+
+#[test]
+fn infeasible_bound_falls_back_to_max_accuracy() {
+    // an impossible bound (better than baseline + 50%) makes every
+    // candidate infeasible; pass 1 must fall back to the most accurate
+    // candidate instead of panicking
+    let (mut ev, ranges) = setup(60);
+    let opts = ExploreOpts {
+        accuracy_bound: -0.5, // floor = 1.5 * baseline: unreachable
+        frac_bci: (4, 5),
+        int_headroom: 0,
+        families: vec![Family::Fixed],
+        second_pass: false,
+        ..Default::default()
+    };
+    let res = explore(&mut ev, &ranges, &opts).unwrap();
+    assert!(res.trace.iter().all(|t| !t.feasible || t.pass == 2));
+    // it still returns a concrete fixed-point configuration
+    for l in &res.chosen.layers {
+        assert!(matches!(l, ArithKind::FixedExact(_)));
+    }
+}
+
+#[test]
+fn rust_and_python_table1_ranges_agree() {
+    let art = ArtifactDir::discover().unwrap();
+    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let ds = Dataset::load(&art.dataset_path()).unwrap();
+    // same 2000-image slice the python dump used
+    let ranges = profile_ranges(&dcnn, &ds, 2_000, 0);
+    let dev = lop::coordinator::ranges::compare_with_python(
+        &ranges,
+        &art.ranges_path(),
+    )
+    .unwrap();
+    assert!(dev < 1e-2, "rust/python range deviation {dev}");
+}

@@ -1,0 +1,129 @@
+//! Serving-stack integration tests: router → batcher → workers over real
+//! artifacts, on both backends.
+
+use lop::coordinator::server::{Server, ServerOpts};
+use lop::data::Dataset;
+use lop::nn::network::{Dcnn, NetConfig};
+use lop::runtime::ArtifactDir;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+fn opts(configs: Vec<NetConfig>, use_pjrt: bool) -> ServerOpts {
+    ServerOpts {
+        configs,
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        queue_capacity: 1_024,
+        engine_workers: 2,
+        engine_gemm_threads: 1,
+        use_pjrt,
+    }
+}
+
+fn test_images(n: usize) -> (Vec<Vec<f32>>, Vec<usize>, Dcnn) {
+    let art = ArtifactDir::discover().expect("run `make artifacts`");
+    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let ds = Dataset::load(&art.dataset_path()).unwrap();
+    let mut imgs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = ds.batch(&ds.test, &[i]);
+        imgs.push(t.data);
+        labels.push(ds.test.labels[i] as usize);
+    }
+    (imgs, labels, dcnn)
+}
+
+#[test]
+fn pjrt_backend_serves_correct_predictions() {
+    let (imgs, _, dcnn) = test_images(24);
+    let cfg = NetConfig::parse("FI(6,8)").unwrap();
+    let server = Server::start(opts(vec![cfg], true)).unwrap();
+    let (tx, rx) = channel();
+    for img in &imgs {
+        server.router.submit(0, img.clone(), tx.clone()).unwrap();
+    }
+    drop(tx);
+    let mut preds = vec![usize::MAX; imgs.len()];
+    for _ in 0..imgs.len() {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        preds[r.id as usize] = r.pred;
+    }
+    server.shutdown();
+
+    // must match direct engine inference exactly (argmax level)
+    let net = dcnn.prepare(cfg);
+    for (i, img) in imgs.iter().enumerate() {
+        let t = lop::nn::tensor::Tensor::new(vec![1, 28, 28, 1],
+                                             img.clone());
+        let direct = net.predict(&t, 1)[0];
+        assert_eq!(preds[i], direct, "image {i}");
+    }
+}
+
+#[test]
+fn engine_backend_serves_approx_configs() {
+    let (imgs, labels, _) = test_images(16);
+    let cfg = NetConfig::parse("H(6,8,12)").unwrap();
+    let server = Server::start(opts(vec![cfg], true)).unwrap();
+    let (tx, rx) = channel();
+    for img in &imgs {
+        server.router.submit(0, img.clone(), tx.clone()).unwrap();
+    }
+    drop(tx);
+    let mut correct = 0;
+    for _ in 0..imgs.len() {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        if r.pred == labels[r.id as usize] {
+            correct += 1;
+        }
+    }
+    server.shutdown();
+    assert!(correct >= 12, "H(6,8,12) got only {correct}/16 right");
+}
+
+#[test]
+fn mixed_backends_share_one_server() {
+    let (imgs, _, _) = test_images(12);
+    let configs = vec![
+        NetConfig::parse("float32").unwrap(),   // PJRT
+        NetConfig::parse("H(6,8,12)").unwrap(), // engine
+    ];
+    let server = Server::start(opts(configs, true)).unwrap();
+    let (tx, rx) = channel();
+    for (i, img) in imgs.iter().enumerate() {
+        server.router.submit(i % 2, img.clone(), tx.clone()).unwrap();
+    }
+    drop(tx);
+    let mut got = 0;
+    for _ in 0..imgs.len() {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(r.pred < 10);
+        got += 1;
+    }
+    assert_eq!(got, imgs.len());
+    assert!(server.metrics.mean_batch_size() >= 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn no_pjrt_falls_back_to_engine_everywhere() {
+    let (imgs, _, dcnn) = test_images(8);
+    let cfg = NetConfig::parse("FI(6,8)").unwrap();
+    let server = Server::start(opts(vec![cfg], false)).unwrap();
+    let (tx, rx) = channel();
+    for img in &imgs {
+        server.router.submit(0, img.clone(), tx.clone()).unwrap();
+    }
+    drop(tx);
+    let net = dcnn.prepare(cfg);
+    for _ in 0..imgs.len() {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let t = lop::nn::tensor::Tensor::new(
+            vec![1, 28, 28, 1],
+            imgs[r.id as usize].clone(),
+        );
+        assert_eq!(r.pred, net.predict(&t, 1)[0]);
+    }
+    server.shutdown();
+}
