@@ -1,0 +1,24 @@
+# Lop build entry points.  Tier-1 (hermetic, no Python) is just:
+#   cargo build --release && cargo test -q
+
+.PHONY: all test artifacts bench-tables clean-artifacts
+
+all:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# AOT artifacts consumed by the runtime, integration tests and
+# table1/3/4 benches: trained weights, dataset, WBA ranges, golden
+# vectors, HLO text modules.  Needs a JAX-capable python3.
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+# Hermetic paper-table benches (table5 + kernels need nothing on disk).
+bench-tables:
+	cargo bench --bench table5_hw
+	cargo bench --bench gemm_kernels
+
+clean-artifacts:
+	rm -rf artifacts

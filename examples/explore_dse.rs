@@ -11,7 +11,7 @@ use lop::coordinator::ranges::profile_ranges;
 use lop::data::Dataset;
 use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
 use lop::nn::network::Dcnn;
-use lop::runtime::{ArtifactDir, ModelRunner};
+use lop::runtime::ArtifactDir;
 
 fn main() -> Result<()> {
     let art = ArtifactDir::discover()?;
@@ -26,9 +26,12 @@ fn main() -> Result<()> {
         println!("  {:<6} [{:>7.2}, {:>6.2}]", r.layer, c.0, c.1);
     }
 
-    let runner = ModelRunner::new(art)?;
-    let dcnn2 = Dcnn::load(&runner.art.weights_path())?;
-    let mut ev = Evaluator::new(dcnn2, Some(runner), ds, 300, 0);
+    // PJRT accelerates the exact-config evaluations when available;
+    // otherwise the bit-accurate engine computes the same accuracies.
+    let weights_path = art.weights_path();
+    let runner = lop::runtime::runner_or_warn(art);
+    let dcnn2 = Dcnn::load(&weights_path)?;
+    let mut ev = Evaluator::new(dcnn2, runner, ds, 300, 0);
 
     let opts = ExploreOpts {
         accuracy_bound: 0.01,

@@ -10,7 +10,7 @@ use lop::approx::arith::ArithKind;
 use lop::coordinator::eval::Evaluator;
 use lop::data::Dataset;
 use lop::nn::network::{Dcnn, NetConfig};
-use lop::runtime::{ArtifactDir, ModelRunner};
+use lop::runtime::ArtifactDir;
 use std::time::Instant;
 
 const ROWS: [&str; 5] = [
@@ -32,8 +32,9 @@ fn main() {
     let art = ArtifactDir::discover().expect("run `make artifacts`");
     let dcnn = Dcnn::load(&art.weights_path()).unwrap();
     let ds = Dataset::load(&art.dataset_path()).unwrap();
-    let runner = ModelRunner::new(art).unwrap();
-    let mut ev = Evaluator::new(dcnn, Some(runner), ds, n, 0);
+    // engine fallback when PJRT is unavailable (non-pjrt build)
+    let runner = lop::runtime::runner_or_warn(art);
+    let mut ev = Evaluator::new(dcnn, runner, ds, n, 0);
 
     let base = ev
         .accuracy(&NetConfig::uniform(ArithKind::Float32))

@@ -22,6 +22,21 @@ pub fn drum_approx_operand(a: u64, k: u32) -> u64 {
 }
 
 /// DRUM(k) product of two unsigned integers.
+///
+/// Each conditioned operand is within a factor (1 ± 2^-(k-1)) of its
+/// true value, so the relative product error is bounded by roughly
+/// 2^-(k-2):
+///
+/// ```
+/// use lop::approx::drum::drum_mul;
+///
+/// let (a, b, k) = (1000u64, 3000u64, 6);
+/// let exact = (a * b) as f64;
+/// let rel = (drum_mul(a, b, k) as f64 - exact).abs() / exact;
+/// assert!(rel <= 0.0625, "relative error {rel} above 2^-(k-2)");
+/// // operands that fit k bits multiply exactly
+/// assert_eq!(drum_mul(31, 63, 6), 31 * 63);
+/// ```
 #[inline]
 pub fn drum_mul(a: u64, b: u64, k: u32) -> u64 {
     drum_approx_operand(a, k) * drum_approx_operand(b, k)

@@ -73,10 +73,14 @@ impl Server {
             metrics.clone(),
         ));
 
+        // Without the `pjrt` feature the ModelRunner stub can never
+        // start, so route everything to the engine workers instead of
+        // assigning configs to a worker that dies at startup.
+        let pjrt_available = cfg!(feature = "pjrt") && opts.use_pjrt;
         let pjrt_mask: Vec<bool> = opts
             .configs
             .iter()
-            .map(|c| opts.use_pjrt && Variant::for_config(c).is_some())
+            .map(|c| pjrt_available && Variant::for_config(c).is_some())
             .collect();
         // engine workers cover what PJRT does not
         let engine_mask: Vec<bool> =
@@ -88,8 +92,10 @@ impl Server {
             let m = metrics.clone();
             let cfgs = opts.configs.clone();
             let art2 = art.clone();
+            let d = dcnn.clone();
+            let threads = opts.engine_gemm_threads;
             workers.push(std::thread::spawn(move || {
-                pjrt_worker(art2, cfgs, q, m, pjrt_mask);
+                pjrt_worker(art2, d, cfgs, q, m, pjrt_mask, threads);
             }));
         }
         if engine_mask.iter().any(|&b| b) || !opts.use_pjrt {
@@ -134,13 +140,21 @@ fn batch_tensor(batch: &[Request]) -> Tensor {
     Tensor::new(vec![batch.len(), 28, 28, 1], data)
 }
 
-fn pjrt_worker(art: ArtifactDir, configs: Vec<NetConfig>,
+fn pjrt_worker(art: ArtifactDir, dcnn: Arc<Dcnn>, configs: Vec<NetConfig>,
                queue: Arc<BatchQueue>, metrics: Arc<Metrics>,
-               mask: Vec<bool>) {
+               mask: Vec<bool>, engine_threads: usize) {
     let mut runner = match ModelRunner::new(art) {
         Ok(r) => r,
         Err(e) => {
-            log::error!("pjrt worker failed to start: {e:#}");
+            // no `log` crate in the offline set: report on stderr.
+            // Become an engine worker over the same mask so the configs
+            // assigned to this worker are still served (the stub build
+            // never reaches here — its configs route to engine workers
+            // up front — but a runtime PJRT init failure does).
+            eprintln!("pjrt worker failed to start: {e:#}; \
+                       serving its configs on the engine backend");
+            engine_worker(dcnn, configs, queue, metrics, mask,
+                          engine_threads);
             return;
         }
     };
@@ -152,8 +166,9 @@ fn pjrt_worker(art: ArtifactDir, configs: Vec<NetConfig>,
                 respond(batch, &logits.argmax_rows(), &metrics);
             }
             Err(e) => {
-                log::error!("pjrt forward failed: {e:#}");
-                respond(batch, &vec![usize::MAX; 1_000], &metrics);
+                eprintln!("pjrt forward failed: {e:#}");
+                let sentinels = vec![usize::MAX; batch.len()];
+                respond(batch, &sentinels, &metrics);
             }
         }
     }

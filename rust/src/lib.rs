@@ -1,7 +1,33 @@
 //! Lop: customized data representations + approximate computing for ML —
 //! a three-layer Rust + JAX + Pallas reproduction of Nazemi & Pedram
-//! (2018).  See DESIGN.md for the architecture and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! (2018), "Deploying Customized Data Representation and Approximate
+//! Computing in Machine Learning Applications".
+//!
+//! See `DESIGN.md` (repo root) for the architecture and module map, and
+//! `EXPERIMENTS.md` for the paper-vs-measured methodology, the §Perf
+//! optimization log the code comments cite, and how to regenerate every
+//! reported number.  `README.md` covers building and running.
+//!
+//! The layer map, bottom to top:
+//!
+//! * [`numeric`] — customizable data representations (FI / FL / binary);
+//! * [`approx`] — approximate arithmetic units (DRUM, CFPU, Mitchell,
+//!   SSM, truncated multipliers, LOA adders) and the [`approx::ArithKind`]
+//!   provider that pairs a representation with a multiplier;
+//! * [`nn`] — the bit-accurate DCNN engine whose GEMM kernels
+//!   ([`nn::gemm::gemm`]) are monomorphized per provider;
+//! * [`hw`] — the analytical hardware cost model (Table 5 substitute for
+//!   Quartus synthesis);
+//! * [`runtime`] — the PJRT/XLA executor for exact-arithmetic configs
+//!   (gated behind the `pjrt` feature, stubbed otherwise);
+//! * [`coordinator`] — value-range profiling, accuracy evaluation, the
+//!   §4.2 design-space explorer, and the serving stack
+//!   (router → batcher → workers);
+//! * [`data`] / [`config`] / [`util`] / [`cli`] — substrates: datasets,
+//!   TOML configs, PRNG/property-test/bench/JSON helpers, argument
+//!   parsing.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod approx;
 pub mod cli;

@@ -21,7 +21,7 @@ use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
 use lop::hw::report::{format_table, hw_report, table5_kinds};
 use lop::hw::rtl::datapath_verilog;
 use lop::nn::network::{Dcnn, NetConfig};
-use lop::runtime::{ArtifactDir, ModelRunner};
+use lop::runtime::ArtifactDir;
 use lop::util::prng::Rng;
 
 const HELP: &str = "\
@@ -91,7 +91,9 @@ fn evaluator(subset: usize, threads: usize, use_pjrt: bool)
              -> Result<Evaluator> {
     let (art, dcnn, ds) = load_all()?;
     let runner = if use_pjrt {
-        Some(ModelRunner::new(art)?)
+        // falls back to the bit-accurate engine when PJRT cannot start
+        // (e.g. a build without the `pjrt` feature)
+        lop::runtime::runner_or_warn(art)
     } else {
         None
     };

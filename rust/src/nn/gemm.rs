@@ -27,6 +27,21 @@ pub fn default_threads() -> usize {
 
 /// `out = quant(x) @ w` for any provider.  `w` must already be quantized
 /// (the layer does this once at load time).  `out.len() == m * n`.
+///
+/// ```
+/// use lop::approx::arith::ArithKind;
+/// use lop::nn::gemm::gemm;
+///
+/// // FI(6, 8): x entries below are exactly representable, and an
+/// // identity weight matrix is on every lattice, so the product is
+/// // exact — out equals x.
+/// let kind = ArithKind::parse("FI(6,8)").unwrap();
+/// let x = [0.5f32, -1.0, 2.0, 0.25]; // 2 x 2, row-major
+/// let w = [1.0f32, 0.0, 0.0, 1.0]; // identity, pre-quantized
+/// let mut out = [0.0f32; 4];
+/// gemm(&kind, &x, &w, 2, 2, 2, &mut out, 1);
+/// assert_eq!(out, x);
+/// ```
 pub fn gemm(kind: &ArithKind, x: &[f32], w: &[f32], m: usize, k: usize,
             n: usize, out: &mut [f32], threads: usize) {
     assert_eq!(x.len(), m * k, "x shape mismatch");

@@ -7,6 +7,21 @@
 
 use super::traits::Representation;
 
+/// Sign-magnitude fixed point FI(i, f).
+///
+/// Encode/decode round-trips through the quantized value, and the
+/// quantization error inside the representable range is at most half an
+/// ulp:
+///
+/// ```
+/// use lop::numeric::{FixedPoint, Representation};
+///
+/// let rep = FixedPoint::new(6, 8);
+/// let q = rep.quantize(1.23456);
+/// assert_eq!(rep.decode(rep.encode(1.23456)), q);
+/// assert!((q - 1.23456).abs() <= rep.ulp() / 2.0);
+/// assert_eq!(rep.total_bits(), 15); // 1 sign + 6 integral + 8 fraction
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct FixedPoint {
     pub i_bits: u32,

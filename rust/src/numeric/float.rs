@@ -10,6 +10,20 @@
 
 use super::traits::Representation;
 
+/// Customized floating point FL(e, m).
+///
+/// Encode/decode round-trips through the quantized value, which is
+/// idempotent and saturates at the largest finite value:
+///
+/// ```
+/// use lop::numeric::{FloatRep, Representation};
+///
+/// let rep = FloatRep::new(4, 9);
+/// let q = rep.quantize(3.14159);
+/// assert_eq!(rep.decode(rep.encode(3.14159)), q);
+/// assert_eq!(rep.quantize(q), q); // idempotent
+/// assert_eq!(rep.quantize(1e30), rep.max_value()); // saturating
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct FloatRep {
     pub e_bits: u32,

@@ -1,19 +1,39 @@
 //! Model executor: compiles the HLO artifacts once per (variant, batch)
 //! and runs batched forward passes with weights resident on the device.
 //!
-//! Performance notes (§Perf): weight tensors are uploaded once per network
-//! configuration and cached as `PjRtBuffer`s (12.8 MB — re-uploading them
-//! per batch dominated early profiles); executables are compiled lazily
-//! and cached; inputs are padded to the nearest lowered batch size.
+//! The real executor drives a PJRT CPU client through external XLA
+//! bindings (the `xla` crate from xla-rs) and is gated behind the
+//! `pjrt` cargo feature — the offline build image carries no XLA
+//! bindings, so the default build compiles an API-compatible stub whose
+//! constructor fails with a clear message (see DESIGN.md §5).  Variant
+//! selection and quantization-scalar packing are pure functions and stay
+//! available in every build.
+//!
+//! Performance notes (§Perf in EXPERIMENTS.md): weight tensors are
+//! uploaded once per network configuration and cached as `PjRtBuffer`s
+//! (12.8 MB — re-uploading them per batch dominated early profiles);
+//! executables are compiled lazily and cached; inputs are padded to the
+//! nearest lowered batch size.
 
-use super::artifact::ArtifactDir;
 use crate::approx::arith::ArithKind;
-use crate::nn::loader::load_weights;
-use crate::nn::loader::PARAM_NAMES;
 use crate::nn::network::NetConfig;
-use crate::nn::tensor::Tensor;
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use crate::runtime::artifact::ArtifactDir;
+use anyhow::{bail, Result};
+
+/// Try to start the PJRT runner, warning on stderr and returning `None`
+/// when the backend is unavailable (a build without the `pjrt` feature,
+/// or a genuine PJRT init failure) so callers fall back to the
+/// bit-accurate engine backend.
+pub fn runner_or_warn(art: ArtifactDir) -> Option<ModelRunner> {
+    match ModelRunner::new(art) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("note: PJRT backend unavailable ({e}); \
+                       using the bit-accurate engine");
+            None
+        }
+    }
+}
 
 /// Which AOT artifact family a configuration runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -74,157 +94,234 @@ pub fn quant_scalars(cfg: &NetConfig) -> Result<Vec<f32>> {
     Ok(out)
 }
 
-pub struct ModelRunner {
-    client: xla::PjRtClient,
-    pub art: ArtifactDir,
-    /// float32 parameters in artifact order: (dims, data)
-    weights: Vec<(Vec<usize>, Vec<f32>)>,
-    execs: HashMap<(Variant, usize), xla::PjRtLoadedExecutable>,
-    /// uploaded (possibly quantized) weight buffers, keyed by config name
-    wbufs: HashMap<String, Vec<xla::PjRtBuffer>>,
-    pub compile_count: usize,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_runner {
+    use super::{quant_scalars, Variant};
+    use crate::approx::arith::ArithKind;
+    use crate::nn::loader::load_weights;
+    use crate::nn::loader::PARAM_NAMES;
+    use crate::nn::network::NetConfig;
+    use crate::nn::tensor::Tensor;
+    use crate::runtime::artifact::ArtifactDir;
+    use anyhow::{Context, Result};
+    use std::collections::HashMap;
 
-impl ModelRunner {
-    pub fn new(art: ArtifactDir) -> Result<ModelRunner> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
-        let params = load_weights(&art.weights_path())?;
-        crate::nn::loader::validate_dcnn(&params)?;
-        let weights = PARAM_NAMES
-            .iter()
-            .map(|n| {
-                let t = &params[*n];
-                (t.shape.clone(), t.data.clone())
+    pub struct ModelRunner {
+        client: xla::PjRtClient,
+        pub art: ArtifactDir,
+        /// float32 parameters in artifact order: (dims, data)
+        weights: Vec<(Vec<usize>, Vec<f32>)>,
+        execs: HashMap<(Variant, usize), xla::PjRtLoadedExecutable>,
+        /// uploaded (possibly quantized) weight buffers, keyed by config
+        /// name
+        wbufs: HashMap<String, Vec<xla::PjRtBuffer>>,
+        pub compile_count: usize,
+    }
+
+    impl ModelRunner {
+        pub fn new(art: ArtifactDir) -> Result<ModelRunner> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+            let params = load_weights(&art.weights_path())?;
+            crate::nn::loader::validate_dcnn(&params)?;
+            let weights = PARAM_NAMES
+                .iter()
+                .map(|n| {
+                    let t = &params[*n];
+                    (t.shape.clone(), t.data.clone())
+                })
+                .collect();
+            Ok(ModelRunner {
+                client,
+                art,
+                weights,
+                execs: HashMap::new(),
+                wbufs: HashMap::new(),
+                compile_count: 0,
             })
-            .collect();
-        Ok(ModelRunner {
-            client,
-            art,
-            weights,
-            execs: HashMap::new(),
-            wbufs: HashMap::new(),
-            compile_count: 0,
-        })
-    }
-
-    fn executable(&mut self, variant: Variant, batch: usize)
-                  -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.execs.contains_key(&(variant, batch)) {
-            let path = self.art.hlo_path(variant.tag(), batch);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e}"))?;
-            self.compile_count += 1;
-            self.execs.insert((variant, batch), exe);
         }
-        Ok(&self.execs[&(variant, batch)])
-    }
 
-    /// Upload (quantizing first when required) the weight set for `cfg`.
-    fn weight_buffers(&mut self, cfg: &NetConfig)
-                      -> Result<&Vec<xla::PjRtBuffer>> {
-        let key = cfg.name();
-        if !self.wbufs.contains_key(&key) {
-            let mut bufs = Vec::with_capacity(8);
-            for (pi, (dims, data)) in self.weights.iter().enumerate() {
-                let kind = &cfg.layers[pi / 2]; // w, b alternate per layer
-                let qdata: Vec<f32> = match kind {
-                    ArithKind::Float32 => data.clone(),
-                    k => data.iter().map(|&v| k.quantize(v)).collect(),
-                };
-                let buf = self
+        fn executable(&mut self, variant: Variant, batch: usize)
+                      -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.execs.contains_key(&(variant, batch)) {
+                let path = self.art.hlo_path(variant.tag(), batch);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
                     .client
-                    .buffer_from_host_buffer::<f32>(&qdata, dims, None)
-                    .map_err(|e| anyhow::anyhow!("uploading weights: {e}"))?;
-                bufs.push(buf);
+                    .compile(&comp)
+                    .map_err(|e| {
+                        anyhow::anyhow!("compiling {path:?}: {e}")
+                    })?;
+                self.compile_count += 1;
+                self.execs.insert((variant, batch), exe);
             }
-            self.wbufs.insert(key.clone(), bufs);
+            Ok(&self.execs[&(variant, batch)])
         }
-        Ok(&self.wbufs[&key])
-    }
 
-    /// Run a forward pass for `cfg` over `x` ([n,28,28,1] tensor); returns
-    /// logits [n,10].  Pads to the nearest lowered batch size internally.
-    pub fn forward(&mut self, cfg: &NetConfig, x: &Tensor) -> Result<Tensor> {
-        let variant = Variant::for_config(cfg).with_context(|| {
-            format!("config {} is not PJRT-expressible", cfg.name())
-        })?;
-        let n = x.shape[0];
-        assert_eq!(&x.shape[1..], &[28, 28, 1]);
-        let mut logits = Vec::with_capacity(n * 10);
-        let mut done = 0;
-        while done < n {
-            let chunk = (n - done).min(*self.art.batch_sizes.last().unwrap());
-            let batch = self.art.batch_for(chunk);
-            let mut padded = vec![0.0f32; batch * 784];
-            padded[..chunk * 784]
-                .copy_from_slice(&x.data[done * 784..(done + chunk) * 784]);
-            let out = self.forward_padded(cfg, variant, &padded, batch)?;
-            logits.extend_from_slice(&out[..chunk * 10]);
-            done += chunk;
+        /// Upload (quantizing first when required) the weight set for
+        /// `cfg`.
+        fn weight_buffers(&mut self, cfg: &NetConfig)
+                          -> Result<&Vec<xla::PjRtBuffer>> {
+            let key = cfg.name();
+            if !self.wbufs.contains_key(&key) {
+                let mut bufs = Vec::with_capacity(8);
+                for (pi, (dims, data)) in self.weights.iter().enumerate() {
+                    let kind = &cfg.layers[pi / 2]; // w, b alternate
+                    let qdata: Vec<f32> = match kind {
+                        ArithKind::Float32 => data.clone(),
+                        k => data.iter().map(|&v| k.quantize(v)).collect(),
+                    };
+                    let buf = self
+                        .client
+                        .buffer_from_host_buffer::<f32>(&qdata, dims, None)
+                        .map_err(|e| {
+                            anyhow::anyhow!("uploading weights: {e}")
+                        })?;
+                    bufs.push(buf);
+                }
+                self.wbufs.insert(key.clone(), bufs);
+            }
+            Ok(&self.wbufs[&key])
         }
-        Ok(Tensor::new(vec![n, 10], logits))
-    }
 
-    fn forward_padded(&mut self, cfg: &NetConfig, variant: Variant,
-                      padded: &[f32], batch: usize) -> Result<Vec<f32>> {
-        let scalars = if variant == Variant::F32 {
-            Vec::new()
-        } else {
-            quant_scalars(cfg)?
-        };
-        // upload input + scalars
-        let xbuf = self
-            .client
-            .buffer_from_host_buffer::<f32>(padded, &[batch, 28, 28, 1],
-                                            None)
-            .map_err(|e| anyhow::anyhow!("uploading input: {e}"))?;
-        let mut sbufs = Vec::with_capacity(scalars.len());
-        for s in &scalars {
-            sbufs.push(
-                self.client
-                    .buffer_from_host_buffer::<f32>(&[*s], &[], None)
-                    .map_err(|e| anyhow::anyhow!("uploading scalar: {e}"))?,
-            );
+        /// Run a forward pass for `cfg` over `x` ([n,28,28,1] tensor);
+        /// returns logits [n,10].  Pads to the nearest lowered batch size
+        /// internally.
+        pub fn forward(&mut self, cfg: &NetConfig, x: &Tensor)
+                       -> Result<Tensor> {
+            let variant = Variant::for_config(cfg).with_context(|| {
+                format!("config {} is not PJRT-expressible", cfg.name())
+            })?;
+            let n = x.shape[0];
+            assert_eq!(&x.shape[1..], &[28, 28, 1]);
+            let mut logits = Vec::with_capacity(n * 10);
+            let mut done = 0;
+            while done < n {
+                let chunk =
+                    (n - done).min(*self.art.batch_sizes.last().unwrap());
+                let batch = self.art.batch_for(chunk);
+                let mut padded = vec![0.0f32; batch * 784];
+                padded[..chunk * 784].copy_from_slice(
+                    &x.data[done * 784..(done + chunk) * 784],
+                );
+                let out =
+                    self.forward_padded(cfg, variant, &padded, batch)?;
+                logits.extend_from_slice(&out[..chunk * 10]);
+                done += chunk;
+            }
+            Ok(Tensor::new(vec![n, 10], logits))
         }
-        // ensure weights + executable exist (two-phase to appease borrows)
-        self.weight_buffers(cfg)?;
-        self.executable(variant, batch)?;
-        let wbufs = &self.wbufs[&cfg.name()];
-        let exe = &self.execs[&(variant, batch)];
 
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(17);
-        args.push(&xbuf);
-        args.extend(wbufs.iter());
-        args.extend(sbufs.iter());
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(&args)
-            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("download: {e}"))?;
-        let out = lit
-            .to_tuple1()
-            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
-        let v = out
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
-        anyhow::ensure!(v.len() == batch * 10, "bad output size {}", v.len());
-        Ok(v)
-    }
+        fn forward_padded(&mut self, cfg: &NetConfig, variant: Variant,
+                          padded: &[f32], batch: usize)
+                          -> Result<Vec<f32>> {
+            let scalars = if variant == Variant::F32 {
+                Vec::new()
+            } else {
+                quant_scalars(cfg)?
+            };
+            // upload input + scalars
+            let xbuf = self
+                .client
+                .buffer_from_host_buffer::<f32>(padded,
+                                                &[batch, 28, 28, 1],
+                                                None)
+                .map_err(|e| anyhow::anyhow!("uploading input: {e}"))?;
+            let mut sbufs = Vec::with_capacity(scalars.len());
+            for s in &scalars {
+                sbufs.push(
+                    self.client
+                        .buffer_from_host_buffer::<f32>(&[*s], &[], None)
+                        .map_err(|e| {
+                            anyhow::anyhow!("uploading scalar: {e}")
+                        })?,
+                );
+            }
+            // ensure weights + executable exist (two-phase to appease
+            // borrows)
+            self.weight_buffers(cfg)?;
+            self.executable(variant, batch)?;
+            let wbufs = &self.wbufs[&cfg.name()];
+            let exe = &self.execs[&(variant, batch)];
 
-    /// Number of executables compiled so far (for cache-behavior tests).
-    pub fn cached_executables(&self) -> usize {
-        self.execs.len()
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(17);
+            args.push(&xbuf);
+            args.extend(wbufs.iter());
+            args.extend(sbufs.iter());
+            let result = exe
+                .execute_b::<&xla::PjRtBuffer>(&args)
+                .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+            let out = lit
+                .to_tuple1()
+                .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+            let v = out
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+            anyhow::ensure!(v.len() == batch * 10,
+                            "bad output size {}", v.len());
+            Ok(v)
+        }
+
+        /// Number of executables compiled so far (for cache-behavior
+        /// tests).
+        pub fn cached_executables(&self) -> usize {
+            self.execs.len()
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_runner::ModelRunner;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_runner {
+    use crate::nn::network::NetConfig;
+    use crate::nn::tensor::Tensor;
+    use crate::runtime::artifact::ArtifactDir;
+    use anyhow::{bail, Result};
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: this build has no XLA bindings \
+         (rebuild with `--features pjrt` and the xla dependency, see \
+         DESIGN.md §5); exact-arithmetic configs still run on the \
+         bit-accurate engine backend";
+
+    /// API-compatible stand-in for the PJRT [`ModelRunner`] used when the
+    /// crate is built without the `pjrt` feature.  Construction fails, so
+    /// callers holding `Option<ModelRunner>` (the evaluator, the server's
+    /// worker pool) fall back to the bit-accurate engine backend.
+    pub struct ModelRunner {
+        /// kept for API parity: `examples/explore_dse.rs` reads it
+        pub art: ArtifactDir,
+    }
+
+    impl ModelRunner {
+        pub fn new(_art: ArtifactDir) -> Result<ModelRunner> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn forward(&mut self, _cfg: &NetConfig, _x: &Tensor)
+                       -> Result<Tensor> {
+            bail!(UNAVAILABLE)
+        }
+
+        /// Number of executables compiled so far (always zero: the stub
+        /// cannot be constructed).
+        pub fn cached_executables(&self) -> usize {
+            0
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_runner::ModelRunner;
 
 #[cfg(test)]
 mod tests {
@@ -265,5 +362,20 @@ mod tests {
         assert_eq!(&s[0..2], &[4.0, 9.0]);
         assert!(quant_scalars(&NetConfig::parse("I(5,10)").unwrap())
             .is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runner_fails_with_clear_message() {
+        let art = ArtifactDir {
+            root: std::path::PathBuf::from("/nonexistent"),
+            batch_sizes: vec![1],
+            baseline_accuracy: 0.0,
+        };
+        let err = match ModelRunner::new(art) {
+            Ok(_) => panic!("stub ModelRunner must not construct"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("pjrt"), "unhelpful error: {err}");
     }
 }

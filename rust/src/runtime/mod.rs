@@ -11,4 +11,4 @@ pub mod artifact;
 pub mod executor;
 
 pub use artifact::ArtifactDir;
-pub use executor::{ModelRunner, Variant};
+pub use executor::{runner_or_warn, ModelRunner, Variant};

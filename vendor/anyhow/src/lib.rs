@@ -1,0 +1,177 @@
+//! Vendored minimal stand-in for the `anyhow` crate.
+//!
+//! The offline toolchain image has no crates.io registry cache, so the
+//! real `anyhow` cannot be resolved; this shim provides the (small)
+//! subset of its API that the `lop` crate uses, with compatible
+//! semantics:
+//!
+//! * [`Error`] — an opaque error carrying a display message and a
+//!   context chain,
+//! * [`Result`] — `std::result::Result` with `Error` as the default
+//!   error type,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — ad-hoc error construction,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both
+//!   `Result` and `Option`.
+//!
+//! Swapping back to the real crate is a one-line change in the root
+//! `Cargo.toml`; no call site needs to change.
+
+use std::fmt;
+
+/// Opaque error: a message plus prepended context strings.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (the real crate's
+    /// `Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context line, as `Context::context` does.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on the real anyhow prints the whole context chain; the
+        // shim stores the chain pre-joined, so both forms are identical.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// Any std error converts implicitly, so `?` works on io/parse/... errors
+/// inside functions returning [`Result`].
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `std::result::Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// [`bail!`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/anyhow-shim-test")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_and_context() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 42;
+        let e = anyhow!("x = {x}");
+        assert_eq!(e.to_string(), "x = 42");
+        let e = anyhow!("x = {}", x);
+        assert_eq!(e.to_string(), "x = 42");
+        let e = anyhow!(String::from("owned message"));
+        assert_eq!(e.to_string(), "owned message");
+
+        fn bails(flag: bool) -> Result<()> {
+            ensure!(!flag, "flag was {}", flag);
+            bail!("always fails")
+        }
+        assert_eq!(bails(true).unwrap_err().to_string(), "flag was true");
+        assert_eq!(bails(false).unwrap_err().to_string(), "always fails");
+    }
+
+    #[test]
+    fn alternate_display_matches_plain() {
+        let e = anyhow!("leaf").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer: mid: leaf");
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+    }
+}
