@@ -1,11 +1,26 @@
-//! GEMM kernel microbenchmarks — the L3 hot path the §Perf pass iterates
-//! on.  Reports per-provider throughput in M MAC/s on the network's real
-//! layer shapes.
+//! GEMM kernel microbenchmarks — the L3 hot path the §Perf pass
+//! iterates on.  For every arithmetic provider this runs the packed,
+//! tiled kernel *and* the pre-tiling `reference` kernel on the
+//! network's real layer shapes, reporting M MAC/s and the packed :
+//! reference speedup, and writes the whole table as JSON
+//! (`BENCH_gemm_kernels.json`, or `$LOP_BENCH_JSON`) so CI can archive
+//! it.
 
 use lop::approx::arith::ArithKind;
-use lop::nn::gemm::gemm;
+use lop::nn::gemm::reference::gemm_reference;
+use lop::nn::gemm::GemmPlan;
 use lop::util::bench::{bench, header};
 use lop::util::prng::Rng;
+
+struct Row {
+    shape: String,
+    kind: String,
+    threads: usize,
+    packed_ns: f64,
+    reference_ns: f64,
+    mmacs_packed: f64,
+    mmacs_reference: f64,
+}
 
 fn mats(m: usize, k: usize, n: usize, kind: &ArithKind)
         -> (Vec<f32>, Vec<f32>, Vec<f32>) {
@@ -19,31 +34,87 @@ fn mats(m: usize, k: usize, n: usize, kind: &ArithKind)
 }
 
 fn run_shape(label: &str, m: usize, k: usize, n: usize, iters: usize,
-             kinds: &[(&str, usize)]) {
+             kinds: &[(&str, usize)], rows: &mut Vec<Row>) {
     println!("\n--- {label}: [{m} x {k}] @ [{k} x {n}] ---");
     header();
     let macs = (m * k * n) as f64;
     for (ks, threads) in kinds {
         let kind = ArithKind::parse(ks).unwrap();
+        let plan = GemmPlan::new(&kind);
         let (x, w, mut out) = mats(m, k, n, &kind);
-        let r = bench(
-            &format!("{ks} (threads={threads})"),
+        let rp = bench(
+            &format!("{ks} packed (threads={threads})"),
             1,
             iters,
             || {
-                gemm(&kind, &x, &w, m, k, n, &mut out, *threads);
+                plan.run(&x, &w, m, k, n, &mut out, *threads);
                 std::hint::black_box(&out);
             },
         );
-        let mmacs = macs / (r.mean_ns() / 1e9) / 1e6;
-        println!("{}  -> {:.0} M MAC/s", r.summary(), mmacs);
+        let rr = bench(
+            &format!("{ks} reference (threads={threads})"),
+            1,
+            iters,
+            || {
+                gemm_reference(&kind, &x, &w, m, k, n, &mut out,
+                               *threads);
+                std::hint::black_box(&out);
+            },
+        );
+        let mm_p = macs / (rp.mean_ns() / 1e9) / 1e6;
+        let mm_r = macs / (rr.mean_ns() / 1e9) / 1e6;
+        println!("{}  -> {:.0} M MAC/s", rp.summary(), mm_p);
+        println!("{}  -> {:.0} M MAC/s  (packed {:.2}x)",
+                 rr.summary(), mm_r,
+                 rr.mean_ns() / rp.mean_ns().max(1.0));
+        rows.push(Row {
+            shape: label.to_string(),
+            kind: ks.to_string(),
+            threads: *threads,
+            packed_ns: rp.mean_ns(),
+            reference_ns: rr.mean_ns(),
+            mmacs_packed: mm_p,
+            mmacs_reference: mm_r,
+        });
+    }
+}
+
+fn write_json(rows: &[Row]) {
+    let path = std::env::var("LOP_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_gemm_kernels.json".to_string());
+    let mut body = String::from(
+        "{\n  \"bench\": \"gemm_kernels\",\n  \"rows\": [\n",
+    );
+    for (i, r) in rows.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"shape\": \"{}\", \"kind\": \"{}\", \"threads\": \
+             {}, \"packed_mean_ns\": {:.0}, \"reference_mean_ns\": \
+             {:.0}, \"packed_mmacs\": {:.1}, \"reference_mmacs\": \
+             {:.1}, \"speedup\": {:.3}}}{}\n",
+            r.shape,
+            r.kind,
+            r.threads,
+            r.packed_ns,
+            r.reference_ns,
+            r.mmacs_packed,
+            r.mmacs_reference,
+            r.reference_ns / r.packed_ns.max(1.0),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }
 
 fn main() {
-    println!("=== GEMM kernels: M MAC/s per arithmetic provider ===");
+    println!("=== GEMM kernels: packed/tiled vs reference, M MAC/s ===");
+    let mut rows = Vec::new();
 
-    // FC1 shape (the network's dominant GEMM): batch 64
+    // FC1 shape (the network's dominant GEMM): batch 64 — all six
+    // provider variants, single- and all-core
     run_shape(
         "FC1, batch 64",
         64,
@@ -59,6 +130,7 @@ fn main() {
             ("FL(4,9)", 0),
             ("binxnor", 0),
         ],
+        &mut rows,
     );
 
     // CFPU is the expensive provider: smaller shape, same layout
@@ -69,6 +141,7 @@ fn main() {
         256,
         5,
         &[("I(5,10)", 1), ("I(5,10)", 0), ("FL(5,10)", 0)],
+        &mut rows,
     );
 
     // CONV2 as im2col: [batch*14*14, 800] @ [800, 64]
@@ -79,5 +152,8 @@ fn main() {
         64,
         5,
         &[("float32", 0), ("FI(6,8)", 0), ("H(6,8,12)", 0)],
+        &mut rows,
     );
+
+    write_json(&rows);
 }

@@ -4,9 +4,9 @@
 //! fixed", §3).  One provider is attached per partition part (per layer in
 //! layer-wise optimization).
 //!
-//! The scalar semantics live here; the optimized GEMM kernels that the NN
-//! engine actually runs are in `nn/gemm.rs` (one monomorphized kernel per
-//! provider kind — no dispatch inside MAC loops).
+//! The scalar semantics live here; the packed, tiled GEMM kernels that
+//! the NN engine actually runs are under `nn/gemm/` (one monomorphized
+//! microkernel per provider kind — no dispatch inside MAC loops).
 
 use super::cfpu::CfpuMul;
 use super::drum::DrumMul;
@@ -108,7 +108,7 @@ impl ArithKind {
     /// The MAC-array product fed to the *wide* accumulator: the full-width
     /// product before any re-quantization (the paper widens the
     /// integral-bit BCI so partial sums never need narrowing, §4.2).
-    /// This is the semantics the GEMM kernels in `nn/gemm.rs` implement;
+    /// This is the semantics the GEMM kernels under `nn/gemm/` implement;
     /// [`ArithKind::mul`] by contrast models the standalone scalar unit,
     /// whose output register is in the representation (it re-quantizes).
     pub fn mul_wide(&self, a: f32, b: f32) -> f64 {

@@ -8,7 +8,7 @@
 
 use crate::data::Dataset;
 use crate::nn::network::{Dcnn, NetConfig};
-use crate::runtime::{ModelRunner, Variant};
+use crate::runtime::{execution_plan, ExecutionPlan, ModelRunner};
 use anyhow::Result;
 use std::collections::HashMap;
 
@@ -47,10 +47,11 @@ impl Evaluator {
     }
 
     pub fn backend_for(&self, cfg: &NetConfig) -> Backend {
-        if self.runner.is_some() && Variant::for_config(cfg).is_some() {
-            Backend::Pjrt
-        } else {
-            Backend::Engine
+        match execution_plan(cfg) {
+            ExecutionPlan::Pjrt(_) if self.runner.is_some() => {
+                Backend::Pjrt
+            }
+            _ => Backend::Engine,
         }
     }
 

@@ -14,8 +14,9 @@
 //! * [`approx`] — approximate arithmetic units (DRUM, CFPU, Mitchell,
 //!   SSM, truncated multipliers, LOA adders) and the [`approx::ArithKind`]
 //!   provider that pairs a representation with a multiplier;
-//! * [`nn`] — the bit-accurate DCNN engine whose GEMM kernels
-//!   ([`nn::gemm::gemm`]) are monomorphized per provider;
+//! * [`nn`] — the bit-accurate DCNN engine whose packed, cache-tiled
+//!   GEMM kernels ([`nn::gemm::gemm`], selected per layer through
+//!   [`nn::gemm::GemmPlan`]) are monomorphized per provider;
 //! * [`hw`] — the analytical hardware cost model (Table 5 substitute for
 //!   Quartus synthesis);
 //! * [`runtime`] — the PJRT/XLA executor for exact-arithmetic configs

@@ -1,9 +1,30 @@
-//! im2col patch extraction — stride-1, zero-padded, patch layout
-//! (ky, kx, c) fastest-last, identical to `python/compile/model.py::im2col`
-//! so weight tensors interchange between the PJRT artifacts and this
-//! engine.
+//! Convolution via im2col + the packed GEMM path.
+//!
+//! [`im2col`] extracts stride-1, zero-padded patches with layout
+//! (ky, kx, c) fastest-last, identical to
+//! `python/compile/model.py::im2col` so weight tensors interchange
+//! between the PJRT artifacts and this engine.  [`conv2d`] lowers the
+//! convolution onto the same packed, tiled kernels every other GEMM in
+//! the engine runs on (`nn::gemm::GemmPlan`).
 
+use super::gemm::GemmPlan;
 use super::tensor::Tensor;
+
+/// Convolution as im2col + packed GEMM: `x` is [B,H,W,C], `w2` the
+/// kernel flattened to [kh*kw*C, cout] (pre-quantized, as
+/// `Dcnn::prepare` produces).  Returns [B*H*W, cout]; the caller
+/// reshapes to [B,H,W,cout].
+pub fn conv2d(plan: &GemmPlan, x: &Tensor, w2: &Tensor, kh: usize,
+              kw: usize, pad: usize, threads: usize) -> Tensor {
+    let cols = im2col(x, kh, kw, pad);
+    let (m, k) = (cols.shape[0], cols.shape[1]);
+    assert_eq!(w2.ndim(), 2, "conv weights must be [kh*kw*C, cout]");
+    assert_eq!(w2.shape[0], k, "conv weight rows != patch length");
+    let n = w2.shape[1];
+    let mut out = Tensor::zeros(vec![m, n]);
+    plan.run(&cols.data, &w2.data, m, k, n, &mut out.data, threads);
+    out
+}
 
 /// [B,H,W,C] -> [B*H*W, kh*kw*C] patches (stride 1, zero padding `pad`).
 pub fn im2col(x: &Tensor, kh: usize, kw: usize, pad: usize) -> Tensor {
@@ -72,6 +93,22 @@ mod tests {
         let cols = im2col(&x, 1, 1, 0);
         assert_eq!(cols.shape, vec![4, 3]);
         assert_eq!(cols.data, x.data);
+    }
+
+    #[test]
+    fn conv2d_identity_1x1() {
+        use crate::approx::arith::ArithKind;
+        let x = Tensor::new(vec![1, 2, 2, 3],
+                            (0..12).map(|v| v as f32).collect());
+        let mut wid = vec![0.0f32; 9];
+        for i in 0..3 {
+            wid[i * 3 + i] = 1.0;
+        }
+        let w2 = Tensor::new(vec![3, 3], wid);
+        let plan = GemmPlan::new(&ArithKind::Float32);
+        let out = conv2d(&plan, &x, &w2, 1, 1, 0, 1);
+        assert_eq!(out.shape, vec![4, 3]);
+        assert_eq!(out.data, x.data);
     }
 
     #[test]

@@ -1,0 +1,352 @@
+//! The object-safe [`Kernel`] trait, the Goto-style blocked driver and
+//! the MR x NR register-tile microkernel.
+//!
+//! Loop structure (per thread, over its row chunk):
+//!
+//! ```text
+//! for ic in MC row blocks          // L2: A block  (MC x KC)
+//!   for jc in NC column blocks     // L2/L3: wide accumulator tile
+//!     acc[MC x NC] = 0             //   (f64/i64 — stays wide across
+//!     for pc in KC depth blocks    //    *all* depth blocks)
+//!       for ir in MR panels        // registers
+//!         for jr in NR panels
+//!           microkernel: acc += A-panel x B-panel over kc
+//!     out[ic+.., jc+..] = finish(acc)   // one narrowing, at the end
+//! ```
+//!
+//! This deviates from the textbook Goto ordering (`jc -> pc -> ic`) in
+//! one deliberate way: the depth loop `pc` is *innermost* of the cache
+//! loops so the wide accumulator tile persists across the whole k
+//! reduction.  That is what makes the tiled path bit-identical to the
+//! `reference` kernels (each output element folds its products in
+//! strictly increasing k order into one wide accumulator, narrowed
+//! once) — a partial-sum spill to f32 between depth blocks would
+//! change roundings.  Operands are packed once up front
+//! (`pack_a_block` / `pack_b_block`), so no packing work is repeated
+//! inside the block loops.
+//!
+//! Threading splits rows into per-thread chunks aligned to MR (panels
+//! never straddle threads); each output element is still reduced by
+//! exactly one thread in the same order, so results are bit-identical
+//! across thread counts.
+
+use super::micro::MicroArith;
+use super::pack::{pack_a_block, pack_b_block};
+use crate::numeric::BinXnor;
+
+/// Row-block size: the A sub-block (MC x KC) an inner sweep works on.
+pub const MC: usize = 64;
+/// Depth-block size: panel slices streamed through the microkernel.
+pub const KC: usize = 256;
+/// Column-block size: bounds the wide accumulator tile (MC x NC wide
+/// elements, 128 KiB at f64/i64 — L2-resident on the target cores).
+pub const NC: usize = 256;
+
+/// Outputs below this threshold stay single-threaded (same heuristic
+/// as the pre-tiled kernels: thread spawn costs more than the GEMM).
+const PAR_MIN_OUT: usize = 16 * 1024;
+
+/// Threads used by the row-parallel drivers (0 = all available cores).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a requested thread count against the problem size.
+fn effective_threads(threads: usize, m: usize, n: usize) -> usize {
+    let t = if threads == 0 { default_threads() } else { threads };
+    if m * n < PAR_MIN_OUT {
+        1
+    } else {
+        t.min(m).max(1)
+    }
+}
+
+/// One packed, tiled GEMM engine for a fixed `ArithKind`.  Object-safe:
+/// `GemmPlan` holds these as `Box<dyn Kernel>`; the monomorphized
+/// implementations behind it are `BlockedKernel<A, MR, NR>` (one per
+/// provider) and the bit-packed `BinaryKernel`.
+pub trait Kernel: Send + Sync {
+    /// Kernel name for plans/logs, e.g. `packed-fi`.
+    fn name(&self) -> &'static str;
+
+    /// Microkernel tile height.
+    fn mr(&self) -> usize;
+
+    /// Microkernel tile width.
+    fn nr(&self) -> usize;
+
+    /// `out = cond(x) @ cond(w)`.  The caller (`GemmPlan::run`) checks
+    /// the shape invariants and short-circuits the m/n/k = 0 edges, so
+    /// implementations may assume `m, k, n >= 1` and exact slice
+    /// lengths.
+    fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
+           out: &mut [f32], threads: usize);
+}
+
+/// The generic blocked engine: one monomorphization per provider.
+pub struct BlockedKernel<A: MicroArith, const MR: usize, const NR: usize> {
+    arith: A,
+}
+
+impl<A: MicroArith, const MR: usize, const NR: usize>
+    BlockedKernel<A, MR, NR>
+{
+    pub fn new(arith: A) -> Self {
+        // The block loops assume whole panels fit a block.
+        assert!(MC % MR == 0, "MC must be a multiple of MR");
+        assert!(NC % NR == 0, "NC must be a multiple of NR");
+        BlockedKernel { arith }
+    }
+}
+
+impl<A: MicroArith, const MR: usize, const NR: usize> Kernel
+    for BlockedKernel<A, MR, NR>
+{
+    fn name(&self) -> &'static str {
+        self.arith.name()
+    }
+
+    fn mr(&self) -> usize {
+        MR
+    }
+
+    fn nr(&self) -> usize {
+        NR
+    }
+
+    fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
+           out: &mut [f32], threads: usize) {
+        let ap = pack_a_block::<A, MR>(&self.arith, x, m, k);
+        let bp = pack_b_block::<A, NR>(&self.arith, w, k, n);
+        let threads = effective_threads(threads, m, n);
+        if threads <= 1 {
+            drive::<A, MR, NR>(&self.arith, &ap, &bp, 0, out, k, n);
+            return;
+        }
+        // Chunk rows per thread, aligned to MR so no A panel straddles
+        // two threads.
+        let rows_per = m.div_ceil(threads).next_multiple_of(MR);
+        std::thread::scope(|s| {
+            for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let (ap, bp, arith) = (&ap, &bp, &self.arith);
+                s.spawn(move || {
+                    drive::<A, MR, NR>(arith, ap, bp, t * rows_per,
+                                       chunk, k, n);
+                });
+            }
+        });
+    }
+}
+
+/// Blocked sweep over one thread's row chunk (`chunk` = rows
+/// `[row0, row0 + chunk.len()/n)` of the output).  `row0` is a
+/// multiple of MR.
+fn drive<A: MicroArith, const MR: usize, const NR: usize>(
+    arith: &A, ap: &[A::Elem], bp: &[A::Elem], row0: usize,
+    chunk: &mut [f32], k: usize, n: usize,
+) {
+    let mrows = chunk.len() / n;
+    // Wide accumulator tile, reused across blocks (zeroed per tile).
+    let mut acc: Vec<A::Acc> = vec![arith.zero_acc(); MC * NC];
+    for ic in (0..mrows).step_by(MC) {
+        let mc = MC.min(mrows - ic);
+        let mc_pad = mc.next_multiple_of(MR);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            let nc_pad = nc.next_multiple_of(NR);
+            for a in acc[..mc_pad * nc_pad].iter_mut() {
+                *a = arith.zero_acc();
+            }
+            for pc in (0..k).step_by(KC) {
+                let kc = KC.min(k - pc);
+                for ir in (0..mc_pad).step_by(MR) {
+                    // global A panel (row0, ic, ir all MR-aligned)
+                    let p = (row0 + ic + ir) / MR;
+                    let abase = p * MR * k + pc * MR;
+                    let apan = &ap[abase..abase + kc * MR];
+                    for jr in (0..nc_pad).step_by(NR) {
+                        let q = (jc + jr) / NR;
+                        let bbase = q * NR * k + pc * NR;
+                        let bpan = &bp[bbase..bbase + kc * NR];
+                        micro::<A, MR, NR>(
+                            arith, apan, bpan, kc,
+                            &mut acc[ir * nc_pad + jr..],
+                            nc_pad,
+                        );
+                    }
+                }
+            }
+            for r in 0..mc {
+                let o0 = (ic + r) * n + jc;
+                let orow = &mut chunk[o0..o0 + nc];
+                let arow = &acc[r * nc_pad..r * nc_pad + nc];
+                for (o, a) in orow.iter_mut().zip(arow) {
+                    *o = arith.finish(*a);
+                }
+            }
+        }
+    }
+}
+
+/// The MR x NR register-tile microkernel: load the accumulator tile,
+/// stream `kc` packed depth steps through it, store it back.  Per
+/// output element this appends products in increasing k order — the
+/// bit-exactness invariant.
+#[inline]
+fn micro<A: MicroArith, const MR: usize, const NR: usize>(
+    arith: &A, apan: &[A::Elem], bpan: &[A::Elem], kc: usize,
+    acc: &mut [A::Acc], stride: usize,
+) {
+    let mut t = [[arith.zero_acc(); NR]; MR];
+    for (i, trow) in t.iter_mut().enumerate() {
+        trow.copy_from_slice(&acc[i * stride..i * stride + NR]);
+    }
+    for p in 0..kc {
+        let av = &apan[p * MR..(p + 1) * MR];
+        let bv = &bpan[p * NR..(p + 1) * NR];
+        for (i, trow) in t.iter_mut().enumerate() {
+            let a = av[i];
+            for (j, tv) in trow.iter_mut().enumerate() {
+                *tv = arith.mul_acc(a, bv[j], *tv);
+            }
+        }
+    }
+    for (i, trow) in t.iter().enumerate() {
+        acc[i * stride..i * stride + NR].copy_from_slice(trow);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// binary XNOR kernel (paper §4.5): the packing *is* the conditioning —
+// 64 sign bits per word, so panels are built along k in words and the
+// microkernel is popcount over word panels.
+// ---------------------------------------------------------------------------
+
+/// Microkernel tile for the binary path (word panels, u32 agree
+/// counters).
+const BMR: usize = 4;
+const BNR: usize = 4;
+
+/// Bit-packed XNOR/popcount kernel for `ArithKind::Binary`.
+pub struct BinaryKernel;
+
+impl Kernel for BinaryKernel {
+    fn name(&self) -> &'static str {
+        "packed-binxnor"
+    }
+
+    fn mr(&self) -> usize {
+        BMR
+    }
+
+    fn nr(&self) -> usize {
+        BNR
+    }
+
+    fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
+           out: &mut [f32], threads: usize) {
+        let words = k.div_ceil(64);
+        // A: BMR-row word panels, offset(p, wd, r) = p*BMR*words +
+        // wd*BMR + r (same middle-axis layout as pack::pack_a_block).
+        let apanels = m.div_ceil(BMR);
+        let mut ap = vec![0u64; apanels * BMR * words];
+        for r in 0..m {
+            let base = (r / BMR) * BMR * words + r % BMR;
+            let xrow = &x[r * k..(r + 1) * k];
+            for (d, &v) in xrow.iter().enumerate() {
+                ap[base + (d / 64) * BMR] |=
+                    BinXnor::binarize(v) << (d % 64);
+            }
+        }
+        // B: BNR-column word panels.
+        let bpanels = n.div_ceil(BNR);
+        let mut bp = vec![0u64; bpanels * BNR * words];
+        for d in 0..k {
+            let wrow = &w[d * n..(d + 1) * n];
+            for (c, &v) in wrow.iter().enumerate() {
+                let base = (c / BNR) * BNR * words + c % BNR;
+                bp[base + (d / 64) * BNR] |=
+                    BinXnor::binarize(v) << (d % 64);
+            }
+        }
+        // bits >= k in the last word must not count as agreements
+        let tail_bits = k % 64;
+        let tail_mask =
+            if tail_bits == 0 { u64::MAX } else { (1u64 << tail_bits) - 1 };
+
+        let threads = effective_threads(threads, m, n);
+        let rows_per = if threads <= 1 {
+            m.next_multiple_of(BMR)
+        } else {
+            m.div_ceil(threads).next_multiple_of(BMR)
+        };
+        std::thread::scope(|s| {
+            for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let (ap, bp) = (&ap, &bp);
+                let worker = move || {
+                    binary_drive(ap, bp, t * rows_per, chunk, words,
+                                 tail_mask, k, n);
+                };
+                if threads <= 1 {
+                    worker();
+                } else {
+                    s.spawn(worker);
+                }
+            }
+        });
+    }
+}
+
+fn binary_drive(ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
+                words: usize, tail_mask: u64, k: usize, n: usize) {
+    let mrows = chunk.len() / n;
+    for ir in (0..mrows).step_by(BMR) {
+        let p = (row0 + ir) / BMR;
+        let apan = &ap[p * BMR * words..(p + 1) * BMR * words];
+        for jr in (0..n).step_by(BNR) {
+            let q = jr / BNR;
+            let bpan = &bp[q * BNR * words..(q + 1) * BNR * words];
+            let mut agree = [[0u32; BNR]; BMR];
+            for wd in 0..words {
+                let msk = if wd == words - 1 { tail_mask } else { u64::MAX };
+                let av = &apan[wd * BMR..(wd + 1) * BMR];
+                let bv = &bpan[wd * BNR..(wd + 1) * BNR];
+                for (i, arow) in agree.iter_mut().enumerate() {
+                    let a = av[i];
+                    for (j, c) in arow.iter_mut().enumerate() {
+                        *c += (!(a ^ bv[j]) & msk).count_ones();
+                    }
+                }
+            }
+            // dot of ±1 vectors = agreements - disagreements
+            for i in 0..BMR.min(mrows - ir) {
+                for j in 0..BNR.min(n - jr) {
+                    chunk[(ir + i) * n + jr + j] =
+                        (2 * agree[i][j] as i64 - k as i64) as f32;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_sizes_divide() {
+        // the driver's panel-index arithmetic relies on these
+        assert_eq!(MC % 4, 0);
+        assert_eq!(MC % 8, 0);
+        assert_eq!(NC % 4, 0);
+        assert_eq!(NC % 8, 0);
+    }
+
+    #[test]
+    fn effective_threads_heuristics() {
+        assert_eq!(effective_threads(4, 8, 8), 1); // tiny: stay serial
+        assert_eq!(effective_threads(4, 200, 100), 4);
+        assert_eq!(effective_threads(8, 2, 16 * 1024), 2); // capped by m
+        assert!(effective_threads(0, 200, 100) >= 1);
+    }
+}

@@ -1,0 +1,486 @@
+//! Per-provider microkernel arithmetic.  [`MicroArith`] binds, for one
+//! `ArithKind` variant, the packed element type, the wide accumulator
+//! type, and the operand conditioning that `pack` fuses into panel
+//! construction.  Each impl monomorphizes the blocked driver and the
+//! MR x NR register-tile microkernel in `kernel` into straight-line MAC
+//! code — no dispatch inside MAC loops, same discipline as the
+//! pre-tiled kernels (EXPERIMENTS.md §Perf iteration 1).
+//!
+//! Bit-exactness contract (enforced by `tests/gemm_differential.rs`):
+//! for every output element, the packed path applies `condition` to the
+//! same operands and folds the products with `mul_acc` in strictly
+//! increasing k order into a single wide accumulator, converting once
+//! with `finish` — exactly what the `reference` kernels do.  Integer
+//! accumulation is associative so tiling is trivially exact; for the
+//! float accumulators the k order is what makes tiling bit-exact.
+
+use crate::approx::cfpu::CfpuMul;
+use crate::approx::drum::{drum_approx_operand, DrumMul};
+use crate::numeric::float::exp2i;
+use crate::numeric::{FixedPoint, FloatRep, Representation};
+
+/// Arithmetic plugged into the blocked driver and microkernel.  One
+/// monomorphization per `ArithKind` variant; the bit-packed binary/XNOR
+/// path has its own dedicated kernel (`kernel::BinaryKernel`) because
+/// its packing is along k (64 operands per word), not per element.
+pub trait MicroArith: Copy + Send + Sync {
+    /// Packed operand: the conditioned form of one f32 input.
+    type Elem: Copy + Send + Sync;
+    /// Wide accumulator carried across the *entire* k reduction (the
+    /// paper widens the partial-sum datapath, §4.2 — nothing narrows
+    /// until `finish`).
+    type Acc: Copy + Send + Sync;
+
+    /// Kernel name for plans/logs, e.g. `packed-fi`.
+    fn name(&self) -> &'static str;
+
+    /// Operand conditioning fused into packing: quantize / encode /
+    /// DRUM-condition / CFPU-classify, hoisted to O(mk + kn) total.
+    fn condition(&self, x: f32) -> Self::Elem;
+
+    /// Panel padding element; `mul_acc(pad, b, acc)` must return `acc`
+    /// bit-for-bit (padded rows/cols are never stored, but the float
+    /// accumulators must not be perturbed by a stray `-0.0`).
+    fn zero_elem(&self) -> Self::Elem;
+
+    /// The zero accumulator.
+    fn zero_acc(&self) -> Self::Acc;
+
+    /// One MAC through the provider's datapath: `acc + a * b` at full
+    /// width.
+    fn mul_acc(&self, a: Self::Elem, b: Self::Elem, acc: Self::Acc)
+               -> Self::Acc;
+
+    /// Convert the wide accumulator to the f32 output element.
+    fn finish(&self, acc: Self::Acc) -> f32;
+}
+
+// ---------------------------------------------------------------------------
+// float32 baseline: f32 elements, f32 accumulation (matches the PJRT
+// artifacts' f32-accumulation semantics)
+// ---------------------------------------------------------------------------
+
+/// `ArithKind::Float32`.
+#[derive(Clone, Copy, Debug)]
+pub struct F32Micro;
+
+impl MicroArith for F32Micro {
+    type Elem = f32;
+    type Acc = f32;
+
+    fn name(&self) -> &'static str {
+        "packed-f32"
+    }
+
+    #[inline(always)]
+    fn condition(&self, x: f32) -> f32 {
+        x
+    }
+
+    #[inline(always)]
+    fn zero_elem(&self) -> f32 {
+        0.0
+    }
+
+    #[inline(always)]
+    fn zero_acc(&self) -> f32 {
+        0.0
+    }
+
+    #[inline(always)]
+    fn mul_acc(&self, a: f32, b: f32, acc: f32) -> f32 {
+        acc + a * b
+    }
+
+    #[inline(always)]
+    fn finish(&self, acc: f32) -> f32 {
+        acc
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fixed-point code paths: signed i32 codes, i64 accumulation
+// ---------------------------------------------------------------------------
+
+/// `ArithKind::FixedExact`: signed magnitude code, exact i64 MACs,
+/// result scaled by 2^-2f (products carry doubled fractional bits).
+#[derive(Clone, Copy, Debug)]
+pub struct FixedMicro {
+    rep: FixedPoint,
+    /// 2^-(2 f_bits), the product scale applied once in `finish`.
+    inv: f64,
+}
+
+impl FixedMicro {
+    pub fn new(rep: FixedPoint) -> FixedMicro {
+        FixedMicro { rep, inv: 1.0 / (1u64 << (2 * rep.f_bits)) as f64 }
+    }
+}
+
+/// Signed magnitude code: sign(x) * code_of(|x|); fits i32 for
+/// i + f <= 30 (`FixedPoint::MAX_TOTAL`).
+#[inline(always)]
+fn signed_code(rep: &FixedPoint, x: f32) -> i32 {
+    let k = rep.code_of(x) as i32;
+    if x < 0.0 {
+        -k
+    } else {
+        k
+    }
+}
+
+impl MicroArith for FixedMicro {
+    type Elem = i32;
+    type Acc = i64;
+
+    fn name(&self) -> &'static str {
+        "packed-fi"
+    }
+
+    #[inline(always)]
+    fn condition(&self, x: f32) -> i32 {
+        signed_code(&self.rep, x)
+    }
+
+    #[inline(always)]
+    fn zero_elem(&self) -> i32 {
+        0
+    }
+
+    #[inline(always)]
+    fn zero_acc(&self) -> i64 {
+        0
+    }
+
+    #[inline(always)]
+    fn mul_acc(&self, a: i32, b: i32, acc: i64) -> i64 {
+        acc + a as i64 * b as i64
+    }
+
+    #[inline(always)]
+    fn finish(&self, acc: i64) -> f32 {
+        (acc as f64 * self.inv) as f32
+    }
+}
+
+/// `ArithKind::FixedDrum`: DRUM(t) conditioning folded into packing.
+/// Conditioning commutes with the product (`drum_mul(a, b) =
+/// approx(a) * approx(b)`), so hoisting it out of the MAC loop is
+/// exact, not an approximation of the approximation.
+#[derive(Clone, Copy, Debug)]
+pub struct DrumMicro {
+    rep: FixedPoint,
+    t: u32,
+    inv: f64,
+}
+
+impl DrumMicro {
+    pub fn new(d: DrumMul) -> DrumMicro {
+        DrumMicro {
+            rep: d.rep,
+            t: d.t,
+            inv: 1.0 / (1u64 << (2 * d.rep.f_bits)) as f64,
+        }
+    }
+}
+
+impl MicroArith for DrumMicro {
+    type Elem = i32;
+    type Acc = i64;
+
+    fn name(&self) -> &'static str {
+        "packed-drum"
+    }
+
+    #[inline(always)]
+    fn condition(&self, x: f32) -> i32 {
+        let k = drum_approx_operand(self.rep.code_of(x), self.t) as i32;
+        if x < 0.0 {
+            -k
+        } else {
+            k
+        }
+    }
+
+    #[inline(always)]
+    fn zero_elem(&self) -> i32 {
+        0
+    }
+
+    #[inline(always)]
+    fn zero_acc(&self) -> i64 {
+        0
+    }
+
+    #[inline(always)]
+    fn mul_acc(&self, a: i32, b: i32, acc: i64) -> i64 {
+        acc + a as i64 * b as i64
+    }
+
+    #[inline(always)]
+    fn finish(&self, acc: i64) -> f32 {
+        (acc as f64 * self.inv) as f32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// float lattice paths: f64 elements / f64 accumulation
+// ---------------------------------------------------------------------------
+
+/// `ArithKind::FloatExact`: operands snapped onto the FL(e, m) lattice
+/// once, exact f64 MACs.
+#[derive(Clone, Copy, Debug)]
+pub struct FloatMicro {
+    rep: FloatRep,
+}
+
+impl FloatMicro {
+    pub fn new(rep: FloatRep) -> FloatMicro {
+        FloatMicro { rep }
+    }
+}
+
+impl MicroArith for FloatMicro {
+    type Elem = f64;
+    type Acc = f64;
+
+    fn name(&self) -> &'static str {
+        "packed-fl"
+    }
+
+    #[inline(always)]
+    fn condition(&self, x: f32) -> f64 {
+        self.rep.quantize_f64(x as f64)
+    }
+
+    #[inline(always)]
+    fn zero_elem(&self) -> f64 {
+        0.0
+    }
+
+    #[inline(always)]
+    fn zero_acc(&self) -> f64 {
+        0.0
+    }
+
+    #[inline(always)]
+    fn mul_acc(&self, a: f64, b: f64, acc: f64) -> f64 {
+        acc + a * b
+    }
+
+    #[inline(always)]
+    fn finish(&self, acc: f64) -> f32 {
+        acc as f32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CFPU path: pre-classified operands (§Perf iteration 4)
+// ---------------------------------------------------------------------------
+
+/// Pre-conditioned CFPU operand: field extraction, top-w classification
+/// and the power-of-two exponent factor are hoisted out of the MAC
+/// loop, so the inner loop is a 3-way class dispatch with one multiply
+/// on the approximate paths and a bit-trick re-quantization on the
+/// exact-fallback path.
+#[derive(Clone, Copy, Debug)]
+pub struct CfpuOp {
+    /// decoded signed value (0.0 for the zero encoding)
+    pub dec: f64,
+    /// 2^(unbiased exponent) — the factor the skip path multiplies by
+    pub pow: f64,
+    /// 0: top-w mantissa bits all zero (operand ~ 2^e, round down)
+    /// 1: all one (operand ~ 2^(e+1), round up)
+    /// 2: neither -> exact multiply path
+    pub class: u8,
+}
+
+/// Condition one operand for the CFPU inner loop.  `micro::tests` pins
+/// `cfpu_product` over conditioned operands against the scalar
+/// `CfpuMul::mul_bits` bit-for-bit.
+#[inline]
+pub fn condition_cfpu(c: &CfpuMul, x: f32) -> CfpuOp {
+    let (e, m) = (c.rep.e_bits, c.rep.m_bits);
+    let man_mask = (1u64 << m) - 1;
+    let bias = c.rep.bias();
+    let bits = c.rep.encode(x);
+    let field = ((bits >> m) & ((1u64 << e) - 1)) as i32;
+    if field == 0 {
+        return CfpuOp { dec: 0.0, pow: 0.0, class: 2 };
+    }
+    let man = bits & man_mask;
+    let class = if c.w > m {
+        2
+    } else {
+        let top = (1u64 << c.w) - 1;
+        let t = (man >> (m - c.w)) & top;
+        if t == 0 {
+            0
+        } else if t == top {
+            1
+        } else {
+            2
+        }
+    };
+    CfpuOp {
+        dec: c.rep.decode(bits) as f64,
+        pow: exp2i(field - bias),
+        class,
+    }
+}
+
+/// One CFPU product from pre-conditioned operands.  Matches
+/// `CfpuMul::mul_bits` bit-for-bit (property-pinned in this module's
+/// tests) — shared by the packed and `reference` paths, which is
+/// deliberate: the differential suite isolates packing/tiling bugs,
+/// while the semantic pin against the scalar unit lives here.
+#[inline]
+pub fn cfpu_product(c: &CfpuMul, x: &CfpuOp, w: &CfpuOp) -> f64 {
+    if x.dec == 0.0 || w.dec == 0.0 {
+        return 0.0;
+    }
+    // skip path: |kept| * 2^(dropped exponent) [ * 2 when rounding up ]
+    let (val, sign_src) = match (w.class, x.class) {
+        (0, _) => (x.dec.abs() * w.pow, x.dec * w.dec),
+        (1, _) => (x.dec.abs() * w.pow * 2.0, x.dec * w.dec),
+        (_, 0) => (w.dec.abs() * x.pow, x.dec * w.dec),
+        (_, 1) => (w.dec.abs() * x.pow * 2.0, x.dec * w.dec),
+        _ => {
+            // exact fallback: multiply + RNE re-quantization
+            return c.rep.quantize_f64(x.dec * w.dec);
+        }
+    };
+    let clamped = cfpu_clamp(c, val);
+    if sign_src < 0.0 {
+        -clamped
+    } else {
+        clamped
+    }
+}
+
+#[inline]
+fn cfpu_clamp(c: &CfpuMul, y: f64) -> f64 {
+    let mx = c.rep.max_finite();
+    if y > mx {
+        return mx;
+    }
+    let mn = c.rep.min_normal();
+    if y < mn {
+        return if y * 2.0 >= mn { mn } else { 0.0 };
+    }
+    y
+}
+
+/// `ArithKind::FloatCfpu`.
+#[derive(Clone, Copy, Debug)]
+pub struct CfpuMicro {
+    c: CfpuMul,
+}
+
+impl CfpuMicro {
+    pub fn new(c: CfpuMul) -> CfpuMicro {
+        CfpuMicro { c }
+    }
+}
+
+impl MicroArith for CfpuMicro {
+    type Elem = CfpuOp;
+    type Acc = f64;
+
+    fn name(&self) -> &'static str {
+        "packed-cfpu"
+    }
+
+    #[inline(always)]
+    fn condition(&self, x: f32) -> CfpuOp {
+        condition_cfpu(&self.c, x)
+    }
+
+    #[inline(always)]
+    fn zero_elem(&self) -> CfpuOp {
+        CfpuOp { dec: 0.0, pow: 0.0, class: 2 }
+    }
+
+    #[inline(always)]
+    fn zero_acc(&self) -> f64 {
+        0.0
+    }
+
+    #[inline(always)]
+    fn mul_acc(&self, a: CfpuOp, b: CfpuOp, acc: f64) -> f64 {
+        acc + cfpu_product(&self.c, &a, &b)
+    }
+
+    #[inline(always)]
+    fn finish(&self, acc: f64) -> f32 {
+        acc as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn prop_cfpu_product_matches_scalar_unit() {
+        // The conditioned-operand product must reproduce the scalar
+        // CFPU datapath bit-for-bit — this is the semantic anchor the
+        // packed and reference GEMM paths both stand on.
+        prop::check_msg(
+            "cfpu_product == CfpuMul::mul_bits",
+            61,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let e = 2 + rng.below(6) as u32;
+                let m = 1 + rng.below(14) as u32;
+                let w = 1 + rng.below(5) as u32;
+                let c = CfpuMul::new(FloatRep::new(e, m), w);
+                let x = (rng.normal() * 8.0) as f32;
+                let y = (rng.normal() * 8.0) as f32;
+                (c, x, y)
+            },
+            |(c, x, y)| {
+                let want = c.mul_bits(c.rep.encode(*x), c.rep.encode(*y));
+                let got = cfpu_product(
+                    c,
+                    &condition_cfpu(c, *x),
+                    &condition_cfpu(c, *y),
+                ) as f32;
+                if got.to_bits() == want.to_bits()
+                    || (got == 0.0 && want == 0.0)
+                {
+                    Ok(())
+                } else {
+                    Err(format!("got {got}, want {want}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn conditioning_commutes_for_drum() {
+        // drum_mul(a, b) == approx(a) * approx(b): packing-time
+        // conditioning is exact for the H paths.
+        let d = DrumMul::new(FixedPoint::new(6, 8), 6);
+        let micro = DrumMicro::new(d);
+        for (x, y) in [(1.5f32, 2.75f32), (-3.2, 0.4), (60.0, -60.0)] {
+            let ka = d.rep.code_of(x);
+            let kb = d.rep.code_of(y);
+            let via_unit = d.mul_codes(ka, kb);
+            let a = micro.condition(x).unsigned_abs() as u64;
+            let b = micro.condition(y).unsigned_abs() as u64;
+            assert_eq!(a * b, via_unit, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn zero_elem_is_absorbing() {
+        let f = FixedMicro::new(FixedPoint::new(6, 8));
+        assert_eq!(f.mul_acc(f.zero_elem(), 123, 77), 77);
+        let g = F32Micro;
+        let acc = 1.25f32;
+        assert_eq!(g.mul_acc(g.zero_elem(), -3.0, acc).to_bits(),
+                   acc.to_bits());
+    }
+}

@@ -1,0 +1,353 @@
+//! Packed, cache-tiled GEMM kernels — one monomorphized kernel per
+//! arithmetic provider, no dispatch inside MAC loops.  This is the L3
+//! performance hot path (§Perf in EXPERIMENTS.md records the
+//! optimization iterations).
+//!
+//! All kernels compute `out[m,n] = quant(x)[m,k] · w[k,n]` with *wide*
+//! accumulation (i64 for fixed-point codes, f64 for float lattices),
+//! mirroring the widened-partial-sum datapath of the paper (§4.2) and
+//! the f32-accumulation semantics of the PJRT artifacts.
+//!
+//! Module split (§Perf iteration 6 — the packed/tiled architecture):
+//!
+//! * [`micro`] — `MicroArith`: packed element + wide accumulator +
+//!   fused operand conditioning, one impl per `ArithKind` variant;
+//! * [`pack`] — `pack_a_block` / `pack_b_block`: MR-row / NR-column
+//!   panels with conditioning fused into the copy (O(mk + kn) once);
+//! * [`kernel`] — the object-safe [`Kernel`] trait, the MC/KC/NC
+//!   blocked driver, the MR x NR register-tile microkernel, and the
+//!   bit-packed binary/XNOR kernel;
+//! * [`reference`] — the pre-tiling kernels, kept as the oracle:
+//!   `tests/gemm_differential.rs` proves the packed path bit-identical
+//!   to them for every provider across randomized shapes and thread
+//!   counts.
+//!
+//! [`GemmPlan`] is the selection layer: resolve an [`ArithKind`] to its
+//! kernel once (per prepared layer, per bench case), then `run`
+//! repeatedly.  [`gemm`] is the one-shot convenience wrapper.
+
+pub mod kernel;
+pub mod micro;
+pub mod pack;
+pub mod reference;
+
+pub use kernel::{default_threads, Kernel, KC, MC, NC};
+
+use crate::approx::arith::ArithKind;
+use kernel::{BinaryKernel, BlockedKernel};
+use micro::{CfpuMicro, DrumMicro, F32Micro, FixedMicro, FloatMicro};
+
+/// The name of the kernel [`select_kernel`] resolves for `kind`,
+/// without constructing it — for plan reporting (`execution_plan`)
+/// on hot paths like the explorer's backend choice.
+pub fn kernel_name(kind: &ArithKind) -> &'static str {
+    match kind {
+        ArithKind::Float32 => "packed-f32",
+        ArithKind::FixedExact(_) => "packed-fi",
+        ArithKind::FixedDrum(_) => "packed-drum",
+        ArithKind::FloatExact(_) => "packed-fl",
+        ArithKind::FloatCfpu(_) => "packed-cfpu",
+        ArithKind::Binary => "packed-binxnor",
+    }
+}
+
+/// Resolve the packed kernel for a provider.  Microkernel tiles: 8x8
+/// for f32 (f32 register tile), 4x8 for the i64/f64 accumulators, 4x4
+/// for CFPU (scalar-heavy inner op) and binary (word panels).
+pub fn select_kernel(kind: &ArithKind) -> Box<dyn Kernel> {
+    match kind {
+        ArithKind::Float32 => {
+            Box::new(BlockedKernel::<_, 8, 8>::new(F32Micro))
+        }
+        ArithKind::FixedExact(rep) => {
+            Box::new(BlockedKernel::<_, 4, 8>::new(FixedMicro::new(*rep)))
+        }
+        ArithKind::FixedDrum(d) => {
+            Box::new(BlockedKernel::<_, 4, 8>::new(DrumMicro::new(*d)))
+        }
+        ArithKind::FloatExact(rep) => {
+            Box::new(BlockedKernel::<_, 4, 8>::new(FloatMicro::new(*rep)))
+        }
+        ArithKind::FloatCfpu(c) => {
+            Box::new(BlockedKernel::<_, 4, 4>::new(CfpuMicro::new(*c)))
+        }
+        ArithKind::Binary => Box::new(BinaryKernel),
+    }
+}
+
+/// A resolved (provider -> packed kernel) pairing.  Layers resolve
+/// their plan once at `prepare` time and reuse it every forward pass;
+/// the explorer and benches do the same per configuration.
+///
+/// ```
+/// use lop::approx::arith::ArithKind;
+/// use lop::nn::gemm::GemmPlan;
+///
+/// let plan = GemmPlan::new(&ArithKind::parse("FI(6,8)").unwrap());
+/// assert_eq!(plan.kernel_name(), "packed-fi");
+/// let (x, w) = ([0.5f32, -1.0], [2.0f32]);
+/// let mut out = [0.0f32; 2];
+/// plan.run(&x, &w, 2, 1, 1, &mut out, 1);
+/// assert_eq!(out, [1.0, -2.0]);
+/// ```
+pub struct GemmPlan {
+    kind: ArithKind,
+    kernel: Box<dyn Kernel>,
+}
+
+impl GemmPlan {
+    pub fn new(kind: &ArithKind) -> GemmPlan {
+        GemmPlan { kind: *kind, kernel: select_kernel(kind) }
+    }
+
+    pub fn kind(&self) -> &ArithKind {
+        &self.kind
+    }
+
+    /// The selected kernel's name (e.g. `packed-fi`), for logs and the
+    /// runtime's execution-plan reporting.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    /// `out = quant(x) @ w`.  `w` must already be quantized (the layer
+    /// does this once at load time); `out.len() == m * n`; `threads`
+    /// 0 means all cores.
+    pub fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize,
+               n: usize, out: &mut [f32], threads: usize) {
+        assert_eq!(x.len(), m * k, "x shape mismatch");
+        assert_eq!(w.len(), k * n, "w shape mismatch");
+        assert_eq!(out.len(), m * n, "out shape mismatch");
+        if m == 0 || n == 0 {
+            return;
+        }
+        if k == 0 {
+            out.fill(0.0);
+            return;
+        }
+        self.kernel.run(x, w, m, k, n, out, threads);
+    }
+}
+
+/// `out = quant(x) @ w` for any provider — one-shot wrapper around
+/// [`GemmPlan`].
+///
+/// ```
+/// use lop::approx::arith::ArithKind;
+/// use lop::nn::gemm::gemm;
+///
+/// // FI(6, 8): x entries below are exactly representable, and an
+/// // identity weight matrix is on every lattice, so the product is
+/// // exact — out equals x.
+/// let kind = ArithKind::parse("FI(6,8)").unwrap();
+/// let x = [0.5f32, -1.0, 2.0, 0.25]; // 2 x 2, row-major
+/// let w = [1.0f32, 0.0, 0.0, 1.0]; // identity, pre-quantized
+/// let mut out = [0.0f32; 4];
+/// gemm(&kind, &x, &w, 2, 2, 2, &mut out, 1);
+/// assert_eq!(out, x);
+/// ```
+pub fn gemm(kind: &ArithKind, x: &[f32], w: &[f32], m: usize, k: usize,
+            n: usize, out: &mut [f32], threads: usize) {
+    GemmPlan::new(kind).run(x, w, m, k, n, out, threads);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn naive(kind: &ArithKind, x: &[f32], w: &[f32], m: usize, k: usize,
+             n: usize) -> Vec<f32> {
+        // semantic reference: scalar quantize + wide scalar mul + f64
+        // accumulate (f32-rounded scalar quantization makes this a
+        // tolerance check, not a bit check — the bit-level oracle is
+        // reference::gemm_reference)
+        let mut out = vec![0.0f32; m * n];
+        for r in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for kk in 0..k {
+                    let a = kind.quantize(x[r * k + kk]);
+                    acc += kind.mul_wide(a, w[kk * n + j]);
+                }
+                out[r * n + j] = acc as f32;
+            }
+        }
+        out
+    }
+
+    fn rand_mats(seed: u64, m: usize, k: usize, n: usize)
+                 -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..m * k).map(|_| (rng.normal() * 2.0) as f32)
+            .collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        (x, w)
+    }
+
+    fn check_kind(kind: ArithKind, seed: u64) {
+        let (m, k, n) = (13, 37, 11);
+        let (x, mut w) = rand_mats(seed, m, k, n);
+        // weights pre-quantized, as the layer contract requires
+        for wv in &mut w {
+            *wv = kind.quantize(*wv);
+        }
+        let mut out = vec![0.0; m * n];
+        gemm(&kind, &x, &w, m, k, n, &mut out, 1);
+        let want = naive(&kind, &x, &w, m, k, n);
+        for (idx, (g, ww)) in out.iter().zip(&want).enumerate() {
+            let tol = 1e-4 * ww.abs().max(1.0);
+            assert!(
+                (g - ww).abs() <= tol,
+                "{}: out[{idx}] = {g}, want {ww}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn f32_matches_naive() {
+        check_kind(ArithKind::Float32, 1);
+    }
+
+    #[test]
+    fn fixed_exact_matches_naive() {
+        check_kind(ArithKind::parse("FI(6,8)").unwrap(), 2);
+        check_kind(ArithKind::parse("FI(3,4)").unwrap(), 3);
+    }
+
+    #[test]
+    fn fixed_drum_matches_naive() {
+        check_kind(ArithKind::parse("H(6,8,6)").unwrap(), 4);
+        check_kind(ArithKind::parse("H(8,8,14)").unwrap(), 5);
+    }
+
+    #[test]
+    fn float_exact_matches_naive() {
+        check_kind(ArithKind::parse("FL(4,9)").unwrap(), 6);
+        check_kind(ArithKind::parse("FL(5,10)").unwrap(), 7);
+    }
+
+    #[test]
+    fn float_cfpu_matches_naive() {
+        check_kind(ArithKind::parse("I(5,10)").unwrap(), 8);
+        check_kind(ArithKind::parse("I(4,9,2)").unwrap(), 9);
+    }
+
+    #[test]
+    fn binary_matches_pm1_dot() {
+        let (m, k, n) = (5, 130, 7); // k > 2 words incl. tail
+        let (x, w) = rand_mats(10, m, k, n);
+        let mut out = vec![0.0; m * n];
+        gemm(&ArithKind::Binary, &x, &w, m, k, n, &mut out, 1);
+        for r in 0..m {
+            for j in 0..n {
+                let mut dot = 0f32;
+                for kk in 0..k {
+                    let a = if x[r * k + kk] >= 0.0 { 1.0 } else { -1.0 };
+                    let b = if w[kk * n + j] >= 0.0 { 1.0 } else { -1.0 };
+                    dot += a * b;
+                }
+                assert_eq!(out[r * n + j], dot, "r={r} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_bit_identical_to_reference_smoke() {
+        // The full randomized sweep lives in tests/gemm_differential.rs;
+        // this in-module smoke keeps the invariant visible to plain
+        // `cargo test` on shapes that exercise every tail path (m, n
+        // not divisible by any tile, k crossing a KC boundary).
+        let (m, k, n) = (13, 300, 11);
+        for ks in ["float32", "FI(6,8)", "H(6,8,6)", "FL(4,9)",
+                   "I(5,10)", "binxnor"] {
+            let kind = ArithKind::parse(ks).unwrap();
+            let (x, mut w) = rand_mats(20, m, k, n);
+            for wv in &mut w {
+                *wv = kind.quantize(*wv);
+            }
+            let mut got = vec![0.0; m * n];
+            let mut want = vec![0.0; m * n];
+            gemm(&kind, &x, &w, m, k, n, &mut got, 1);
+            reference::gemm_reference(&kind, &x, &w, m, k, n, &mut want,
+                                      1);
+            for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), ww.to_bits(),
+                           "{ks}: out[{i}] = {g} vs reference {ww}");
+            }
+        }
+    }
+
+    #[test]
+    fn multithreaded_matches_single() {
+        for kind in [
+            ArithKind::Float32,
+            ArithKind::parse("FI(6,8)").unwrap(),
+            ArithKind::parse("H(6,8,12)").unwrap(),
+            ArithKind::parse("FL(4,9)").unwrap(),
+        ] {
+            let (m, k, n) = (64, 100, 96); // big enough to engage threads
+            let (x, mut w) = rand_mats(11, m, k, n);
+            for wv in &mut w {
+                *wv = kind.quantize(*wv);
+            }
+            let mut a = vec![0.0; m * n];
+            let mut b = vec![0.0; m * n];
+            gemm(&kind, &x, &w, m, k, n, &mut a, 1);
+            gemm(&kind, &x, &w, m, k, n, &mut b, 4);
+            assert_eq!(a, b, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn plan_reuse_is_stable() {
+        let kind = ArithKind::parse("FI(6,8)").unwrap();
+        let plan = GemmPlan::new(&kind);
+        assert_eq!(plan.kind(), &kind);
+        let (m, k, n) = (9, 17, 5);
+        let (x, mut w) = rand_mats(12, m, k, n);
+        for wv in &mut w {
+            *wv = kind.quantize(*wv);
+        }
+        let mut a = vec![0.0; m * n];
+        let mut b = vec![0.0; m * n];
+        plan.run(&x, &w, m, k, n, &mut a, 1);
+        plan.run(&x, &w, m, k, n, &mut b, 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn kernel_names_per_kind() {
+        for (ks, name) in [
+            ("float32", "packed-f32"),
+            ("FI(6,8)", "packed-fi"),
+            ("H(6,8,12)", "packed-drum"),
+            ("FL(4,9)", "packed-fl"),
+            ("I(5,10)", "packed-cfpu"),
+            ("binxnor", "packed-binxnor"),
+        ] {
+            let kind = ArithKind::parse(ks).unwrap();
+            assert_eq!(GemmPlan::new(&kind).kernel_name(), name, "{ks}");
+            // the allocation-free name lookup must agree with the
+            // constructed kernel
+            assert_eq!(kernel_name(&kind), name, "{ks}");
+            let kern = select_kernel(&kind);
+            assert!(kern.mr() >= 1 && kern.nr() >= 1);
+        }
+    }
+
+    #[test]
+    fn zero_sized_edges() {
+        let kind = ArithKind::Float32;
+        let mut out = vec![0.0; 0];
+        gemm(&kind, &[], &[], 0, 0, 0, &mut out, 1);
+        let mut out1 = vec![0.0; 1];
+        gemm(&kind, &[2.0], &[3.0], 1, 1, 1, &mut out1, 1);
+        assert_eq!(out1[0], 6.0);
+        // k = 0 with nonzero m, n zeroes the output
+        let mut out2 = vec![7.0f32; 6];
+        gemm(&kind, &[], &[], 2, 0, 3, &mut out2, 1);
+        assert!(out2.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,111 @@
+//! Operand packing: reorder A into MR-row panels and B into NR-column
+//! panels, fusing the provider's operand conditioning (quantize /
+//! encode / DRUM-condition / CFPU-classify) into the copy so the
+//! microkernel reads conditioned elements at unit stride.
+//!
+//! Panel layout, after the rten/BLIS convention:
+//!
+//! ```text
+//! A (m x k), MR-row panels:        B (k x n), NR-column panels:
+//!   panel p covers rows              panel q covers cols
+//!   [p*MR, p*MR + MR)                [q*NR, q*NR + NR)
+//!   offset(p, d, r) =                offset(q, d, c) =
+//!     p*MR*k + d*MR + r                q*NR*k + d*NR + c
+//! ```
+//!
+//! Because depth is the middle axis, the slice a microkernel needs for
+//! a (panel, depth-block) pair is contiguous: `p*MR*k + d0*MR ..
+//! p*MR*k + d1*MR`.  The Goto-style KC blocking in `kernel` is
+//! therefore pure loop structure over one packed buffer — operands are
+//! packed (and conditioned) exactly once, keeping conditioning at
+//! O(mk + kn).
+//!
+//! Rows past `m` / columns past `n` in the trailing panel pad with
+//! `MicroArith::zero_elem`, which is absorbing in `mul_acc`; padded
+//! outputs are computed into the accumulator tile but never stored.
+
+use super::micro::MicroArith;
+
+/// Pack all of row-major `x` (`m` x `k`, row stride `k`) into MR-row
+/// panels, conditioning each element.  Returns
+/// `m.div_ceil(MR) * MR * k` elements.
+pub fn pack_a_block<A: MicroArith, const MR: usize>(
+    arith: &A, x: &[f32], m: usize, k: usize,
+) -> Vec<A::Elem> {
+    let panels = m.div_ceil(MR);
+    let mut out = vec![arith.zero_elem(); panels * MR * k];
+    for p in 0..panels {
+        let base = p * MR * k;
+        let r_hi = (p * MR + MR).min(m);
+        for (ri, r) in (p * MR..r_hi).enumerate() {
+            let xrow = &x[r * k..(r + 1) * k];
+            for (d, &v) in xrow.iter().enumerate() {
+                out[base + d * MR + ri] = arith.condition(v);
+            }
+        }
+    }
+    out
+}
+
+/// Pack all of row-major `w` (`k` x `n`, row stride `n`) into NR-column
+/// panels, conditioning each element.  Returns
+/// `n.div_ceil(NR) * NR * k` elements.
+pub fn pack_b_block<A: MicroArith, const NR: usize>(
+    arith: &A, w: &[f32], k: usize, n: usize,
+) -> Vec<A::Elem> {
+    let panels = n.div_ceil(NR);
+    let mut out = vec![arith.zero_elem(); panels * NR * k];
+    for d in 0..k {
+        let wrow = &w[d * n..(d + 1) * n];
+        for q in 0..panels {
+            let base = q * NR * k + d * NR;
+            let c_hi = (q * NR + NR).min(n);
+            for (ci, c) in (q * NR..c_hi).enumerate() {
+                out[base + ci] = arith.condition(wrow[c]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::gemm::micro::F32Micro;
+
+    #[test]
+    fn a_panel_layout_and_padding() {
+        // 3 x 2 matrix with MR = 2: panel 0 = rows {0, 1}, panel 1 =
+        // row 2 + one padded row.
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let p = pack_a_block::<F32Micro, 2>(&F32Micro, &x, 3, 2);
+        assert_eq!(p.len(), 2 * 2 * 2);
+        // panel 0, depth 0: rows 0..2 of column 0
+        assert_eq!(&p[0..2], &[1.0, 3.0]);
+        // panel 0, depth 1: rows 0..2 of column 1
+        assert_eq!(&p[2..4], &[2.0, 4.0]);
+        // panel 1: row 2 then zero padding, per depth
+        assert_eq!(&p[4..8], &[5.0, 0.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn b_panel_layout_and_padding() {
+        // 2 x 3 matrix with NR = 2: panel 0 = cols {0, 1}, panel 1 =
+        // col 2 + one padded column.
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let p = pack_b_block::<F32Micro, 2>(&F32Micro, &w, 2, 3);
+        assert_eq!(p.len(), 2 * 2 * 2);
+        // panel 0: (d=0: cols 0,1), (d=1: cols 0,1)
+        assert_eq!(&p[0..4], &[1.0, 2.0, 4.0, 5.0]);
+        // panel 1: (d=0: col 2, pad), (d=1: col 2, pad)
+        assert_eq!(&p[4..8], &[3.0, 0.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn zero_depth_packs_empty() {
+        let p = pack_a_block::<F32Micro, 4>(&F32Micro, &[], 0, 0);
+        assert!(p.is_empty());
+        let q = pack_b_block::<F32Micro, 4>(&F32Micro, &[], 0, 5);
+        assert!(q.is_empty());
+    }
+}

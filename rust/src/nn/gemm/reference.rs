@@ -1,0 +1,258 @@
+//! The pre-tiling GEMM kernels, kept verbatim as the *oracle* for the
+//! packed/tiled path: unpacked, row-parallel, conditioning hoisted out
+//! of the MAC loop (EXPERIMENTS.md §Perf iterations 1–4), but no panel
+//! packing and no cache blocking.
+//!
+//! `tests/gemm_differential.rs` asserts the packed kernels are
+//! bit-identical to these across randomized shapes and thread counts;
+//! the unit tests in `gemm::tests` in turn pin these against the
+//! scalar `ArithKind::quantize` + `mul_wide` semantics (with the f64
+//! tolerance that f32-rounded scalar quantization requires), and the
+//! CFPU conditioning shared with the packed path is property-pinned
+//! against `CfpuMul::mul_bits` in `gemm::micro::tests`.  Never
+//! optimize this module — its value is being boring.
+
+use super::micro::{cfpu_product, condition_cfpu, CfpuOp};
+use crate::approx::arith::ArithKind;
+use crate::approx::cfpu::CfpuMul;
+use crate::approx::drum::{drum_approx_operand, DrumMul};
+use crate::numeric::{BinXnor, FixedPoint, FloatRep};
+
+/// `out = quant(x) @ w` with the pre-tiling kernels.  Same contract as
+/// [`super::gemm`]: `w` pre-quantized, `out.len() == m * n`.
+pub fn gemm_reference(kind: &ArithKind, x: &[f32], w: &[f32], m: usize,
+                      k: usize, n: usize, out: &mut [f32],
+                      threads: usize) {
+    assert_eq!(x.len(), m * k, "x shape mismatch");
+    assert_eq!(w.len(), k * n, "w shape mismatch");
+    assert_eq!(out.len(), m * n, "out shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    match kind {
+        ArithKind::Float32 => gemm_f32(x, w, m, k, n, out, threads),
+        ArithKind::FixedExact(rep) => {
+            let xc = encode_fixed(rep, x);
+            let wc = encode_fixed(rep, w);
+            gemm_int(&xc, &wc, m, k, n, out, 2 * rep.f_bits, threads);
+        }
+        ArithKind::FixedDrum(d) => {
+            let xc = encode_fixed_drum(d, x);
+            let wc = encode_fixed_drum(d, w);
+            gemm_int(&xc, &wc, m, k, n, out, 2 * d.rep.f_bits, threads);
+        }
+        ArithKind::FloatExact(rep) => {
+            let xq = quantize_f64(rep, x);
+            let wq = quantize_f64(rep, w);
+            gemm_f64(&xq, &wq, m, k, n, out, threads);
+        }
+        ArithKind::FloatCfpu(c) => {
+            gemm_cfpu(c, x, w, m, k, n, out, threads);
+        }
+        ArithKind::Binary => gemm_binary(x, w, m, k, n, out, threads),
+    }
+}
+
+/// Split `out` into row chunks and run `body(row0, rows_chunk)` on a
+/// scoped thread pool.
+fn row_parallel<F>(out: &mut [f32], m: usize, n: usize, threads: usize,
+                   body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let threads =
+        if threads == 0 { super::default_threads() } else { threads };
+    let threads = threads.min(m.max(1));
+    if threads <= 1 || m * n < 16 * 1024 {
+        body(0, out);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let body = &body;
+            s.spawn(move || body(t * rows_per, chunk));
+        }
+    });
+}
+
+fn gemm_f32(x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
+            out: &mut [f32], threads: usize) {
+    row_parallel(out, m, n, threads, |row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            let xrow = &x[(row0 + r) * k..(row0 + r + 1) * k];
+            orow.fill(0.0);
+            // (i,k,j) loop order: stream w rows, accumulate into out
+            // row — autovectorizes on the j axis.
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    });
+}
+
+/// Signed magnitude code: sign(x) * code_of(|x|); fits i32 for
+/// i + f <= 30.
+fn encode_fixed(rep: &FixedPoint, xs: &[f32]) -> Vec<i32> {
+    xs.iter()
+        .map(|&x| {
+            let k = rep.code_of(x) as i32;
+            if x < 0.0 {
+                -k
+            } else {
+                k
+            }
+        })
+        .collect()
+}
+
+/// Signed DRUM-conditioned code (conditioning commutes with the
+/// product, so hoisting is exact).
+fn encode_fixed_drum(d: &DrumMul, xs: &[f32]) -> Vec<i32> {
+    xs.iter()
+        .map(|&x| {
+            let k = drum_approx_operand(d.rep.code_of(x), d.t) as i32;
+            if x < 0.0 {
+                -k
+            } else {
+                k
+            }
+        })
+        .collect()
+}
+
+/// Integer GEMM over signed codes with i64 accumulation; result scaled
+/// by 2^-frac2 (`frac2 = 2f`: products carry doubled fractional bits).
+fn gemm_int(xc: &[i32], wc: &[i32], m: usize, k: usize, n: usize,
+            out: &mut [f32], frac2: u32, threads: usize) {
+    let inv = 1.0f64 / (1u64 << frac2) as f64;
+    row_parallel(out, m, n, threads, |row0, chunk| {
+        let mut acc = vec![0i64; n];
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            acc.fill(0);
+            let xrow = &xc[(row0 + r) * k..(row0 + r + 1) * k];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0 {
+                    continue;
+                }
+                let xv = xv as i64;
+                let wrow = &wc[kk * n..(kk + 1) * n];
+                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                    *a += xv * wv as i64;
+                }
+            }
+            for (o, &a) in orow.iter_mut().zip(&acc) {
+                *o = (a as f64 * inv) as f32;
+            }
+        }
+    });
+}
+
+fn quantize_f64(rep: &FloatRep, xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&x| rep.quantize_f64(x as f64)).collect()
+}
+
+fn gemm_f64(xq: &[f64], wq: &[f64], m: usize, k: usize, n: usize,
+            out: &mut [f32], threads: usize) {
+    row_parallel(out, m, n, threads, |row0, chunk| {
+        let mut acc = vec![0f64; n];
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            acc.fill(0.0);
+            let xrow = &xq[(row0 + r) * k..(row0 + r + 1) * k];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &wq[kk * n..(kk + 1) * n];
+                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                    *a += xv * wv;
+                }
+            }
+            for (o, &a) in orow.iter_mut().zip(&acc) {
+                *o = a as f32;
+            }
+        }
+    });
+}
+
+fn gemm_cfpu(c: &CfpuMul, xs: &[f32], ws: &[f32], m: usize, k: usize,
+             n: usize, out: &mut [f32], threads: usize) {
+    let xo: Vec<CfpuOp> =
+        xs.iter().map(|&x| condition_cfpu(c, x)).collect();
+    let wo: Vec<CfpuOp> =
+        ws.iter().map(|&x| condition_cfpu(c, x)).collect();
+    row_parallel(out, m, n, threads, |row0, chunk| {
+        let mut acc = vec![0f64; n];
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            acc.fill(0.0);
+            let xrow = &xo[(row0 + r) * k..(row0 + r + 1) * k];
+            for (kk, xv) in xrow.iter().enumerate() {
+                if xv.dec == 0.0 {
+                    continue;
+                }
+                let wrow = &wo[kk * n..(kk + 1) * n];
+                for (a, wv) in acc.iter_mut().zip(wrow) {
+                    *a += cfpu_product(c, xv, wv);
+                }
+            }
+            for (o, &a) in orow.iter_mut().zip(&acc) {
+                *o = a as f32;
+            }
+        }
+    });
+}
+
+/// Bit-packed popcount GEMM for the binary representation (paper
+/// §4.5) — unpacked-per-output variant.
+fn gemm_binary(x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
+               out: &mut [f32], threads: usize) {
+    let words = k.div_ceil(64);
+    // pack x rows and w columns as sign bitmaps
+    let mut xp = vec![0u64; m * words];
+    for r in 0..m {
+        for kk in 0..k {
+            let bit = BinXnor::binarize(x[r * k + kk]);
+            xp[r * words + kk / 64] |= bit << (kk % 64);
+        }
+    }
+    let mut wp = vec![0u64; n * words];
+    for j in 0..n {
+        for kk in 0..k {
+            let bit = BinXnor::binarize(w[kk * n + j]);
+            wp[j * words + kk / 64] |= bit << (kk % 64);
+        }
+    }
+    // tail mask: bits >= k in the last word must not count as
+    // agreements
+    let tail_bits = k % 64;
+    let tail_mask =
+        if tail_bits == 0 { u64::MAX } else { (1u64 << tail_bits) - 1 };
+    row_parallel(out, m, n, threads, |row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            let xr = &xp[(row0 + r) * words..(row0 + r + 1) * words];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let wc = &wp[j * words..(j + 1) * words];
+                let mut agree = 0u32;
+                for ww in 0..words {
+                    let mut eq = !(xr[ww] ^ wc[ww]);
+                    if ww == words - 1 {
+                        eq &= tail_mask;
+                    }
+                    agree += eq.count_ones();
+                }
+                // dot of ±1 vectors = agreements - disagreements
+                *o = (2 * agree as i64 - k as i64) as f32;
+            }
+        }
+    });
+}

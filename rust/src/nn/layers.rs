@@ -1,7 +1,25 @@
-//! Elementwise / structural layers: bias add, ReLU, 2x2 max pooling,
-//! softmax.  All mirror `python/compile/model.py`.
+//! Layers: the GEMM-backed fully-connected layer plus elementwise /
+//! structural ops (bias add, ReLU, 2x2 max pooling, softmax).  All
+//! mirror `python/compile/model.py`; [`dense`] routes through the
+//! packed, tiled kernel selected by the layer's `GemmPlan`.
 
+use super::gemm::GemmPlan;
 use super::tensor::Tensor;
+
+/// Fully-connected layer: `x [m,k] @ w [k,n] + bias` on the packed
+/// GEMM path (`w` pre-quantized, as `Dcnn::prepare` produces).
+pub fn dense(plan: &GemmPlan, x: &Tensor, w: &Tensor, bias: &[f32],
+             threads: usize) -> Tensor {
+    assert_eq!(x.ndim(), 2, "dense input must be [m, k]");
+    assert_eq!(w.ndim(), 2, "dense weights must be [k, n]");
+    let (m, k) = (x.shape[0], x.shape[1]);
+    assert_eq!(w.shape[0], k, "dense weight rows != input cols");
+    let n = w.shape[1];
+    let mut out = Tensor::zeros(vec![m, n]);
+    plan.run(&x.data, &w.data, m, k, n, &mut out.data, threads);
+    add_bias(&mut out, bias);
+    out
+}
 
 /// ReLU in place.
 pub fn relu(t: &mut Tensor) {
@@ -75,6 +93,17 @@ mod tests {
         let mut t = Tensor::new(vec![4], vec![-1.0, 0.0, 2.0, -0.5]);
         relu(&mut t);
         assert_eq!(t.data, vec![0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_matmul_plus_bias() {
+        use crate::approx::arith::ArithKind;
+        let plan = GemmPlan::new(&ArithKind::Float32);
+        let x = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let out = dense(&plan, &x, &w, &[10.0, 20.0], 1);
+        assert_eq!(out.shape, vec![2, 2]);
+        assert_eq!(out.data, vec![11.0, 22.0, 13.0, 24.0]);
     }
 
     #[test]

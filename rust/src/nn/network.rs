@@ -2,9 +2,9 @@
 //! layer-wise *partition* of §3/§4.2: each layer is one part, each part has
 //! one (representation × arithmetic) domain.
 
-use super::conv::im2col;
-use super::gemm::gemm;
-use super::layers::{add_bias, maxpool2, relu};
+use super::conv::conv2d;
+use super::gemm::GemmPlan;
+use super::layers::{add_bias, dense, maxpool2, relu};
 use super::loader::validate_dcnn;
 use super::quantizer::quantize_tensor;
 use super::tensor::Tensor;
@@ -114,7 +114,10 @@ impl Dcnn {
             wq.push(w2);
             bq.push(quantize_tensor(kind, b));
         }
-        PreparedNet { cfg, wq, bq }
+        // resolve each layer's packed kernel once; every forward pass
+        // reuses the plan
+        let plans = cfg.layers.iter().map(GemmPlan::new).collect();
+        PreparedNet { cfg, wq, bq, plans }
     }
 
     /// Float32 forward that records per-layer WBA ranges (Table 1).
@@ -143,6 +146,8 @@ pub struct PreparedNet {
     pub cfg: NetConfig,
     wq: Vec<Tensor>, // flattened (rows, cout) weights, quantized
     bq: Vec<Tensor>,
+    /// per-layer packed-kernel selection, resolved once in `prepare`
+    plans: Vec<GemmPlan>,
 }
 
 impl PreparedNet {
@@ -182,27 +187,28 @@ impl PreparedNet {
         (z, ranges)
     }
 
+    /// Kernel selected for each layer (e.g. `packed-fi`), in layer
+    /// order — surfaced through `runtime::execution_plan`.
+    pub fn kernel_names(&self) -> [&'static str; 4] {
+        let mut names = [""; 4];
+        for (n, p) in names.iter_mut().zip(&self.plans) {
+            *n = p.kernel_name();
+        }
+        names
+    }
+
     fn conv_block(&self, x: &Tensor, li: usize, hw: usize, cout: usize,
                   threads: usize) -> Tensor {
         let b = x.shape[0];
-        let cols = im2col(x, 5, 5, 2);
-        let k = cols.shape[1];
-        let m = cols.shape[0];
-        let mut out = Tensor::zeros(vec![m, cout]);
-        gemm(&self.cfg.layers[li], &cols.data, &self.wq[li].data, m, k,
-             cout, &mut out.data, threads);
+        let mut out =
+            conv2d(&self.plans[li], x, &self.wq[li], 5, 5, 2, threads);
         add_bias(&mut out, &self.bq[li].data);
         out.reshape(vec![b, hw, hw, cout])
     }
 
     fn fc_block(&self, x: &Tensor, li: usize, threads: usize) -> Tensor {
-        let (m, k) = (x.shape[0], x.shape[1]);
-        let n = self.wq[li].shape[1];
-        let mut out = Tensor::zeros(vec![m, n]);
-        gemm(&self.cfg.layers[li], &x.data, &self.wq[li].data, m, k, n,
-             &mut out.data, threads);
-        add_bias(&mut out, &self.bq[li].data);
-        out
+        dense(&self.plans[li], x, &self.wq[li], &self.bq[li].data,
+              threads)
     }
 
     /// Classify: argmax of logits.
@@ -291,6 +297,9 @@ mod tests {
             .unwrap();
         assert!(!cfg.pjrt_expressible());
         let net = tiny_dcnn(7).prepare(cfg);
+        assert_eq!(net.kernel_names(),
+                   ["packed-fi", "packed-fi", "packed-drum",
+                    "packed-drum"]);
         let out = net.forward(&rand_input(1, 8), 1);
         assert_eq!(out.shape, vec![1, 10]);
         assert!(out.data.iter().all(|v| v.is_finite()));

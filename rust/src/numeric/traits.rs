@@ -33,16 +33,67 @@ pub trait Representation: Send + Sync + std::fmt::Debug {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::numeric::FixedPoint;
+    use crate::numeric::{FixedPoint, FloatRep};
+    use crate::util::prop;
+
+    fn slice_matches_scalar<R: Representation>(rep: &R, xs: &[f32])
+                                               -> Result<(), String> {
+        let mut ys = xs.to_vec();
+        rep.quantize_slice(&mut ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            let want = rep.quantize(*x);
+            if want.to_bits() != y.to_bits() {
+                return Err(format!(
+                    "{}: quantize_slice({x}) = {y}, scalar = {want}",
+                    rep.name()
+                ));
+            }
+        }
+        Ok(())
+    }
 
     #[test]
-    fn quantize_slice_matches_scalar() {
+    fn prop_quantize_slice_matches_scalar_fi() {
+        prop::check_msg(
+            "quantize_slice == scalar quantize (FI, random widths)",
+            31,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let rep = FixedPoint::new(rng.below(9) as u32,
+                                          1 + rng.below(12) as u32);
+                let xs: Vec<f32> = (0..8)
+                    .map(|_| (rng.normal() * 40.0) as f32)
+                    .collect();
+                (rep, xs)
+            },
+            |(rep, xs)| slice_matches_scalar(rep, xs),
+        );
+    }
+
+    #[test]
+    fn prop_quantize_slice_matches_scalar_fl() {
+        prop::check_msg(
+            "quantize_slice == scalar quantize (FL, random widths)",
+            32,
+            prop::DEFAULT_CASES,
+            |rng| {
+                let rep = FloatRep::new(2 + rng.below(7) as u32,
+                                        1 + rng.below(23) as u32);
+                let xs: Vec<f32> = (0..8)
+                    .map(|_| (rng.normal() * 100.0) as f32)
+                    .collect();
+                (rep, xs)
+            },
+            |(rep, xs)| slice_matches_scalar(rep, xs),
+        );
+    }
+
+    #[test]
+    fn quantize_slice_edge_values() {
+        // the original one-off fixture, kept for the saturation and
+        // signed-zero edges random draws rarely hit
         let rep = FixedPoint::new(4, 6);
-        let xs = [0.37f32, -2.11, 100.0, -100.0, 0.0];
-        let mut ys = xs;
-        rep.quantize_slice(&mut ys);
-        for (x, y) in xs.iter().zip(ys.iter()) {
-            assert_eq!(rep.quantize(*x), *y);
-        }
+        let xs = [0.37f32, -2.11, 100.0, -100.0, 0.0, -0.0];
+        slice_matches_scalar(&rep, &xs).unwrap();
     }
 }

@@ -71,6 +71,40 @@ impl Variant {
     }
 }
 
+/// How a configuration will execute: a PJRT artifact variant (exact
+/// arithmetic, XLA-compiled), or the bit-accurate engine with the
+/// per-layer packed GEMM kernels `nn::gemm::select_kernel` resolves.
+///
+/// This is the kernel-selection seam between L2 and L3: the evaluator
+/// picks its backend through it, and serving/reporting code can name
+/// the exact kernels a config runs on without preparing a network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutionPlan {
+    /// Runs on the PJRT fake-quant artifacts (when a runner exists).
+    Pjrt(Variant),
+    /// Runs on the engine; one packed-kernel name per layer (e.g.
+    /// `packed-drum`), matching `PreparedNet::kernel_names`.
+    Engine([&'static str; 4]),
+}
+
+/// Decide the execution plan for `cfg`.  Configs with an expressible
+/// artifact variant plan for PJRT (callers without a live runner fall
+/// back to the engine); everything else names its engine kernels.
+pub fn execution_plan(cfg: &NetConfig) -> ExecutionPlan {
+    match Variant::for_config(cfg) {
+        Some(v) => ExecutionPlan::Pjrt(v),
+        None => {
+            let mut names = [""; 4];
+            for (n, l) in names.iter_mut().zip(&cfg.layers) {
+                // allocation-free lookup: this runs per config scored
+                // by the explorer
+                *n = crate::nn::gemm::kernel_name(l);
+            }
+            ExecutionPlan::Engine(names)
+        }
+    }
+}
+
 /// Quantization scalars (q0, q1) per layer for the fi/fl artifacts.
 pub fn quant_scalars(cfg: &NetConfig) -> Result<Vec<f32>> {
     let mut out = Vec::with_capacity(8);
@@ -345,6 +379,22 @@ mod tests {
         let mixed = NetConfig::parse("FI(6,8)|FI(6,8)|FL(4,9)|FL(4,9)")
             .unwrap();
         assert_eq!(Variant::for_config(&mixed), None);
+    }
+
+    #[test]
+    fn execution_plan_selection() {
+        let fi = NetConfig::uniform(ArithKind::FixedExact(
+            FixedPoint::new(6, 8),
+        ));
+        assert_eq!(execution_plan(&fi),
+                   ExecutionPlan::Pjrt(Variant::Fi));
+        let mixed = NetConfig::parse("FI(6,8)|FI(6,8)|H(8,8,14)|I(5,10)")
+            .unwrap();
+        assert_eq!(
+            execution_plan(&mixed),
+            ExecutionPlan::Engine(["packed-fi", "packed-fi",
+                                   "packed-drum", "packed-cfpu"])
+        );
     }
 
     #[test]

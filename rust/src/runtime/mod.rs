@@ -11,4 +11,5 @@ pub mod artifact;
 pub mod executor;
 
 pub use artifact::ArtifactDir;
-pub use executor::{runner_or_warn, ModelRunner, Variant};
+pub use executor::{execution_plan, runner_or_warn, ExecutionPlan,
+                   ModelRunner, Variant};

@@ -1,0 +1,163 @@
+//! Differential suite: the packed, tiled GEMM path must be
+//! *bit-identical* to the pre-tiling `reference` kernels for every
+//! `ArithKind` variant, across randomized shapes (including m = 0,
+//! k = 0, n = 1, non-square, and non-divisible-by-tile sizes) and
+//! across thread counts.
+//!
+//! Scale the randomized sweeps with `LOP_PROP_CASES=N`; failures print
+//! a replay snippet (seed + case) via `util::prop`.
+
+use lop::approx::arith::ArithKind;
+use lop::nn::gemm::reference::gemm_reference;
+use lop::nn::gemm::{default_threads, GemmPlan};
+use lop::util::prng::Rng;
+use lop::util::prop;
+
+/// One representative per `ArithKind` variant plus width variations
+/// (narrow + wide fixed/float, small + large DRUM windows, CFPU tuning
+/// widths).
+const KINDS: [&str; 11] = [
+    "float32",
+    "FI(6,8)",
+    "FI(3,4)",
+    "FI(8,11)",
+    "H(6,8,6)",
+    "H(8,8,14)",
+    "FL(4,9)",
+    "FL(5,10)",
+    "I(5,10)",
+    "I(4,9,2)",
+    "binxnor",
+];
+
+fn rand_operands(rng: &mut Rng, kind: &ArithKind, m: usize, k: usize,
+                 n: usize) -> (Vec<f32>, Vec<f32>) {
+    // activations include exact zeros: the reference kernels zero-skip
+    // and the packed path does not, so this exercises the proof that
+    // skipping is bit-neutral
+    let x: Vec<f32> = (0..m * k)
+        .map(|_| {
+            if rng.below(4) == 0 {
+                0.0
+            } else {
+                (rng.normal() * 2.0) as f32
+            }
+        })
+        .collect();
+    // weights pre-quantized, as the layer contract requires
+    let w: Vec<f32> = (0..k * n)
+        .map(|_| kind.quantize(rng.normal() as f32))
+        .collect();
+    (x, w)
+}
+
+/// Run the packed plan at each thread count and compare every output
+/// word against the reference kernels (computed once, single thread).
+fn diff(kind: &ArithKind, plan: &GemmPlan, x: &[f32], w: &[f32],
+        m: usize, k: usize, n: usize, thread_counts: &[usize])
+        -> Result<(), String> {
+    let mut want = vec![f32::NAN; m * n];
+    gemm_reference(kind, x, w, m, k, n, &mut want, 1);
+    for &threads in thread_counts {
+        let mut got = vec![f32::NAN; m * n];
+        plan.run(x, w, m, k, n, &mut got, threads);
+        for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+            if g.to_bits() != ww.to_bits() {
+                return Err(format!(
+                    "{} ({m}x{k}x{n}, threads={threads}): out[{i}] = \
+                     {g} ({:#010x}), reference {ww} ({:#010x})",
+                    kind.name(),
+                    g.to_bits(),
+                    ww.to_bits()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Dimension generator biased toward tile/block boundaries.
+fn dim(rng: &mut Rng, max: u64, edges: &[usize]) -> usize {
+    if rng.below(3) == 0 {
+        edges[rng.below(edges.len() as u64) as usize]
+    } else {
+        rng.below(max + 1) as usize
+    }
+}
+
+#[test]
+fn randomized_shapes_bit_identical() {
+    for (ki, ks) in KINDS.iter().enumerate() {
+        let kind = ArithKind::parse(ks).unwrap();
+        let plan = GemmPlan::new(&kind);
+        prop::check_msg(
+            &format!("packed == reference ({ks})"),
+            0xD1FF + ki as u64,
+            24,
+            |rng| {
+                // m/n edges straddle the MR/NR tiles (4, 8), k edges
+                // straddle the 64-bit binary words; ~1 case in 5 is
+                // big enough (m*n >= 16384) that the default-threads
+                // leg genuinely spawns threads at a random shape
+                let (m, n) = if rng.below(5) == 0 {
+                    (64 + rng.below(17) as usize,
+                     256 + rng.below(9) as usize)
+                } else {
+                    (dim(rng, 33, &[0, 1, 3, 4, 5, 8, 9, 16, 32]),
+                     dim(rng, 32, &[0, 1, 3, 4, 5, 8, 9, 31]))
+                };
+                let k = dim(rng, 96, &[0, 1, 2, 63, 64, 65]);
+                (m, k, n, rng.next_u64())
+            },
+            |&(m, k, n, seed)| {
+                let mut rng = Rng::new(seed);
+                let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
+                diff(&kind, &plan, &x, &w, m, k, n,
+                     &[1, default_threads()])
+            },
+        );
+    }
+}
+
+#[test]
+fn explicit_edge_shapes_bit_identical() {
+    // (m, k, n): empty output, empty reduction, single column, single
+    // cell, exact word boundary, word boundary + 1, and shapes that
+    // cross the KC = 256 depth blocking
+    let shapes = [
+        (0, 5, 3),
+        (3, 0, 4),
+        (5, 7, 1),
+        (1, 1, 1),
+        (4, 64, 4),
+        (8, 129, 9),
+        (13, 300, 11),
+        (33, 257, 18),
+    ];
+    let mut rng = Rng::new(7);
+    for ks in KINDS {
+        let kind = ArithKind::parse(ks).unwrap();
+        let plan = GemmPlan::new(&kind);
+        for &(m, k, n) in &shapes {
+            let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
+            diff(&kind, &plan, &x, &w, m, k, n, &[1]).unwrap();
+        }
+    }
+}
+
+#[test]
+fn threaded_blocks_bit_identical() {
+    // Large enough (m*n >= 16384) that the packed path really spawns
+    // threads and splits rows across MC blocks; m and n deliberately
+    // not divisible by MC/NC/MR/NR, k crosses KC.
+    let (m, k, n) = (65, 257, 258);
+    let mut rng = Rng::new(8);
+    for ks in KINDS {
+        let kind = ArithKind::parse(ks).unwrap();
+        let plan = GemmPlan::new(&kind);
+        let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
+        diff(&kind, &plan, &x, &w, m, k, n,
+             &[1, 2, 3, default_threads()])
+            .unwrap();
+    }
+}

@@ -1,0 +1,172 @@
+//! Numeric-layer property suite on the shared `util::prop` harness:
+//! encode/decode round-trips through `quantize` across random
+//! bit-widths, the DRUM(t) relative-error bound against the exact
+//! multiply, and `quantize_slice` == scalar `quantize` for every
+//! representation.  Scale with `LOP_PROP_CASES=N`.
+
+use lop::approx::drum::{drum_mul, DrumMul};
+use lop::numeric::{BinXnor, FixedPoint, FloatRep, Representation};
+use lop::util::prop;
+
+#[test]
+fn fi_roundtrip_through_quantize_random_widths() {
+    prop::check_msg(
+        "FI decode(encode(x)) == quantize(x), random widths",
+        101,
+        prop::DEFAULT_CASES,
+        |rng| {
+            let rep = FixedPoint::new(rng.below(9) as u32,
+                                      1 + rng.below(14) as u32);
+            // mix in-range, saturating and tiny magnitudes
+            let scale = [0.01f64, 1.0, 50.0, 1e4][rng.below(4) as usize];
+            (rep, (rng.normal() * scale) as f32)
+        },
+        |(rep, x)| {
+            let want = rep.quantize(*x);
+            let got = rep.decode(rep.encode(*x));
+            if got.to_bits() == want.to_bits()
+                || (got == 0.0 && want == 0.0)
+            {
+                Ok(())
+            } else {
+                Err(format!("got {got}, want {want}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn fl_roundtrip_through_quantize_random_widths() {
+    prop::check_msg(
+        "FL decode(encode(x)) == quantize(x), random widths",
+        102,
+        prop::DEFAULT_CASES,
+        |rng| {
+            let rep = FloatRep::new(2 + rng.below(7) as u32,
+                                    1 + rng.below(23) as u32);
+            let scale = [1e-6f64, 1.0, 100.0, 1e8][rng.below(4) as usize];
+            (rep, (rng.normal() * scale) as f32)
+        },
+        |(rep, x)| {
+            let want = rep.quantize(*x);
+            let got = rep.decode(rep.encode(*x));
+            if got.to_bits() == want.to_bits()
+                || (got == 0.0 && want == 0.0)
+            {
+                Ok(())
+            } else {
+                Err(format!("got {got}, want {want}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn drum_relative_error_bound_vs_exact_multiply() {
+    // Each conditioned operand is within (1 ± 2^-(t-1)) of its true
+    // value, so the product error is bounded by (1 + 2^-(t-1))^2 - 1.
+    prop::check_msg(
+        "DRUM(t) product within (1 + 2^-(t-1))^2 - 1 of exact",
+        103,
+        prop::DEFAULT_CASES,
+        |rng| {
+            let t = 2 + rng.below(16) as u32;
+            let a = rng.below(1 << 24);
+            let b = rng.below(1 << 24);
+            (a, b, t)
+        },
+        |&(a, b, t)| {
+            let exact = (a as u128) * (b as u128);
+            let approx = drum_mul(a, b, t) as u128;
+            if exact == 0 {
+                return if approx == 0 {
+                    Ok(())
+                } else {
+                    Err(format!("0 * b gave {approx}"))
+                };
+            }
+            let f = 1.0 + (2.0f64).powi(-(t as i32 - 1));
+            let bound = f * f - 1.0 + 1e-12;
+            let rel = exact.abs_diff(approx) as f64 / exact as f64;
+            if rel <= bound {
+                Ok(())
+            } else {
+                Err(format!("rel error {rel} > bound {bound}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn h_unit_tracks_quantized_product() {
+    // End-to-end through the H(i, f, t) datapath: the approximate
+    // product stays within the DRUM relative bound of the quantized
+    // operands' product, plus the final FI re-quantization half-ulp.
+    // Operands stay small enough that saturation cannot engage
+    // (|q(x) q(y)| * (1 + bound) < max_value).
+    prop::check_msg(
+        "H(i, f, t) mul within DRUM bound + half ulp",
+        104,
+        prop::DEFAULT_CASES,
+        |rng| {
+            let t = 4 + rng.below(12) as u32;
+            let h = DrumMul::new(FixedPoint::new(6, 8), t);
+            let x = rng.range_f32(-6.0, 6.0);
+            let y = rng.range_f32(-6.0, 6.0);
+            (h, x, y)
+        },
+        |(h, x, y)| {
+            let qx = h.rep.quantize(*x) as f64;
+            let qy = h.rep.quantize(*y) as f64;
+            let got = h.mul(*x, *y) as f64;
+            let f = 1.0 + (2.0f64).powi(-(h.t as i32 - 1));
+            // slack: the unit rounds the wide product to f32 before
+            // re-quantizing (<= 2^-24 relative, ~1e-6 at these
+            // magnitudes); the DRUM + half-ulp terms are attainable
+            // exactly, so the cushion must cover that double rounding
+            let tol = (f * f - 1.0) * (qx * qy).abs()
+                + h.rep.ulp() as f64 / 2.0
+                + 1e-5;
+            if (got - qx * qy).abs() <= tol {
+                Ok(())
+            } else {
+                Err(format!("got {got}, want ~{} (tol {tol})", qx * qy))
+            }
+        },
+    );
+}
+
+#[test]
+fn quantize_slice_matches_scalar_all_reps() {
+    prop::check_msg(
+        "quantize_slice == scalar quantize (FI / FL / BinXNOR)",
+        105,
+        prop::DEFAULT_CASES,
+        |rng| {
+            let which = rng.below(3);
+            let xs: Vec<f32> = (0..16)
+                .map(|_| (rng.normal() * 30.0) as f32)
+                .collect();
+            (which, rng.below(9) as u32, 1 + rng.below(12) as u32, xs)
+        },
+        |(which, a, b, xs)| {
+            let rep: Box<dyn Representation> = match which {
+                0 => Box::new(FixedPoint::new(*a, *b)),
+                1 => Box::new(FloatRep::new(2 + a % 7, *b)),
+                _ => Box::new(BinXnor),
+            };
+            let mut ys = xs.clone();
+            rep.quantize_slice(&mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                let want = rep.quantize(*x);
+                if want.to_bits() != y.to_bits() {
+                    return Err(format!(
+                        "{}: slice({x}) = {y}, scalar = {want}",
+                        rep.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
