@@ -51,6 +51,10 @@ fn main() -> Result<()> {
     println!("pass-2 (recovery) : {}  acc {:.4}", res.chosen.name(),
              res.accuracy);
     println!("distinct configs evaluated: {}", res.evals);
+    println!("engine nets cached: {} ({:.2} MiB prepacked weight \
+              panels resident)",
+             ev.prepared_nets(),
+             ev.panel_bytes() as f64 / (1024.0 * 1024.0));
 
     // hardware verdict on the chosen per-layer representations
     println!("\nhardware cost of the chosen per-layer domains:");

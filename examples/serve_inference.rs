@@ -11,7 +11,9 @@ use anyhow::Result;
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::data::synth;
 use lop::nn::network::NetConfig;
+use lop::runtime::execution_plan;
 use lop::util::prng::Rng;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
@@ -23,6 +25,18 @@ fn main() -> Result<()> {
         NetConfig::parse("H(6,8,12)").unwrap(), // engine-backed
     ];
     let names: Vec<String> = configs.iter().map(|c| c.name()).collect();
+    // name each config's backend up front: engine configs list the
+    // per-layer packed kernels whose weight panels `prepare` will cache
+    for c in &configs {
+        let plan = execution_plan(c);
+        match plan.engine_kernels() {
+            Some(kernels) => println!("  {}: engine, kernels {:?} \
+                                       (prepacked weight panels)",
+                                      c.name(), kernels),
+            None => println!("  {}: {:?} (weights resident on device)",
+                             c.name(), plan),
+        }
+    }
     let opts = ServerOpts {
         configs,
         max_batch: 16,
@@ -101,9 +115,17 @@ fn main() -> Result<()> {
         }
     }
     let wall = t0.elapsed();
+    let depths = server.queue_depths();
+    let panels = metrics.panels_cached.load(Ordering::Relaxed);
+    let panel_bytes = metrics.panel_bytes.load(Ordering::Relaxed);
     server.shutdown();
 
     println!("\n================ end-to-end results ================");
+    println!("panel cache: {panels} weight panels resident, \
+              {:.2} MiB (conditioned once at prepare; forwards do \
+              zero weight-side packing)",
+             panel_bytes as f64 / (1024.0 * 1024.0));
+    println!("queue depths at drain: {depths:?}");
     println!("served     : {got} / {requests} (rejected {rejected})");
     println!("throughput : {:.1} req/s (offered {rate})",
              got as f64 / wall.as_secs_f64());

@@ -1,10 +1,19 @@
 //! GEMM kernel microbenchmarks — the L3 hot path the §Perf pass
-//! iterates on.  For every arithmetic provider this runs the packed,
-//! tiled kernel *and* the pre-tiling `reference` kernel on the
-//! network's real layer shapes, reporting M MAC/s and the packed :
-//! reference speedup, and writes the whole table as JSON
-//! (`BENCH_gemm_kernels.json`, or `$LOP_BENCH_JSON`) so CI can archive
-//! it.
+//! iterates on.  For every arithmetic provider this runs, on the
+//! network's real layer shapes:
+//!
+//! * the packed, tiled kernel with weights re-packed per call
+//!   (`GemmPlan::run` — the pre-prepack serving cost),
+//! * the same kernel on prepacked weight panels
+//!   (`GemmPlan::run_prepacked` — what `PreparedNet::forward` runs
+//!   after `prepare`), and
+//! * the pre-tiling `reference` kernel (the oracle),
+//!
+//! reporting M MAC/s, the packed : reference speedup, and the
+//! prepacked : per-call-repack speedup (the §Perf iteration-7 win; it
+//! is largest at batch 1, where weight packing dominates).  The whole
+//! table is written as JSON (`BENCH_gemm_kernels.json`, or
+//! `$LOP_BENCH_JSON`) so CI can archive the perf trajectory.
 
 use lop::approx::arith::ArithKind;
 use lop::nn::gemm::reference::gemm_reference;
@@ -17,8 +26,10 @@ struct Row {
     kind: String,
     threads: usize,
     packed_ns: f64,
+    prepacked_ns: f64,
     reference_ns: f64,
     mmacs_packed: f64,
+    mmacs_prepacked: f64,
     mmacs_reference: f64,
 }
 
@@ -40,14 +51,26 @@ fn run_shape(label: &str, m: usize, k: usize, n: usize, iters: usize,
     let macs = (m * k * n) as f64;
     for (ks, threads) in kinds {
         let kind = ArithKind::parse(ks).unwrap();
-        let plan = GemmPlan::new(&kind);
+        let mut plan = GemmPlan::new(&kind);
         let (x, w, mut out) = mats(m, k, n, &kind);
         let rp = bench(
-            &format!("{ks} packed (threads={threads})"),
+            &format!("{ks} repack/call (threads={threads})"),
             1,
             iters,
             || {
                 plan.run(&x, &w, m, k, n, &mut out, *threads);
+                std::hint::black_box(&out);
+            },
+        );
+        // condition the weight panels once, then serve from the cache —
+        // the PreparedNet::forward path after `prepare`
+        plan.prepack(&w, k, n);
+        let rq = bench(
+            &format!("{ks} prepacked (threads={threads})"),
+            1,
+            iters,
+            || {
+                plan.run_prepacked(&x, m, &mut out, *threads);
                 std::hint::black_box(&out);
             },
         );
@@ -62,8 +85,12 @@ fn run_shape(label: &str, m: usize, k: usize, n: usize, iters: usize,
             },
         );
         let mm_p = macs / (rp.mean_ns() / 1e9) / 1e6;
+        let mm_q = macs / (rq.mean_ns() / 1e9) / 1e6;
         let mm_r = macs / (rr.mean_ns() / 1e9) / 1e6;
         println!("{}  -> {:.0} M MAC/s", rp.summary(), mm_p);
+        println!("{}  -> {:.0} M MAC/s  (vs repack/call {:.2}x)",
+                 rq.summary(), mm_q,
+                 rp.mean_ns() / rq.mean_ns().max(1.0));
         println!("{}  -> {:.0} M MAC/s  (packed {:.2}x)",
                  rr.summary(), mm_r,
                  rr.mean_ns() / rp.mean_ns().max(1.0));
@@ -72,8 +99,10 @@ fn run_shape(label: &str, m: usize, k: usize, n: usize, iters: usize,
             kind: ks.to_string(),
             threads: *threads,
             packed_ns: rp.mean_ns(),
+            prepacked_ns: rq.mean_ns(),
             reference_ns: rr.mean_ns(),
             mmacs_packed: mm_p,
+            mmacs_prepacked: mm_q,
             mmacs_reference: mm_r,
         });
     }
@@ -88,17 +117,22 @@ fn write_json(rows: &[Row]) {
     for (i, r) in rows.iter().enumerate() {
         body.push_str(&format!(
             "    {{\"shape\": \"{}\", \"kind\": \"{}\", \"threads\": \
-             {}, \"packed_mean_ns\": {:.0}, \"reference_mean_ns\": \
-             {:.0}, \"packed_mmacs\": {:.1}, \"reference_mmacs\": \
-             {:.1}, \"speedup\": {:.3}}}{}\n",
+             {}, \"packed_mean_ns\": {:.0}, \"prepacked_mean_ns\": \
+             {:.0}, \"reference_mean_ns\": {:.0}, \"packed_mmacs\": \
+             {:.1}, \"prepacked_mmacs\": {:.1}, \"reference_mmacs\": \
+             {:.1}, \"speedup\": {:.3}, \"prepack_speedup\": \
+             {:.3}}}{}\n",
             r.shape,
             r.kind,
             r.threads,
             r.packed_ns,
+            r.prepacked_ns,
             r.reference_ns,
             r.mmacs_packed,
+            r.mmacs_prepacked,
             r.mmacs_reference,
             r.reference_ns / r.packed_ns.max(1.0),
+            r.packed_ns / r.prepacked_ns.max(1.0),
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -110,7 +144,8 @@ fn write_json(rows: &[Row]) {
 }
 
 fn main() {
-    println!("=== GEMM kernels: packed/tiled vs reference, M MAC/s ===");
+    println!("=== GEMM kernels: prepacked vs repack/call vs reference, \
+              M MAC/s ===");
     let mut rows = Vec::new();
 
     // FC1 shape (the network's dominant GEMM): batch 64 — all six
@@ -129,6 +164,25 @@ fn main() {
             ("H(6,8,12)", 0),
             ("FL(4,9)", 0),
             ("binxnor", 0),
+        ],
+        &mut rows,
+    );
+
+    // FC1 at batch 1: the serving case where per-call weight packing
+    // (O(kn)) dominates the O(mkn) MACs — the prepack win shows here
+    run_shape(
+        "FC1, batch 1",
+        1,
+        3136,
+        1024,
+        20,
+        &[
+            ("float32", 1),
+            ("FI(6,8)", 1),
+            ("H(6,8,12)", 1),
+            ("FL(4,9)", 1),
+            ("I(5,10)", 1),
+            ("binxnor", 1),
         ],
         &mut rows,
     );

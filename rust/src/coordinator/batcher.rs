@@ -78,6 +78,13 @@ impl BatchQueue {
         self.inner.lock().unwrap().queues[config_id].len()
     }
 
+    /// Depth of every queue in one lock acquisition (observability
+    /// snapshot for the server/metrics reporting).
+    pub fn depths(&self) -> Vec<usize> {
+        self.inner.lock().unwrap().queues.iter().map(|q| q.len())
+            .collect()
+    }
+
     /// Blocking: next batch from any queue accepted by `mask`.  Returns
     /// `None` once closed and drained (for this worker's mask).
     pub fn next_batch(&self, mask: &[bool])
@@ -188,9 +195,11 @@ mod tests {
         let (tx, _rx) = channel();
         q.push(req(1, 0, &tx)).unwrap();
         q.push(req(2, 1, &tx)).unwrap();
+        assert_eq!(q.depths(), vec![1, 1]);
         let (ci, _) = q.next_batch(&[false, true]).unwrap();
         assert_eq!(ci, 1);
         assert_eq!(q.depth(0), 1);
+        assert_eq!(q.depths(), vec![1, 0]);
     }
 
     #[test]

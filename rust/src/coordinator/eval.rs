@@ -4,10 +4,13 @@
 //! XLA-compiled); approximate-multiplier and mixed-family configs run on
 //! the bit-accurate Rust engine (the ground truth for approximate
 //! datapaths).  Results are memoized by configuration name — the §4.2
-//! explorer re-visits configurations constantly.
+//! explorer re-visits configurations constantly — and so are the
+//! engine's `PreparedNet`s: each holds its layers' prepacked weight
+//! panels, so re-scoring a config (full-test-set re-runs, frontier
+//! re-ranking) never re-quantizes or re-packs its weights.
 
 use crate::data::Dataset;
-use crate::nn::network::{Dcnn, NetConfig};
+use crate::nn::network::{Dcnn, NetConfig, PreparedNet};
 use crate::runtime::{execution_plan, ExecutionPlan, ModelRunner};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -28,8 +31,20 @@ pub struct Evaluator {
     pub subset: Vec<usize>,
     pub threads: usize,
     cache: HashMap<String, f64>,
+    /// engine networks by config name, each holding its layers'
+    /// prepacked weight panels (conditioned once, on first use)
+    prepared: HashMap<String, PreparedNet>,
     pub eval_count: usize,
 }
+
+/// Prepared-net cache bound: a `PreparedNet` holds quantized weights +
+/// prepacked panels (~tens of MB for this DCNN), and the explorer
+/// visits ~100 distinct configs — but each *trial* config is scored
+/// once (the accuracy memo absorbs revisits), so only the handful of
+/// configs that get re-scored (baseline, frontier, full-test re-runs)
+/// profit from staying resident.  Cap the cache and evict arbitrarily
+/// beyond it: bounded memory, and the hot few stay cached in practice.
+const PREPARED_CAP: usize = 8;
 
 impl Evaluator {
     pub fn new(dcnn: Dcnn, runner: Option<ModelRunner>, ds: Dataset,
@@ -42,6 +57,7 @@ impl Evaluator {
             subset: (0..n).collect(),
             threads,
             cache: HashMap::new(),
+            prepared: HashMap::new(),
             eval_count: 0,
         }
     }
@@ -79,7 +95,21 @@ impl Evaluator {
                 runner.forward(cfg, &x)?.argmax_rows()
             }
             Backend::Engine => {
-                let net = self.dcnn.prepare(*cfg);
+                // prepare once per config: quantization + panel
+                // prepacking are hoisted out of every later re-score
+                let key = cfg.name();
+                if !self.prepared.contains_key(&key) {
+                    if self.prepared.len() >= PREPARED_CAP {
+                        if let Some(evict) =
+                            self.prepared.keys().next().cloned()
+                        {
+                            self.prepared.remove(&evict);
+                        }
+                    }
+                    let net = self.dcnn.prepare(*cfg);
+                    self.prepared.insert(key.clone(), net);
+                }
+                let net = &self.prepared[&key];
                 // chunk to bound memory (im2col of large batches is big)
                 let mut preds = Vec::with_capacity(idx.len());
                 for chunk in idx.chunks(64) {
@@ -102,6 +132,20 @@ impl Evaluator {
 
     pub fn cached(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Engine networks resident in the prepare cache.
+    pub fn prepared_nets(&self) -> usize {
+        self.prepared.len()
+    }
+
+    /// Prepacked weight-panel bytes resident across cached engine
+    /// networks (the explorer reports this next to eval counts).
+    pub fn panel_bytes(&self) -> usize {
+        self.prepared
+            .values()
+            .map(|n| n.packed_panel_stats().1)
+            .sum()
     }
 
     pub fn dataset(&self) -> &Dataset {

@@ -13,6 +13,11 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
+    /// Weight panels cached by engine workers (layers x prepared
+    /// configs), cumulative across the worker pool.
+    pub panels_cached: AtomicU64,
+    /// Bytes resident in those prepacked weight panels.
+    pub panel_bytes: AtomicU64,
     buckets: [AtomicU64; BUCKETS],
     sum_us: AtomicU64,
 }
@@ -30,9 +35,18 @@ impl Metrics {
             completed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_items: AtomicU64::new(0),
+            panels_cached: AtomicU64::new(0),
+            panel_bytes: AtomicU64::new(0),
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             sum_us: AtomicU64::new(0),
         }
+    }
+
+    /// Account for `count` newly cached weight panels totalling
+    /// `bytes` (an engine worker just prepared a config).
+    pub fn record_panels(&self, count: u64, bytes: u64) {
+        self.panels_cached.fetch_add(count, Ordering::Relaxed);
+        self.panel_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
     pub fn record_latency(&self, d: Duration) {
@@ -86,7 +100,8 @@ impl Metrics {
         format!(
             "completed {} reqs in {:.2}s  ({:.1} req/s)\n\
              latency: mean {:.2} ms  p50 <= {:.2} ms  p99 <= {:.2} ms\n\
-             batching: {} batches, mean size {:.1}",
+             batching: {} batches, mean size {:.1}\n\
+             panel cache: {} weight panels, {:.2} MiB resident",
             n,
             wall.as_secs_f64(),
             n as f64 / wall.as_secs_f64().max(1e-9),
@@ -94,7 +109,10 @@ impl Metrics {
             self.percentile_us(50.0) as f64 / 1e3,
             self.percentile_us(99.0) as f64 / 1e3,
             self.batches.load(Ordering::Relaxed),
-            self.mean_batch_size()
+            self.mean_batch_size(),
+            self.panels_cached.load(Ordering::Relaxed),
+            self.panel_bytes.load(Ordering::Relaxed) as f64
+                / (1024.0 * 1024.0)
         )
     }
 }
@@ -130,5 +148,17 @@ mod tests {
         assert_eq!(m.percentile_us(99.0), 0);
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.panels_cached.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn panel_accounting_accumulates() {
+        let m = Metrics::new();
+        m.record_panels(4, 13_000_000);
+        m.record_panels(4, 1_000_000);
+        assert_eq!(m.panels_cached.load(Ordering::Relaxed), 8);
+        assert_eq!(m.panel_bytes.load(Ordering::Relaxed), 14_000_000);
+        let s = m.summary(Duration::from_secs(1));
+        assert!(s.contains("8 weight panels"), "{s}");
     }
 }

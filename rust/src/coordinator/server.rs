@@ -114,6 +114,12 @@ impl Server {
         Ok(Server { router, metrics, queue, workers })
     }
 
+    /// Per-config queue depths right now (admission/observability
+    /// snapshot, config order = `ServerOpts::configs`).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.queue.depths()
+    }
+
     /// Close the queue, drain in-flight work, join workers.
     pub fn shutdown(self) {
         self.queue.close();
@@ -180,9 +186,17 @@ fn engine_worker(dcnn: Arc<Dcnn>, configs: Vec<NetConfig>,
     let mut prepared: HashMap<usize, crate::nn::network::PreparedNet> =
         HashMap::new();
     while let Some((ci, batch)) = queue.next_batch(&mask) {
-        let net = prepared
-            .entry(ci)
-            .or_insert_with(|| dcnn.prepare(configs[ci]));
+        // First batch for a config prepares it once — quantization AND
+        // weight-panel prepacking — and accounts the resident panels;
+        // every later batch (batch-1 requests included) runs on fully
+        // conditioned panels.
+        if !prepared.contains_key(&ci) {
+            let net = dcnn.prepare(configs[ci]);
+            let (count, bytes) = net.packed_panel_stats();
+            metrics.record_panels(count as u64, bytes as u64);
+            prepared.insert(ci, net);
+        }
+        let net = &prepared[&ci];
         let x = batch_tensor(&batch);
         let preds = net.predict(&x, threads);
         metrics.record_batch(batch.len());

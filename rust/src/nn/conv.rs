@@ -13,7 +13,10 @@ use super::tensor::Tensor;
 /// Convolution as im2col + packed GEMM: `x` is [B,H,W,C], `w2` the
 /// kernel flattened to [kh*kw*C, cout] (pre-quantized, as
 /// `Dcnn::prepare` produces).  Returns [B*H*W, cout]; the caller
-/// reshapes to [B,H,W,cout].
+/// reshapes to [B,H,W,cout].  The im2col activations are rebuilt per
+/// call (they depend on `x`); the *filter* panels come from the plan's
+/// prepacked cache when present — the constant side of the GEMM is
+/// conditioned exactly once, at `prepare`.
 pub fn conv2d(plan: &GemmPlan, x: &Tensor, w2: &Tensor, kh: usize,
               kw: usize, pad: usize, threads: usize) -> Tensor {
     let cols = im2col(x, kh, kw, pad);
@@ -22,7 +25,8 @@ pub fn conv2d(plan: &GemmPlan, x: &Tensor, w2: &Tensor, kh: usize,
     assert_eq!(w2.shape[0], k, "conv weight rows != patch length");
     let n = w2.shape[1];
     let mut out = Tensor::zeros(vec![m, n]);
-    plan.run(&cols.data, &w2.data, m, k, n, &mut out.data, threads);
+    plan.run_cached(&cols.data, &w2.data, m, k, n, &mut out.data,
+                    threads);
     out
 }
 
@@ -77,9 +81,10 @@ mod tests {
         let cols = im2col(&x, 3, 3, 1);
         assert_eq!(cols.shape, vec![16, 18]);
         // patch at (y=1, x=1): center offset (ky=1, kx=1) is x[0,1,1,:]
-        let patch = &cols.data[(1 * 4 + 1) * 18..(1 * 4 + 1 + 1) * 18];
-        let center = &patch[(1 * 3 + 1) * 2..(1 * 3 + 1) * 2 + 2];
-        let want = &x.data[(1 * 4 + 1) * 2..(1 * 4 + 1) * 2 + 2];
+        let row = 4 + 1; // y * W + x at (1, 1)
+        let patch = &cols.data[row * 18..(row + 1) * 18];
+        let center = &patch[(3 + 1) * 2..(3 + 1) * 2 + 2]; // ky*kw + kx
+        let want = &x.data[row * 2..row * 2 + 2];
         assert_eq!(center, want);
         // top-left of patch (0,0) is padding
         let p00 = &cols.data[0..18];
@@ -113,7 +118,7 @@ mod tests {
 
     #[test]
     fn batch_independence() {
-        let mut d = vec![0.0f32; 2 * 3 * 3 * 1];
+        let mut d = vec![0.0f32; 2 * 3 * 3];
         for (i, v) in d.iter_mut().enumerate() {
             *v = i as f32;
         }

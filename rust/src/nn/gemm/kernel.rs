@@ -31,8 +31,8 @@
 //! across thread counts.
 
 use super::micro::MicroArith;
-use super::pack::{pack_a_block, pack_b_block};
-use crate::numeric::BinXnor;
+use super::pack::{pack_a_bits, pack_a_block, pack_b_bits, pack_b_block};
+use std::any::Any;
 
 /// Row-block size: the A sub-block (MC x KC) an inner sweep works on.
 pub const MC: usize = 64;
@@ -61,6 +61,89 @@ fn effective_threads(threads: usize, m: usize, n: usize) -> usize {
     }
 }
 
+/// FNV-1a over the raw f32 bit patterns — the cheap fingerprint
+/// [`PackedWeights`] carries so debug builds can verify that the `w`
+/// a caller hands to the cached path is the matrix the panels were
+/// conditioned from.
+pub fn weight_fingerprint(w: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in w {
+        h = (h ^ v.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Prepacked, conditioned weight-side panels for one kernel — the
+/// output of [`Kernel::prepack_weights`], owned by `GemmPlan` (one per
+/// prepared layer) and consumed by [`Kernel::run_prepacked`].
+///
+/// The panel buffer is opaque (`dyn Any`, `Send + Sync`): conditioned
+/// element panels for the blocked kernels (`Vec<Elem>` in the
+/// `pack_b_block` layout), sign-bit word panels (`Vec<u64>`) for the
+/// binary kernel.  The identity pair (kernel name, provider `cfg_tag`)
+/// travels with the buffer; `run_prepacked` panics rather than
+/// consume panels conditioned by a different kernel or a
+/// differently-parameterized provider, so two `prepare` calls with
+/// different `ArithKind`s can never share panels.
+pub struct PackedWeights {
+    panels: Box<dyn Any + Send + Sync>,
+    kernel: &'static str,
+    cfg_tag: u64,
+    k: usize,
+    n: usize,
+    bytes: usize,
+    w_fnv: u64,
+}
+
+impl PackedWeights {
+    /// Name of the kernel that conditioned these panels.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel
+    }
+
+    /// Depth (weight rows) the panels were packed for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output columns the panels were packed for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Resident panel-buffer size in bytes (conditioned elements only;
+    /// excludes this header).
+    pub fn resident_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// [`weight_fingerprint`] of the source weight matrix.
+    pub fn fingerprint(&self) -> u64 {
+        self.w_fnv
+    }
+}
+
+/// Guarded panel access: identity-check `pw` against the consuming
+/// kernel, then downcast to its concrete panel buffer.  Both checks
+/// panic — handing a kernel foreign panels is a caller bug that must
+/// not produce silently-misconditioned results.
+fn panels_of<'p, T: 'static>(pw: &'p PackedWeights, kernel: &'static str,
+                             cfg_tag: u64) -> &'p T {
+    assert_eq!(
+        pw.kernel, kernel,
+        "weight panels were packed by kernel `{}`, not `{}`",
+        pw.kernel, kernel
+    );
+    assert_eq!(
+        pw.cfg_tag, cfg_tag,
+        "weight panels were packed under a different `{kernel}` \
+         configuration"
+    );
+    pw.panels
+        .downcast_ref::<T>()
+        .expect("panel buffer type does not match the kernel")
+}
+
 /// One packed, tiled GEMM engine for a fixed `ArithKind`.  Object-safe:
 /// `GemmPlan` holds these as `Box<dyn Kernel>`; the monomorphized
 /// implementations behind it are `BlockedKernel<A, MR, NR>` (one per
@@ -81,6 +164,23 @@ pub trait Kernel: Send + Sync {
     /// lengths.
     fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
            out: &mut [f32], threads: usize);
+
+    /// Condition `w` (`k` x `n`, row-major) into this kernel's panel
+    /// layout once, for arbitrarily many [`Kernel::run_prepacked`]
+    /// calls.  The returned panels are exactly what [`Kernel::run`]
+    /// builds internally per call, so the two entry points are
+    /// bit-identical by construction.
+    fn prepack_weights(&self, w: &[f32], k: usize, n: usize)
+                       -> PackedWeights;
+
+    /// `out = cond(x) @ panels` with the weight side already
+    /// conditioned by [`Kernel::prepack_weights`] (which fixes `k` and
+    /// `n`).  Same caller contract as [`Kernel::run`]: shapes checked
+    /// and m/k/n = 0 short-circuited by `GemmPlan`, so implementations
+    /// may assume `m >= 1` and `pw.k(), pw.n() >= 1`.  Panics if `pw`
+    /// was packed by a different kernel or provider configuration.
+    fn run_prepacked(&self, x: &[f32], pw: &PackedWeights, m: usize,
+                     out: &mut [f32], threads: usize);
 }
 
 /// The generic blocked engine: one monomorphization per provider.
@@ -96,6 +196,32 @@ impl<A: MicroArith, const MR: usize, const NR: usize>
         assert!(MC % MR == 0, "MC must be a multiple of MR");
         assert!(NC % NR == 0, "NC must be a multiple of NR");
         BlockedKernel { arith }
+    }
+
+    /// The engine proper, over already-packed B panels: pack A, split
+    /// rows across threads, drive the blocked sweep.  Shared verbatim
+    /// by `run` (packs B per call) and `run_prepacked` (cached panels),
+    /// which is what makes the two entry points bit-identical.
+    fn run_packed_b(&self, x: &[f32], bp: &[A::Elem], m: usize, k: usize,
+                    n: usize, out: &mut [f32], threads: usize) {
+        let ap = pack_a_block::<A, MR>(&self.arith, x, m, k);
+        let threads = effective_threads(threads, m, n);
+        if threads <= 1 {
+            drive::<A, MR, NR>(&self.arith, &ap, bp, 0, out, k, n);
+            return;
+        }
+        // Chunk rows per thread, aligned to MR so no A panel straddles
+        // two threads.
+        let rows_per = m.div_ceil(threads).next_multiple_of(MR);
+        std::thread::scope(|s| {
+            for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let (ap, arith) = (&ap, &self.arith);
+                s.spawn(move || {
+                    drive::<A, MR, NR>(arith, ap, bp, t * rows_per,
+                                       chunk, k, n);
+                });
+            }
+        });
     }
 }
 
@@ -116,25 +242,31 @@ impl<A: MicroArith, const MR: usize, const NR: usize> Kernel
 
     fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
            out: &mut [f32], threads: usize) {
-        let ap = pack_a_block::<A, MR>(&self.arith, x, m, k);
         let bp = pack_b_block::<A, NR>(&self.arith, w, k, n);
-        let threads = effective_threads(threads, m, n);
-        if threads <= 1 {
-            drive::<A, MR, NR>(&self.arith, &ap, &bp, 0, out, k, n);
-            return;
+        self.run_packed_b(x, &bp, m, k, n, out, threads);
+    }
+
+    fn prepack_weights(&self, w: &[f32], k: usize, n: usize)
+                       -> PackedWeights {
+        assert_eq!(w.len(), k * n, "w shape mismatch");
+        let bp = pack_b_block::<A, NR>(&self.arith, w, k, n);
+        let bytes = bp.len() * std::mem::size_of::<A::Elem>();
+        PackedWeights {
+            panels: Box::new(bp),
+            kernel: self.arith.name(),
+            cfg_tag: self.arith.cfg_tag(),
+            k,
+            n,
+            bytes,
+            w_fnv: weight_fingerprint(w),
         }
-        // Chunk rows per thread, aligned to MR so no A panel straddles
-        // two threads.
-        let rows_per = m.div_ceil(threads).next_multiple_of(MR);
-        std::thread::scope(|s| {
-            for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
-                let (ap, bp, arith) = (&ap, &bp, &self.arith);
-                s.spawn(move || {
-                    drive::<A, MR, NR>(arith, ap, bp, t * rows_per,
-                                       chunk, k, n);
-                });
-            }
-        });
+    }
+
+    fn run_prepacked(&self, x: &[f32], pw: &PackedWeights, m: usize,
+                     out: &mut [f32], threads: usize) {
+        let bp = panels_of::<Vec<A::Elem>>(pw, self.arith.name(),
+                                           self.arith.cfg_tag());
+        self.run_packed_b(x, bp, m, pw.k, pw.n, out, threads);
     }
 }
 
@@ -227,8 +359,51 @@ fn micro<A: MicroArith, const MR: usize, const NR: usize>(
 const BMR: usize = 4;
 const BNR: usize = 4;
 
+/// Provider fingerprint for the (parameterless) binary configuration.
+const BINARY_CFG_TAG: u64 = 0x06;
+
 /// Bit-packed XNOR/popcount kernel for `ArithKind::Binary`.
 pub struct BinaryKernel;
+
+impl BinaryKernel {
+    /// The popcount engine over already-packed B word panels: pack A
+    /// sign bits, split rows across threads, drive.  Shared by `run`
+    /// and `run_prepacked` — the packing *is* the conditioning for this
+    /// representation, so the cached panels carry the whole weight-side
+    /// cost.
+    fn run_packed_b(&self, x: &[f32], bp: &[u64], m: usize, k: usize,
+                    n: usize, out: &mut [f32], threads: usize) {
+        let words = k.div_ceil(64);
+        // A: BMR-row word panels (same middle-axis layout as
+        // pack::pack_a_block, 64 depth steps per word).
+        let ap = pack_a_bits::<BMR>(x, m, k);
+        // bits >= k in the last word must not count as agreements
+        let tail_bits = k % 64;
+        let tail_mask =
+            if tail_bits == 0 { u64::MAX } else { (1u64 << tail_bits) - 1 };
+
+        let threads = effective_threads(threads, m, n);
+        let rows_per = if threads <= 1 {
+            m.next_multiple_of(BMR)
+        } else {
+            m.div_ceil(threads).next_multiple_of(BMR)
+        };
+        std::thread::scope(|s| {
+            for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let ap = &ap;
+                let worker = move || {
+                    binary_drive(ap, bp, t * rows_per, chunk, words,
+                                 tail_mask, k, n);
+                };
+                if threads <= 1 {
+                    worker();
+                } else {
+                    s.spawn(worker);
+                }
+            }
+        });
+    }
+}
 
 impl Kernel for BinaryKernel {
     fn name(&self) -> &'static str {
@@ -245,55 +420,30 @@ impl Kernel for BinaryKernel {
 
     fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
            out: &mut [f32], threads: usize) {
-        let words = k.div_ceil(64);
-        // A: BMR-row word panels, offset(p, wd, r) = p*BMR*words +
-        // wd*BMR + r (same middle-axis layout as pack::pack_a_block).
-        let apanels = m.div_ceil(BMR);
-        let mut ap = vec![0u64; apanels * BMR * words];
-        for r in 0..m {
-            let base = (r / BMR) * BMR * words + r % BMR;
-            let xrow = &x[r * k..(r + 1) * k];
-            for (d, &v) in xrow.iter().enumerate() {
-                ap[base + (d / 64) * BMR] |=
-                    BinXnor::binarize(v) << (d % 64);
-            }
-        }
-        // B: BNR-column word panels.
-        let bpanels = n.div_ceil(BNR);
-        let mut bp = vec![0u64; bpanels * BNR * words];
-        for d in 0..k {
-            let wrow = &w[d * n..(d + 1) * n];
-            for (c, &v) in wrow.iter().enumerate() {
-                let base = (c / BNR) * BNR * words + c % BNR;
-                bp[base + (d / 64) * BNR] |=
-                    BinXnor::binarize(v) << (d % 64);
-            }
-        }
-        // bits >= k in the last word must not count as agreements
-        let tail_bits = k % 64;
-        let tail_mask =
-            if tail_bits == 0 { u64::MAX } else { (1u64 << tail_bits) - 1 };
+        let bp = pack_b_bits::<BNR>(w, k, n);
+        self.run_packed_b(x, &bp, m, k, n, out, threads);
+    }
 
-        let threads = effective_threads(threads, m, n);
-        let rows_per = if threads <= 1 {
-            m.next_multiple_of(BMR)
-        } else {
-            m.div_ceil(threads).next_multiple_of(BMR)
-        };
-        std::thread::scope(|s| {
-            for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
-                let (ap, bp) = (&ap, &bp);
-                let worker = move || {
-                    binary_drive(ap, bp, t * rows_per, chunk, words,
-                                 tail_mask, k, n);
-                };
-                if threads <= 1 {
-                    worker();
-                } else {
-                    s.spawn(worker);
-                }
-            }
-        });
+    fn prepack_weights(&self, w: &[f32], k: usize, n: usize)
+                       -> PackedWeights {
+        assert_eq!(w.len(), k * n, "w shape mismatch");
+        let bp = pack_b_bits::<BNR>(w, k, n);
+        let bytes = bp.len() * std::mem::size_of::<u64>();
+        PackedWeights {
+            panels: Box::new(bp),
+            kernel: self.name(),
+            cfg_tag: BINARY_CFG_TAG,
+            k,
+            n,
+            bytes,
+            w_fnv: weight_fingerprint(w),
+        }
+    }
+
+    fn run_prepacked(&self, x: &[f32], pw: &PackedWeights, m: usize,
+                     out: &mut [f32], threads: usize) {
+        let bp = panels_of::<Vec<u64>>(pw, self.name(), BINARY_CFG_TAG);
+        self.run_packed_b(x, bp, m, pw.k, pw.n, out, threads);
     }
 }
 
@@ -348,5 +498,46 @@ mod tests {
         assert_eq!(effective_threads(4, 200, 100), 4);
         assert_eq!(effective_threads(8, 2, 16 * 1024), 2); // capped by m
         assert!(effective_threads(0, 200, 100) >= 1);
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_value_sensitive() {
+        assert_eq!(weight_fingerprint(&[1.0, 2.0]),
+                   weight_fingerprint(&[1.0, 2.0]));
+        assert_ne!(weight_fingerprint(&[1.0, 2.0]),
+                   weight_fingerprint(&[2.0, 1.0]));
+        assert_ne!(weight_fingerprint(&[1.0]),
+                   weight_fingerprint(&[1.5]));
+        // 0.0 and -0.0 are different bit patterns -> different panels
+        // for sign-sensitive providers (binary)
+        assert_ne!(weight_fingerprint(&[0.0]),
+                   weight_fingerprint(&[-0.0]));
+    }
+
+    #[test]
+    fn prepack_carries_identity_and_shape() {
+        use super::super::micro::F32Micro;
+        let kern = BlockedKernel::<_, 8, 8>::new(F32Micro);
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let pw = kern.prepack_weights(&w, 2, 3);
+        assert_eq!(pw.kernel_name(), "packed-f32");
+        assert_eq!((pw.k(), pw.n()), (2, 3));
+        // one 8-wide panel of depth 2, f32 elements
+        assert_eq!(pw.resident_bytes(), 8 * 2 * 4);
+        assert_eq!(pw.fingerprint(), weight_fingerprint(&w));
+        // binary panels report word-panel bytes
+        let pb = BinaryKernel.prepack_weights(&w, 2, 3);
+        assert_eq!(pb.kernel_name(), "packed-binxnor");
+        assert_eq!(pb.resident_bytes(), 4 * 8); // one BNR=4 word panel
+    }
+
+    #[test]
+    #[should_panic(expected = "packed by kernel")]
+    fn foreign_panels_rejected_by_kernel_name() {
+        use super::super::micro::F32Micro;
+        let f32k = BlockedKernel::<_, 8, 8>::new(F32Micro);
+        let pw = BinaryKernel.prepack_weights(&[1.0; 6], 2, 3);
+        let mut out = [0.0f32; 3];
+        f32k.run_prepacked(&[1.0, 1.0], &pw, 1, &mut out, 1);
     }
 }

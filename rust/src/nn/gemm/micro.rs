@@ -25,7 +25,9 @@ use crate::numeric::{FixedPoint, FloatRep, Representation};
 /// its packing is along k (64 operands per word), not per element.
 pub trait MicroArith: Copy + Send + Sync {
     /// Packed operand: the conditioned form of one f32 input.
-    type Elem: Copy + Send + Sync;
+    /// (`'static` because prepacked weight panels are stored behind
+    /// `dyn Any` in [`super::kernel::PackedWeights`].)
+    type Elem: Copy + Send + Sync + 'static;
     /// Wide accumulator carried across the *entire* k reduction (the
     /// paper widens the partial-sum datapath, §4.2 — nothing narrows
     /// until `finish`).
@@ -33,6 +35,15 @@ pub trait MicroArith: Copy + Send + Sync {
 
     /// Kernel name for plans/logs, e.g. `packed-fi`.
     fn name(&self) -> &'static str;
+
+    /// Stable fingerprint of this provider's full parameterization
+    /// (representation widths, approximation windows).  Two providers
+    /// with the same `name` but different parameters — e.g. FI(6, 8)
+    /// vs FI(3, 4) — must return different tags: `run_prepacked`
+    /// refuses weight panels whose tag does not match, so panels
+    /// conditioned under one configuration can never be silently
+    /// reused under another.
+    fn cfg_tag(&self) -> u64;
 
     /// Operand conditioning fused into packing: quantize / encode /
     /// DRUM-condition / CFPU-classify, hoisted to O(mk + kn) total.
@@ -70,6 +81,10 @@ impl MicroArith for F32Micro {
 
     fn name(&self) -> &'static str {
         "packed-f32"
+    }
+
+    fn cfg_tag(&self) -> u64 {
+        0x01
     }
 
     #[inline(always)]
@@ -137,6 +152,11 @@ impl MicroArith for FixedMicro {
         "packed-fi"
     }
 
+    fn cfg_tag(&self) -> u64 {
+        0x02 | ((self.rep.i_bits as u64) << 8)
+            | ((self.rep.f_bits as u64) << 16)
+    }
+
     #[inline(always)]
     fn condition(&self, x: f32) -> i32 {
         signed_code(&self.rep, x)
@@ -190,6 +210,12 @@ impl MicroArith for DrumMicro {
 
     fn name(&self) -> &'static str {
         "packed-drum"
+    }
+
+    fn cfg_tag(&self) -> u64 {
+        0x03 | ((self.rep.i_bits as u64) << 8)
+            | ((self.rep.f_bits as u64) << 16)
+            | ((self.t as u64) << 24)
     }
 
     #[inline(always)]
@@ -246,6 +272,11 @@ impl MicroArith for FloatMicro {
 
     fn name(&self) -> &'static str {
         "packed-fl"
+    }
+
+    fn cfg_tag(&self) -> u64 {
+        0x04 | ((self.rep.e_bits as u64) << 8)
+            | ((self.rep.m_bits as u64) << 16)
     }
 
     #[inline(always)]
@@ -389,6 +420,12 @@ impl MicroArith for CfpuMicro {
 
     fn name(&self) -> &'static str {
         "packed-cfpu"
+    }
+
+    fn cfg_tag(&self) -> u64 {
+        0x05 | ((self.c.rep.e_bits as u64) << 8)
+            | ((self.c.rep.m_bits as u64) << 16)
+            | ((self.c.w as u64) << 24)
     }
 
     #[inline(always)]

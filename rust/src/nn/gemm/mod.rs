@@ -25,13 +25,24 @@
 //! [`GemmPlan`] is the selection layer: resolve an [`ArithKind`] to its
 //! kernel once (per prepared layer, per bench case), then `run`
 //! repeatedly.  [`gemm`] is the one-shot convenience wrapper.
+//!
+//! Weight matrices are *constant* per prepared layer, so the plan can
+//! additionally own their conditioned panels: [`GemmPlan::prepack`]
+//! runs the kernel's weight-side packing ([`Kernel::prepack_weights`])
+//! once, and [`GemmPlan::run_prepacked`] / [`GemmPlan::run_cached`]
+//! then serve every forward pass from the cached [`PackedWeights`] —
+//! zero weight-side `pack_b_block`/bitmap-encode work per call
+//! (`tests/prepack_differential.rs` proves the cached path bit-identical
+//! to [`reference`] and pins the zero-repack contract via
+//! [`pack::weight_pack_count`]).
 
 pub mod kernel;
 pub mod micro;
 pub mod pack;
 pub mod reference;
 
-pub use kernel::{default_threads, Kernel, KC, MC, NC};
+pub use kernel::{default_threads, weight_fingerprint, Kernel,
+                 PackedWeights, KC, MC, NC};
 
 use crate::approx::arith::ArithKind;
 use kernel::{BinaryKernel, BlockedKernel};
@@ -75,9 +86,12 @@ pub fn select_kernel(kind: &ArithKind) -> Box<dyn Kernel> {
     }
 }
 
-/// A resolved (provider -> packed kernel) pairing.  Layers resolve
-/// their plan once at `prepare` time and reuse it every forward pass;
-/// the explorer and benches do the same per configuration.
+/// A resolved (provider -> packed kernel) pairing, optionally carrying
+/// the layer's prepacked weight panels.  Layers resolve their plan
+/// once at `prepare` time — which also conditions the constant weight
+/// matrix into panels via [`GemmPlan::prepack`] — and reuse both every
+/// forward pass; the explorer and benches do the same per
+/// configuration.
 ///
 /// ```
 /// use lop::approx::arith::ArithKind;
@@ -90,14 +104,32 @@ pub fn select_kernel(kind: &ArithKind) -> Box<dyn Kernel> {
 /// plan.run(&x, &w, 2, 1, 1, &mut out, 1);
 /// assert_eq!(out, [1.0, -2.0]);
 /// ```
+///
+/// Prepack once, run many (the serving hot path — no weight-side
+/// packing per call):
+///
+/// ```
+/// use lop::approx::arith::ArithKind;
+/// use lop::nn::gemm::GemmPlan;
+///
+/// let mut plan = GemmPlan::new(&ArithKind::parse("FI(6,8)").unwrap());
+/// plan.prepack(&[2.0f32], 1, 1); // the layer's constant 1 x 1 weights
+/// assert!(plan.packed_weights().is_some());
+/// let mut out = [0.0f32; 2];
+/// plan.run_prepacked(&[0.5, -1.0], 2, &mut out, 1);
+/// assert_eq!(out, [1.0, -2.0]);
+/// ```
 pub struct GemmPlan {
     kind: ArithKind,
     kernel: Box<dyn Kernel>,
+    /// Cached conditioned weight panels (`prepack`); `run_cached` and
+    /// `run_prepacked` consume these instead of re-packing per call.
+    packed: Option<PackedWeights>,
 }
 
 impl GemmPlan {
     pub fn new(kind: &ArithKind) -> GemmPlan {
-        GemmPlan { kind: *kind, kernel: select_kernel(kind) }
+        GemmPlan { kind: *kind, kernel: select_kernel(kind), packed: None }
     }
 
     pub fn kind(&self) -> &ArithKind {
@@ -126,6 +158,75 @@ impl GemmPlan {
             return;
         }
         self.kernel.run(x, w, m, k, n, out, threads);
+    }
+
+    /// Condition `w` (`k` x `n`, row-major, already quantized — the
+    /// same contract as [`GemmPlan::run`]) into the kernel's panel
+    /// layout and cache the panels on this plan.  Replaces any
+    /// previously cached panels.
+    pub fn prepack(&mut self, w: &[f32], k: usize, n: usize) {
+        assert_eq!(w.len(), k * n, "w shape mismatch");
+        self.packed = Some(self.kernel.prepack_weights(w, k, n));
+    }
+
+    /// The cached weight panels, if [`GemmPlan::prepack`] has run.
+    pub fn packed_weights(&self) -> Option<&PackedWeights> {
+        self.packed.as_ref()
+    }
+
+    /// Bytes resident in this plan's cached panels (0 when not
+    /// prepacked) — surfaced through `coordinator::metrics`.
+    pub fn panel_bytes(&self) -> usize {
+        self.packed.as_ref().map_or(0, |p| p.resident_bytes())
+    }
+
+    /// `out = quant(x) @ w_prepacked`: the weight side comes entirely
+    /// from the panels cached by [`GemmPlan::prepack`] (which fixed
+    /// `k` and `n`) — zero weight-side conditioning or packing per
+    /// call.  Panics if the plan was never prepacked.
+    pub fn run_prepacked(&self, x: &[f32], m: usize, out: &mut [f32],
+                         threads: usize) {
+        let pw = self
+            .packed
+            .as_ref()
+            .expect("GemmPlan::run_prepacked called before prepack");
+        let (k, n) = (pw.k(), pw.n());
+        assert_eq!(x.len(), m * k, "x shape mismatch");
+        assert_eq!(out.len(), m * n, "out shape mismatch");
+        if m == 0 || n == 0 {
+            return;
+        }
+        if k == 0 {
+            out.fill(0.0);
+            return;
+        }
+        self.kernel.run_prepacked(x, pw, m, out, threads);
+    }
+
+    /// The layer entry point: run on the cached panels when the plan
+    /// is prepacked (in which case `w` MUST be the matrix that was
+    /// prepacked — debug builds verify its fingerprint), else pack `w`
+    /// per call like [`GemmPlan::run`].
+    pub fn run_cached(&self, x: &[f32], w: &[f32], m: usize, k: usize,
+                      n: usize, out: &mut [f32], threads: usize) {
+        match &self.packed {
+            Some(pw) => {
+                assert_eq!(
+                    (pw.k(), pw.n()),
+                    (k, n),
+                    "prepacked panels are {}x{}, call is {k}x{n}",
+                    pw.k(),
+                    pw.n()
+                );
+                debug_assert_eq!(
+                    weight_fingerprint(w),
+                    pw.fingerprint(),
+                    "run_cached: w is not the prepacked weight matrix"
+                );
+                self.run_prepacked(x, m, out, threads);
+            }
+            None => self.run(x, w, m, k, n, out, threads),
+        }
     }
 }
 
@@ -349,5 +450,80 @@ mod tests {
         let mut out2 = vec![7.0f32; 6];
         gemm(&kind, &[], &[], 2, 0, 3, &mut out2, 1);
         assert!(out2.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prepacked_matches_run_smoke() {
+        // The full randomized sweep lives in
+        // tests/prepack_differential.rs; this smoke keeps the cached
+        // path visible to plain `cargo test` on a tail-heavy shape.
+        let (m, k, n) = (13, 300, 11);
+        for ks in ["float32", "FI(6,8)", "H(6,8,6)", "FL(4,9)",
+                   "I(5,10)", "binxnor"] {
+            let kind = ArithKind::parse(ks).unwrap();
+            let (x, mut w) = rand_mats(30, m, k, n);
+            for wv in &mut w {
+                *wv = kind.quantize(*wv);
+            }
+            let mut plan = GemmPlan::new(&kind);
+            plan.prepack(&w, k, n);
+            let mut got = vec![0.0; m * n];
+            plan.run_prepacked(&x, m, &mut got, 1);
+            let mut want = vec![0.0; m * n];
+            plan.run(&x, &w, m, k, n, &mut want, 1);
+            for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), ww.to_bits(),
+                           "{ks}: out[{i}] = {g} vs per-call {ww}");
+            }
+            // run_cached hits the same panels
+            let mut cached = vec![0.0; m * n];
+            plan.run_cached(&x, &w, m, k, n, &mut cached, 1);
+            assert_eq!(cached, want, "{ks}");
+        }
+    }
+
+    #[test]
+    fn prepacked_zero_sized_edges() {
+        let kind = ArithKind::Float32;
+        // k = 0: panels are empty, output zeroed
+        let mut plan = GemmPlan::new(&kind);
+        plan.prepack(&[], 0, 3);
+        let mut out = vec![7.0f32; 6];
+        plan.run_prepacked(&[], 2, &mut out, 1);
+        assert!(out.iter().all(|&v| v == 0.0));
+        // m = 0: no output
+        let mut plan1 = GemmPlan::new(&kind);
+        plan1.prepack(&[1.0, 2.0, 3.0], 1, 3);
+        let mut empty: [f32; 0] = [];
+        plan1.run_prepacked(&[], 0, &mut empty, 1);
+        // n = 1 single column
+        let mut plan2 = GemmPlan::new(&kind);
+        plan2.prepack(&[2.0, 4.0], 2, 1);
+        let mut out1 = [0.0f32; 1];
+        plan2.run_prepacked(&[1.0, 0.5], 1, &mut out1, 1);
+        assert_eq!(out1[0], 4.0);
+    }
+
+    #[test]
+    fn prepack_replaces_panels() {
+        let kind = ArithKind::Float32;
+        let mut plan = GemmPlan::new(&kind);
+        plan.prepack(&[1.0], 1, 1);
+        let fp0 = plan.packed_weights().unwrap().fingerprint();
+        plan.prepack(&[2.0], 1, 1);
+        let fp1 = plan.packed_weights().unwrap().fingerprint();
+        assert_ne!(fp0, fp1);
+        let mut out = [0.0f32; 1];
+        plan.run_prepacked(&[3.0], 1, &mut out, 1);
+        assert_eq!(out[0], 6.0);
+        assert!(plan.panel_bytes() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "before prepack")]
+    fn run_prepacked_requires_prepack() {
+        let plan = GemmPlan::new(&ArithKind::Float32);
+        let mut out = [0.0f32; 1];
+        plan.run_prepacked(&[1.0], 1, &mut out, 1);
     }
 }

@@ -25,6 +25,29 @@
 //! outputs are computed into the accumulator tile but never stored.
 
 use super::micro::MicroArith;
+use crate::numeric::BinXnor;
+use std::cell::Cell;
+
+thread_local! {
+    /// Weight-side (B-operand) packing operations performed by this
+    /// thread.  Thread-local is the right scope: every kernel packs on
+    /// the *calling* thread before spawning workers, so a caller can
+    /// bracket its own forwards without interference from concurrent
+    /// tests or serving threads.
+    static WEIGHT_PACKS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// How many weight-side packing operations ([`pack_b_block`] calls and
+/// binary weight-bitmap builds) this thread has performed.  The
+/// prepack-once contract (`tests/prepack_differential.rs`) asserts this
+/// stays flat across `PreparedNet::forward` calls after `prepare`.
+pub fn weight_pack_count() -> u64 {
+    WEIGHT_PACKS.with(|c| c.get())
+}
+
+fn note_weight_pack() {
+    WEIGHT_PACKS.with(|c| c.set(c.get() + 1));
+}
 
 /// Pack all of row-major `x` (`m` x `k`, row stride `k`) into MR-row
 /// panels, conditioning each element.  Returns
@@ -53,6 +76,7 @@ pub fn pack_a_block<A: MicroArith, const MR: usize>(
 pub fn pack_b_block<A: MicroArith, const NR: usize>(
     arith: &A, w: &[f32], k: usize, n: usize,
 ) -> Vec<A::Elem> {
+    note_weight_pack();
     let panels = n.div_ceil(NR);
     let mut out = vec![arith.zero_elem(); panels * NR * k];
     for d in 0..k {
@@ -63,6 +87,49 @@ pub fn pack_b_block<A: MicroArith, const NR: usize>(
             for (ci, c) in (q * NR..c_hi).enumerate() {
                 out[base + ci] = arith.condition(wrow[c]);
             }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// bit packing for the binary/XNOR kernel: 64 sign bits per word along
+// k, so the packing *is* the conditioning (paper §4.5).  Shared by the
+// per-call path and the prepacked weight path of `kernel::BinaryKernel`.
+// ---------------------------------------------------------------------------
+
+/// Pack row-major `x` (`m` x `k`) into MR-row *word* panels of sign
+/// bits: `offset(p, wd, r) = p*MR*words + wd*MR + r` with
+/// `words = k.div_ceil(64)` (same middle-axis layout as
+/// [`pack_a_block`], with 64 depth steps per word).
+pub fn pack_a_bits<const MR: usize>(x: &[f32], m: usize, k: usize)
+                                    -> Vec<u64> {
+    let words = k.div_ceil(64);
+    let panels = m.div_ceil(MR);
+    let mut out = vec![0u64; panels * MR * words];
+    for r in 0..m {
+        let base = (r / MR) * MR * words + r % MR;
+        let xrow = &x[r * k..(r + 1) * k];
+        for (d, &v) in xrow.iter().enumerate() {
+            out[base + (d / 64) * MR] |= BinXnor::binarize(v) << (d % 64);
+        }
+    }
+    out
+}
+
+/// Pack row-major `w` (`k` x `n`) into NR-column word panels of sign
+/// bits: `offset(q, wd, c) = q*NR*words + wd*NR + c`.
+pub fn pack_b_bits<const NR: usize>(w: &[f32], k: usize, n: usize)
+                                    -> Vec<u64> {
+    note_weight_pack();
+    let words = k.div_ceil(64);
+    let panels = n.div_ceil(NR);
+    let mut out = vec![0u64; panels * NR * words];
+    for d in 0..k {
+        let wrow = &w[d * n..(d + 1) * n];
+        for (c, &v) in wrow.iter().enumerate() {
+            let base = (c / NR) * NR * words + c % NR;
+            out[base + (d / 64) * NR] |= BinXnor::binarize(v) << (d % 64);
         }
     }
     out
@@ -107,5 +174,38 @@ mod tests {
         assert!(p.is_empty());
         let q = pack_b_block::<F32Micro, 4>(&F32Micro, &[], 0, 5);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bit_panel_layout() {
+        // 2 x 3 sign matrix with NR = 2: panel 0 = cols {0, 1}, panel 1
+        // = col 2 + one padded (all-zero-bit) column; k = 2 fits in one
+        // word per lane.
+        let w = [1.0f32, -2.0, 3.0, -4.0, 5.0, -6.0];
+        let p = pack_b_bits::<2>(&w, 2, 3);
+        assert_eq!(p.len(), 2 * 2);
+        // col 0: signs (+, -) -> bits (1, 0); col 1: (-, +) -> (0, 1)
+        assert_eq!(p[0], 0b01);
+        assert_eq!(p[1], 0b10);
+        // col 2: (+, -) -> (1, 0); padded col stays 0
+        assert_eq!(p[2], 0b01);
+        assert_eq!(p[3], 0);
+        // A-side: 3 x 2 with MR = 2 -> panel 1 holds row 2 + padding
+        let a = pack_a_bits::<2>(&w, 3, 2);
+        assert_eq!(a.len(), 2 * 2);
+        // row 0: (+, -) -> 0b01; row 1: (+, -) -> 0b01
+        assert_eq!(&a[0..2], &[0b01, 0b01]);
+        assert_eq!(&a[2..4], &[0b01, 0]);
+    }
+
+    #[test]
+    fn weight_pack_counter_counts_b_side_only() {
+        let c0 = weight_pack_count();
+        let _ = pack_a_block::<F32Micro, 4>(&F32Micro, &[1.0; 8], 2, 4);
+        let _ = pack_a_bits::<4>(&[1.0; 8], 2, 4);
+        assert_eq!(weight_pack_count(), c0, "A-side packs must not count");
+        let _ = pack_b_block::<F32Micro, 4>(&F32Micro, &[1.0; 8], 2, 4);
+        let _ = pack_b_bits::<4>(&[1.0; 8], 2, 4);
+        assert_eq!(weight_pack_count(), c0 + 2);
     }
 }

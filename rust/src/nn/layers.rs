@@ -7,7 +7,10 @@ use super::gemm::GemmPlan;
 use super::tensor::Tensor;
 
 /// Fully-connected layer: `x [m,k] @ w [k,n] + bias` on the packed
-/// GEMM path (`w` pre-quantized, as `Dcnn::prepare` produces).
+/// GEMM path (`w` pre-quantized, as `Dcnn::prepare` produces).  When
+/// the plan carries prepacked panels for `w` (`Dcnn::prepare` builds
+/// them), the weight side is served from the cache — no per-call
+/// conditioning or packing.
 pub fn dense(plan: &GemmPlan, x: &Tensor, w: &Tensor, bias: &[f32],
              threads: usize) -> Tensor {
     assert_eq!(x.ndim(), 2, "dense input must be [m, k]");
@@ -16,7 +19,7 @@ pub fn dense(plan: &GemmPlan, x: &Tensor, w: &Tensor, bias: &[f32],
     assert_eq!(w.shape[0], k, "dense weight rows != input cols");
     let n = w.shape[1];
     let mut out = Tensor::zeros(vec![m, n]);
-    plan.run(&x.data, &w.data, m, k, n, &mut out.data, threads);
+    plan.run_cached(&x.data, &w.data, m, k, n, &mut out.data, threads);
     add_bias(&mut out, bias);
     out
 }
@@ -126,7 +129,7 @@ mod tests {
     #[test]
     fn maxpool_multichannel() {
         let mut d = vec![0.0f32; 2 * 2 * 2];
-        d[0 * 2 + 0] = 9.0; // (0,0,c0)
+        d[0] = 9.0; // (0,0,c0)
         d[3 * 2 + 1] = 7.0; // (1,1,c1)
         let t = Tensor::new(vec![1, 2, 2, 2], d);
         let p = maxpool2(&t);

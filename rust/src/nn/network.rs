@@ -114,9 +114,16 @@ impl Dcnn {
             wq.push(w2);
             bq.push(quantize_tensor(kind, b));
         }
-        // resolve each layer's packed kernel once; every forward pass
-        // reuses the plan
-        let plans = cfg.layers.iter().map(GemmPlan::new).collect();
+        // resolve each layer's packed kernel once AND condition its
+        // constant weight matrix into that kernel's panel layout; every
+        // forward pass reuses both — zero weight-side packing per call
+        // (tests/prepack_differential.rs pins this via
+        // gemm::pack::weight_pack_count)
+        let mut plans: Vec<GemmPlan> =
+            cfg.layers.iter().map(GemmPlan::new).collect();
+        for (plan, w2) in plans.iter_mut().zip(&wq) {
+            plan.prepack(&w2.data, w2.shape[0], w2.shape[1]);
+        }
         PreparedNet { cfg, wq, bq, plans }
     }
 
@@ -195,6 +202,19 @@ impl PreparedNet {
             *n = p.kernel_name();
         }
         names
+    }
+
+    /// Panel-cache observability: (number of layers with cached weight
+    /// panels, resident panel bytes across layers).  The serving stack
+    /// surfaces this through `coordinator::metrics`.
+    pub fn packed_panel_stats(&self) -> (usize, usize) {
+        let count = self
+            .plans
+            .iter()
+            .filter(|p| p.packed_weights().is_some())
+            .count();
+        let bytes = self.plans.iter().map(|p| p.panel_bytes()).sum();
+        (count, bytes)
     }
 
     fn conv_block(&self, x: &Tensor, li: usize, hw: usize, cout: usize,
@@ -317,6 +337,16 @@ mod tests {
         }
         // conv1 pre-activations on positive inputs: max must be > 0
         assert!(r[0].a.1 > 0.0);
+    }
+
+    #[test]
+    fn prepare_caches_weight_panels() {
+        let cfg = NetConfig::parse("FI(6,8)|FI(6,8)|FL(4,9)|binxnor")
+            .unwrap();
+        let net = tiny_dcnn(13).prepare(cfg);
+        let (count, bytes) = net.packed_panel_stats();
+        assert_eq!(count, 4, "every layer's panels are cached");
+        assert!(bytes > 0);
     }
 
     #[test]

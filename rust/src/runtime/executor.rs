@@ -78,13 +78,30 @@ impl Variant {
 /// This is the kernel-selection seam between L2 and L3: the evaluator
 /// picks its backend through it, and serving/reporting code can name
 /// the exact kernels a config runs on without preparing a network.
+/// Both backends keep the constant weight side resident: PJRT uploads
+/// weight buffers once per config, the engine conditions each layer's
+/// weights into prepacked kernel panels once in `Dcnn::prepare`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecutionPlan {
     /// Runs on the PJRT fake-quant artifacts (when a runner exists).
     Pjrt(Variant),
     /// Runs on the engine; one packed-kernel name per layer (e.g.
-    /// `packed-drum`), matching `PreparedNet::kernel_names`.
+    /// `packed-drum`), matching `PreparedNet::kernel_names`.  Each
+    /// layer's plan carries its prepacked weight panels after
+    /// `Dcnn::prepare`.
     Engine([&'static str; 4]),
+}
+
+impl ExecutionPlan {
+    /// The per-layer engine kernel names, `None` for PJRT plans — for
+    /// serving/reporting code that wants to print what a config's
+    /// forwards will run on (e.g. `examples/serve_inference.rs`).
+    pub fn engine_kernels(&self) -> Option<&[&'static str; 4]> {
+        match self {
+            ExecutionPlan::Engine(names) => Some(names),
+            ExecutionPlan::Pjrt(_) => None,
+        }
+    }
 }
 
 /// Decide the execution plan for `cfg`.  Configs with an expressible
@@ -388,12 +405,18 @@ mod tests {
         ));
         assert_eq!(execution_plan(&fi),
                    ExecutionPlan::Pjrt(Variant::Fi));
+        assert_eq!(execution_plan(&fi).engine_kernels(), None);
         let mixed = NetConfig::parse("FI(6,8)|FI(6,8)|H(8,8,14)|I(5,10)")
             .unwrap();
         assert_eq!(
             execution_plan(&mixed),
             ExecutionPlan::Engine(["packed-fi", "packed-fi",
                                    "packed-drum", "packed-cfpu"])
+        );
+        assert_eq!(
+            execution_plan(&mixed).engine_kernels(),
+            Some(&["packed-fi", "packed-fi", "packed-drum",
+                   "packed-cfpu"])
         );
     }
 

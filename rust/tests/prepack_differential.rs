@@ -1,0 +1,320 @@
+//! Differential suite for the prepacked-weight path (§Perf iteration
+//! 7): for every `ArithKind` variant, `GemmPlan::run_prepacked` over
+//! cached panels must be *bit-identical* both to the per-call-packing
+//! `GemmPlan::run` and to the pre-tiling `reference` oracle, across
+//! randomized shapes (including m = 0, k = 0, n = 1 and
+//! non-tile-divisible sizes) and thread counts.  On top of the value
+//! contract it pins the two structural contracts of the refactor:
+//!
+//! * **prepack-once**: after `Dcnn::prepare`, `PreparedNet::forward`
+//!   performs zero weight-side packing work (observed through
+//!   `gemm::pack::weight_pack_count`, a thread-local counter);
+//! * **no panel sharing**: panels conditioned under one `ArithKind`
+//!   are refused — not silently consumed — by every other kernel or
+//!   parameterization.
+//!
+//! Scale the randomized sweeps with `LOP_PROP_CASES=N`; failures print
+//! a replay snippet (seed + case) via `util::prop`.
+
+use lop::approx::arith::ArithKind;
+use lop::nn::gemm::pack::weight_pack_count;
+use lop::nn::gemm::reference::gemm_reference;
+use lop::nn::gemm::{default_threads, select_kernel, GemmPlan};
+use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::tensor::Tensor;
+use lop::util::prng::Rng;
+use lop::util::prop;
+use std::collections::BTreeMap;
+
+/// One representative per `ArithKind` variant plus width variations
+/// (same coverage as tests/gemm_differential.rs).
+const KINDS: [&str; 11] = [
+    "float32",
+    "FI(6,8)",
+    "FI(3,4)",
+    "FI(8,11)",
+    "H(6,8,6)",
+    "H(8,8,14)",
+    "FL(4,9)",
+    "FL(5,10)",
+    "I(5,10)",
+    "I(4,9,2)",
+    "binxnor",
+];
+
+fn rand_operands(rng: &mut Rng, kind: &ArithKind, m: usize, k: usize,
+                 n: usize) -> (Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..m * k)
+        .map(|_| {
+            if rng.below(4) == 0 {
+                0.0
+            } else {
+                (rng.normal() * 2.0) as f32
+            }
+        })
+        .collect();
+    // weights pre-quantized, as the layer contract requires
+    let w: Vec<f32> = (0..k * n)
+        .map(|_| kind.quantize(rng.normal() as f32))
+        .collect();
+    (x, w)
+}
+
+/// Prepack `w` into a fresh plan and compare `run_prepacked` at each
+/// thread count against both `run` and the reference oracle, bitwise.
+/// The prepacked output of a *second* call over the same panels must
+/// also match the first (cached panels are not consumed or mutated).
+fn diff(kind: &ArithKind, x: &[f32], w: &[f32], m: usize, k: usize,
+        n: usize, thread_counts: &[usize]) -> Result<(), String> {
+    let mut oracle = vec![f32::NAN; m * n];
+    gemm_reference(kind, x, w, m, k, n, &mut oracle, 1);
+    let mut plan = GemmPlan::new(kind);
+    plan.prepack(w, k, n);
+    let mut percall = vec![f32::NAN; m * n];
+    plan.run(x, w, m, k, n, &mut percall, 1);
+    for &threads in thread_counts {
+        let mut got = vec![f32::NAN; m * n];
+        plan.run_prepacked(x, m, &mut got, threads);
+        let mut again = vec![f32::NAN; m * n];
+        plan.run_prepacked(x, m, &mut again, threads);
+        for (i, &g) in got.iter().enumerate() {
+            if g.to_bits() != oracle[i].to_bits() {
+                return Err(format!(
+                    "{} ({m}x{k}x{n}, threads={threads}): \
+                     prepacked[{i}] = {g} ({:#010x}), reference {} \
+                     ({:#010x})",
+                    kind.name(),
+                    g.to_bits(),
+                    oracle[i],
+                    oracle[i].to_bits()
+                ));
+            }
+            if g.to_bits() != percall[i].to_bits() {
+                return Err(format!(
+                    "{} ({m}x{k}x{n}, threads={threads}): \
+                     prepacked[{i}] = {g}, per-call run gave {}",
+                    kind.name(),
+                    percall[i]
+                ));
+            }
+            if g.to_bits() != again[i].to_bits() {
+                return Err(format!(
+                    "{} ({m}x{k}x{n}, threads={threads}): second \
+                     prepacked call diverged at [{i}]",
+                    kind.name()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Dimension generator biased toward tile/block boundaries.
+fn dim(rng: &mut Rng, max: u64, edges: &[usize]) -> usize {
+    if rng.below(3) == 0 {
+        edges[rng.below(edges.len() as u64) as usize]
+    } else {
+        rng.below(max + 1) as usize
+    }
+}
+
+#[test]
+fn randomized_shapes_bit_identical() {
+    for (ki, ks) in KINDS.iter().enumerate() {
+        let kind = ArithKind::parse(ks).unwrap();
+        prop::check_msg(
+            &format!("prepacked == run == reference ({ks})"),
+            0xBEEF + ki as u64,
+            24,
+            |rng| {
+                // m/n edges straddle the MR/NR tiles (4, 8), k edges
+                // straddle the 64-bit binary words; ~1 case in 5 is
+                // big enough (m*n >= 16384) that the default-threads
+                // leg genuinely spawns threads
+                let (m, n) = if rng.below(5) == 0 {
+                    (64 + rng.below(17) as usize,
+                     256 + rng.below(9) as usize)
+                } else {
+                    (dim(rng, 33, &[0, 1, 3, 4, 5, 8, 9, 16, 32]),
+                     dim(rng, 32, &[0, 1, 3, 4, 5, 8, 9, 31]))
+                };
+                let k = dim(rng, 96, &[0, 1, 2, 63, 64, 65]);
+                (m, k, n, rng.next_u64())
+            },
+            |&(m, k, n, seed)| {
+                let mut rng = Rng::new(seed);
+                let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
+                diff(&kind, &x, &w, m, k, n, &[1, default_threads()])
+            },
+        );
+    }
+}
+
+#[test]
+fn explicit_edge_shapes_bit_identical() {
+    // (m, k, n): empty output, empty reduction, single column, single
+    // cell, exact word boundary, word boundary + 1, and shapes that
+    // cross the KC = 256 depth blocking — each at >= 2 thread counts
+    let shapes = [
+        (0, 5, 3),
+        (3, 0, 4),
+        (5, 7, 1),
+        (1, 1, 1),
+        (4, 64, 4),
+        (8, 129, 9),
+        (13, 300, 11),
+        (33, 257, 18),
+    ];
+    let mut rng = Rng::new(17);
+    for ks in KINDS {
+        let kind = ArithKind::parse(ks).unwrap();
+        for &(m, k, n) in &shapes {
+            let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
+            diff(&kind, &x, &w, m, k, n, &[1, 2, default_threads()])
+                .unwrap();
+        }
+    }
+}
+
+#[test]
+fn threaded_blocks_bit_identical() {
+    // Large enough (m*n >= 16384) that the prepacked path really
+    // spawns threads and splits rows across MC blocks; m and n
+    // deliberately not divisible by MC/NC/MR/NR, k crosses KC.
+    let (m, k, n) = (65, 257, 258);
+    let mut rng = Rng::new(18);
+    for ks in KINDS {
+        let kind = ArithKind::parse(ks).unwrap();
+        let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
+        diff(&kind, &x, &w, m, k, n, &[1, 2, 3, default_threads()])
+            .unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// panel-identity contracts: panels never cross kernels or configurations
+// ---------------------------------------------------------------------------
+
+#[test]
+#[should_panic(expected = "packed by kernel")]
+fn panels_from_another_kind_are_refused() {
+    // FI and H share the i32 panel element type — without the identity
+    // check the FI kernel would happily (and wrongly) consume
+    // DRUM-conditioned panels.
+    let fi = select_kernel(&ArithKind::parse("FI(6,8)").unwrap());
+    let h = select_kernel(&ArithKind::parse("H(6,8,6)").unwrap());
+    let w = [0.5f32; 12];
+    let pw = h.prepack_weights(&w, 4, 3);
+    let mut out = [0.0f32; 3];
+    fi.run_prepacked(&[1.0; 4], &pw, 1, &mut out, 1);
+}
+
+#[test]
+#[should_panic(expected = "different `packed-fi` configuration")]
+fn panels_from_another_width_are_refused() {
+    // same kernel name, different representation widths
+    let wide = select_kernel(&ArithKind::parse("FI(6,8)").unwrap());
+    let narrow = select_kernel(&ArithKind::parse("FI(3,4)").unwrap());
+    let w = [0.5f32; 12];
+    let pw = narrow.prepack_weights(&w, 4, 3);
+    let mut out = [0.0f32; 3];
+    wide.run_prepacked(&[1.0; 4], &pw, 1, &mut out, 1);
+}
+
+#[test]
+fn two_prepares_with_different_kinds_never_share_panels() {
+    // Same weight matrix prepacked under FI(6, 8) and H(6, 8, 6) (same
+    // panel element type): each plan must reproduce ITS OWN reference
+    // semantics bit-for-bit — any panel sharing between the two
+    // `prepare`-style calls would leak one conditioning into the other.
+    let (m, k, n) = (9, 37, 11);
+    let fi = ArithKind::parse("FI(6,8)").unwrap();
+    let h = ArithKind::parse("H(6,8,6)").unwrap();
+    let mut rng = Rng::new(19);
+    // quantize under the shared FI(6, 8) lattice (H's rep is the same)
+    let (x, w) = rand_operands(&mut rng, &fi, m, k, n);
+    let mut plan_fi = GemmPlan::new(&fi);
+    let mut plan_h = GemmPlan::new(&h);
+    plan_fi.prepack(&w, k, n);
+    plan_h.prepack(&w, k, n);
+    for (kind, plan) in [(&fi, &plan_fi), (&h, &plan_h)] {
+        let mut got = vec![f32::NAN; m * n];
+        plan.run_prepacked(&x, m, &mut got, 1);
+        let mut want = vec![f32::NAN; m * n];
+        gemm_reference(kind, &x, &w, m, k, n, &mut want, 1);
+        for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), ww.to_bits(),
+                       "{}: out[{i}] = {g} vs reference {ww}",
+                       kind.name());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// network-level contract: prepare conditions weights exactly once
+// ---------------------------------------------------------------------------
+
+/// A randomly-initialized DCNN with the architecture `validate_dcnn`
+/// requires (the integration-test twin of `network::tests::tiny_dcnn`).
+fn tiny_dcnn(seed: u64) -> Dcnn {
+    let mut rng = Rng::new(seed);
+    let mut t = |shape: Vec<usize>, sigma: f64| {
+        let count: usize = shape.iter().product();
+        Tensor::new(shape,
+                    (0..count).map(|_| (rng.normal() * sigma) as f32)
+                        .collect())
+    };
+    let mut params = BTreeMap::new();
+    params.insert("conv1_w".into(), t(vec![5, 5, 1, 32], 0.2));
+    params.insert("conv1_b".into(), t(vec![32], 0.05));
+    params.insert("conv2_w".into(), t(vec![5, 5, 32, 64], 0.05));
+    params.insert("conv2_b".into(), t(vec![64], 0.05));
+    params.insert("fc1_w".into(), t(vec![3136, 1024], 0.02));
+    params.insert("fc1_b".into(), t(vec![1024], 0.02));
+    params.insert("fc2_w".into(), t(vec![1024, 10], 0.05));
+    params.insert("fc2_b".into(), t(vec![10], 0.02));
+    Dcnn::new(params).unwrap()
+}
+
+fn rand_input(b: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::new(vec![b, 28, 28, 1],
+                (0..b * 784).map(|_| rng.range_f32(0.0, 1.0)).collect())
+}
+
+#[test]
+fn forward_does_zero_weight_packing_after_prepare() {
+    let dcnn = tiny_dcnn(23);
+    // mixed config covering element panels AND the binary bitmap path
+    let cfg = NetConfig::parse("FI(6,8)|H(6,8,6)|FL(4,9)|binxnor")
+        .unwrap();
+    let x = rand_input(1, 24);
+
+    let before_prepare = weight_pack_count();
+    let net = dcnn.prepare(cfg);
+    assert_eq!(
+        weight_pack_count(),
+        before_prepare + 4,
+        "prepare conditions each of the 4 layers' weights exactly once"
+    );
+    let (count, bytes) = net.packed_panel_stats();
+    assert_eq!(count, 4);
+    assert!(bytes > 0);
+
+    // the acceptance criterion: forwards after prepare do ZERO
+    // weight-side pack_b_block / bitmap-encode work (the activation
+    // side still packs per call, which the counter ignores)
+    let before_forwards = weight_pack_count();
+    let a = net.forward(&x, 1);
+    let b = net.forward(&x, 1);
+    assert_eq!(
+        weight_pack_count(),
+        before_forwards,
+        "forward repacked weights after prepare"
+    );
+    assert_eq!(a.data, b.data, "forwards over cached panels diverged");
+
+    // and the cached-path output equals a freshly prepared net's
+    let c = dcnn.prepare(cfg).forward(&x, 1);
+    assert_eq!(a.data, c.data);
+}
