@@ -51,10 +51,13 @@ fn main() -> Result<()> {
     println!("pass-2 (recovery) : {}  acc {:.4}", res.chosen.name(),
              res.accuracy);
     println!("distinct configs evaluated: {}", res.evals);
+    let cache = ev.plan_cache().stats();
     println!("engine nets cached: {} ({:.2} MiB prepacked weight \
-              panels resident)",
+              panels resident; {} prepares / {} hits / {} evictions \
+              in the shared plan cache)",
              ev.prepared_nets(),
-             ev.panel_bytes() as f64 / (1024.0 * 1024.0));
+             ev.panel_bytes() as f64 / (1024.0 * 1024.0),
+             cache.prepares, cache.hits, cache.evictions);
 
     // hardware verdict on the chosen per-layer representations
     println!("\nhardware cost of the chosen per-layer domains:");

@@ -44,8 +44,10 @@ fn main() -> Result<()> {
         queue_capacity: 8_192,
         engine_workers: 3,
         engine_gemm_threads: 2,
+        plan_cache_bytes: 256 * 1024 * 1024,
         use_pjrt: true,
     };
+    let opts_workers = opts.engine_workers;
     let requests = std::env::args()
         .nth(1)
         .and_then(|a| a.parse().ok())
@@ -118,13 +120,19 @@ fn main() -> Result<()> {
     let depths = server.queue_depths();
     let panels = metrics.panels_cached.load(Ordering::Relaxed);
     let panel_bytes = metrics.panel_bytes.load(Ordering::Relaxed);
-    server.shutdown();
+    let cache = server.plan_cache.stats();
+    server.shutdown()?;
 
     println!("\n================ end-to-end results ================");
     println!("panel cache: {panels} weight panels resident, \
               {:.2} MiB (conditioned once at prepare; forwards do \
               zero weight-side packing)",
              panel_bytes as f64 / (1024.0 * 1024.0));
+    println!("plan cache : {} prepares across all {} engine workers \
+              ({} hits, {} waits coalesced in flight, {} evictions) — \
+              one shared Arc<PreparedNet> per config",
+             cache.prepares, opts_workers, cache.hits,
+             cache.inflight_waits, cache.evictions);
     println!("queue depths at drain: {depths:?}");
     println!("served     : {got} / {requests} (rejected {rejected})");
     println!("throughput : {:.1} req/s (offered {rate})",

@@ -18,7 +18,7 @@
 use lop::approx::arith::ArithKind;
 use lop::nn::gemm::reference::gemm_reference;
 use lop::nn::gemm::GemmPlan;
-use lop::util::bench::{bench, header};
+use lop::util::bench::{bench, header, write_bench_json};
 use lop::util::prng::Rng;
 
 struct Row {
@@ -109,38 +109,32 @@ fn run_shape(label: &str, m: usize, k: usize, n: usize, iters: usize,
 }
 
 fn write_json(rows: &[Row]) {
-    let path = std::env::var("LOP_BENCH_JSON")
-        .unwrap_or_else(|_| "BENCH_gemm_kernels.json".to_string());
-    let mut body = String::from(
-        "{\n  \"bench\": \"gemm_kernels\",\n  \"rows\": [\n",
-    );
-    for (i, r) in rows.iter().enumerate() {
-        body.push_str(&format!(
-            "    {{\"shape\": \"{}\", \"kind\": \"{}\", \"threads\": \
-             {}, \"packed_mean_ns\": {:.0}, \"prepacked_mean_ns\": \
-             {:.0}, \"reference_mean_ns\": {:.0}, \"packed_mmacs\": \
-             {:.1}, \"prepacked_mmacs\": {:.1}, \"reference_mmacs\": \
-             {:.1}, \"speedup\": {:.3}, \"prepack_speedup\": \
-             {:.3}}}{}\n",
-            r.shape,
-            r.kind,
-            r.threads,
-            r.packed_ns,
-            r.prepacked_ns,
-            r.reference_ns,
-            r.mmacs_packed,
-            r.mmacs_prepacked,
-            r.mmacs_reference,
-            r.reference_ns / r.packed_ns.max(1.0),
-            r.packed_ns / r.prepacked_ns.max(1.0),
-            if i + 1 == rows.len() { "" } else { "," }
-        ));
-    }
-    body.push_str("  ]\n}\n");
-    match std::fs::write(&path, body) {
-        Ok(()) => println!("\nwrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
+    let bodies: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "\"shape\": \"{}\", \"kind\": \"{}\", \"threads\": \
+                 {}, \"packed_mean_ns\": {:.0}, \"prepacked_mean_ns\": \
+                 {:.0}, \"reference_mean_ns\": {:.0}, \
+                 \"packed_mmacs\": {:.1}, \"prepacked_mmacs\": {:.1}, \
+                 \"reference_mmacs\": {:.1}, \"speedup\": {:.3}, \
+                 \"prepack_speedup\": {:.3}",
+                r.shape,
+                r.kind,
+                r.threads,
+                r.packed_ns,
+                r.prepacked_ns,
+                r.reference_ns,
+                r.mmacs_packed,
+                r.mmacs_prepacked,
+                r.mmacs_reference,
+                r.reference_ns / r.packed_ns.max(1.0),
+                r.packed_ns / r.prepacked_ns.max(1.0)
+            )
+        })
+        .collect();
+    write_bench_json("gemm_kernels", "LOP_BENCH_JSON",
+                     "BENCH_gemm_kernels.json", &bodies);
 }
 
 fn main() {

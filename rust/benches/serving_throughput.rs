@@ -1,14 +1,72 @@
 //! Serving throughput/latency bench: the router → dynamic batcher →
-//! worker stack under closed bursts at several batching policies.
-//! (The open-loop end-to-end run is `examples/serve_inference.rs`.)
+//! engine worker stack, **hermetic** (synthetic weights + synthetic
+//! digits — no `make artifacts`), so CI can run it and gate on it.
+//!
+//! Two series, both written to `BENCH_serving_throughput.json` (path
+//! override: `LOP_SERVING_BENCH_JSON`):
+//!
+//! * `workers` — the PR-4 headline: K engine-backed configs served at
+//!   1/2/4 workers over one shared `PlanCache`.  The bench *asserts*
+//!   (so a regression fails `cargo bench`, and with it CI) that the
+//!   prepare count and resident panel bytes are identical at every
+//!   worker count — residency scales with configs, not
+//!   `workers x configs`.
+//! * `policy` — the historical max-batch/max-wait ablation, kept on
+//!   the engine backend (the PJRT open-loop run lives in
+//!   `examples/serve_inference.rs`).
 
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::data::synth;
-use lop::nn::network::NetConfig;
+use lop::nn::network::{Dcnn, NetConfig};
+use lop::util::bench::write_bench_json;
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-fn burst(server: &Server, images: &[u8], n: usize)
+/// Engine-backed configuration mix: one per panel family (fixed
+/// element panels, DRUM-conditioned, float lattice, binary word
+/// panels).
+const CONFIGS: [&str; 4] = ["FI(6,8)", "H(6,8,12)", "FL(4,9)", "binxnor"];
+
+struct Row {
+    series: &'static str,
+    workers: usize,
+    configs: usize,
+    max_batch: usize,
+    max_wait_ms: f64,
+    served: usize,
+    req_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+    prepares: u64,
+    panel_bytes: usize,
+    hits: u64,
+    inflight_waits: u64,
+    evictions: u64,
+}
+
+fn opts(configs: Vec<NetConfig>, workers: usize, max_batch: usize,
+        max_wait: Duration) -> ServerOpts {
+    ServerOpts {
+        configs,
+        max_batch,
+        max_wait,
+        queue_capacity: 8_192,
+        engine_workers: workers,
+        engine_gemm_threads: 1,
+        plan_cache_bytes: 512 * 1024 * 1024, // no eviction in-series
+        use_pjrt: false, // hermetic: engine backend only
+    }
+}
+
+/// Closed burst of `n` requests spread round-robin over the server's
+/// configs; returns the served count, the burst wall time, and the
+/// (p50, p99) latency in ms **over this burst's responses only** —
+/// the server's cumulative histogram also holds the warm-up requests,
+/// whose latency includes the one-time `Dcnn::prepare` and would
+/// otherwise dominate p99 of a ~200-request series.
+fn burst(server: &Server, images: &[u8], n: usize, n_cfg: usize)
          -> (usize, Duration, f64, f64) {
     let (tx, rx) = channel();
     let t0 = Instant::now();
@@ -20,54 +78,172 @@ fn burst(server: &Server, images: &[u8], n: usize)
             .collect();
         server
             .router
-            .submit(0, img, tx.clone())
+            .submit(i % n_cfg, img, tx.clone())
             .expect("submit");
     }
     drop(tx);
-    let mut got = 0;
-    while got < n {
-        if rx.recv_timeout(Duration::from_secs(60)).is_err() {
-            break;
+    let mut lat_us: Vec<u64> = Vec::with_capacity(n);
+    while lat_us.len() < n {
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(resp) => lat_us.push(resp.latency.as_micros() as u64),
+            Err(_) => break,
         }
-        got += 1;
     }
     let wall = t0.elapsed();
-    let p50 = server.metrics.percentile_us(50.0) as f64 / 1e3;
-    let p99 = server.metrics.percentile_us(99.0) as f64 / 1e3;
-    (got, wall, p50, p99)
+    lat_us.sort_unstable();
+    let pct = |p: f64| -> f64 {
+        if lat_us.is_empty() {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * lat_us.len() as f64).ceil() as usize;
+        lat_us[rank.saturating_sub(1).min(lat_us.len() - 1)] as f64
+            / 1e3
+    };
+    (lat_us.len(), wall, pct(50.0), pct(99.0))
+}
+
+fn run_series(series: &'static str, dcnn: &Arc<Dcnn>,
+              configs: &[NetConfig], workers: usize, max_batch: usize,
+              max_wait: Duration, n: usize, images: &[u8],
+              rows: &mut Vec<Row>) {
+    let server = Server::start_with_dcnn(
+        opts(configs.to_vec(), workers, max_batch, max_wait),
+        dcnn.clone(),
+        None,
+    )
+    .expect("server");
+    // warm up: one request per config prepares it outside the timed
+    // burst (the cold path is what tests/plan_cache.rs pins)
+    let (wtx, wrx) = channel();
+    for ci in 0..configs.len() {
+        server.router.submit(ci, vec![0.0; 784], wtx.clone()).unwrap();
+    }
+    drop(wtx);
+    for _ in 0..configs.len() {
+        wrx.recv_timeout(Duration::from_secs(120)).expect("warmup");
+    }
+
+    let (got, wall, p50_ms, p99_ms) =
+        burst(&server, images, n, configs.len());
+    let cache = server.plan_cache.stats();
+    let snap_depth: usize = server.queue_depths().iter().sum();
+    let row = Row {
+        series,
+        workers,
+        configs: configs.len(),
+        max_batch,
+        max_wait_ms: max_wait.as_secs_f64() * 1e3,
+        served: got,
+        req_per_s: got as f64 / wall.as_secs_f64().max(1e-9),
+        p50_ms,
+        p99_ms,
+        mean_batch: server.metrics.mean_batch_size(),
+        prepares: cache.prepares,
+        panel_bytes: cache.resident_bytes,
+        hits: cache.hits,
+        inflight_waits: cache.inflight_waits,
+        evictions: cache.evictions,
+    };
+    server.shutdown().expect("worker panicked");
+    assert_eq!(snap_depth, 0, "queues not drained after closed burst");
+    assert_eq!(got, n, "request stream was not fully served");
+    println!("{:>7} {:>8} {:>8} {:>10} {:>10.1} {:>9.2} {:>9.2} \
+              {:>9} {:>11.2} {:>6} {:>6}",
+             row.workers, row.configs, row.max_batch, row.served,
+             row.req_per_s, row.p50_ms, row.p99_ms, row.prepares,
+             row.panel_bytes as f64 / (1024.0 * 1024.0), row.hits,
+             row.evictions);
+    rows.push(row);
+}
+
+fn write_json(rows: &[Row]) {
+    let bodies: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "\"series\": \"{}\", \"workers\": {}, \"configs\": \
+                 {}, \"max_batch\": {}, \"max_wait_ms\": {:.1}, \
+                 \"served\": {}, \"req_per_s\": {:.1}, \"p50_ms\": \
+                 {:.2}, \"p99_ms\": {:.2}, \"mean_batch\": {:.2}, \
+                 \"prepares\": {}, \"panel_bytes\": {}, \"hits\": {}, \
+                 \"inflight_waits\": {}, \"evictions\": {}",
+                r.series,
+                r.workers,
+                r.configs,
+                r.max_batch,
+                r.max_wait_ms,
+                r.served,
+                r.req_per_s,
+                r.p50_ms,
+                r.p99_ms,
+                r.mean_batch,
+                r.prepares,
+                r.panel_bytes,
+                r.hits,
+                r.inflight_waits,
+                r.evictions
+            )
+        })
+        .collect();
+    write_bench_json("serving_throughput", "LOP_SERVING_BENCH_JSON",
+                     "BENCH_serving_throughput.json", &bodies);
 }
 
 fn main() {
+    let dcnn = Arc::new(Dcnn::synthetic(7));
     let (images, _) = synth::generate(256, 31);
-    println!("=== serving throughput: closed 512-request bursts, \
-              float32 on PJRT ===\n");
-    println!("{:>10} {:>12} {:>12} {:>12} {:>12} {:>12}", "max_batch",
-             "max_wait", "served", "req/s", "p50 (ms)", "p99 (ms)");
-    for (max_batch, wait_ms) in
-        [(1usize, 0.5f64), (8, 2.0), (16, 2.0), (16, 8.0), (64, 4.0)]
-    {
-        let opts = ServerOpts {
-            configs: vec![NetConfig::parse("float32").unwrap()],
-            max_batch,
-            max_wait: Duration::from_micros((wait_ms * 1e3) as u64),
-            queue_capacity: 8_192,
-            engine_workers: 1,
-            engine_gemm_threads: 1,
-            use_pjrt: true,
-        };
-        let server = Server::start(opts).expect("server");
-        // warm up the executable cache outside the timed burst
-        let (wtx, wrx) = channel();
-        server.router.submit(0, vec![0.0; 784], wtx).unwrap();
-        let _ = wrx.recv_timeout(Duration::from_secs(120));
+    let configs: Vec<NetConfig> = CONFIGS
+        .iter()
+        .map(|s| NetConfig::parse(s).unwrap())
+        .collect();
+    let mut rows = Vec::new();
 
-        let n = 512;
-        let (got, wall, p50, p99) = burst(&server, &images, n);
-        println!("{:>10} {:>10.1}ms {:>12} {:>12.1} {:>12.2} {:>12.2}",
-                 max_batch, wait_ms, got,
-                 got as f64 / wall.as_secs_f64(), p50, p99);
-        server.shutdown();
+    println!("=== serving throughput: shared plan cache, closed \
+              bursts, engine backend (hermetic) ===\n");
+    println!("{:>7} {:>8} {:>8} {:>10} {:>10} {:>9} {:>9} {:>9} \
+              {:>11} {:>6} {:>6}",
+             "workers", "configs", "maxbatch", "served", "req/s",
+             "p50 (ms)", "p99 (ms)", "prepares", "panels(MiB)",
+             "hits", "evict");
+
+    // --- series 1: worker scaling over one shared PlanCache --------
+    for workers in [1usize, 2, 4] {
+        run_series("workers", &dcnn, &configs, workers, 16,
+                   Duration::from_millis(2), 192, &images, &mut rows);
     }
-    println!("\n(batching ablation: throughput should rise with \
-              max_batch until the PJRT artifact batch cap, trading p99)");
+    // The acceptance invariant: prepares and resident panel bytes are
+    // a function of the config set alone.  A violation aborts the
+    // bench (non-zero exit), which fails the CI bench-serving job.
+    let worker_rows: Vec<&Row> =
+        rows.iter().filter(|r| r.series == "workers").collect();
+    let (p0, b0) = (worker_rows[0].prepares, worker_rows[0].panel_bytes);
+    assert_eq!(p0, CONFIGS.len() as u64,
+               "each config must be prepared exactly once");
+    for r in &worker_rows {
+        assert_eq!(
+            (r.prepares, r.panel_bytes),
+            (p0, b0),
+            "prepare count / resident panel bytes changed with the \
+             worker count ({} workers)",
+            r.workers
+        );
+    }
+    println!("\nplan-cache invariance: {} prepares, {:.2} MiB resident \
+              at every worker count OK",
+             p0, b0 as f64 / (1024.0 * 1024.0));
+
+    // --- series 2: batching-policy ablation (single config) --------
+    println!();
+    let one = vec![configs[0]];
+    for (max_batch, wait_ms) in
+        [(1usize, 0.5f64), (8, 2.0), (16, 2.0), (64, 4.0)]
+    {
+        run_series("policy", &dcnn, &one, 2, max_batch,
+                   Duration::from_micros((wait_ms * 1e3) as u64), 256,
+                   &images, &mut rows);
+    }
+    println!("\n(policy ablation: throughput should rise with \
+              max_batch, trading p99)");
+
+    write_json(&rows);
 }

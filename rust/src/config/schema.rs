@@ -14,6 +14,9 @@ pub struct ServeFileConfig {
     pub max_wait: Duration,
     pub queue_capacity: usize,
     pub engine_workers: usize,
+    /// Byte cap (in MiB) on the server's shared plan cache — the
+    /// resident prepacked weight panels all engine workers share.
+    pub plan_cache_mb: usize,
     pub use_pjrt: bool,
 }
 
@@ -46,6 +49,9 @@ impl ServeFileConfig {
             engine_workers: doc
                 .get_int("serve", "engine_workers")
                 .unwrap_or(2) as usize,
+            plan_cache_mb: doc
+                .get_int("serve", "plan_cache_mb")
+                .unwrap_or(256) as usize,
             use_pjrt: doc.get_bool("serve", "use_pjrt").unwrap_or(true),
         })
     }
@@ -109,6 +115,7 @@ mod tests {
 configs = ["float32", "FI(6,8)", "H(6,8,12)"]
 max_batch = 32
 max_wait_ms = 1.5
+plan_cache_mb = 64
 use_pjrt = false
 "#,
         )
@@ -117,6 +124,7 @@ use_pjrt = false
         assert_eq!(c.configs.len(), 3);
         assert_eq!(c.max_batch, 32);
         assert_eq!(c.max_wait, Duration::from_micros(1_500));
+        assert_eq!(c.plan_cache_mb, 64);
         assert!(!c.use_pjrt);
     }
 
@@ -148,6 +156,7 @@ second_pass = false
         let doc = TomlDoc::parse("").unwrap();
         let c = ServeFileConfig::from_toml(&doc).unwrap();
         assert_eq!(c.max_batch, 16);
+        assert_eq!(c.plan_cache_mb, 256);
         assert!(c.use_pjrt);
         let e = ExploreFileConfig::from_toml(&doc).unwrap();
         assert_eq!(e.subset, 500);

@@ -34,6 +34,15 @@ struct Inner {
     closed: bool,
 }
 
+/// One-lock observability snapshot of a [`BatchQueue`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QueueSnapshot {
+    /// Pending requests per config queue (order = config order).
+    pub depths: Vec<usize>,
+    /// Whether the queue has been closed (drain in progress).
+    pub closed: bool,
+}
+
 pub struct BatchQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
@@ -81,8 +90,20 @@ impl BatchQueue {
     /// Depth of every queue in one lock acquisition (observability
     /// snapshot for the server/metrics reporting).
     pub fn depths(&self) -> Vec<usize> {
-        self.inner.lock().unwrap().queues.iter().map(|q| q.len())
-            .collect()
+        self.snapshot().depths
+    }
+
+    /// Consistent observability snapshot — per-queue depths and the
+    /// closed flag under one lock acquisition, so a reporter never
+    /// sees depths from before a `close` paired with a closed flag
+    /// from after it.  `Server::queue_depths` reads its depths through
+    /// this; the closed flag is for drain-state reporting.
+    pub fn snapshot(&self) -> QueueSnapshot {
+        let g = self.inner.lock().unwrap();
+        QueueSnapshot {
+            depths: g.queues.iter().map(|q| q.len()).collect(),
+            closed: g.closed,
+        }
     }
 
     /// Blocking: next batch from any queue accepted by `mask`.  Returns
@@ -200,6 +221,11 @@ mod tests {
         assert_eq!(ci, 1);
         assert_eq!(q.depth(0), 1);
         assert_eq!(q.depths(), vec![1, 0]);
+        let snap = q.snapshot();
+        assert_eq!(snap.depths, vec![1, 0]);
+        assert!(!snap.closed);
+        q.close();
+        assert!(q.snapshot().closed);
     }
 
     #[test]

@@ -4,16 +4,20 @@
 //! XLA-compiled); approximate-multiplier and mixed-family configs run on
 //! the bit-accurate Rust engine (the ground truth for approximate
 //! datapaths).  Results are memoized by configuration name — the §4.2
-//! explorer re-visits configurations constantly — and so are the
-//! engine's `PreparedNet`s: each holds its layers' prepacked weight
-//! panels, so re-scoring a config (full-test-set re-runs, frontier
-//! re-ranking) never re-quantizes or re-packs its weights.
+//! explorer re-visits configurations constantly — and prepared engine
+//! networks come from a shared [`PlanCache`] (one `Arc<PreparedNet>`
+//! per config, single-flight prepare, LRU eviction by panel bytes), so
+//! re-scoring a config never re-quantizes or re-packs its weights and
+//! an evaluator can share residency with a serving worker pool instead
+//! of duplicating it.
 
+use super::plan_cache::PlanCache;
 use crate::data::Dataset;
-use crate::nn::network::{Dcnn, NetConfig, PreparedNet};
-use crate::runtime::{execution_plan, ExecutionPlan, ModelRunner};
+use crate::nn::network::{Dcnn, NetConfig};
+use crate::runtime::{execution_plan, ModelRunner};
 use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -23,7 +27,9 @@ pub enum Backend {
 
 /// Evaluator over a fixed test subset.
 pub struct Evaluator {
-    dcnn: Dcnn,
+    /// shared prepared-net cache (replaces the pre-PR-4 private
+    /// capped-at-8 map; the LRU byte cap bounds residency instead)
+    plans: Arc<PlanCache>,
     runner: Option<ModelRunner>,
     ds: Dataset,
     /// evaluation subset indices (explorer uses a reduced subset; final
@@ -31,43 +37,47 @@ pub struct Evaluator {
     pub subset: Vec<usize>,
     pub threads: usize,
     cache: HashMap<String, f64>,
-    /// engine networks by config name, each holding its layers'
-    /// prepacked weight panels (conditioned once, on first use)
-    prepared: HashMap<String, PreparedNet>,
     pub eval_count: usize,
 }
 
-/// Prepared-net cache bound: a `PreparedNet` holds quantized weights +
-/// prepacked panels (~tens of MB for this DCNN), and the explorer
-/// visits ~100 distinct configs — but each *trial* config is scored
-/// once (the accuracy memo absorbs revisits), so only the handful of
-/// configs that get re-scored (baseline, frontier, full-test re-runs)
-/// profit from staying resident.  Cap the cache and evict arbitrarily
-/// beyond it: bounded memory, and the hot few stay cached in practice.
-const PREPARED_CAP: usize = 8;
-
 impl Evaluator {
+    /// Stand-alone evaluator: wraps `dcnn` in its own default-capacity
+    /// [`PlanCache`].
     pub fn new(dcnn: Dcnn, runner: Option<ModelRunner>, ds: Dataset,
                subset_n: usize, threads: usize) -> Evaluator {
+        Evaluator::with_plan_cache(
+            Arc::new(PlanCache::new(Arc::new(dcnn))),
+            runner,
+            ds,
+            subset_n,
+            threads,
+        )
+    }
+
+    /// Evaluator over an existing shared cache — score configs against
+    /// the same resident `PreparedNet`s a serving pool (or a second
+    /// evaluator) is using, instead of preparing private copies.
+    pub fn with_plan_cache(plans: Arc<PlanCache>,
+                           runner: Option<ModelRunner>, ds: Dataset,
+                           subset_n: usize, threads: usize)
+                           -> Evaluator {
         let n = subset_n.min(ds.test.len());
         Evaluator {
-            dcnn,
+            plans,
             runner,
             ds,
             subset: (0..n).collect(),
             threads,
             cache: HashMap::new(),
-            prepared: HashMap::new(),
             eval_count: 0,
         }
     }
 
     pub fn backend_for(&self, cfg: &NetConfig) -> Backend {
-        match execution_plan(cfg) {
-            ExecutionPlan::Pjrt(_) if self.runner.is_some() => {
-                Backend::Pjrt
-            }
-            _ => Backend::Engine,
+        if execution_plan(cfg).is_pjrt() && self.runner.is_some() {
+            Backend::Pjrt
+        } else {
+            Backend::Engine
         }
     }
 
@@ -95,21 +105,10 @@ impl Evaluator {
                 runner.forward(cfg, &x)?.argmax_rows()
             }
             Backend::Engine => {
-                // prepare once per config: quantization + panel
-                // prepacking are hoisted out of every later re-score
-                let key = cfg.name();
-                if !self.prepared.contains_key(&key) {
-                    if self.prepared.len() >= PREPARED_CAP {
-                        if let Some(evict) =
-                            self.prepared.keys().next().cloned()
-                        {
-                            self.prepared.remove(&evict);
-                        }
-                    }
-                    let net = self.dcnn.prepare(*cfg);
-                    self.prepared.insert(key.clone(), net);
-                }
-                let net = &self.prepared[&key];
+                // the shared cache prepares once per config
+                // (quantization + panel prepacking hoisted out of every
+                // later re-score, even across evaluators/workers)
+                let net = self.plans.get(cfg);
                 // chunk to bound memory (im2col of large batches is big)
                 let mut preds = Vec::with_capacity(idx.len());
                 for chunk in idx.chunks(64) {
@@ -134,18 +133,21 @@ impl Evaluator {
         self.cache.len()
     }
 
-    /// Engine networks resident in the prepare cache.
+    /// The shared prepared-net cache (hit/miss/eviction stats live on
+    /// it).
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plans
+    }
+
+    /// Engine networks resident in the shared plan cache.
     pub fn prepared_nets(&self) -> usize {
-        self.prepared.len()
+        self.plans.stats().resident_configs
     }
 
     /// Prepacked weight-panel bytes resident across cached engine
     /// networks (the explorer reports this next to eval counts).
     pub fn panel_bytes(&self) -> usize {
-        self.prepared
-            .values()
-            .map(|n| n.packed_panel_stats().1)
-            .sum()
+        self.plans.stats().resident_bytes
     }
 
     pub fn dataset(&self) -> &Dataset {
@@ -153,6 +155,6 @@ impl Evaluator {
     }
 
     pub fn dcnn(&self) -> &Dcnn {
-        &self.dcnn
+        self.plans.dcnn()
     }
 }

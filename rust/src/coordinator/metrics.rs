@@ -13,11 +13,22 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
-    /// Weight panels cached by engine workers (layers x prepared
-    /// configs), cumulative across the worker pool.
+    /// Weight panels resident in the shared plan cache (layers x
+    /// resident configs) — a *gauge*, synced from
+    /// `plan_cache::PlanCacheStats` by the engine workers; since PR 4
+    /// the pool shares one cache, so this no longer accumulates per
+    /// worker.
     pub panels_cached: AtomicU64,
-    /// Bytes resident in those prepacked weight panels.
+    /// Bytes resident in those prepacked weight panels (gauge).
     pub panel_bytes: AtomicU64,
+    /// Plan-cache gets served from a resident prepared net (gauge,
+    /// mirrored from the cache's own counters).
+    pub plan_hits: AtomicU64,
+    /// Plan-cache gets that prepared a network (== `Dcnn::prepare`
+    /// runs across the whole worker pool; gauge).
+    pub plan_misses: AtomicU64,
+    /// Prepared nets dropped by the plan cache's byte cap (gauge).
+    pub plan_evictions: AtomicU64,
     buckets: [AtomicU64; BUCKETS],
     sum_us: AtomicU64,
 }
@@ -37,16 +48,31 @@ impl Metrics {
             batched_items: AtomicU64::new(0),
             panels_cached: AtomicU64::new(0),
             panel_bytes: AtomicU64::new(0),
+            plan_hits: AtomicU64::new(0),
+            plan_misses: AtomicU64::new(0),
+            plan_evictions: AtomicU64::new(0),
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             sum_us: AtomicU64::new(0),
         }
     }
 
-    /// Account for `count` newly cached weight panels totalling
-    /// `bytes` (an engine worker just prepared a config).
-    pub fn record_panels(&self, count: u64, bytes: u64) {
-        self.panels_cached.fetch_add(count, Ordering::Relaxed);
-        self.panel_bytes.fetch_add(bytes, Ordering::Relaxed);
+    /// Publish the plan cache's current residency (`count` panel
+    /// layers totalling `bytes`).  Store semantics — every engine
+    /// worker syncs the same shared-cache snapshot, so the gauges are
+    /// idempotent across the pool (worker-count invariant), unlike the
+    /// pre-PR-4 per-worker accumulation.
+    pub fn set_panels(&self, count: u64, bytes: u64) {
+        self.panels_cached.store(count, Ordering::Relaxed);
+        self.panel_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    /// Publish the plan cache's hit/miss/eviction counters (same
+    /// store-a-snapshot discipline as [`Metrics::set_panels`]).
+    pub fn set_plan_cache(&self, hits: u64, misses: u64,
+                          evictions: u64) {
+        self.plan_hits.store(hits, Ordering::Relaxed);
+        self.plan_misses.store(misses, Ordering::Relaxed);
+        self.plan_evictions.store(evictions, Ordering::Relaxed);
     }
 
     pub fn record_latency(&self, d: Duration) {
@@ -101,7 +127,8 @@ impl Metrics {
             "completed {} reqs in {:.2}s  ({:.1} req/s)\n\
              latency: mean {:.2} ms  p50 <= {:.2} ms  p99 <= {:.2} ms\n\
              batching: {} batches, mean size {:.1}\n\
-             panel cache: {} weight panels, {:.2} MiB resident",
+             panel cache: {} weight panels, {:.2} MiB resident \
+             (shared; {} hits / {} prepares / {} evictions)",
             n,
             wall.as_secs_f64(),
             n as f64 / wall.as_secs_f64().max(1e-9),
@@ -112,7 +139,10 @@ impl Metrics {
             self.mean_batch_size(),
             self.panels_cached.load(Ordering::Relaxed),
             self.panel_bytes.load(Ordering::Relaxed) as f64
-                / (1024.0 * 1024.0)
+                / (1024.0 * 1024.0),
+            self.plan_hits.load(Ordering::Relaxed),
+            self.plan_misses.load(Ordering::Relaxed),
+            self.plan_evictions.load(Ordering::Relaxed)
         )
     }
 }
@@ -152,13 +182,21 @@ mod tests {
     }
 
     #[test]
-    fn panel_accounting_accumulates() {
+    fn panel_gauges_take_the_latest_snapshot() {
         let m = Metrics::new();
-        m.record_panels(4, 13_000_000);
-        m.record_panels(4, 1_000_000);
+        // two workers syncing the same shared cache: gauges converge
+        // to the snapshot, they do not double-count the pool
+        m.set_panels(8, 14_000_000);
+        m.set_panels(8, 14_000_000);
         assert_eq!(m.panels_cached.load(Ordering::Relaxed), 8);
         assert_eq!(m.panel_bytes.load(Ordering::Relaxed), 14_000_000);
+        m.set_plan_cache(10, 2, 1);
+        m.set_plan_cache(11, 2, 1);
+        assert_eq!(m.plan_hits.load(Ordering::Relaxed), 11);
+        assert_eq!(m.plan_misses.load(Ordering::Relaxed), 2);
+        assert_eq!(m.plan_evictions.load(Ordering::Relaxed), 1);
         let s = m.summary(Duration::from_secs(1));
         assert!(s.contains("8 weight panels"), "{s}");
+        assert!(s.contains("11 hits / 2 prepares / 1 evictions"), "{s}");
     }
 }

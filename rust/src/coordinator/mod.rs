@@ -6,12 +6,16 @@
 //! * `batcher`/`server`/`router` — the inference serving runtime: request
 //!   routing, per-config dynamic batching, worker pools, metrics (the
 //!   vLLM-router-shaped part of the stack)
+//! * `plan_cache` — one shared `Arc<PreparedNet>` per configuration
+//!   (single-flight prepare, LRU-by-bytes eviction) serving every
+//!   engine worker and the evaluator
 //! * `metrics`  — latency/throughput accounting
 
 pub mod batcher;
 pub mod eval;
 pub mod explorer;
 pub mod metrics;
+pub mod plan_cache;
 pub mod ranges;
 pub mod router;
 pub mod server;

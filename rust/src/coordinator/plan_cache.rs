@@ -1,0 +1,428 @@
+//! Shared prepared-network cache: **one `Arc<PreparedNet>` per
+//! configuration across the whole serving/eval stack**.
+//!
+//! After PR 3 every engine worker and every eval slot conditioned and
+//! prepacked its *own* `PreparedNet`, so panel memory and prepare time
+//! scaled with `workers x configs`.  `PlanCache` collapses that to
+//! `configs`:
+//!
+//! * **Single-flight preparation** — the first requester of a config
+//!   quantizes + prepacks it (`Dcnn::prepare`); concurrent requesters
+//!   for the *same* config block on that in-flight entry instead of
+//!   duplicating the work, then share the finished `Arc`.
+//! * **LRU eviction by panel bytes** — residency is bounded by the
+//!   total `packed_panel_stats` bytes of cached networks, not an entry
+//!   count; the least-recently-used config is dropped first.  The most
+//!   recently prepared config is never evicted by its own insertion,
+//!   so the bound is soft by at most one network.  Eviction drops the
+//!   cache's `Arc` only — workers mid-batch keep theirs until the
+//!   batch finishes.
+//! * **Observability** — hit / miss / eviction / in-flight-wait
+//!   counters plus resident panel stats, surfaced through
+//!   [`PlanCache::stats`] and mirrored into `coordinator::metrics`
+//!   gauges by the engine workers.
+//!
+//! Sharing is sound because `PreparedNet` is immutable after
+//! `Dcnn::prepare` (`Send + Sync`, pinned in `nn::network` tests) and
+//! the `PackedWeights` identity guards from PR 3 make cross-kind panel
+//! confusion a panic, not a wrong answer.  The cache key is the
+//! canonical configuration name (`NetConfig::name`), which is an
+//! injective fingerprint: it spells out every layer's provider and
+//! width parameters.
+//!
+//! `rust/tests/plan_cache.rs` pins single-flight under contention (one
+//! `weight_pack_count_global` increment per layer), the byte cap, the
+//! bit-identity of evicted-then-refetched configs, and the
+//! worker-count invariance of the prepare count.
+
+use crate::nn::network::{Dcnn, NetConfig, PreparedNet};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Default residency bound: comfortably holds the explorer's
+/// re-scored frontier (a prepared DCNN's panels are ~13–26 MiB
+/// depending on the provider's element width) without letting a wide
+/// DSE sweep pin hundreds of networks.
+pub const DEFAULT_CAPACITY_BYTES: usize = 256 * 1024 * 1024;
+
+/// One cached network plus its accounting.
+struct Resident {
+    net: Arc<PreparedNet>,
+    /// panel layers / panel bytes, from `packed_panel_stats` at insert
+    panels: usize,
+    bytes: usize,
+    /// logical clock of the last `get` that returned this entry
+    last_used: u64,
+}
+
+enum Slot {
+    /// A thread is inside `Dcnn::prepare` for this config; waiters
+    /// block on the condvar until the slot becomes `Ready` (or is
+    /// cleared because the preparer panicked, in which case one waiter
+    /// takes over).
+    InFlight,
+    Ready(Resident),
+}
+
+struct Inner {
+    slots: HashMap<String, Slot>,
+    /// sum of `Resident::bytes` over `Ready` slots
+    resident_bytes: usize,
+    /// sum of `Resident::panels` over `Ready` slots
+    resident_panels: usize,
+    /// logical LRU clock (bumped per `get`)
+    tick: u64,
+}
+
+/// Counter snapshot from [`PlanCache::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// `get` calls served from a resident entry (including after a
+    /// wait on an in-flight preparation).
+    pub hits: u64,
+    /// `get` calls that had to prepare the network themselves.
+    pub misses: u64,
+    /// Networks dropped to respect the byte capacity.
+    pub evictions: u64,
+    /// `get` calls that blocked at least once on another thread's
+    /// in-flight preparation (each counted once).
+    pub inflight_waits: u64,
+    /// Total `Dcnn::prepare` runs — equals `misses`; kept separate so
+    /// the acceptance invariant ("prepare count is independent of
+    /// worker count") reads off one field.
+    pub prepares: u64,
+    /// Configurations currently resident.
+    pub resident_configs: usize,
+    /// Layers with cached weight panels across resident configs.
+    pub resident_panels: usize,
+    /// Prepacked panel bytes across resident configs.
+    pub resident_bytes: usize,
+}
+
+/// Concurrent, capacity-bounded map from configuration fingerprint to
+/// `Arc<PreparedNet>`.  See the module docs for the full contract.
+pub struct PlanCache {
+    dcnn: Arc<Dcnn>,
+    capacity_bytes: usize,
+    inner: Mutex<Inner>,
+    ready: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    inflight_waits: AtomicU64,
+    /// Lock-free mirrors of `Inner::{resident_panels, resident_bytes}`
+    /// — written only while the map lock is held (one store after each
+    /// insert-and-evict in `prepare_slot`), read without it, so the
+    /// engine workers can refresh metric gauges on every batch.
+    resident_panels_gauge: AtomicU64,
+    resident_bytes_gauge: AtomicU64,
+}
+
+/// Clears the in-flight marker if `Dcnn::prepare` panics, so waiters
+/// retry (one of them becomes the new preparer) instead of blocking
+/// forever.  Disarmed on the success path.
+struct ClearOnPanic<'a> {
+    cache: &'a PlanCache,
+    key: &'a str,
+    armed: bool,
+}
+
+impl Drop for ClearOnPanic<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        // Tolerate a poisoned mutex during unwind: a double panic
+        // would abort the process and hide the original failure.
+        let mut g = match self.cache.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        g.slots.remove(self.key);
+        drop(g);
+        self.cache.ready.notify_all();
+    }
+}
+
+impl PlanCache {
+    /// Cache over `dcnn` with the default byte capacity.
+    pub fn new(dcnn: Arc<Dcnn>) -> PlanCache {
+        PlanCache::with_capacity(dcnn, DEFAULT_CAPACITY_BYTES)
+    }
+
+    /// Cache over `dcnn` bounded to `capacity_bytes` of resident
+    /// prepacked panels (soft by at most the most recent network).
+    pub fn with_capacity(dcnn: Arc<Dcnn>, capacity_bytes: usize)
+                         -> PlanCache {
+        PlanCache {
+            dcnn,
+            capacity_bytes,
+            inner: Mutex::new(Inner {
+                slots: HashMap::new(),
+                resident_bytes: 0,
+                resident_panels: 0,
+                tick: 0,
+            }),
+            ready: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            inflight_waits: AtomicU64::new(0),
+            resident_panels_gauge: AtomicU64::new(0),
+            resident_bytes_gauge: AtomicU64::new(0),
+        }
+    }
+
+    /// The prepared network for `cfg` — cached, or prepared exactly
+    /// once no matter how many workers ask concurrently.
+    pub fn get(&self, cfg: &NetConfig) -> Arc<PreparedNet> {
+        self.get_noting_miss(cfg).0
+    }
+
+    /// [`PlanCache::get`], additionally reporting whether *this call*
+    /// ran the preparation (a miss).  Residency only changes inside a
+    /// miss (the insert plus any evictions it triggers), so hot
+    /// callers — the engine worker batch loop — can skip re-locking
+    /// the cache for a metrics snapshot on pure hits.
+    pub fn get_noting_miss(&self, cfg: &NetConfig)
+                           -> (Arc<PreparedNet>, bool) {
+        let key = cfg.name();
+        let mut waited = false;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            g.tick += 1;
+            let now = g.tick;
+            match g.slots.get_mut(&key) {
+                Some(Slot::Ready(r)) => {
+                    r.last_used = now;
+                    let net = r.net.clone();
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return (net, false);
+                }
+                Some(Slot::InFlight) => {
+                    if !waited {
+                        waited = true;
+                        self.inflight_waits
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                    g = self.ready.wait(g).unwrap();
+                    // re-inspect: the slot is now Ready, or gone (the
+                    // preparer panicked — loop makes us the preparer)
+                }
+                None => {
+                    g.slots.insert(key.clone(), Slot::InFlight);
+                    drop(g);
+                    return (self.prepare_slot(&key, cfg), true);
+                }
+            }
+        }
+    }
+
+    /// Prepare `cfg` outside the lock, publish it, evict LRU entries
+    /// beyond the byte capacity, wake waiters.
+    fn prepare_slot(&self, key: &str, cfg: &NetConfig)
+                    -> Arc<PreparedNet> {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = ClearOnPanic { cache: self, key, armed: true };
+        let net = Arc::new(self.dcnn.prepare(*cfg));
+        guard.armed = false;
+        let (panels, bytes) = net.packed_panel_stats();
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let now = g.tick;
+        g.resident_bytes += bytes;
+        g.resident_panels += panels;
+        g.slots.insert(
+            key.to_string(),
+            Slot::Ready(Resident {
+                net: net.clone(),
+                panels,
+                bytes,
+                last_used: now,
+            }),
+        );
+        self.evict_beyond_cap(&mut g, key);
+        // refresh the lock-free residency mirrors while still holding
+        // the lock, so they always reflect a consistent post-insert,
+        // post-eviction state (readers may briefly see the previous
+        // consistent state, never a torn one)
+        self.resident_panels_gauge
+            .store(g.resident_panels as u64, Ordering::Relaxed);
+        self.resident_bytes_gauge
+            .store(g.resident_bytes as u64, Ordering::Relaxed);
+        drop(g);
+        self.ready.notify_all();
+        net
+    }
+
+    /// Drop least-recently-used `Ready` entries (never `keep`, never
+    /// in-flight slots) until resident bytes fit the capacity.
+    fn evict_beyond_cap(&self, g: &mut MutexGuard<'_, Inner>,
+                        keep: &str) {
+        while g.resident_bytes > self.capacity_bytes {
+            let victim = g
+                .slots
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready(r) if k != keep => {
+                        Some((k.clone(), r.last_used))
+                    }
+                    _ => None,
+                })
+                .min_by_key(|&(_, used)| used)
+                .map(|(k, _)| k);
+            let Some(k) = victim else {
+                return; // only `keep` / in-flight entries remain
+            };
+            if let Some(Slot::Ready(r)) = g.slots.remove(&k) {
+                g.resident_bytes -= r.bytes;
+                g.resident_panels -= r.panels;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                // the cache's Arc drops here; workers mid-batch keep
+                // the network alive through their own Arc
+            }
+        }
+    }
+
+    /// Counter + residency snapshot (counters are `Relaxed`; the
+    /// residency fields are mutually consistent — read under the map
+    /// lock).
+    pub fn stats(&self) -> PlanCacheStats {
+        let g = self.inner.lock().unwrap();
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            inflight_waits: self.inflight_waits.load(Ordering::Relaxed),
+            prepares: self.misses.load(Ordering::Relaxed),
+            resident_configs: g
+                .slots
+                .values()
+                .filter(|s| matches!(s, Slot::Ready(_)))
+                .count(),
+            resident_panels: g.resident_panels,
+            resident_bytes: g.resident_bytes,
+        }
+    }
+
+    /// `(prepare count, resident panel bytes)` — the cache-level
+    /// mirror of `PreparedNet::packed_panel_stats`, and the pair the
+    /// acceptance invariant compares across engine worker counts.
+    pub fn packed_panel_stats(&self) -> (u64, usize) {
+        let s = self.stats();
+        (s.prepares, s.resident_bytes)
+    }
+
+    /// Lock-free `(hits, misses, evictions)` snapshot — unlike
+    /// [`PlanCache::stats`] this never takes the map mutex, so the
+    /// engine workers can mirror live counters into
+    /// `coordinator::metrics` on every batch without contending with
+    /// concurrent `get`s.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.evictions.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Lock-free `(resident panel layers, resident panel bytes)` —
+    /// mirrors maintained under the map lock at every residency
+    /// change, read here without it.  Lets the engine workers keep the
+    /// metric gauges fresh on every batch, so a stale store from a
+    /// racing cold-start cannot stick (it is overwritten by the next
+    /// batch's read).
+    pub fn resident_gauges(&self) -> (u64, u64) {
+        (
+            self.resident_panels_gauge.load(Ordering::Relaxed),
+            self.resident_bytes_gauge.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Whether `cfg` is resident right now (does not touch LRU order).
+    pub fn contains(&self, cfg: &NetConfig) -> bool {
+        matches!(
+            self.inner.lock().unwrap().slots.get(&cfg.name()),
+            Some(Slot::Ready(_))
+        )
+    }
+
+    /// The trained network this cache prepares from.
+    pub fn dcnn(&self) -> &Dcnn {
+        &self.dcnn
+    }
+
+    /// The configured residency bound in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(s: &str) -> NetConfig {
+        NetConfig::parse(s).unwrap()
+    }
+
+    #[test]
+    fn hit_after_miss_shares_one_arc() {
+        let cache = PlanCache::new(Arc::new(Dcnn::synthetic(1)));
+        let c = cfg("FI(6,8)");
+        let (a, missed) = cache.get_noting_miss(&c);
+        assert!(missed, "first get prepares");
+        let (b, missed2) = cache.get_noting_miss(&c);
+        assert!(!missed2, "second get rides the cache");
+        assert!(Arc::ptr_eq(&a, &b), "second get must share the Arc");
+        let s = cache.stats();
+        assert_eq!((s.misses, s.hits, s.prepares), (1, 1, 1));
+        assert_eq!(s.resident_configs, 1);
+        assert_eq!(s.resident_panels, 4);
+        assert!(s.resident_bytes > 0);
+        assert!(cache.contains(&c));
+    }
+
+    #[test]
+    fn distinct_configs_prepare_separately() {
+        let cache = PlanCache::new(Arc::new(Dcnn::synthetic(2)));
+        let a = cache.get(&cfg("FI(6,8)"));
+        let b = cache.get(&cfg("FI(5,8)"));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(a.cfg, cfg("FI(6,8)"));
+        assert_eq!(b.cfg, cfg("FI(5,8)"));
+        assert_eq!(cache.stats().prepares, 2);
+    }
+
+    #[test]
+    fn zero_capacity_keeps_only_the_latest() {
+        // cap 0: every insertion evicts everything else, but the
+        // just-prepared network itself always stays (soft bound).
+        let cache = PlanCache::with_capacity(Arc::new(Dcnn::synthetic(3)), 0);
+        cache.get(&cfg("FI(6,8)"));
+        assert_eq!(cache.stats().resident_configs, 1);
+        cache.get(&cfg("FI(5,8)"));
+        let s = cache.stats();
+        assert_eq!(s.resident_configs, 1);
+        assert_eq!(s.evictions, 1);
+        assert!(cache.contains(&cfg("FI(5,8)")));
+        assert!(!cache.contains(&cfg("FI(6,8)")));
+        // panel accounting drained along with the eviction
+        let one = cache.get(&cfg("FI(5,8)")).packed_panel_stats();
+        assert_eq!(cache.stats().resident_bytes, one.1);
+        assert_eq!(cache.stats().resident_panels, one.0);
+    }
+
+    #[test]
+    fn refetch_after_eviction_reprepares() {
+        let cache = PlanCache::with_capacity(Arc::new(Dcnn::synthetic(4)), 0);
+        let a = cache.get(&cfg("FI(6,8)"));
+        cache.get(&cfg("binxnor")); // evicts FI(6,8)
+        let b = cache.get(&cfg("FI(6,8)")); // must re-prepare
+        assert!(!Arc::ptr_eq(&a, &b), "evicted entry cannot be reused");
+        assert_eq!(cache.stats().prepares, 3);
+        // deterministic prepare: the re-prepared net is equivalent
+        assert_eq!(a.packed_panel_stats(), b.packed_panel_stats());
+    }
+}

@@ -6,15 +6,22 @@
 //!  * N engine workers running the bit-accurate Rust engine, serving the
 //!    approximate-multiplier configurations (and acting as overflow for
 //!    everything when PJRT is unavailable).
+//!
+//! Engine workers do **not** own prepared networks: they all serve from
+//! one shared [`PlanCache`], so each configuration is conditioned and
+//! prepacked exactly once per server no matter how many workers run —
+//! panel residency and prepare time scale with configs, not
+//! `workers x configs` (`rust/tests/plan_cache.rs` pins the
+//! invariance, `benches/serving_throughput.rs` measures it).
 
 use super::batcher::{BatchQueue, Request, Response};
 use super::metrics::Metrics;
+use super::plan_cache::PlanCache;
 use super::router::Router;
 use crate::nn::network::{Dcnn, NetConfig};
 use crate::nn::tensor::Tensor;
-use crate::runtime::{ArtifactDir, ModelRunner, Variant};
-use anyhow::{Context, Result};
-use std::collections::HashMap;
+use crate::runtime::{execution_plan, ArtifactDir, ModelRunner};
+use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -28,6 +35,8 @@ pub struct ServerOpts {
     pub engine_workers: usize,
     /// threads each engine worker hands to its GEMM calls
     pub engine_gemm_threads: usize,
+    /// byte cap on the shared plan cache's resident prepacked panels
+    pub plan_cache_bytes: usize,
     pub use_pjrt: bool,
 }
 
@@ -42,6 +51,8 @@ impl Default for ServerOpts {
             queue_capacity: 4_096,
             engine_workers: 2,
             engine_gemm_threads: 1,
+            plan_cache_bytes:
+                super::plan_cache::DEFAULT_CAPACITY_BYTES,
             use_pjrt: true,
         }
     }
@@ -50,16 +61,30 @@ impl Default for ServerOpts {
 pub struct Server {
     pub router: Arc<Router>,
     pub metrics: Arc<Metrics>,
+    /// The shared prepared-net cache every engine worker serves from
+    /// (public so tests/benches can read its stats).
+    pub plan_cache: Arc<PlanCache>,
     queue: Arc<BatchQueue>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Server {
+    /// Start over the artifact directory's trained weights (the
+    /// production entry point; needs `make artifacts`).
     pub fn start(opts: ServerOpts) -> Result<Server> {
         let art = ArtifactDir::discover()?;
         let dcnn = Arc::new(
             Dcnn::load(&art.weights_path()).context("loading weights")?,
         );
+        Server::start_with_dcnn(opts, dcnn, Some(art))
+    }
+
+    /// Start over an in-memory network — the hermetic entry point for
+    /// benches and tests that have no artifact directory.  With
+    /// `art: None` the PJRT worker cannot start (it reads AOT
+    /// artifacts), so every configuration routes to the engine pool.
+    pub fn start_with_dcnn(opts: ServerOpts, dcnn: Arc<Dcnn>,
+                           art: Option<ArtifactDir>) -> Result<Server> {
         let metrics = Arc::new(Metrics::new());
         let queue = Arc::new(BatchQueue::new(
             opts.configs.len(),
@@ -72,15 +97,21 @@ impl Server {
             queue.clone(),
             metrics.clone(),
         ));
+        let plan_cache = Arc::new(PlanCache::with_capacity(
+            dcnn,
+            opts.plan_cache_bytes,
+        ));
 
-        // Without the `pjrt` feature the ModelRunner stub can never
-        // start, so route everything to the engine workers instead of
-        // assigning configs to a worker that dies at startup.
-        let pjrt_available = cfg!(feature = "pjrt") && opts.use_pjrt;
+        // Without the `pjrt` feature (or without artifacts) the
+        // ModelRunner can never start, so route everything to the
+        // engine workers instead of assigning configs to a worker that
+        // dies at startup.
+        let pjrt_available =
+            cfg!(feature = "pjrt") && opts.use_pjrt && art.is_some();
         let pjrt_mask: Vec<bool> = opts
             .configs
             .iter()
-            .map(|c| pjrt_available && Variant::for_config(c).is_some())
+            .map(|c| pjrt_available && execution_plan(c).is_pjrt())
             .collect();
         // engine workers cover what PJRT does not
         let engine_mask: Vec<bool> =
@@ -88,43 +119,64 @@ impl Server {
 
         let mut workers = Vec::new();
         if pjrt_mask.iter().any(|&b| b) {
+            let art = art.expect("pjrt mask implies artifacts");
             let q = queue.clone();
             let m = metrics.clone();
             let cfgs = opts.configs.clone();
-            let art2 = art.clone();
-            let d = dcnn.clone();
+            let cache = plan_cache.clone();
             let threads = opts.engine_gemm_threads;
             workers.push(std::thread::spawn(move || {
-                pjrt_worker(art2, d, cfgs, q, m, pjrt_mask, threads);
+                pjrt_worker(art, cache, cfgs, q, m, pjrt_mask, threads);
             }));
         }
         if engine_mask.iter().any(|&b| b) || !opts.use_pjrt {
             for _ in 0..opts.engine_workers.max(1) {
                 let q = queue.clone();
                 let m = metrics.clone();
-                let d = dcnn.clone();
+                let cache = plan_cache.clone();
                 let cfgs = opts.configs.clone();
                 let mask = engine_mask.clone();
                 let threads = opts.engine_gemm_threads;
                 workers.push(std::thread::spawn(move || {
-                    engine_worker(d, cfgs, q, m, mask, threads);
+                    engine_worker(cache, cfgs, q, m, mask, threads);
                 }));
             }
         }
-        Ok(Server { router, metrics, queue, workers })
+        Ok(Server { router, metrics, plan_cache, queue, workers })
     }
 
     /// Per-config queue depths right now (admission/observability
     /// snapshot, config order = `ServerOpts::configs`).
     pub fn queue_depths(&self) -> Vec<usize> {
-        self.queue.depths()
+        self.queue.snapshot().depths
     }
 
-    /// Close the queue, drain in-flight work, join workers.
-    pub fn shutdown(self) {
+    /// Close the queue, drain in-flight work, join workers.  A worker
+    /// that panicked surfaces here as an error (the first panic wins)
+    /// instead of being swallowed — CI's serving tests fail on a
+    /// crashed worker rather than on a silently shorter reply stream.
+    pub fn shutdown(self) -> Result<()> {
         self.queue.close();
+        let mut first_panic: Option<String> = None;
         for w in self.workers {
-            let _ = w.join();
+            if let Err(payload) = w.join() {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| {
+                        payload.downcast_ref::<String>().cloned()
+                    })
+                    .unwrap_or_else(|| {
+                        "non-string panic payload".to_string()
+                    });
+                if first_panic.is_none() {
+                    first_panic = Some(msg);
+                }
+            }
+        }
+        match first_panic {
+            Some(msg) => bail!("serving worker panicked: {msg}"),
+            None => Ok(()),
         }
     }
 }
@@ -146,9 +198,10 @@ fn batch_tensor(batch: &[Request]) -> Tensor {
     Tensor::new(vec![batch.len(), 28, 28, 1], data)
 }
 
-fn pjrt_worker(art: ArtifactDir, dcnn: Arc<Dcnn>, configs: Vec<NetConfig>,
-               queue: Arc<BatchQueue>, metrics: Arc<Metrics>,
-               mask: Vec<bool>, engine_threads: usize) {
+fn pjrt_worker(art: ArtifactDir, cache: Arc<PlanCache>,
+               configs: Vec<NetConfig>, queue: Arc<BatchQueue>,
+               metrics: Arc<Metrics>, mask: Vec<bool>,
+               engine_threads: usize) {
     let mut runner = match ModelRunner::new(art) {
         Ok(r) => r,
         Err(e) => {
@@ -156,10 +209,11 @@ fn pjrt_worker(art: ArtifactDir, dcnn: Arc<Dcnn>, configs: Vec<NetConfig>,
             // Become an engine worker over the same mask so the configs
             // assigned to this worker are still served (the stub build
             // never reaches here — its configs route to engine workers
-            // up front — but a runtime PJRT init failure does).
+            // up front — but a runtime PJRT init failure does); it
+            // shares the same plan cache as the regular engine pool.
             eprintln!("pjrt worker failed to start: {e:#}; \
                        serving its configs on the engine backend");
-            engine_worker(dcnn, configs, queue, metrics, mask,
+            engine_worker(cache, configs, queue, metrics, mask,
                           engine_threads);
             return;
         }
@@ -180,23 +234,26 @@ fn pjrt_worker(art: ArtifactDir, dcnn: Arc<Dcnn>, configs: Vec<NetConfig>,
     }
 }
 
-fn engine_worker(dcnn: Arc<Dcnn>, configs: Vec<NetConfig>,
+fn engine_worker(cache: Arc<PlanCache>, configs: Vec<NetConfig>,
                  queue: Arc<BatchQueue>, metrics: Arc<Metrics>,
                  mask: Vec<bool>, threads: usize) {
-    let mut prepared: HashMap<usize, crate::nn::network::PreparedNet> =
-        HashMap::new();
     while let Some((ci, batch)) = queue.next_batch(&mask) {
-        // First batch for a config prepares it once — quantization AND
-        // weight-panel prepacking — and accounts the resident panels;
-        // every later batch (batch-1 requests included) runs on fully
-        // conditioned panels.
-        if !prepared.contains_key(&ci) {
-            let net = dcnn.prepare(configs[ci]);
-            let (count, bytes) = net.packed_panel_stats();
-            metrics.record_panels(count as u64, bytes as u64);
-            prepared.insert(ci, net);
-        }
-        let net = &prepared[&ci];
+        // One shared Arc<PreparedNet> per config across the whole
+        // pool: the first batch anywhere prepares it (single-flight),
+        // every other worker's batches ride the same panels.  The Arc
+        // is held only for the batch, so an eviction between batches
+        // frees the memory as soon as in-flight work drains.
+        let net = cache.get(&configs[ci]);
+        // Mirror the cache counters and residency gauges every batch
+        // — all lock-free reads, so hit batches stay at a single
+        // cache lock and a stale store from a racing cold-start is
+        // overwritten by the next batch rather than sticking.
+        // Store semantics: idempotent across workers, so the metrics
+        // stay worker-count invariant.
+        let (h, m, e) = cache.counters();
+        metrics.set_plan_cache(h, m, e);
+        let (panels, bytes) = cache.resident_gauges();
+        metrics.set_panels(panels, bytes);
         let x = batch_tensor(&batch);
         let preds = net.predict(&x, threads);
         metrics.record_batch(batch.len());
@@ -207,6 +264,8 @@ fn engine_worker(dcnn: Arc<Dcnn>, configs: Vec<NetConfig>,
 #[cfg(test)]
 mod tests {
     // Server integration tests live in rust/tests/serving.rs (they need
-    // artifacts); unit coverage for the queue/router/metrics pieces is in
-    // their own modules.
+    // artifacts) and rust/tests/plan_cache.rs (hermetic, over a
+    // synthetic Dcnn via `Server::start_with_dcnn`); unit coverage for
+    // the queue/router/metrics/plan-cache pieces is in their own
+    // modules.
 }

@@ -327,6 +327,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sopts.max_wait = fc.max_wait;
         sopts.queue_capacity = fc.queue_capacity;
         sopts.engine_workers = fc.engine_workers;
+        sopts.plan_cache_bytes = fc.plan_cache_mb * 1024 * 1024;
         sopts.use_pjrt = fc.use_pjrt;
     }
     if let Some(list) = args.opt_str("configs") {
@@ -343,6 +344,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     sopts.engine_workers =
         args.usize("engine-workers", sopts.engine_workers);
+    sopts.plan_cache_bytes =
+        args.usize("plan-cache-mb", sopts.plan_cache_bytes >> 20)
+            * 1024
+            * 1024;
     if args.switch("no-pjrt") {
         sopts.use_pjrt = false;
     }
@@ -400,9 +405,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let wall = t0.elapsed();
-    server.shutdown();
+    let cache = server.plan_cache.stats();
+    server.shutdown()?;
 
     println!("\n{}", "-".repeat(60));
+    println!("plan cache: {} prepares for {} configs ({} hits, \
+              {} evictions, {:.2} MiB panels resident)",
+             cache.prepares, n_cfg, cache.hits, cache.evictions,
+             cache.resident_bytes as f64 / (1024.0 * 1024.0));
     println!("completed {got} (rejected {rejected}) in {:.2}s — \
               offered {rate} req/s, served {:.1} req/s",
              wall.as_secs_f64(),

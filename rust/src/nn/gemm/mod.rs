@@ -174,6 +174,15 @@ impl GemmPlan {
         self.packed.as_ref()
     }
 
+    /// Whether this plan carries prepacked weight panels.  After
+    /// `Dcnn::prepare` every layer plan does; the plan (and the
+    /// `PreparedNet` owning it) is immutable from then on, which is
+    /// what lets `coordinator::plan_cache` share one prepared network
+    /// across engine workers behind an `Arc`.
+    pub fn is_prepacked(&self) -> bool {
+        self.packed.is_some()
+    }
+
     /// Bytes resident in this plan's cached panels (0 when not
     /// prepacked) — surfaced through `coordinator::metrics`.
     pub fn panel_bytes(&self) -> usize {
@@ -508,7 +517,9 @@ mod tests {
     fn prepack_replaces_panels() {
         let kind = ArithKind::Float32;
         let mut plan = GemmPlan::new(&kind);
+        assert!(!plan.is_prepacked());
         plan.prepack(&[1.0], 1, 1);
+        assert!(plan.is_prepacked());
         let fp0 = plan.packed_weights().unwrap().fingerprint();
         plan.prepack(&[2.0], 1, 1);
         let fp1 = plan.packed_weights().unwrap().fingerprint();

@@ -27,6 +27,7 @@
 use super::micro::MicroArith;
 use crate::numeric::BinXnor;
 use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 thread_local! {
     /// Weight-side (B-operand) packing operations performed by this
@@ -37,6 +38,10 @@ thread_local! {
     static WEIGHT_PACKS: Cell<u64> = const { Cell::new(0) };
 }
 
+/// Process-wide total of weight-side packing operations, across all
+/// threads.
+static WEIGHT_PACKS_GLOBAL: AtomicU64 = AtomicU64::new(0);
+
 /// How many weight-side packing operations ([`pack_b_block`] calls and
 /// binary weight-bitmap builds) this thread has performed.  The
 /// prepack-once contract (`tests/prepack_differential.rs`) asserts this
@@ -45,8 +50,21 @@ pub fn weight_pack_count() -> u64 {
     WEIGHT_PACKS.with(|c| c.get())
 }
 
+/// Cross-thread companion to [`weight_pack_count`]: the same counter
+/// summed over every thread in the process.  The shared
+/// `coordinator::plan_cache` prepares a config on whichever worker
+/// wins the single-flight race, so per-thread counters cannot observe
+/// the cache-wide prepare-once contract — `tests/plan_cache.rs`
+/// brackets this one instead.  Tests asserting exact deltas must
+/// serialize themselves: the test harness runs tests of one binary
+/// concurrently in a single process.
+pub fn weight_pack_count_global() -> u64 {
+    WEIGHT_PACKS_GLOBAL.load(Ordering::Relaxed)
+}
+
 fn note_weight_pack() {
     WEIGHT_PACKS.with(|c| c.set(c.get() + 1));
+    WEIGHT_PACKS_GLOBAL.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Pack all of row-major `x` (`m` x `k`, row stride `k`) into MR-row
@@ -207,5 +225,25 @@ mod tests {
         let _ = pack_b_block::<F32Micro, 4>(&F32Micro, &[1.0; 8], 2, 4);
         let _ = pack_b_bits::<4>(&[1.0; 8], 2, 4);
         assert_eq!(weight_pack_count(), c0 + 2);
+    }
+
+    #[test]
+    fn global_counter_sees_other_threads() {
+        // Two B-side packs on a spawned thread: invisible to this
+        // thread's local counter, visible to the global one.  Only a
+        // lower bound is asserted on the global delta — sibling tests
+        // in this binary run concurrently and also pack.
+        let l0 = weight_pack_count();
+        let g0 = weight_pack_count_global();
+        std::thread::spawn(|| {
+            let _ = pack_b_block::<F32Micro, 4>(&F32Micro, &[1.0; 8],
+                                                2, 4);
+            let _ = pack_b_bits::<4>(&[1.0; 8], 2, 4);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(weight_pack_count(), l0,
+                   "local counter must not see the other thread");
+        assert!(weight_pack_count_global() >= g0 + 2);
     }
 }

@@ -95,6 +95,45 @@ impl Dcnn {
         Dcnn::new(super::loader::load_weights(path)?)
     }
 
+    /// A randomly-initialized network with the exact architecture
+    /// `validate_dcnn` requires — the hermetic fixture behind
+    /// `Server::start_with_dcnn`, `benches/serving_throughput.rs` and
+    /// the plan-cache suites (no `make artifacts` needed).  One
+    /// definition serves the lib tests, integration tests and benches
+    /// so the shapes cannot drift from the loader contract.
+    /// Deterministic in `seed`; the weights are untrained (use real
+    /// artifacts for accuracy claims).
+    pub fn synthetic(seed: u64) -> Dcnn {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let mut t = |shape: Vec<usize>, sigma: f64| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape,
+                        (0..n).map(|_| (rng.normal() * sigma) as f32)
+                            .collect())
+        };
+        let mut params = BTreeMap::new();
+        params.insert("conv1_w".into(), t(vec![5, 5, 1, 32], 0.2));
+        params.insert("conv1_b".into(), t(vec![32], 0.05));
+        params.insert("conv2_w".into(), t(vec![5, 5, 32, 64], 0.05));
+        params.insert("conv2_b".into(), t(vec![64], 0.05));
+        params.insert("fc1_w".into(), t(vec![3136, 1024], 0.02));
+        params.insert("fc1_b".into(), t(vec![1024], 0.02));
+        params.insert("fc2_w".into(), t(vec![1024, 10], 0.05));
+        params.insert("fc2_b".into(), t(vec![10], 0.02));
+        Dcnn::new(params).expect("synthetic params match the validator")
+    }
+
+    /// Companion fixture to [`Dcnn::synthetic`]: a deterministic
+    /// random input batch shaped for this network's forward pass
+    /// (`[b, 28, 28, 1]`, values in `[0, 1)`), shared by the hermetic
+    /// suites so the input contract cannot drift per copy.
+    pub fn synthetic_input(b: usize, seed: u64) -> Tensor {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        Tensor::new(vec![b, 28, 28, 1],
+                    (0..b * 784).map(|_| rng.range_f32(0.0, 1.0))
+                        .collect())
+    }
+
     /// Quantize weights/biases for `cfg` and return a runnable network.
     pub fn prepare(&self, cfg: NetConfig) -> PreparedNet {
         let mut wq = Vec::with_capacity(4);
@@ -149,6 +188,17 @@ impl Dcnn {
 }
 
 /// A network with weights snapped to a configuration, ready for inference.
+///
+/// **Immutable after `prepare`.**  Every field is conditioned exactly
+/// once inside [`Dcnn::prepare`] (quantized weights, resolved plans,
+/// prepacked panels) and only read afterwards — there is no `&mut
+/// self` method on this type.  That is the contract that makes
+/// `Arc<PreparedNet>` safe to share across the whole engine worker
+/// pool: `coordinator::plan_cache` hands out one `Arc` per
+/// configuration instead of one private copy per worker, so panel
+/// residency scales with *configs*, not `workers x configs`.
+/// (`Send + Sync` is pinned by a test below; the cross-kind panel
+/// identity guards live in `gemm::PackedWeights`.)
 pub struct PreparedNet {
     pub cfg: NetConfig,
     wq: Vec<Tensor>, // flattened (rows, cout) weights, quantized
@@ -211,7 +261,7 @@ impl PreparedNet {
         let count = self
             .plans
             .iter()
-            .filter(|p| p.packed_weights().is_some())
+            .filter(|p| p.is_prepacked())
             .count();
         let bytes = self.plans.iter().map(|p| p.panel_bytes()).sum();
         (count, bytes)
@@ -240,45 +290,18 @@ impl PreparedNet {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::prng::Rng;
-
-    pub fn tiny_dcnn(seed: u64) -> Dcnn {
-        let mut rng = Rng::new(seed);
-        let mut t = |shape: Vec<usize>, sigma: f64| {
-            let n: usize = shape.iter().product();
-            Tensor::new(shape,
-                        (0..n).map(|_| (rng.normal() * sigma) as f32)
-                            .collect())
-        };
-        let mut params = BTreeMap::new();
-        params.insert("conv1_w".into(), t(vec![5, 5, 1, 32], 0.2));
-        params.insert("conv1_b".into(), t(vec![32], 0.05));
-        params.insert("conv2_w".into(), t(vec![5, 5, 32, 64], 0.05));
-        params.insert("conv2_b".into(), t(vec![64], 0.05));
-        params.insert("fc1_w".into(), t(vec![3136, 1024], 0.02));
-        params.insert("fc1_b".into(), t(vec![1024], 0.02));
-        params.insert("fc2_w".into(), t(vec![1024, 10], 0.05));
-        params.insert("fc2_b".into(), t(vec![10], 0.02));
-        Dcnn::new(params).unwrap()
-    }
-
-    fn rand_input(b: usize, seed: u64) -> Tensor {
-        let mut rng = Rng::new(seed);
-        Tensor::new(vec![b, 28, 28, 1],
-                    (0..b * 784).map(|_| rng.range_f32(0.0, 1.0)).collect())
-    }
 
     #[test]
     fn forward_shapes() {
-        let net = tiny_dcnn(1).prepare(NetConfig::uniform(ArithKind::Float32));
-        let logits = net.forward(&rand_input(3, 2), 1);
+        let net = Dcnn::synthetic(1).prepare(NetConfig::uniform(ArithKind::Float32));
+        let logits = net.forward(&Dcnn::synthetic_input(3, 2), 1);
         assert_eq!(logits.shape, vec![3, 10]);
     }
 
     #[test]
     fn quantized_forward_close_to_f32_with_wide_config() {
-        let dcnn = tiny_dcnn(3);
-        let x = rand_input(2, 4);
+        let dcnn = Dcnn::synthetic(3);
+        let x = Dcnn::synthetic_input(2, 4);
         let base = dcnn
             .prepare(NetConfig::uniform(ArithKind::Float32))
             .forward(&x, 1);
@@ -294,8 +317,8 @@ mod tests {
 
     #[test]
     fn coarse_quantization_perturbs() {
-        let dcnn = tiny_dcnn(5);
-        let x = rand_input(2, 6);
+        let dcnn = Dcnn::synthetic(5);
+        let x = Dcnn::synthetic_input(2, 6);
         let base = dcnn
             .prepare(NetConfig::uniform(ArithKind::Float32))
             .forward(&x, 1);
@@ -316,19 +339,19 @@ mod tests {
         let cfg = NetConfig::parse("FI(6,8)|FI(6,8)|H(8,8,14)|H(8,8,14)")
             .unwrap();
         assert!(!cfg.pjrt_expressible());
-        let net = tiny_dcnn(7).prepare(cfg);
+        let net = Dcnn::synthetic(7).prepare(cfg);
         assert_eq!(net.kernel_names(),
                    ["packed-fi", "packed-fi", "packed-drum",
                     "packed-drum"]);
-        let out = net.forward(&rand_input(1, 8), 1);
+        let out = net.forward(&Dcnn::synthetic_input(1, 8), 1);
         assert_eq!(out.shape, vec![1, 10]);
         assert!(out.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]
     fn ranges_structure() {
-        let dcnn = tiny_dcnn(9);
-        let r = dcnn.ranges(&rand_input(4, 10), 1);
+        let dcnn = Dcnn::synthetic(9);
+        let r = dcnn.ranges(&Dcnn::synthetic_input(4, 10), 1);
         assert_eq!(r.len(), 4);
         for lr in &r {
             assert!(lr.w.0 <= lr.w.1);
@@ -343,16 +366,26 @@ mod tests {
     fn prepare_caches_weight_panels() {
         let cfg = NetConfig::parse("FI(6,8)|FI(6,8)|FL(4,9)|binxnor")
             .unwrap();
-        let net = tiny_dcnn(13).prepare(cfg);
+        let net = Dcnn::synthetic(13).prepare(cfg);
         let (count, bytes) = net.packed_panel_stats();
         assert_eq!(count, 4, "every layer's panels are cached");
         assert!(bytes > 0);
     }
 
     #[test]
+    fn prepared_net_is_send_sync() {
+        // The auto-trait pin behind `Arc<PreparedNet>` sharing in
+        // `coordinator::plan_cache`: compile-time, fails here if a
+        // future field (e.g. interior mutability in a plan) breaks it.
+        fn check<T: Send + Sync>() {}
+        check::<PreparedNet>();
+        check::<std::sync::Arc<PreparedNet>>();
+    }
+
+    #[test]
     fn threads_do_not_change_results() {
-        let dcnn = tiny_dcnn(11);
-        let x = rand_input(4, 12);
+        let dcnn = Dcnn::synthetic(11);
+        let x = Dcnn::synthetic_input(4, 12);
         let cfg = NetConfig::uniform(ArithKind::parse("FI(6,8)").unwrap());
         let a = dcnn.prepare(cfg).forward(&x, 1);
         let b = dcnn.prepare(cfg).forward(&x, 4);

@@ -102,6 +102,17 @@ impl ExecutionPlan {
             ExecutionPlan::Pjrt(_) => None,
         }
     }
+
+    /// True when this plan targets a PJRT artifact variant; its
+    /// negation means the config runs on the engine (whose
+    /// `PreparedNet` the serving stack shares through
+    /// `coordinator::plan_cache`).  Callers still need a live runner —
+    /// without one (stub build, init failure) even a PJRT plan falls
+    /// back to the engine.  Used by the server's worker-mask split and
+    /// the evaluator's backend choice.
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, ExecutionPlan::Pjrt(_))
+    }
 }
 
 /// Decide the execution plan for `cfg`.  Configs with an expressible
@@ -406,6 +417,7 @@ mod tests {
         assert_eq!(execution_plan(&fi),
                    ExecutionPlan::Pjrt(Variant::Fi));
         assert_eq!(execution_plan(&fi).engine_kernels(), None);
+        assert!(execution_plan(&fi).is_pjrt());
         let mixed = NetConfig::parse("FI(6,8)|FI(6,8)|H(8,8,14)|I(5,10)")
             .unwrap();
         assert_eq!(
@@ -418,6 +430,7 @@ mod tests {
             Some(&["packed-fi", "packed-fi", "packed-drum",
                    "packed-cfpu"])
         );
+        assert!(!execution_plan(&mixed).is_pjrt());
     }
 
     #[test]

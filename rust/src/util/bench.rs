@@ -82,6 +82,34 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Write a bench's rows as the repo's standard JSON artifact
+/// (`{"bench": <name>, "rows": [{...}, ...]}`) to `default_path`, or
+/// to `$<env_override>` when set.  Each element of `rows` is one
+/// preformatted JSON object body *without* the enclosing braces
+/// (e.g. `"shape": "FC1", "speedup": 1.25`); this helper owns the
+/// header/footer, per-row bracing, trailing-comma discipline and
+/// write-error reporting, so the per-bench emitters
+/// (`gemm_kernels`, `serving_throughput`) cannot drift apart —
+/// CI's sanity gates parse both artifacts.
+pub fn write_bench_json(name: &str, env_override: &str,
+                        default_path: &str, rows: &[String]) {
+    let path = std::env::var(env_override)
+        .unwrap_or_else(|_| default_path.to_string());
+    let mut body =
+        format!("{{\n  \"bench\": \"{name}\",\n  \"rows\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{{row}}}{}\n",
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,6 +133,28 @@ mod tests {
         assert_eq!(r.percentile_ns(0.0), 10);
         assert_eq!(r.percentile_ns(50.0), 30);
         assert_eq!(r.percentile_ns(100.0), 50);
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let dir = std::env::temp_dir().join("lop_bench_json_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("out.json");
+        write_bench_json(
+            "unit",
+            "LOP_TEST_BENCH_JSON_UNSET",
+            path.to_str().unwrap(),
+            &[r#""a": 1, "b": "x""#.to_string(),
+              r#""a": 2, "b": "y""#.to_string()],
+        );
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"bench\": \"unit\""), "{s}");
+        assert!(s.contains("{\"a\": 1, \"b\": \"x\"},"), "{s}");
+        assert!(s.contains("{\"a\": 2, \"b\": \"y\"}\n"), "{s}");
+        // minimal well-formedness: balanced braces, no trailing comma
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert!(!s.contains("},\n  ]"), "{s}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

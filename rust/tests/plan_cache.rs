@@ -1,0 +1,200 @@
+//! Hermetic suite for the shared prepared-net cache
+//! (`coordinator::plan_cache`) — the PR-4 contracts:
+//!
+//! * **single-flight**: N workers requesting one config concurrently
+//!   produce exactly one `Dcnn::prepare` — one weight-pack operation
+//!   per layer on the *global* counter — and share one `Arc`;
+//! * **byte-capped LRU**: residency never exceeds the cap by more
+//!   than the most recent network, the least-recently-*used* config
+//!   is evicted first;
+//! * **determinism across eviction**: an evicted-then-refetched
+//!   config re-prepares to bit-identical outputs;
+//! * **worker-count invariance**: `packed_panel_stats` (prepare count,
+//!   resident panel bytes) for K configs is identical at 1 and 4
+//!   engine workers — the acceptance criterion, exercised through
+//!   real `Server` worker pools over `Server::start_with_dcnn`.
+//!
+//! Tests serialize on a file-local mutex: the harness runs a binary's
+//! tests concurrently in one process, and the exact global
+//! `weight_pack_count_global` deltas asserted here must not see
+//! sibling tests packing.
+
+use lop::coordinator::plan_cache::PlanCache;
+use lop::coordinator::server::{Server, ServerOpts};
+use lop::data::synth;
+use lop::nn::gemm::pack::weight_pack_count_global;
+use lop::nn::network::{Dcnn, NetConfig};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Barrier, Mutex, MutexGuard};
+use std::time::Duration;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // a sibling test panicking while holding the lock only poisons
+    // it; the serialization itself is still valid
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn cfg(s: &str) -> NetConfig {
+    NetConfig::parse(s).unwrap()
+}
+
+/// Resident panel bytes of one prepared net for `c` (probe cache).
+fn bytes_of(dcnn: &Arc<Dcnn>, c: &NetConfig) -> usize {
+    let probe = PlanCache::new(dcnn.clone());
+    probe.get(c);
+    probe.stats().resident_bytes
+}
+
+#[test]
+fn single_flight_prepares_once_under_contention() {
+    let _g = lock();
+    let dcnn = Arc::new(Dcnn::synthetic(11));
+    let cache = Arc::new(PlanCache::new(dcnn));
+    // mixed config: element panels, DRUM conditioning, float lattice
+    // AND the binary bitmap path all behind one single-flight entry
+    let c = cfg("FI(6,8)|H(6,8,6)|FL(4,9)|binxnor");
+    let packs_before = weight_pack_count_global();
+
+    const N: usize = 8;
+    let barrier = Arc::new(Barrier::new(N));
+    let mut handles = Vec::new();
+    for _ in 0..N {
+        let cache = cache.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait(); // maximize get() contention
+            cache.get(&c)
+        }));
+    }
+    let nets: Vec<_> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // one weight-pack operation per layer, process-wide — the N - 1
+    // losers of the single-flight race packed nothing
+    assert_eq!(
+        weight_pack_count_global() - packs_before,
+        4,
+        "contended prepare must condition each layer exactly once"
+    );
+    for net in &nets[1..] {
+        assert!(Arc::ptr_eq(&nets[0], net),
+                "all workers must share one Arc<PreparedNet>");
+    }
+    let s = cache.stats();
+    assert_eq!(s.prepares, 1);
+    assert_eq!(s.misses, 1);
+    assert_eq!(s.hits, N as u64 - 1);
+    assert!(s.inflight_waits <= N as u64 - 1);
+    assert_eq!(s.resident_configs, 1);
+    assert_eq!(s.resident_panels, 4);
+}
+
+#[test]
+fn lru_eviction_respects_byte_cap() {
+    let _g = lock();
+    let dcnn = Arc::new(Dcnn::synthetic(12));
+    // same provider family -> every net has identical panel bytes
+    let (a, b, c) = (cfg("FI(6,8)"), cfg("FI(5,8)"), cfg("FI(4,8)"));
+    let one = bytes_of(&dcnn, &a);
+    assert!(one > 0);
+
+    // room for two networks, not three
+    let cache = PlanCache::with_capacity(dcnn, one * 2 + one / 2);
+    cache.get(&a);
+    cache.get(&b);
+    assert_eq!(cache.stats().evictions, 0, "two nets fit the cap");
+    cache.get(&a); // refresh A: B becomes least-recently-used
+    cache.get(&c); // exceeds the cap -> evict exactly B
+    let s = cache.stats();
+    assert_eq!(s.evictions, 1);
+    assert_eq!(s.resident_configs, 2);
+    assert!(s.resident_bytes <= one * 2 + one / 2,
+            "resident {} bytes exceeds the cap", s.resident_bytes);
+    assert!(cache.contains(&a), "recently-used A must survive");
+    assert!(cache.contains(&c), "just-inserted C must survive");
+    assert!(!cache.contains(&b), "LRU B must be the victim");
+}
+
+#[test]
+fn evicted_then_refetched_is_bit_identical() {
+    let _g = lock();
+    let dcnn = Arc::new(Dcnn::synthetic(13));
+    let (a, b) = (cfg("H(6,8,6)"), cfg("FI(6,8)"));
+    // cap below two networks: inserting B always evicts A
+    let cache =
+        PlanCache::with_capacity(dcnn.clone(), bytes_of(&dcnn, &a));
+    let x = Dcnn::synthetic_input(2, 14);
+
+    let first = cache.get(&a);
+    let out1 = first.forward(&x, 1);
+    cache.get(&b);
+    assert!(!cache.contains(&a), "cap must have evicted A");
+
+    let second = cache.get(&a); // re-prepares from the same Dcnn
+    assert!(!Arc::ptr_eq(&first, &second));
+    let out2 = second.forward(&x, 1);
+    assert_eq!(cache.stats().prepares, 3);
+    for (i, (p, q)) in out1.data.iter().zip(&out2.data).enumerate() {
+        assert_eq!(p.to_bits(), q.to_bits(),
+                   "logit[{i}] diverged across eviction: {p} vs {q}");
+    }
+}
+
+/// Run a K-config burst through a real engine worker pool and return
+/// the shared cache's `(prepare count, resident panel bytes)`.
+fn serve_burst(dcnn: &Arc<Dcnn>, workers: usize) -> (u64, usize) {
+    let configs =
+        vec![cfg("FI(6,8)"), cfg("H(6,8,12)"), cfg("binxnor")];
+    let n_cfg = configs.len();
+    let server = Server::start_with_dcnn(
+        ServerOpts {
+            configs,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 1_024,
+            engine_workers: workers,
+            engine_gemm_threads: 1,
+            plan_cache_bytes: 512 * 1024 * 1024,
+            use_pjrt: false, // hermetic: no artifacts in tier-1
+        },
+        dcnn.clone(),
+        None,
+    )
+    .unwrap();
+
+    let (images, _) = synth::generate(32, 77);
+    let (tx, rx) = channel();
+    let n = 24;
+    for i in 0..n {
+        let img: Vec<f32> = images[(i % 32) * 784..(i % 32 + 1) * 784]
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect();
+        server.router.submit(i % n_cfg, img, tx.clone()).unwrap();
+    }
+    drop(tx);
+    for _ in 0..n {
+        rx.recv_timeout(Duration::from_secs(120))
+            .expect("response stream ended early");
+    }
+    let stats = server.plan_cache.packed_panel_stats();
+    server.shutdown().expect("a serving worker panicked");
+    stats
+}
+
+#[test]
+fn packed_panel_stats_invariant_across_worker_counts() {
+    let _g = lock();
+    let dcnn = Arc::new(Dcnn::synthetic(15));
+    let at1 = serve_burst(&dcnn, 1);
+    let at4 = serve_burst(&dcnn, 4);
+    assert_eq!(at1.0, 3, "K = 3 configs -> exactly 3 prepares");
+    assert!(at1.1 > 0);
+    assert_eq!(
+        at1, at4,
+        "prepare count / resident panel bytes must be a function of \
+         the config set, not the worker count"
+    );
+}

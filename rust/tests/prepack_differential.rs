@@ -21,10 +21,8 @@ use lop::nn::gemm::pack::weight_pack_count;
 use lop::nn::gemm::reference::gemm_reference;
 use lop::nn::gemm::{default_threads, select_kernel, GemmPlan};
 use lop::nn::network::{Dcnn, NetConfig};
-use lop::nn::tensor::Tensor;
 use lop::util::prng::Rng;
 use lop::util::prop;
-use std::collections::BTreeMap;
 
 /// One representative per `ArithKind` variant plus width variations
 /// (same coverage as tests/gemm_differential.rs).
@@ -254,41 +252,13 @@ fn two_prepares_with_different_kinds_never_share_panels() {
 // network-level contract: prepare conditions weights exactly once
 // ---------------------------------------------------------------------------
 
-/// A randomly-initialized DCNN with the architecture `validate_dcnn`
-/// requires (the integration-test twin of `network::tests::tiny_dcnn`).
-fn tiny_dcnn(seed: u64) -> Dcnn {
-    let mut rng = Rng::new(seed);
-    let mut t = |shape: Vec<usize>, sigma: f64| {
-        let count: usize = shape.iter().product();
-        Tensor::new(shape,
-                    (0..count).map(|_| (rng.normal() * sigma) as f32)
-                        .collect())
-    };
-    let mut params = BTreeMap::new();
-    params.insert("conv1_w".into(), t(vec![5, 5, 1, 32], 0.2));
-    params.insert("conv1_b".into(), t(vec![32], 0.05));
-    params.insert("conv2_w".into(), t(vec![5, 5, 32, 64], 0.05));
-    params.insert("conv2_b".into(), t(vec![64], 0.05));
-    params.insert("fc1_w".into(), t(vec![3136, 1024], 0.02));
-    params.insert("fc1_b".into(), t(vec![1024], 0.02));
-    params.insert("fc2_w".into(), t(vec![1024, 10], 0.05));
-    params.insert("fc2_b".into(), t(vec![10], 0.02));
-    Dcnn::new(params).unwrap()
-}
-
-fn rand_input(b: usize, seed: u64) -> Tensor {
-    let mut rng = Rng::new(seed);
-    Tensor::new(vec![b, 28, 28, 1],
-                (0..b * 784).map(|_| rng.range_f32(0.0, 1.0)).collect())
-}
-
 #[test]
 fn forward_does_zero_weight_packing_after_prepare() {
-    let dcnn = tiny_dcnn(23);
+    let dcnn = Dcnn::synthetic(23);
     // mixed config covering element panels AND the binary bitmap path
     let cfg = NetConfig::parse("FI(6,8)|H(6,8,6)|FL(4,9)|binxnor")
         .unwrap();
-    let x = rand_input(1, 24);
+    let x = Dcnn::synthetic_input(1, 24);
 
     let before_prepare = weight_pack_count();
     let net = dcnn.prepare(cfg);

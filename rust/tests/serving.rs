@@ -1,12 +1,25 @@
 //! Serving-stack integration tests: router → batcher → workers over real
 //! artifacts, on both backends.
+//!
+//! Tests serialize on a file-local mutex: the warm-start test reads
+//! the process-wide `weight_pack_count_global` counter, which a
+//! concurrently running sibling server would perturb (the harness runs
+//! one binary's tests in parallel threads of one process).
 
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::data::Dataset;
+use lop::nn::gemm::pack::weight_pack_count_global;
 use lop::nn::network::{Dcnn, NetConfig};
 use lop::runtime::ArtifactDir;
 use std::sync::mpsc::channel;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 fn opts(configs: Vec<NetConfig>, use_pjrt: bool) -> ServerOpts {
     ServerOpts {
@@ -16,6 +29,7 @@ fn opts(configs: Vec<NetConfig>, use_pjrt: bool) -> ServerOpts {
         queue_capacity: 1_024,
         engine_workers: 2,
         engine_gemm_threads: 1,
+        plan_cache_bytes: 512 * 1024 * 1024,
         use_pjrt,
     }
 }
@@ -36,6 +50,7 @@ fn test_images(n: usize) -> (Vec<Vec<f32>>, Vec<usize>, Dcnn) {
 
 #[test]
 fn pjrt_backend_serves_correct_predictions() {
+    let _g = lock();
     let (imgs, _, dcnn) = test_images(24);
     let cfg = NetConfig::parse("FI(6,8)").unwrap();
     let server = Server::start(opts(vec![cfg], true)).unwrap();
@@ -49,7 +64,7 @@ fn pjrt_backend_serves_correct_predictions() {
         let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
         preds[r.id as usize] = r.pred;
     }
-    server.shutdown();
+    server.shutdown().unwrap();
 
     // must match direct engine inference exactly (argmax level)
     let net = dcnn.prepare(cfg);
@@ -63,6 +78,7 @@ fn pjrt_backend_serves_correct_predictions() {
 
 #[test]
 fn engine_backend_serves_approx_configs() {
+    let _g = lock();
     let (imgs, labels, _) = test_images(16);
     let cfg = NetConfig::parse("H(6,8,12)").unwrap();
     let server = Server::start(opts(vec![cfg], true)).unwrap();
@@ -78,12 +94,13 @@ fn engine_backend_serves_approx_configs() {
             correct += 1;
         }
     }
-    server.shutdown();
+    server.shutdown().unwrap();
     assert!(correct >= 12, "H(6,8,12) got only {correct}/16 right");
 }
 
 #[test]
 fn mixed_backends_share_one_server() {
+    let _g = lock();
     let (imgs, _, _) = test_images(12);
     let configs = vec![
         NetConfig::parse("float32").unwrap(),   // PJRT
@@ -103,11 +120,12 @@ fn mixed_backends_share_one_server() {
     }
     assert_eq!(got, imgs.len());
     assert!(server.metrics.mean_batch_size() >= 1.0);
-    server.shutdown();
+    server.shutdown().unwrap();
 }
 
 #[test]
 fn no_pjrt_falls_back_to_engine_everywhere() {
+    let _g = lock();
     let (imgs, _, dcnn) = test_images(8);
     let cfg = NetConfig::parse("FI(6,8)").unwrap();
     let server = Server::start(opts(vec![cfg], false)).unwrap();
@@ -125,5 +143,46 @@ fn no_pjrt_falls_back_to_engine_everywhere() {
         );
         assert_eq!(r.pred, net.predict(&t, 1)[0]);
     }
-    server.shutdown();
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn warm_start_skips_reprepare() {
+    let _g = lock();
+    let (imgs, _, _) = test_images(8);
+    // engine-backed config, 2 workers sharing one PlanCache
+    let cfg = NetConfig::parse("H(6,8,12)").unwrap();
+    let server = Server::start(opts(vec![cfg], false)).unwrap();
+
+    // cold burst: the first batch pays quantization + prepacking once
+    let (tx, rx) = channel();
+    for img in &imgs[..4] {
+        server.router.submit(0, img.clone(), tx.clone()).unwrap();
+    }
+    for _ in 0..4 {
+        rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    }
+    let cold = server.plan_cache.stats();
+    assert_eq!(cold.prepares, 1, "cold start prepares exactly once");
+
+    // warm burst: same config, any worker — zero re-preparation and
+    // zero weight-side packing anywhere in the process
+    let packs_before = weight_pack_count_global();
+    for img in &imgs[4..] {
+        server.router.submit(0, img.clone(), tx.clone()).unwrap();
+    }
+    drop(tx);
+    for _ in 0..4 {
+        rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    }
+    let warm = server.plan_cache.stats();
+    assert_eq!(warm.prepares, 1,
+               "warm requests must ride the cached PreparedNet");
+    assert!(warm.hits > cold.hits);
+    assert_eq!(
+        weight_pack_count_global(),
+        packs_before,
+        "a warm-start batch repacked weights somewhere in the pool"
+    );
+    server.shutdown().unwrap();
 }
