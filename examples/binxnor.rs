@@ -10,7 +10,8 @@ use anyhow::Result;
 use lop::approx::arith::ArithKind;
 use lop::data::Dataset;
 use lop::hw::datapath::{Datapath, N_PE};
-use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
 use lop::numeric::{BinXnor, Representation};
 use lop::runtime::ArtifactDir;
 
@@ -35,15 +36,16 @@ fn main() -> Result<()> {
     //    the *first* conv layer (where binary nets lose least) and keep
     //    the rest at FI(6, 8)
     let art = ArtifactDir::discover()?;
-    let dcnn = Dcnn::load(&art.weights_path())?;
+    let spec = NetSpec::paper_dcnn();
+    let model = Model::load(spec.clone(), &art.weights_path())?;
     let ds = Dataset::load(&art.dataset_path())?;
     let n = 300.min(ds.test.len());
     let idx: Vec<usize> = (0..n).collect();
     let x = ds.batch(&ds.test, &idx);
     let labels = &ds.test.labels;
 
-    let acc = |cfg: &NetConfig| -> f64 {
-        let preds = dcnn.prepare(*cfg).predict(&x, 0);
+    let acc = |cfg: &ReprMap| -> f64 {
+        let preds = model.prepare(cfg).predict(&x, 0);
         preds
             .iter()
             .zip(labels.iter())
@@ -52,10 +54,11 @@ fn main() -> Result<()> {
             / n as f64
     };
 
-    let base = NetConfig::parse("FI(6,8)").unwrap();
-    let bin1 = NetConfig::parse("binxnor|FI(6,8)|FI(6,8)|FI(6,8)")
-        .unwrap();
-    let binall = NetConfig::uniform(ArithKind::Binary);
+    let base = ReprMap::parse_for(&spec, "FI(6,8)").unwrap();
+    let bin1 =
+        ReprMap::parse_for(&spec, "binxnor|FI(6,8)|FI(6,8)|FI(6,8)")
+            .unwrap();
+    let binall = ReprMap::uniform_for(&spec, ArithKind::Binary);
 
     let (a_base, a_bin1, a_binall) = (acc(&base), acc(&bin1), acc(&binall));
     println!("\naccuracy over {n} test images:");

@@ -10,16 +10,17 @@ use lop::coordinator::explorer::{explore, ExploreOpts, Family};
 use lop::coordinator::ranges::profile_ranges;
 use lop::data::Dataset;
 use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
-use lop::nn::network::Dcnn;
+use lop::nn::network::Model;
+use lop::nn::spec::NetSpec;
 use lop::runtime::ArtifactDir;
 
 fn main() -> Result<()> {
     let art = ArtifactDir::discover()?;
-    let dcnn = Dcnn::load(&art.weights_path())?;
+    let model = Model::load(NetSpec::paper_dcnn(), &art.weights_path())?;
     let ds = Dataset::load(&art.dataset_path())?;
 
     // Table 1 first: the ranges bound the integral/exponent BCIs
-    let ranges = profile_ranges(&dcnn, &ds, 1_000, 0);
+    let ranges = profile_ranges(&model, &ds, 1_000, 0);
     println!("WBA ranges (drive the range-determined BCI fields):");
     for r in &ranges {
         let c = r.combined();
@@ -30,8 +31,8 @@ fn main() -> Result<()> {
     // otherwise the bit-accurate engine computes the same accuracies.
     let weights_path = art.weights_path();
     let runner = lop::runtime::runner_or_warn(art);
-    let dcnn2 = Dcnn::load(&weights_path)?;
-    let mut ev = Evaluator::new(dcnn2, runner, ds, 300, 0);
+    let model2 = Model::load(NetSpec::paper_dcnn(), &weights_path)?;
+    let mut ev = Evaluator::new(model2, runner, ds, 300, 0);
 
     let opts = ExploreOpts {
         accuracy_bound: 0.01,
@@ -61,7 +62,7 @@ fn main() -> Result<()> {
 
     // hardware verdict on the chosen per-layer representations
     println!("\nhardware cost of the chosen per-layer domains:");
-    for (li, kind) in res.chosen.layers.iter().enumerate() {
+    for (li, kind) in res.chosen.kinds().iter().enumerate() {
         let dp = Datapath::synthesize(kind, N_PE);
         let (a, d) = dp.utilization(&ARRIA10);
         println!(

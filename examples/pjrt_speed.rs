@@ -5,7 +5,7 @@
 
 use lop::approx::arith::ArithKind;
 use lop::data::Dataset;
-use lop::nn::network::NetConfig;
+use lop::nn::spec::{NetSpec, ReprMap};
 use lop::runtime::{ArtifactDir, ModelRunner};
 use std::time::Instant;
 
@@ -15,10 +15,11 @@ fn main() -> anyhow::Result<()> {
     let mut runner = ModelRunner::new(art)?;
     let idx: Vec<usize> = (0..64).collect();
     let x = ds.batch(&ds.test, &idx);
+    let spec = NetSpec::paper_dcnn();
     for cfg in [
-        NetConfig::uniform(ArithKind::Float32),
-        NetConfig::parse("FI(6,8)").unwrap(),
-        NetConfig::parse("FL(4,9)").unwrap(),
+        ReprMap::uniform_for(&spec, ArithKind::Float32),
+        ReprMap::parse_for(&spec, "FI(6,8)").unwrap(),
+        ReprMap::parse_for(&spec, "FL(4,9)").unwrap(),
     ] {
         runner.forward(&cfg, &x)?; // compile + warm
         let t0 = Instant::now();

@@ -1,40 +1,65 @@
-//! Quickstart: load the AOT artifacts, classify a few test digits under
+//! Quickstart: describe the paper's DCNN with the `NetSpec` builder,
+//! load the AOT artifacts into it, classify a few test digits under
 //! float32 and FI(6, 8), and show that the narrow fixed-point
-//! representation keeps the predictions (the paper's headline claim for
-//! FI(6, 8), Table 4).
+//! representation keeps the predictions (the paper's headline claim
+//! for FI(6, 8), Table 4).
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
 use anyhow::Result;
 use lop::approx::arith::ArithKind;
 use lop::data::Dataset;
-use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
 use lop::runtime::{ArtifactDir, ModelRunner};
 
 fn main() -> Result<()> {
-    // 1. artifacts: HLO text + weights + dataset, produced by `make
+    // 1. the topology, built layer by layer (shape-checked as it
+    //    grows).  This is exactly `NetSpec::paper_dcnn()` — spelled
+    //    out here to show the builder; swap layers freely and the
+    //    whole stack (prepare, serving, DSE) follows the spec.
+    let spec = NetSpec::builder([28, 28, 1])
+        .conv2d(5, 5, 32, 2)
+        .relu()
+        .pool()
+        .conv2d(5, 5, 64, 2)
+        .relu()
+        .pool()
+        .dense(1024)
+        .relu()
+        .dense(10)
+        .build()
+        .map_err(anyhow::Error::msg)?;
+    assert!(spec.is_paper_dcnn());
+    println!("model: {spec}");
+    println!("       ({} layers, {} parameters)", spec.len(),
+             spec.param_count());
+
+    // 2. artifacts: HLO text + weights + dataset, produced by `make
     //    artifacts` (python runs once at build time, never here)
     let art = ArtifactDir::discover()?;
     println!("artifacts at {:?} (baseline accuracy {:.4})", art.root,
              art.baseline_accuracy);
-    let dcnn = Dcnn::load(&art.weights_path())?;
+    let model = Model::load(spec.clone(), &art.weights_path())?;
     let ds = Dataset::load(&art.dataset_path())?;
 
-    // 2. a batch of test digits
+    // 3. a batch of test digits
     let idx: Vec<usize> = (0..16).collect();
     let x = ds.batch(&ds.test, &idx);
     let labels = &ds.test.labels[0..16];
 
-    // 3. run float32 on the PJRT runtime (XLA-compiled artifact)
+    // 4. run float32 on the PJRT runtime (XLA-compiled artifact)
     let mut runner = ModelRunner::new(art)?;
-    let f32cfg = NetConfig::uniform(ArithKind::Float32);
+    let f32cfg = ReprMap::uniform_for(&spec, ArithKind::Float32);
     let f32_pred = runner.forward(&f32cfg, &x)?.argmax_rows();
 
-    // 4. the same batch under the paper's winning FI(6, 8) config —
+    // 5. the same batch under the paper's winning FI(6, 8) config —
+    //    one ArithKind per layer, arity checked against the spec; the
     //    PJRT fake-quant path and the bit-accurate Rust engine agree
-    let fi = NetConfig::parse("FI(6,8)").map_err(anyhow::Error::msg)?;
+    let fi = ReprMap::parse_for(&spec, "FI(6,8)")
+        .map_err(anyhow::Error::msg)?;
     let fi_pjrt = runner.forward(&fi, &x)?.argmax_rows();
-    let fi_engine = dcnn.prepare(fi).predict(&x, 0);
+    let fi_engine = model.prepare(&fi).predict(&x, 0);
 
     println!("\n{:<8} {:>6} {:>8} {:>10} {:>12}", "image", "label",
              "float32", "FI(6,8)", "FI engine");
@@ -48,10 +73,10 @@ fn main() -> Result<()> {
     assert_eq!(fi_pjrt, fi_engine,
                "PJRT fake-quant and bit-accurate engine must agree");
 
-    // 5. what that representation costs in hardware (Table 5 model)
+    // 6. what that representation costs in hardware (Table 5 model)
     use lop::hw::datapath::{Datapath, N_PE};
     for cfg in [&f32cfg, &fi] {
-        let dp = Datapath::synthesize(&cfg.layers[0], N_PE);
+        let dp = Datapath::synthesize(cfg.kind(0), N_PE);
         println!(
             "{:<10} {:>9.0} ALMs  {:>4} DSPs  {:>7.2} MHz  {:>6.2} W  \
              {:>6.2} Gops/J",

@@ -10,7 +10,7 @@
 use anyhow::Result;
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::data::synth;
-use lop::nn::network::NetConfig;
+use lop::nn::spec::{NetSpec, ReprMap};
 use lop::runtime::execution_plan;
 use lop::util::prng::Rng;
 use std::sync::atomic::Ordering;
@@ -18,11 +18,13 @@ use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 fn main() -> Result<()> {
+    let spec = NetSpec::paper_dcnn();
+    let cfg = |s: &str| ReprMap::parse_for(&spec, s).unwrap();
     let configs = vec![
-        NetConfig::parse("float32").unwrap(),
-        NetConfig::parse("FI(6,8)").unwrap(),
-        NetConfig::parse("FL(4,9)").unwrap(),
-        NetConfig::parse("H(6,8,12)").unwrap(), // engine-backed
+        cfg("float32"),
+        cfg("FI(6,8)"),
+        cfg("FL(4,9)"),
+        cfg("H(6,8,12)"), // engine-backed
     ];
     let names: Vec<String> = configs.iter().map(|c| c.name()).collect();
     // name each config's backend up front: engine configs list the

@@ -17,7 +17,8 @@
 
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::data::synth;
-use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
 use lop::util::bench::write_bench_json;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -46,7 +47,7 @@ struct Row {
     evictions: u64,
 }
 
-fn opts(configs: Vec<NetConfig>, workers: usize, max_batch: usize,
+fn opts(configs: Vec<ReprMap>, workers: usize, max_batch: usize,
         max_wait: Duration) -> ServerOpts {
     ServerOpts {
         configs,
@@ -64,7 +65,7 @@ fn opts(configs: Vec<NetConfig>, workers: usize, max_batch: usize,
 /// configs; returns the served count, the burst wall time, and the
 /// (p50, p99) latency in ms **over this burst's responses only** —
 /// the server's cumulative histogram also holds the warm-up requests,
-/// whose latency includes the one-time `Dcnn::prepare` and would
+/// whose latency includes the one-time `Model::prepare` and would
 /// otherwise dominate p99 of a ~200-request series.
 fn burst(server: &Server, images: &[u8], n: usize, n_cfg: usize)
          -> (usize, Duration, f64, f64) {
@@ -102,13 +103,13 @@ fn burst(server: &Server, images: &[u8], n: usize, n_cfg: usize)
     (lat_us.len(), wall, pct(50.0), pct(99.0))
 }
 
-fn run_series(series: &'static str, dcnn: &Arc<Dcnn>,
-              configs: &[NetConfig], workers: usize, max_batch: usize,
+fn run_series(series: &'static str, model: &Arc<Model>,
+              configs: &[ReprMap], workers: usize, max_batch: usize,
               max_wait: Duration, n: usize, images: &[u8],
               rows: &mut Vec<Row>) {
-    let server = Server::start_with_dcnn(
+    let server = Server::start_with_model(
         opts(configs.to_vec(), workers, max_batch, max_wait),
-        dcnn.clone(),
+        model.clone(),
         None,
     )
     .expect("server");
@@ -190,11 +191,12 @@ fn write_json(rows: &[Row]) {
 }
 
 fn main() {
-    let dcnn = Arc::new(Dcnn::synthetic(7));
+    let spec = NetSpec::paper_dcnn();
+    let model = Arc::new(Model::synthetic(spec.clone(), 7));
     let (images, _) = synth::generate(256, 31);
-    let configs: Vec<NetConfig> = CONFIGS
+    let configs: Vec<ReprMap> = CONFIGS
         .iter()
-        .map(|s| NetConfig::parse(s).unwrap())
+        .map(|s| ReprMap::parse_for(&spec, s).unwrap())
         .collect();
     let mut rows = Vec::new();
 
@@ -208,7 +210,7 @@ fn main() {
 
     // --- series 1: worker scaling over one shared PlanCache --------
     for workers in [1usize, 2, 4] {
-        run_series("workers", &dcnn, &configs, workers, 16,
+        run_series("workers", &model, &configs, workers, 16,
                    Duration::from_millis(2), 192, &images, &mut rows);
     }
     // The acceptance invariant: prepares and resident panel bytes are
@@ -234,11 +236,11 @@ fn main() {
 
     // --- series 2: batching-policy ablation (single config) --------
     println!();
-    let one = vec![configs[0]];
+    let one = vec![configs[0].clone()];
     for (max_batch, wait_ms) in
         [(1usize, 0.5f64), (8, 2.0), (16, 2.0), (64, 4.0)]
     {
-        run_series("policy", &dcnn, &one, 2, max_batch,
+        run_series("policy", &model, &one, 2, max_batch,
                    Duration::from_micros((wait_ms * 1e3) as u64), 256,
                    &images, &mut rows);
     }

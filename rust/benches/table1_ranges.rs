@@ -5,18 +5,20 @@
 use lop::coordinator::ranges::{format_table1, int_bits_for,
                                profile_ranges};
 use lop::data::Dataset;
-use lop::nn::network::Dcnn;
+use lop::nn::network::Model;
+use lop::nn::spec::NetSpec;
 use lop::runtime::ArtifactDir;
 use lop::util::bench::{bench, header};
 
 fn main() {
     let art = ArtifactDir::discover().expect("run `make artifacts`");
-    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let model =
+        Model::load(NetSpec::paper_dcnn(), &art.weights_path()).unwrap();
     let ds = Dataset::load(&art.dataset_path()).unwrap();
 
     println!("=== Table 1: value range of weights, biases and \
               activations per layer ===\n");
-    let ranges = profile_ranges(&dcnn, &ds, 2_000, 0);
+    let ranges = profile_ranges(&model, &ds, 2_000, 0);
     print!("{}", format_table1(&ranges));
     println!("\nderived range-determined BCI lower bounds (integral \
               bits, sign-magnitude):");
@@ -32,7 +34,7 @@ fn main() {
     header();
     for n in [100usize, 500, 2_000] {
         let r = bench(&format!("profile_ranges(n={n})"), 1, 5, || {
-            let rr = profile_ranges(&dcnn, &ds, n, 0);
+            let rr = profile_ranges(&model, &ds, n, 0);
             std::hint::black_box(rr);
         });
         println!("{}", r.summary());

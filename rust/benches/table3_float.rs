@@ -9,7 +9,8 @@
 use lop::approx::arith::ArithKind;
 use lop::coordinator::eval::Evaluator;
 use lop::data::Dataset;
-use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
 use lop::runtime::ArtifactDir;
 use std::time::Instant;
 
@@ -30,14 +31,15 @@ fn main() {
         .and_then(|a| a.parse().ok())
         .unwrap_or(200);
     let art = ArtifactDir::discover().expect("run `make artifacts`");
-    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let spec = NetSpec::paper_dcnn();
+    let model = Model::load(spec.clone(), &art.weights_path()).unwrap();
     let ds = Dataset::load(&art.dataset_path()).unwrap();
     // engine fallback when PJRT is unavailable (non-pjrt build)
     let runner = lop::runtime::runner_or_warn(art);
-    let mut ev = Evaluator::new(dcnn, runner, ds, n, 0);
+    let mut ev = Evaluator::new(model, runner, ds, n, 0);
 
     let base = ev
-        .accuracy(&NetConfig::uniform(ArithKind::Float32))
+        .accuracy(&ReprMap::uniform_for(&spec, ArithKind::Float32))
         .unwrap();
     println!("=== Table 3: accuracy of floating-point customized \
               computations (n = {n}, baseline {base:.4}) ===\n");
@@ -46,7 +48,7 @@ fn main() {
              "time");
     println!("{}", "-".repeat(88));
     for (row, paper) in ROWS.iter().zip(PAPER) {
-        let cfg = NetConfig::parse(row).unwrap();
+        let cfg = ReprMap::parse_for(&spec, row).unwrap();
         let t0 = Instant::now();
         let acc = ev.accuracy(&cfg).unwrap();
         println!("{:<46} {:>9.4} {:>8.2}% {:>10.2}% {:>8.1?}", row, acc,

@@ -199,10 +199,13 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
+        // incl. a non-default CFPU tuning width: name() must spell it
+        // out so the round-trip reconstructs the exact unit
         for s in ["float32", "FI(6, 8)", "H(6, 8, 12)", "FL(4, 9)",
-                  "I(5, 10)", "BinXNOR"] {
+                  "I(5, 10)", "I(4, 9, 2)", "BinXNOR"] {
             let k = ArithKind::parse(s).unwrap();
             assert_eq!(ArithKind::parse(&k.name()).unwrap(), k);
+            assert_eq!(k.name(), *s, "name() is canonical");
         }
     }
 

@@ -25,8 +25,17 @@ impl CfpuMul {
         CfpuMul { rep, w }
     }
 
+    /// Paper notation.  The tuning width is part of the name whenever
+    /// it differs from the paper's default of 3, so
+    /// `ArithKind::parse(name())` always reconstructs this exact unit
+    /// (the round-trip `rust/tests/config_roundtrip.rs` pins).
     pub fn name(&self) -> String {
-        format!("I({}, {})", self.rep.e_bits, self.rep.m_bits)
+        if self.w == 3 {
+            format!("I({}, {})", self.rep.e_bits, self.rep.m_bits)
+        } else {
+            format!("I({}, {}, {})", self.rep.e_bits, self.rep.m_bits,
+                    self.w)
+        }
     }
 
     /// Saturate/flush a positive product magnitude into the representation

@@ -3,13 +3,18 @@
 
 use super::toml::TomlDoc;
 use crate::coordinator::explorer::{ExploreOpts, Family};
-use crate::nn::network::NetConfig;
+use crate::nn::spec::{NetSpec, ReprMap};
 use std::time::Duration;
 
 /// `[serve]` section.
 #[derive(Clone, Debug)]
 pub struct ServeFileConfig {
-    pub configs: Vec<NetConfig>,
+    /// The served topology: `model = "paper_dcnn"` (default) or a
+    /// spec-grammar string like
+    /// `"28x28x1: dense(64)+relu | dense(10)"`.
+    pub spec: NetSpec,
+    /// Per-config assignments, parsed against `spec`'s arity.
+    pub configs: Vec<ReprMap>,
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_capacity: usize,
@@ -22,20 +27,47 @@ pub struct ServeFileConfig {
 
 impl ServeFileConfig {
     pub fn from_toml(doc: &TomlDoc) -> Result<ServeFileConfig, String> {
+        let spec = match doc.get_str("serve", "model") {
+            Some(m) => NetSpec::preset_or_parse(m)
+                .map_err(|e| format!("serve.model: {e}"))?,
+            None => NetSpec::paper_dcnn(),
+        };
         let configs = match doc.get("serve", "configs") {
             Some(v) => {
                 let arr = v.as_array().ok_or("serve.configs must be array")?;
                 arr.iter()
                     .map(|x| {
-                        NetConfig::parse(
+                        ReprMap::parse_for(
+                            &spec,
                             x.as_str().ok_or("config must be string")?,
                         )
                     })
                     .collect::<Result<Vec<_>, _>>()?
             }
-            None => vec![NetConfig::parse("float32").unwrap()],
+            None => vec![ReprMap::uniform_for(
+                &spec,
+                crate::approx::arith::ArithKind::Float32,
+            )],
         };
+        // Default the PJRT toggle from what the build can actually
+        // do: a crate compiled without the `pjrt` feature ships an
+        // API-compatible stub whose runner never starts, so defaulting
+        // to `true` there would plan a worker split around a backend
+        // that silently cannot exist.  An explicit `use_pjrt = true`
+        // on a stub build is honored (the server still falls back to
+        // the engine pool) but warned about loudly.
+        let use_pjrt = doc
+            .get_bool("serve", "use_pjrt")
+            .unwrap_or(cfg!(feature = "pjrt"));
+        if use_pjrt && !cfg!(feature = "pjrt") {
+            eprintln!(
+                "warning: [serve] use_pjrt = true, but this build has \
+                 no `pjrt` feature (stub runtime); every config will \
+                 be served by the engine workers"
+            );
+        }
         Ok(ServeFileConfig {
+            spec,
             configs,
             max_batch: doc.get_int("serve", "max_batch").unwrap_or(16)
                 as usize,
@@ -52,7 +84,7 @@ impl ServeFileConfig {
             plan_cache_mb: doc
                 .get_int("serve", "plan_cache_mb")
                 .unwrap_or(256) as usize,
-            use_pjrt: doc.get_bool("serve", "use_pjrt").unwrap_or(true),
+            use_pjrt,
         })
     }
 }
@@ -121,11 +153,41 @@ use_pjrt = false
         )
         .unwrap();
         let c = ServeFileConfig::from_toml(&doc).unwrap();
+        assert!(c.spec.is_paper_dcnn(), "model defaults to the paper");
         assert_eq!(c.configs.len(), 3);
+        assert_eq!(c.configs[0].len(), 4, "uniform broadcasts to 4");
         assert_eq!(c.max_batch, 32);
         assert_eq!(c.max_wait, Duration::from_micros(1_500));
         assert_eq!(c.plan_cache_mb, 64);
         assert!(!c.use_pjrt);
+    }
+
+    #[test]
+    fn serve_config_takes_a_model_spec() {
+        let doc = TomlDoc::parse(
+            r#"
+[serve]
+model = "28x28x1: dense(64)+relu | dense(32)+relu | dense(10)"
+configs = ["FI(6,8)", "FI(6,8)|FL(4,9)|H(6,8,12)"]
+"#,
+        )
+        .unwrap();
+        let c = ServeFileConfig::from_toml(&doc).unwrap();
+        assert!(!c.spec.is_paper_dcnn());
+        assert_eq!(c.spec.len(), 3);
+        assert_eq!(c.configs[0].len(), 3, "uniform broadcasts to 3");
+        assert_eq!(c.configs[1].kind(2).name(), "H(6, 8, 12)");
+        // arity mismatches are rejected with the layer counts
+        let bad = TomlDoc::parse(
+            r#"
+[serve]
+model = "28x28x1: dense(64)+relu | dense(10)"
+configs = ["FI(6,8)|FL(4,9)|H(6,8,12)"]
+"#,
+        )
+        .unwrap();
+        let e = ServeFileConfig::from_toml(&bad).unwrap_err();
+        assert!(e.contains("expected 1 or 2"), "{e}");
     }
 
     #[test]
@@ -157,7 +219,10 @@ second_pass = false
         let c = ServeFileConfig::from_toml(&doc).unwrap();
         assert_eq!(c.max_batch, 16);
         assert_eq!(c.plan_cache_mb, 256);
-        assert!(c.use_pjrt);
+        assert!(c.spec.is_paper_dcnn());
+        // the pjrt default tracks the build: stub builds must not
+        // plan for a worker that can never start
+        assert_eq!(c.use_pjrt, cfg!(feature = "pjrt"));
         let e = ExploreFileConfig::from_toml(&doc).unwrap();
         assert_eq!(e.subset, 500);
     }

@@ -1,9 +1,11 @@
 //! Accuracy evaluation with backend selection + memoization.
 //!
-//! Exact-arithmetic configs run on the PJRT fake-quant artifacts (fast,
-//! XLA-compiled); approximate-multiplier and mixed-family configs run on
-//! the bit-accurate Rust engine (the ground truth for approximate
-//! datapaths).  Results are memoized by configuration name — the §4.2
+//! Exact-arithmetic configs on the paper topology run on the PJRT
+//! fake-quant artifacts (fast, XLA-compiled); approximate-multiplier
+//! and mixed-family configs — and every non-paper `NetSpec`, which
+//! the AOT artifacts do not implement — run on the bit-accurate Rust
+//! engine (the ground truth for approximate datapaths).  Results are
+//! memoized by structural fingerprint — the §4.2
 //! explorer re-visits configurations constantly — and prepared engine
 //! networks come from a shared [`PlanCache`] (one `Arc<PreparedNet>`
 //! per config, single-flight prepare, LRU eviction by panel bytes), so
@@ -13,7 +15,8 @@
 
 use super::plan_cache::PlanCache;
 use crate::data::Dataset;
-use crate::nn::network::{Dcnn, NetConfig};
+use crate::nn::network::Model;
+use crate::nn::spec::{NetSpec, ReprMap};
 use crate::runtime::{execution_plan, ModelRunner};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -41,12 +44,12 @@ pub struct Evaluator {
 }
 
 impl Evaluator {
-    /// Stand-alone evaluator: wraps `dcnn` in its own default-capacity
-    /// [`PlanCache`].
-    pub fn new(dcnn: Dcnn, runner: Option<ModelRunner>, ds: Dataset,
+    /// Stand-alone evaluator: wraps `model` in its own
+    /// default-capacity [`PlanCache`].
+    pub fn new(model: Model, runner: Option<ModelRunner>, ds: Dataset,
                subset_n: usize, threads: usize) -> Evaluator {
         Evaluator::with_plan_cache(
-            Arc::new(PlanCache::new(Arc::new(dcnn))),
+            Arc::new(PlanCache::new(Arc::new(model))),
             runner,
             ds,
             subset_n,
@@ -73,17 +76,28 @@ impl Evaluator {
         }
     }
 
-    pub fn backend_for(&self, cfg: &NetConfig) -> Backend {
-        if execution_plan(cfg).is_pjrt() && self.runner.is_some() {
+    /// The topology this evaluator scores configurations against.
+    pub fn spec(&self) -> &NetSpec {
+        self.plans.model().spec()
+    }
+
+    pub fn backend_for(&self, cfg: &ReprMap) -> Backend {
+        // the AOT artifacts implement only the paper DCNN topology,
+        // so any other spec is engine-only regardless of the config
+        if execution_plan(cfg).is_pjrt()
+            && self.runner.is_some()
+            && self.spec().is_paper_dcnn()
+        {
             Backend::Pjrt
         } else {
             Backend::Engine
         }
     }
 
-    /// Accuracy of `cfg` on the evaluation subset (memoized).
-    pub fn accuracy(&mut self, cfg: &NetConfig) -> Result<f64> {
-        let key = cfg.name();
+    /// Accuracy of `cfg` on the evaluation subset (memoized by
+    /// structural fingerprint).
+    pub fn accuracy(&mut self, cfg: &ReprMap) -> Result<f64> {
+        let key = self.plans.key_of(cfg);
         if let Some(&a) = self.cache.get(&key) {
             return Ok(a);
         }
@@ -94,7 +108,7 @@ impl Evaluator {
     }
 
     /// Accuracy on an explicit index set (not memoized).
-    pub fn accuracy_on(&mut self, cfg: &NetConfig, idx: &[usize])
+    pub fn accuracy_on(&mut self, cfg: &ReprMap, idx: &[usize])
                        -> Result<f64> {
         let labels: Vec<usize> =
             idx.iter().map(|&i| self.ds.test.labels[i] as usize).collect();
@@ -124,7 +138,7 @@ impl Evaluator {
     }
 
     /// Full-test-set accuracy (used for final reporting).
-    pub fn accuracy_full(&mut self, cfg: &NetConfig) -> Result<f64> {
+    pub fn accuracy_full(&mut self, cfg: &ReprMap) -> Result<f64> {
         let idx: Vec<usize> = (0..self.ds.test.len()).collect();
         self.accuracy_on(cfg, &idx)
     }
@@ -154,7 +168,7 @@ impl Evaluator {
         &self.ds
     }
 
-    pub fn dcnn(&self) -> &Dcnn {
-        self.plans.dcnn()
+    pub fn model(&self) -> &Model {
+        self.plans.model()
     }
 }

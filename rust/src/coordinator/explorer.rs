@@ -20,7 +20,8 @@ use crate::approx::arith::ArithKind;
 use crate::approx::cfpu::CfpuMul;
 use crate::approx::drum::DrumMul;
 use crate::hw::datapath::{Datapath, ARRIA10, N_PE};
-use crate::nn::network::{LayerRanges, NetConfig};
+use crate::nn::network::LayerRanges;
+use crate::nn::spec::ReprMap;
 use crate::numeric::{FixedPoint, FloatRep};
 use anyhow::Result;
 
@@ -79,9 +80,9 @@ pub struct TraceEntry {
 #[derive(Clone, Debug)]
 pub struct ExploreResult {
     pub baseline: f64,
-    pub pass1: NetConfig,
+    pub pass1: ReprMap,
     pub pass1_accuracy: f64,
-    pub chosen: NetConfig,
+    pub chosen: ReprMap,
     pub accuracy: f64,
     pub evals: usize,
     pub trace: Vec<TraceEntry>,
@@ -149,17 +150,22 @@ fn part_cost(kind: &ArithKind) -> f64 {
     Datapath::synthesize(kind, N_PE).explore_cost(&ARRIA10)
 }
 
-/// Run the full §4.2 exploration.
+/// Run the full §4.2 exploration over however many parts the
+/// evaluator's topology has (one part per layer — `spec.len()`, the
+/// arity `ranges` must match).
 pub fn explore(ev: &mut Evaluator, ranges: &[LayerRanges],
                opts: &ExploreOpts) -> Result<ExploreResult> {
-    assert_eq!(ranges.len(), 4, "layer-wise partition of the Fig. 2 DCNN");
-    let baseline = ev.accuracy(&NetConfig::uniform(ArithKind::Float32))?;
+    let n_parts = ranges.len();
+    assert_eq!(n_parts, ev.spec().len(),
+               "one WBA range per layer-wise partition part");
+    let f32_uniform = ReprMap::uniform(ArithKind::Float32, n_parts);
+    let baseline = ev.accuracy(&f32_uniform)?;
     let floor = baseline * (1.0 - opts.accuracy_bound);
     let mut trace = Vec::new();
 
     // ---------- pass 1: cost-min subject to accuracy ----------
-    let mut cfg = NetConfig::uniform(ArithKind::Float32);
-    for part in 0..4 {
+    let mut cfg = f32_uniform;
+    for part in 0..n_parts {
         let mag = {
             let c = ranges[part].combined();
             (c.0.abs()).max(c.1.abs()) as f64
@@ -168,8 +174,8 @@ pub fn explore(ev: &mut Evaluator, ranges: &[LayerRanges],
         let mut best: Option<(f64, ArithKind, f64)> = None; // (cost, k, acc)
         let mut fallback: Option<(f64, ArithKind, f64)> = None; // max acc
         for cand in cands {
-            let mut trial = cfg;
-            trial.layers[part] = cand;
+            let mut trial = cfg.clone();
+            trial.set(part, cand);
             let acc = ev.accuracy(&trial)?;
             let cost = part_cost(&cand);
             let feasible = acc >= floor;
@@ -196,7 +202,7 @@ pub fn explore(ev: &mut Evaluator, ranges: &[LayerRanges],
             }
         }
         let (_, chosen_kind, _) = best.or(fallback).expect("no candidates");
-        cfg.layers[part] = chosen_kind;
+        cfg.set(part, chosen_kind);
         let name = chosen_kind.name();
         if let Some(t) = trace
             .iter_mut()
@@ -210,14 +216,14 @@ pub fn explore(ev: &mut Evaluator, ranges: &[LayerRanges],
     let pass1_accuracy = ev.accuracy(&pass1)?;
 
     // ---------- pass 2: quality recovery under bounded cost ----------
-    let mut chosen = pass1;
+    let mut chosen = pass1.clone();
     if opts.second_pass {
-        for part in 0..4 {
+        for part in 0..n_parts {
             let mut best_acc = ev.accuracy(&chosen)?;
-            let mut best_kind = chosen.layers[part];
-            for cand in widen_by_one(&chosen.layers[part]) {
-                let mut trial = chosen;
-                trial.layers[part] = cand;
+            let mut best_kind = *chosen.kind(part);
+            for cand in widen_by_one(chosen.kind(part)) {
+                let mut trial = chosen.clone();
+                trial.set(part, cand);
                 let acc = ev.accuracy(&trial)?;
                 trace.push(TraceEntry {
                     part,
@@ -233,7 +239,7 @@ pub fn explore(ev: &mut Evaluator, ranges: &[LayerRanges],
                     best_kind = cand;
                 }
             }
-            chosen.layers[part] = best_kind;
+            chosen.set(part, best_kind);
         }
     }
     let accuracy = ev.accuracy(&chosen)?;

@@ -24,7 +24,7 @@ pub struct Metrics {
     /// Plan-cache gets served from a resident prepared net (gauge,
     /// mirrored from the cache's own counters).
     pub plan_hits: AtomicU64,
-    /// Plan-cache gets that prepared a network (== `Dcnn::prepare`
+    /// Plan-cache gets that prepared a network (== `Model::prepare`
     /// runs across the whole worker pool; gauge).
     pub plan_misses: AtomicU64,
     /// Prepared nets dropped by the plan cache's byte cap (gauge).

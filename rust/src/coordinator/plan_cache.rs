@@ -7,7 +7,7 @@
 //! `configs`:
 //!
 //! * **Single-flight preparation** — the first requester of a config
-//!   quantizes + prepacks it (`Dcnn::prepare`); concurrent requesters
+//!   quantizes + prepacks it (`Model::prepare`); concurrent requesters
 //!   for the *same* config block on that in-flight entry instead of
 //!   duplicating the work, then share the finished `Arc`.
 //! * **LRU eviction by panel bytes** — residency is bounded by the
@@ -23,19 +23,22 @@
 //!   gauges by the engine workers.
 //!
 //! Sharing is sound because `PreparedNet` is immutable after
-//! `Dcnn::prepare` (`Send + Sync`, pinned in `nn::network` tests) and
+//! `Model::prepare` (`Send + Sync`, pinned in `nn::network` tests) and
 //! the `PackedWeights` identity guards from PR 3 make cross-kind panel
 //! confusion a panic, not a wrong answer.  The cache key is the
-//! canonical configuration name (`NetConfig::name`), which is an
-//! injective fingerprint: it spells out every layer's provider and
-//! width parameters.
+//! **structural fingerprint** `NetSpec::fingerprint(&ReprMap)` — the
+//! canonical spec-grammar string plus every layer's full provider
+//! name — which is injective over (topology, assignment), so two
+//! different topologies served from one process can never collide on
+//! a config name the way the old name-string key could.
 //!
 //! `rust/tests/plan_cache.rs` pins single-flight under contention (one
 //! `weight_pack_count_global` increment per layer), the byte cap, the
 //! bit-identity of evicted-then-refetched configs, and the
 //! worker-count invariance of the prepare count.
 
-use crate::nn::network::{Dcnn, NetConfig, PreparedNet};
+use crate::nn::network::{Model, PreparedNet};
+use crate::nn::spec::ReprMap;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -57,7 +60,7 @@ struct Resident {
 }
 
 enum Slot {
-    /// A thread is inside `Dcnn::prepare` for this config; waiters
+    /// A thread is inside `Model::prepare` for this config; waiters
     /// block on the condvar until the slot becomes `Ready` (or is
     /// cleared because the preparer panicked, in which case one waiter
     /// takes over).
@@ -88,7 +91,7 @@ pub struct PlanCacheStats {
     /// `get` calls that blocked at least once on another thread's
     /// in-flight preparation (each counted once).
     pub inflight_waits: u64,
-    /// Total `Dcnn::prepare` runs — equals `misses`; kept separate so
+    /// Total `Model::prepare` runs — equals `misses`; kept separate so
     /// the acceptance invariant ("prepare count is independent of
     /// worker count") reads off one field.
     pub prepares: u64,
@@ -103,7 +106,7 @@ pub struct PlanCacheStats {
 /// Concurrent, capacity-bounded map from configuration fingerprint to
 /// `Arc<PreparedNet>`.  See the module docs for the full contract.
 pub struct PlanCache {
-    dcnn: Arc<Dcnn>,
+    model: Arc<Model>,
     capacity_bytes: usize,
     inner: Mutex<Inner>,
     ready: Condvar,
@@ -119,7 +122,7 @@ pub struct PlanCache {
     resident_bytes_gauge: AtomicU64,
 }
 
-/// Clears the in-flight marker if `Dcnn::prepare` panics, so waiters
+/// Clears the in-flight marker if `Model::prepare` panics, so waiters
 /// retry (one of them becomes the new preparer) instead of blocking
 /// forever.  Disarmed on the success path.
 struct ClearOnPanic<'a> {
@@ -146,17 +149,17 @@ impl Drop for ClearOnPanic<'_> {
 }
 
 impl PlanCache {
-    /// Cache over `dcnn` with the default byte capacity.
-    pub fn new(dcnn: Arc<Dcnn>) -> PlanCache {
-        PlanCache::with_capacity(dcnn, DEFAULT_CAPACITY_BYTES)
+    /// Cache over `model` with the default byte capacity.
+    pub fn new(model: Arc<Model>) -> PlanCache {
+        PlanCache::with_capacity(model, DEFAULT_CAPACITY_BYTES)
     }
 
-    /// Cache over `dcnn` bounded to `capacity_bytes` of resident
+    /// Cache over `model` bounded to `capacity_bytes` of resident
     /// prepacked panels (soft by at most the most recent network).
-    pub fn with_capacity(dcnn: Arc<Dcnn>, capacity_bytes: usize)
+    pub fn with_capacity(model: Arc<Model>, capacity_bytes: usize)
                          -> PlanCache {
         PlanCache {
-            dcnn,
+            model,
             capacity_bytes,
             inner: Mutex::new(Inner {
                 slots: HashMap::new(),
@@ -174,9 +177,16 @@ impl PlanCache {
         }
     }
 
+    /// The cache key for `cfg`: the structural fingerprint of this
+    /// cache's model topology plus the per-layer assignment.
+    /// Panics when `cfg`'s arity does not match the model's spec.
+    pub fn key_of(&self, cfg: &ReprMap) -> String {
+        self.model.spec().fingerprint(cfg)
+    }
+
     /// The prepared network for `cfg` — cached, or prepared exactly
     /// once no matter how many workers ask concurrently.
-    pub fn get(&self, cfg: &NetConfig) -> Arc<PreparedNet> {
+    pub fn get(&self, cfg: &ReprMap) -> Arc<PreparedNet> {
         self.get_noting_miss(cfg).0
     }
 
@@ -185,9 +195,9 @@ impl PlanCache {
     /// miss (the insert plus any evictions it triggers), so hot
     /// callers — the engine worker batch loop — can skip re-locking
     /// the cache for a metrics snapshot on pure hits.
-    pub fn get_noting_miss(&self, cfg: &NetConfig)
+    pub fn get_noting_miss(&self, cfg: &ReprMap)
                            -> (Arc<PreparedNet>, bool) {
-        let key = cfg.name();
+        let key = self.key_of(cfg);
         let mut waited = false;
         let mut g = self.inner.lock().unwrap();
         loop {
@@ -221,11 +231,11 @@ impl PlanCache {
 
     /// Prepare `cfg` outside the lock, publish it, evict LRU entries
     /// beyond the byte capacity, wake waiters.
-    fn prepare_slot(&self, key: &str, cfg: &NetConfig)
+    fn prepare_slot(&self, key: &str, cfg: &ReprMap)
                     -> Arc<PreparedNet> {
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut guard = ClearOnPanic { cache: self, key, armed: true };
-        let net = Arc::new(self.dcnn.prepare(*cfg));
+        let net = Arc::new(self.model.prepare(cfg));
         guard.armed = false;
         let (panels, bytes) = net.packed_panel_stats();
         let mut g = self.inner.lock().unwrap();
@@ -341,16 +351,16 @@ impl PlanCache {
     }
 
     /// Whether `cfg` is resident right now (does not touch LRU order).
-    pub fn contains(&self, cfg: &NetConfig) -> bool {
+    pub fn contains(&self, cfg: &ReprMap) -> bool {
         matches!(
-            self.inner.lock().unwrap().slots.get(&cfg.name()),
+            self.inner.lock().unwrap().slots.get(&self.key_of(cfg)),
             Some(Slot::Ready(_))
         )
     }
 
     /// The trained network this cache prepares from.
-    pub fn dcnn(&self) -> &Dcnn {
-        &self.dcnn
+    pub fn model(&self) -> &Model {
+        &self.model
     }
 
     /// The configured residency bound in bytes.
@@ -362,14 +372,19 @@ impl PlanCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::spec::NetSpec;
 
-    fn cfg(s: &str) -> NetConfig {
-        NetConfig::parse(s).unwrap()
+    fn cfg(s: &str) -> ReprMap {
+        ReprMap::parse_for(&NetSpec::paper_dcnn(), s).unwrap()
+    }
+
+    fn paper(seed: u64) -> Arc<Model> {
+        Arc::new(Model::synthetic(NetSpec::paper_dcnn(), seed))
     }
 
     #[test]
     fn hit_after_miss_shares_one_arc() {
-        let cache = PlanCache::new(Arc::new(Dcnn::synthetic(1)));
+        let cache = PlanCache::new(paper(1));
         let c = cfg("FI(6,8)");
         let (a, missed) = cache.get_noting_miss(&c);
         assert!(missed, "first get prepares");
@@ -386,7 +401,7 @@ mod tests {
 
     #[test]
     fn distinct_configs_prepare_separately() {
-        let cache = PlanCache::new(Arc::new(Dcnn::synthetic(2)));
+        let cache = PlanCache::new(paper(2));
         let a = cache.get(&cfg("FI(6,8)"));
         let b = cache.get(&cfg("FI(5,8)"));
         assert!(!Arc::ptr_eq(&a, &b));
@@ -399,7 +414,7 @@ mod tests {
     fn zero_capacity_keeps_only_the_latest() {
         // cap 0: every insertion evicts everything else, but the
         // just-prepared network itself always stays (soft bound).
-        let cache = PlanCache::with_capacity(Arc::new(Dcnn::synthetic(3)), 0);
+        let cache = PlanCache::with_capacity(paper(3), 0);
         cache.get(&cfg("FI(6,8)"));
         assert_eq!(cache.stats().resident_configs, 1);
         cache.get(&cfg("FI(5,8)"));
@@ -416,7 +431,7 @@ mod tests {
 
     #[test]
     fn refetch_after_eviction_reprepares() {
-        let cache = PlanCache::with_capacity(Arc::new(Dcnn::synthetic(4)), 0);
+        let cache = PlanCache::with_capacity(paper(4), 0);
         let a = cache.get(&cfg("FI(6,8)"));
         cache.get(&cfg("binxnor")); // evicts FI(6,8)
         let b = cache.get(&cfg("FI(6,8)")); // must re-prepare

@@ -4,18 +4,19 @@
 //! the range-determined BCI lower bounds from them.
 
 use crate::data::Dataset;
-use crate::nn::network::{Dcnn, LayerRanges};
+use crate::nn::network::{LayerRanges, Model};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::path::Path;
 
-/// Profile WBA ranges over the first `n` training images.
-pub fn profile_ranges(dcnn: &Dcnn, ds: &Dataset, n: usize,
+/// Profile WBA ranges over the first `n` training images — one entry
+/// per layer of the model's spec, whatever its depth.
+pub fn profile_ranges(model: &Model, ds: &Dataset, n: usize,
                       threads: usize) -> Vec<LayerRanges> {
     let n = n.min(ds.train.len()).max(1);
     let idx: Vec<usize> = (0..n).collect();
     let x = ds.batch(&ds.train, &idx);
-    dcnn.ranges(&x, threads)
+    model.ranges(&x, threads)
 }
 
 /// Integral bits needed to represent |v| <= `mag` in sign-magnitude
@@ -69,7 +70,7 @@ pub fn compare_with_python(ranges: &[LayerRanges], json_path: &Path)
     let mut worst = 0f64;
     for r in ranges {
         let lr = j
-            .get(r.layer)
+            .get(&r.layer)
             .and_then(|l| l.get("range"))
             .and_then(Json::as_arr)
             .with_context(|| format!("ranges.json missing {}", r.layer))?;

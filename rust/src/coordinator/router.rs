@@ -4,14 +4,17 @@
 
 use super::batcher::{BatchQueue, Request, Response};
 use super::metrics::Metrics;
-use crate::nn::network::NetConfig;
+use crate::nn::spec::ReprMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
 
 pub struct Router {
-    pub configs: Vec<NetConfig>,
+    pub configs: Vec<ReprMap>,
+    /// Flattened image length every request must match
+    /// (`NetSpec::input_len` of the served model).
+    input_len: usize,
     queue: Arc<BatchQueue>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
@@ -20,13 +23,23 @@ pub struct Router {
 #[derive(Debug, PartialEq, Eq)]
 pub enum SubmitError {
     UnknownConfig,
+    /// The image length does not match the served model's input
+    /// shape (`h * w * c`).
+    BadInput,
     Overloaded,
 }
 
 impl Router {
-    pub fn new(configs: Vec<NetConfig>, queue: Arc<BatchQueue>,
-               metrics: Arc<Metrics>) -> Router {
-        Router { configs, queue, metrics, next_id: AtomicU64::new(0) }
+    pub fn new(configs: Vec<ReprMap>, input_len: usize,
+               queue: Arc<BatchQueue>, metrics: Arc<Metrics>)
+               -> Router {
+        Router {
+            configs,
+            input_len,
+            queue,
+            metrics,
+            next_id: AtomicU64::new(0),
+        }
     }
 
     pub fn config_id(&self, name: &str) -> Option<usize> {
@@ -40,7 +53,9 @@ impl Router {
         if config_id >= self.configs.len() {
             return Err(SubmitError::UnknownConfig);
         }
-        debug_assert_eq!(image.len(), 784);
+        if image.len() != self.input_len {
+            return Err(SubmitError::BadInput);
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request {
             id,
@@ -72,12 +87,13 @@ mod tests {
 
     fn mk_router(cap: usize) -> (Router, Arc<BatchQueue>) {
         let configs = vec![
-            NetConfig::uniform(ArithKind::Float32),
-            NetConfig::parse("FI(6,8)").unwrap(),
+            ReprMap::uniform(ArithKind::Float32, 4),
+            ReprMap::parse_n("FI(6,8)", 4).unwrap(),
         ];
         let q = Arc::new(BatchQueue::new(configs.len(), 8,
                                          Duration::from_millis(10), cap));
-        let r = Router::new(configs, q.clone(), Arc::new(Metrics::new()));
+        let r = Router::new(configs, 784, q.clone(),
+                            Arc::new(Metrics::new()));
         (r, q)
     }
 
@@ -98,6 +114,15 @@ mod tests {
         let (tx, _rx) = channel();
         assert_eq!(r.submit(9, vec![0.0; 784], tx),
                    Err(SubmitError::UnknownConfig));
+    }
+
+    #[test]
+    fn wrong_image_length_rejected() {
+        let (r, q) = mk_router(100);
+        let (tx, _rx) = channel();
+        assert_eq!(r.submit(0, vec![0.0; 100], tx),
+                   Err(SubmitError::BadInput));
+        assert_eq!(q.depth(0), 0, "rejected request must not enqueue");
     }
 
     #[test]

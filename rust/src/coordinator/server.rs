@@ -18,17 +18,20 @@ use super::batcher::{BatchQueue, Request, Response};
 use super::metrics::Metrics;
 use super::plan_cache::PlanCache;
 use super::router::Router;
-use crate::nn::network::{Dcnn, NetConfig};
+use crate::nn::network::Model;
+use crate::nn::spec::{NetSpec, ReprMap};
 use crate::nn::tensor::Tensor;
 use crate::runtime::{execution_plan, ArtifactDir, ModelRunner};
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
 pub struct ServerOpts {
-    pub configs: Vec<NetConfig>,
+    /// One entry per served configuration; every entry's arity must
+    /// match the model's spec (checked at startup).
+    pub configs: Vec<ReprMap>,
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_capacity: usize,
@@ -43,8 +46,11 @@ pub struct ServerOpts {
 impl Default for ServerOpts {
     fn default() -> Self {
         ServerOpts {
-            configs: vec![NetConfig::uniform(
+            // the paper preset's arity; servers over other specs set
+            // their own configs (parsed via `ReprMap::parse_for`)
+            configs: vec![ReprMap::uniform(
                 crate::approx::arith::ArithKind::Float32,
+                NetSpec::paper_dcnn().len(),
             )],
             max_batch: 16,
             max_wait: Duration::from_millis(2),
@@ -53,7 +59,9 @@ impl Default for ServerOpts {
             engine_gemm_threads: 1,
             plan_cache_bytes:
                 super::plan_cache::DEFAULT_CAPACITY_BYTES,
-            use_pjrt: true,
+            // a stub build can never start the PJRT worker, so do not
+            // plan for one unless the feature is compiled in
+            use_pjrt: cfg!(feature = "pjrt"),
         }
     }
 }
@@ -69,22 +77,38 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start over the artifact directory's trained weights (the
-    /// production entry point; needs `make artifacts`).
+    /// Start over the artifact directory's trained weights — the
+    /// production entry point for the paper topology (needs `make
+    /// artifacts`; the artifacts implement `NetSpec::paper_dcnn`).
     pub fn start(opts: ServerOpts) -> Result<Server> {
         let art = ArtifactDir::discover()?;
-        let dcnn = Arc::new(
-            Dcnn::load(&art.weights_path()).context("loading weights")?,
+        let model = Arc::new(
+            Model::load(NetSpec::paper_dcnn(), &art.weights_path())
+                .context("loading weights")?,
         );
-        Server::start_with_dcnn(opts, dcnn, Some(art))
+        Server::start_with_model(opts, model, Some(art))
     }
 
-    /// Start over an in-memory network — the hermetic entry point for
-    /// benches and tests that have no artifact directory.  With
-    /// `art: None` the PJRT worker cannot start (it reads AOT
-    /// artifacts), so every configuration routes to the engine pool.
-    pub fn start_with_dcnn(opts: ServerOpts, dcnn: Arc<Dcnn>,
-                           art: Option<ArtifactDir>) -> Result<Server> {
+    /// Start over an in-memory model of *any* topology — the hermetic
+    /// entry point for benches and tests that have no artifact
+    /// directory (`rust/tests/netspec_topology.rs` serves a 5-layer
+    /// MLP and a 2-conv net through here).  With `art: None` the PJRT
+    /// worker cannot start (it reads AOT artifacts), so every
+    /// configuration routes to the engine pool.
+    pub fn start_with_model(opts: ServerOpts, model: Arc<Model>,
+                            art: Option<ArtifactDir>)
+                            -> Result<Server> {
+        for c in &opts.configs {
+            ensure!(
+                c.len() == model.spec().len(),
+                "config '{}' has {} layers for the {}-layer spec '{}'",
+                c.name(),
+                c.len(),
+                model.spec().len(),
+                model.spec()
+            );
+        }
+        let in_shape = model.spec().input_shape();
         let metrics = Arc::new(Metrics::new());
         let queue = Arc::new(BatchQueue::new(
             opts.configs.len(),
@@ -94,20 +118,24 @@ impl Server {
         ));
         let router = Arc::new(Router::new(
             opts.configs.clone(),
+            model.spec().input_len(),
             queue.clone(),
             metrics.clone(),
         ));
         let plan_cache = Arc::new(PlanCache::with_capacity(
-            dcnn,
+            model.clone(),
             opts.plan_cache_bytes,
         ));
 
         // Without the `pjrt` feature (or without artifacts) the
-        // ModelRunner can never start, so route everything to the
-        // engine workers instead of assigning configs to a worker that
-        // dies at startup.
-        let pjrt_available =
-            cfg!(feature = "pjrt") && opts.use_pjrt && art.is_some();
+        // ModelRunner can never start, and the AOT artifacts only
+        // implement the paper DCNN topology — so in all three cases
+        // route everything to the engine workers instead of assigning
+        // configs to a worker that dies at startup.
+        let pjrt_available = cfg!(feature = "pjrt")
+            && opts.use_pjrt
+            && art.is_some()
+            && model.spec().is_paper_dcnn();
         let pjrt_mask: Vec<bool> = opts
             .configs
             .iter()
@@ -126,7 +154,8 @@ impl Server {
             let cache = plan_cache.clone();
             let threads = opts.engine_gemm_threads;
             workers.push(std::thread::spawn(move || {
-                pjrt_worker(art, cache, cfgs, q, m, pjrt_mask, threads);
+                pjrt_worker(art, cache, cfgs, q, m, pjrt_mask, threads,
+                            in_shape);
             }));
         }
         if engine_mask.iter().any(|&b| b) || !opts.use_pjrt {
@@ -138,7 +167,8 @@ impl Server {
                 let mask = engine_mask.clone();
                 let threads = opts.engine_gemm_threads;
                 workers.push(std::thread::spawn(move || {
-                    engine_worker(cache, cfgs, q, m, mask, threads);
+                    engine_worker(cache, cfgs, q, m, mask, threads,
+                                  in_shape);
                 }));
             }
         }
@@ -190,18 +220,22 @@ fn respond(batch: Vec<Request>, preds: &[usize], metrics: &Metrics) {
     }
 }
 
-fn batch_tensor(batch: &[Request]) -> Tensor {
-    let mut data = Vec::with_capacity(batch.len() * 784);
+/// Stack a batch's flattened images into `[b, h, w, c]` per the
+/// model spec's input shape (the router already validated each
+/// image's length).
+fn batch_tensor(batch: &[Request], in_shape: [usize; 3]) -> Tensor {
+    let [h, w, c] = in_shape;
+    let mut data = Vec::with_capacity(batch.len() * h * w * c);
     for r in batch {
         data.extend_from_slice(&r.image);
     }
-    Tensor::new(vec![batch.len(), 28, 28, 1], data)
+    Tensor::new(vec![batch.len(), h, w, c], data)
 }
 
 fn pjrt_worker(art: ArtifactDir, cache: Arc<PlanCache>,
-               configs: Vec<NetConfig>, queue: Arc<BatchQueue>,
+               configs: Vec<ReprMap>, queue: Arc<BatchQueue>,
                metrics: Arc<Metrics>, mask: Vec<bool>,
-               engine_threads: usize) {
+               engine_threads: usize, in_shape: [usize; 3]) {
     let mut runner = match ModelRunner::new(art) {
         Ok(r) => r,
         Err(e) => {
@@ -214,12 +248,12 @@ fn pjrt_worker(art: ArtifactDir, cache: Arc<PlanCache>,
             eprintln!("pjrt worker failed to start: {e:#}; \
                        serving its configs on the engine backend");
             engine_worker(cache, configs, queue, metrics, mask,
-                          engine_threads);
+                          engine_threads, in_shape);
             return;
         }
     };
     while let Some((ci, batch)) = queue.next_batch(&mask) {
-        let x = batch_tensor(&batch);
+        let x = batch_tensor(&batch, in_shape);
         match runner.forward(&configs[ci], &x) {
             Ok(logits) => {
                 metrics.record_batch(batch.len());
@@ -234,9 +268,10 @@ fn pjrt_worker(art: ArtifactDir, cache: Arc<PlanCache>,
     }
 }
 
-fn engine_worker(cache: Arc<PlanCache>, configs: Vec<NetConfig>,
+fn engine_worker(cache: Arc<PlanCache>, configs: Vec<ReprMap>,
                  queue: Arc<BatchQueue>, metrics: Arc<Metrics>,
-                 mask: Vec<bool>, threads: usize) {
+                 mask: Vec<bool>, threads: usize,
+                 in_shape: [usize; 3]) {
     while let Some((ci, batch)) = queue.next_batch(&mask) {
         // One shared Arc<PreparedNet> per config across the whole
         // pool: the first batch anywhere prepares it (single-flight),
@@ -254,7 +289,7 @@ fn engine_worker(cache: Arc<PlanCache>, configs: Vec<NetConfig>,
         metrics.set_plan_cache(h, m, e);
         let (panels, bytes) = cache.resident_gauges();
         metrics.set_panels(panels, bytes);
-        let x = batch_tensor(&batch);
+        let x = batch_tensor(&batch, in_shape);
         let preds = net.predict(&x, threads);
         metrics.record_batch(batch.len());
         respond(batch, &preds, &metrics);
@@ -263,9 +298,10 @@ fn engine_worker(cache: Arc<PlanCache>, configs: Vec<NetConfig>,
 
 #[cfg(test)]
 mod tests {
-    // Server integration tests live in rust/tests/serving.rs (they need
-    // artifacts) and rust/tests/plan_cache.rs (hermetic, over a
-    // synthetic Dcnn via `Server::start_with_dcnn`); unit coverage for
-    // the queue/router/metrics/plan-cache pieces is in their own
-    // modules.
+    // Server integration tests live in rust/tests/serving.rs (they
+    // need artifacts), rust/tests/plan_cache.rs (hermetic, over a
+    // synthetic paper-spec Model via `Server::start_with_model`) and
+    // rust/tests/netspec_topology.rs (hermetic, non-paper specs);
+    // unit coverage for the queue/router/metrics/plan-cache pieces is
+    // in their own modules.
 }

@@ -14,8 +14,11 @@
 //! * [`approx`] — approximate arithmetic units (DRUM, CFPU, Mitchell,
 //!   SSM, truncated multipliers, LOA adders) and the [`approx::ArithKind`]
 //!   provider that pairs a representation with a multiplier;
-//! * [`nn`] — the bit-accurate DCNN engine whose packed, cache-tiled
-//!   GEMM kernels ([`nn::gemm::gemm`], selected per layer through
+//! * [`nn`] — the bit-accurate engine over arbitrary
+//!   [`nn::spec::NetSpec`] topologies (the paper's DCNN is the
+//!   [`nn::spec::NetSpec::paper_dcnn`] preset; [`nn::spec::ReprMap`]
+//!   assigns one provider per layer), whose packed, cache-tiled GEMM
+//!   kernels ([`nn::gemm::gemm`], selected per layer through
 //!   [`nn::gemm::GemmPlan`]) are monomorphized per provider;
 //! * [`hw`] — the analytical hardware cost model (Table 5 substitute for
 //!   Quartus synthesis);

@@ -20,7 +20,8 @@ use lop::data::{synth, Dataset};
 use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
 use lop::hw::report::{format_table, hw_report, table5_kinds};
 use lop::hw::rtl::datapath_verilog;
-use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
 use lop::runtime::ArtifactDir;
 use lop::util::prng::Rng;
 
@@ -43,11 +44,14 @@ COMMANDS
             [--no-second-pass] [--trace] [--config-file F]  §4.2 DSE
   serve     [--requests 2000] [--rate 500] [--configs \"a;b\"]
             [--max-batch 16] [--max-wait-ms 2] [--engine-workers 2]
-            [--no-pjrt] [--config-file F]          serving benchmark
+            [--no-pjrt] [--config-file F] [--model M]  serving benchmark
   help                        this message
 
 Config syntax: float32 | FI(i,f) | FL(e,m) | H(i,f,t) | I(e,m[,w]) |
-binxnor — uniform, or 'a|b|c|d' for per-layer (CONV1|CONV2|FC1|FC2).";
+binxnor — uniform, or 'a|b|...' with one segment per model layer.
+Model syntax (--model / [serve] model): 'paper_dcnn' or a NetSpec
+string like '28x28x1: conv(5x5,32,pad=2)+relu+pool | dense(10)'
+(non-paper models serve deterministic synthetic weights).";
 
 fn main() {
     let args = Args::from_env();
@@ -80,16 +84,24 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-fn load_all() -> Result<(ArtifactDir, Dcnn, Dataset)> {
+fn load_all() -> Result<(ArtifactDir, Model, Dataset)> {
     let art = ArtifactDir::discover()?;
-    let dcnn = Dcnn::load(&art.weights_path())?;
+    let model = Model::load(NetSpec::paper_dcnn(),
+                            &art.weights_path())?;
     let ds = Dataset::load(&art.dataset_path())?;
-    Ok((art, dcnn, ds))
+    Ok((art, model, ds))
+}
+
+/// Parse a config string against the paper spec (the topology every
+/// artifact-backed command evaluates).
+fn paper_cfg(s: &str) -> Result<ReprMap> {
+    ReprMap::parse_for(&NetSpec::paper_dcnn(), s)
+        .map_err(|e| anyhow::anyhow!(e))
 }
 
 fn evaluator(subset: usize, threads: usize, use_pjrt: bool)
              -> Result<Evaluator> {
-    let (art, dcnn, ds) = load_all()?;
+    let (art, model, ds) = load_all()?;
     let runner = if use_pjrt {
         // falls back to the bit-accurate engine when PJRT cannot start
         // (e.g. a build without the `pjrt` feature)
@@ -97,27 +109,35 @@ fn evaluator(subset: usize, threads: usize, use_pjrt: bool)
     } else {
         None
     };
-    Ok(Evaluator::new(dcnn, runner, ds, subset, threads))
+    Ok(Evaluator::new(model, runner, ds, subset, threads))
 }
 
 // ---------------------------------------------------------------------------
 
 fn cmd_summary() -> Result<()> {
+    // rendered from the NetSpec preset, not hardcoded — `summary`
+    // prints whatever the spec says, so it cannot drift from the code
+    let spec = NetSpec::paper_dcnn();
     println!("DCNN architecture (paper Fig. 2):");
-    println!("{:<8} {:>18} {:>8} {:>12} {:>14}", "layer", "weights",
-             "padding", "activation", "output");
-    println!("{}", "-".repeat(66));
-    println!("{:<8} {:>18} {:>8} {:>12} {:>14}", "CONV1", "5x5x1x32", "2",
-             "ReLU+pool", "[B,14,14,32]");
-    println!("{:<8} {:>18} {:>8} {:>12} {:>14}", "CONV2", "5x5x32x64",
-             "2", "ReLU+pool", "[B,7,7,64]");
-    println!("{:<8} {:>18} {:>8} {:>12} {:>14}", "FC1", "3136x1024", "-",
-             "ReLU", "[B,1024]");
-    println!("{:<8} {:>18} {:>8} {:>12} {:>14}", "FC2", "1024x10", "-",
-             "-", "[B,10]");
-    let params = 5 * 5 * 32 + 32 + 5 * 5 * 32 * 64 + 64
-        + 3136 * 1024 + 1024 + 1024 * 10 + 10;
-    println!("total parameters: {params}");
+    println!("spec: {spec}");
+    println!();
+    println!("{:<8} {:>18} {:>14}", "layer", "weights", "output");
+    println!("{}", "-".repeat(44));
+    for (l, out) in spec.layers().iter().zip(spec.output_shapes()) {
+        let (wshape, _) = l.param_shapes();
+        let wtxt = wshape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        let otxt = out
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        println!("{:<8} {:>18} {:>14}", l.name, wtxt, format!("[B,{otxt}]"));
+    }
+    println!("total parameters: {}", spec.param_count());
     if let Ok(art) = ArtifactDir::discover() {
         println!("trained float32 baseline accuracy: {:.4}",
                  art.baseline_accuracy);
@@ -126,9 +146,9 @@ fn cmd_summary() -> Result<()> {
 }
 
 fn cmd_ranges(args: &Args) -> Result<()> {
-    let (art, dcnn, ds) = load_all()?;
+    let (art, model, ds) = load_all()?;
     let n = args.usize("n", 2_000);
-    let r = profile_ranges(&dcnn, &ds, n, 0);
+    let r = profile_ranges(&model, &ds, n, 0);
     println!("Table 1 — value ranges of weights/biases/activations");
     println!("(profiled over {n} training images)\n");
     print!("{}", format_table1(&r));
@@ -143,17 +163,18 @@ fn cmd_ranges(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let cfg = NetConfig::parse(
-        args.opt_str("config").context("--config required")?,
-    )
-    .map_err(|e| anyhow::anyhow!(e))?;
+    let cfg =
+        paper_cfg(args.opt_str("config").context("--config required")?)?;
     let n = args.usize("n", 2_000);
     let threads = args.usize("threads", 0);
     let use_pjrt = !args.switch("engine");
     let mut ev = evaluator(n, threads, use_pjrt)?;
     let t0 = Instant::now();
     let acc = ev.accuracy(&cfg)?;
-    let base = ev.accuracy(&NetConfig::uniform(ArithKind::Float32))?;
+    let base = ev.accuracy(&ReprMap::uniform_for(
+        &NetSpec::paper_dcnn(),
+        ArithKind::Float32,
+    ))?;
     println!("config       : {}", cfg.name());
     println!("backend      : {:?}", ev.backend_for(&cfg));
     println!("images       : {}", ev.subset.len());
@@ -195,7 +216,10 @@ fn cmd_table(args: &Args, float_table: bool) -> Result<()> {
     let n = args.usize("n", 2_000);
     let threads = args.usize("threads", 0);
     let mut ev = evaluator(n, threads, true)?;
-    let base = ev.accuracy(&NetConfig::uniform(ArithKind::Float32))?;
+    let base = ev.accuracy(&ReprMap::uniform_for(
+        &NetSpec::paper_dcnn(),
+        ArithKind::Float32,
+    ))?;
     println!("{no} — classification accuracy, {what} configurations");
     println!("(n = {} test images, float32 baseline = {base:.4})\n",
              ev.subset.len());
@@ -203,7 +227,7 @@ fn cmd_table(args: &Args, float_table: bool) -> Result<()> {
              "accuracy", "relative");
     println!("{}", "-".repeat(70));
     for row in rows {
-        let cfg = NetConfig::parse(row).map_err(|e| anyhow::anyhow!(e))?;
+        let cfg = paper_cfg(row)?;
         let t0 = Instant::now();
         let acc = ev.accuracy(&cfg)?;
         println!("{:<48} {:>9.4} {:>9.2}%   ({:.1?})", row, acc,
@@ -278,8 +302,8 @@ fn cmd_explore(args: &Args) -> Result<()> {
     }
     let threads = args.usize("threads", 0);
 
-    let (_, dcnn, ds) = load_all()?;
-    let ranges = profile_ranges(&dcnn, &ds, 1_000, threads);
+    let (_, model, ds) = load_all()?;
+    let ranges = profile_ranges(&model, &ds, 1_000, threads);
     let mut ev = evaluator(subset, threads, !args.switch("engine"))?;
 
     println!("§4.2 exploration: bound {:.1}%, subset {}, families {:?}",
@@ -296,8 +320,10 @@ fn cmd_explore(args: &Args) -> Result<()> {
 
     // re-score the frontier on the full test set
     let full = ev.accuracy_full(&res.chosen)?;
-    let full_base =
-        ev.accuracy_full(&NetConfig::uniform(ArithKind::Float32))?;
+    let full_base = ev.accuracy_full(&ReprMap::uniform_for(
+        &NetSpec::paper_dcnn(),
+        ArithKind::Float32,
+    ))?;
     println!("full test set : {:.4} (baseline {:.4}, relative {:.2}%)",
              full, full_base, full / full_base * 100.0);
 
@@ -317,11 +343,13 @@ fn cmd_explore(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut sopts = ServerOpts::default();
+    let mut spec = NetSpec::paper_dcnn();
     if let Some(f) = args.opt_str("config-file") {
         let doc = TomlDoc::parse(&std::fs::read_to_string(f)?)
             .map_err(|e| anyhow::anyhow!(e))?;
         let fc = ServeFileConfig::from_toml(&doc)
             .map_err(|e| anyhow::anyhow!(e))?;
+        spec = fc.spec;
         sopts.configs = fc.configs;
         sopts.max_batch = fc.max_batch;
         sopts.max_wait = fc.max_wait;
@@ -330,10 +358,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sopts.plan_cache_bytes = fc.plan_cache_mb * 1024 * 1024;
         sopts.use_pjrt = fc.use_pjrt;
     }
+    if let Some(m) = args.opt_str("model") {
+        spec = NetSpec::preset_or_parse(m)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        // configs from a file keep working when their arity still
+        // matches the overridden model; only a layer-count change
+        // invalidates them (reset to uniform, and say so — the user
+        // can pass --configs to choose explicitly)
+        if sopts.configs.iter().any(|c| c.len() != spec.len()) {
+            eprintln!(
+                "note: --model changed the layer count to {}; \
+                 dropping the configured configs and serving uniform \
+                 float32 (pass --configs to override)",
+                spec.len()
+            );
+            sopts.configs =
+                vec![ReprMap::uniform_for(&spec, ArithKind::Float32)];
+        }
+    }
     if let Some(list) = args.opt_str("configs") {
         sopts.configs = list
             .split(';')
-            .map(|s| NetConfig::parse(s.trim()))
+            .map(|s| ReprMap::parse_for(&spec, s.trim()))
             .collect::<Result<Vec<_>, _>>()
             .map_err(|e| anyhow::anyhow!(e))?;
     }
@@ -360,8 +406,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("batching: max_batch {}, max_wait {:?}, pjrt {}",
              sopts.max_batch, sopts.max_wait, sopts.use_pjrt);
 
+    anyhow::ensure!(
+        spec.input_len() == 784,
+        "the CLI load generator renders 28x28x1 digits; model '{spec}' \
+         wants {} inputs",
+        spec.input_len()
+    );
     let n_cfg = sopts.configs.len();
-    let server = Server::start(sopts)?;
+    let server = if spec.is_paper_dcnn() {
+        Server::start(sopts)?
+    } else {
+        // non-paper topologies have no trained artifacts: serve a
+        // deterministic synthetic model (exercises the full stack —
+        // stream accuracy is meaningless on untrained weights)
+        println!("model: {spec}");
+        println!("(non-paper topology: synthetic weights, engine \
+                  backend)");
+        Server::start_with_model(
+            sopts,
+            std::sync::Arc::new(Model::synthetic(spec.clone(), 42)),
+            None,
+        )?
+    };
     let metrics = server.metrics.clone();
     let (tx, rx) = channel();
     let mut rng = Rng::new(99);

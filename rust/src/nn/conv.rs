@@ -12,7 +12,7 @@ use super::tensor::Tensor;
 
 /// Convolution as im2col + packed GEMM: `x` is [B,H,W,C], `w2` the
 /// kernel flattened to [kh*kw*C, cout] (pre-quantized, as
-/// `Dcnn::prepare` produces).  Returns [B*H*W, cout]; the caller
+/// `Model::prepare` produces).  Returns [B*H*W, cout]; the caller
 /// reshapes to [B,H,W,cout].  The im2col activations are rebuilt per
 /// call (they depend on `x`); the *filter* panels come from the plan's
 /// prepacked cache when present — the constant side of the GEMM is

@@ -175,7 +175,7 @@ impl GemmPlan {
     }
 
     /// Whether this plan carries prepacked weight panels.  After
-    /// `Dcnn::prepare` every layer plan does; the plan (and the
+    /// `Model::prepare` every layer plan does; the plan (and the
     /// `PreparedNet` owning it) is immutable from then on, which is
     /// what lets `coordinator::plan_cache` share one prepared network
     /// across engine workers behind an `Arc`.

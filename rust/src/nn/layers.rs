@@ -7,8 +7,8 @@ use super::gemm::GemmPlan;
 use super::tensor::Tensor;
 
 /// Fully-connected layer: `x [m,k] @ w [k,n] + bias` on the packed
-/// GEMM path (`w` pre-quantized, as `Dcnn::prepare` produces).  When
-/// the plan carries prepacked panels for `w` (`Dcnn::prepare` builds
+/// GEMM path (`w` pre-quantized, as `Model::prepare` produces).  When
+/// the plan carries prepacked panels for `w` (`Model::prepare` builds
 /// them), the weight side is served from the cache — no per-call
 /// conditioning or packing.
 pub fn dense(plan: &GemmPlan, x: &Tensor, w: &Tensor, bias: &[f32],

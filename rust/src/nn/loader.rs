@@ -69,30 +69,14 @@ pub fn parse_weights(raw: &[u8]) -> Result<BTreeMap<String, Tensor>> {
     Ok(out)
 }
 
-/// Validate the parameter set against the paper's Fig. 2 architecture.
+/// Validate the parameter set against the paper's Fig. 2 architecture
+/// — a thin wrapper over the generic
+/// [`NetSpec::validate_params`](super::spec::NetSpec::validate_params)
+/// on the [`paper_dcnn`](super::spec::NetSpec::paper_dcnn) preset,
+/// kept because the PJRT runner (whose AOT artifacts only implement
+/// that topology) calls it by name.
 pub fn validate_dcnn(params: &BTreeMap<String, Tensor>) -> Result<()> {
-    let want: &[(&str, &[usize])] = &[
-        ("conv1_w", &[5, 5, 1, 32]),
-        ("conv1_b", &[32]),
-        ("conv2_w", &[5, 5, 32, 64]),
-        ("conv2_b", &[64]),
-        ("fc1_w", &[3136, 1024]),
-        ("fc1_b", &[1024]),
-        ("fc2_w", &[1024, 10]),
-        ("fc2_b", &[10]),
-    ];
-    for (name, shape) in want {
-        let t = params
-            .get(*name)
-            .with_context(|| format!("missing tensor '{name}'"))?;
-        if t.shape != *shape {
-            bail!(
-                "tensor '{name}' has shape {:?}, want {shape:?}",
-                t.shape
-            );
-        }
-    }
-    Ok(())
+    super::spec::NetSpec::paper_dcnn().validate_params(params)
 }
 
 #[cfg(test)]
@@ -146,6 +130,17 @@ mod tests {
         let mut raw = encode(&[("a", vec![1], vec![1.0])]);
         raw.push(0);
         assert!(parse_weights(&raw).is_err());
+    }
+
+    #[test]
+    fn param_names_match_the_paper_spec() {
+        // the artifact ordering contract the PJRT runner relies on:
+        // PARAM_NAMES is exactly the paper spec's derived name list
+        let from_spec =
+            crate::nn::spec::NetSpec::paper_dcnn().param_names();
+        let want: Vec<String> =
+            PARAM_NAMES.iter().map(|s| s.to_string()).collect();
+        assert_eq!(from_spec, want);
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Bit-accurate NN inference engine — the Rust analogue of "LopPy
-//! integrated into an ML framework" (paper §4.3): the same DCNN the AOT
-//! artifacts implement, but with every MAC routed through a configurable
-//! (representation × arithmetic) provider, including the approximate
-//! multipliers the PJRT path cannot express.
+//! integrated into an ML framework" (paper §4.3): arbitrary
+//! [`spec::NetSpec`] topologies (the paper's DCNN is the
+//! [`spec::NetSpec::paper_dcnn`] preset) with every MAC routed through
+//! a configurable (representation × arithmetic) provider per layer
+//! ([`spec::ReprMap`]), including the approximate multipliers the PJRT
+//! path cannot express.
 //!
 //! Layer semantics mirror `python/compile/model.py` exactly: values are
 //! snapped onto the representation lattice as they enter each layer's MAC
@@ -15,7 +17,9 @@ pub mod layers;
 pub mod loader;
 pub mod network;
 pub mod quantizer;
+pub mod spec;
 pub mod tensor;
 
-pub use network::{Dcnn, LayerConfig, NetConfig};
+pub use network::{Dcnn, Model, PreparedNet};
+pub use spec::{NetSpec, ReprMap};
 pub use tensor::Tensor;

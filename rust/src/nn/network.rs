@@ -1,76 +1,40 @@
-//! The paper's DCNN (Fig. 2) with per-layer arithmetic providers — the
-//! layer-wise *partition* of §3/§4.2: each layer is one part, each part has
-//! one (representation × arithmetic) domain.
+//! Spec-driven network engine: a [`Model`] pairs a [`NetSpec`]
+//! topology with trained parameters; [`Model::prepare`] snaps them to
+//! a [`ReprMap`] (one arithmetic provider per layer — the layer-wise
+//! *partition* of §3/§4.2) and returns a runnable [`PreparedNet`].
+//!
+//! The paper's Fig. 2 DCNN is just the [`NetSpec::paper_dcnn`] preset;
+//! every loop below runs over `spec.len()` layers, so a 5-layer MLP or
+//! a 2-conv net flows through the same prepare/forward/serve machinery
+//! (pinned by `rust/tests/netspec_topology.rs`).
 
 use super::conv::conv2d;
 use super::gemm::GemmPlan;
 use super::layers::{add_bias, dense, maxpool2, relu};
-use super::loader::validate_dcnn;
 use super::quantizer::quantize_tensor;
+use super::spec::{Activation, LayerKind, NetSpec, ReprMap};
 use super::tensor::Tensor;
 use crate::approx::arith::ArithKind;
 use anyhow::Result;
 use std::collections::BTreeMap;
 
-pub const LAYER_NAMES: [&str; 4] = ["conv1", "conv2", "fc1", "fc2"];
+/// Transitional alias — the paper-specific `Dcnn` type generalized
+/// into the spec-driven [`Model`]; construct paper-shaped instances
+/// with [`NetSpec::paper_dcnn`].
+pub type Dcnn = Model;
 
-/// One partition part = one layer's domain choice.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct LayerConfig {
-    pub arith: ArithKind,
-}
-
-/// A full network configuration (one provider per layer).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct NetConfig {
-    pub layers: [ArithKind; 4],
-}
-
-impl NetConfig {
-    pub fn uniform(kind: ArithKind) -> Self {
-        NetConfig { layers: [kind; 4] }
-    }
-
-    pub fn name(&self) -> String {
-        if self.layers.iter().all(|l| l == &self.layers[0]) {
-            self.layers[0].name()
-        } else {
-            self.layers.iter().map(|l| l.name()).collect::<Vec<_>>()
-                .join(" | ")
-        }
-    }
-
-    /// Parse "FI(6,8)" (uniform) or "FI(5,8)|FI(5,8)|FI(6,8)|FI(6,8)".
-    pub fn parse(s: &str) -> Result<Self, String> {
-        let parts: Vec<&str> = s.split('|').map(str::trim).collect();
-        match parts.len() {
-            1 => Ok(NetConfig::uniform(ArithKind::parse(parts[0])?)),
-            4 => {
-                let mut layers = [ArithKind::Float32; 4];
-                for (l, p) in layers.iter_mut().zip(&parts) {
-                    *l = ArithKind::parse(p)?;
-                }
-                Ok(NetConfig { layers })
-            }
-            n => Err(format!("expected 1 or 4 layer configs, got {n}")),
-        }
-    }
-
-    /// True when every layer is PJRT-expressible (exact arithmetic).
-    pub fn pjrt_expressible(&self) -> bool {
-        self.layers.iter().all(|l| l.pjrt_expressible())
-    }
-}
-
-/// Trained float32 parameters + architecture checks.
-pub struct Dcnn {
+/// Trained float32 parameters bound to a [`NetSpec`] (shapes validated
+/// at construction).
+pub struct Model {
+    spec: NetSpec,
     pub params: BTreeMap<String, Tensor>,
 }
 
 /// Per-layer activation/weight ranges (reproduces paper Table 1).
 #[derive(Clone, Debug)]
 pub struct LayerRanges {
-    pub layer: &'static str,
+    /// Layer name from the spec (`conv1`, `fc2`, ...).
+    pub layer: String,
     pub w: (f32, f32),
     pub b: (f32, f32),
     pub a: (f32, f32), // pre-activation outputs (the WBA "activation")
@@ -85,63 +49,74 @@ impl LayerRanges {
     }
 }
 
-impl Dcnn {
-    pub fn new(params: BTreeMap<String, Tensor>) -> Result<Self> {
-        validate_dcnn(&params)?;
-        Ok(Dcnn { params })
+impl Model {
+    pub fn new(spec: NetSpec, params: BTreeMap<String, Tensor>)
+               -> Result<Model> {
+        spec.validate_params(&params)?;
+        Ok(Model { spec, params })
     }
 
-    pub fn load(path: &std::path::Path) -> Result<Self> {
-        Dcnn::new(super::loader::load_weights(path)?)
+    pub fn load(spec: NetSpec, path: &std::path::Path)
+                -> Result<Model> {
+        Model::new(spec, super::loader::load_weights(path)?)
     }
 
-    /// A randomly-initialized network with the exact architecture
-    /// `validate_dcnn` requires — the hermetic fixture behind
-    /// `Server::start_with_dcnn`, `benches/serving_throughput.rs` and
-    /// the plan-cache suites (no `make artifacts` needed).  One
-    /// definition serves the lib tests, integration tests and benches
-    /// so the shapes cannot drift from the loader contract.
-    /// Deterministic in `seed`; the weights are untrained (use real
-    /// artifacts for accuracy claims).
-    pub fn synthetic(seed: u64) -> Dcnn {
+    /// A randomly-initialized network for *any* spec — the hermetic
+    /// fixture behind `Server::start_with_model`,
+    /// `benches/serving_throughput.rs` and the plan-cache/topology
+    /// suites (no `make artifacts` needed).  One definition serves
+    /// the lib tests, integration tests and benches so the shapes
+    /// cannot drift from the spec contract.  Weight sigma is
+    /// He-style (`sqrt(2 / fan_in)`) so activations stay sane at any
+    /// depth; deterministic in `seed`; the weights are untrained (use
+    /// real artifacts for accuracy claims).
+    pub fn synthetic(spec: NetSpec, seed: u64) -> Model {
         let mut rng = crate::util::prng::Rng::new(seed);
-        let mut t = |shape: Vec<usize>, sigma: f64| {
-            let n: usize = shape.iter().product();
-            Tensor::new(shape,
-                        (0..n).map(|_| (rng.normal() * sigma) as f32)
-                            .collect())
-        };
         let mut params = BTreeMap::new();
-        params.insert("conv1_w".into(), t(vec![5, 5, 1, 32], 0.2));
-        params.insert("conv1_b".into(), t(vec![32], 0.05));
-        params.insert("conv2_w".into(), t(vec![5, 5, 32, 64], 0.05));
-        params.insert("conv2_b".into(), t(vec![64], 0.05));
-        params.insert("fc1_w".into(), t(vec![3136, 1024], 0.02));
-        params.insert("fc1_b".into(), t(vec![1024], 0.02));
-        params.insert("fc2_w".into(), t(vec![1024, 10], 0.05));
-        params.insert("fc2_b".into(), t(vec![10], 0.02));
-        Dcnn::new(params).expect("synthetic params match the validator")
+        for layer in spec.layers() {
+            let (wshape, bshape) = layer.param_shapes();
+            let fan_in: usize =
+                wshape[..wshape.len() - 1].iter().product();
+            let sigma = (2.0 / fan_in.max(1) as f64).sqrt();
+            let mut t = |shape: Vec<usize>, s: f64| {
+                let n: usize = shape.iter().product();
+                Tensor::new(shape,
+                            (0..n).map(|_| (rng.normal() * s) as f32)
+                                .collect())
+            };
+            params.insert(format!("{}_w", layer.name),
+                          t(wshape, sigma));
+            params.insert(format!("{}_b", layer.name),
+                          t(bshape, 0.02));
+        }
+        Model::new(spec, params)
+            .expect("synthetic params match the spec by construction")
     }
 
-    /// Companion fixture to [`Dcnn::synthetic`]: a deterministic
-    /// random input batch shaped for this network's forward pass
-    /// (`[b, 28, 28, 1]`, values in `[0, 1)`), shared by the hermetic
-    /// suites so the input contract cannot drift per copy.
-    pub fn synthetic_input(b: usize, seed: u64) -> Tensor {
-        let mut rng = crate::util::prng::Rng::new(seed);
-        Tensor::new(vec![b, 28, 28, 1],
-                    (0..b * 784).map(|_| rng.range_f32(0.0, 1.0))
-                        .collect())
+    /// The topology this model's parameters implement.
+    pub fn spec(&self) -> &NetSpec {
+        &self.spec
     }
 
-    /// Quantize weights/biases for `cfg` and return a runnable network.
-    pub fn prepare(&self, cfg: NetConfig) -> PreparedNet {
-        let mut wq = Vec::with_capacity(4);
-        let mut bq = Vec::with_capacity(4);
-        for (li, lname) in LAYER_NAMES.iter().enumerate() {
-            let kind = &cfg.layers[li];
-            let w = &self.params[&format!("{lname}_w")];
-            let b = &self.params[&format!("{lname}_b")];
+    /// Quantize weights/biases for `cfg` and return a runnable
+    /// network.  Panics on arity mismatch (the parse-level APIs,
+    /// `ReprMap::parse_for` / `uniform_for`, reject that earlier).
+    pub fn prepare(&self, cfg: &ReprMap) -> PreparedNet {
+        assert_eq!(
+            cfg.len(),
+            self.spec.len(),
+            "ReprMap has {} kinds for the {}-layer spec '{}'",
+            cfg.len(),
+            self.spec.len(),
+            self.spec
+        );
+        let n = self.spec.len();
+        let mut wq = Vec::with_capacity(n);
+        let mut bq = Vec::with_capacity(n);
+        for (li, layer) in self.spec.layers().iter().enumerate() {
+            let kind = cfg.kind(li);
+            let w = &self.params[&format!("{}_w", layer.name)];
+            let b = &self.params[&format!("{}_b", layer.name)];
             // conv weights flatten to (kh*kw*cin, cout) for the GEMM
             let w2 = if w.ndim() == 4 {
                 let cout = w.shape[3];
@@ -159,25 +134,36 @@ impl Dcnn {
         // (tests/prepack_differential.rs pins this via
         // gemm::pack::weight_pack_count)
         let mut plans: Vec<GemmPlan> =
-            cfg.layers.iter().map(GemmPlan::new).collect();
+            cfg.kinds().iter().map(GemmPlan::new).collect();
         for (plan, w2) in plans.iter_mut().zip(&wq) {
             plan.prepack(&w2.data, w2.shape[0], w2.shape[1]);
         }
-        PreparedNet { cfg, wq, bq, plans }
+        PreparedNet {
+            spec: self.spec.clone(),
+            cfg: cfg.clone(),
+            wq,
+            bq,
+            plans,
+        }
     }
 
     /// Float32 forward that records per-layer WBA ranges (Table 1).
-    pub fn ranges(&self, x: &Tensor, threads: usize) -> Vec<LayerRanges> {
-        let net = self.prepare(NetConfig::uniform(ArithKind::Float32));
+    pub fn ranges(&self, x: &Tensor, threads: usize)
+                  -> Vec<LayerRanges> {
+        let net = self.prepare(&ReprMap::uniform_for(
+            &self.spec,
+            ArithKind::Float32,
+        ));
         let (_, zs) = net.forward_capture(x, threads);
-        LAYER_NAMES
+        self.spec
+            .layers()
             .iter()
             .enumerate()
-            .map(|(li, lname)| {
-                let w = &self.params[&format!("{lname}_w")];
-                let b = &self.params[&format!("{lname}_b")];
+            .map(|(li, layer)| {
+                let w = &self.params[&format!("{}_w", layer.name)];
+                let b = &self.params[&format!("{}_b", layer.name)];
                 LayerRanges {
-                    layer: LAYER_NAMES[li],
+                    layer: layer.name.clone(),
                     w: w.minmax(),
                     b: b.minmax(),
                     a: zs[li],
@@ -187,20 +173,23 @@ impl Dcnn {
     }
 }
 
-/// A network with weights snapped to a configuration, ready for inference.
+/// A network with weights snapped to a configuration, ready for
+/// inference.
 ///
 /// **Immutable after `prepare`.**  Every field is conditioned exactly
-/// once inside [`Dcnn::prepare`] (quantized weights, resolved plans,
+/// once inside [`Model::prepare`] (quantized weights, resolved plans,
 /// prepacked panels) and only read afterwards — there is no `&mut
 /// self` method on this type.  That is the contract that makes
 /// `Arc<PreparedNet>` safe to share across the whole engine worker
 /// pool: `coordinator::plan_cache` hands out one `Arc` per
-/// configuration instead of one private copy per worker, so panel
-/// residency scales with *configs*, not `workers x configs`.
-/// (`Send + Sync` is pinned by a test below; the cross-kind panel
-/// identity guards live in `gemm::PackedWeights`.)
+/// (spec, assignment) fingerprint instead of one private copy per
+/// worker, so panel residency scales with *configs*, not
+/// `workers x configs`.  (`Send + Sync` is pinned by a test below;
+/// the cross-kind panel identity guards live in
+/// `gemm::PackedWeights`.)
 pub struct PreparedNet {
-    pub cfg: NetConfig,
+    spec: NetSpec,
+    pub cfg: ReprMap,
     wq: Vec<Tensor>, // flattened (rows, cout) weights, quantized
     bq: Vec<Tensor>,
     /// per-layer packed-kernel selection, resolved once in `prepare`
@@ -208,7 +197,13 @@ pub struct PreparedNet {
 }
 
 impl PreparedNet {
-    /// Forward pass: x is [B,28,28,1] in [0,1]; returns logits [B,10].
+    /// The topology this net runs.
+    pub fn spec(&self) -> &NetSpec {
+        &self.spec
+    }
+
+    /// Forward pass: `x` is `[B, h, w, c]` matching the spec's input
+    /// shape; returns the last layer's output (e.g. logits `[B, n]`).
     pub fn forward(&self, x: &Tensor, threads: usize) -> Tensor {
         self.forward_capture(x, threads).0
     }
@@ -216,42 +211,55 @@ impl PreparedNet {
     /// Forward returning per-layer pre-activation (min,max) as well.
     pub fn forward_capture(&self, x: &Tensor, threads: usize)
                            -> (Tensor, Vec<(f32, f32)>) {
-        assert_eq!(x.ndim(), 4, "input must be [B,28,28,1]");
-        assert_eq!(&x.shape[1..], &[28, 28, 1]);
+        assert_eq!(x.ndim(), 4, "input must be [B, h, w, c]");
+        let ishape = self.spec.input_shape();
+        assert_eq!(&x.shape[1..], &ishape[..],
+                   "input shape does not match spec '{}'", self.spec);
         let b = x.shape[0];
-        let mut ranges = Vec::with_capacity(4);
-
-        // CONV1: quantization of the input happens inside gemm (the MAC
-        // entry point), matching model.py where cols are fake-quantized.
-        let mut z = self.conv_block(x, 0, 28, 32, threads);
-        ranges.push(z.minmax());
-        relu(&mut z);
-        let a = maxpool2(&z); // [B,14,14,32]
-
-        let mut z = self.conv_block(&a, 1, 14, 64, threads);
-        ranges.push(z.minmax());
-        relu(&mut z);
-        let a = maxpool2(&z); // [B,7,7,64]
-
-        // FC1: flatten (h, w, c) row-major — same layout as python
-        let a = a.reshape(vec![b, 3136]);
-        let mut z = self.fc_block(&a, 2, threads);
-        ranges.push(z.minmax());
-        relu(&mut z);
-
-        let z = self.fc_block(&z, 3, threads);
-        ranges.push(z.minmax());
-        (z, ranges)
+        let mut ranges = Vec::with_capacity(self.spec.len());
+        let mut cur: Option<Tensor> = None;
+        for (li, layer) in self.spec.layers().iter().enumerate() {
+            let mut z = match layer.kind {
+                LayerKind::Conv2d { kh, kw, cout, pad, .. } => {
+                    let inp = cur.as_ref().unwrap_or(x);
+                    let (h, w) = (inp.shape[1], inp.shape[2]);
+                    // im2col + packed GEMM -> [B*H*W, cout]; the
+                    // quantization of the activations happens inside
+                    // gemm (the MAC entry point), matching model.py
+                    let mut z = conv2d(&self.plans[li], inp,
+                                       &self.wq[li], kh, kw, pad,
+                                       threads);
+                    add_bias(&mut z, &self.bq[li].data);
+                    z.reshape(vec![b, h, w, cout])
+                }
+                LayerKind::Dense { d_in, .. } => {
+                    // flatten (h, w, c) row-major — same layout as
+                    // the python model
+                    let flat = match cur.take() {
+                        Some(t) => t.reshape(vec![b, d_in]),
+                        None => Tensor::new(vec![b, d_in],
+                                            x.data.clone()),
+                    };
+                    dense(&self.plans[li], &flat, &self.wq[li],
+                          &self.bq[li].data, threads)
+                }
+            };
+            ranges.push(z.minmax());
+            if layer.activation == Activation::Relu {
+                relu(&mut z);
+            }
+            if layer.pool {
+                z = maxpool2(&z);
+            }
+            cur = Some(z);
+        }
+        (cur.expect("spec has at least one layer"), ranges)
     }
 
     /// Kernel selected for each layer (e.g. `packed-fi`), in layer
     /// order — surfaced through `runtime::execution_plan`.
-    pub fn kernel_names(&self) -> [&'static str; 4] {
-        let mut names = [""; 4];
-        for (n, p) in names.iter_mut().zip(&self.plans) {
-            *n = p.kernel_name();
-        }
-        names
+    pub fn kernel_names(&self) -> Vec<&'static str> {
+        self.plans.iter().map(|p| p.kernel_name()).collect()
     }
 
     /// Panel-cache observability: (number of layers with cached weight
@@ -267,21 +275,7 @@ impl PreparedNet {
         (count, bytes)
     }
 
-    fn conv_block(&self, x: &Tensor, li: usize, hw: usize, cout: usize,
-                  threads: usize) -> Tensor {
-        let b = x.shape[0];
-        let mut out =
-            conv2d(&self.plans[li], x, &self.wq[li], 5, 5, 2, threads);
-        add_bias(&mut out, &self.bq[li].data);
-        out.reshape(vec![b, hw, hw, cout])
-    }
-
-    fn fc_block(&self, x: &Tensor, li: usize, threads: usize) -> Tensor {
-        dense(&self.plans[li], x, &self.wq[li], &self.bq[li].data,
-              threads)
-    }
-
-    /// Classify: argmax of logits.
+    /// Classify: argmax of the (2-D) final output's rows.
     pub fn predict(&self, x: &Tensor, threads: usize) -> Vec<usize> {
         self.forward(x, threads).argmax_rows()
     }
@@ -291,25 +285,28 @@ impl PreparedNet {
 mod tests {
     use super::*;
 
+    fn paper_model(seed: u64) -> Model {
+        Model::synthetic(NetSpec::paper_dcnn(), seed)
+    }
+
+    fn cfg(s: &str) -> ReprMap {
+        ReprMap::parse_for(&NetSpec::paper_dcnn(), s).unwrap()
+    }
+
     #[test]
     fn forward_shapes() {
-        let net = Dcnn::synthetic(1).prepare(NetConfig::uniform(ArithKind::Float32));
-        let logits = net.forward(&Dcnn::synthetic_input(3, 2), 1);
+        let net = paper_model(1).prepare(&cfg("float32"));
+        let x = NetSpec::paper_dcnn().synthetic_input(3, 2);
+        let logits = net.forward(&x, 1);
         assert_eq!(logits.shape, vec![3, 10]);
     }
 
     #[test]
     fn quantized_forward_close_to_f32_with_wide_config() {
-        let dcnn = Dcnn::synthetic(3);
-        let x = Dcnn::synthetic_input(2, 4);
-        let base = dcnn
-            .prepare(NetConfig::uniform(ArithKind::Float32))
-            .forward(&x, 1);
-        let fine = dcnn
-            .prepare(NetConfig::uniform(
-                ArithKind::parse("FI(8,14)").unwrap(),
-            ))
-            .forward(&x, 1);
+        let model = paper_model(3);
+        let x = NetSpec::paper_dcnn().synthetic_input(2, 4);
+        let base = model.prepare(&cfg("float32")).forward(&x, 1);
+        let fine = model.prepare(&cfg("FI(8,14)")).forward(&x, 1);
         for (a, b) in base.data.iter().zip(&fine.data) {
             assert!((a - b).abs() < 0.05, "{a} vs {b}");
         }
@@ -317,14 +314,10 @@ mod tests {
 
     #[test]
     fn coarse_quantization_perturbs() {
-        let dcnn = Dcnn::synthetic(5);
-        let x = Dcnn::synthetic_input(2, 6);
-        let base = dcnn
-            .prepare(NetConfig::uniform(ArithKind::Float32))
-            .forward(&x, 1);
-        let coarse = dcnn
-            .prepare(NetConfig::uniform(ArithKind::parse("FI(1,1)").unwrap()))
-            .forward(&x, 1);
+        let model = paper_model(5);
+        let x = NetSpec::paper_dcnn().synthetic_input(2, 6);
+        let base = model.prepare(&cfg("float32")).forward(&x, 1);
+        let coarse = model.prepare(&cfg("FI(1,1)")).forward(&x, 1);
         let diff: f32 = base
             .data
             .iter()
@@ -336,23 +329,26 @@ mod tests {
 
     #[test]
     fn mixed_config_parses_and_runs() {
-        let cfg = NetConfig::parse("FI(6,8)|FI(6,8)|H(8,8,14)|H(8,8,14)")
-            .unwrap();
-        assert!(!cfg.pjrt_expressible());
-        let net = Dcnn::synthetic(7).prepare(cfg);
+        let c = cfg("FI(6,8)|FI(6,8)|H(8,8,14)|H(8,8,14)");
+        assert!(!c.pjrt_expressible());
+        let net = paper_model(7).prepare(&c);
         assert_eq!(net.kernel_names(),
-                   ["packed-fi", "packed-fi", "packed-drum",
-                    "packed-drum"]);
-        let out = net.forward(&Dcnn::synthetic_input(1, 8), 1);
+                   vec!["packed-fi", "packed-fi", "packed-drum",
+                        "packed-drum"]);
+        let x = NetSpec::paper_dcnn().synthetic_input(1, 8);
+        let out = net.forward(&x, 1);
         assert_eq!(out.shape, vec![1, 10]);
         assert!(out.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]
     fn ranges_structure() {
-        let dcnn = Dcnn::synthetic(9);
-        let r = dcnn.ranges(&Dcnn::synthetic_input(4, 10), 1);
+        let model = paper_model(9);
+        let x = NetSpec::paper_dcnn().synthetic_input(4, 10);
+        let r = model.ranges(&x, 1);
         assert_eq!(r.len(), 4);
+        assert_eq!(r[0].layer, "conv1");
+        assert_eq!(r[3].layer, "fc2");
         for lr in &r {
             assert!(lr.w.0 <= lr.w.1);
             let (lo, hi) = lr.combined();
@@ -364,12 +360,18 @@ mod tests {
 
     #[test]
     fn prepare_caches_weight_panels() {
-        let cfg = NetConfig::parse("FI(6,8)|FI(6,8)|FL(4,9)|binxnor")
-            .unwrap();
-        let net = Dcnn::synthetic(13).prepare(cfg);
+        let net = paper_model(13)
+            .prepare(&cfg("FI(6,8)|FI(6,8)|FL(4,9)|binxnor"));
         let (count, bytes) = net.packed_panel_stats();
         assert_eq!(count, 4, "every layer's panels are cached");
         assert!(bytes > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ReprMap has 2 kinds")]
+    fn prepare_rejects_arity_mismatch() {
+        let two = ReprMap::uniform(ArithKind::Float32, 2);
+        paper_model(1).prepare(&two);
     }
 
     #[test]
@@ -384,11 +386,51 @@ mod tests {
 
     #[test]
     fn threads_do_not_change_results() {
-        let dcnn = Dcnn::synthetic(11);
-        let x = Dcnn::synthetic_input(4, 12);
-        let cfg = NetConfig::uniform(ArithKind::parse("FI(6,8)").unwrap());
-        let a = dcnn.prepare(cfg).forward(&x, 1);
-        let b = dcnn.prepare(cfg).forward(&x, 4);
+        let model = paper_model(11);
+        let x = NetSpec::paper_dcnn().synthetic_input(4, 12);
+        let c = cfg("FI(6,8)");
+        let a = model.prepare(&c).forward(&x, 1);
+        let b = model.prepare(&c).forward(&x, 4);
         assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn non_paper_topologies_run_end_to_end() {
+        // a deeper MLP: 5 dense layers (first flattens the input)
+        let mlp = NetSpec::parse(
+            "28x28x1: dense(64)+relu | dense(48)+relu | \
+             dense(32)+relu | dense(24)+relu | dense(10)",
+        )
+        .unwrap();
+        let m = Model::synthetic(mlp.clone(), 31);
+        let c = ReprMap::parse_for(
+            &mlp,
+            "FI(6,8)|FL(4,9)|H(6,8,12)|I(5,10)|float32",
+        )
+        .unwrap();
+        let net = m.prepare(&c);
+        assert_eq!(net.packed_panel_stats().0, 5);
+        assert_eq!(net.kernel_names().len(), 5);
+        let out = net.forward(&mlp.synthetic_input(2, 32), 1);
+        assert_eq!(out.shape, vec![2, 10]);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+
+        // a small 2-conv net with a different kernel size than the
+        // paper's
+        let conv = NetSpec::parse(
+            "28x28x1: conv(3x3,8,pad=1)+relu+pool | \
+             conv(3x3,16,pad=1)+relu+pool | dense(10)",
+        )
+        .unwrap();
+        let m = Model::synthetic(conv.clone(), 33);
+        let net =
+            m.prepare(&ReprMap::uniform_for(&conv,
+                                            ArithKind::Float32));
+        let out = net.forward(&conv.synthetic_input(2, 34), 1);
+        assert_eq!(out.shape, vec![2, 10]);
+        // ranges profile one entry per layer, named from the spec
+        let r = m.ranges(&conv.synthetic_input(2, 35), 1);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[2].layer, "fc1");
     }
 }

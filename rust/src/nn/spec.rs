@@ -1,0 +1,906 @@
+//! Topology-generic model description: [`NetSpec`] (an arbitrary
+//! sequence of conv/dense layers, shapes validated at build time) and
+//! [`ReprMap`] (one [`ArithKind`] per layer — the paper's layer-wise
+//! partition, arity-checked against the spec).
+//!
+//! This is the API that retired the hardcoded 4-layer
+//! `[ArithKind; 4]` config: the paper's Fig. 2 DCNN is now just the
+//! [`NetSpec::paper_dcnn`] preset, and every consumer — `Model::prepare`,
+//! the explorer, the plan cache, the server — iterates `spec.len()`
+//! parts instead of indexing `0..4`.
+//!
+//! Three string forms, all round-trippable:
+//!
+//! * the **spec grammar** (`Display`/[`NetSpec::parse`]):
+//!   `"28x28x1: conv(5x5,32,pad=2)+relu+pool | ... | dense(10)"` —
+//!   input `HxWxC`, then `|`-separated layers; derived quantities
+//!   (conv `cin`, dense `d_in`) are never written, they re-derive from
+//!   the running shape;
+//! * the **config grammar** ([`ReprMap::parse_for`]): the existing
+//!   `"FI(6,8)|...|H(8,8,14)"` notation generalized to N layers — one
+//!   segment broadcasts uniformly, otherwise the segment count must
+//!   equal the spec's depth;
+//! * the **structural fingerprint** ([`NetSpec::fingerprint`]):
+//!   `"<spec> :: <kind|kind|...>"` — injective over (topology,
+//!   assignment), the key `coordinator::plan_cache` stores prepared
+//!   networks under (names are labels, not identity: two structurally
+//!   equal specs share cache entries by design).
+
+use crate::approx::arith::ArithKind;
+use crate::nn::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Activation applied to a layer's pre-activation output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// No nonlinearity (e.g. a logits layer).
+    Linear,
+    /// Rectified linear unit.
+    Relu,
+}
+
+/// The parameterized operator of one layer.  Derived quantities
+/// (`cin`, `d_in`) are filled in by the builder from the running
+/// activation shape, never by the caller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Stride-1, zero-padded 2-D convolution (`same` spatial size;
+    /// the builder requires a centered window, odd
+    /// `kh == kw == 2*pad + 1`), lowered onto the packed GEMM path
+    /// via im2col.
+    Conv2d {
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        pad: usize,
+    },
+    /// Fully-connected layer; a 4-D input flattens to `[b, d_in]`.
+    Dense { d_in: usize, d_out: usize },
+}
+
+/// One layer of a [`NetSpec`]: operator + activation + optional 2x2
+/// max-pool, plus the parameter-name stem (`conv1`, `fc2`, ...) the
+/// weight map is keyed by.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerSpec {
+    /// Parameter-name stem: weights live at `{name}_w`, biases at
+    /// `{name}_b`.  Assigned by the builder (`convN` / `fcN`), so it
+    /// is a function of the structure.
+    pub name: String,
+    pub kind: LayerKind,
+    pub activation: Activation,
+    /// 2x2 stride-2 max pooling after the activation (conv layers
+    /// only; requires even spatial dims).
+    pub pool: bool,
+}
+
+impl LayerSpec {
+    /// `(weight shape, bias shape)` of this layer's parameters.
+    /// Conv weights are stored `[kh, kw, cin, cout]` (flattened to
+    /// `(kh*kw*cin, cout)` for the GEMM at prepare time), dense
+    /// weights `[d_in, d_out]`.
+    pub fn param_shapes(&self) -> (Vec<usize>, Vec<usize>) {
+        match self.kind {
+            LayerKind::Conv2d { kh, kw, cin, cout, .. } => {
+                (vec![kh, kw, cin, cout], vec![cout])
+            }
+            LayerKind::Dense { d_in, d_out } => {
+                (vec![d_in, d_out], vec![d_out])
+            }
+        }
+    }
+}
+
+impl fmt::Display for LayerSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            LayerKind::Conv2d { kh, kw, cout, pad, .. } => {
+                write!(f, "conv({kh}x{kw},{cout}")?;
+                if pad > 0 {
+                    write!(f, ",pad={pad}")?;
+                }
+                write!(f, ")")?;
+            }
+            LayerKind::Dense { d_out, .. } => {
+                write!(f, "dense({d_out})")?;
+            }
+        }
+        if self.activation == Activation::Relu {
+            write!(f, "+relu")?;
+        }
+        if self.pool {
+            write!(f, "+pool")?;
+        }
+        Ok(())
+    }
+}
+
+/// An arbitrary-depth feed-forward topology: input shape plus a
+/// validated sequence of [`LayerSpec`]s.  Construct through
+/// [`NetSpec::builder`], [`NetSpec::parse`], or a preset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetSpec {
+    input: [usize; 3],
+    layers: Vec<LayerSpec>,
+}
+
+impl fmt::Display for NetSpec {
+    /// The canonical spec-grammar string; [`NetSpec::parse`] of this
+    /// output reconstructs an equal spec (round-trip pinned by
+    /// `rust/tests/config_roundtrip.rs`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}:", self.input[0], self.input[1],
+               self.input[2])?;
+        for (i, l) in self.layers.iter().enumerate() {
+            if i > 0 {
+                write!(f, " |")?;
+            }
+            write!(f, " {l}")?;
+        }
+        Ok(())
+    }
+}
+
+impl NetSpec {
+    /// Start a builder over an `[h, w, c]` input.
+    pub fn builder(input: [usize; 3]) -> NetSpecBuilder {
+        let err = if input.iter().any(|&d| d == 0) {
+            Some(format!("input shape {input:?} has a zero dim"))
+        } else {
+            None
+        };
+        NetSpecBuilder {
+            input,
+            layers: Vec::new(),
+            state: State::Spatial(input[0], input[1], input[2]),
+            err,
+            n_conv: 0,
+            n_dense: 0,
+        }
+    }
+
+    /// The paper's Fig. 2 DCNN as a preset: 28x28x1 → conv 5x5x32 →
+    /// pool → conv 5x5x64 → pool → FC 1024 → FC 10.  Layer names come
+    /// out as `conv1`, `conv2`, `fc1`, `fc2` — the same stems the LOPW
+    /// artifact weights use.
+    pub fn paper_dcnn() -> NetSpec {
+        NetSpec::builder([28, 28, 1])
+            .conv2d(5, 5, 32, 2)
+            .relu()
+            .pool()
+            .conv2d(5, 5, 64, 2)
+            .relu()
+            .pool()
+            .dense(1024)
+            .relu()
+            .dense(10)
+            .build()
+            .expect("paper preset is well-formed")
+    }
+
+    /// Resolve a preset name (`"paper_dcnn"`) or, failing that, parse
+    /// `s` as spec grammar — the form config files and `--model` take.
+    pub fn preset_or_parse(s: &str) -> Result<NetSpec, String> {
+        match s.trim() {
+            "paper_dcnn" => Ok(NetSpec::paper_dcnn()),
+            other if other.contains(':') => NetSpec::parse(other),
+            other => Err(format!(
+                "unknown model '{other}' (expected the preset \
+                 'paper_dcnn' or spec grammar like \
+                 '28x28x1: dense(64)+relu | dense(10)')"
+            )),
+        }
+    }
+
+    /// Parse the spec grammar (the inverse of `Display`).  Errors name
+    /// the offending layer index and token.
+    pub fn parse(s: &str) -> Result<NetSpec, String> {
+        let (head, body) = s.split_once(':').ok_or_else(|| {
+            format!("missing ':' after the input shape in '{s}'")
+        })?;
+        let input = parse_dims(head.trim())?;
+        let mut b = NetSpec::builder(input);
+        let segs: Vec<&str> = body.split('|').map(str::trim).collect();
+        for (i, seg) in segs.iter().enumerate() {
+            let at = |m: String| {
+                format!("layer {}/{}: {m}", i + 1, segs.len())
+            };
+            if seg.is_empty() {
+                return Err(at(format!("empty segment in '{s}'")));
+            }
+            let mut mods = seg.split('+');
+            let op = mods.next().unwrap().trim();
+            if let Some(args) = strip_call(op, "conv") {
+                let (kh, kw, cout, pad) =
+                    parse_conv_args(args).map_err(&at)?;
+                b = b.conv2d(kh, kw, cout, pad);
+            } else if let Some(args) = strip_call(op, "dense") {
+                let d_out = args.trim().parse::<usize>().map_err(|e| {
+                    at(format!("bad dense width '{args}': {e}"))
+                })?;
+                b = b.dense(d_out);
+            } else {
+                return Err(at(format!("unknown layer op '{op}'")));
+            }
+            for m in mods {
+                match m.trim() {
+                    "relu" => b = b.relu(),
+                    "pool" => b = b.pool(),
+                    other => {
+                        return Err(at(format!(
+                            "unknown modifier '+{other}'"
+                        )))
+                    }
+                }
+            }
+        }
+        b.build()
+    }
+
+    /// Number of layers (= partition parts = [`ReprMap`] arity).
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Always false — the builder rejects empty specs.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    pub fn layers(&self) -> &[LayerSpec] {
+        &self.layers
+    }
+
+    /// Input activation shape `[h, w, c]` (batch dim excluded).
+    pub fn input_shape(&self) -> [usize; 3] {
+        self.input
+    }
+
+    /// Flattened input length `h * w * c` (the per-request image size
+    /// the serving router validates against).
+    pub fn input_len(&self) -> usize {
+        self.input.iter().product()
+    }
+
+    /// Parameter tensor names in layer order, weights before biases
+    /// (`conv1_w`, `conv1_b`, ...).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(2 * self.layers.len());
+        for l in &self.layers {
+            out.push(format!("{}_w", l.name));
+            out.push(format!("{}_b", l.name));
+        }
+        out
+    }
+
+    /// Total trainable parameter count.
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                let (w, b) = l.param_shapes();
+                w.iter().product::<usize>() + b.iter().product::<usize>()
+            })
+            .sum()
+    }
+
+    /// Post-layer activation shapes (after pooling), one per layer:
+    /// `[h, w, c]` for spatial layers, `[d]` after a dense layer.
+    pub fn output_shapes(&self) -> Vec<Vec<usize>> {
+        let mut cur = self.input.to_vec();
+        let mut out = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            match l.kind {
+                LayerKind::Conv2d { cout, .. } => {
+                    cur[2] = cout;
+                    if l.pool {
+                        cur[0] /= 2;
+                        cur[1] /= 2;
+                    }
+                }
+                LayerKind::Dense { d_out, .. } => {
+                    cur = vec![d_out];
+                }
+            }
+            out.push(cur.clone());
+        }
+        out
+    }
+
+    /// Check a parameter map against this spec: every layer's
+    /// `{name}_w` / `{name}_b` tensor must exist with the exact shape
+    /// (extra tensors are ignored, as the LOPW loader may carry them).
+    pub fn validate_params(&self,
+                           params: &BTreeMap<String, Tensor>)
+                           -> Result<()> {
+        for l in &self.layers {
+            let (wshape, bshape) = l.param_shapes();
+            for (suffix, want) in [("w", wshape), ("b", bshape)] {
+                let name = format!("{}_{suffix}", l.name);
+                let t = params
+                    .get(&name)
+                    .with_context(|| format!("missing tensor '{name}'"))?;
+                if t.shape != want {
+                    bail!("tensor '{name}' has shape {:?}, want {want:?}",
+                          t.shape);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministic random input batch `[b, h, w, c]` with values in
+    /// `[0, 1)` — the hermetic companion fixture to
+    /// `Model::synthetic`, shared by tests/benches so the input
+    /// contract cannot drift per copy.
+    pub fn synthetic_input(&self, b: usize, seed: u64) -> Tensor {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let n = b * self.input_len();
+        let [h, w, c] = self.input;
+        Tensor::new(vec![b, h, w, c],
+                    (0..n).map(|_| rng.range_f32(0.0, 1.0)).collect())
+    }
+
+    /// The canonical structural fingerprint of (this topology, `map`):
+    /// the spec-grammar string plus every layer's full provider name.
+    /// Injective over (structure, assignment) — two fingerprints are
+    /// equal iff the specs are structurally equal and the assignments
+    /// match layer for layer (pinned by
+    /// `rust/tests/config_roundtrip.rs`).  `coordinator::plan_cache`
+    /// keys prepared networks by this string.
+    ///
+    /// Panics on arity mismatch — parse-level APIs
+    /// ([`ReprMap::parse_for`]) reject that before it can get here.
+    pub fn fingerprint(&self, map: &ReprMap) -> String {
+        assert_eq!(
+            map.len(),
+            self.len(),
+            "ReprMap has {} kinds for a {}-layer spec",
+            map.len(),
+            self.len()
+        );
+        let kinds: Vec<String> =
+            map.kinds().iter().map(|k| k.name()).collect();
+        format!("{self} :: {}", kinds.join("|"))
+    }
+
+    /// Whether this spec is structurally the paper's Fig. 2 DCNN —
+    /// the only topology the PJRT AOT artifacts implement, so the
+    /// server's worker-mask split and the evaluator's backend choice
+    /// gate on it.
+    pub fn is_paper_dcnn(&self) -> bool {
+        *self == NetSpec::paper_dcnn()
+    }
+}
+
+fn parse_dims(s: &str) -> Result<[usize; 3], String> {
+    let dims: Vec<usize> = s
+        .split('x')
+        .map(|d| d.trim().parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("bad input shape '{s}': {e}"))?;
+    match dims.as_slice() {
+        [h, w, c] => Ok([*h, *w, *c]),
+        _ => Err(format!("input shape '{s}' must be HxWxC")),
+    }
+}
+
+/// `"conv(ARGS)"` with head `"conv"` → `Some("ARGS")`.
+fn strip_call<'a>(s: &'a str, head: &str) -> Option<&'a str> {
+    s.strip_prefix(head)?.trim().strip_prefix('(')?.strip_suffix(')')
+}
+
+/// `KHxKW,COUT[,pad=P]` → `(kh, kw, cout, pad)`.
+fn parse_conv_args(args: &str)
+                   -> Result<(usize, usize, usize, usize), String> {
+    let parts: Vec<&str> = args.split(',').map(str::trim).collect();
+    if parts.len() < 2 || parts.len() > 3 {
+        return Err(format!(
+            "conv takes 'KHxKW,COUT[,pad=P]', got '{args}'"
+        ));
+    }
+    let (khs, kws) = parts[0].split_once('x').ok_or_else(|| {
+        format!("conv kernel '{}' must be KHxKW", parts[0])
+    })?;
+    let num = |what: &str, s: &str| -> Result<usize, String> {
+        s.trim()
+            .parse::<usize>()
+            .map_err(|e| format!("bad conv {what} '{s}': {e}"))
+    };
+    let kh = num("kernel height", khs)?;
+    let kw = num("kernel width", kws)?;
+    let cout = num("channel count", parts[1])?;
+    let pad = match parts.get(2) {
+        Some(p) => {
+            let v = p.strip_prefix("pad=").ok_or_else(|| {
+                format!("expected 'pad=P', got '{p}'")
+            })?;
+            num("padding", v)?
+        }
+        None => 0,
+    };
+    Ok((kh, kw, cout, pad))
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    /// Running `[h, w, c]` activation shape.
+    Spatial(usize, usize, usize),
+    /// Flattened feature count (after the first dense layer).
+    Flat(usize),
+}
+
+/// Fluent, shape-checked [`NetSpec`] constructor.  The first invalid
+/// call records an error (with its layer index); `build` surfaces it.
+pub struct NetSpecBuilder {
+    input: [usize; 3],
+    layers: Vec<LayerSpec>,
+    state: State,
+    err: Option<String>,
+    n_conv: usize,
+    n_dense: usize,
+}
+
+impl NetSpecBuilder {
+    fn fail(mut self, msg: String) -> Self {
+        if self.err.is_none() {
+            self.err = Some(format!("layer {}: {msg}",
+                                    self.layers.len() + 1));
+        }
+        self
+    }
+
+    /// Append a stride-1 zero-padded convolution producing `cout`
+    /// channels.  The window must be centered (odd
+    /// `kh == kw == 2*pad + 1` — what the engine's fixed-grid im2col
+    /// actually computes); invalid after a dense layer (the input is
+    /// flat).
+    pub fn conv2d(mut self, kh: usize, kw: usize, cout: usize,
+                  pad: usize) -> Self {
+        if self.err.is_some() {
+            return self;
+        }
+        let (h, w, c) = match self.state {
+            State::Spatial(h, w, c) => (h, w, c),
+            State::Flat(_) => {
+                return self.fail("conv2d after a dense layer \
+                                  (input already flattened)"
+                    .into());
+            }
+        };
+        if kh == 0 || kw == 0 || cout == 0 {
+            return self.fail(format!(
+                "conv2d({kh}x{kw},{cout}) has a zero parameter"
+            ));
+        }
+        // The engine's im2col anchors every kernel window at
+        // (oy - pad, ox - pad) over a fixed HxW output grid, so the
+        // operation is a standard 'same' convolution ONLY when the
+        // window is centered: odd kh == kw == 2*pad + 1.  Any other
+        // pad would silently compute a spatially shifted op, so
+        // reject it here instead of mis-multiplying at runtime.
+        if kh != 2 * pad + 1 || kw != 2 * pad + 1 {
+            return self.fail(format!(
+                "conv2d({kh}x{kw}, pad={pad}) is not centered: the \
+                 'same'-size engine needs odd kh == kw == 2*pad + 1 \
+                 (e.g. 3x3 with pad=1, 5x5 with pad=2)"
+            ));
+        }
+        // centered kernels always fit: 2*pad + 1 <= h + 2*pad for
+        // any h >= 1, so no separate size check is needed
+        self.n_conv += 1;
+        self.layers.push(LayerSpec {
+            name: format!("conv{}", self.n_conv),
+            kind: LayerKind::Conv2d { kh, kw, cin: c, cout, pad },
+            activation: Activation::Linear,
+            pool: false,
+        });
+        self.state = State::Spatial(h, w, cout);
+        self
+    }
+
+    /// Append a fully-connected layer with `d_out` outputs; a spatial
+    /// input flattens to `h * w * c` features.
+    pub fn dense(mut self, d_out: usize) -> Self {
+        if self.err.is_some() {
+            return self;
+        }
+        if d_out == 0 {
+            return self.fail("dense(0) has no outputs".into());
+        }
+        let d_in = match self.state {
+            State::Spatial(h, w, c) => h * w * c,
+            State::Flat(n) => n,
+        };
+        self.n_dense += 1;
+        self.layers.push(LayerSpec {
+            name: format!("fc{}", self.n_dense),
+            kind: LayerKind::Dense { d_in, d_out },
+            activation: Activation::Linear,
+            pool: false,
+        });
+        self.state = State::Flat(d_out);
+        self
+    }
+
+    /// ReLU on the most recent layer's output.
+    pub fn relu(mut self) -> Self {
+        if self.err.is_some() {
+            return self;
+        }
+        match self.layers.last_mut() {
+            None => self.fail("relu before any layer".into()),
+            Some(l) if l.activation == Activation::Relu => {
+                self.fail("duplicate relu".into())
+            }
+            Some(l) => {
+                l.activation = Activation::Relu;
+                self
+            }
+        }
+    }
+
+    /// 2x2 stride-2 max pooling after the most recent (conv) layer;
+    /// requires even spatial dims.
+    pub fn pool(mut self) -> Self {
+        if self.err.is_some() {
+            return self;
+        }
+        let (h, w, c) = match self.state {
+            State::Spatial(h, w, c) => (h, w, c),
+            State::Flat(_) => {
+                return self.fail("pool on a flattened (dense) \
+                                  output"
+                    .into());
+            }
+        };
+        match self.layers.last_mut() {
+            None => self.fail("pool before any layer".into()),
+            Some(l) if l.pool => self.fail("duplicate pool".into()),
+            Some(l) if !matches!(l.kind, LayerKind::Conv2d { .. }) => {
+                self.fail("pool only follows conv layers".into())
+            }
+            Some(_) if h % 2 != 0 || w % 2 != 0 => self.fail(format!(
+                "pool needs even spatial dims, have {h}x{w}"
+            )),
+            Some(l) => {
+                l.pool = true;
+                self.state = State::Spatial(h / 2, w / 2, c);
+                self
+            }
+        }
+    }
+
+    /// Finish: the validated spec, or the first recorded error.
+    pub fn build(self) -> Result<NetSpec, String> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        if self.layers.is_empty() {
+            return Err("a NetSpec needs at least one layer".into());
+        }
+        Ok(NetSpec { input: self.input, layers: self.layers })
+    }
+}
+
+/// Per-layer representation assignment — the network *configuration*
+/// (formerly the fixed-arity `NetConfig`): one [`ArithKind`] per
+/// [`NetSpec`] layer.  Arity is fixed at construction; the
+/// spec-checked entry points ([`ReprMap::parse_for`],
+/// [`ReprMap::uniform_for`]) guarantee it matches the topology.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReprMap {
+    kinds: Vec<ArithKind>,
+}
+
+impl fmt::Display for ReprMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+impl ReprMap {
+    /// Explicit per-layer assignment.  Panics on an empty vector
+    /// (no spec has zero layers).
+    pub fn from_kinds(kinds: Vec<ArithKind>) -> ReprMap {
+        assert!(!kinds.is_empty(), "a ReprMap needs at least one layer");
+        ReprMap { kinds }
+    }
+
+    /// `kind` broadcast over `n` layers.
+    pub fn uniform(kind: ArithKind, n: usize) -> ReprMap {
+        ReprMap::from_kinds(vec![kind; n])
+    }
+
+    /// `kind` broadcast over every layer of `spec`.
+    pub fn uniform_for(spec: &NetSpec, kind: ArithKind) -> ReprMap {
+        ReprMap::uniform(kind, spec.len())
+    }
+
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    /// Always false — construction rejects empty assignments.
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    pub fn kinds(&self) -> &[ArithKind] {
+        &self.kinds
+    }
+
+    pub fn kind(&self, layer: usize) -> &ArithKind {
+        &self.kinds[layer]
+    }
+
+    /// Reassign one layer's provider (the explorer's per-part move).
+    pub fn set(&mut self, layer: usize, kind: ArithKind) {
+        self.kinds[layer] = kind;
+    }
+
+    /// Human name: the single provider name when uniform, else the
+    /// `" | "`-joined per-layer names.  Parses back via
+    /// [`ReprMap::parse_for`] against the same-arity spec.
+    pub fn name(&self) -> String {
+        if self.kinds.iter().all(|k| k == &self.kinds[0]) {
+            self.kinds[0].name()
+        } else {
+            self.kinds
+                .iter()
+                .map(|k| k.name())
+                .collect::<Vec<_>>()
+                .join(" | ")
+        }
+    }
+
+    /// Parse the config grammar against `spec`: one segment
+    /// broadcasts uniformly, otherwise exactly `spec.len()` segments.
+    pub fn parse_for(spec: &NetSpec, s: &str)
+                     -> Result<ReprMap, String> {
+        ReprMap::parse_n(s, spec.len())
+    }
+
+    /// [`ReprMap::parse_for`] with an explicit arity.  Errors name
+    /// the offending layer index and token; empty segments (e.g.
+    /// `"FI(6,8)||float32"`) are rejected rather than skipped.
+    pub fn parse_n(s: &str, n: usize) -> Result<ReprMap, String> {
+        assert!(n > 0, "a ReprMap needs at least one layer");
+        let parts: Vec<&str> = s.split('|').map(str::trim).collect();
+        for (i, p) in parts.iter().enumerate() {
+            if p.is_empty() {
+                return Err(format!(
+                    "layer {}/{}: empty segment in '{s}'",
+                    i + 1,
+                    parts.len()
+                ));
+            }
+        }
+        if parts.len() == 1 {
+            let k = ArithKind::parse(parts[0]).map_err(|e| {
+                format!("layer 1/1 ('{}'): {e}", parts[0])
+            })?;
+            return Ok(ReprMap::uniform(k, n));
+        }
+        if parts.len() != n {
+            return Err(format!(
+                "expected 1 or {n} layer configs in '{s}', got {}",
+                parts.len()
+            ));
+        }
+        let kinds = parts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                ArithKind::parse(p).map_err(|e| {
+                    format!("layer {}/{n} ('{p}'): {e}", i + 1)
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ReprMap::from_kinds(kinds))
+    }
+
+    /// True when every layer is PJRT-expressible (exact arithmetic).
+    pub fn pjrt_expressible(&self) -> bool {
+        self.kinds.iter().all(|k| k.pjrt_expressible())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_matches_fig2() {
+        let s = NetSpec::paper_dcnn();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.input_shape(), [28, 28, 1]);
+        assert_eq!(s.input_len(), 784);
+        assert!(s.is_paper_dcnn());
+        assert_eq!(
+            s.param_names(),
+            vec!["conv1_w", "conv1_b", "conv2_w", "conv2_b", "fc1_w",
+                 "fc1_b", "fc2_w", "fc2_b"]
+        );
+        assert_eq!(s.layers()[2].param_shapes().0, vec![3136, 1024]);
+        assert_eq!(s.output_shapes(),
+                   vec![vec![14, 14, 32], vec![7, 7, 64], vec![1024],
+                        vec![10]]);
+        let params = 5 * 5 * 32 + 32 + 5 * 5 * 32 * 64 + 64
+            + 3136 * 1024 + 1024 + 1024 * 10 + 10;
+        assert_eq!(s.param_count(), params);
+    }
+
+    #[test]
+    fn display_parse_roundtrip_paper() {
+        let s = NetSpec::paper_dcnn();
+        let text = s.to_string();
+        assert_eq!(
+            text,
+            "28x28x1: conv(5x5,32,pad=2)+relu+pool | \
+             conv(5x5,64,pad=2)+relu+pool | dense(1024)+relu | \
+             dense(10)"
+        );
+        assert_eq!(NetSpec::parse(&text).unwrap(), s);
+    }
+
+    #[test]
+    fn mlp_spec_builds_and_roundtrips() {
+        let s = NetSpec::parse(
+            "28x28x1: dense(256)+relu | dense(128)+relu | \
+             dense(64)+relu | dense(32)+relu | dense(10)",
+        )
+        .unwrap();
+        assert_eq!(s.len(), 5);
+        assert!(!s.is_paper_dcnn());
+        assert_eq!(s.layers()[0].param_shapes().0, vec![784, 256]);
+        assert_eq!(s.layers()[0].name, "fc1");
+        assert_eq!(s.layers()[4].name, "fc5");
+        assert_eq!(NetSpec::parse(&s.to_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn builder_rejects_bad_shapes() {
+        // pool on odd dims: 28 -> 14 -> 7, a third pool must fail
+        let e = NetSpec::builder([28, 28, 1])
+            .conv2d(3, 3, 4, 1)
+            .pool()
+            .conv2d(3, 3, 4, 1)
+            .pool()
+            .conv2d(3, 3, 4, 1)
+            .pool()
+            .build()
+            .unwrap_err();
+        assert!(e.contains("even spatial"), "{e}");
+        // conv after dense
+        let e = NetSpec::builder([8, 8, 1])
+            .dense(4)
+            .conv2d(3, 3, 2, 1)
+            .build()
+            .unwrap_err();
+        assert!(e.contains("layer 2") && e.contains("flattened"), "{e}");
+        // non-centered windows (the engine's fixed-grid im2col would
+        // silently compute a shifted op) are rejected up front
+        let e = NetSpec::builder([8, 8, 1])
+            .conv2d(3, 3, 2, 0) // 3x3 needs pad=1
+            .build()
+            .unwrap_err();
+        assert!(e.contains("not centered"), "{e}");
+        let e = NetSpec::builder([8, 8, 1])
+            .conv2d(2, 2, 2, 1) // even kernels have no centered pad
+            .build()
+            .unwrap_err();
+        assert!(e.contains("not centered"), "{e}");
+        let e = NetSpec::parse("8x8x1: conv(5x5,4,pad=1) | dense(2)")
+            .unwrap_err();
+        assert!(e.contains("not centered"), "{e}");
+        // no layers at all
+        assert!(NetSpec::builder([4, 4, 1]).build().is_err());
+        // modifiers without / duplicated on a layer
+        assert!(NetSpec::builder([4, 4, 1]).relu().build().is_err());
+        let e = NetSpec::builder([4, 4, 1])
+            .dense(2)
+            .relu()
+            .relu()
+            .build()
+            .unwrap_err();
+        assert!(e.contains("duplicate relu"), "{e}");
+        let e = NetSpec::builder([4, 4, 1])
+            .dense(2)
+            .pool()
+            .build()
+            .unwrap_err();
+        assert!(e.contains("pool"), "{e}");
+    }
+
+    #[test]
+    fn parse_errors_name_the_layer() {
+        let e = NetSpec::parse("28x28x1: dense(10) |  | dense(4)")
+            .unwrap_err();
+        assert!(e.contains("layer 2/3") && e.contains("empty segment"),
+                "{e}");
+        let e = NetSpec::parse("28x28x1: blorp(3)").unwrap_err();
+        assert!(e.contains("layer 1/1") && e.contains("blorp"), "{e}");
+        let e = NetSpec::parse("28x28x1: dense(10)+swish").unwrap_err();
+        assert!(e.contains("+swish"), "{e}");
+        assert!(NetSpec::parse("dense(10)").unwrap_err()
+            .contains("missing ':'"));
+        assert!(NetSpec::parse("28x28: dense(10)").unwrap_err()
+            .contains("HxWxC"));
+    }
+
+    #[test]
+    fn fingerprint_separates_structure_and_assignment() {
+        let paper = NetSpec::paper_dcnn();
+        let mlp =
+            NetSpec::parse("28x28x1: dense(64)+relu | dense(10)")
+                .unwrap();
+        let u4 = ReprMap::uniform_for(&paper, ArithKind::Float32);
+        let u2 = ReprMap::uniform_for(&mlp, ArithKind::Float32);
+        // same (spec, map) -> same fingerprint
+        assert_eq!(paper.fingerprint(&u4),
+                   NetSpec::paper_dcnn().fingerprint(&u4));
+        // different topology, same uniform kind -> different
+        assert_ne!(paper.fingerprint(&u4), mlp.fingerprint(&u2));
+        // same topology, different assignment -> different
+        let mut v4 = u4.clone();
+        v4.set(2, ArithKind::parse("FI(6,8)").unwrap());
+        assert_ne!(paper.fingerprint(&u4), paper.fingerprint(&v4));
+    }
+
+    #[test]
+    #[should_panic(expected = "ReprMap has 2 kinds")]
+    fn fingerprint_rejects_arity_mismatch() {
+        let paper = NetSpec::paper_dcnn();
+        let two = ReprMap::uniform(ArithKind::Float32, 2);
+        paper.fingerprint(&two);
+    }
+
+    #[test]
+    fn reprmap_parse_for_checks_arity() {
+        let mlp = NetSpec::parse(
+            "28x28x1: dense(64)+relu | dense(32)+relu | dense(10)",
+        )
+        .unwrap();
+        // broadcast
+        let u = ReprMap::parse_for(&mlp, "FI(6,8)").unwrap();
+        assert_eq!(u.len(), 3);
+        assert_eq!(u.name(), "FI(6, 8)");
+        // exact arity
+        let m =
+            ReprMap::parse_for(&mlp, "FI(6,8)|FL(4,9)|H(8,8,14)")
+                .unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.kind(1).name(), "FL(4, 9)");
+        // wrong arity names both counts
+        let e = ReprMap::parse_for(&mlp, "FI(6,8)|FL(4,9)")
+            .unwrap_err();
+        assert!(e.contains("expected 1 or 3") && e.contains("got 2"),
+                "{e}");
+    }
+
+    #[test]
+    fn reprmap_parse_rejects_empty_segments_with_index() {
+        let e = ReprMap::parse_n("FI(6,8)||float32", 3).unwrap_err();
+        assert!(e.contains("layer 2/3") && e.contains("empty segment"),
+                "{e}");
+        let e = ReprMap::parse_n("", 3).unwrap_err();
+        assert!(e.contains("empty segment"), "{e}");
+        let e = ReprMap::parse_n("FI(6,8)|XX(1)|float32", 3)
+            .unwrap_err();
+        assert!(e.contains("layer 2/3") && e.contains("XX(1)"), "{e}");
+    }
+
+    #[test]
+    fn synthetic_input_shapes_follow_the_spec() {
+        let s = NetSpec::parse("6x4x2: dense(3)").unwrap();
+        let x = s.synthetic_input(5, 1);
+        assert_eq!(x.shape, vec![5, 6, 4, 2]);
+        assert!(x.data.iter().all(|&v| (0.0..1.0).contains(&v)));
+        // deterministic in the seed
+        assert_eq!(s.synthetic_input(5, 1).data, x.data);
+    }
+}

@@ -16,9 +16,9 @@
 //! nearest lowered batch size.
 
 use crate::approx::arith::ArithKind;
-use crate::nn::network::NetConfig;
+use crate::nn::spec::ReprMap;
 use crate::runtime::artifact::ArtifactDir;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// Try to start the PJRT runner, warning on stderr and returning `None`
 /// when the backend is unavailable (a build without the `pjrt` feature,
@@ -52,18 +52,26 @@ impl Variant {
         }
     }
 
-    /// Decide the artifact for a network configuration, or None when the
-    /// config needs the bit-accurate engine (approximate multipliers or
-    /// mixed representation families).
-    pub fn for_config(cfg: &NetConfig) -> Option<Variant> {
-        if cfg.layers.iter().all(|l| matches!(l, ArithKind::Float32)) {
+    /// Decide the artifact for a network configuration, or None when
+    /// the config needs the bit-accurate engine (approximate
+    /// multipliers or mixed representation families).  Note the
+    /// artifacts only implement the *paper* topology — callers gate
+    /// on `NetSpec::is_paper_dcnn` before trusting a `Some`.
+    pub fn for_config(cfg: &ReprMap) -> Option<Variant> {
+        if cfg.kinds().iter().all(|l| matches!(l, ArithKind::Float32)) {
             return Some(Variant::F32);
         }
-        if cfg.layers.iter().all(|l| matches!(l, ArithKind::FixedExact(_)))
+        if cfg
+            .kinds()
+            .iter()
+            .all(|l| matches!(l, ArithKind::FixedExact(_)))
         {
             return Some(Variant::Fi);
         }
-        if cfg.layers.iter().all(|l| matches!(l, ArithKind::FloatExact(_)))
+        if cfg
+            .kinds()
+            .iter()
+            .all(|l| matches!(l, ArithKind::FloatExact(_)))
         {
             return Some(Variant::Fl);
         }
@@ -80,23 +88,23 @@ impl Variant {
 /// the exact kernels a config runs on without preparing a network.
 /// Both backends keep the constant weight side resident: PJRT uploads
 /// weight buffers once per config, the engine conditions each layer's
-/// weights into prepacked kernel panels once in `Dcnn::prepare`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// weights into prepacked kernel panels once in `Model::prepare`.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ExecutionPlan {
     /// Runs on the PJRT fake-quant artifacts (when a runner exists).
     Pjrt(Variant),
     /// Runs on the engine; one packed-kernel name per layer (e.g.
     /// `packed-drum`), matching `PreparedNet::kernel_names`.  Each
     /// layer's plan carries its prepacked weight panels after
-    /// `Dcnn::prepare`.
-    Engine([&'static str; 4]),
+    /// `Model::prepare`.
+    Engine(Vec<&'static str>),
 }
 
 impl ExecutionPlan {
     /// The per-layer engine kernel names, `None` for PJRT plans — for
     /// serving/reporting code that wants to print what a config's
     /// forwards will run on (e.g. `examples/serve_inference.rs`).
-    pub fn engine_kernels(&self) -> Option<&[&'static str; 4]> {
+    pub fn engine_kernels(&self) -> Option<&[&'static str]> {
         match self {
             ExecutionPlan::Engine(names) => Some(names),
             ExecutionPlan::Pjrt(_) => None,
@@ -116,27 +124,30 @@ impl ExecutionPlan {
 }
 
 /// Decide the execution plan for `cfg`.  Configs with an expressible
-/// artifact variant plan for PJRT (callers without a live runner fall
-/// back to the engine); everything else names its engine kernels.
-pub fn execution_plan(cfg: &NetConfig) -> ExecutionPlan {
+/// artifact variant plan for PJRT (callers without a live runner — or
+/// with a non-paper topology — fall back to the engine); everything
+/// else names its engine kernels, one per layer, however many the
+/// config has.
+pub fn execution_plan(cfg: &ReprMap) -> ExecutionPlan {
     match Variant::for_config(cfg) {
         Some(v) => ExecutionPlan::Pjrt(v),
-        None => {
-            let mut names = [""; 4];
-            for (n, l) in names.iter_mut().zip(&cfg.layers) {
-                // allocation-free lookup: this runs per config scored
-                // by the explorer
-                *n = crate::nn::gemm::kernel_name(l);
-            }
-            ExecutionPlan::Engine(names)
-        }
+        None => ExecutionPlan::Engine(
+            cfg.kinds()
+                .iter()
+                .map(crate::nn::gemm::kernel_name)
+                .collect(),
+        ),
     }
 }
 
-/// Quantization scalars (q0, q1) per layer for the fi/fl artifacts.
-pub fn quant_scalars(cfg: &NetConfig) -> Result<Vec<f32>> {
+/// Quantization scalars (q0, q1) per layer for the fi/fl artifacts
+/// (which implement the 4-layer paper topology only).
+pub fn quant_scalars(cfg: &ReprMap) -> Result<Vec<f32>> {
+    ensure!(cfg.len() == 4,
+            "the AOT artifacts implement the 4-layer paper DCNN; \
+             config has {} layers", cfg.len());
     let mut out = Vec::with_capacity(8);
-    for l in &cfg.layers {
+    for l in cfg.kinds() {
         match l {
             ArithKind::Float32 => out.extend([0.0, 0.0]),
             ArithKind::FixedExact(r) => {
@@ -162,7 +173,7 @@ mod pjrt_runner {
     use crate::approx::arith::ArithKind;
     use crate::nn::loader::load_weights;
     use crate::nn::loader::PARAM_NAMES;
-    use crate::nn::network::NetConfig;
+    use crate::nn::spec::ReprMap;
     use crate::nn::tensor::Tensor;
     use crate::runtime::artifact::ArtifactDir;
     use anyhow::{Context, Result};
@@ -226,13 +237,13 @@ mod pjrt_runner {
 
         /// Upload (quantizing first when required) the weight set for
         /// `cfg`.
-        fn weight_buffers(&mut self, cfg: &NetConfig)
+        fn weight_buffers(&mut self, cfg: &ReprMap)
                           -> Result<&Vec<xla::PjRtBuffer>> {
             let key = cfg.name();
             if !self.wbufs.contains_key(&key) {
                 let mut bufs = Vec::with_capacity(8);
                 for (pi, (dims, data)) in self.weights.iter().enumerate() {
-                    let kind = &cfg.layers[pi / 2]; // w, b alternate
+                    let kind = cfg.kind(pi / 2); // w, b alternate
                     let qdata: Vec<f32> = match kind {
                         ArithKind::Float32 => data.clone(),
                         k => data.iter().map(|&v| k.quantize(v)).collect(),
@@ -253,7 +264,7 @@ mod pjrt_runner {
         /// Run a forward pass for `cfg` over `x` ([n,28,28,1] tensor);
         /// returns logits [n,10].  Pads to the nearest lowered batch size
         /// internally.
-        pub fn forward(&mut self, cfg: &NetConfig, x: &Tensor)
+        pub fn forward(&mut self, cfg: &ReprMap, x: &Tensor)
                        -> Result<Tensor> {
             let variant = Variant::for_config(cfg).with_context(|| {
                 format!("config {} is not PJRT-expressible", cfg.name())
@@ -278,7 +289,7 @@ mod pjrt_runner {
             Ok(Tensor::new(vec![n, 10], logits))
         }
 
-        fn forward_padded(&mut self, cfg: &NetConfig, variant: Variant,
+        fn forward_padded(&mut self, cfg: &ReprMap, variant: Variant,
                           padded: &[f32], batch: usize)
                           -> Result<Vec<f32>> {
             let scalars = if variant == Variant::F32 {
@@ -344,7 +355,7 @@ pub use pjrt_runner::ModelRunner;
 
 #[cfg(not(feature = "pjrt"))]
 mod stub_runner {
-    use crate::nn::network::NetConfig;
+    use crate::nn::spec::ReprMap;
     use crate::nn::tensor::Tensor;
     use crate::runtime::artifact::ArtifactDir;
     use anyhow::{bail, Result};
@@ -369,7 +380,7 @@ mod stub_runner {
             bail!(UNAVAILABLE)
         }
 
-        pub fn forward(&mut self, _cfg: &NetConfig, _x: &Tensor)
+        pub fn forward(&mut self, _cfg: &ReprMap, _x: &Tensor)
                        -> Result<Tensor> {
             bail!(UNAVAILABLE)
         }
@@ -390,64 +401,75 @@ mod tests {
     use super::*;
     use crate::numeric::{FixedPoint, FloatRep};
 
+    fn cfg4(s: &str) -> ReprMap {
+        ReprMap::parse_n(s, 4).unwrap()
+    }
+
     #[test]
     fn variant_selection() {
-        let f32cfg = NetConfig::uniform(ArithKind::Float32);
+        let f32cfg = ReprMap::uniform(ArithKind::Float32, 4);
         assert_eq!(Variant::for_config(&f32cfg), Some(Variant::F32));
-        let fi = NetConfig::uniform(ArithKind::FixedExact(
-            FixedPoint::new(6, 8),
-        ));
+        let fi = ReprMap::uniform(
+            ArithKind::FixedExact(FixedPoint::new(6, 8)),
+            4,
+        );
         assert_eq!(Variant::for_config(&fi), Some(Variant::Fi));
-        let fl = NetConfig::uniform(ArithKind::FloatExact(
-            FloatRep::new(4, 9),
-        ));
+        let fl = ReprMap::uniform(
+            ArithKind::FloatExact(FloatRep::new(4, 9)),
+            4,
+        );
         assert_eq!(Variant::for_config(&fl), Some(Variant::Fl));
-        let h = NetConfig::parse("H(6,8,12)").unwrap();
+        let h = cfg4("H(6,8,12)");
         assert_eq!(Variant::for_config(&h), None);
-        let mixed = NetConfig::parse("FI(6,8)|FI(6,8)|FL(4,9)|FL(4,9)")
-            .unwrap();
+        let mixed = cfg4("FI(6,8)|FI(6,8)|FL(4,9)|FL(4,9)");
         assert_eq!(Variant::for_config(&mixed), None);
     }
 
     #[test]
     fn execution_plan_selection() {
-        let fi = NetConfig::uniform(ArithKind::FixedExact(
-            FixedPoint::new(6, 8),
-        ));
+        let fi = ReprMap::uniform(
+            ArithKind::FixedExact(FixedPoint::new(6, 8)),
+            4,
+        );
         assert_eq!(execution_plan(&fi),
                    ExecutionPlan::Pjrt(Variant::Fi));
         assert_eq!(execution_plan(&fi).engine_kernels(), None);
         assert!(execution_plan(&fi).is_pjrt());
-        let mixed = NetConfig::parse("FI(6,8)|FI(6,8)|H(8,8,14)|I(5,10)")
-            .unwrap();
+        let mixed = cfg4("FI(6,8)|FI(6,8)|H(8,8,14)|I(5,10)");
         assert_eq!(
             execution_plan(&mixed),
-            ExecutionPlan::Engine(["packed-fi", "packed-fi",
-                                   "packed-drum", "packed-cfpu"])
+            ExecutionPlan::Engine(vec!["packed-fi", "packed-fi",
+                                       "packed-drum", "packed-cfpu"])
         );
         assert_eq!(
             execution_plan(&mixed).engine_kernels(),
             Some(&["packed-fi", "packed-fi", "packed-drum",
-                   "packed-cfpu"])
+                   "packed-cfpu"][..])
         );
         assert!(!execution_plan(&mixed).is_pjrt());
+        // engine plans follow the config's arity, not a fixed 4
+        let five = ReprMap::parse_n("H(6,8,12)", 5).unwrap();
+        assert_eq!(execution_plan(&five).engine_kernels()
+                       .map(|k| k.len()),
+                   Some(5));
     }
 
     #[test]
     fn scalar_packing() {
-        let cfg = NetConfig::parse("FI(5,8)|FI(5,8)|FI(6,8)|FI(6,8)")
-            .unwrap();
+        let cfg = cfg4("FI(5,8)|FI(5,8)|FI(6,8)|FI(6,8)");
         let s = quant_scalars(&cfg).unwrap();
         assert_eq!(s.len(), 8);
         assert_eq!(s[0], 256.0); // 2^8
         assert_eq!(s[1], (1u64 << 13) as f32 - 1.0); // 2^(5+8)-1
         assert_eq!(s[4], 256.0);
         assert_eq!(s[5], (1u64 << 14) as f32 - 1.0);
-        let flc = NetConfig::parse("FL(4,9)").unwrap();
+        let flc = cfg4("FL(4,9)");
         let s = quant_scalars(&flc).unwrap();
         assert_eq!(&s[0..2], &[4.0, 9.0]);
-        assert!(quant_scalars(&NetConfig::parse("I(5,10)").unwrap())
-            .is_err());
+        assert!(quant_scalars(&cfg4("I(5,10)")).is_err());
+        // non-paper arity is rejected, not silently mis-packed
+        let five = ReprMap::uniform(ArithKind::Float32, 5);
+        assert!(quant_scalars(&five).is_err());
     }
 
     #[cfg(not(feature = "pjrt"))]

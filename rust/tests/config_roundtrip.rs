@@ -1,0 +1,302 @@
+//! Property suite for the topology-generic config API: random
+//! `NetSpec`s × random `ReprMap`s round-trip through the string
+//! grammars and the TOML `[serve]` schema, structural fingerprints
+//! are equal iff (spec, assignment) are equal, and arity mismatches /
+//! malformed segments are rejected with the offending layer named.
+//! Scale with `LOP_PROP_CASES=N` like the other property suites.
+
+use lop::approx::arith::ArithKind;
+use lop::config::{ServeFileConfig, TomlDoc};
+use lop::nn::spec::{NetSpec, NetSpecBuilder, ReprMap};
+use lop::util::prop;
+use lop::util::prng::Rng;
+
+/// A random valid spec: 0–2 conv layers (kernel 1/3/5, optional
+/// relu/pool) then 1–3 dense layers — every shape decision mirrors
+/// the builder's own rules so `build` cannot fail.
+fn rand_spec(rng: &mut Rng) -> NetSpec {
+    let h = [8usize, 12, 16, 28][rng.below(4) as usize];
+    let w = [8usize, 12, 16, 28][rng.below(4) as usize];
+    let c = 1 + rng.below(3) as usize;
+    let mut b: NetSpecBuilder = NetSpec::builder([h, w, c]);
+    let (mut hh, mut ww) = (h, w);
+    for _ in 0..rng.below(3) {
+        // the builder only accepts centered windows: kh == kw ==
+        // 2*pad + 1 (what the engine's fixed-grid im2col computes)
+        let k = [1usize, 3, 5][rng.below(3) as usize];
+        let pad = (k - 1) / 2;
+        let cout = 1 + rng.below(8) as usize;
+        b = b.conv2d(k, k, cout, pad);
+        if rng.below(2) == 1 {
+            b = b.relu();
+        }
+        if hh % 2 == 0 && ww % 2 == 0 && rng.below(2) == 1 {
+            b = b.pool();
+            hh /= 2;
+            ww /= 2;
+        }
+    }
+    for _ in 0..1 + rng.below(3) {
+        b = b.dense(1 + rng.below(32) as usize);
+        if rng.below(2) == 1 {
+            b = b.relu();
+        }
+    }
+    b.build().expect("generator only emits valid specs")
+}
+
+/// A random provider covering every `ArithKind` variant, parameters
+/// inside each unit's supported window.
+fn rand_kind(rng: &mut Rng) -> ArithKind {
+    let i = rng.below(9) as u32;
+    let f = 1 + rng.below(12) as u32;
+    let e = 2 + rng.below(7) as u32;
+    let m = 1 + rng.below(20) as u32;
+    match rng.below(6) {
+        0 => ArithKind::parse("float32").unwrap(),
+        1 => ArithKind::parse(&format!("FI({i},{f})")).unwrap(),
+        2 => {
+            let t = 2 + rng.below(14) as u32;
+            ArithKind::parse(&format!("H({i},{f},{t})")).unwrap()
+        }
+        3 => ArithKind::parse(&format!("FL({e},{m})")).unwrap(),
+        4 => {
+            let w = 1 + rng.below(6) as u32;
+            ArithKind::parse(&format!("I({e},{m},{w})")).unwrap()
+        }
+        _ => ArithKind::parse("binxnor").unwrap(),
+    }
+}
+
+fn rand_map(rng: &mut Rng, n: usize) -> ReprMap {
+    if rng.below(4) == 0 {
+        // every 4th map is uniform, exercising the broadcast form
+        ReprMap::uniform(rand_kind(rng), n)
+    } else {
+        ReprMap::from_kinds((0..n).map(|_| rand_kind(rng)).collect())
+    }
+}
+
+#[test]
+fn spec_grammar_roundtrips() {
+    prop::check_msg(
+        "NetSpec::parse(display(spec)) == spec",
+        201,
+        prop::DEFAULT_CASES,
+        |rng| rand_spec(rng).to_string(),
+        |text| {
+            let spec = NetSpec::parse(text)
+                .map_err(|e| format!("re-parse failed: {e}"))?;
+            if spec.to_string() == *text {
+                Ok(())
+            } else {
+                Err(format!("display drifted: '{spec}'"))
+            }
+        },
+    );
+}
+
+#[test]
+fn reprmap_grammar_roundtrips_against_its_spec() {
+    prop::check_msg(
+        "ReprMap::parse_for(spec, name(map)) == map",
+        202,
+        prop::DEFAULT_CASES,
+        |rng| {
+            let spec = rand_spec(rng);
+            let map = rand_map(rng, spec.len());
+            (spec, map)
+        },
+        |(spec, map)| {
+            let back = ReprMap::parse_for(spec, &map.name())
+                .map_err(|e| format!("re-parse failed: {e}"))?;
+            if back == *map {
+                Ok(())
+            } else {
+                Err(format!("got {}, want {}", back.name(), map.name()))
+            }
+        },
+    );
+}
+
+#[test]
+fn toml_serve_schema_roundtrips_spec_and_configs() {
+    prop::check_msg(
+        "[serve] model + configs round-trip through TOML",
+        203,
+        64, // each case parses a document; keep the suite fast
+        |rng| {
+            let spec = rand_spec(rng);
+            let map = rand_map(rng, spec.len());
+            (spec, map)
+        },
+        |(spec, map)| {
+            let text = format!(
+                "[serve]\nmodel = \"{spec}\"\nconfigs = [\"{}\"]\n",
+                map.name()
+            );
+            let doc = TomlDoc::parse(&text)
+                .map_err(|e| format!("toml: {e}"))?;
+            let fc = ServeFileConfig::from_toml(&doc)
+                .map_err(|e| format!("schema: {e}"))?;
+            if fc.spec != *spec {
+                return Err(format!("spec drifted: '{}'", fc.spec));
+            }
+            if fc.configs != vec![map.clone()] {
+                return Err(format!("configs drifted: {:?}",
+                                   fc.configs));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fingerprints_equal_iff_spec_and_assignment_equal() {
+    prop::check_msg(
+        "fingerprint(a) == fingerprint(b) iff a == b",
+        204,
+        prop::DEFAULT_CASES,
+        |rng| {
+            let s1 = rand_spec(rng);
+            let m1 = rand_map(rng, s1.len());
+            // half the cases compare a pair against itself, half
+            // against an independently drawn pair
+            let same = rng.below(2) == 0;
+            let (s2, m2) = if same {
+                (s1.clone(), m1.clone())
+            } else {
+                let s2 = rand_spec(rng);
+                let m2 = rand_map(rng, s2.len());
+                (s2, m2)
+            };
+            (s1, m1, s2, m2)
+        },
+        |(s1, m1, s2, m2)| {
+            let eq_pair = s1 == s2 && m1 == m2;
+            let eq_fp = s1.fingerprint(m1) == s2.fingerprint(m2);
+            if eq_pair == eq_fp {
+                Ok(())
+            } else {
+                Err(format!(
+                    "pair-equal = {eq_pair} but fingerprint-equal = \
+                     {eq_fp}\n  fp1 = {}\n  fp2 = {}",
+                    s1.fingerprint(m1),
+                    s2.fingerprint(m2)
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn fingerprint_is_sensitive_to_single_layer_changes() {
+    prop::check_msg(
+        "flipping one assignment changes the fingerprint",
+        205,
+        prop::DEFAULT_CASES,
+        |rng| {
+            let spec = rand_spec(rng);
+            let map = rand_map(rng, spec.len());
+            let layer = rng.below(spec.len() as u64) as usize;
+            let mut other = rand_kind(rng);
+            // redraw until the kind actually differs
+            while other == *map.kind(layer) {
+                other = rand_kind(rng);
+            }
+            (spec, map, layer, other)
+        },
+        |(spec, map, layer, other)| {
+            let mut flipped = map.clone();
+            flipped.set(*layer, *other);
+            if spec.fingerprint(map) == spec.fingerprint(&flipped) {
+                Err(format!(
+                    "layer {layer} flip invisible: {}",
+                    spec.fingerprint(map)
+                ))
+            } else {
+                Ok(())
+            }
+        },
+    );
+}
+
+#[test]
+fn arity_mismatches_are_rejected() {
+    prop::check_msg(
+        "ReprMap::parse_for rejects wrong-arity configs",
+        206,
+        prop::DEFAULT_CASES,
+        |rng| {
+            let spec = rand_spec(rng);
+            // an explicit per-layer string of the WRONG arity
+            // (n + 1, or n - 1 when that is still >= 2 so it cannot
+            // be read as a broadcast)
+            let n = spec.len();
+            let wrong = if n >= 3 && rng.below(2) == 0 {
+                n - 1
+            } else {
+                n + 1
+            };
+            let map = rand_map(rng, wrong);
+            let text = map
+                .kinds()
+                .iter()
+                .map(|k| k.name())
+                .collect::<Vec<_>>()
+                .join("|");
+            (spec, wrong, text)
+        },
+        |(spec, wrong, text)| {
+            if *wrong == 1 || *wrong == spec.len() {
+                return Ok(()); // a 1-segment string is a broadcast
+            }
+            match ReprMap::parse_for(spec, text) {
+                Err(e) if e.contains(&format!("{}", spec.len())) => {
+                    Ok(())
+                }
+                Err(e) => Err(format!(
+                    "error does not name the expected arity: {e}"
+                )),
+                Ok(_) => Err("wrong arity accepted".to_string()),
+            }
+        },
+    );
+}
+
+#[test]
+fn every_arith_kind_roundtrips_through_its_name() {
+    // the satellite contract: parse(display(c)) == c for every
+    // ArithKind, including non-default CFPU tuning widths
+    prop::check_msg(
+        "ArithKind::parse(name(k)) == k",
+        207,
+        prop::DEFAULT_CASES,
+        |rng| rand_kind(rng),
+        |k| {
+            let back = ArithKind::parse(&k.name())
+                .map_err(|e| format!("re-parse failed: {e}"))?;
+            if back == *k {
+                Ok(())
+            } else {
+                Err(format!("got {}, want {}", back.name(), k.name()))
+            }
+        },
+    );
+}
+
+#[test]
+fn malformed_configs_name_the_offending_layer() {
+    let spec = NetSpec::parse(
+        "28x28x1: dense(32)+relu | dense(16)+relu | dense(10)",
+    )
+    .unwrap();
+    let e = ReprMap::parse_for(&spec, "FI(6,8)||float32").unwrap_err();
+    assert!(e.contains("layer 2/3") && e.contains("empty segment"),
+            "{e}");
+    let e = ReprMap::parse_for(&spec, "FI(6,8)|WAT(9)|float32")
+        .unwrap_err();
+    assert!(e.contains("layer 2/3") && e.contains("WAT(9)"), "{e}");
+    let e = ReprMap::parse_for(&spec, "FI(6,8)|float32").unwrap_err();
+    assert!(e.contains("expected 1 or 3"), "{e}");
+}

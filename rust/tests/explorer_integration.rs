@@ -8,17 +8,21 @@ use lop::coordinator::explorer::{explore, ExploreOpts, Family};
 use lop::coordinator::ranges::profile_ranges;
 use lop::data::Dataset;
 use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
-use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::network::Model;
+use lop::nn::spec::NetSpec;
 use lop::runtime::{ArtifactDir, ModelRunner};
 
 fn setup(subset: usize) -> (Evaluator, Vec<lop::nn::network::LayerRanges>) {
     let art = ArtifactDir::discover().expect("run `make artifacts`");
-    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let model =
+        Model::load(NetSpec::paper_dcnn(), &art.weights_path()).unwrap();
     let ds = Dataset::load(&art.dataset_path()).unwrap();
-    let ranges = profile_ranges(&dcnn, &ds, 500, 0);
+    let ranges = profile_ranges(&model, &ds, 500, 0);
     let runner = ModelRunner::new(art).unwrap();
-    let dcnn2 = Dcnn::load(&runner.art.weights_path()).unwrap();
-    (Evaluator::new(dcnn2, Some(runner), ds, subset, 0), ranges)
+    let model2 = Model::load(NetSpec::paper_dcnn(),
+                             &runner.art.weights_path())
+        .unwrap();
+    (Evaluator::new(model2, Some(runner), ds, subset, 0), ranges)
 }
 
 #[test]
@@ -43,7 +47,7 @@ fn explore_finds_config_within_bound_and_cheaper_than_f32() {
     // every chosen layer is fixed point and cheaper than float32
     let f32cost = Datapath::synthesize(&ArithKind::Float32, N_PE)
         .explore_cost(&ARRIA10);
-    for l in &res.chosen.layers {
+    for l in res.chosen.kinds() {
         assert!(matches!(l, ArithKind::FixedExact(_)), "layer {l:?}");
         let c = Datapath::synthesize(l, N_PE).explore_cost(&ARRIA10);
         assert!(c < f32cost, "{} not cheaper than float32", l.name());
@@ -93,7 +97,7 @@ fn integral_bits_respect_ranges() {
     };
     let res = explore(&mut ev, &ranges, &opts).unwrap();
     // FC2 range is ~±36 -> needs >= 6 integral bits; CONV1 ~±1 -> small
-    match (&res.chosen.layers[3], &res.chosen.layers[0]) {
+    match (res.chosen.kind(3), res.chosen.kind(0)) {
         (ArithKind::FixedExact(fc2), ArithKind::FixedExact(c1)) => {
             assert!(fc2.i_bits >= 6, "fc2 i_bits {}", fc2.i_bits);
             assert!(c1.i_bits <= 3, "conv1 i_bits {}", c1.i_bits);
@@ -119,7 +123,7 @@ fn infeasible_bound_falls_back_to_max_accuracy() {
     let res = explore(&mut ev, &ranges, &opts).unwrap();
     assert!(res.trace.iter().all(|t| !t.feasible || t.pass == 2));
     // it still returns a concrete fixed-point configuration
-    for l in &res.chosen.layers {
+    for l in res.chosen.kinds() {
         assert!(matches!(l, ArithKind::FixedExact(_)));
     }
 }
@@ -127,10 +131,11 @@ fn infeasible_bound_falls_back_to_max_accuracy() {
 #[test]
 fn rust_and_python_table1_ranges_agree() {
     let art = ArtifactDir::discover().unwrap();
-    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let model =
+        Model::load(NetSpec::paper_dcnn(), &art.weights_path()).unwrap();
     let ds = Dataset::load(&art.dataset_path()).unwrap();
     // same 2000-image slice the python dump used
-    let ranges = profile_ranges(&dcnn, &ds, 2_000, 0);
+    let ranges = profile_ranges(&model, &ds, 2_000, 0);
     let dev = lop::coordinator::ranges::compare_with_python(
         &ranges,
         &art.ranges_path(),

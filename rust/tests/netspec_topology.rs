@@ -1,0 +1,239 @@
+//! The acceptance suite for the topology-generic API: non-4-layer
+//! networks (a 5-layer MLP and a 2-conv net) build via `NetSpec`,
+//! prepare with prepacked panels, serve through a real `Server`
+//! worker pool via the shared `PlanCache` (structural-fingerprint
+//! keys), and complete an explorer DSE pass — all hermetic (synthetic
+//! weights + synthetic digits, engine backend, no artifacts).
+
+use lop::approx::arith::ArithKind;
+use lop::coordinator::eval::Evaluator;
+use lop::coordinator::explorer::{explore, ExploreOpts, Family};
+use lop::coordinator::plan_cache::PlanCache;
+use lop::coordinator::server::{Server, ServerOpts};
+use lop::data::loader::{Dataset, Split};
+use lop::data::synth;
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn deep_mlp() -> NetSpec {
+    NetSpec::parse(
+        "28x28x1: dense(64)+relu | dense(48)+relu | dense(32)+relu | \
+         dense(24)+relu | dense(10)",
+    )
+    .unwrap()
+}
+
+fn two_conv() -> NetSpec {
+    NetSpec::parse(
+        "28x28x1: conv(3x3,8,pad=1)+relu+pool | \
+         conv(3x3,16,pad=1)+relu+pool | dense(10)",
+    )
+    .unwrap()
+}
+
+/// A hermetic Dataset over the synthetic digit generator (the LOPD
+/// loader's fields are public precisely so suites can do this).
+fn synth_dataset(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let (tr_imgs, tr_labels) = synth::generate(n_train, seed);
+    let (te_imgs, te_labels) = synth::generate(n_test, seed + 1);
+    Dataset {
+        h: 28,
+        w: 28,
+        train: Split { images: tr_imgs, labels: tr_labels },
+        test: Split { images: te_imgs, labels: te_labels },
+    }
+}
+
+/// Round-robin `n` requests over the server's configs and wait for
+/// every response.
+fn drive(server: &Server, n: usize, n_cfg: usize, input_len: usize) {
+    let (images, _) = synth::generate(32, 99);
+    assert_eq!(input_len, 784, "generator renders 28x28x1 digits");
+    let (tx, rx) = channel();
+    for i in 0..n {
+        let img: Vec<f32> = images[(i % 32) * 784..(i % 32 + 1) * 784]
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect();
+        server.router.submit(i % n_cfg, img, tx.clone()).unwrap();
+    }
+    drop(tx);
+    for _ in 0..n {
+        let r = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("response stream ended early");
+        assert!(r.pred < 10, "prediction {} out of range", r.pred);
+    }
+}
+
+fn opts(configs: Vec<ReprMap>, workers: usize) -> ServerOpts {
+    ServerOpts {
+        configs,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 1_024,
+        engine_workers: workers,
+        engine_gemm_threads: 1,
+        plan_cache_bytes: 512 * 1024 * 1024,
+        use_pjrt: false, // hermetic: engine backend only
+    }
+}
+
+#[test]
+fn deep_mlp_serves_through_the_shared_plan_cache() {
+    let spec = deep_mlp();
+    assert_eq!(spec.len(), 5, "a non-4-layer topology");
+    let model = Arc::new(Model::synthetic(spec.clone(), 41));
+    let configs = vec![
+        ReprMap::parse_for(&spec, "FI(6,8)").unwrap(),
+        ReprMap::parse_for(&spec,
+                           "FI(6,8)|FL(4,9)|H(6,8,12)|I(5,10)|float32")
+            .unwrap(),
+    ];
+    let n_cfg = configs.len();
+    let server =
+        Server::start_with_model(opts(configs, 3), model.clone(), None)
+            .unwrap();
+    drive(&server, 30, n_cfg, spec.input_len());
+    let stats = server.plan_cache.stats();
+    assert_eq!(stats.prepares, 2, "one prepare per config");
+    assert_eq!(stats.resident_configs, 2);
+    assert_eq!(stats.resident_panels, 2 * spec.len(),
+               "every layer of every config holds prepacked panels");
+    assert!(stats.resident_bytes > 0);
+    server.shutdown().expect("a serving worker panicked");
+}
+
+#[test]
+fn two_conv_net_serves_and_matches_direct_inference() {
+    let spec = two_conv();
+    assert_eq!(spec.len(), 3);
+    let model = Arc::new(Model::synthetic(spec.clone(), 43));
+    let cfg = ReprMap::parse_for(&spec, "FI(6,8)").unwrap();
+    let server = Server::start_with_model(opts(vec![cfg.clone()], 2),
+                                          model.clone(), None)
+        .unwrap();
+
+    // served predictions must equal direct engine inference
+    let (images, _) = synth::generate(8, 7);
+    let (tx, rx) = channel();
+    for i in 0..8 {
+        let img: Vec<f32> = images[i * 784..(i + 1) * 784]
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect();
+        server.router.submit(0, img, tx.clone()).unwrap();
+    }
+    drop(tx);
+    let mut preds = vec![usize::MAX; 8];
+    for _ in 0..8 {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        preds[r.id as usize] = r.pred;
+    }
+    server.shutdown().unwrap();
+
+    let net = model.prepare(&cfg);
+    for (i, want) in preds.iter().enumerate() {
+        let img: Vec<f32> = images[i * 784..(i + 1) * 784]
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect();
+        let t = lop::nn::Tensor::new(vec![1, 28, 28, 1], img);
+        assert_eq!(*want, net.predict(&t, 1)[0], "image {i}");
+    }
+}
+
+#[test]
+fn plan_cache_keys_are_structural_fingerprints() {
+    // one cache per model; the keys carry the topology, so the same
+    // uniform config on different specs maps to different keys
+    let mlp = deep_mlp();
+    let conv = two_conv();
+    let mlp_cache =
+        PlanCache::new(Arc::new(Model::synthetic(mlp.clone(), 1)));
+    let conv_cache =
+        PlanCache::new(Arc::new(Model::synthetic(conv.clone(), 1)));
+    let mlp_cfg = ReprMap::uniform_for(&mlp, ArithKind::Float32);
+    let conv_cfg = ReprMap::uniform_for(&conv, ArithKind::Float32);
+    assert_ne!(mlp_cache.key_of(&mlp_cfg),
+               conv_cache.key_of(&conv_cfg));
+    // and prepared residency follows each spec's own depth
+    mlp_cache.get(&mlp_cfg);
+    conv_cache.get(&conv_cfg);
+    assert_eq!(mlp_cache.stats().resident_panels, mlp.len());
+    assert_eq!(conv_cache.stats().resident_panels, conv.len());
+}
+
+#[test]
+fn router_rejects_wrong_sized_images_for_the_spec() {
+    let spec = two_conv();
+    let model = Arc::new(Model::synthetic(spec.clone(), 5));
+    let cfg = ReprMap::uniform_for(&spec, ArithKind::Float32);
+    let server =
+        Server::start_with_model(opts(vec![cfg], 1), model, None)
+            .unwrap();
+    let (tx, _rx) = channel();
+    assert!(server.router.submit(0, vec![0.0; 100], tx).is_err(),
+            "a 100-float image cannot feed a 784-input spec");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn server_rejects_arity_mismatched_configs_at_startup() {
+    let spec = deep_mlp(); // 5 layers
+    let model = Arc::new(Model::synthetic(spec, 9));
+    let four = ReprMap::uniform(ArithKind::Float32, 4);
+    let err = Server::start_with_model(opts(vec![four], 1), model, None)
+        .err()
+        .expect("4-kind config over a 5-layer spec must not start");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("4 layers") && msg.contains("5-layer"),
+            "{msg}");
+}
+
+#[test]
+fn explorer_completes_a_dse_pass_on_a_non_paper_topology() {
+    let spec = two_conv();
+    let model = Model::synthetic(spec.clone(), 47);
+    let ds = synth_dataset(64, 48, 1234);
+    // WBA ranges straight off the model (one entry per spec layer)
+    let x = ds.batch(&ds.train, &(0..16).collect::<Vec<_>>());
+    let ranges = model.ranges(&x, 1);
+    assert_eq!(ranges.len(), spec.len());
+
+    let mut ev = Evaluator::new(model, None, ds, 32, 1);
+    assert_eq!(ev.spec().len(), 3);
+    let opts = ExploreOpts {
+        accuracy_bound: 0.5, // untrained weights: loose bound
+        frac_bci: (4, 5),
+        int_headroom: 0,
+        families: vec![Family::Fixed],
+        second_pass: true,
+        ..Default::default()
+    };
+    let res = explore(&mut ev, &ranges, &opts).unwrap();
+
+    // the search ran over THIS spec's parts, not a hardcoded 4
+    assert_eq!(res.chosen.len(), spec.len());
+    assert!(res.trace.iter().all(|t| t.part < spec.len()));
+    for part in 0..spec.len() {
+        let chosen: Vec<_> = res
+            .trace
+            .iter()
+            .filter(|t| t.part == part && t.pass == 1 && t.chosen)
+            .collect();
+        assert_eq!(chosen.len(), 1, "part {part}");
+    }
+    for l in res.chosen.kinds() {
+        assert!(matches!(l, ArithKind::FixedExact(_)), "layer {l:?}");
+    }
+    assert!(res.evals > 0);
+    // the evaluator's shared plan cache held engine nets for the
+    // 3-layer spec (3 panels per resident config)
+    let stats = ev.plan_cache().stats();
+    assert!(stats.resident_configs > 0);
+    assert_eq!(stats.resident_panels % spec.len(), 0);
+}

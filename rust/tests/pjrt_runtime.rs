@@ -5,26 +5,32 @@
 
 use lop::approx::arith::ArithKind;
 use lop::data::Dataset;
-use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
 use lop::runtime::{ArtifactDir, ModelRunner};
 
-fn setup() -> (ModelRunner, Dcnn, Dataset) {
+fn cfg(s: &str) -> ReprMap {
+    ReprMap::parse_for(&NetSpec::paper_dcnn(), s).unwrap()
+}
+
+fn setup() -> (ModelRunner, Model, Dataset) {
     let art = ArtifactDir::discover().expect("run `make artifacts` first");
-    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let model =
+        Model::load(NetSpec::paper_dcnn(), &art.weights_path()).unwrap();
     let ds = Dataset::load(&art.dataset_path()).unwrap();
     let runner = ModelRunner::new(art).unwrap();
-    (runner, dcnn, ds)
+    (runner, model, ds)
 }
 
 #[test]
 fn pjrt_f32_matches_bit_accurate_engine() {
-    let (mut runner, dcnn, ds) = setup();
+    let (mut runner, model, ds) = setup();
     let idx: Vec<usize> = (0..32).collect();
     let x = ds.batch(&ds.test, &idx);
 
-    let cfg = NetConfig::uniform(ArithKind::Float32);
-    let pjrt = runner.forward(&cfg, &x).unwrap();
-    let eng = dcnn.prepare(cfg).forward(&x, 0);
+    let c = ReprMap::uniform(ArithKind::Float32, 4);
+    let pjrt = runner.forward(&c, &x).unwrap();
+    let eng = model.prepare(&c).forward(&x, 0);
 
     assert_eq!(pjrt.shape, vec![32, 10]);
     let mut max_diff = 0f32;
@@ -39,13 +45,13 @@ fn pjrt_f32_matches_bit_accurate_engine() {
 
 #[test]
 fn pjrt_fi_matches_bit_accurate_engine() {
-    let (mut runner, dcnn, ds) = setup();
+    let (mut runner, model, ds) = setup();
     let idx: Vec<usize> = (32..64).collect();
     let x = ds.batch(&ds.test, &idx);
 
-    let cfg = NetConfig::parse("FI(5,8)|FI(5,8)|FI(6,8)|FI(6,8)").unwrap();
-    let pjrt = runner.forward(&cfg, &x).unwrap();
-    let eng = dcnn.prepare(cfg).forward(&x, 0);
+    let c = cfg("FI(5,8)|FI(5,8)|FI(6,8)|FI(6,8)");
+    let pjrt = runner.forward(&c, &x).unwrap();
+    let eng = model.prepare(&c).forward(&x, 0);
 
     let mut max_diff = 0f32;
     for (a, b) in pjrt.data.iter().zip(&eng.data) {
@@ -56,13 +62,13 @@ fn pjrt_fi_matches_bit_accurate_engine() {
 
 #[test]
 fn pjrt_fl_matches_bit_accurate_engine() {
-    let (mut runner, dcnn, ds) = setup();
+    let (mut runner, model, ds) = setup();
     let idx: Vec<usize> = (64..96).collect();
     let x = ds.batch(&ds.test, &idx);
 
-    let cfg = NetConfig::parse("FL(4,9)").unwrap();
-    let pjrt = runner.forward(&cfg, &x).unwrap();
-    let eng = dcnn.prepare(cfg).forward(&x, 0);
+    let c = cfg("FL(4,9)");
+    let pjrt = runner.forward(&c, &x).unwrap();
+    let eng = model.prepare(&c).forward(&x, 0);
 
     let mut max_diff = 0f32;
     for (a, b) in pjrt.data.iter().zip(&eng.data) {
@@ -75,13 +81,13 @@ fn pjrt_fl_matches_bit_accurate_engine() {
 fn pjrt_batch_padding_consistent() {
     // a 5-image batch (padded to 16) must equal 5 single-image calls
     let (mut runner, _, ds) = setup();
-    let cfg = NetConfig::uniform(ArithKind::Float32);
+    let c = ReprMap::uniform(ArithKind::Float32, 4);
     let idx: Vec<usize> = (0..5).collect();
     let x = ds.batch(&ds.test, &idx);
-    let batched = runner.forward(&cfg, &x).unwrap();
+    let batched = runner.forward(&c, &x).unwrap();
     for (i, &ii) in idx.iter().enumerate() {
         let xi = ds.batch(&ds.test, &[ii]);
-        let single = runner.forward(&cfg, &xi).unwrap();
+        let single = runner.forward(&c, &xi).unwrap();
         for j in 0..10 {
             let d = (batched.data[i * 10 + j] - single.data[j]).abs();
             assert!(d < 1e-4, "img {i} logit {j} diff {d}");
@@ -92,12 +98,12 @@ fn pjrt_batch_padding_consistent() {
 #[test]
 fn executable_cache_reuse() {
     let (mut runner, _, ds) = setup();
-    let cfg = NetConfig::uniform(ArithKind::Float32);
+    let c = ReprMap::uniform(ArithKind::Float32, 4);
     let x = ds.batch(&ds.test, &[0]);
-    runner.forward(&cfg, &x).unwrap();
+    runner.forward(&c, &x).unwrap();
     let after_first = runner.cached_executables();
-    runner.forward(&cfg, &x).unwrap();
-    runner.forward(&cfg, &x).unwrap();
+    runner.forward(&c, &x).unwrap();
+    runner.forward(&c, &x).unwrap();
     assert_eq!(runner.cached_executables(), after_first,
                "repeat calls must not recompile");
 }
@@ -109,8 +115,8 @@ fn pjrt_f32_accuracy_matches_training_baseline() {
     let n = 512.min(ds.test.len());
     let idx: Vec<usize> = (0..n).collect();
     let x = ds.batch(&ds.test, &idx);
-    let cfg = NetConfig::uniform(ArithKind::Float32);
-    let pred = runner.forward(&cfg, &x).unwrap().argmax_rows();
+    let c = ReprMap::uniform(ArithKind::Float32, 4);
+    let pred = runner.forward(&c, &x).unwrap().argmax_rows();
     let labels = Dataset::labels(&ds.test);
     let correct = pred.iter().zip(&labels).filter(|(p, l)| p == l).count();
     let acc = correct as f64 / n as f64;

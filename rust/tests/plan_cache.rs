@@ -2,7 +2,7 @@
 //! (`coordinator::plan_cache`) — the PR-4 contracts:
 //!
 //! * **single-flight**: N workers requesting one config concurrently
-//!   produce exactly one `Dcnn::prepare` — one weight-pack operation
+//!   produce exactly one `Model::prepare` — one weight-pack operation
 //!   per layer on the *global* counter — and share one `Arc`;
 //! * **byte-capped LRU**: residency never exceeds the cap by more
 //!   than the most recent network, the least-recently-*used* config
@@ -12,7 +12,7 @@
 //! * **worker-count invariance**: `packed_panel_stats` (prepare count,
 //!   resident panel bytes) for K configs is identical at 1 and 4
 //!   engine workers — the acceptance criterion, exercised through
-//!   real `Server` worker pools over `Server::start_with_dcnn`.
+//!   real `Server` worker pools over `Server::start_with_model`.
 //!
 //! Tests serialize on a file-local mutex: the harness runs a binary's
 //! tests concurrently in one process, and the exact global
@@ -23,7 +23,8 @@ use lop::coordinator::plan_cache::PlanCache;
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::data::synth;
 use lop::nn::gemm::pack::weight_pack_count_global;
-use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Barrier, Mutex, MutexGuard};
 use std::time::Duration;
@@ -36,13 +37,17 @@ fn lock() -> MutexGuard<'static, ()> {
     SERIAL.lock().unwrap_or_else(|p| p.into_inner())
 }
 
-fn cfg(s: &str) -> NetConfig {
-    NetConfig::parse(s).unwrap()
+fn cfg(s: &str) -> ReprMap {
+    ReprMap::parse_for(&NetSpec::paper_dcnn(), s).unwrap()
+}
+
+fn paper(seed: u64) -> Arc<Model> {
+    Arc::new(Model::synthetic(NetSpec::paper_dcnn(), seed))
 }
 
 /// Resident panel bytes of one prepared net for `c` (probe cache).
-fn bytes_of(dcnn: &Arc<Dcnn>, c: &NetConfig) -> usize {
-    let probe = PlanCache::new(dcnn.clone());
+fn bytes_of(model: &Arc<Model>, c: &ReprMap) -> usize {
+    let probe = PlanCache::new(model.clone());
     probe.get(c);
     probe.stats().resident_bytes
 }
@@ -50,8 +55,7 @@ fn bytes_of(dcnn: &Arc<Dcnn>, c: &NetConfig) -> usize {
 #[test]
 fn single_flight_prepares_once_under_contention() {
     let _g = lock();
-    let dcnn = Arc::new(Dcnn::synthetic(11));
-    let cache = Arc::new(PlanCache::new(dcnn));
+    let cache = Arc::new(PlanCache::new(paper(11)));
     // mixed config: element panels, DRUM conditioning, float lattice
     // AND the binary bitmap path all behind one single-flight entry
     let c = cfg("FI(6,8)|H(6,8,6)|FL(4,9)|binxnor");
@@ -94,14 +98,14 @@ fn single_flight_prepares_once_under_contention() {
 #[test]
 fn lru_eviction_respects_byte_cap() {
     let _g = lock();
-    let dcnn = Arc::new(Dcnn::synthetic(12));
+    let model = paper(12);
     // same provider family -> every net has identical panel bytes
     let (a, b, c) = (cfg("FI(6,8)"), cfg("FI(5,8)"), cfg("FI(4,8)"));
-    let one = bytes_of(&dcnn, &a);
+    let one = bytes_of(&model, &a);
     assert!(one > 0);
 
     // room for two networks, not three
-    let cache = PlanCache::with_capacity(dcnn, one * 2 + one / 2);
+    let cache = PlanCache::with_capacity(model, one * 2 + one / 2);
     cache.get(&a);
     cache.get(&b);
     assert_eq!(cache.stats().evictions, 0, "two nets fit the cap");
@@ -120,12 +124,12 @@ fn lru_eviction_respects_byte_cap() {
 #[test]
 fn evicted_then_refetched_is_bit_identical() {
     let _g = lock();
-    let dcnn = Arc::new(Dcnn::synthetic(13));
+    let model = paper(13);
     let (a, b) = (cfg("H(6,8,6)"), cfg("FI(6,8)"));
     // cap below two networks: inserting B always evicts A
     let cache =
-        PlanCache::with_capacity(dcnn.clone(), bytes_of(&dcnn, &a));
-    let x = Dcnn::synthetic_input(2, 14);
+        PlanCache::with_capacity(model.clone(), bytes_of(&model, &a));
+    let x = NetSpec::paper_dcnn().synthetic_input(2, 14);
 
     let first = cache.get(&a);
     let out1 = first.forward(&x, 1);
@@ -144,11 +148,11 @@ fn evicted_then_refetched_is_bit_identical() {
 
 /// Run a K-config burst through a real engine worker pool and return
 /// the shared cache's `(prepare count, resident panel bytes)`.
-fn serve_burst(dcnn: &Arc<Dcnn>, workers: usize) -> (u64, usize) {
+fn serve_burst(model: &Arc<Model>, workers: usize) -> (u64, usize) {
     let configs =
         vec![cfg("FI(6,8)"), cfg("H(6,8,12)"), cfg("binxnor")];
     let n_cfg = configs.len();
-    let server = Server::start_with_dcnn(
+    let server = Server::start_with_model(
         ServerOpts {
             configs,
             max_batch: 4,
@@ -159,7 +163,7 @@ fn serve_burst(dcnn: &Arc<Dcnn>, workers: usize) -> (u64, usize) {
             plan_cache_bytes: 512 * 1024 * 1024,
             use_pjrt: false, // hermetic: no artifacts in tier-1
         },
-        dcnn.clone(),
+        model.clone(),
         None,
     )
     .unwrap();
@@ -187,9 +191,9 @@ fn serve_burst(dcnn: &Arc<Dcnn>, workers: usize) -> (u64, usize) {
 #[test]
 fn packed_panel_stats_invariant_across_worker_counts() {
     let _g = lock();
-    let dcnn = Arc::new(Dcnn::synthetic(15));
-    let at1 = serve_burst(&dcnn, 1);
-    let at4 = serve_burst(&dcnn, 4);
+    let model = paper(15);
+    let at1 = serve_burst(&model, 1);
+    let at4 = serve_burst(&model, 4);
     assert_eq!(at1.0, 3, "K = 3 configs -> exactly 3 prepares");
     assert!(at1.1 > 0);
     assert_eq!(

@@ -6,7 +6,7 @@
 //! non-tile-divisible sizes) and thread counts.  On top of the value
 //! contract it pins the two structural contracts of the refactor:
 //!
-//! * **prepack-once**: after `Dcnn::prepare`, `PreparedNet::forward`
+//! * **prepack-once**: after `Model::prepare`, `PreparedNet::forward`
 //!   performs zero weight-side packing work (observed through
 //!   `gemm::pack::weight_pack_count`, a thread-local counter);
 //! * **no panel sharing**: panels conditioned under one `ArithKind`
@@ -20,7 +20,8 @@ use lop::approx::arith::ArithKind;
 use lop::nn::gemm::pack::weight_pack_count;
 use lop::nn::gemm::reference::gemm_reference;
 use lop::nn::gemm::{default_threads, select_kernel, GemmPlan};
-use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
 use lop::util::prng::Rng;
 use lop::util::prop;
 
@@ -254,14 +255,16 @@ fn two_prepares_with_different_kinds_never_share_panels() {
 
 #[test]
 fn forward_does_zero_weight_packing_after_prepare() {
-    let dcnn = Dcnn::synthetic(23);
+    let spec = NetSpec::paper_dcnn();
+    let model = Model::synthetic(spec.clone(), 23);
     // mixed config covering element panels AND the binary bitmap path
-    let cfg = NetConfig::parse("FI(6,8)|H(6,8,6)|FL(4,9)|binxnor")
-        .unwrap();
-    let x = Dcnn::synthetic_input(1, 24);
+    let cfg =
+        ReprMap::parse_for(&spec, "FI(6,8)|H(6,8,6)|FL(4,9)|binxnor")
+            .unwrap();
+    let x = spec.synthetic_input(1, 24);
 
     let before_prepare = weight_pack_count();
-    let net = dcnn.prepare(cfg);
+    let net = model.prepare(&cfg);
     assert_eq!(
         weight_pack_count(),
         before_prepare + 4,
@@ -285,6 +288,6 @@ fn forward_does_zero_weight_packing_after_prepare() {
     assert_eq!(a.data, b.data, "forwards over cached panels diverged");
 
     // and the cached-path output equals a freshly prepared net's
-    let c = dcnn.prepare(cfg).forward(&x, 1);
+    let c = model.prepare(&cfg).forward(&x, 1);
     assert_eq!(a.data, c.data);
 }

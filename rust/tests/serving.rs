@@ -9,7 +9,8 @@
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::data::Dataset;
 use lop::nn::gemm::pack::weight_pack_count_global;
-use lop::nn::network::{Dcnn, NetConfig};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
 use lop::runtime::ArtifactDir;
 use std::sync::mpsc::channel;
 use std::sync::{Mutex, MutexGuard};
@@ -21,7 +22,11 @@ fn lock() -> MutexGuard<'static, ()> {
     SERIAL.lock().unwrap_or_else(|p| p.into_inner())
 }
 
-fn opts(configs: Vec<NetConfig>, use_pjrt: bool) -> ServerOpts {
+fn cfg(s: &str) -> ReprMap {
+    ReprMap::parse_for(&NetSpec::paper_dcnn(), s).unwrap()
+}
+
+fn opts(configs: Vec<ReprMap>, use_pjrt: bool) -> ServerOpts {
     ServerOpts {
         configs,
         max_batch: 8,
@@ -34,9 +39,10 @@ fn opts(configs: Vec<NetConfig>, use_pjrt: bool) -> ServerOpts {
     }
 }
 
-fn test_images(n: usize) -> (Vec<Vec<f32>>, Vec<usize>, Dcnn) {
+fn test_images(n: usize) -> (Vec<Vec<f32>>, Vec<usize>, Model) {
     let art = ArtifactDir::discover().expect("run `make artifacts`");
-    let dcnn = Dcnn::load(&art.weights_path()).unwrap();
+    let model =
+        Model::load(NetSpec::paper_dcnn(), &art.weights_path()).unwrap();
     let ds = Dataset::load(&art.dataset_path()).unwrap();
     let mut imgs = Vec::with_capacity(n);
     let mut labels = Vec::with_capacity(n);
@@ -45,15 +51,15 @@ fn test_images(n: usize) -> (Vec<Vec<f32>>, Vec<usize>, Dcnn) {
         imgs.push(t.data);
         labels.push(ds.test.labels[i] as usize);
     }
-    (imgs, labels, dcnn)
+    (imgs, labels, model)
 }
 
 #[test]
 fn pjrt_backend_serves_correct_predictions() {
     let _g = lock();
-    let (imgs, _, dcnn) = test_images(24);
-    let cfg = NetConfig::parse("FI(6,8)").unwrap();
-    let server = Server::start(opts(vec![cfg], true)).unwrap();
+    let (imgs, _, model) = test_images(24);
+    let c = cfg("FI(6,8)");
+    let server = Server::start(opts(vec![c.clone()], true)).unwrap();
     let (tx, rx) = channel();
     for img in &imgs {
         server.router.submit(0, img.clone(), tx.clone()).unwrap();
@@ -67,7 +73,7 @@ fn pjrt_backend_serves_correct_predictions() {
     server.shutdown().unwrap();
 
     // must match direct engine inference exactly (argmax level)
-    let net = dcnn.prepare(cfg);
+    let net = model.prepare(&c);
     for (i, img) in imgs.iter().enumerate() {
         let t = lop::nn::tensor::Tensor::new(vec![1, 28, 28, 1],
                                              img.clone());
@@ -80,8 +86,8 @@ fn pjrt_backend_serves_correct_predictions() {
 fn engine_backend_serves_approx_configs() {
     let _g = lock();
     let (imgs, labels, _) = test_images(16);
-    let cfg = NetConfig::parse("H(6,8,12)").unwrap();
-    let server = Server::start(opts(vec![cfg], true)).unwrap();
+    let server =
+        Server::start(opts(vec![cfg("H(6,8,12)")], true)).unwrap();
     let (tx, rx) = channel();
     for img in &imgs {
         server.router.submit(0, img.clone(), tx.clone()).unwrap();
@@ -103,8 +109,8 @@ fn mixed_backends_share_one_server() {
     let _g = lock();
     let (imgs, _, _) = test_images(12);
     let configs = vec![
-        NetConfig::parse("float32").unwrap(),   // PJRT
-        NetConfig::parse("H(6,8,12)").unwrap(), // engine
+        cfg("float32"),   // PJRT
+        cfg("H(6,8,12)"), // engine
     ];
     let server = Server::start(opts(configs, true)).unwrap();
     let (tx, rx) = channel();
@@ -126,15 +132,15 @@ fn mixed_backends_share_one_server() {
 #[test]
 fn no_pjrt_falls_back_to_engine_everywhere() {
     let _g = lock();
-    let (imgs, _, dcnn) = test_images(8);
-    let cfg = NetConfig::parse("FI(6,8)").unwrap();
-    let server = Server::start(opts(vec![cfg], false)).unwrap();
+    let (imgs, _, model) = test_images(8);
+    let c = cfg("FI(6,8)");
+    let server = Server::start(opts(vec![c.clone()], false)).unwrap();
     let (tx, rx) = channel();
     for img in &imgs {
         server.router.submit(0, img.clone(), tx.clone()).unwrap();
     }
     drop(tx);
-    let net = dcnn.prepare(cfg);
+    let net = model.prepare(&c);
     for _ in 0..imgs.len() {
         let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         let t = lop::nn::tensor::Tensor::new(
@@ -151,8 +157,8 @@ fn warm_start_skips_reprepare() {
     let _g = lock();
     let (imgs, _, _) = test_images(8);
     // engine-backed config, 2 workers sharing one PlanCache
-    let cfg = NetConfig::parse("H(6,8,12)").unwrap();
-    let server = Server::start(opts(vec![cfg], false)).unwrap();
+    let server =
+        Server::start(opts(vec![cfg("H(6,8,12)")], false)).unwrap();
 
     // cold burst: the first batch pays quantization + prepacking once
     let (tx, rx) = channel();
