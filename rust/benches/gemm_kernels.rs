@@ -1,6 +1,6 @@
 //! GEMM kernel microbenchmarks — the L3 hot path the §Perf pass
 //! iterates on.  For every arithmetic provider this runs, on the
-//! network's real layer shapes:
+//! network's real layer shapes, **once per benched ISA tier**:
 //!
 //! * the packed, tiled kernel with weights re-packed per call
 //!   (`GemmPlan::run` — the pre-prepack serving cost),
@@ -11,19 +11,28 @@
 //!
 //! reporting M MAC/s, the packed : reference speedup, and the
 //! prepacked : per-call-repack speedup (the §Perf iteration-7 win; it
-//! is largest at batch 1, where weight packing dominates).  The whole
-//! table is written as JSON (`BENCH_gemm_kernels.json`, or
-//! `$LOP_BENCH_JSON`) so CI can archive the perf trajectory.
+//! is largest at batch 1, where weight packing dominates).
+//!
+//! The ISA axis (§Perf iteration 9): with `LOP_FORCE_ISA` set, only
+//! that tier is benched (kernels are pinned process-wide anyway);
+//! unforced, every tier in `isa::detected()` runs, so one invocation
+//! on an AVX2 machine produces a scalar series *and* an avx2 series
+//! per case.  Each JSON row carries `"isa"` and the resolved kernel
+//! name, so CI can diff tiers and sanity-check that every benched ISA
+//! produced a series.  The whole table is written as JSON
+//! (`BENCH_gemm_kernels.json`, or `$LOP_BENCH_JSON`).
 
 use lop::approx::arith::ArithKind;
 use lop::nn::gemm::reference::gemm_reference;
-use lop::nn::gemm::GemmPlan;
+use lop::nn::gemm::{isa, GemmPlan, Isa};
 use lop::util::bench::{bench, header, write_bench_json};
 use lop::util::prng::Rng;
 
 struct Row {
     shape: String,
     kind: String,
+    isa: Isa,
+    kernel: &'static str,
     threads: usize,
     packed_ns: f64,
     prepacked_ns: f64,
@@ -31,6 +40,15 @@ struct Row {
     mmacs_packed: f64,
     mmacs_prepacked: f64,
     mmacs_reference: f64,
+}
+
+/// The ISA tiers this bench run covers: the forced tier only when
+/// `LOP_FORCE_ISA` pins the process, else every detected tier.
+fn benched_isas() -> Vec<Isa> {
+    match std::env::var(isa::FORCE_ENV) {
+        Ok(s) if !s.trim().is_empty() => vec![isa::active()],
+        _ => isa::detected(),
+    }
 }
 
 fn mats(m: usize, k: usize, n: usize, kind: &ArithKind)
@@ -44,17 +62,18 @@ fn mats(m: usize, k: usize, n: usize, kind: &ArithKind)
     (x, w, vec![0.0; m * n])
 }
 
-fn run_shape(label: &str, m: usize, k: usize, n: usize, iters: usize,
-             kinds: &[(&str, usize)], rows: &mut Vec<Row>) {
-    println!("\n--- {label}: [{m} x {k}] @ [{k} x {n}] ---");
+fn run_shape(label: &str, tier: Isa, m: usize, k: usize, n: usize,
+             iters: usize, kinds: &[(&str, usize)],
+             rows: &mut Vec<Row>) {
+    println!("\n--- {label} @ {tier}: [{m} x {k}] @ [{k} x {n}] ---");
     header();
     let macs = (m * k * n) as f64;
     for (ks, threads) in kinds {
         let kind = ArithKind::parse(ks).unwrap();
-        let mut plan = GemmPlan::new(&kind);
+        let mut plan = GemmPlan::with_isa(&kind, tier);
         let (x, w, mut out) = mats(m, k, n, &kind);
         let rp = bench(
-            &format!("{ks} repack/call (threads={threads})"),
+            &format!("{ks}@{tier} repack/call (threads={threads})"),
             1,
             iters,
             || {
@@ -66,7 +85,7 @@ fn run_shape(label: &str, m: usize, k: usize, n: usize, iters: usize,
         // the PreparedNet::forward path after `prepare`
         plan.prepack(&w, k, n);
         let rq = bench(
-            &format!("{ks} prepacked (threads={threads})"),
+            &format!("{ks}@{tier} prepacked (threads={threads})"),
             1,
             iters,
             || {
@@ -75,7 +94,7 @@ fn run_shape(label: &str, m: usize, k: usize, n: usize, iters: usize,
             },
         );
         let rr = bench(
-            &format!("{ks} reference (threads={threads})"),
+            &format!("{ks}@{tier} reference (threads={threads})"),
             1,
             iters,
             || {
@@ -97,6 +116,8 @@ fn run_shape(label: &str, m: usize, k: usize, n: usize, iters: usize,
         rows.push(Row {
             shape: label.to_string(),
             kind: ks.to_string(),
+            isa: tier,
+            kernel: plan.kernel_name(),
             threads: *threads,
             packed_ns: rp.mean_ns(),
             prepacked_ns: rq.mean_ns(),
@@ -113,14 +134,17 @@ fn write_json(rows: &[Row]) {
         .iter()
         .map(|r| {
             format!(
-                "\"shape\": \"{}\", \"kind\": \"{}\", \"threads\": \
-                 {}, \"packed_mean_ns\": {:.0}, \"prepacked_mean_ns\": \
+                "\"shape\": \"{}\", \"kind\": \"{}\", \"isa\": \
+                 \"{}\", \"kernel\": \"{}\", \"threads\": {}, \
+                 \"packed_mean_ns\": {:.0}, \"prepacked_mean_ns\": \
                  {:.0}, \"reference_mean_ns\": {:.0}, \
                  \"packed_mmacs\": {:.1}, \"prepacked_mmacs\": {:.1}, \
                  \"reference_mmacs\": {:.1}, \"speedup\": {:.3}, \
                  \"prepack_speedup\": {:.3}",
                 r.shape,
                 r.kind,
+                r.isa,
+                r.kernel,
                 r.threads,
                 r.packed_ns,
                 r.prepacked_ns,
@@ -138,70 +162,80 @@ fn write_json(rows: &[Row]) {
 }
 
 fn main() {
+    let tiers = benched_isas();
+    let names: Vec<&str> = tiers.iter().map(|t| t.name()).collect();
     println!("=== GEMM kernels: prepacked vs repack/call vs reference, \
               M MAC/s ===");
+    println!("ISAs benched: {}", names.join(", "));
     let mut rows = Vec::new();
 
-    // FC1 shape (the network's dominant GEMM): batch 64 — all six
-    // provider variants, single- and all-core
-    run_shape(
-        "FC1, batch 64",
-        64,
-        3136,
-        1024,
-        5,
-        &[
-            ("float32", 1),
-            ("float32", 0),
-            ("FI(6,8)", 1),
-            ("FI(6,8)", 0),
-            ("H(6,8,12)", 0),
-            ("FL(4,9)", 0),
-            ("binxnor", 0),
-        ],
-        &mut rows,
-    );
+    for &tier in &tiers {
+        // FC1 shape (the network's dominant GEMM): batch 64 — all six
+        // provider variants, single- and all-core
+        run_shape(
+            "FC1, batch 64",
+            tier,
+            64,
+            3136,
+            1024,
+            5,
+            &[
+                ("float32", 1),
+                ("float32", 0),
+                ("FI(6,8)", 1),
+                ("FI(6,8)", 0),
+                ("H(6,8,12)", 0),
+                ("FL(4,9)", 0),
+                ("binxnor", 0),
+            ],
+            &mut rows,
+        );
 
-    // FC1 at batch 1: the serving case where per-call weight packing
-    // (O(kn)) dominates the O(mkn) MACs — the prepack win shows here
-    run_shape(
-        "FC1, batch 1",
-        1,
-        3136,
-        1024,
-        20,
-        &[
-            ("float32", 1),
-            ("FI(6,8)", 1),
-            ("H(6,8,12)", 1),
-            ("FL(4,9)", 1),
-            ("I(5,10)", 1),
-            ("binxnor", 1),
-        ],
-        &mut rows,
-    );
+        // FC1 at batch 1: the serving case where per-call weight
+        // packing (O(kn)) dominates the O(mkn) MACs — the prepack win
+        // shows here
+        run_shape(
+            "FC1, batch 1",
+            tier,
+            1,
+            3136,
+            1024,
+            20,
+            &[
+                ("float32", 1),
+                ("FI(6,8)", 1),
+                ("H(6,8,12)", 1),
+                ("FL(4,9)", 1),
+                ("I(5,10)", 1),
+                ("binxnor", 1),
+            ],
+            &mut rows,
+        );
 
-    // CFPU is the expensive provider: smaller shape, same layout
-    run_shape(
-        "FC-small (CFPU-viable)",
-        64,
-        784,
-        256,
-        5,
-        &[("I(5,10)", 1), ("I(5,10)", 0), ("FL(5,10)", 0)],
-        &mut rows,
-    );
+        // CFPU is the expensive provider: smaller shape, same layout
+        run_shape(
+            "FC-small (CFPU-viable)",
+            tier,
+            64,
+            784,
+            256,
+            5,
+            &[("I(5,10)", 1), ("I(5,10)", 0), ("FL(5,10)", 0)],
+            &mut rows,
+        );
 
-    // CONV2 as im2col: [batch*14*14, 800] @ [800, 64]
-    run_shape(
-        "CONV2 im2col, batch 16",
-        16 * 196,
-        800,
-        64,
-        5,
-        &[("float32", 0), ("FI(6,8)", 0), ("H(6,8,12)", 0)],
-        &mut rows,
-    );
+        // CONV2 as im2col: [batch*14*14, 800] @ [800, 64]
+        run_shape(
+            "CONV2 im2col, batch 16",
+            tier,
+            16 * 196,
+            800,
+            64,
+            5,
+            &[("float32", 0), ("FI(6,8)", 0), ("H(6,8,12)", 0)],
+            &mut rows,
+        );
+    }
 
     write_json(&rows);
 }

@@ -1,0 +1,238 @@
+//! Runtime ISA dispatch for the packed GEMM kernels (§Perf iteration
+//! 9).  Every `MicroArith` monomorphization has a portable scalar
+//! kernel; on x86_64 the f32, fixed-point/DRUM and binary paths
+//! additionally have `target_feature`-gated SIMD kernels (see the
+//! `simd` module).  This module owns the policy of *which* kernel a
+//! `GemmPlan` gets:
+//!
+//! ```text
+//! GemmPlan::new(kind)
+//!   └─ active()                      ──  LOP_FORCE_ISA, else detect()
+//!        └─ select_kernel_isa(kind, isa)
+//!             ├─ Scalar: portable BlockedKernel / BinaryKernel
+//!             └─ Avx2:   f32 → 6x16 AVX2+FMA microkernel
+//!                        FI/H → 4x8 AVX2 i32/i64 microkernel
+//!                        binxnor → 8x8 popcnt word-panel kernel
+//!                        FL/I → scalar (no SIMD variant; see below)
+//! ```
+//!
+//! Detection happens once, at plan-build time — never inside a MAC
+//! loop.  [`detect`] returns the *widest* ISA whose instructions are
+//! all available on the running machine ([`Isa::Avx2`] requires
+//! `avx2`, `fma` *and* `popcnt` so every SIMD kernel behind it is
+//! safe to call).  The `LOP_FORCE_ISA` environment variable
+//! ([`FORCE_ENV`]) overrides detection for the whole process —
+//! `LOP_FORCE_ISA=scalar` makes every machine run the portable
+//! kernels, which is how CI pins the per-ISA differential suites on
+//! any runner.  Forcing an ISA the machine does not support, or a
+//! name this module does not know, is a loud startup error (the
+//! offending token is in the message), never a silent fallback.
+//!
+//! Exactness policy (enforced by `tests/gemm_differential.rs` and
+//! `tests/prepack_differential.rs`, documented in DESIGN.md §gemm):
+//! integer and bit-parallel SIMD kernels (fi/drum/binary) are
+//! *bit-identical* to `gemm::reference` — integer accumulation is
+//! associative, so lane order cannot change results.  The AVX2+FMA
+//! f32 kernel fuses each multiply-add into one rounding, which is the
+//! point of using FMA; it is pinned by the documented per-element
+//! bound [`super::fma_f32_bound`] instead of bitwise equality.  The
+//! FL (f64 lattice) and CFPU paths have no SIMD variant — their
+//! scalar kernel is the widest on every ISA — so their bit-exactness
+//! contract is ISA-independent.
+
+use std::sync::OnceLock;
+
+/// Environment variable that overrides ISA detection for the whole
+/// process (`scalar` | `avx2`, case-insensitive; empty/whitespace
+/// means "not set").
+pub const FORCE_ENV: &str = "LOP_FORCE_ISA";
+
+/// An instruction-set tier the kernel table can dispatch to.  Ordered
+/// narrowest to widest: [`detect`] picks the largest supported
+/// variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Isa {
+    /// Portable scalar kernels — supported everywhere.
+    Scalar,
+    /// x86_64 with AVX2 + FMA + POPCNT (all three are required so the
+    /// f32, integer and binary SIMD kernels are unconditionally safe
+    /// once this tier is selected).
+    Avx2,
+}
+
+impl Isa {
+    /// Every dispatchable tier, narrowest first.
+    pub const ALL: [Isa; 2] = [Isa::Scalar, Isa::Avx2];
+
+    /// The token this ISA parses from / displays as.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse an ISA token (as found in `LOP_FORCE_ISA`).  Unknown
+    /// names error with the offending token — a forced run must never
+    /// silently dispatch somewhere the caller did not ask for.
+    ///
+    /// ```
+    /// use lop::nn::gemm::isa::Isa;
+    /// assert_eq!(Isa::parse("scalar"), Ok(Isa::Scalar));
+    /// assert_eq!(Isa::parse(" AVX2 "), Ok(Isa::Avx2));
+    /// assert!(Isa::parse("avx999").unwrap_err().contains("avx999"));
+    /// ```
+    pub fn parse(s: &str) -> Result<Isa, String> {
+        let tok = s.trim();
+        match tok.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Isa::Scalar),
+            "avx2" => Ok(Isa::Avx2),
+            _ => Err(format!(
+                "unknown ISA `{tok}` (valid: scalar, avx2)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Whether every instruction `isa`'s kernels use is available on the
+/// running machine.  [`Isa::Scalar`] is always supported.
+pub fn supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+                && std::arch::is_x86_feature_detected!("popcnt")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => false,
+    }
+}
+
+/// Every supported ISA, narrowest first (always starts with
+/// [`Isa::Scalar`]).  The per-ISA differential suites iterate this so
+/// each kernel the dispatcher could pick on this machine is tested.
+pub fn detected() -> Vec<Isa> {
+    Isa::ALL.iter().copied().filter(|&i| supported(i)).collect()
+}
+
+/// The widest supported ISA — what dispatch uses when `LOP_FORCE_ISA`
+/// is not set.
+pub fn detect() -> Isa {
+    *detected().last().expect("scalar is always supported")
+}
+
+/// Resolve an optional forced-ISA token against this machine: `None`
+/// (or an empty/whitespace token) means [`detect`]; a known,
+/// supported token selects that ISA; anything else is an error
+/// carrying the offending token.  This is the pure core of
+/// [`active`], split out so tests can exercise every branch without
+/// touching process environment.
+pub fn resolve(force: Option<&str>) -> Result<Isa, String> {
+    let tok = match force {
+        None => return Ok(detect()),
+        Some(s) if s.trim().is_empty() => return Ok(detect()),
+        Some(s) => s,
+    };
+    let isa = Isa::parse(tok)?;
+    if supported(isa) {
+        Ok(isa)
+    } else {
+        Err(format!(
+            "forced ISA `{}` is not supported on this machine \
+             (detected: {})",
+            isa.name(),
+            detect().name()
+        ))
+    }
+}
+
+/// The ISA the process dispatches to: [`resolve`] over `LOP_FORCE_ISA`,
+/// read once and cached for the life of the process (so every
+/// `GemmPlan` — and every panel the plan cache retains — is built for
+/// the same ISA).  Panics with the offending token if the variable
+/// names an unknown or unsupported ISA: a forced run that cannot run
+/// as forced must fail at startup, not quietly degrade.
+pub fn active() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let force = std::env::var(FORCE_ENV).ok();
+        resolve(force.as_deref())
+            .unwrap_or_else(|e| panic!("{FORCE_ENV}: {e}"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_known_tokens() {
+        assert_eq!(Isa::parse("scalar"), Ok(Isa::Scalar));
+        assert_eq!(Isa::parse("avx2"), Ok(Isa::Avx2));
+        // case-insensitive, whitespace-tolerant (env values are messy)
+        assert_eq!(Isa::parse("Scalar"), Ok(Isa::Scalar));
+        assert_eq!(Isa::parse("  AVX2\n"), Ok(Isa::Avx2));
+    }
+
+    #[test]
+    fn parse_errors_carry_the_token() {
+        let e = Isa::parse("avx999").unwrap_err();
+        assert!(e.contains("avx999"), "{e}");
+        assert!(e.contains("scalar") && e.contains("avx2"),
+                "error must list the valid tokens: {e}");
+    }
+
+    #[test]
+    fn scalar_always_supported_and_detected_first() {
+        assert!(supported(Isa::Scalar));
+        let d = detected();
+        assert_eq!(d.first(), Some(&Isa::Scalar));
+        // detect() is the widest of the detected list
+        assert_eq!(detect(), *d.last().unwrap());
+        assert!(supported(detect()));
+    }
+
+    #[test]
+    fn resolve_defaults_and_forces() {
+        assert_eq!(resolve(None), Ok(detect()));
+        assert_eq!(resolve(Some("")), Ok(detect()));
+        assert_eq!(resolve(Some("  ")), Ok(detect()));
+        assert_eq!(resolve(Some("scalar")), Ok(Isa::Scalar));
+        let e = resolve(Some("bogus-isa")).unwrap_err();
+        assert!(e.contains("bogus-isa"), "{e}");
+        if supported(Isa::Avx2) {
+            assert_eq!(resolve(Some("avx2")), Ok(Isa::Avx2));
+        } else {
+            let e = resolve(Some("avx2")).unwrap_err();
+            assert!(e.contains("avx2") && e.contains("not supported"),
+                    "{e}");
+        }
+    }
+
+    #[test]
+    fn active_is_stable_and_consistent_with_env() {
+        let a = active();
+        assert_eq!(a, active(), "active() must be memoized");
+        match std::env::var(FORCE_ENV) {
+            Ok(s) if !s.trim().is_empty() => {
+                assert_eq!(a, Isa::parse(&s).unwrap());
+            }
+            _ => assert_eq!(a, detect()),
+        }
+    }
+
+    #[test]
+    fn isa_ordering_is_narrow_to_wide() {
+        assert!(Isa::Scalar < Isa::Avx2);
+        assert_eq!(Isa::Scalar.to_string(), "scalar");
+        assert_eq!(Isa::Avx2.to_string(), "avx2");
+    }
+}

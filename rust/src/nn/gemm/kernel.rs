@@ -1,12 +1,15 @@
 //! The object-safe [`Kernel`] trait, the Goto-style blocked driver and
 //! the MR x NR register-tile microkernel.
 //!
-//! Loop structure (per thread, over its row chunk):
+//! Loop structure (per thread, over its row chunk; `mcb`/`ncb` are the
+//! per-kernel block sizes from [`eff_blocks`] — the largest multiples
+//! of the kernel's MR/NR fitting the MC/NC cache targets, so the
+//! driver never assumes one tile shape):
 //!
 //! ```text
-//! for ic in MC row blocks          // L2: A block  (MC x KC)
-//!   for jc in NC column blocks     // L2/L3: wide accumulator tile
-//!     acc[MC x NC] = 0             //   (f64/i64 — stays wide across
+//! for ic in mcb row blocks         // L2: A block  (mcb x KC)
+//!   for jc in ncb column blocks    // L2/L3: wide accumulator tile
+//!     acc[mcb x ncb] = 0           //   (f64/i64 — stays wide across
 //!     for pc in KC depth blocks    //    *all* depth blocks)
 //!       for ir in MR panels        // registers
 //!         for jr in NR panels
@@ -25,22 +28,46 @@
 //! (`pack_a_block` / `pack_b_block`), so no packing work is repeated
 //! inside the block loops.
 //!
+//! The innermost step is a function pointer ([`MicroFn`] /
+//! [`BinaryDriveFn`]) selected once at kernel construction by
+//! `super::isa` — the portable register-tile [`micro`] for
+//! [`Isa::Scalar`], a `target_feature`-gated SIMD kernel from
+//! `super::simd` for wider tiers.  Each kernel also advertises its own
+//! MR/NR ([`Kernel::mr`]/[`Kernel::nr`]), which the pack routines and
+//! this driver honor — and which travels with every prepacked panel
+//! buffer so panels can never be consumed at a different geometry than
+//! they were packed for.
+//!
 //! Threading splits rows into per-thread chunks aligned to MR (panels
 //! never straddle threads); each output element is still reduced by
 //! exactly one thread in the same order, so results are bit-identical
 //! across thread counts.
 
+use super::isa::Isa;
 use super::micro::MicroArith;
 use super::pack::{pack_a_bits, pack_a_block, pack_b_bits, pack_b_block};
 use std::any::Any;
 
-/// Row-block size: the A sub-block (MC x KC) an inner sweep works on.
+/// Row-block target: the A sub-block (~MC x KC) an inner sweep works
+/// on.  Kernels round down to their MR ([`eff_blocks`]).
 pub const MC: usize = 64;
 /// Depth-block size: panel slices streamed through the microkernel.
 pub const KC: usize = 256;
-/// Column-block size: bounds the wide accumulator tile (MC x NC wide
-/// elements, 128 KiB at f64/i64 — L2-resident on the target cores).
+/// Column-block target: bounds the wide accumulator tile (~MC x NC
+/// wide elements, 128 KiB at f64/i64 — L2-resident on the target
+/// cores).  Kernels round down to their NR ([`eff_blocks`]).
 pub const NC: usize = 256;
+
+/// The effective (row, column) block sizes for a kernel with the given
+/// microtile: the largest multiples of `mr`/`nr` not exceeding
+/// [`MC`]/[`NC`], clamped up to one whole tile when the tile itself is
+/// bigger than the cache target.  The driver steps its cache loops by
+/// these, so any MR x NR — 8x8, 6x16, a deliberately odd 5x7 mock —
+/// gets whole panels per block with no hardcoded remainder
+/// assumptions.
+pub fn eff_blocks(mr: usize, nr: usize) -> (usize, usize) {
+    ((MC / mr).max(1) * mr, (NC / nr).max(1) * nr)
+}
 
 /// Outputs below this threshold stay single-threaded (same heuristic
 /// as the pre-tiled kernels: thread spawn costs more than the GEMM).
@@ -73,6 +100,19 @@ pub fn weight_fingerprint(w: &[f32]) -> u64 {
     h
 }
 
+/// The signature of a blocked microkernel step: `(arith, A panel
+/// slice, B panel slice, kc, accumulator tile at stride)`.  The
+/// scalar [`micro`] and the `super::simd` SIMD kernels all match it,
+/// so a `BlockedKernel` binds its inner loop once at construction.
+pub type MicroFn<A> = fn(&A, &[<A as MicroArith>::Elem],
+                         &[<A as MicroArith>::Elem], usize,
+                         &mut [<A as MicroArith>::Acc], usize);
+
+/// The signature of a binary word-panel drive: `(A word panels,
+/// B word panels, row0, output chunk, words, tail_mask, k, n)`.
+pub type BinaryDriveFn = fn(&[u64], &[u64], usize, &mut [f32], usize,
+                            u64, usize, usize);
+
 /// Prepacked, conditioned weight-side panels for one kernel — the
 /// output of [`Kernel::prepack_weights`], owned by `GemmPlan` (one per
 /// prepared layer) and consumed by [`Kernel::run_prepacked`].
@@ -80,15 +120,21 @@ pub fn weight_fingerprint(w: &[f32]) -> u64 {
 /// The panel buffer is opaque (`dyn Any`, `Send + Sync`): conditioned
 /// element panels for the blocked kernels (`Vec<Elem>` in the
 /// `pack_b_block` layout), sign-bit word panels (`Vec<u64>`) for the
-/// binary kernel.  The identity pair (kernel name, provider `cfg_tag`)
-/// travels with the buffer; `run_prepacked` panics rather than
-/// consume panels conditioned by a different kernel or a
-/// differently-parameterized provider, so two `prepare` calls with
-/// different `ArithKind`s can never share panels.
+/// binary kernel.  The identity triple (kernel name — which carries
+/// the ISA suffix for SIMD kernels — provider `cfg_tag`, and NR panel
+/// geometry) travels with the buffer; `run_prepacked` panics rather
+/// than consume panels conditioned by a different kernel, a
+/// differently-parameterized provider, or at a different panel
+/// geometry — so two `prepare` calls with different `ArithKind`s, and
+/// panels packed under a different forced ISA, can never be silently
+/// consumed.
 pub struct PackedWeights {
     panels: Box<dyn Any + Send + Sync>,
     kernel: &'static str,
     cfg_tag: u64,
+    /// NR the panels were laid out at — panel geometry is part of the
+    /// identity, so a kernel with a different tile width refuses them.
+    panel_nr: usize,
     k: usize,
     n: usize,
     bytes: usize,
@@ -96,9 +142,15 @@ pub struct PackedWeights {
 }
 
 impl PackedWeights {
-    /// Name of the kernel that conditioned these panels.
+    /// Name of the kernel that conditioned these panels (includes the
+    /// ISA suffix for SIMD kernels, e.g. `packed-f32+avx2`).
     pub fn kernel_name(&self) -> &'static str {
         self.kernel
+    }
+
+    /// The NR panel width these panels were laid out at.
+    pub fn panel_nr(&self) -> usize {
+        self.panel_nr
     }
 
     /// Depth (weight rows) the panels were packed for.
@@ -124,11 +176,12 @@ impl PackedWeights {
 }
 
 /// Guarded panel access: identity-check `pw` against the consuming
-/// kernel, then downcast to its concrete panel buffer.  Both checks
-/// panic — handing a kernel foreign panels is a caller bug that must
-/// not produce silently-misconditioned results.
+/// kernel (name, provider tag, panel geometry), then downcast to its
+/// concrete panel buffer.  All checks panic — handing a kernel foreign
+/// panels is a caller bug that must not produce silently
+/// mis-multiplied results.
 fn panels_of<'p, T: 'static>(pw: &'p PackedWeights, kernel: &'static str,
-                             cfg_tag: u64) -> &'p T {
+                             cfg_tag: u64, nr: usize) -> &'p T {
     assert_eq!(
         pw.kernel, kernel,
         "weight panels were packed by kernel `{}`, not `{}`",
@@ -139,6 +192,12 @@ fn panels_of<'p, T: 'static>(pw: &'p PackedWeights, kernel: &'static str,
         "weight panels were packed under a different `{kernel}` \
          configuration"
     );
+    assert_eq!(
+        pw.panel_nr, nr,
+        "weight panels were packed at panel geometry NR={}, but kernel \
+         `{kernel}` needs NR={nr}",
+        pw.panel_nr
+    );
     pw.panels
         .downcast_ref::<T>()
         .expect("panel buffer type does not match the kernel")
@@ -147,10 +206,14 @@ fn panels_of<'p, T: 'static>(pw: &'p PackedWeights, kernel: &'static str,
 /// One packed, tiled GEMM engine for a fixed `ArithKind`.  Object-safe:
 /// `GemmPlan` holds these as `Box<dyn Kernel>`; the monomorphized
 /// implementations behind it are `BlockedKernel<A, MR, NR>` (one per
-/// provider) and the bit-packed `BinaryKernel`.
+/// provider, per ISA tile shape) and the bit-packed `BinaryKernel`.
 pub trait Kernel: Send + Sync {
-    /// Kernel name for plans/logs, e.g. `packed-fi`.
+    /// Kernel name for plans/logs, e.g. `packed-fi` — SIMD variants
+    /// carry an ISA suffix (`packed-fi+avx2`).
     fn name(&self) -> &'static str;
+
+    /// The ISA tier this kernel's inner loop was selected for.
+    fn isa(&self) -> Isa;
 
     /// Microkernel tile height.
     fn mr(&self) -> usize;
@@ -178,24 +241,39 @@ pub trait Kernel: Send + Sync {
     /// `n`).  Same caller contract as [`Kernel::run`]: shapes checked
     /// and m/k/n = 0 short-circuited by `GemmPlan`, so implementations
     /// may assume `m >= 1` and `pw.k(), pw.n() >= 1`.  Panics if `pw`
-    /// was packed by a different kernel or provider configuration.
+    /// was packed by a different kernel, provider configuration, or
+    /// panel geometry.
     fn run_prepacked(&self, x: &[f32], pw: &PackedWeights, m: usize,
                      out: &mut [f32], threads: usize);
 }
 
-/// The generic blocked engine: one monomorphization per provider.
+/// The generic blocked engine: one monomorphization per provider and
+/// tile shape, with the inner microkernel bound as a function pointer
+/// at construction (scalar or a `super::simd` SIMD kernel).
 pub struct BlockedKernel<A: MicroArith, const MR: usize, const NR: usize> {
     arith: A,
+    name: &'static str,
+    isa: Isa,
+    micro_fn: MicroFn<A>,
 }
 
 impl<A: MicroArith, const MR: usize, const NR: usize>
     BlockedKernel<A, MR, NR>
 {
+    /// The portable scalar kernel for this provider at this tile
+    /// shape.
     pub fn new(arith: A) -> Self {
-        // The block loops assume whole panels fit a block.
-        assert!(MC % MR == 0, "MC must be a multiple of MR");
-        assert!(NC % NR == 0, "NC must be a multiple of NR");
-        BlockedKernel { arith }
+        let name = arith.name();
+        BlockedKernel { arith, name, isa: Isa::Scalar,
+                        micro_fn: micro::<A, MR, NR> }
+    }
+
+    /// A kernel with an explicit (typically SIMD) microkernel bound.
+    /// `super::isa::select_kernel_isa` only calls this after verifying
+    /// the target ISA is supported on this machine.
+    pub(crate) fn with_micro(arith: A, name: &'static str, isa: Isa,
+                             micro_fn: MicroFn<A>) -> Self {
+        BlockedKernel { arith, name, isa, micro_fn }
     }
 
     /// The engine proper, over already-packed B panels: pack A, split
@@ -207,7 +285,8 @@ impl<A: MicroArith, const MR: usize, const NR: usize>
         let ap = pack_a_block::<A, MR>(&self.arith, x, m, k);
         let threads = effective_threads(threads, m, n);
         if threads <= 1 {
-            drive::<A, MR, NR>(&self.arith, &ap, bp, 0, out, k, n);
+            drive::<A, MR, NR>(&self.arith, self.micro_fn, &ap, bp, 0,
+                               out, k, n);
             return;
         }
         // Chunk rows per thread, aligned to MR so no A panel straddles
@@ -216,9 +295,10 @@ impl<A: MicroArith, const MR: usize, const NR: usize>
         std::thread::scope(|s| {
             for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
                 let (ap, arith) = (&ap, &self.arith);
+                let micro_fn = self.micro_fn;
                 s.spawn(move || {
-                    drive::<A, MR, NR>(arith, ap, bp, t * rows_per,
-                                       chunk, k, n);
+                    drive::<A, MR, NR>(arith, micro_fn, ap, bp,
+                                       t * rows_per, chunk, k, n);
                 });
             }
         });
@@ -229,7 +309,11 @@ impl<A: MicroArith, const MR: usize, const NR: usize> Kernel
     for BlockedKernel<A, MR, NR>
 {
     fn name(&self) -> &'static str {
-        self.arith.name()
+        self.name
+    }
+
+    fn isa(&self) -> Isa {
+        self.isa
     }
 
     fn mr(&self) -> usize {
@@ -253,8 +337,9 @@ impl<A: MicroArith, const MR: usize, const NR: usize> Kernel
         let bytes = bp.len() * std::mem::size_of::<A::Elem>();
         PackedWeights {
             panels: Box::new(bp),
-            kernel: self.arith.name(),
+            kernel: self.name,
             cfg_tag: self.arith.cfg_tag(),
+            panel_nr: NR,
             k,
             n,
             bytes,
@@ -264,8 +349,8 @@ impl<A: MicroArith, const MR: usize, const NR: usize> Kernel
 
     fn run_prepacked(&self, x: &[f32], pw: &PackedWeights, m: usize,
                      out: &mut [f32], threads: usize) {
-        let bp = panels_of::<Vec<A::Elem>>(pw, self.arith.name(),
-                                           self.arith.cfg_tag());
+        let bp = panels_of::<Vec<A::Elem>>(pw, self.name,
+                                           self.arith.cfg_tag(), NR);
         self.run_packed_b(x, bp, m, pw.k, pw.n, out, threads);
     }
 }
@@ -274,17 +359,18 @@ impl<A: MicroArith, const MR: usize, const NR: usize> Kernel
 /// `[row0, row0 + chunk.len()/n)` of the output).  `row0` is a
 /// multiple of MR.
 fn drive<A: MicroArith, const MR: usize, const NR: usize>(
-    arith: &A, ap: &[A::Elem], bp: &[A::Elem], row0: usize,
-    chunk: &mut [f32], k: usize, n: usize,
+    arith: &A, micro_fn: MicroFn<A>, ap: &[A::Elem], bp: &[A::Elem],
+    row0: usize, chunk: &mut [f32], k: usize, n: usize,
 ) {
+    let (mcb, ncb) = eff_blocks(MR, NR);
     let mrows = chunk.len() / n;
     // Wide accumulator tile, reused across blocks (zeroed per tile).
-    let mut acc: Vec<A::Acc> = vec![arith.zero_acc(); MC * NC];
-    for ic in (0..mrows).step_by(MC) {
-        let mc = MC.min(mrows - ic);
+    let mut acc: Vec<A::Acc> = vec![arith.zero_acc(); mcb * ncb];
+    for ic in (0..mrows).step_by(mcb) {
+        let mc = mcb.min(mrows - ic);
         let mc_pad = mc.next_multiple_of(MR);
-        for jc in (0..n).step_by(NC) {
-            let nc = NC.min(n - jc);
+        for jc in (0..n).step_by(ncb) {
+            let nc = ncb.min(n - jc);
             let nc_pad = nc.next_multiple_of(NR);
             for a in acc[..mc_pad * nc_pad].iter_mut() {
                 *a = arith.zero_acc();
@@ -300,7 +386,7 @@ fn drive<A: MicroArith, const MR: usize, const NR: usize>(
                         let q = (jc + jr) / NR;
                         let bbase = q * NR * k + pc * NR;
                         let bpan = &bp[bbase..bbase + kc * NR];
-                        micro::<A, MR, NR>(
+                        micro_fn(
                             arith, apan, bpan, kc,
                             &mut acc[ir * nc_pad + jr..],
                             nc_pad,
@@ -320,10 +406,11 @@ fn drive<A: MicroArith, const MR: usize, const NR: usize>(
     }
 }
 
-/// The MR x NR register-tile microkernel: load the accumulator tile,
-/// stream `kc` packed depth steps through it, store it back.  Per
+/// The portable MR x NR register-tile microkernel: load the accumulator
+/// tile, stream `kc` packed depth steps through it, store it back.  Per
 /// output element this appends products in increasing k order — the
-/// bit-exactness invariant.
+/// bit-exactness invariant (the `super::simd` kernels preserve the same
+/// per-element order; their lanes run along NR).
 #[inline]
 fn micro<A: MicroArith, const MR: usize, const NR: usize>(
     arith: &A, apan: &[A::Elem], bpan: &[A::Elem], kc: usize,
@@ -354,18 +441,41 @@ fn micro<A: MicroArith, const MR: usize, const NR: usize>(
 // microkernel is popcount over word panels.
 // ---------------------------------------------------------------------------
 
-/// Microkernel tile for the binary path (word panels, u32 agree
-/// counters).
-const BMR: usize = 4;
-const BNR: usize = 4;
-
 /// Provider fingerprint for the (parameterless) binary configuration.
 const BINARY_CFG_TAG: u64 = 0x06;
 
-/// Bit-packed XNOR/popcount kernel for `ArithKind::Binary`.
-pub struct BinaryKernel;
+/// Bit-packed XNOR/popcount kernel for `ArithKind::Binary`, generic
+/// over its BMR x BNR word-panel tile: the scalar tier runs 4x4, the
+/// AVX2 tier an 8x8 tile driven through a `popcnt`-enabled
+/// instantiation of the same [`binary_drive_impl`] (bit-exact by
+/// construction — only the emitted popcount instruction and tile
+/// shape differ).
+pub struct BinaryKernel<const BMR: usize, const BNR: usize> {
+    name: &'static str,
+    isa: Isa,
+    drive_fn: BinaryDriveFn,
+}
 
-impl BinaryKernel {
+impl BinaryKernel<4, 4> {
+    /// The portable scalar binary kernel (4x4 word tile).
+    pub fn scalar() -> Self {
+        BinaryKernel {
+            name: "packed-binxnor",
+            isa: Isa::Scalar,
+            drive_fn: binary_drive_scalar::<4, 4>,
+        }
+    }
+}
+
+impl<const BMR: usize, const BNR: usize> BinaryKernel<BMR, BNR> {
+    /// A binary kernel with an explicit drive (typically the
+    /// `popcnt`-enabled one).  `super::isa::select_kernel_isa` only
+    /// calls this after verifying the target ISA is supported.
+    pub(crate) fn with_drive(name: &'static str, isa: Isa,
+                             drive_fn: BinaryDriveFn) -> Self {
+        BinaryKernel { name, isa, drive_fn }
+    }
+
     /// The popcount engine over already-packed B word panels: pack A
     /// sign bits, split rows across threads, drive.  Shared by `run`
     /// and `run_prepacked` — the packing *is* the conditioning for this
@@ -391,9 +501,10 @@ impl BinaryKernel {
         std::thread::scope(|s| {
             for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
                 let ap = &ap;
+                let drive_fn = self.drive_fn;
                 let worker = move || {
-                    binary_drive(ap, bp, t * rows_per, chunk, words,
-                                 tail_mask, k, n);
+                    drive_fn(ap, bp, t * rows_per, chunk, words,
+                             tail_mask, k, n);
                 };
                 if threads <= 1 {
                     worker();
@@ -405,9 +516,15 @@ impl BinaryKernel {
     }
 }
 
-impl Kernel for BinaryKernel {
+impl<const BMR: usize, const BNR: usize> Kernel
+    for BinaryKernel<BMR, BNR>
+{
     fn name(&self) -> &'static str {
-        "packed-binxnor"
+        self.name
+    }
+
+    fn isa(&self) -> Isa {
+        self.isa
     }
 
     fn mr(&self) -> usize {
@@ -431,8 +548,9 @@ impl Kernel for BinaryKernel {
         let bytes = bp.len() * std::mem::size_of::<u64>();
         PackedWeights {
             panels: Box::new(bp),
-            kernel: self.name(),
+            kernel: self.name,
             cfg_tag: BINARY_CFG_TAG,
+            panel_nr: BNR,
             k,
             n,
             bytes,
@@ -442,13 +560,21 @@ impl Kernel for BinaryKernel {
 
     fn run_prepacked(&self, x: &[f32], pw: &PackedWeights, m: usize,
                      out: &mut [f32], threads: usize) {
-        let bp = panels_of::<Vec<u64>>(pw, self.name(), BINARY_CFG_TAG);
+        let bp = panels_of::<Vec<u64>>(pw, self.name, BINARY_CFG_TAG,
+                                       BNR);
         self.run_packed_b(x, bp, m, pw.k, pw.n, out, threads);
     }
 }
 
-fn binary_drive(ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
-                words: usize, tail_mask: u64, k: usize, n: usize) {
+/// The binary word-panel sweep, generic over the BMR x BNR word tile.
+/// `inline(always)` so `target_feature` wrappers (the `popcnt` drive
+/// in `super::simd`) propagate their feature set into the `count_ones`
+/// calls.
+#[inline(always)]
+pub(crate) fn binary_drive_impl<const BMR: usize, const BNR: usize>(
+    ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
+    words: usize, tail_mask: u64, k: usize, n: usize,
+) {
     let mrows = chunk.len() / n;
     for ir in (0..mrows).step_by(BMR) {
         let p = (row0 + ir) / BMR;
@@ -479,17 +605,41 @@ fn binary_drive(ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
     }
 }
 
+/// The portable (no `target_feature`) instantiation of
+/// [`binary_drive_impl`], matching [`BinaryDriveFn`].
+fn binary_drive_scalar<const BMR: usize, const BNR: usize>(
+    ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
+    words: usize, tail_mask: u64, k: usize, n: usize,
+) {
+    binary_drive_impl::<BMR, BNR>(ap, bp, row0, chunk, words, tail_mask,
+                                  k, n)
+}
+
 #[cfg(test)]
 mod tests {
+    use super::super::micro::{F32Micro, FixedMicro};
+    use super::super::reference::gemm_reference;
     use super::*;
+    use crate::approx::arith::ArithKind;
+    use crate::numeric::FixedPoint;
+    use crate::util::prng::Rng;
 
     #[test]
-    fn block_sizes_divide() {
-        // the driver's panel-index arithmetic relies on these
-        assert_eq!(MC % 4, 0);
-        assert_eq!(MC % 8, 0);
-        assert_eq!(NC % 4, 0);
-        assert_eq!(NC % 8, 0);
+    fn eff_blocks_covers_any_tile() {
+        // the production tiles
+        assert_eq!(eff_blocks(8, 8), (64, 256));
+        assert_eq!(eff_blocks(4, 8), (64, 256));
+        assert_eq!(eff_blocks(4, 4), (64, 256));
+        assert_eq!(eff_blocks(6, 16), (60, 256)); // avx2 f32: MC rounds
+        // odd tiles and tiles larger than the cache targets
+        assert_eq!(eff_blocks(5, 7), (60, 252));
+        assert_eq!(eff_blocks(100, 300), (100, 300));
+        for (mr, nr) in [(1, 1), (3, 5), (6, 16), (7, 9), (64, 256),
+                         (65, 257)] {
+            let (mcb, ncb) = eff_blocks(mr, nr);
+            assert!(mcb % mr == 0 && ncb % nr == 0, "({mr},{nr})");
+            assert!(mcb >= mr && ncb >= nr, "({mr},{nr})");
+        }
     }
 
     #[test]
@@ -516,28 +666,126 @@ mod tests {
 
     #[test]
     fn prepack_carries_identity_and_shape() {
-        use super::super::micro::F32Micro;
         let kern = BlockedKernel::<_, 8, 8>::new(F32Micro);
         let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
         let pw = kern.prepack_weights(&w, 2, 3);
         assert_eq!(pw.kernel_name(), "packed-f32");
         assert_eq!((pw.k(), pw.n()), (2, 3));
+        assert_eq!(pw.panel_nr(), 8);
         // one 8-wide panel of depth 2, f32 elements
         assert_eq!(pw.resident_bytes(), 8 * 2 * 4);
         assert_eq!(pw.fingerprint(), weight_fingerprint(&w));
         // binary panels report word-panel bytes
-        let pb = BinaryKernel.prepack_weights(&w, 2, 3);
+        let pb = BinaryKernel::scalar().prepack_weights(&w, 2, 3);
         assert_eq!(pb.kernel_name(), "packed-binxnor");
+        assert_eq!(pb.panel_nr(), 4);
         assert_eq!(pb.resident_bytes(), 4 * 8); // one BNR=4 word panel
     }
 
     #[test]
     #[should_panic(expected = "packed by kernel")]
     fn foreign_panels_rejected_by_kernel_name() {
-        use super::super::micro::F32Micro;
         let f32k = BlockedKernel::<_, 8, 8>::new(F32Micro);
-        let pw = BinaryKernel.prepack_weights(&[1.0; 6], 2, 3);
+        let pw = BinaryKernel::scalar().prepack_weights(&[1.0; 6], 2, 3);
         let mut out = [0.0f32; 3];
         f32k.run_prepacked(&[1.0, 1.0], &pw, 1, &mut out, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "panel geometry")]
+    fn same_name_panels_with_different_geometry_are_refused() {
+        // identical provider (same name, same cfg_tag) at two tile
+        // widths: without the geometry check the NR=4 kernel would
+        // silently mis-index NR=8 panels
+        let wide = BlockedKernel::<_, 8, 8>::new(F32Micro);
+        let narrow = BlockedKernel::<_, 8, 4>::new(F32Micro);
+        let pw = wide.prepack_weights(&[0.5f32; 12], 4, 3);
+        let mut out = [0.0f32; 3];
+        narrow.run_prepacked(&[1.0; 4], &pw, 1, &mut out, 1);
+    }
+
+    /// Regression for the former `MC % MR == 0` constructor assert:
+    /// deliberately odd tiles (5x7, 3x5) whose effective blocks (60,
+    /// 252) divide neither MC nor NC must still match the reference
+    /// oracle bitwise on shapes with every kind of tail — m crossing
+    /// mcb, n crossing ncb, k crossing KC, and sizes not divisible by
+    /// any tile dimension.
+    #[test]
+    fn odd_tile_kernels_match_reference() {
+        let shapes =
+            [(61, 257, 253), (5, 7, 1), (13, 300, 11), (1, 1, 9)];
+        let mut rng = Rng::new(73);
+        let f32_kind = ArithKind::Float32;
+        let fi_kind = ArithKind::parse("FI(6,8)").unwrap();
+        let odd_f32 = BlockedKernel::<_, 5, 7>::new(F32Micro);
+        let odd_fi = BlockedKernel::<_, 3, 5>::new(FixedMicro::new(
+            FixedPoint::new(6, 8)));
+        let kerns: [(&ArithKind, &dyn Kernel); 2] =
+            [(&f32_kind, &odd_f32), (&fi_kind, &odd_fi)];
+        for (kind, kern) in kerns {
+            for &(m, k, n) in &shapes {
+                let x: Vec<f32> = (0..m * k)
+                    .map(|_| (rng.normal() * 2.0) as f32)
+                    .collect();
+                let w: Vec<f32> = (0..k * n)
+                    .map(|_| kind.quantize(rng.normal() as f32))
+                    .collect();
+                let mut want = vec![f32::NAN; m * n];
+                gemm_reference(kind, &x, &w, m, k, n, &mut want, 1);
+                for threads in [1, 3] {
+                    let mut got = vec![f32::NAN; m * n];
+                    kern.run(&x, &w, m, k, n, &mut got, threads);
+                    for (i, (g, ww)) in got.iter().zip(&want).enumerate()
+                    {
+                        assert_eq!(
+                            g.to_bits(), ww.to_bits(),
+                            "{} {}x{}x{} t={threads}: out[{i}] = {g} \
+                             vs reference {ww}",
+                            kern.name(), m, k, n
+                        );
+                    }
+                    // prepacked path at the same odd geometry
+                    let pw = kern.prepack_weights(&w, k, n);
+                    if m > 0 && k > 0 && n > 0 {
+                        let mut pre = vec![f32::NAN; m * n];
+                        kern.run_prepacked(&x, &pw, m, &mut pre,
+                                           threads);
+                        assert_eq!(pre, got, "{} prepacked diverged",
+                                   kern.name());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Same regression for the binary word-panel drive: an odd 3x5
+    /// word tile must agree with the ±1 dot product on tail-heavy
+    /// shapes (k mid-word, n/m not divisible by the tile).
+    #[test]
+    fn odd_tile_binary_kernel_matches_pm1_dot() {
+        let kern = BinaryKernel::<3, 5>::with_drive(
+            "packed-binxnor", Isa::Scalar, binary_drive_scalar::<3, 5>);
+        let mut rng = Rng::new(74);
+        for (m, k, n) in [(7, 130, 11), (1, 63, 1), (4, 64, 5)] {
+            let x: Vec<f32> =
+                (0..m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> =
+                (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mut got = vec![f32::NAN; m * n];
+            kern.run(&x, &w, m, k, n, &mut got, 1);
+            for r in 0..m {
+                for j in 0..n {
+                    let mut dot = 0f32;
+                    for kk in 0..k {
+                        let a =
+                            if x[r * k + kk] >= 0.0 { 1.0 } else { -1.0 };
+                        let b =
+                            if w[kk * n + j] >= 0.0 { 1.0 } else { -1.0 };
+                        dot += a * b;
+                    }
+                    assert_eq!(got[r * n + j], dot, "r={r} j={j}");
+                }
+            }
+        }
     }
 }

@@ -8,23 +8,32 @@
 //! mirroring the widened-partial-sum datapath of the paper (§4.2) and
 //! the f32-accumulation semantics of the PJRT artifacts.
 //!
-//! Module split (§Perf iteration 6 — the packed/tiled architecture):
+//! Module split (§Perf iterations 6–9 — the packed/tiled architecture
+//! plus runtime ISA dispatch):
 //!
 //! * [`micro`] — `MicroArith`: packed element + wide accumulator +
 //!   fused operand conditioning, one impl per `ArithKind` variant;
 //! * [`pack`] — `pack_a_block` / `pack_b_block`: MR-row / NR-column
 //!   panels with conditioning fused into the copy (O(mk + kn) once);
-//! * [`kernel`] — the object-safe [`Kernel`] trait, the MC/KC/NC
-//!   blocked driver, the MR x NR register-tile microkernel, and the
-//!   bit-packed binary/XNOR kernel;
+//! * [`kernel`] — the object-safe [`Kernel`] trait, the blocked driver
+//!   (per-kernel MR/NR via `eff_blocks`), the portable register-tile
+//!   microkernel, and the bit-packed binary/XNOR kernel;
+//! * [`isa`] — runtime ISA detection and the `LOP_FORCE_ISA` override:
+//!   [`GemmPlan::new`] resolves the widest supported kernel once, at
+//!   plan-build time;
+//! * `simd` (x86_64) — `target_feature`-gated AVX2+FMA / AVX2 /
+//!   POPCNT microkernels the dispatch layer binds into the driver;
 //! * [`reference`] — the pre-tiling kernels, kept as the oracle:
-//!   `tests/gemm_differential.rs` proves the packed path bit-identical
-//!   to them for every provider across randomized shapes and thread
-//!   counts.
+//!   `tests/gemm_differential.rs` proves the packed path matches them
+//!   for every provider and every detected ISA across randomized
+//!   shapes and thread counts (bitwise for every integer/bit-parallel
+//!   kernel; within [`fma_f32_bound`] for the AVX2+FMA f32 kernel,
+//!   where fused rounding is the point).
 //!
-//! [`GemmPlan`] is the selection layer: resolve an [`ArithKind`] to its
-//! kernel once (per prepared layer, per bench case), then `run`
-//! repeatedly.  [`gemm`] is the one-shot convenience wrapper.
+//! [`GemmPlan`] is the selection layer: resolve an [`ArithKind`] (at
+//! the active [`Isa`]) to its kernel once (per prepared layer, per
+//! bench case), then `run` repeatedly.  [`gemm`] is the one-shot
+//! convenience wrapper.
 //!
 //! Weight matrices are *constant* per prepared layer, so the plan can
 //! additionally own their conditioned panels: [`GemmPlan::prepack`]
@@ -32,15 +41,22 @@
 //! once, and [`GemmPlan::run_prepacked`] / [`GemmPlan::run_cached`]
 //! then serve every forward pass from the cached [`PackedWeights`] —
 //! zero weight-side `pack_b_block`/bitmap-encode work per call
-//! (`tests/prepack_differential.rs` proves the cached path bit-identical
-//! to [`reference`] and pins the zero-repack contract via
-//! [`pack::weight_pack_count`]).
+//! (`tests/prepack_differential.rs` proves the cached path matches
+//! [`reference`] and pins the zero-repack contract via
+//! [`pack::weight_pack_count`]).  Panels carry their kernel's name
+//! (ISA-suffixed) and panel geometry, so panels packed under one
+//! forced ISA panic — never mis-multiply — under another
+//! (`tests/isa_dispatch.rs`).
 
+pub mod isa;
 pub mod kernel;
 pub mod micro;
 pub mod pack;
 pub mod reference;
+#[cfg(target_arch = "x86_64")]
+mod simd;
 
+pub use isa::Isa;
 pub use kernel::{default_threads, weight_fingerprint, Kernel,
                  PackedWeights, KC, MC, NC};
 
@@ -48,24 +64,64 @@ use crate::approx::arith::ArithKind;
 use kernel::{BinaryKernel, BlockedKernel};
 use micro::{CfpuMicro, DrumMicro, F32Micro, FixedMicro, FloatMicro};
 
-/// The name of the kernel [`select_kernel`] resolves for `kind`,
-/// without constructing it — for plan reporting (`execution_plan`)
-/// on hot paths like the explorer's backend choice.
+/// The name of the kernel [`select_kernel`] resolves for `kind` at the
+/// process's active ISA, without constructing it — for plan reporting
+/// (`execution_plan`) on hot paths like the explorer's backend choice.
 pub fn kernel_name(kind: &ArithKind) -> &'static str {
-    match kind {
-        ArithKind::Float32 => "packed-f32",
-        ArithKind::FixedExact(_) => "packed-fi",
-        ArithKind::FixedDrum(_) => "packed-drum",
-        ArithKind::FloatExact(_) => "packed-fl",
-        ArithKind::FloatCfpu(_) => "packed-cfpu",
-        ArithKind::Binary => "packed-binxnor",
+    kernel_name_isa(kind, isa::active())
+}
+
+/// The name [`select_kernel_isa`] would report for `kind` at `isa` —
+/// a pure name table (no feature detection): SIMD variants carry an
+/// ISA suffix, providers without a SIMD kernel (FL's f64 lattice,
+/// CFPU's class dispatch) keep their scalar name at every tier.
+pub fn kernel_name_isa(kind: &ArithKind, isa: Isa) -> &'static str {
+    match (isa, kind) {
+        (Isa::Avx2, ArithKind::Float32) => "packed-f32+avx2",
+        (Isa::Avx2, ArithKind::FixedExact(_)) => "packed-fi+avx2",
+        (Isa::Avx2, ArithKind::FixedDrum(_)) => "packed-drum+avx2",
+        (Isa::Avx2, ArithKind::Binary) => "packed-binxnor+popcnt",
+        (_, ArithKind::Float32) => "packed-f32",
+        (_, ArithKind::FixedExact(_)) => "packed-fi",
+        (_, ArithKind::FixedDrum(_)) => "packed-drum",
+        (_, ArithKind::FloatExact(_)) => "packed-fl",
+        (_, ArithKind::FloatCfpu(_)) => "packed-cfpu",
+        (_, ArithKind::Binary) => "packed-binxnor",
     }
 }
 
-/// Resolve the packed kernel for a provider.  Microkernel tiles: 8x8
-/// for f32 (f32 register tile), 4x8 for the i64/f64 accumulators, 4x4
-/// for CFPU (scalar-heavy inner op) and binary (word panels).
+/// Resolve the packed kernel for a provider at the process's active
+/// ISA (`LOP_FORCE_ISA` override, else the widest detected — see
+/// [`isa::active`]).
 pub fn select_kernel(kind: &ArithKind) -> Box<dyn Kernel> {
+    select_kernel_isa(kind, isa::active())
+}
+
+/// Resolve the packed kernel for a provider at an explicit ISA tier.
+/// Panics if `isa` is not supported on this machine — a kernel must
+/// never be constructed whose instructions cannot run (the safety
+/// contract of the `simd` module).  The per-ISA differential suites
+/// iterate [`isa::detected`] through this entry point.
+pub fn select_kernel_isa(kind: &ArithKind, isa: Isa) -> Box<dyn Kernel> {
+    assert!(
+        isa::supported(isa),
+        "cannot build `{}` kernels: ISA `{isa}` is not supported on \
+         this machine",
+        kernel_name_isa(kind, isa)
+    );
+    match isa {
+        Isa::Scalar => select_scalar(kind),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => select_avx2(kind),
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => unreachable!("Avx2 is never supported off x86_64"),
+    }
+}
+
+/// The portable kernels.  Microkernel tiles: 8x8 for f32 (f32 register
+/// tile), 4x8 for the i64/f64 accumulators, 4x4 for CFPU
+/// (scalar-heavy inner op) and binary (word panels).
+fn select_scalar(kind: &ArithKind) -> Box<dyn Kernel> {
     match kind {
         ArithKind::Float32 => {
             Box::new(BlockedKernel::<_, 8, 8>::new(F32Micro))
@@ -82,8 +138,80 @@ pub fn select_kernel(kind: &ArithKind) -> Box<dyn Kernel> {
         ArithKind::FloatCfpu(c) => {
             Box::new(BlockedKernel::<_, 4, 4>::new(CfpuMicro::new(*c)))
         }
-        ArithKind::Binary => Box::new(BinaryKernel),
+        ArithKind::Binary => Box::new(BinaryKernel::scalar()),
     }
+}
+
+/// The AVX2-tier kernels (only constructed after `isa::supported`
+/// confirmed avx2 + fma + popcnt).  Tiles: 6x16 for f32 (12 ymm
+/// accumulators + operands fill the register file), 4x8 i64 lanes for
+/// the i32-code paths, an 8x8 word tile for binary.  FL (f64 lattice
+/// quantization per MAC) and CFPU (3-way class dispatch per product)
+/// have no profitable SIMD formulation — they keep the scalar kernel,
+/// so their bit-exactness contract is ISA-independent.
+#[cfg(target_arch = "x86_64")]
+fn select_avx2(kind: &ArithKind) -> Box<dyn Kernel> {
+    match kind {
+        ArithKind::Float32 => {
+            Box::new(BlockedKernel::<_, 6, 16>::with_micro(
+                F32Micro, "packed-f32+avx2", Isa::Avx2,
+                simd::micro_f32_avx2))
+        }
+        ArithKind::FixedExact(rep) => {
+            Box::new(BlockedKernel::<_, 4, 8>::with_micro(
+                FixedMicro::new(*rep), "packed-fi+avx2", Isa::Avx2,
+                simd::micro_i32_avx2::<FixedMicro>))
+        }
+        ArithKind::FixedDrum(d) => {
+            Box::new(BlockedKernel::<_, 4, 8>::with_micro(
+                DrumMicro::new(*d), "packed-drum+avx2", Isa::Avx2,
+                simd::micro_i32_avx2::<DrumMicro>))
+        }
+        ArithKind::FloatExact(_) | ArithKind::FloatCfpu(_) => {
+            select_scalar(kind)
+        }
+        ArithKind::Binary => {
+            Box::new(BinaryKernel::<8, 8>::with_drive(
+                "packed-binxnor+popcnt", Isa::Avx2,
+                simd::binary_drive_popcnt::<8, 8>))
+        }
+    }
+}
+
+/// Per-element tolerance for comparing an FMA/vectorized f32 kernel
+/// against the scalar `reference` path — the documented tolerance
+/// table of DESIGN.md §gemm, as code.
+///
+/// Both the scalar sum and the FMA-fused, NR-lane-vectorized sum fold
+/// each output element's k products in increasing k order; standard
+/// forward-error analysis bounds either ordering's error by
+/// `γ_k · Σ|x·w|` with `γ_k ≈ k·u` (u = unit roundoff = ε/2), so the
+/// *difference* between the two is at most `2 γ_k Σ|x·w| ≤ k·ε·Σ`.
+/// This function returns `2·k·ε·Σ|x·w| + f32::MIN_POSITIVE` per
+/// element — a further 2x headroom over the worst case, plus an
+/// absolute floor so exact-zero sums compare non-strictly.
+///
+/// Every non-f32 kernel is bit-exact across ISAs (integer/bit
+/// accumulation is associative; FL/CFPU have no SIMD variant), so this
+/// bound applies to exactly one kernel: `packed-f32+avx2`.
+pub fn fma_f32_bound(x: &[f32], w: &[f32], m: usize, k: usize,
+                     n: usize) -> Vec<f64> {
+    assert_eq!(x.len(), m * k, "x shape mismatch");
+    assert_eq!(w.len(), k * n, "w shape mismatch");
+    let mut bound = vec![0.0f64; m * n];
+    for r in 0..m {
+        for j in 0..n {
+            let mut mag = 0.0f64;
+            for kk in 0..k {
+                mag +=
+                    (x[r * k + kk] as f64 * w[kk * n + j] as f64).abs();
+            }
+            bound[r * n + j] = 2.0 * k as f64 * f32::EPSILON as f64
+                * mag
+                + f32::MIN_POSITIVE as f64;
+        }
+    }
+    bound
 }
 
 /// A resolved (provider -> packed kernel) pairing, optionally carrying
@@ -91,14 +219,18 @@ pub fn select_kernel(kind: &ArithKind) -> Box<dyn Kernel> {
 /// once at `prepare` time — which also conditions the constant weight
 /// matrix into panels via [`GemmPlan::prepack`] — and reuse both every
 /// forward pass; the explorer and benches do the same per
-/// configuration.
+/// configuration.  [`GemmPlan::new`] dispatches at the active ISA
+/// ([`isa::active`]); [`GemmPlan::with_isa`] pins a tier explicitly
+/// (the per-ISA test suites use this).
 ///
 /// ```
 /// use lop::approx::arith::ArithKind;
-/// use lop::nn::gemm::GemmPlan;
+/// use lop::nn::gemm::{GemmPlan, Isa};
 ///
-/// let plan = GemmPlan::new(&ArithKind::parse("FI(6,8)").unwrap());
+/// let kind = ArithKind::parse("FI(6,8)").unwrap();
+/// let plan = GemmPlan::with_isa(&kind, Isa::Scalar);
 /// assert_eq!(plan.kernel_name(), "packed-fi");
+/// assert_eq!(plan.isa(), Isa::Scalar);
 /// let (x, w) = ([0.5f32, -1.0], [2.0f32]);
 /// let mut out = [0.0f32; 2];
 /// plan.run(&x, &w, 2, 1, 1, &mut out, 1);
@@ -128,18 +260,39 @@ pub struct GemmPlan {
 }
 
 impl GemmPlan {
+    /// A plan at the process's active ISA (`LOP_FORCE_ISA` override,
+    /// else the widest detected).
     pub fn new(kind: &ArithKind) -> GemmPlan {
-        GemmPlan { kind: *kind, kernel: select_kernel(kind), packed: None }
+        GemmPlan::with_isa(kind, isa::active())
+    }
+
+    /// A plan pinned to an explicit ISA tier.  Panics if `isa` is not
+    /// supported on this machine (see [`select_kernel_isa`]).
+    pub fn with_isa(kind: &ArithKind, isa: Isa) -> GemmPlan {
+        GemmPlan {
+            kind: *kind,
+            kernel: select_kernel_isa(kind, isa),
+            packed: None,
+        }
     }
 
     pub fn kind(&self) -> &ArithKind {
         &self.kind
     }
 
-    /// The selected kernel's name (e.g. `packed-fi`), for logs and the
-    /// runtime's execution-plan reporting.
+    /// The selected kernel's name (e.g. `packed-fi`, or
+    /// `packed-fi+avx2` for a SIMD tier), for logs and the runtime's
+    /// execution-plan reporting.
     pub fn kernel_name(&self) -> &'static str {
         self.kernel.name()
+    }
+
+    /// The ISA tier of the selected kernel.  Note this reports the
+    /// *kernel's* tier: providers without a SIMD variant (FL, CFPU)
+    /// report [`Isa::Scalar`] even when the plan was built at a wider
+    /// tier, because the scalar kernel *is* their widest kernel.
+    pub fn isa(&self) -> Isa {
+        self.kernel.isa()
     }
 
     /// `out = quant(x) @ w`.  `w` must already be quantized (the layer
@@ -364,33 +517,57 @@ mod tests {
     }
 
     #[test]
-    fn packed_bit_identical_to_reference_smoke() {
+    fn packed_matches_reference_smoke_per_isa() {
         // The full randomized sweep lives in tests/gemm_differential.rs;
         // this in-module smoke keeps the invariant visible to plain
         // `cargo test` on shapes that exercise every tail path (m, n
-        // not divisible by any tile, k crossing a KC boundary).
+        // not divisible by any tile, k crossing a KC boundary), at
+        // every ISA this machine can dispatch to.  Bitwise everywhere
+        // except the AVX2+FMA f32 kernel, which is pinned by
+        // fma_f32_bound (fused rounding is the point of that kernel).
         let (m, k, n) = (13, 300, 11);
-        for ks in ["float32", "FI(6,8)", "H(6,8,6)", "FL(4,9)",
-                   "I(5,10)", "binxnor"] {
-            let kind = ArithKind::parse(ks).unwrap();
-            let (x, mut w) = rand_mats(20, m, k, n);
-            for wv in &mut w {
-                *wv = kind.quantize(*wv);
-            }
-            let mut got = vec![0.0; m * n];
-            let mut want = vec![0.0; m * n];
-            gemm(&kind, &x, &w, m, k, n, &mut got, 1);
-            reference::gemm_reference(&kind, &x, &w, m, k, n, &mut want,
-                                      1);
-            for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
-                assert_eq!(g.to_bits(), ww.to_bits(),
-                           "{ks}: out[{i}] = {g} vs reference {ww}");
+        for tier in isa::detected() {
+            for ks in ["float32", "FI(6,8)", "H(6,8,6)", "FL(4,9)",
+                       "I(5,10)", "binxnor"] {
+                let kind = ArithKind::parse(ks).unwrap();
+                let plan = GemmPlan::with_isa(&kind, tier);
+                let (x, mut w) = rand_mats(20, m, k, n);
+                for wv in &mut w {
+                    *wv = kind.quantize(*wv);
+                }
+                let mut got = vec![0.0; m * n];
+                let mut want = vec![0.0; m * n];
+                plan.run(&x, &w, m, k, n, &mut got, 1);
+                reference::gemm_reference(&kind, &x, &w, m, k, n,
+                                          &mut want, 1);
+                let fma = kind == ArithKind::Float32
+                    && plan.isa() != Isa::Scalar;
+                let bound = if fma {
+                    fma_f32_bound(&x, &w, m, k, n)
+                } else {
+                    Vec::new()
+                };
+                for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+                    if fma {
+                        let err = (*g as f64 - *ww as f64).abs();
+                        assert!(err <= bound[i],
+                                "{ks}@{tier}: out[{i}] = {g} vs \
+                                 reference {ww} (err {err:e})");
+                    } else {
+                        assert_eq!(g.to_bits(), ww.to_bits(),
+                                   "{ks}@{tier}: out[{i}] = {g} vs \
+                                    reference {ww}");
+                    }
+                }
             }
         }
     }
 
     #[test]
     fn multithreaded_matches_single() {
+        // bit-identical across thread counts holds per kernel — the
+        // same microkernel folds each output element in the same k
+        // order regardless of which thread owns the row
         for kind in [
             ArithKind::Float32,
             ArithKind::parse("FI(6,8)").unwrap(),
@@ -429,22 +606,61 @@ mod tests {
 
     #[test]
     fn kernel_names_per_kind() {
-        for (ks, name) in [
-            ("float32", "packed-f32"),
-            ("FI(6,8)", "packed-fi"),
-            ("H(6,8,12)", "packed-drum"),
-            ("FL(4,9)", "packed-fl"),
-            ("I(5,10)", "packed-cfpu"),
-            ("binxnor", "packed-binxnor"),
-        ] {
+        let kinds = ["float32", "FI(6,8)", "H(6,8,12)", "FL(4,9)",
+                     "I(5,10)", "binxnor"];
+        // scalar names are the unsuffixed base literals
+        for (ks, name) in kinds.iter().zip([
+            "packed-f32", "packed-fi", "packed-drum", "packed-fl",
+            "packed-cfpu", "packed-binxnor",
+        ]) {
             let kind = ArithKind::parse(ks).unwrap();
-            assert_eq!(GemmPlan::new(&kind).kernel_name(), name, "{ks}");
-            // the allocation-free name lookup must agree with the
-            // constructed kernel
-            assert_eq!(kernel_name(&kind), name, "{ks}");
-            let kern = select_kernel(&kind);
-            assert!(kern.mr() >= 1 && kern.nr() >= 1);
+            assert_eq!(kernel_name_isa(&kind, Isa::Scalar), name, "{ks}");
+            assert_eq!(GemmPlan::with_isa(&kind, Isa::Scalar)
+                           .kernel_name(),
+                       name, "{ks}");
         }
+        // the avx2 name table: SIMD paths suffixed, FL/CFPU unchanged
+        for (ks, name) in kinds.iter().zip([
+            "packed-f32+avx2", "packed-fi+avx2", "packed-drum+avx2",
+            "packed-fl", "packed-cfpu", "packed-binxnor+popcnt",
+        ]) {
+            let kind = ArithKind::parse(ks).unwrap();
+            assert_eq!(kernel_name_isa(&kind, Isa::Avx2), name, "{ks}");
+        }
+        // at every detected tier, the constructed kernel agrees with
+        // the allocation-free name table, and the active-ISA shortcuts
+        // agree with each other
+        for tier in isa::detected() {
+            for ks in kinds {
+                let kind = ArithKind::parse(ks).unwrap();
+                let kern = select_kernel_isa(&kind, tier);
+                assert_eq!(kern.name(), kernel_name_isa(&kind, tier),
+                           "{ks}@{tier}");
+                assert!(kern.mr() >= 1 && kern.nr() >= 1);
+            }
+        }
+        for ks in kinds {
+            let kind = ArithKind::parse(ks).unwrap();
+            assert_eq!(GemmPlan::new(&kind).kernel_name(),
+                       kernel_name(&kind), "{ks}");
+        }
+    }
+
+    #[test]
+    fn fma_f32_bound_shape_and_scaling() {
+        // bound is strictly positive (absolute floor) and scales with
+        // operand magnitude and depth
+        let b0 = fma_f32_bound(&[0.0, 0.0], &[0.0, 0.0], 1, 2, 1);
+        assert_eq!(b0.len(), 1);
+        assert!(b0[0] > 0.0);
+        let small = fma_f32_bound(&[1.0, 1.0], &[1.0, 1.0], 1, 2, 1)[0];
+        let big = fma_f32_bound(&[8.0, 8.0], &[8.0, 8.0], 1, 2, 1)[0];
+        assert!(big > small);
+        let deep =
+            fma_f32_bound(&[1.0; 64], &[1.0; 64], 1, 64, 1)[0];
+        assert!(deep > small);
+        // the bound is tiny relative to the values it guards
+        assert!(small < 1e-4);
     }
 
     #[test]
@@ -466,28 +682,33 @@ mod tests {
         // The full randomized sweep lives in
         // tests/prepack_differential.rs; this smoke keeps the cached
         // path visible to plain `cargo test` on a tail-heavy shape.
+        // Bitwise at every ISA: run and run_prepacked share the same
+        // kernel and packing, FMA or not.
         let (m, k, n) = (13, 300, 11);
-        for ks in ["float32", "FI(6,8)", "H(6,8,6)", "FL(4,9)",
-                   "I(5,10)", "binxnor"] {
-            let kind = ArithKind::parse(ks).unwrap();
-            let (x, mut w) = rand_mats(30, m, k, n);
-            for wv in &mut w {
-                *wv = kind.quantize(*wv);
+        for tier in isa::detected() {
+            for ks in ["float32", "FI(6,8)", "H(6,8,6)", "FL(4,9)",
+                       "I(5,10)", "binxnor"] {
+                let kind = ArithKind::parse(ks).unwrap();
+                let (x, mut w) = rand_mats(30, m, k, n);
+                for wv in &mut w {
+                    *wv = kind.quantize(*wv);
+                }
+                let mut plan = GemmPlan::with_isa(&kind, tier);
+                plan.prepack(&w, k, n);
+                let mut got = vec![0.0; m * n];
+                plan.run_prepacked(&x, m, &mut got, 1);
+                let mut want = vec![0.0; m * n];
+                plan.run(&x, &w, m, k, n, &mut want, 1);
+                for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), ww.to_bits(),
+                               "{ks}@{tier}: out[{i}] = {g} vs \
+                                per-call {ww}");
+                }
+                // run_cached hits the same panels
+                let mut cached = vec![0.0; m * n];
+                plan.run_cached(&x, &w, m, k, n, &mut cached, 1);
+                assert_eq!(cached, want, "{ks}@{tier}");
             }
-            let mut plan = GemmPlan::new(&kind);
-            plan.prepack(&w, k, n);
-            let mut got = vec![0.0; m * n];
-            plan.run_prepacked(&x, m, &mut got, 1);
-            let mut want = vec![0.0; m * n];
-            plan.run(&x, &w, m, k, n, &mut want, 1);
-            for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
-                assert_eq!(g.to_bits(), ww.to_bits(),
-                           "{ks}: out[{i}] = {g} vs per-call {ww}");
-            }
-            // run_cached hits the same panels
-            let mut cached = vec![0.0; m * n];
-            plan.run_cached(&x, &w, m, k, n, &mut cached, 1);
-            assert_eq!(cached, want, "{ks}");
         }
     }
 

@@ -156,7 +156,9 @@ pub fn pack_b_bits<const NR: usize>(w: &[f32], k: usize, n: usize)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::gemm::micro::F32Micro;
+    use crate::nn::gemm::micro::{F32Micro, FixedMicro};
+    use crate::numeric::FixedPoint;
+    use crate::util::prop;
 
     #[test]
     fn a_panel_layout_and_padding() {
@@ -225,6 +227,218 @@ mod tests {
         let _ = pack_b_block::<F32Micro, 4>(&F32Micro, &[1.0; 8], 2, 4);
         let _ = pack_b_bits::<4>(&[1.0; 8], 2, 4);
         assert_eq!(weight_pack_count(), c0 + 2);
+    }
+
+    // -----------------------------------------------------------------
+    // pack-geometry properties: with the dispatch layer, kernels carry
+    // their own MR/NR, so the panel math must hold for *any* tile
+    // width — including the widened SIMD tiles (6, 16) and odd mocks —
+    // across m = 0, k = 0, n = 1 and every non-divisible tail.
+    // -----------------------------------------------------------------
+
+    /// Element-wise oracle for [`pack_a_block`]: panel `p`, depth `d`,
+    /// lane `r` holds `condition(x[(p*MR + r) * k + d])`, zero-padded
+    /// past `m`.
+    fn check_a_layout<const MR: usize>(arith: &FixedMicro, x: &[f32],
+                                       m: usize, k: usize)
+                                       -> Result<(), String> {
+        let p = pack_a_block::<FixedMicro, MR>(arith, x, m, k);
+        let panels = m.div_ceil(MR);
+        if p.len() != panels * MR * k {
+            return Err(format!(
+                "A len {} != {panels}*{MR}*{k}", p.len()));
+        }
+        for pi in 0..panels {
+            for d in 0..k {
+                for r in 0..MR {
+                    let got = p[pi * MR * k + d * MR + r];
+                    let row = pi * MR + r;
+                    let want = if row < m {
+                        arith.condition(x[row * k + d])
+                    } else {
+                        arith.zero_elem()
+                    };
+                    if got != want {
+                        return Err(format!(
+                            "A MR={MR} m={m} k={k}: (p={pi}, d={d}, \
+                             r={r}) = {got}, want {want}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Element-wise oracle for [`pack_b_block`]: panel `q`, depth `d`,
+    /// lane `c` holds `condition(w[d * n + q*NR + c])`, zero-padded
+    /// past `n`.
+    fn check_b_layout<const NR: usize>(arith: &FixedMicro, w: &[f32],
+                                       k: usize, n: usize)
+                                       -> Result<(), String> {
+        let p = pack_b_block::<FixedMicro, NR>(arith, w, k, n);
+        let panels = n.div_ceil(NR);
+        if p.len() != panels * NR * k {
+            return Err(format!(
+                "B len {} != {panels}*{NR}*{k}", p.len()));
+        }
+        for q in 0..panels {
+            for d in 0..k {
+                for c in 0..NR {
+                    let got = p[q * NR * k + d * NR + c];
+                    let col = q * NR + c;
+                    let want = if col < n {
+                        arith.condition(w[d * n + col])
+                    } else {
+                        arith.zero_elem()
+                    };
+                    if got != want {
+                        return Err(format!(
+                            "B NR={NR} k={k} n={n}: (q={q}, d={d}, \
+                             c={c}) = {got}, want {want}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bit-wise oracle for the binary word panels: bit `d % 64` of the
+    /// word at `(lane_block, d / 64, lane)` is the sign bit of the
+    /// corresponding element; lanes past the matrix edge and bits past
+    /// `k` stay zero.
+    fn check_bit_layouts<const T: usize>(v: &[f32], rows: usize,
+                                         k: usize) -> Result<(), String> {
+        let words = k.div_ceil(64);
+        // A side: rows x k, T-row panels
+        let a = pack_a_bits::<T>(v, rows, k);
+        let panels = rows.div_ceil(T);
+        if a.len() != panels * T * words {
+            return Err(format!(
+                "A bits len {} != {panels}*{T}*{words}", a.len()));
+        }
+        for pi in 0..panels {
+            for wd in 0..words {
+                for r in 0..T {
+                    let got = a[pi * T * words + wd * T + r];
+                    let row = pi * T + r;
+                    let mut want = 0u64;
+                    if row < rows {
+                        for bit in 0..64 {
+                            let d = wd * 64 + bit;
+                            if d < k {
+                                want |= BinXnor::binarize(v[row * k + d])
+                                    << bit;
+                            }
+                        }
+                    }
+                    if got != want {
+                        return Err(format!(
+                            "A bits T={T} rows={rows} k={k}: (p={pi}, \
+                             wd={wd}, r={r}) = {got:#x}, want \
+                             {want:#x}"));
+                    }
+                }
+            }
+        }
+        // B side: k x rows (reuse `v` transposed shape: k rows of
+        // `rows` columns requires v.len() == k * rows, same buffer)
+        let b = pack_b_bits::<T>(v, k, rows);
+        if b.len() != panels * T * words {
+            return Err(format!(
+                "B bits len {} != {panels}*{T}*{words}", b.len()));
+        }
+        for q in 0..panels {
+            for wd in 0..words {
+                for c in 0..T {
+                    let got = b[q * T * words + wd * T + c];
+                    let col = q * T + c;
+                    let mut want = 0u64;
+                    if col < rows {
+                        for bit in 0..64 {
+                            let d = wd * 64 + bit;
+                            if d < k {
+                                want |= BinXnor::binarize(
+                                    v[d * rows + col]) << bit;
+                            }
+                        }
+                    }
+                    if got != want {
+                        return Err(format!(
+                            "B bits T={T} k={k} n={rows}: (q={q}, \
+                             wd={wd}, c={c}) = {got:#x}, want \
+                             {want:#x}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Runtime-to-const dispatch so one property sweeps every tile
+    /// width in play (1..=8 plus the 16-wide AVX2 f32 tile).
+    fn check_all_for_tile(tile: usize, arith: &FixedMicro, x: &[f32],
+                          m: usize, k: usize) -> Result<(), String> {
+        macro_rules! per_tile {
+            ($($t:literal),*) => {
+                match tile {
+                    $($t => {
+                        check_a_layout::<$t>(arith, x, m, k)?;
+                        check_b_layout::<$t>(arith, x, m, k)?;
+                        check_bit_layouts::<$t>(x, m, k)
+                    })*
+                    _ => panic!("no instantiation for tile {tile}"),
+                }
+            };
+        }
+        per_tile!(1, 2, 3, 4, 5, 6, 7, 8, 16)
+    }
+
+    #[test]
+    fn prop_panel_layouts_for_every_tile_width() {
+        // B-side reuses the same buffer as a k x m matrix, so x must
+        // cover max(m*k, k*m) = m*k elements either way.
+        prop::check_msg(
+            "pack layout == element oracle (all tiles)",
+            0x9A22,
+            64,
+            |rng| {
+                let edges = [0, 1, 2, 5, 63, 64, 65];
+                let m = if rng.below(3) == 0 {
+                    edges[rng.below(5) as usize] // 0, 1, 2, 5, 63
+                } else {
+                    rng.below(18) as usize
+                };
+                let k = if rng.below(3) == 0 {
+                    edges[rng.below(edges.len() as u64) as usize]
+                } else {
+                    rng.below(70) as usize
+                };
+                let tiles = [1usize, 2, 3, 4, 5, 6, 7, 8, 16];
+                let tile = tiles[rng.below(tiles.len() as u64) as usize];
+                (m, k, tile, rng.next_u64())
+            },
+            |&(m, k, tile, seed)| {
+                let mut rng = crate::util::prng::Rng::new(seed);
+                let x: Vec<f32> = (0..m * k)
+                    .map(|_| (rng.normal() * 4.0) as f32)
+                    .collect();
+                let arith = FixedMicro::new(FixedPoint::new(6, 8));
+                check_all_for_tile(tile, &arith, &x, m, k)
+            },
+        );
+    }
+
+    #[test]
+    fn explicit_tile_edges() {
+        // n = 1 against every tile width, plus the empty shapes, which
+        // the randomized sweep only samples
+        let arith = FixedMicro::new(FixedPoint::new(6, 8));
+        for tile in [1usize, 2, 3, 4, 5, 6, 7, 8, 16] {
+            check_all_for_tile(tile, &arith, &[0.5], 1, 1).unwrap();
+            check_all_for_tile(tile, &arith, &[], 0, 3).unwrap();
+            check_all_for_tile(tile, &arith, &[], 3, 0).unwrap();
+            check_all_for_tile(tile, &arith, &[], 0, 0).unwrap();
+        }
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! x86_64 SIMD microkernels behind the [`super::isa`] dispatch layer.
+//!
+//! Three kernels live here, mirroring the rten exemplar's per-arch
+//! backend split (SNIPPETS.md): a 6x16 AVX2+FMA register tile for the
+//! f32 path, a 4x8 AVX2 tile with exact i64 accumulation for the
+//! fixed-point code paths (FI and DRUM share it — both condition to
+//! i32 codes), and a POPCNT-enabled instantiation of the binary
+//! word-panel drive.  Each is a plain `fn` matching the driver's
+//! [`super::kernel::MicroFn`] / [`super::kernel::BinaryDriveFn`]
+//! signature, so `BlockedKernel`/`BinaryKernel` hold them as function
+//! pointers — dispatch happens once at plan-build time, never inside
+//! MAC loops.
+//!
+//! # Safety discipline
+//!
+//! Every `#[target_feature]` function here is reachable only through
+//! a safe wrapper whose contract is enforced upstream:
+//! `select_kernel_isa` refuses to construct an [`Isa::Avx2`] kernel
+//! unless `isa::supported(Isa::Avx2)` confirmed `avx2`, `fma` *and*
+//! `popcnt` at plan-build time (the rten "construct only if
+//! supported" discipline).  The wrappers therefore never execute on a
+//! machine missing the features they enable.
+//!
+//! # Exactness
+//!
+//! * `micro_i32_avx2` is **bit-exact** vs the scalar microkernel:
+//!   `VPMULDQ` sign-extends the low 32 bits of each 64-bit lane, so
+//!   every i32 x i32 -> i64 product is exact, and i64 addition is
+//!   associative — lane order cannot change the sum.
+//! * `binary_drive_popcnt` is **bit-exact**: it is the *same* generic
+//!   drive as the scalar kernel (`binary_drive_impl`, `inline(always)`
+//!   so the `popcnt` feature propagates into `count_ones`), just
+//!   instantiated at a wider 8x8 word tile.
+//! * `micro_f32_avx2` is **not** bitwise: FMA fuses each multiply-add
+//!   into one rounding, and the 16-wide tile changes nothing else —
+//!   per output element the k order is preserved, so the deviation is
+//!   bounded by [`super::fma_f32_bound`] (the documented tolerance
+//!   table in DESIGN.md §gemm).
+//!
+//! [`Isa::Avx2`]: super::isa::Isa::Avx2
+
+use super::kernel::binary_drive_impl;
+use super::micro::{F32Micro, MicroArith};
+use std::arch::x86_64::*;
+
+// ---------------------------------------------------------------------------
+// f32: 6x16 AVX2+FMA register tile
+// ---------------------------------------------------------------------------
+
+/// AVX2+FMA f32 microkernel: 6 rows x 16 columns (two `__m256` per
+/// row — 12 accumulator registers + a/b operands fit the 16 ymm
+/// registers).  Matches `MicroFn<F32Micro>`.
+///
+/// Not bitwise vs scalar (FMA, by design); bounded by
+/// [`super::fma_f32_bound`].
+pub(crate) fn micro_f32_avx2(_arith: &F32Micro, apan: &[f32],
+                             bpan: &[f32], kc: usize, acc: &mut [f32],
+                             stride: usize) {
+    debug_assert!(apan.len() >= kc * 6 && bpan.len() >= kc * 16);
+    debug_assert!(acc.len() >= 5 * stride + 16);
+    // SAFETY: kernels holding this fn pointer are only constructed by
+    // `select_kernel_isa` after `isa::supported(Isa::Avx2)` confirmed
+    // avx2 + fma on this machine (see module docs).
+    unsafe { micro_f32_6x16(apan, bpan, kc, acc, stride) }
+}
+
+/// # Safety
+/// Requires AVX2 + FMA; `apan`/`bpan` hold `kc` packed depth steps of
+/// 6 / 16 lanes; `acc` spans the 6x16 tile at `stride`.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn micro_f32_6x16(apan: &[f32], bpan: &[f32], kc: usize,
+                         acc: &mut [f32], stride: usize) {
+    let mut t = [[_mm256_setzero_ps(); 2]; 6];
+    for (i, trow) in t.iter_mut().enumerate() {
+        let base = acc.as_ptr().add(i * stride);
+        trow[0] = _mm256_loadu_ps(base);
+        trow[1] = _mm256_loadu_ps(base.add(8));
+    }
+    for p in 0..kc {
+        let bptr = bpan.as_ptr().add(p * 16);
+        let b0 = _mm256_loadu_ps(bptr);
+        let b1 = _mm256_loadu_ps(bptr.add(8));
+        let aptr = apan.as_ptr().add(p * 6);
+        for (i, trow) in t.iter_mut().enumerate() {
+            let a = _mm256_set1_ps(*aptr.add(i));
+            trow[0] = _mm256_fmadd_ps(a, b0, trow[0]);
+            trow[1] = _mm256_fmadd_ps(a, b1, trow[1]);
+        }
+    }
+    for (i, trow) in t.iter().enumerate() {
+        let base = acc.as_mut_ptr().add(i * stride);
+        _mm256_storeu_ps(base, trow[0]);
+        _mm256_storeu_ps(base.add(8), trow[1]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fixed-point codes: 4x8 AVX2 tile, exact i64 accumulation
+// ---------------------------------------------------------------------------
+
+/// AVX2 integer microkernel for the i32-code providers (FI and DRUM):
+/// 4 rows x 8 columns, i64 lanes (two `__m256i` of four i64 per row).
+/// Matches `MicroFn<A>` for any `A` packing to i32 / accumulating in
+/// i64.
+///
+/// Bit-exact vs the scalar microkernel: `VPMULDQ` multiplies the
+/// sign-extended low 32 bits of each 64-bit lane — an exact
+/// i32 x i32 -> i64 product — and integer addition is associative.
+pub(crate) fn micro_i32_avx2<A: MicroArith<Elem = i32, Acc = i64>>(
+    _arith: &A, apan: &[i32], bpan: &[i32], kc: usize, acc: &mut [i64],
+    stride: usize,
+) {
+    debug_assert!(apan.len() >= kc * 4 && bpan.len() >= kc * 8);
+    debug_assert!(acc.len() >= 3 * stride + 8);
+    // SAFETY: see module docs — only constructed when Avx2 is
+    // supported.
+    unsafe { micro_i32_4x8(apan, bpan, kc, acc, stride) }
+}
+
+/// # Safety
+/// Requires AVX2; `apan`/`bpan` hold `kc` packed depth steps of 4 / 8
+/// lanes; `acc` spans the 4x8 tile at `stride`.
+#[target_feature(enable = "avx2")]
+unsafe fn micro_i32_4x8(apan: &[i32], bpan: &[i32], kc: usize,
+                        acc: &mut [i64], stride: usize) {
+    let mut t = [[_mm256_setzero_si256(); 2]; 4];
+    for (i, trow) in t.iter_mut().enumerate() {
+        let base = acc.as_ptr().add(i * stride) as *const __m256i;
+        trow[0] = _mm256_loadu_si256(base);
+        trow[1] = _mm256_loadu_si256(base.add(1));
+    }
+    for p in 0..kc {
+        let bptr = bpan.as_ptr().add(p * 8);
+        // widen 4+4 i32 codes to i64 lanes; VPMULDQ below reads (and
+        // sign-extends) only the low 32 bits of each lane, so the
+        // product is the exact i32 x i32 -> i64 the scalar path does
+        let b0 = _mm256_cvtepi32_epi64(
+            _mm_loadu_si128(bptr as *const __m128i));
+        let b1 = _mm256_cvtepi32_epi64(
+            _mm_loadu_si128(bptr.add(4) as *const __m128i));
+        let aptr = apan.as_ptr().add(p * 4);
+        for (i, trow) in t.iter_mut().enumerate() {
+            let a = _mm256_set1_epi64x(*aptr.add(i) as i64);
+            trow[0] = _mm256_add_epi64(trow[0], _mm256_mul_epi32(a, b0));
+            trow[1] = _mm256_add_epi64(trow[1], _mm256_mul_epi32(a, b1));
+        }
+    }
+    for (i, trow) in t.iter().enumerate() {
+        let base = acc.as_mut_ptr().add(i * stride) as *mut __m256i;
+        _mm256_storeu_si256(base, trow[0]);
+        _mm256_storeu_si256(base.add(1), trow[1]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// binary: POPCNT instantiation of the shared word-panel drive
+// ---------------------------------------------------------------------------
+
+/// Binary word-panel drive with hardware POPCNT.  Matches
+/// `BinaryDriveFn`; the body is the *same* `binary_drive_impl` the
+/// scalar kernel runs (`inline(always)` lets the `popcnt` target
+/// feature reach its `count_ones` calls), so results are bit-exact by
+/// construction — the ISA variant only changes the emitted popcount
+/// instruction and the BMR/BNR word-tile shape it is instantiated at.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn binary_drive_popcnt<const BMR: usize, const BNR: usize>(
+    ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
+    words: usize, tail_mask: u64, k: usize, n: usize,
+) {
+    // SAFETY: see module docs — only constructed when Avx2 (which
+    // requires popcnt) is supported.
+    unsafe {
+        binary_drive_popcnt_inner::<BMR, BNR>(ap, bp, row0, chunk,
+                                              words, tail_mask, k, n)
+    }
+}
+
+/// # Safety
+/// Requires POPCNT (x86_64's baseline `count_ones` lowering is a bit
+/// ladder without it).
+#[target_feature(enable = "popcnt")]
+unsafe fn binary_drive_popcnt_inner<const BMR: usize, const BNR: usize>(
+    ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
+    words: usize, tail_mask: u64, k: usize, n: usize,
+) {
+    binary_drive_impl::<BMR, BNR>(ap, bp, row0, chunk, words, tail_mask,
+                                  k, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::approx::arith::ArithKind;
+    use crate::nn::gemm::isa::{supported, Isa};
+    use crate::nn::gemm::reference::gemm_reference;
+    use crate::nn::gemm::{fma_f32_bound, select_kernel_isa, Kernel};
+    use crate::util::prng::Rng;
+
+    /// Tail-heavy shape: m, n not divisible by any tile in play (6,
+    /// 16, 4, 8), k crosses the KC = 256 depth blocking and ends
+    /// mid-word for the binary path.
+    const SHAPES: [(usize, usize, usize); 3] =
+        [(13, 300, 11), (7, 65, 17), (64, 129, 96)];
+
+    fn rand_operands(seed: u64, kind: &ArithKind, m: usize, k: usize,
+                     n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> =
+            (0..m * k).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let w: Vec<f32> = (0..k * n)
+            .map(|_| kind.quantize(rng.normal() as f32))
+            .collect();
+        (x, w)
+    }
+
+    #[test]
+    fn avx2_int_and_binary_bit_exact_vs_reference() {
+        if !supported(Isa::Avx2) {
+            return; // kernels not constructible here; covered in CI
+        }
+        for ks in ["FI(6,8)", "FI(3,4)", "H(6,8,6)", "H(8,8,14)",
+                   "binxnor"] {
+            let kind = ArithKind::parse(ks).unwrap();
+            let kern = select_kernel_isa(&kind, Isa::Avx2);
+            for (si, &(m, k, n)) in SHAPES.iter().enumerate() {
+                let (x, w) =
+                    rand_operands(41 + si as u64, &kind, m, k, n);
+                let mut got = vec![f32::NAN; m * n];
+                kern.run(&x, &w, m, k, n, &mut got, 1);
+                let mut want = vec![f32::NAN; m * n];
+                gemm_reference(&kind, &x, &w, m, k, n, &mut want, 1);
+                for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), ww.to_bits(),
+                               "{ks} ({m}x{k}x{n}): out[{i}] = {g} vs \
+                                reference {ww}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_f32_within_fma_bound_of_reference() {
+        if !supported(Isa::Avx2) {
+            return;
+        }
+        let kind = ArithKind::Float32;
+        let kern = select_kernel_isa(&kind, Isa::Avx2);
+        for (si, &(m, k, n)) in SHAPES.iter().enumerate() {
+            let (x, w) = rand_operands(51 + si as u64, &kind, m, k, n);
+            let mut got = vec![f32::NAN; m * n];
+            kern.run(&x, &w, m, k, n, &mut got, 1);
+            let mut want = vec![f32::NAN; m * n];
+            gemm_reference(&kind, &x, &w, m, k, n, &mut want, 1);
+            let bound = fma_f32_bound(&x, &w, m, k, n);
+            for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+                let err = (*g as f64 - *ww as f64).abs();
+                assert!(err <= bound[i],
+                        "f32+avx2 ({m}x{k}x{n}): out[{i}] = {g} vs \
+                         reference {ww}, |err| = {err:e} > bound \
+                         {:e}",
+                        bound[i]);
+            }
+        }
+    }
+}

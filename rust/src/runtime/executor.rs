@@ -436,16 +436,22 @@ mod tests {
         assert_eq!(execution_plan(&fi).engine_kernels(), None);
         assert!(execution_plan(&fi).is_pjrt());
         let mixed = cfg4("FI(6,8)|FI(6,8)|H(8,8,14)|I(5,10)");
-        assert_eq!(
-            execution_plan(&mixed),
-            ExecutionPlan::Engine(vec!["packed-fi", "packed-fi",
-                                       "packed-drum", "packed-cfpu"])
-        );
-        assert_eq!(
-            execution_plan(&mixed).engine_kernels(),
-            Some(&["packed-fi", "packed-fi", "packed-drum",
-                   "packed-cfpu"][..])
-        );
+        // kernel names are ISA-suffixed under native dispatch; derive
+        // the expectation from the dispatcher (cfpu never suffixes —
+        // it has no SIMD variant)
+        let want: Vec<&'static str> = ["FI(6,8)", "FI(6,8)",
+                                       "H(8,8,14)", "I(5,10)"]
+            .iter()
+            .map(|s| {
+                crate::nn::gemm::kernel_name(
+                    &ArithKind::parse(s).unwrap())
+            })
+            .collect();
+        assert_eq!(execution_plan(&mixed),
+                   ExecutionPlan::Engine(want.clone()));
+        assert_eq!(execution_plan(&mixed).engine_kernels(),
+                   Some(&want[..]));
+        assert_eq!(want[3], "packed-cfpu");
         assert!(!execution_plan(&mixed).is_pjrt());
         // engine plans follow the config's arity, not a fixed 4
         let five = ReprMap::parse_n("H(6,8,12)", 5).unwrap();

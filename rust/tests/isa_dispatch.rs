@@ -1,0 +1,276 @@
+//! The forced-dispatch test layer (§Perf iteration 9): pins the ISA
+//! dispatch *policy* — which kernel a `GemmPlan` gets, how
+//! `LOP_FORCE_ISA` overrides it, how unknown/unsupported tokens fail,
+//! and that prepacked panels can never cross a forced-ISA boundary
+//! silently.  Value-level per-ISA correctness lives in
+//! tests/gemm_differential.rs and tests/prepack_differential.rs; this
+//! suite is about *selection*.
+//!
+//! CI runs this binary twice: once with no override (native dispatch)
+//! and once under `LOP_FORCE_ISA=scalar`.  Every test here must pass
+//! under both; the env-sensitive assertions read the variable and
+//! assert consistency rather than assuming one leg.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use lop::approx::arith::ArithKind;
+use lop::nn::gemm::isa::{self, Isa, FORCE_ENV};
+use lop::nn::gemm::reference::gemm_reference;
+use lop::nn::gemm::{kernel_name, kernel_name_isa, select_kernel,
+                    select_kernel_isa, GemmPlan, Kernel};
+use lop::util::prng::Rng;
+
+/// Every ArithKind family, one representative each.
+const KINDS: [&str; 6] =
+    ["float32", "FI(6,8)", "H(6,8,6)", "FL(4,9)", "I(5,10)", "binxnor"];
+
+/// The kinds that actually have a SIMD kernel at the Avx2 tier (FL and
+/// CFPU keep their scalar kernel at every tier).
+fn has_simd_variant(kind: &ArithKind) -> bool {
+    !matches!(kind,
+              ArithKind::FloatExact(_) | ArithKind::FloatCfpu(_))
+}
+
+// ---------------------------------------------------------------------------
+// token parsing and resolution
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_isa_tokens_error_with_the_offending_token() {
+    for bogus in ["neon", "avx512", "sse9", "fastest", "scalar2"] {
+        let e = Isa::parse(bogus).unwrap_err();
+        assert!(e.contains(bogus),
+                "parse error must carry the offending token `{bogus}`: \
+                 {e}");
+        assert!(e.contains("scalar") && e.contains("avx2"),
+                "parse error must list valid tokens: {e}");
+        // resolve() (what active() runs over LOP_FORCE_ISA) surfaces
+        // the same token — a forced run never silently falls back
+        let e = isa::resolve(Some(bogus)).unwrap_err();
+        assert!(e.contains(bogus), "{e}");
+    }
+}
+
+#[test]
+fn empty_force_token_means_auto_detect() {
+    assert_eq!(isa::resolve(None), Ok(isa::detect()));
+    assert_eq!(isa::resolve(Some("")), Ok(isa::detect()));
+    assert_eq!(isa::resolve(Some("   \t ")), Ok(isa::detect()));
+}
+
+#[test]
+fn forcing_scalar_always_resolves() {
+    // the scalar round-trip works on every machine, which is what lets
+    // CI pin the portable kernels on any runner
+    assert_eq!(isa::resolve(Some("scalar")), Ok(Isa::Scalar));
+    assert_eq!(isa::resolve(Some(" SCALAR ")), Ok(Isa::Scalar));
+    assert!(isa::supported(Isa::Scalar));
+}
+
+#[test]
+fn forcing_an_unsupported_isa_is_an_error_not_a_fallback() {
+    if isa::supported(Isa::Avx2) {
+        assert_eq!(isa::resolve(Some("avx2")), Ok(Isa::Avx2));
+    } else {
+        let e = isa::resolve(Some("avx2")).unwrap_err();
+        assert!(e.contains("avx2") && e.contains("not supported"),
+                "{e}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatch policy: widest wins, force wins over widest
+// ---------------------------------------------------------------------------
+
+#[test]
+fn active_isa_honors_the_environment() {
+    // CI runs this test once per LOP_FORCE_ISA leg; in-process we
+    // assert active() is consistent with however this process was
+    // launched (active() memoizes the env read, so setting the var
+    // here would be a lie — the launcher decides).
+    let active = isa::active();
+    match std::env::var(FORCE_ENV) {
+        Ok(s) if !s.trim().is_empty() => {
+            assert_eq!(active, Isa::parse(&s).unwrap(),
+                       "{FORCE_ENV}={s} must pin dispatch");
+        }
+        _ => {
+            assert_eq!(active, isa::detect(),
+                       "unforced dispatch must pick the widest \
+                        detected ISA");
+            assert_eq!(active, *isa::detected().last().unwrap());
+        }
+    }
+}
+
+#[test]
+fn default_plans_dispatch_at_the_active_isa() {
+    let active = isa::active();
+    for ks in KINDS {
+        let kind = ArithKind::parse(ks).unwrap();
+        let plan = GemmPlan::new(&kind);
+        // the kernel's own tier: the active ISA for kinds with a SIMD
+        // variant, Scalar for FL/CFPU whose scalar kernel is their
+        // widest at every tier
+        let want_isa = if has_simd_variant(&kind) {
+            active
+        } else {
+            Isa::Scalar
+        };
+        assert_eq!(plan.isa(), want_isa, "{ks}");
+        assert_eq!(plan.kernel_name(), kernel_name_isa(&kind, active),
+                   "{ks}");
+        assert_eq!(plan.kernel_name(), kernel_name(&kind), "{ks}");
+        // select_kernel (the layer/bench entry point) agrees
+        assert_eq!(select_kernel(&kind).name(), plan.kernel_name(),
+                   "{ks}");
+    }
+}
+
+#[test]
+fn every_detected_isa_is_constructible_and_correct() {
+    // reachability smoke: each tier the dispatcher could pick on this
+    // machine builds real kernels whose output matches the reference
+    // oracle (bitwise for all these kinds except FMA f32, which the
+    // differential suites bound — here we use int/bit kinds only)
+    let (m, k, n) = (9, 70, 7);
+    let mut rng = Rng::new(41);
+    for tier in isa::detected() {
+        for ks in ["FI(6,8)", "H(6,8,6)", "binxnor"] {
+            let kind = ArithKind::parse(ks).unwrap();
+            let x: Vec<f32> =
+                (0..m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n)
+                .map(|_| kind.quantize(rng.normal() as f32))
+                .collect();
+            let plan = GemmPlan::with_isa(&kind, tier);
+            let mut got = vec![f32::NAN; m * n];
+            plan.run(&x, &w, m, k, n, &mut got, 1);
+            let mut want = vec![f32::NAN; m * n];
+            gemm_reference(&kind, &x, &w, m, k, n, &mut want, 1);
+            for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), ww.to_bits(),
+                           "{ks}@{tier}: out[{i}] = {g} vs {ww}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scalar_tier_reports_scalar_names_everywhere() {
+    // the LOP_FORCE_ISA=scalar round-trip at the plan layer: a plan
+    // pinned to Scalar must report unsuffixed names and Scalar tier
+    // for every kind, on every machine
+    for ks in KINDS {
+        let kind = ArithKind::parse(ks).unwrap();
+        let plan = GemmPlan::with_isa(&kind, Isa::Scalar);
+        assert_eq!(plan.isa(), Isa::Scalar, "{ks}");
+        assert!(!plan.kernel_name().contains('+'),
+                "{ks}: scalar kernel name `{}` must carry no ISA \
+                 suffix",
+                plan.kernel_name());
+    }
+}
+
+#[test]
+fn unsupported_tier_construction_panics() {
+    if isa::supported(Isa::Avx2) {
+        return; // nothing unsupported to test on this machine
+    }
+    let kind = ArithKind::parse("FI(6,8)").unwrap();
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        select_kernel_isa(&kind, Isa::Avx2)
+    }))
+    .expect_err("building kernels for an unsupported ISA must panic");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("not supported"), "{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// panel identity across forced ISAs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panels_never_cross_a_forced_isa_boundary() {
+    // A process forced to one ISA writes panels (e.g. the plan cache);
+    // consuming them under a different forced ISA must panic — the
+    // panel layout (MR/NR geometry, word tiles) differs per kernel, so
+    // a silent mis-multiply would be the failure mode without the
+    // identity check.  Names are ISA-suffixed, so the kernel-name
+    // check is what fires.
+    if !isa::supported(Isa::Avx2) {
+        return; // only one tier exists here; cross-ISA is untestable
+    }
+    let (k, n) = (37, 11);
+    let mut rng = Rng::new(42);
+    for ks in ["float32", "FI(6,8)", "H(6,8,6)", "binxnor"] {
+        let kind = ArithKind::parse(ks).unwrap();
+        let w: Vec<f32> = (0..k * n)
+            .map(|_| kind.quantize(rng.normal() as f32))
+            .collect();
+        for (packer, consumer) in
+            [(Isa::Scalar, Isa::Avx2), (Isa::Avx2, Isa::Scalar)]
+        {
+            let pack_kern = select_kernel_isa(&kind, packer);
+            let run_kern = select_kernel_isa(&kind, consumer);
+            let pw = pack_kern.prepack_weights(&w, k, n);
+            let mut out = vec![f32::NAN; n];
+            let err = catch_unwind(AssertUnwindSafe(|| {
+                run_kern.run_prepacked(&[1.0; 37], &pw, 1, &mut out, 1);
+            }))
+            .unwrap_err();
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    err.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_default();
+            assert!(
+                msg.contains("packed by kernel"),
+                "{ks}: {packer}->{consumer} panel crossing must \
+                 panic with the kernel identity, got: {msg}"
+            );
+            assert!(
+                msg.contains(pack_kern.name())
+                    && msg.contains(run_kern.name()),
+                "{ks}: panic must name both kernels, got: {msg}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prepacked_plans_are_isa_consistent() {
+    // a plan prepacks with the same kernel it runs — so prepack +
+    // run_prepacked at an explicitly pinned tier never trips the
+    // identity check, whatever the process's active ISA is
+    let (m, k, n) = (3, 20, 5);
+    let mut rng = Rng::new(43);
+    for tier in isa::detected() {
+        for ks in KINDS {
+            let kind = ArithKind::parse(ks).unwrap();
+            let x: Vec<f32> =
+                (0..m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n)
+                .map(|_| kind.quantize(rng.normal() as f32))
+                .collect();
+            let mut plan = GemmPlan::with_isa(&kind, tier);
+            plan.prepack(&w, k, n);
+            let mut a = vec![f32::NAN; m * n];
+            plan.run_prepacked(&x, m, &mut a, 1);
+            let mut b = vec![f32::NAN; m * n];
+            plan.run(&x, &w, m, k, n, &mut b, 1);
+            // same kernel both sides: bitwise, FMA or not
+            for (i, (g, ww)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(g.to_bits(), ww.to_bits(),
+                           "{ks}@{tier}: prepacked[{i}] = {g} vs \
+                            per-call {ww}");
+            }
+        }
+    }
+}

@@ -1,25 +1,32 @@
 //! Differential suite for the prepacked-weight path (§Perf iteration
-//! 7): for every `ArithKind` variant, `GemmPlan::run_prepacked` over
-//! cached panels must be *bit-identical* both to the per-call-packing
-//! `GemmPlan::run` and to the pre-tiling `reference` oracle, across
-//! randomized shapes (including m = 0, k = 0, n = 1 and
-//! non-tile-divisible sizes) and thread counts.  On top of the value
-//! contract it pins the two structural contracts of the refactor:
+//! 7): for every `ArithKind` variant, at every ISA this machine can
+//! dispatch to (`isa::detected`), `GemmPlan::run_prepacked` over
+//! cached panels must be *bit-identical* to the per-call-packing
+//! `GemmPlan::run` (they share one kernel and one packing, FMA or
+//! not), and must match the pre-tiling `reference` oracle — bitwise
+//! for every kernel except the AVX2+FMA f32 tier, which is held to
+//! the documented `fma_f32_bound` — across randomized shapes
+//! (including m = 0, k = 0, n = 1 and non-tile-divisible sizes) and
+//! thread counts.  On top of the value contract it pins the two
+//! structural contracts of the refactor:
 //!
 //! * **prepack-once**: after `Model::prepare`, `PreparedNet::forward`
 //!   performs zero weight-side packing work (observed through
 //!   `gemm::pack::weight_pack_count`, a thread-local counter);
 //! * **no panel sharing**: panels conditioned under one `ArithKind`
-//!   are refused — not silently consumed — by every other kernel or
-//!   parameterization.
+//!   are refused — not silently consumed — by every other kernel,
+//!   parameterization, or panel geometry (`tests/isa_dispatch.rs`
+//!   additionally pins the cross-forced-ISA refusal).
 //!
-//! Scale the randomized sweeps with `LOP_PROP_CASES=N`; failures print
-//! a replay snippet (seed + case) via `util::prop`.
+//! Run under `LOP_FORCE_ISA=scalar` to pin the portable kernels on any
+//! machine.  Scale the randomized sweeps with `LOP_PROP_CASES=N`;
+//! failures print a replay snippet (seed + case) via `util::prop`.
 
 use lop::approx::arith::ArithKind;
 use lop::nn::gemm::pack::weight_pack_count;
 use lop::nn::gemm::reference::gemm_reference;
-use lop::nn::gemm::{default_threads, select_kernel, GemmPlan};
+use lop::nn::gemm::{default_threads, fma_f32_bound, isa, select_kernel,
+                    GemmPlan, Isa, Kernel};
 use lop::nn::network::Model;
 use lop::nn::spec::{NetSpec, ReprMap};
 use lop::util::prng::Rng;
@@ -59,48 +66,62 @@ fn rand_operands(rng: &mut Rng, kind: &ArithKind, m: usize, k: usize,
     (x, w)
 }
 
-/// Prepack `w` into a fresh plan and compare `run_prepacked` at each
-/// thread count against both `run` and the reference oracle, bitwise.
+/// Prepack `w` into a fresh plan at `tier` and compare `run_prepacked`
+/// at each thread count against both `run` and the reference oracle.
 /// The prepacked output of a *second* call over the same panels must
 /// also match the first (cached panels are not consumed or mutated).
-fn diff(kind: &ArithKind, x: &[f32], w: &[f32], m: usize, k: usize,
-        n: usize, thread_counts: &[usize]) -> Result<(), String> {
+fn diff(kind: &ArithKind, tier: Isa, x: &[f32], w: &[f32], m: usize,
+        k: usize, n: usize, thread_counts: &[usize])
+        -> Result<(), String> {
     let mut oracle = vec![f32::NAN; m * n];
     gemm_reference(kind, x, w, m, k, n, &mut oracle, 1);
-    let mut plan = GemmPlan::new(kind);
+    let mut plan = GemmPlan::with_isa(kind, tier);
     plan.prepack(w, k, n);
     let mut percall = vec![f32::NAN; m * n];
     plan.run(x, w, m, k, n, &mut percall, 1);
+    let fma = *kind == ArithKind::Float32 && plan.isa() != Isa::Scalar;
+    let bound =
+        if fma { fma_f32_bound(x, w, m, k, n) } else { Vec::new() };
     for &threads in thread_counts {
         let mut got = vec![f32::NAN; m * n];
         plan.run_prepacked(x, m, &mut got, threads);
         let mut again = vec![f32::NAN; m * n];
         plan.run_prepacked(x, m, &mut again, threads);
         for (i, &g) in got.iter().enumerate() {
-            if g.to_bits() != oracle[i].to_bits() {
+            let vs_oracle = if fma {
+                (g as f64 - oracle[i] as f64).abs() <= bound[i]
+            } else {
+                g.to_bits() == oracle[i].to_bits()
+            };
+            if !vs_oracle {
                 return Err(format!(
-                    "{} ({m}x{k}x{n}, threads={threads}): \
+                    "{} [{}] ({m}x{k}x{n}, threads={threads}): \
                      prepacked[{i}] = {g} ({:#010x}), reference {} \
                      ({:#010x})",
                     kind.name(),
+                    plan.kernel_name(),
                     g.to_bits(),
                     oracle[i],
                     oracle[i].to_bits()
                 ));
             }
+            // prepacked vs per-call (and vs a second prepacked run) is
+            // bitwise at every tier: same kernel, same packing
             if g.to_bits() != percall[i].to_bits() {
                 return Err(format!(
-                    "{} ({m}x{k}x{n}, threads={threads}): \
+                    "{} [{}] ({m}x{k}x{n}, threads={threads}): \
                      prepacked[{i}] = {g}, per-call run gave {}",
                     kind.name(),
+                    plan.kernel_name(),
                     percall[i]
                 ));
             }
             if g.to_bits() != again[i].to_bits() {
                 return Err(format!(
-                    "{} ({m}x{k}x{n}, threads={threads}): second \
+                    "{} [{}] ({m}x{k}x{n}, threads={threads}): second \
                      prepacked call diverged at [{i}]",
-                    kind.name()
+                    kind.name(),
+                    plan.kernel_name()
                 ));
             }
         }
@@ -118,39 +139,44 @@ fn dim(rng: &mut Rng, max: u64, edges: &[usize]) -> usize {
 }
 
 #[test]
-fn randomized_shapes_bit_identical() {
-    for (ki, ks) in KINDS.iter().enumerate() {
-        let kind = ArithKind::parse(ks).unwrap();
-        prop::check_msg(
-            &format!("prepacked == run == reference ({ks})"),
-            0xBEEF + ki as u64,
-            24,
-            |rng| {
-                // m/n edges straddle the MR/NR tiles (4, 8), k edges
-                // straddle the 64-bit binary words; ~1 case in 5 is
-                // big enough (m*n >= 16384) that the default-threads
-                // leg genuinely spawns threads
-                let (m, n) = if rng.below(5) == 0 {
-                    (64 + rng.below(17) as usize,
-                     256 + rng.below(9) as usize)
-                } else {
-                    (dim(rng, 33, &[0, 1, 3, 4, 5, 8, 9, 16, 32]),
-                     dim(rng, 32, &[0, 1, 3, 4, 5, 8, 9, 31]))
-                };
-                let k = dim(rng, 96, &[0, 1, 2, 63, 64, 65]);
-                (m, k, n, rng.next_u64())
-            },
-            |&(m, k, n, seed)| {
-                let mut rng = Rng::new(seed);
-                let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
-                diff(&kind, &x, &w, m, k, n, &[1, default_threads()])
-            },
-        );
+fn randomized_shapes_match_per_isa() {
+    for tier in isa::detected() {
+        for (ki, ks) in KINDS.iter().enumerate() {
+            let kind = ArithKind::parse(ks).unwrap();
+            prop::check_msg(
+                &format!(
+                    "prepacked == run == reference ({ks} @ {tier})"),
+                0xBEEF + ki as u64,
+                24,
+                |rng| {
+                    // m/n edges straddle every MR/NR tile in play (4,
+                    // 6, 8, 16), k edges straddle the 64-bit binary
+                    // words; ~1 case in 5 is big enough (m*n >= 16384)
+                    // that the default-threads leg genuinely spawns
+                    // threads
+                    let (m, n) = if rng.below(5) == 0 {
+                        (64 + rng.below(17) as usize,
+                         256 + rng.below(9) as usize)
+                    } else {
+                        (dim(rng, 33, &[0, 1, 3, 4, 5, 6, 8, 9, 16, 32]),
+                         dim(rng, 32, &[0, 1, 3, 4, 5, 8, 9, 16, 17, 31]))
+                    };
+                    let k = dim(rng, 96, &[0, 1, 2, 63, 64, 65]);
+                    (m, k, n, rng.next_u64())
+                },
+                |&(m, k, n, seed)| {
+                    let mut rng = Rng::new(seed);
+                    let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
+                    diff(&kind, tier, &x, &w, m, k, n,
+                         &[1, default_threads()])
+                },
+            );
+        }
     }
 }
 
 #[test]
-fn explicit_edge_shapes_bit_identical() {
+fn explicit_edge_shapes_match_per_isa() {
     // (m, k, n): empty output, empty reduction, single column, single
     // cell, exact word boundary, word boundary + 1, and shapes that
     // cross the KC = 256 depth blocking — each at >= 2 thread counts
@@ -165,28 +191,35 @@ fn explicit_edge_shapes_bit_identical() {
         (33, 257, 18),
     ];
     let mut rng = Rng::new(17);
-    for ks in KINDS {
-        let kind = ArithKind::parse(ks).unwrap();
-        for &(m, k, n) in &shapes {
-            let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
-            diff(&kind, &x, &w, m, k, n, &[1, 2, default_threads()])
-                .unwrap();
+    for tier in isa::detected() {
+        for ks in KINDS {
+            let kind = ArithKind::parse(ks).unwrap();
+            for &(m, k, n) in &shapes {
+                let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
+                diff(&kind, tier, &x, &w, m, k, n,
+                     &[1, 2, default_threads()])
+                    .unwrap();
+            }
         }
     }
 }
 
 #[test]
-fn threaded_blocks_bit_identical() {
+fn threaded_blocks_match_per_isa() {
     // Large enough (m*n >= 16384) that the prepacked path really
-    // spawns threads and splits rows across MC blocks; m and n
-    // deliberately not divisible by MC/NC/MR/NR, k crosses KC.
+    // spawns threads and splits rows across blocks; m and n
+    // deliberately not divisible by any MC/NC/MR/NR in play, k
+    // crosses KC.
     let (m, k, n) = (65, 257, 258);
     let mut rng = Rng::new(18);
-    for ks in KINDS {
-        let kind = ArithKind::parse(ks).unwrap();
-        let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
-        diff(&kind, &x, &w, m, k, n, &[1, 2, 3, default_threads()])
-            .unwrap();
+    for tier in isa::detected() {
+        for ks in KINDS {
+            let kind = ArithKind::parse(ks).unwrap();
+            let (x, w) = rand_operands(&mut rng, &kind, m, k, n);
+            diff(&kind, tier, &x, &w, m, k, n,
+                 &[1, 2, 3, default_threads()])
+                .unwrap();
+        }
     }
 }
 
@@ -199,7 +232,8 @@ fn threaded_blocks_bit_identical() {
 fn panels_from_another_kind_are_refused() {
     // FI and H share the i32 panel element type — without the identity
     // check the FI kernel would happily (and wrongly) consume
-    // DRUM-conditioned panels.
+    // DRUM-conditioned panels.  (select_kernel resolves at the active
+    // ISA; the name check fires at every tier.)
     let fi = select_kernel(&ArithKind::parse("FI(6,8)").unwrap());
     let h = select_kernel(&ArithKind::parse("H(6,8,6)").unwrap());
     let w = [0.5f32; 12];
@@ -209,9 +243,10 @@ fn panels_from_another_kind_are_refused() {
 }
 
 #[test]
-#[should_panic(expected = "different `packed-fi` configuration")]
+#[should_panic(expected = "configuration")]
 fn panels_from_another_width_are_refused() {
-    // same kernel name, different representation widths
+    // same kernel name (whatever the active ISA suffixes it to),
+    // different representation widths -> cfg_tag mismatch
     let wide = select_kernel(&ArithKind::parse("FI(6,8)").unwrap());
     let narrow = select_kernel(&ArithKind::parse("FI(3,4)").unwrap());
     let w = [0.5f32; 12];
