@@ -8,6 +8,8 @@
 //!     make artifacts && cargo run --release --example serve_inference
 
 use anyhow::Result;
+use lop::coordinator::batcher::{FailureKind, Outcome};
+use lop::coordinator::router::OverloadPolicy;
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::data::synth;
 use lop::nn::spec::{NetSpec, ReprMap};
@@ -48,6 +50,12 @@ fn main() -> Result<()> {
         engine_gemm_threads: 2,
         plan_cache_bytes: 256 * 1024 * 1024,
         use_pjrt: true,
+        // under overload, re-route to the cheapest config with room
+        // (the hw-cost ladder) instead of refusing; requests that
+        // still queue past 250ms expire with Error(Expired)
+        overload: OverloadPolicy::Degrade,
+        deadline: Some(Duration::from_millis(250)),
+        inject_backend_failures: false,
     };
     let opts_workers = opts.engine_workers;
     let requests = std::env::args()
@@ -67,7 +75,10 @@ fn main() -> Result<()> {
     for ci in 0..names.len() {
         server
             .router
-            .submit(ci, vec![0.0; 784], wtx.clone())
+            // long explicit deadline overriding the 250ms default:
+            // first-touch compilation legitimately takes longer
+            .submit(ci, vec![0.0; 784], Some(Duration::from_secs(600)),
+                    wtx.clone())
             .expect("warmup submit");
     }
     for _ in 0..names.len() {
@@ -97,22 +108,36 @@ fn main() -> Result<()> {
             .collect();
         let ci = rng.below(names.len() as u64) as usize;
         submitted_cfg[i] = ci;
-        if server.router.submit(ci, img, tx.clone()).is_err() {
+        if server.router.submit(ci, img, None, tx.clone()).is_err() {
             rejected += 1;
         }
     }
     drop(tx);
 
     let mut got = 0usize;
+    let mut served = 0usize;
     let mut correct = 0usize;
+    let (mut shed, mut expired, mut backend) = (0usize, 0usize, 0usize);
     while got + rejected < requests {
         match rx.recv_timeout(Duration::from_secs(60)) {
             Ok(resp) => {
                 got += 1;
-                // warmup used ids 0..n_cfg; offset stream ids
-                let sid = resp.id as usize - names.len();
-                if resp.pred == labels[sid % 512] as usize {
-                    correct += 1;
+                match resp.outcome {
+                    Outcome::Ok(pred) => {
+                        served += 1;
+                        // warmup used ids 0..n_cfg; offset stream ids
+                        let sid = resp.id as usize - names.len();
+                        if pred == labels[sid % 512] as usize {
+                            correct += 1;
+                        }
+                    }
+                    Outcome::Error(FailureKind::Shed) => shed += 1,
+                    Outcome::Error(FailureKind::Expired) => {
+                        expired += 1
+                    }
+                    Outcome::Error(FailureKind::Backend) => {
+                        backend += 1
+                    }
                 }
             }
             Err(_) => break,
@@ -136,14 +161,17 @@ fn main() -> Result<()> {
              cache.prepares, opts_workers, cache.hits,
              cache.inflight_waits, cache.evictions);
     println!("queue depths at drain: {depths:?}");
-    println!("served     : {got} / {requests} (rejected {rejected})");
+    println!("served     : {served} / {requests} (rejected {rejected}, \
+              shed {shed}, expired {expired}, backend {backend})");
     println!("throughput : {:.1} req/s (offered {rate})",
-             got as f64 / wall.as_secs_f64());
+             served as f64 / wall.as_secs_f64());
     println!("accuracy   : {:.4} over the mixed-config stream",
-             correct as f64 / got.max(1) as f64);
+             correct as f64 / served.max(1) as f64);
     println!("{}", metrics.summary(wall));
-    assert!(got > 0, "server returned no responses");
-    let acc = correct as f64 / got.max(1) as f64;
+    assert!(served > 0, "server served no requests");
+    assert_eq!(got, served + shed + expired + backend,
+               "every answered request carries a typed outcome");
+    let acc = correct as f64 / served.max(1) as f64;
     assert!(acc > 0.8, "stream accuracy {acc} suspiciously low");
     println!("serve_inference OK");
     Ok(())

@@ -2,7 +2,7 @@
 //! engine worker stack, **hermetic** (synthetic weights + synthetic
 //! digits — no `make artifacts`), so CI can run it and gate on it.
 //!
-//! Two series, both written to `BENCH_serving_throughput.json` (path
+//! Three series, all written to `BENCH_serving_throughput.json` (path
 //! override: `LOP_SERVING_BENCH_JSON`):
 //!
 //! * `workers` — the PR-4 headline: K engine-backed configs served at
@@ -14,7 +14,17 @@
 //! * `policy` — the historical max-batch/max-wait ablation, kept on
 //!   the engine backend (the PJRT open-loop run lives in
 //!   `examples/serve_inference.rs`).
+//! * `stress` — open-loop arrival at 1x/10x/100x of measured capacity
+//!   against every overload policy (reject/shed/degrade), over a small
+//!   high-water mark so queueing delay stays bounded.  Emits
+//!   p50/p99/p999 + shed-rate + degrade-rate per run and *asserts* the
+//!   policy matrix: `Reject` keeps p99 of accepted requests flat under
+//!   100x, `Shed` sheds (non-zero rate, zero expired), `Degrade`
+//!   serves at least as much as `Reject` by re-routing down the
+//!   hw-cost ladder.
 
+use lop::coordinator::batcher::{FailureKind, Outcome};
+use lop::coordinator::router::{OverloadPolicy, SubmitError};
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::data::synth;
 use lop::nn::network::Model;
@@ -22,6 +32,7 @@ use lop::nn::spec::{NetSpec, ReprMap};
 use lop::util::bench::write_bench_json;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
+use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
 /// Engine-backed configuration mix: one per panel family (fixed
@@ -58,6 +69,9 @@ fn opts(configs: Vec<ReprMap>, workers: usize, max_batch: usize,
         engine_gemm_threads: 1,
         plan_cache_bytes: 512 * 1024 * 1024, // no eviction in-series
         use_pjrt: false, // hermetic: engine backend only
+        overload: OverloadPolicy::Reject,
+        deadline: None,
+        inject_backend_failures: false,
     }
 }
 
@@ -79,28 +93,34 @@ fn burst(server: &Server, images: &[u8], n: usize, n_cfg: usize)
             .collect();
         server
             .router
-            .submit(i % n_cfg, img, tx.clone())
+            .submit(i % n_cfg, img, None, tx.clone())
             .expect("submit");
     }
     drop(tx);
     let mut lat_us: Vec<u64> = Vec::with_capacity(n);
     while lat_us.len() < n {
         match rx.recv_timeout(Duration::from_secs(120)) {
-            Ok(resp) => lat_us.push(resp.latency.as_micros() as u64),
+            Ok(resp) => {
+                assert!(resp.is_ok(), "closed burst cannot fail: {:?}",
+                        resp.outcome);
+                lat_us.push(resp.latency.as_micros() as u64);
+            }
             Err(_) => break,
         }
     }
     let wall = t0.elapsed();
     lat_us.sort_unstable();
-    let pct = |p: f64| -> f64 {
-        if lat_us.is_empty() {
-            return 0.0;
-        }
-        let rank = ((p / 100.0) * lat_us.len() as f64).ceil() as usize;
-        lat_us[rank.saturating_sub(1).min(lat_us.len() - 1)] as f64
-            / 1e3
-    };
-    (lat_us.len(), wall, pct(50.0), pct(99.0))
+    (lat_us.len(), wall, pct(&lat_us, 50.0), pct(&lat_us, 99.0))
+}
+
+/// Percentile over sorted latencies (µs), returned in ms.
+fn pct(sorted_us: &[u64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted_us.len() as f64).ceil() as usize;
+    sorted_us[rank.saturating_sub(1).min(sorted_us.len() - 1)] as f64
+        / 1e3
 }
 
 fn run_series(series: &'static str, model: &Arc<Model>,
@@ -115,14 +135,7 @@ fn run_series(series: &'static str, model: &Arc<Model>,
     .expect("server");
     // warm up: one request per config prepares it outside the timed
     // burst (the cold path is what tests/plan_cache.rs pins)
-    let (wtx, wrx) = channel();
-    for ci in 0..configs.len() {
-        server.router.submit(ci, vec![0.0; 784], wtx.clone()).unwrap();
-    }
-    drop(wtx);
-    for _ in 0..configs.len() {
-        wrx.recv_timeout(Duration::from_secs(120)).expect("warmup");
-    }
+    warm_up(&server, configs.len());
 
     let (got, wall, p50_ms, p99_ms) =
         burst(&server, images, n, configs.len());
@@ -157,8 +170,236 @@ fn run_series(series: &'static str, model: &Arc<Model>,
     rows.push(row);
 }
 
-fn write_json(rows: &[Row]) {
-    let bodies: Vec<String> = rows
+/// Drain one warm-up request per config so `Model::prepare` runs
+/// outside any timed window.
+fn warm_up(server: &Server, n_cfg: usize) {
+    let (wtx, wrx) = channel();
+    for ci in 0..n_cfg {
+        server
+            .router
+            .submit(ci, vec![0.0; 784], None, wtx.clone())
+            .expect("warmup submit");
+    }
+    drop(wtx);
+    for _ in 0..n_cfg {
+        wrx.recv_timeout(Duration::from_secs(120)).expect("warmup");
+    }
+}
+
+// ---------------------------------------------------------------------
+// series 3: open-loop overload stress (1x/10x/100x x policy matrix)
+// ---------------------------------------------------------------------
+
+/// Queue high-water mark for the stress servers.  Equal to the batch
+/// size, so an accepted request waits at most ~2 batch drains — that
+/// bounded queueing delay is what keeps `Reject`'s p99 flat at 100x.
+const STRESS_HWM: usize = 16;
+const STRESS_MAX_WAIT: Duration = Duration::from_millis(1);
+
+struct StressRow {
+    policy: &'static str,
+    mult: usize,
+    offered: usize,
+    offered_rps: f64,
+    accepted: usize,
+    served: usize,
+    rejected: usize,
+    shed: u64,
+    degraded: u64,
+    expired: u64,
+    backend_failures: u64,
+    p50_ms: f64,
+    p99_ms: f64,
+    p999_ms: f64,
+    shed_rate: f64,
+    degrade_rate: f64,
+    ladder: usize,
+}
+
+/// Measure the sustainable service rate of the stress configuration
+/// (all traffic on config 0) with a deep queue: a closed burst batches
+/// maximally, so this is an *upper* bound on what a paced open loop
+/// can push through — offering exactly this rate saturates the server.
+fn measure_capacity(model: &Arc<Model>, configs: &[ReprMap],
+                    images: &[u8]) -> f64 {
+    let server = Server::start_with_model(
+        opts(configs.to_vec(), 2, STRESS_HWM, STRESS_MAX_WAIT),
+        model.clone(),
+        None,
+    )
+    .expect("server");
+    warm_up(&server, configs.len());
+    let (got, wall, _, _) = burst(&server, images, 192, 1);
+    server.shutdown().expect("worker panicked");
+    assert_eq!(got, 192, "capacity burst was not fully served");
+    (got as f64 / wall.as_secs_f64().max(1e-9)).max(50.0)
+}
+
+/// Open-loop arrival on config 0 at `rate` req/s (absolute-schedule
+/// pacing: oversleeps self-correct, so the offered rate holds).
+/// Returns (sync-rejected, sorted ok-latencies in µs, shed responses).
+fn open_loop(server: &Server, images: &[u8], offered: usize, rate: f64)
+             -> (usize, Vec<u64>, u64) {
+    let (tx, rx) = channel();
+    let gap = Duration::from_secs_f64(1.0 / rate);
+    let mut next = Instant::now();
+    let mut rejected = 0usize;
+    for i in 0..offered {
+        let now = Instant::now();
+        if now < next {
+            std::thread::sleep(next - now);
+        }
+        next += gap;
+        let idx = i % 256;
+        let img: Vec<f32> = images[idx * 784..(idx + 1) * 784]
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect();
+        match server.router.submit(0, img, None, tx.clone()) {
+            Ok(_) => {}
+            Err(SubmitError::Overloaded) => rejected += 1,
+            Err(e) => panic!("unexpected submit error: {e:?}"),
+        }
+    }
+    drop(tx);
+    // every accepted request gets exactly one typed response
+    let accepted = offered - rejected;
+    let mut ok_lat_us: Vec<u64> = Vec::with_capacity(accepted);
+    let mut shed = 0u64;
+    for _ in 0..accepted {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(300))
+            .expect("accepted request never answered");
+        match resp.outcome {
+            Outcome::Ok(_) => {
+                ok_lat_us.push(resp.latency.as_micros() as u64)
+            }
+            Outcome::Error(FailureKind::Shed) => shed += 1,
+            Outcome::Error(k) => {
+                panic!("unexpected failure in stress run: {k:?}")
+            }
+        }
+    }
+    ok_lat_us.sort_unstable();
+    (rejected, ok_lat_us, shed)
+}
+
+fn run_stress(policy: OverloadPolicy, mult: usize, capacity_rps: f64,
+              model: &Arc<Model>, configs: &[ReprMap], images: &[u8],
+              stress_rows: &mut Vec<StressRow>) {
+    let server = Server::start_with_model(
+        ServerOpts {
+            overload: policy,
+            // the stress queue holds at most one batch — a tight
+            // high-water mark is the knob the policy matrix turns on
+            queue_capacity: STRESS_HWM,
+            ..opts(configs.to_vec(), 2, STRESS_HWM, STRESS_MAX_WAIT)
+        },
+        model.clone(),
+        None,
+    )
+    .expect("server");
+    warm_up(&server, configs.len());
+
+    let rate = capacity_rps * mult as f64;
+    // shorter windows at higher multiples keep total offered bounded
+    let window = match mult {
+        1 => 1.0,
+        10 => 0.3,
+        _ => 0.1,
+    };
+    let offered = ((rate * window) as usize).clamp(64, 20_000);
+    let (rejected, ok_lat, shed_resp) =
+        open_loop(&server, images, offered, rate);
+
+    let m = &server.metrics;
+    let shed = m.shed.load(Ordering::Relaxed);
+    let degraded = m.degraded.load(Ordering::Relaxed);
+    let expired = m.expired.load(Ordering::Relaxed);
+    let backend_failures = m.backend_failures.load(Ordering::Relaxed);
+    let ladder = server.router.ladder(0).len();
+    server.shutdown().expect("worker panicked");
+
+    let accepted = offered - rejected;
+    let served = ok_lat.len();
+    assert_eq!(shed, shed_resp,
+               "shed counter and shed responses disagree");
+    assert_eq!(accepted, served + shed as usize,
+               "accepted = served + shed under no-deadline stress");
+    let row = StressRow {
+        policy: match policy {
+            OverloadPolicy::Reject => "reject",
+            OverloadPolicy::Shed => "shed",
+            OverloadPolicy::Degrade => "degrade",
+        },
+        mult,
+        offered,
+        offered_rps: rate,
+        accepted,
+        served,
+        rejected,
+        shed,
+        degraded,
+        expired,
+        backend_failures,
+        p50_ms: pct(&ok_lat, 50.0),
+        p99_ms: pct(&ok_lat, 99.0),
+        p999_ms: pct(&ok_lat, 99.9),
+        shed_rate: shed as f64 / offered.max(1) as f64,
+        degrade_rate: degraded as f64 / accepted.max(1) as f64,
+        ladder,
+    };
+    println!("{:>8} {:>5}x {:>8} {:>8} {:>8} {:>8} {:>6} {:>7} \
+              {:>9.2} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
+             row.policy, row.mult, row.offered, row.accepted,
+             row.served, row.rejected, row.shed, row.degraded,
+             row.p50_ms, row.p99_ms, row.p999_ms, row.shed_rate,
+             row.degrade_rate);
+    stress_rows.push(row);
+}
+
+/// The acceptance matrix over the stress rows.  Mirrored (from the
+/// emitted JSON) by the CI bench-serving sanity step, so a regression
+/// fails both the bench binary and the gate that parses its output.
+fn assert_stress_matrix(stress_rows: &[StressRow]) {
+    let find = |policy: &str, mult: usize| -> &StressRow {
+        stress_rows
+            .iter()
+            .find(|r| r.policy == policy && r.mult == mult)
+            .expect("stress row missing")
+    };
+    // Reject: the bounded queue means accepted requests never wait
+    // more than ~2 batch drains, so p99 at 100x stays within 2x of the
+    // 1x p99 (slop: two max_wait timer quanta + 1ms scheduler noise).
+    let slop_ms = 2.0 * STRESS_MAX_WAIT.as_secs_f64() * 1e3 + 1.0;
+    let (r1, r100) = (find("reject", 1), find("reject", 100));
+    assert!(
+        r100.p99_ms <= 2.0 * r1.p99_ms + slop_ms,
+        "reject p99 blew up under 100x load: {:.2}ms vs {:.2}ms at 1x",
+        r100.p99_ms, r1.p99_ms
+    );
+    // Shed: answers overload at the door — non-zero shed rate, and
+    // nothing ever expires (no deadlines in this series).
+    let s100 = find("shed", 100);
+    assert!(s100.shed_rate > 0.0, "shed policy shed nothing at 100x");
+    for r in stress_rows {
+        assert_eq!(r.expired, 0, "no deadlines => nothing may expire");
+        assert_eq!(r.backend_failures, 0, "engine backend cannot fail");
+    }
+    // Degrade: re-routes down the hw-cost ladder instead of refusing,
+    // so it must serve at least as much as Reject at the same load.
+    let d100 = find("degrade", 100);
+    assert!(d100.ladder >= 1, "degrade server has no cheaper configs");
+    assert!(d100.degraded > 0, "degrade policy re-routed nothing");
+    assert!(
+        d100.served >= r100.served,
+        "degrade served less than reject at 100x: {} < {}",
+        d100.served, r100.served
+    );
+}
+
+fn write_json(rows: &[Row], stress_rows: &[StressRow]) {
+    let mut bodies: Vec<String> = rows
         .iter()
         .map(|r| {
             format!(
@@ -186,6 +427,34 @@ fn write_json(rows: &[Row]) {
             )
         })
         .collect();
+    bodies.extend(stress_rows.iter().map(|r| {
+        format!(
+            "\"series\": \"stress\", \"policy\": \"{}\", \"mult\": {}, \
+             \"offered\": {}, \"offered_rps\": {:.1}, \"accepted\": \
+             {}, \"served\": {}, \"rejected\": {}, \"shed\": {}, \
+             \"degraded\": {}, \"expired\": {}, \"backend_failures\": \
+             {}, \"p50_ms\": {:.2}, \"p99_ms\": {:.2}, \"p999_ms\": \
+             {:.2}, \"shed_rate\": {:.4}, \"degrade_rate\": {:.4}, \
+             \"ladder\": {}",
+            r.policy,
+            r.mult,
+            r.offered,
+            r.offered_rps,
+            r.accepted,
+            r.served,
+            r.rejected,
+            r.shed,
+            r.degraded,
+            r.expired,
+            r.backend_failures,
+            r.p50_ms,
+            r.p99_ms,
+            r.p999_ms,
+            r.shed_rate,
+            r.degrade_rate,
+            r.ladder
+        )
+    }));
     write_bench_json("serving_throughput", "LOP_SERVING_BENCH_JSON",
                      "BENCH_serving_throughput.json", &bodies);
 }
@@ -247,5 +516,36 @@ fn main() {
     println!("\n(policy ablation: throughput should rise with \
               max_batch, trading p99)");
 
-    write_json(&rows);
+    // --- series 3: open-loop overload stress -----------------------
+    // All traffic targets config 0 (the float-lattice config — the
+    // top of the hw-cost ladder); the two cheaper configs below it
+    // are the degrade policy's spillover capacity.
+    let stress_configs: Vec<ReprMap> = ["FL(4,9)", "FI(6,8)", "binxnor"]
+        .iter()
+        .map(|s| ReprMap::parse_for(&spec, s).unwrap())
+        .collect();
+    let capacity_rps =
+        measure_capacity(&model, &stress_configs, &images);
+    println!("\n=== overload stress: open loop on config 0, measured \
+              capacity {capacity_rps:.0} req/s, high-water mark \
+              {STRESS_HWM} ===\n");
+    println!("{:>8} {:>6} {:>8} {:>8} {:>8} {:>8} {:>6} {:>7} \
+              {:>9} {:>9} {:>9} {:>7} {:>7}",
+             "policy", "mult", "offered", "accepted", "served",
+             "rejected", "shed", "degrade", "p50 (ms)", "p99 (ms)",
+             "p999(ms)", "shedrt", "degrrt");
+    let mut stress_rows = Vec::new();
+    for policy in [OverloadPolicy::Reject, OverloadPolicy::Shed,
+                   OverloadPolicy::Degrade]
+    {
+        for mult in [1usize, 10, 100] {
+            run_stress(policy, mult, capacity_rps, &model,
+                       &stress_configs, &images, &mut stress_rows);
+        }
+    }
+    assert_stress_matrix(&stress_rows);
+    println!("\noverload policy matrix: reject p99 flat at 100x, shed \
+              sheds without expiry, degrade out-serves reject OK");
+
+    write_json(&rows, &stress_rows);
 }

@@ -3,6 +3,7 @@
 
 use super::toml::TomlDoc;
 use crate::coordinator::explorer::{ExploreOpts, Family};
+use crate::coordinator::router::OverloadPolicy;
 use crate::nn::spec::{NetSpec, ReprMap};
 use std::time::Duration;
 
@@ -23,6 +24,12 @@ pub struct ServeFileConfig {
     /// resident prepacked weight panels all engine workers share.
     pub plan_cache_mb: usize,
     pub use_pjrt: bool,
+    /// `overload = "reject" | "shed" | "degrade"` — what admission
+    /// does when a config's queue is at `queue_capacity`.
+    pub overload: OverloadPolicy,
+    /// `deadline_ms` — server-wide default queueing deadline; absent
+    /// means requests never expire in queue.
+    pub deadline: Option<Duration>,
 }
 
 impl ServeFileConfig {
@@ -66,6 +73,21 @@ impl ServeFileConfig {
                  be served by the engine workers"
             );
         }
+        let overload = match doc.get_str("serve", "overload") {
+            Some(s) => OverloadPolicy::parse(s)
+                .map_err(|e| format!("serve.overload: {e}"))?,
+            None => OverloadPolicy::Reject,
+        };
+        let deadline = doc.get_float("serve", "deadline_ms").map(|ms| {
+            Duration::from_micros((ms * 1_000.0) as u64)
+        });
+        if let Some(d) = deadline {
+            if d.is_zero() {
+                return Err("serve.deadline_ms must be positive \
+                            (every request would expire unserved)"
+                    .to_string());
+            }
+        }
         Ok(ServeFileConfig {
             spec,
             configs,
@@ -85,6 +107,8 @@ impl ServeFileConfig {
                 .get_int("serve", "plan_cache_mb")
                 .unwrap_or(256) as usize,
             use_pjrt,
+            overload,
+            deadline,
         })
     }
 }
@@ -160,6 +184,39 @@ use_pjrt = false
         assert_eq!(c.max_wait, Duration::from_micros(1_500));
         assert_eq!(c.plan_cache_mb, 64);
         assert!(!c.use_pjrt);
+        assert_eq!(c.overload, OverloadPolicy::Reject);
+        assert_eq!(c.deadline, None);
+    }
+
+    #[test]
+    fn serve_config_overload_and_deadline() {
+        let doc = TomlDoc::parse(
+            r#"
+[serve]
+overload = "degrade"
+deadline_ms = 50
+"#,
+        )
+        .unwrap();
+        let c = ServeFileConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.overload, OverloadPolicy::Degrade);
+        // integer TOML values coerce to float for *_ms keys
+        assert_eq!(c.deadline, Some(Duration::from_millis(50)));
+
+        let frac = TomlDoc::parse("[serve]\ndeadline_ms = 2.5\n")
+            .unwrap();
+        let c = ServeFileConfig::from_toml(&frac).unwrap();
+        assert_eq!(c.deadline, Some(Duration::from_micros(2_500)));
+
+        let bad = TomlDoc::parse("[serve]\noverload = \"drop\"\n")
+            .unwrap();
+        let e = ServeFileConfig::from_toml(&bad).unwrap_err();
+        assert!(e.contains("serve.overload"), "{e}");
+
+        let zero = TomlDoc::parse("[serve]\ndeadline_ms = 0\n")
+            .unwrap();
+        let e = ServeFileConfig::from_toml(&zero).unwrap_err();
+        assert!(e.contains("positive"), "{e}");
     }
 
     #[test]

@@ -1,16 +1,33 @@
 //! Dynamic batcher: per-configuration request queues with a
 //! max-batch / max-wait batching policy (the vLLM-style continuous-batching
-//! core, sized for this workload).
+//! core, sized for this workload), extended with per-request queueing
+//! deadlines and a degrade-aware admission path.
 //!
 //! Workers block on `next_batch` with a mask of configurations they can
 //! serve (the PJRT worker serves exact-arithmetic configs, engine workers
 //! serve everything); a batch is released when a queue reaches
-//! `max_batch` or its oldest request has waited `max_wait`.
+//! `max_batch`, its oldest request has waited `max_wait`, or waiting any
+//! longer would miss the oldest request's deadline.  Requests whose
+//! deadline has already passed are **expired**: removed from their queue
+//! and answered with `Response::Error(Expired)` instead of being served
+//! stale — a released batch never contains an expired request.
 
+use super::metrics::Metrics;
 use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// How far before a head-of-queue deadline the batcher releases a
+/// partial batch: `next_batch` hands the largest batch that can still
+/// be given to a worker *before* the deadline passes, rather than
+/// waiting out `max_wait` and expiring the head.  The slack covers the
+/// wake-up + drain hand-over so the release lands on the meeting side
+/// of the deadline.  (The deadline itself is a *queueing* deadline —
+/// admission to dequeue — not an end-to-end one; a request released
+/// just in time may still finish serving after it.)
+const DEADLINE_RELEASE_SLACK: Duration = Duration::from_micros(500);
 
 #[derive(Debug)]
 pub struct Request {
@@ -19,14 +36,95 @@ pub struct Request {
     pub image: Vec<f32>,
     pub config_id: usize,
     pub submitted: Instant,
+    /// Queueing deadline: if the request is still queued at this
+    /// instant it is expired (answered `Error(Expired)`), never served.
+    pub deadline: Option<Instant>,
     pub reply: Sender<Response>,
+}
+
+/// Every way a request can fail after the router accepted it — the
+/// error half of [`Outcome`].  Each kind is distinguishable at the
+/// client and counted in its own [`Metrics`] counter; none of them
+/// enter the latency histogram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// The queueing deadline passed before a worker picked the request
+    /// up; it was removed from its queue unserved.
+    Expired,
+    /// The backend's forward pass failed (e.g. a PJRT execution
+    /// error); the request reached a worker but produced no
+    /// prediction.
+    Backend,
+    /// Dropped at admission by the `Shed` overload policy: the queue
+    /// was past its high-water mark and the newest request yields.
+    Shed,
+}
+
+/// What a [`Response`] carries: a real prediction, or a typed failure.
+/// The pre-PR-7 contract smuggled backend failures through the success
+/// path as the sentinel `pred = usize::MAX`, indistinguishable from a
+/// class index; every failure mode is now explicit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Predicted class index.
+    Ok(usize),
+    Error(FailureKind),
 }
 
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    pub pred: usize,
+    pub outcome: Outcome,
+    /// Submit-to-reply time.  Only `Ok` responses are recorded in the
+    /// server's latency histogram; failures carry their latency here
+    /// but are counted in their own [`Metrics`] counters instead.
     pub latency: Duration,
+}
+
+impl Response {
+    /// The predicted class, if the request was actually served.
+    pub fn pred(&self) -> Option<usize> {
+        match self.outcome {
+            Outcome::Ok(p) => Some(p),
+            Outcome::Error(_) => None,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self.outcome, Outcome::Ok(_))
+    }
+}
+
+/// Why [`BatchQueue::admit`] refused a request.  Shutdown and overload
+/// are different conditions and must surface differently at the
+/// router (`SubmitError::ShuttingDown` vs the overload policy); the
+/// pre-PR-7 `Err(req)` collapsed them, reporting `Overloaded` during
+/// drain.
+#[derive(Debug)]
+pub enum PushError {
+    /// The queue is closed (server draining for shutdown).
+    Closed(Request),
+    /// The target queue — and every degrade rung offered — is at the
+    /// high-water mark.
+    Full(Request),
+}
+
+impl PushError {
+    /// Recover the request (e.g. to reply to it directly).
+    pub fn into_request(self) -> Request {
+        match self {
+            PushError::Closed(r) | PushError::Full(r) => r,
+        }
+    }
+}
+
+/// Where [`BatchQueue::admit`] placed an accepted request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admitted {
+    /// On the queue it asked for.
+    Queued,
+    /// Re-routed to this cheaper config's queue (degrade ladder).
+    Degraded(usize),
 }
 
 struct Inner {
@@ -48,13 +146,18 @@ pub struct BatchQueue {
     cv: Condvar,
     pub max_batch: usize,
     pub max_wait: Duration,
-    /// per-queue capacity: submit() rejects beyond this (backpressure)
+    /// Per-queue high-water mark: `admit` refuses beyond this.  What
+    /// the refusal *means* — reject, shed, or degrade — is the
+    /// router's overload policy, not the queue's concern.
     pub capacity: usize,
+    /// Expiry accounting (`expired` ticks as the sweep removes
+    /// requests); shared with the router and server.
+    metrics: Arc<Metrics>,
 }
 
 impl BatchQueue {
     pub fn new(n_configs: usize, max_batch: usize, max_wait: Duration,
-               capacity: usize) -> BatchQueue {
+               capacity: usize, metrics: Arc<Metrics>) -> BatchQueue {
         BatchQueue {
             inner: Mutex::new(Inner {
                 queues: (0..n_configs).map(|_| VecDeque::new()).collect(),
@@ -64,23 +167,45 @@ impl BatchQueue {
             max_batch,
             max_wait,
             capacity,
+            metrics,
         }
     }
 
-    /// Enqueue; `Err(req)` when the target queue is full (backpressure).
-    pub fn push(&self, req: Request) -> Result<(), Request> {
+    /// Enqueue under one lock acquisition, with overload fallback: if
+    /// the target queue is at capacity, try each config id in `ladder`
+    /// (the router's degrade ladder, nearest-cheaper first) before
+    /// giving up.  The room check and the enqueue are atomic, so a
+    /// degrade decision cannot race another submitter into an
+    /// over-full queue.
+    pub fn admit(&self, mut req: Request, ladder: &[usize])
+                 -> Result<Admitted, PushError> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
-            return Err(req);
+            return Err(PushError::Closed(req));
         }
-        let q = &mut g.queues[req.config_id];
-        if q.len() >= self.capacity {
-            return Err(req);
+        if g.queues[req.config_id].len() < self.capacity {
+            let ci = req.config_id;
+            g.queues[ci].push_back(req);
+            drop(g);
+            self.cv.notify_all();
+            return Ok(Admitted::Queued);
         }
-        q.push_back(req);
-        drop(g);
-        self.cv.notify_all();
-        Ok(())
+        for &ci in ladder {
+            if g.queues[ci].len() < self.capacity {
+                req.config_id = ci;
+                g.queues[ci].push_back(req);
+                drop(g);
+                self.cv.notify_all();
+                return Ok(Admitted::Degraded(ci));
+            }
+        }
+        Err(PushError::Full(req))
+    }
+
+    /// Enqueue on the request's own queue only; the error carries the
+    /// request back so the caller can reply to or report it.
+    pub fn push(&self, req: Request) -> Result<(), PushError> {
+        self.admit(req, &[]).map(|_| ())
     }
 
     pub fn depth(&self, config_id: usize) -> usize {
@@ -108,33 +233,86 @@ impl BatchQueue {
 
     /// Blocking: next batch from any queue accepted by `mask`.  Returns
     /// `None` once closed and drained (for this worker's mask).
+    ///
+    /// Deadline semantics: every wake-up first sweeps the masked
+    /// queues, removing requests whose deadline has passed and
+    /// answering them `Error(Expired)` — so a released batch never
+    /// contains an expired request.  A queue's release point is the
+    /// earlier of the batching timer (`head.submitted + max_wait`) and
+    /// the head's deadline minus [`DEADLINE_RELEASE_SLACK`], i.e. the
+    /// largest batch that still meets the oldest request's deadline.
     pub fn next_batch(&self, mask: &[bool])
                       -> Option<(usize, Vec<Request>)> {
         let mut g = self.inner.lock().unwrap();
         loop {
             let now = Instant::now();
+            // Expiry sweep.  Replying under the lock is safe: std mpsc
+            // senders are unbounded and never block.  Also track the
+            // earliest live deadline so the wait below wakes in time
+            // to expire a mid-queue request promptly.
+            let mut earliest_deadline: Option<Instant> = None;
+            for (ci, q) in g.queues.iter_mut().enumerate() {
+                if !mask[ci] {
+                    continue;
+                }
+                let mut i = 0;
+                while i < q.len() {
+                    match q[i].deadline {
+                        Some(d) if d <= now => {
+                            let req = q.remove(i).unwrap();
+                            self.metrics
+                                .expired
+                                .fetch_add(1, Ordering::Relaxed);
+                            let _ = req.reply.send(Response {
+                                id: req.id,
+                                outcome: Outcome::Error(
+                                    FailureKind::Expired,
+                                ),
+                                latency:
+                                    now.duration_since(req.submitted),
+                            });
+                        }
+                        Some(d) => {
+                            let sooner = earliest_deadline
+                                .map(|e| d < e)
+                                .unwrap_or(true);
+                            if sooner {
+                                earliest_deadline = Some(d);
+                            }
+                            i += 1;
+                        }
+                        None => i += 1,
+                    }
+                }
+            }
             // pick the ready queue with the oldest head (FIFO fairness)
             let mut pick: Option<(usize, Instant)> = None;
-            let mut soonest_deadline: Option<Duration> = None;
+            let mut next_wake: Option<Instant> = None;
             for (ci, q) in g.queues.iter().enumerate() {
                 if !mask[ci] || q.is_empty() {
                     continue;
                 }
-                let head = q.front().unwrap().submitted;
-                let age = now.duration_since(head);
+                let head = q.front().unwrap();
+                let mut release_at = head.submitted + self.max_wait;
+                if let Some(d) = head.deadline {
+                    let dl = d
+                        .checked_sub(DEADLINE_RELEASE_SLACK)
+                        .unwrap_or(d);
+                    release_at = release_at.min(dl);
+                }
                 let ready = q.len() >= self.max_batch
-                    || age >= self.max_wait
+                    || now >= release_at
                     || g.closed;
                 if ready {
-                    if pick.map(|(_, h)| head < h).unwrap_or(true) {
-                        pick = Some((ci, head));
+                    let h = head.submitted;
+                    if pick.map(|(_, ph)| h < ph).unwrap_or(true) {
+                        pick = Some((ci, h));
                     }
-                } else {
-                    let remain = self.max_wait - age;
-                    if soonest_deadline.map(|d| remain < d).unwrap_or(true)
-                    {
-                        soonest_deadline = Some(remain);
-                    }
+                } else if next_wake
+                    .map(|w| release_at < w)
+                    .unwrap_or(true)
+                {
+                    next_wake = Some(release_at);
                 }
             }
             if let Some((ci, _)) = pick {
@@ -144,19 +322,27 @@ impl BatchQueue {
                 return Some((ci, batch));
             }
             if g.closed {
-                // nothing ready and closed: drained for this mask?
-                let empty = g
-                    .queues
-                    .iter()
-                    .enumerate()
-                    .all(|(ci, q)| !mask[ci] || q.is_empty());
-                if empty {
-                    return None;
-                }
-                continue; // closed flushes partial batches via `ready`
+                // Once closed, any non-empty masked queue is `ready`
+                // (the `|| g.closed` arm above), so reaching here with
+                // no pick means this worker's queues are drained.
+                // (The pre-deadline code kept a `continue` for the
+                // non-empty case in this spot; it was unreachable —
+                // and would have busy-spun under the lock had it ever
+                // run.)
+                return None;
             }
-            g = match soonest_deadline {
-                Some(d) => self.cv.wait_timeout(g, d).unwrap().0,
+            // Sleep until the soonest release point or live deadline
+            // (whichever comes first); both are in the future here —
+            // a past release point made its queue `ready` and a past
+            // deadline was swept above.
+            if let Some(d) = earliest_deadline {
+                next_wake = Some(next_wake.map_or(d, |w| w.min(d)));
+            }
+            g = match next_wake {
+                Some(at) => {
+                    let dur = at.saturating_duration_since(now);
+                    self.cv.wait_timeout(g, dur).unwrap().0
+                }
                 None => self.cv.wait(g).unwrap(),
             };
         }
@@ -172,7 +358,12 @@ impl BatchQueue {
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
-    use std::sync::Arc;
+
+    fn bq(n_configs: usize, max_batch: usize, max_wait: Duration,
+          capacity: usize) -> BatchQueue {
+        BatchQueue::new(n_configs, max_batch, max_wait, capacity,
+                        Arc::new(Metrics::new()))
+    }
 
     fn req(id: u64, config_id: usize, tx: &Sender<Response>) -> Request {
         Request {
@@ -180,13 +371,19 @@ mod tests {
             image: vec![0.0; 4],
             config_id,
             submitted: Instant::now(),
+            deadline: None,
             reply: tx.clone(),
         }
     }
 
+    fn req_deadline(id: u64, config_id: usize, deadline: Instant,
+                    tx: &Sender<Response>) -> Request {
+        Request { deadline: Some(deadline), ..req(id, config_id, tx) }
+    }
+
     #[test]
     fn full_batch_released_immediately() {
-        let q = BatchQueue::new(1, 4, Duration::from_secs(60), 100);
+        let q = bq(1, 4, Duration::from_secs(60), 100);
         let (tx, _rx) = channel();
         for i in 0..4 {
             q.push(req(i, 0, &tx)).unwrap();
@@ -199,7 +396,7 @@ mod tests {
 
     #[test]
     fn partial_batch_released_after_max_wait() {
-        let q = BatchQueue::new(1, 64, Duration::from_millis(30), 100);
+        let q = bq(1, 64, Duration::from_millis(30), 100);
         let (tx, _rx) = channel();
         q.push(req(7, 0, &tx)).unwrap();
         let t0 = Instant::now();
@@ -212,7 +409,7 @@ mod tests {
 
     #[test]
     fn mask_filters_queues() {
-        let q = BatchQueue::new(2, 1, Duration::from_millis(5), 100);
+        let q = bq(2, 1, Duration::from_millis(5), 100);
         let (tx, _rx) = channel();
         q.push(req(1, 0, &tx)).unwrap();
         q.push(req(2, 1, &tx)).unwrap();
@@ -230,30 +427,138 @@ mod tests {
 
     #[test]
     fn backpressure_rejects_when_full() {
-        let q = BatchQueue::new(1, 4, Duration::from_secs(1), 2);
+        let q = bq(1, 4, Duration::from_secs(1), 2);
         let (tx, _rx) = channel();
         q.push(req(1, 0, &tx)).unwrap();
         q.push(req(2, 0, &tx)).unwrap();
-        assert!(q.push(req(3, 0, &tx)).is_err());
+        assert!(matches!(q.push(req(3, 0, &tx)),
+                         Err(PushError::Full(_))));
+    }
+
+    #[test]
+    fn closed_and_full_are_distinct_errors() {
+        let q = bq(1, 4, Duration::from_secs(1), 1);
+        let (tx, _rx) = channel();
+        q.push(req(1, 0, &tx)).unwrap();
+        // full queue → Full, carrying the request back
+        let r = match q.push(req(2, 0, &tx)) {
+            Err(PushError::Full(r)) => r,
+            other => panic!("expected Full, got {other:?}"),
+        };
+        assert_eq!(r.id, 2);
+        // closed queue → Closed, even though it is also at capacity
+        q.close();
+        let r = match q.push(req(3, 0, &tx)) {
+            Err(PushError::Closed(r)) => r,
+            other => panic!("expected Closed, got {other:?}"),
+        };
+        assert_eq!(r.id, 3);
+        // and into_request round-trips both variants
+        assert_eq!(PushError::Full(req(4, 0, &tx))
+                       .into_request().id, 4);
+    }
+
+    #[test]
+    fn admit_degrades_to_ladder_when_full() {
+        let q = bq(3, 4, Duration::from_secs(1), 1);
+        let (tx, _rx) = channel();
+        assert_eq!(q.admit(req(0, 0, &tx), &[1, 2]).unwrap(),
+                   Admitted::Queued);
+        // queue 0 full → first rung with room wins, and the request's
+        // config_id is rewritten to the rung it landed on
+        assert_eq!(q.admit(req(1, 0, &tx), &[1, 2]).unwrap(),
+                   Admitted::Degraded(1));
+        assert_eq!(q.admit(req(2, 0, &tx), &[1, 2]).unwrap(),
+                   Admitted::Degraded(2));
+        assert!(matches!(q.admit(req(3, 0, &tx), &[1, 2]),
+                         Err(PushError::Full(_))));
+        assert_eq!(q.depths(), vec![1, 1, 1]);
+        let (ci, batch) = q.next_batch(&[false, true, false]).unwrap();
+        assert_eq!(ci, 1);
+        assert_eq!(batch[0].id, 1);
+        assert_eq!(batch[0].config_id, 1, "degraded request must be \
+                   relabelled to the queue it landed on");
     }
 
     #[test]
     fn close_flushes_then_returns_none() {
-        let q = Arc::new(BatchQueue::new(1, 64, Duration::from_secs(60),
-                                         100));
+        let q = bq(1, 64, Duration::from_secs(60), 100);
         let (tx, _rx) = channel();
         q.push(req(1, 0, &tx)).unwrap();
         q.close();
         let (_, batch) = q.next_batch(&[true]).unwrap();
         assert_eq!(batch.len(), 1);
         assert!(q.next_batch(&[true]).is_none());
-        assert!(q.push(req(2, 0, &tx)).is_err());
+        assert!(matches!(q.push(req(2, 0, &tx)),
+                         Err(PushError::Closed(_))));
+    }
+
+    #[test]
+    fn expired_requests_are_answered_not_served() {
+        let metrics = Arc::new(Metrics::new());
+        let q = BatchQueue::new(1, 4, Duration::from_secs(60), 100,
+                                metrics.clone());
+        let (tx, rx) = channel();
+        let past = Instant::now();
+        q.push(req_deadline(1, 0, past, &tx)).unwrap();
+        q.push(req_deadline(2, 0, past, &tx)).unwrap();
+        // close so the drain terminates; the sweep must still answer
+        // both expired requests rather than flushing them as a batch
+        q.close();
+        assert!(q.next_batch(&[true]).is_none());
+        let mut ids = Vec::new();
+        while let Ok(r) = rx.try_recv() {
+            assert_eq!(r.outcome, Outcome::Error(FailureKind::Expired));
+            assert_eq!(r.pred(), None);
+            assert!(!r.is_ok());
+            ids.push(r.id);
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(metrics.expired.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn mixed_queue_releases_live_requests_only() {
+        let q = bq(1, 8, Duration::from_secs(60), 100);
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        q.push(req_deadline(1, 0, now, &tx)).unwrap(); // expired
+        q.push(req(2, 0, &tx)).unwrap(); // live, no deadline
+        q.push(req_deadline(3, 0, now, &tx)).unwrap(); // expired
+        q.push(req(4, 0, &tx)).unwrap(); // live
+        q.close();
+        let (_, batch) = q.next_batch(&[true]).unwrap();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 4], "batch must hold live requests \
+                   only, in FIFO order");
+        assert!(q.next_batch(&[true]).is_none());
+        let expired: Vec<u64> = rx.try_iter().map(|r| r.id).collect();
+        assert_eq!(expired, vec![1, 3]);
+    }
+
+    #[test]
+    fn deadline_releases_partial_batch_early() {
+        // max_wait is effectively infinite; the head's 40ms deadline
+        // must force an early release (before the deadline, so the
+        // request is served, not expired).
+        let q = bq(1, 64, Duration::from_secs(3600), 100);
+        let (tx, rx) = channel();
+        let d = Instant::now() + Duration::from_millis(40);
+        q.push(req_deadline(9, 0, d, &tx)).unwrap();
+        let t0 = Instant::now();
+        let (_, batch) = q.next_batch(&[true]).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 9);
+        let waited = t0.elapsed();
+        assert!(waited < Duration::from_millis(500),
+                "released by deadline, not max_wait: {waited:?}");
+        assert!(rx.try_recv().is_err(), "served, not expired");
     }
 
     #[test]
     fn concurrent_producers_consumers() {
-        let q = Arc::new(BatchQueue::new(1, 8, Duration::from_millis(5),
-                                         10_000));
+        let q = Arc::new(bq(1, 8, Duration::from_millis(5), 10_000));
         let (tx, _rx) = channel();
         let n = 200u64;
         let qp = q.clone();
@@ -269,5 +574,192 @@ mod tests {
         }
         prod.join().unwrap();
         assert_eq!(got as u64, n);
+    }
+
+    // ------------------------------------------------ property sweep
+
+    /// One generated scenario: requests with fabricated ages (so the
+    /// test never sleeps) and a deadline class each —
+    /// 0 = none, 1 = live (now + 1h), 2 = already expired.
+    #[derive(Debug)]
+    struct Scenario {
+        n_queues: usize,
+        max_batch: usize,
+        max_wait: Duration,
+        /// (queue, age, deadline class)
+        reqs: Vec<(usize, Duration, u8)>,
+    }
+
+    fn gen_scenario(rng: &mut crate::util::prng::Rng) -> Scenario {
+        let n_queues = 1 + rng.below(3) as usize;
+        let max_batch = [1usize, 2, 4, 8][rng.below(4) as usize];
+        // small enough that an "old" head is instantly ready, or huge
+        // enough that nothing is ready before close()
+        let max_wait = if rng.below(2) == 0 {
+            Duration::from_millis(5)
+        } else {
+            Duration::from_secs(1800)
+        };
+        let n = rng.below(24) as usize;
+        let reqs = (0..n)
+            .map(|_| {
+                let q = rng.below(n_queues as u64) as usize;
+                let age = if rng.below(2) == 0 {
+                    Duration::ZERO
+                } else {
+                    Duration::from_secs(1)
+                };
+                (q, age, rng.below(3) as u8)
+            })
+            .collect();
+        Scenario { n_queues, max_batch, max_wait, reqs }
+    }
+
+    /// Satellite-5 property: across random max_batch / max_wait /
+    /// deadline combinations — no released batch contains an expired
+    /// request, released batches are FIFO prefixes, the post-close
+    /// pick is always the globally oldest ready head (cross-queue
+    /// fairness), close() flushes every live partial, and every
+    /// expired request is answered `Error(Expired)` exactly once.
+    #[test]
+    fn prop_deadline_fifo_and_close_flush() {
+        crate::util::prop::check_msg(
+            "batcher deadline/FIFO/close-flush",
+            0x10ad_5eed,
+            64,
+            gen_scenario,
+            |s| {
+                let metrics = Arc::new(Metrics::new());
+                let q = BatchQueue::new(s.n_queues, s.max_batch,
+                                        s.max_wait, 10_000,
+                                        metrics.clone());
+                let (tx, rx) = channel();
+                let now0 = Instant::now();
+                // mirror: per-queue FIFO of live (id, submitted)
+                let mut live: Vec<Vec<(u64, Instant)>> =
+                    vec![Vec::new(); s.n_queues];
+                let mut expired_ids: Vec<u64> = Vec::new();
+                for (id, &(qi, age, dc)) in s.reqs.iter().enumerate() {
+                    let id = id as u64;
+                    let submitted =
+                        now0.checked_sub(age).unwrap_or(now0);
+                    let deadline = match dc {
+                        0 => None,
+                        1 => Some(now0 + Duration::from_secs(3600)),
+                        // already past by the time any sweep runs
+                        _ => Some(submitted + Duration::from_nanos(1)),
+                    };
+                    if dc == 2 {
+                        expired_ids.push(id);
+                    } else {
+                        live[qi].push((id, submitted));
+                    }
+                    q.push(Request {
+                        id,
+                        image: vec![0.0; 4],
+                        config_id: qi,
+                        submitted,
+                        deadline,
+                        reply: tx.clone(),
+                    })
+                    .map_err(|e| format!("push failed: {e:?}"))?;
+                }
+                let mask = vec![true; s.n_queues];
+                let check_batch =
+                    |ci: usize, batch: &[Request],
+                     live: &mut [Vec<(u64, Instant)>]|
+                     -> Result<(), String> {
+                        let want = live[ci].len().min(s.max_batch);
+                        if batch.len() != want {
+                            return Err(format!(
+                                "queue {ci}: batch len {} != {want}",
+                                batch.len()));
+                        }
+                        for (r, &(id, _)) in
+                            batch.iter().zip(live[ci].iter())
+                        {
+                            if r.deadline
+                                .is_some_and(|d| d <= Instant::now())
+                            {
+                                return Err(format!(
+                                    "expired id {} released", r.id));
+                            }
+                            if r.id != id {
+                                return Err(format!(
+                                    "queue {ci}: got id {} want {id} \
+                                     (FIFO prefix violated)", r.id));
+                            }
+                        }
+                        live[ci].drain(..batch.len());
+                        Ok(())
+                    };
+                // Pre-close probe, only when the mirror says a batch
+                // is certainly releasable (mirror-ready ⊆ real-ready,
+                // so this cannot block): a full batch of live
+                // requests, or an old head with the small max_wait.
+                let probe = (0..s.n_queues).any(|ci| {
+                    live[ci].len() >= s.max_batch
+                        || (!live[ci].is_empty()
+                            && live[ci][0].1 < now0
+                            && s.max_wait < Duration::from_secs(1))
+                });
+                if probe {
+                    let (ci, batch) = q.next_batch(&mask)
+                        .ok_or("probe: queue drained early")?;
+                    check_batch(ci, &batch, &mut live)?;
+                }
+                // close() flushes every remaining live partial
+                q.close();
+                while let Some((ci, batch)) = q.next_batch(&mask) {
+                    // cross-queue FIFO fairness: once closed every
+                    // non-empty queue is ready, so the pick must be
+                    // the globally oldest head (ties allowed — equal
+                    // fabricated ages share one submitted instant)
+                    let head = live[ci]
+                        .first()
+                        .ok_or_else(|| {
+                            format!("queue {ci}: unexpected batch")
+                        })?
+                        .1;
+                    for (oi, l) in live.iter().enumerate() {
+                        if let Some(&(_, h)) = l.first() {
+                            if head > h {
+                                return Err(format!(
+                                    "unfair pick: queue {ci} head is \
+                                     newer than queue {oi}'s"));
+                            }
+                        }
+                    }
+                    check_batch(ci, &batch, &mut live)?;
+                }
+                if live.iter().any(|l| !l.is_empty()) {
+                    return Err(format!(
+                        "close() left live requests queued: {live:?}"));
+                }
+                // every expired request answered exactly once
+                let mut got: Vec<u64> =
+                    rx.try_iter()
+                        .map(|r| {
+                            (r.outcome
+                                == Outcome::Error(FailureKind::Expired))
+                                .then_some(r.id)
+                                .ok_or_else(|| format!(
+                                    "non-expired reply {:?}", r.outcome))
+                        })
+                        .collect::<Result<_, _>>()?;
+                got.sort_unstable();
+                expired_ids.sort_unstable();
+                if got != expired_ids {
+                    return Err(format!(
+                        "expired replies {got:?} != {expired_ids:?}"));
+                }
+                let n = metrics.expired.load(Ordering::Relaxed);
+                if n as usize != expired_ids.len() {
+                    return Err(format!(
+                        "metrics.expired {n} != {}", expired_ids.len()));
+                }
+                Ok(())
+            },
+        );
     }
 }

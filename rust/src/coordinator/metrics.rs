@@ -9,8 +9,32 @@ const BUCKETS: usize = 40;
 
 #[derive(Debug)]
 pub struct Metrics {
+    /// Requests *accepted* by the router (queued, degraded, or shed —
+    /// everything that will eventually get a [`Response`]).  At drain,
+    /// `submitted == completed + shed + expired + backend_failures`.
     pub submitted: AtomicU64,
+    /// Requests served to an `Ok` prediction (== latency-histogram
+    /// entries); failures are counted in their own counters below and
+    /// never here.
     pub completed: AtomicU64,
+    /// Admissions refused outright (`SubmitError::Overloaded`): the
+    /// `Reject` policy's refusals, or `Degrade` with every rung full.
+    /// The only admission outcome that does *not* produce a Response.
+    pub rejected: AtomicU64,
+    /// Accepted, then dropped at the door by the `Shed` policy
+    /// (answered `Error(Shed)`).
+    pub shed: AtomicU64,
+    /// Accepted onto a cheaper config's queue by the `Degrade`
+    /// policy's cost ladder.
+    pub degraded: AtomicU64,
+    /// Removed from a queue unserved because the queueing deadline
+    /// passed (answered `Error(Expired)`).
+    pub expired: AtomicU64,
+    /// Reached a worker whose backend forward failed (answered
+    /// `Error(Backend)`; excluded from the latency histogram — the
+    /// pre-PR-7 path recorded these as completions under a sentinel
+    /// prediction).
+    pub backend_failures: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     /// Weight panels resident in the shared plan cache (layers x
@@ -44,6 +68,11 @@ impl Metrics {
         Metrics {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            backend_failures: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_items: AtomicU64::new(0),
             panels_cached: AtomicU64::new(0),
@@ -125,7 +154,10 @@ impl Metrics {
         let n = self.completed.load(Ordering::Relaxed);
         format!(
             "completed {} reqs in {:.2}s  ({:.1} req/s)\n\
-             latency: mean {:.2} ms  p50 <= {:.2} ms  p99 <= {:.2} ms\n\
+             latency: mean {:.2} ms  p50 <= {:.2} ms  \
+             p99 <= {:.2} ms  p999 <= {:.2} ms\n\
+             admission: {} rejected, {} shed, {} degraded, \
+             {} expired, {} backend failures\n\
              batching: {} batches, mean size {:.1}\n\
              panel cache: {} weight panels, {:.2} MiB resident \
              (shared; {} hits / {} prepares / {} evictions)",
@@ -135,6 +167,12 @@ impl Metrics {
             self.mean_latency_us() / 1e3,
             self.percentile_us(50.0) as f64 / 1e3,
             self.percentile_us(99.0) as f64 / 1e3,
+            self.percentile_us(99.9) as f64 / 1e3,
+            self.rejected.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.degraded.load(Ordering::Relaxed),
+            self.expired.load(Ordering::Relaxed),
+            self.backend_failures.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.panels_cached.load(Ordering::Relaxed),
@@ -176,9 +214,42 @@ mod tests {
     fn empty_metrics_are_zero() {
         let m = Metrics::new();
         assert_eq!(m.percentile_us(99.0), 0);
+        assert_eq!(m.percentile_us(99.9), 0);
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.mean_batch_size(), 0.0);
         assert_eq!(m.panels_cached.load(Ordering::Relaxed), 0);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 0);
+        assert_eq!(m.backend_failures.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn p999_reads_the_tail_bucket() {
+        let m = Metrics::new();
+        // 500 fast requests and one 2-second straggler: p99 stays in
+        // the fast bucket (rank 496 of 501), p999 must surface the
+        // straggler's bucket (rank ceil(0.999 * 501) = 501)
+        for _ in 0..500 {
+            m.record_latency(Duration::from_micros(100));
+        }
+        m.record_latency(Duration::from_secs(2));
+        assert!(m.percentile_us(99.0) <= 256,
+                "p99 {}", m.percentile_us(99.0));
+        assert!(m.percentile_us(99.9) >= 2_000_000,
+                "p999 {}", m.percentile_us(99.9));
+    }
+
+    #[test]
+    fn admission_counters_and_summary() {
+        let m = Metrics::new();
+        m.rejected.fetch_add(3, Ordering::Relaxed);
+        m.shed.fetch_add(2, Ordering::Relaxed);
+        m.degraded.fetch_add(5, Ordering::Relaxed);
+        m.expired.fetch_add(1, Ordering::Relaxed);
+        m.backend_failures.fetch_add(4, Ordering::Relaxed);
+        let s = m.summary(Duration::from_secs(1));
+        assert!(s.contains("3 rejected, 2 shed, 5 degraded, \
+                            1 expired, 4 backend failures"), "{s}");
+        assert!(s.contains("p999 <="), "{s}");
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! * `eval`     — accuracy evaluation with backend selection + memoization
 //! * `explorer` — the two-pass topological exploration strategy (§4.2)
 //! * `batcher`/`server`/`router` — the inference serving runtime: request
-//!   routing, per-config dynamic batching, worker pools, metrics (the
-//!   vLLM-router-shaped part of the stack)
+//!   routing with deadline-aware admission and an overload policy
+//!   (reject / shed / degrade-to-cheaper-config), per-config dynamic
+//!   batching with expiry, worker pools, typed `Ok`/`Error` responses,
+//!   metrics (the vLLM-router-shaped part of the stack)
 //! * `plan_cache` — one shared `Arc<PreparedNet>` per configuration
 //!   (single-flight prepare, LRU-by-bytes eviction) serving every
 //!   engine worker and the evaluator

@@ -1,14 +1,100 @@
 //! Request router: the serving front door.  Maps a requested network
 //! configuration (the paper's "domain choice") to its queue, assigns
-//! request ids, applies admission control, and tracks submission metrics.
+//! request ids, stamps queueing deadlines, applies the overload policy
+//! under the batcher's one queue lock, and counts every admission
+//! outcome.
+//!
+//! The overload policies are the runtime half of the paper's
+//! quality/cost dial: `Reject` refuses, `Shed` answers `Error(Shed)`
+//! immediately, and `Degrade` re-routes the request to the nearest
+//! *cheaper* served configuration — ordered by a static ladder built
+//! from the `hw/` cost model's ranks — trading answer quality for
+//! admission capacity instead of queueing past the deadline.
 
-use super::batcher::{BatchQueue, Request, Response};
+use super::batcher::{Admitted, BatchQueue, FailureKind, Outcome,
+                     PushError, Request, Response};
 use super::metrics::Metrics;
+use crate::hw::datapath::{Datapath, ARRIA10, N_PE};
 use crate::nn::spec::ReprMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// What `Router::submit` does when the target queue is at its
+/// high-water mark.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Refuse the submission with `SubmitError::Overloaded` (the
+    /// pre-PR-7 behavior, now counted in `Metrics::rejected`).
+    #[default]
+    Reject,
+    /// Accept, then immediately drop the newest request with an
+    /// `Error(Shed)` reply: the client hears an answer for every
+    /// accepted request and load is shed at the door, bounding queue
+    /// delay for everything already admitted.
+    Shed,
+    /// Re-route to the nearest cheaper served config with queue room
+    /// (static hardware-cost ladder); refuse only when every rung is
+    /// full too.
+    Degrade,
+}
+
+impl OverloadPolicy {
+    pub fn parse(s: &str) -> Result<OverloadPolicy, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "reject" => Ok(OverloadPolicy::Reject),
+            "shed" => Ok(OverloadPolicy::Shed),
+            "degrade" => Ok(OverloadPolicy::Degrade),
+            other => Err(format!(
+                "unknown overload policy '{other}' \
+                 (expected reject | shed | degrade)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverloadPolicy::Reject => "reject",
+            OverloadPolicy::Shed => "shed",
+            OverloadPolicy::Degrade => "degrade",
+        }
+    }
+}
+
+/// Mean per-layer hardware cost of a configuration — the explorer's
+/// scalar FPGA objective (ALM/DSP utilization + power, see
+/// `hw::datapath::Datapath::explore_cost`), reused as the degrade
+/// ladder's rank so "cheaper" means the same thing at admission time
+/// as it does in design-space exploration.
+fn config_cost(map: &ReprMap) -> f64 {
+    let n = map.len().max(1) as f64;
+    map.kinds()
+        .iter()
+        .map(|k| Datapath::synthesize(k, N_PE).explore_cost(&ARRIA10))
+        .sum::<f64>()
+        / n
+}
+
+/// One degrade ladder per served config: the indices of strictly
+/// cheaper configs, nearest-cheaper first, so a degraded request loses
+/// as little quality as the overload requires.
+fn build_ladders(configs: &[ReprMap]) -> Vec<Vec<usize>> {
+    let costs: Vec<f64> = configs.iter().map(config_cost).collect();
+    costs
+        .iter()
+        .map(|&own| {
+            let mut cheaper: Vec<usize> = (0..configs.len())
+                .filter(|&j| costs[j] < own)
+                .collect();
+            // descending cost = closest quality first
+            cheaper.sort_by(|&a, &b| {
+                costs[b].partial_cmp(&costs[a]).unwrap()
+            });
+            cheaper
+        })
+        .collect()
+}
 
 pub struct Router {
     pub configs: Vec<ReprMap>,
@@ -17,6 +103,13 @@ pub struct Router {
     input_len: usize,
     queue: Arc<BatchQueue>,
     metrics: Arc<Metrics>,
+    policy: OverloadPolicy,
+    /// Applied to submissions that carry no deadline of their own
+    /// (`ServerOpts::deadline` / `[serve] deadline_ms`).
+    default_deadline: Option<Duration>,
+    /// `ladders[i]` = cheaper-config fallbacks for config `i`
+    /// (empty unless the policy is `Degrade`).
+    ladders: Vec<Vec<usize>>,
     next_id: AtomicU64,
 }
 
@@ -26,18 +119,33 @@ pub enum SubmitError {
     /// The image length does not match the served model's input
     /// shape (`h * w * c`).
     BadInput,
+    /// Admission refused under load: the target queue is at capacity
+    /// and the policy found no other placement.  Counted in
+    /// `Metrics::rejected`.
     Overloaded,
+    /// The server is draining for shutdown — not an overload signal
+    /// (the pre-PR-7 router reported `Overloaded` here).
+    ShuttingDown,
 }
 
 impl Router {
     pub fn new(configs: Vec<ReprMap>, input_len: usize,
-               queue: Arc<BatchQueue>, metrics: Arc<Metrics>)
+               queue: Arc<BatchQueue>, metrics: Arc<Metrics>,
+               policy: OverloadPolicy,
+               default_deadline: Option<Duration>)
                -> Router {
+        let ladders = match policy {
+            OverloadPolicy::Degrade => build_ladders(&configs),
+            _ => vec![Vec::new(); configs.len()],
+        };
         Router {
             configs,
             input_len,
             queue,
             metrics,
+            policy,
+            default_deadline,
+            ladders,
             next_id: AtomicU64::new(0),
         }
     }
@@ -46,10 +154,30 @@ impl Router {
         self.configs.iter().position(|c| c.name() == name)
     }
 
+    pub fn policy(&self) -> OverloadPolicy {
+        self.policy
+    }
+
+    /// The degrade fallbacks for `config_id` (empty unless the policy
+    /// is `Degrade`): strictly cheaper configs, nearest-cheaper first.
+    pub fn ladder(&self, config_id: usize) -> &[usize] {
+        &self.ladders[config_id]
+    }
+
     /// Submit one image for classification under configuration
-    /// `config_id`; the response arrives on `reply`.
+    /// `config_id`; the response arrives on `reply`.  `deadline` is a
+    /// relative *queueing* deadline (falls back to the server-wide
+    /// default): if the request is still queued when it elapses, the
+    /// batcher answers `Error(Expired)` instead of serving it stale.
+    ///
+    /// Every admission outcome is accounted: accepted submissions tick
+    /// `submitted` (plus `degraded`/`shed` for those placements — a
+    /// shed request is answered right here and still returns `Ok`),
+    /// and `Overloaded` refusals tick `rejected`.  Client errors
+    /// (`UnknownConfig`/`BadInput`) and `ShuttingDown` touch nothing.
     pub fn submit(&self, config_id: usize, image: Vec<f32>,
-                  reply: Sender<Response>) -> Result<u64, SubmitError> {
+                  deadline: Option<Duration>, reply: Sender<Response>)
+                  -> Result<u64, SubmitError> {
         if config_id >= self.configs.len() {
             return Err(SubmitError::UnknownConfig);
         }
@@ -57,19 +185,51 @@ impl Router {
             return Err(SubmitError::BadInput);
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let submitted = Instant::now();
+        let deadline = deadline
+            .or(self.default_deadline)
+            .map(|d| submitted + d);
         let req = Request {
             id,
             image,
             config_id,
-            submitted: Instant::now(),
+            submitted,
+            deadline,
             reply,
         };
-        match self.queue.push(req) {
-            Ok(()) => {
+        match self.queue.admit(req, &self.ladders[config_id]) {
+            Ok(Admitted::Queued) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 Ok(id)
             }
-            Err(_) => Err(SubmitError::Overloaded),
+            Ok(Admitted::Degraded(_)) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                Ok(id)
+            }
+            Err(PushError::Closed(_)) => Err(SubmitError::ShuttingDown),
+            Err(PushError::Full(req)) => match self.policy {
+                OverloadPolicy::Shed => {
+                    // accepted-then-dropped: the client gets a typed
+                    // answer now instead of an error or a stale result
+                    self.metrics
+                        .submitted
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        outcome: Outcome::Error(FailureKind::Shed),
+                        latency: req.submitted.elapsed(),
+                    });
+                    Ok(id)
+                }
+                _ => {
+                    self.metrics
+                        .rejected
+                        .fetch_add(1, Ordering::Relaxed);
+                    Err(SubmitError::Overloaded)
+                }
+            },
         }
     }
 
@@ -83,17 +243,26 @@ mod tests {
     use super::*;
     use crate::approx::arith::ArithKind;
     use std::sync::mpsc::channel;
-    use std::time::Duration;
 
-    fn mk_router(cap: usize) -> (Router, Arc<BatchQueue>) {
+    fn mk_router_with(cap: usize, policy: OverloadPolicy,
+                      deadline: Option<Duration>)
+                      -> (Router, Arc<BatchQueue>, Arc<Metrics>) {
         let configs = vec![
             ReprMap::uniform(ArithKind::Float32, 4),
             ReprMap::parse_n("FI(6,8)", 4).unwrap(),
         ];
+        let metrics = Arc::new(Metrics::new());
         let q = Arc::new(BatchQueue::new(configs.len(), 8,
-                                         Duration::from_millis(10), cap));
-        let r = Router::new(configs, 784, q.clone(),
-                            Arc::new(Metrics::new()));
+                                         Duration::from_millis(10),
+                                         cap, metrics.clone()));
+        let r = Router::new(configs, 784, q.clone(), metrics.clone(),
+                            policy, deadline);
+        (r, q, metrics)
+    }
+
+    fn mk_router(cap: usize) -> (Router, Arc<BatchQueue>) {
+        let (r, q, _) =
+            mk_router_with(cap, OverloadPolicy::Reject, None);
         (r, q)
     }
 
@@ -101,9 +270,9 @@ mod tests {
     fn routes_by_config() {
         let (r, q) = mk_router(100);
         let (tx, _rx) = channel();
-        r.submit(1, vec![0.0; 784], tx.clone()).unwrap();
-        r.submit(1, vec![0.0; 784], tx.clone()).unwrap();
-        r.submit(0, vec![0.0; 784], tx).unwrap();
+        r.submit(1, vec![0.0; 784], None, tx.clone()).unwrap();
+        r.submit(1, vec![0.0; 784], None, tx.clone()).unwrap();
+        r.submit(0, vec![0.0; 784], None, tx).unwrap();
         assert_eq!(q.depth(0), 1);
         assert_eq!(q.depth(1), 2);
     }
@@ -112,7 +281,7 @@ mod tests {
     fn unknown_config_rejected() {
         let (r, _) = mk_router(100);
         let (tx, _rx) = channel();
-        assert_eq!(r.submit(9, vec![0.0; 784], tx),
+        assert_eq!(r.submit(9, vec![0.0; 784], None, tx),
                    Err(SubmitError::UnknownConfig));
     }
 
@@ -120,18 +289,137 @@ mod tests {
     fn wrong_image_length_rejected() {
         let (r, q) = mk_router(100);
         let (tx, _rx) = channel();
-        assert_eq!(r.submit(0, vec![0.0; 100], tx),
+        assert_eq!(r.submit(0, vec![0.0; 100], None, tx),
                    Err(SubmitError::BadInput));
         assert_eq!(q.depth(0), 0, "rejected request must not enqueue");
     }
 
     #[test]
-    fn overload_rejected() {
-        let (r, _) = mk_router(1);
+    fn overload_rejected_and_counted() {
+        let (r, _, m) = mk_router_with(1, OverloadPolicy::Reject, None);
         let (tx, _rx) = channel();
-        r.submit(0, vec![0.0; 784], tx.clone()).unwrap();
-        assert_eq!(r.submit(0, vec![0.0; 784], tx),
+        r.submit(0, vec![0.0; 784], None, tx.clone()).unwrap();
+        assert_eq!(r.submit(0, vec![0.0; 784], None, tx.clone()),
                    Err(SubmitError::Overloaded));
+        assert_eq!(r.submit(0, vec![0.0; 784], None, tx),
+                   Err(SubmitError::Overloaded));
+        // rejected submissions are visible: one accepted, two refused
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 1);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 2);
+        // client errors are not admission refusals
+        let (tx2, _rx2) = channel();
+        let (r2, _, m2) =
+            mk_router_with(1, OverloadPolicy::Reject, None);
+        assert_eq!(r2.submit(9, vec![0.0; 784], None, tx2),
+                   Err(SubmitError::UnknownConfig));
+        assert_eq!(m2.rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn shutdown_is_not_overload() {
+        let (r, q, m) = mk_router_with(1, OverloadPolicy::Reject, None);
+        let (tx, _rx) = channel();
+        q.close();
+        assert_eq!(r.submit(0, vec![0.0; 784], None, tx),
+                   Err(SubmitError::ShuttingDown));
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 0,
+                   "drain refusals are not overload rejections");
+    }
+
+    #[test]
+    fn shed_policy_answers_at_the_door() {
+        let (r, _, m) = mk_router_with(1, OverloadPolicy::Shed, None);
+        let (tx, rx) = channel();
+        r.submit(0, vec![0.0; 784], None, tx.clone()).unwrap();
+        // queue full → shed: submit still succeeds, the reply channel
+        // carries the typed drop
+        r.submit(0, vec![0.0; 784], None, tx).unwrap();
+        let resp = rx.try_recv().expect("shed reply is immediate");
+        assert_eq!(resp.outcome, Outcome::Error(FailureKind::Shed));
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn degrade_policy_reroutes_down_the_ladder() {
+        let configs = vec![
+            ReprMap::uniform(ArithKind::Float32, 4), // expensive
+            ReprMap::parse_n("FI(6,8)", 4).unwrap(), // cheap
+        ];
+        let metrics = Arc::new(Metrics::new());
+        let q = Arc::new(BatchQueue::new(2, 8,
+                                         Duration::from_millis(10), 1,
+                                         metrics.clone()));
+        let r = Router::new(configs, 784, q.clone(), metrics.clone(),
+                            OverloadPolicy::Degrade, None);
+        let (tx, _rx) = channel();
+        r.submit(0, vec![0.0; 784], None, tx.clone()).unwrap();
+        // queue 0 full → lands on the cheaper config's queue
+        r.submit(0, vec![0.0; 784], None, tx.clone()).unwrap();
+        assert_eq!(q.depth(0), 1);
+        assert_eq!(q.depth(1), 1);
+        assert_eq!(metrics.degraded.load(Ordering::Relaxed), 1);
+        // both rungs full → refuse, and count it
+        assert_eq!(r.submit(0, vec![0.0; 784], None, tx),
+                   Err(SubmitError::Overloaded));
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn ladders_rank_by_hw_cost() {
+        let configs = vec![
+            ReprMap::uniform(ArithKind::Float32, 4),
+            ReprMap::parse_n("FI(6,8)", 4).unwrap(),
+            ReprMap::parse_n("binxnor", 4).unwrap(),
+        ];
+        let metrics = Arc::new(Metrics::new());
+        let q = Arc::new(BatchQueue::new(3, 8,
+                                         Duration::from_millis(10),
+                                         100, metrics.clone()));
+        let r = Router::new(configs, 784, q, metrics,
+                            OverloadPolicy::Degrade, None);
+        // float32 (DSP multipliers + FP adders) > FI(6,8) (narrow
+        // fixed) > binary XNOR (LUT popcount) in the hw cost model —
+        // the ladder walks nearest-cheaper first
+        assert_eq!(r.ladder(0), &[1, 2]);
+        assert_eq!(r.ladder(1), &[2]);
+        assert_eq!(r.ladder(2), &[] as &[usize]);
+    }
+
+    #[test]
+    fn reject_and_shed_have_empty_ladders() {
+        let (r, _, _) = mk_router_with(4, OverloadPolicy::Reject, None);
+        assert!(r.ladder(0).is_empty() && r.ladder(1).is_empty());
+        assert_eq!(r.policy(), OverloadPolicy::Reject);
+    }
+
+    #[test]
+    fn deadlines_default_and_override() {
+        let (r, q, _) = mk_router_with(
+            100,
+            OverloadPolicy::Reject,
+            Some(Duration::from_secs(3600)),
+        );
+        let (tx, _rx) = channel();
+        r.submit(0, vec![0.0; 784], None, tx.clone()).unwrap();
+        r.submit(0, vec![0.0; 784],
+                 Some(Duration::from_secs(7200)), tx).unwrap();
+        let (_, batch) = q.next_batch(&[true, true]).unwrap();
+        // close enough: both deadlines are set, and the per-request
+        // override lands later than the server-wide default
+        let d0 = batch[0].deadline.expect("default applied");
+        let d1 = batch[1].deadline.expect("override applied");
+        assert!(d1 > d0);
+    }
+
+    #[test]
+    fn no_deadline_by_default() {
+        let (r, q) = mk_router(100);
+        let (tx, _rx) = channel();
+        r.submit(0, vec![0.0; 784], None, tx).unwrap();
+        let (_, batch) = q.next_batch(&[true, true]).unwrap();
+        assert_eq!(batch[0].deadline, None);
     }
 
     #[test]
@@ -143,11 +431,23 @@ mod tests {
     }
 
     #[test]
+    fn overload_policy_parse_roundtrip() {
+        for p in [OverloadPolicy::Reject, OverloadPolicy::Shed,
+                  OverloadPolicy::Degrade] {
+            assert_eq!(OverloadPolicy::parse(p.name()), Ok(p));
+        }
+        assert_eq!(OverloadPolicy::parse(" Shed "),
+                   Ok(OverloadPolicy::Shed));
+        assert!(OverloadPolicy::parse("drop").is_err());
+        assert_eq!(OverloadPolicy::default(), OverloadPolicy::Reject);
+    }
+
+    #[test]
     fn ids_are_unique() {
         let (r, _) = mk_router(100);
         let (tx, _rx) = channel();
-        let a = r.submit(0, vec![0.0; 784], tx.clone()).unwrap();
-        let b = r.submit(0, vec![0.0; 784], tx).unwrap();
+        let a = r.submit(0, vec![0.0; 784], None, tx.clone()).unwrap();
+        let b = r.submit(0, vec![0.0; 784], None, tx).unwrap();
         assert_ne!(a, b);
     }
 }

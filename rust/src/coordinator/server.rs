@@ -14,15 +14,17 @@
 //! `workers x configs` (`rust/tests/plan_cache.rs` pins the
 //! invariance, `benches/serving_throughput.rs` measures it).
 
-use super::batcher::{BatchQueue, Request, Response};
+use super::batcher::{BatchQueue, FailureKind, Outcome, Request,
+                     Response};
 use super::metrics::Metrics;
 use super::plan_cache::PlanCache;
-use super::router::Router;
+use super::router::{OverloadPolicy, Router};
 use crate::nn::network::Model;
 use crate::nn::spec::{NetSpec, ReprMap};
 use crate::nn::tensor::Tensor;
 use crate::runtime::{execution_plan, ArtifactDir, ModelRunner};
 use anyhow::{bail, ensure, Context, Result};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -41,6 +43,18 @@ pub struct ServerOpts {
     /// byte cap on the shared plan cache's resident prepacked panels
     pub plan_cache_bytes: usize,
     pub use_pjrt: bool,
+    /// Admission behavior when a config's queue is past
+    /// `queue_capacity` (see [`OverloadPolicy`]).
+    pub overload: OverloadPolicy,
+    /// Server-wide default *queueing* deadline for submissions that do
+    /// not carry their own (`[serve] deadline_ms`); `None` = requests
+    /// wait as long as service takes.
+    pub deadline: Option<Duration>,
+    /// Test hook (hermetic backend-failure coverage): every engine
+    /// forward takes the backend-failure reply path instead of running
+    /// the model — exactly what a failed PJRT forward does, but
+    /// reachable without a PJRT runtime.  Never set outside tests.
+    pub inject_backend_failures: bool,
 }
 
 impl Default for ServerOpts {
@@ -62,6 +76,9 @@ impl Default for ServerOpts {
             // a stub build can never start the PJRT worker, so do not
             // plan for one unless the feature is compiled in
             use_pjrt: cfg!(feature = "pjrt"),
+            overload: OverloadPolicy::Reject,
+            deadline: None,
+            inject_backend_failures: false,
         }
     }
 }
@@ -98,6 +115,13 @@ impl Server {
     pub fn start_with_model(opts: ServerOpts, model: Arc<Model>,
                             art: Option<ArtifactDir>)
                             -> Result<Server> {
+        ensure!(
+            !opts.configs.is_empty(),
+            "ServerOpts::configs is empty: a server with no served \
+             configurations would reject every submit while its \
+             workers block forever on an all-empty mask; configure \
+             at least one ReprMap"
+        );
         for c in &opts.configs {
             ensure!(
                 c.len() == model.spec().len(),
@@ -115,12 +139,15 @@ impl Server {
             opts.max_batch,
             opts.max_wait,
             opts.queue_capacity,
+            metrics.clone(),
         ));
         let router = Arc::new(Router::new(
             opts.configs.clone(),
             model.spec().input_len(),
             queue.clone(),
             metrics.clone(),
+            opts.overload,
+            opts.deadline,
         ));
         let plan_cache = Arc::new(PlanCache::with_capacity(
             model.clone(),
@@ -166,9 +193,10 @@ impl Server {
                 let cfgs = opts.configs.clone();
                 let mask = engine_mask.clone();
                 let threads = opts.engine_gemm_threads;
+                let inject = opts.inject_backend_failures;
                 workers.push(std::thread::spawn(move || {
                     engine_worker(cache, cfgs, q, m, mask, threads,
-                                  in_shape);
+                                  in_shape, inject);
                 }));
             }
         }
@@ -216,7 +244,29 @@ fn respond(batch: Vec<Request>, preds: &[usize], metrics: &Metrics) {
     for (req, &pred) in batch.into_iter().zip(preds) {
         let latency = now.duration_since(req.submitted);
         metrics.record_latency(latency);
-        let _ = req.reply.send(Response { id: req.id, pred, latency });
+        let _ = req.reply.send(Response {
+            id: req.id,
+            outcome: Outcome::Ok(pred),
+            latency,
+        });
+    }
+}
+
+/// Reply `Error(Backend)` to a whole batch: counted in
+/// `backend_failures` and kept out of the latency histogram — a failed
+/// forward is not a completion.  (The pre-PR-7 path replied with the
+/// sentinel `pred = usize::MAX` through [`respond`], recording the
+/// failure as a served request and leaving the client unable to tell
+/// a crashed backend from a class index.)
+fn respond_failure(batch: Vec<Request>, metrics: &Metrics) {
+    let now = Instant::now();
+    for req in batch {
+        metrics.backend_failures.fetch_add(1, Ordering::Relaxed);
+        let _ = req.reply.send(Response {
+            id: req.id,
+            outcome: Outcome::Error(FailureKind::Backend),
+            latency: now.duration_since(req.submitted),
+        });
     }
 }
 
@@ -248,7 +298,7 @@ fn pjrt_worker(art: ArtifactDir, cache: Arc<PlanCache>,
             eprintln!("pjrt worker failed to start: {e:#}; \
                        serving its configs on the engine backend");
             engine_worker(cache, configs, queue, metrics, mask,
-                          engine_threads, in_shape);
+                          engine_threads, in_shape, false);
             return;
         }
     };
@@ -261,8 +311,7 @@ fn pjrt_worker(art: ArtifactDir, cache: Arc<PlanCache>,
             }
             Err(e) => {
                 eprintln!("pjrt forward failed: {e:#}");
-                let sentinels = vec![usize::MAX; batch.len()];
-                respond(batch, &sentinels, &metrics);
+                respond_failure(batch, &metrics);
             }
         }
     }
@@ -271,8 +320,15 @@ fn pjrt_worker(art: ArtifactDir, cache: Arc<PlanCache>,
 fn engine_worker(cache: Arc<PlanCache>, configs: Vec<ReprMap>,
                  queue: Arc<BatchQueue>, metrics: Arc<Metrics>,
                  mask: Vec<bool>, threads: usize,
-                 in_shape: [usize; 3]) {
+                 in_shape: [usize; 3], inject_failures: bool) {
     while let Some((ci, batch)) = queue.next_batch(&mask) {
+        if inject_failures {
+            // ServerOpts::inject_backend_failures — drive the exact
+            // failure path a crashed PJRT forward takes, end to end
+            // (batcher → worker → respond_failure → metrics → client)
+            respond_failure(batch, &metrics);
+            continue;
+        }
         // One shared Arc<PreparedNet> per config across the whole
         // pool: the first batch anywhere prepares it (single-flight),
         // every other worker's batches ride the same panels.  The Arc

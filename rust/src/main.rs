@@ -15,6 +15,7 @@ use lop::config::{ExploreFileConfig, ServeFileConfig, TomlDoc};
 use lop::coordinator::eval::Evaluator;
 use lop::coordinator::explorer::{explore, ExploreOpts, Family};
 use lop::coordinator::ranges::{format_table1, profile_ranges};
+use lop::coordinator::router::OverloadPolicy;
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::data::{synth, Dataset};
 use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
@@ -44,6 +45,7 @@ COMMANDS
             [--no-second-pass] [--trace] [--config-file F]  §4.2 DSE
   serve     [--requests 2000] [--rate 500] [--configs \"a;b\"]
             [--max-batch 16] [--max-wait-ms 2] [--engine-workers 2]
+            [--overload reject|shed|degrade] [--deadline-ms D]
             [--no-pjrt] [--config-file F] [--model M]  serving benchmark
   help                        this message
 
@@ -357,6 +359,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sopts.engine_workers = fc.engine_workers;
         sopts.plan_cache_bytes = fc.plan_cache_mb * 1024 * 1024;
         sopts.use_pjrt = fc.use_pjrt;
+        sopts.overload = fc.overload;
+        sopts.deadline = fc.deadline;
     }
     if let Some(m) = args.opt_str("model") {
         spec = NetSpec::preset_or_parse(m)
@@ -397,14 +401,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.switch("no-pjrt") {
         sopts.use_pjrt = false;
     }
+    if let Some(p) = args.opt_str("overload") {
+        sopts.overload = OverloadPolicy::parse(p)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(ms) = args.opt_str("deadline-ms") {
+        let ms: f64 = ms.parse().map_err(|_| {
+            anyhow::anyhow!("--deadline-ms wants a number, got '{ms}'")
+        })?;
+        anyhow::ensure!(ms > 0.0, "--deadline-ms must be positive");
+        sopts.deadline =
+            Some(Duration::from_micros((ms * 1e3) as u64));
+    }
     let requests = args.usize("requests", 2_000);
     let rate = args.f64("rate", 500.0); // req/s, open loop
 
     println!("serving benchmark: {requests} requests at {rate} req/s \
               over configs {:?}",
              sopts.configs.iter().map(|c| c.name()).collect::<Vec<_>>());
-    println!("batching: max_batch {}, max_wait {:?}, pjrt {}",
-             sopts.max_batch, sopts.max_wait, sopts.use_pjrt);
+    println!("batching: max_batch {}, max_wait {:?}, pjrt {}, \
+              overload {}, deadline {:?}",
+             sopts.max_batch, sopts.max_wait, sopts.use_pjrt,
+             sopts.overload.name(), sopts.deadline);
 
     anyhow::ensure!(
         spec.input_len() == 784,
@@ -449,22 +467,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map(|&p| p as f32 / 255.0)
             .collect();
         let cfg = rng.below(n_cfg as u64) as usize;
-        if server.router.submit(cfg, img, tx.clone()).is_err() {
+        // per-request deadlines default to --deadline-ms via the router
+        if server.router.submit(cfg, img, None, tx.clone()).is_err() {
             rejected += 1;
         }
     }
     drop(tx);
 
-    // collect responses (ids are sequential == submission order)
+    // Collect one response per accepted request (ids are sequential ==
+    // submission order).  Every admitted request answers, even under
+    // shed/expire — only synchronous rejections reply with nothing.
     let mut correct = 0usize;
+    let mut served = 0usize;
     let mut got = 0usize;
     while got + rejected < requests {
         match rx.recv_timeout(Duration::from_secs(30)) {
             Ok(resp) => {
                 got += 1;
-                let lbl = labels[(resp.id as usize) % 256] as usize;
-                if resp.pred == lbl {
-                    correct += 1;
+                if let Some(pred) = resp.pred() {
+                    served += 1;
+                    let lbl =
+                        labels[(resp.id as usize) % 256] as usize;
+                    if pred == lbl {
+                        correct += 1;
+                    }
                 }
             }
             Err(_) => break,
@@ -479,12 +505,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
               {} evictions, {:.2} MiB panels resident)",
              cache.prepares, n_cfg, cache.hits, cache.evictions,
              cache.resident_bytes as f64 / (1024.0 * 1024.0));
-    println!("completed {got} (rejected {rejected}) in {:.2}s — \
-              offered {rate} req/s, served {:.1} req/s",
+    println!("served {served} of {got} answered (rejected {rejected}) \
+              in {:.2}s — offered {rate} req/s, served {:.1} req/s",
              wall.as_secs_f64(),
-             got as f64 / wall.as_secs_f64().max(1e-9));
+             served as f64 / wall.as_secs_f64().max(1e-9));
     println!("stream accuracy {:.3}",
-             correct as f64 / got.max(1) as f64);
+             correct as f64 / served.max(1) as f64);
     println!("{}", metrics.summary(wall));
     Ok(())
 }

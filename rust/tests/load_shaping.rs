@@ -1,0 +1,238 @@
+//! Load-shaping integration tests over a real `Server` worker pool —
+//! hermetic (synthetic weights, engine backend, no artifacts): typed
+//! failure outcomes, admission accounting, overload policies and
+//! queueing deadlines, end to end.
+//!
+//! The overload tests hold the queue open deterministically instead of
+//! racing the worker: with `max_batch = 2`, `max_wait = 5s` and one
+//! queued request, the batcher is not ready (length 1 < 2, release is
+//! seconds away), so the queue stays at its high-water mark until
+//! `shutdown()` flushes the partial batch.
+
+use lop::coordinator::batcher::{FailureKind, Outcome};
+use lop::coordinator::router::{OverloadPolicy, SubmitError};
+use lop::coordinator::server::{Server, ServerOpts};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn small_spec() -> NetSpec {
+    NetSpec::parse("28x28x1: dense(8)+relu | dense(10)").unwrap()
+}
+
+fn cfg(spec: &NetSpec, s: &str) -> ReprMap {
+    ReprMap::parse_for(spec, s).unwrap()
+}
+
+/// `hold = true` parks one request in the queue for seconds (see the
+/// module docs) so capacity-1 overflow behavior is race-free.
+fn serve_opts(configs: Vec<ReprMap>, policy: OverloadPolicy,
+              capacity: usize, hold: bool,
+              deadline: Option<Duration>) -> ServerOpts {
+    ServerOpts {
+        configs,
+        max_batch: if hold { 2 } else { 4 },
+        max_wait: if hold {
+            Duration::from_secs(5)
+        } else {
+            Duration::from_millis(1)
+        },
+        queue_capacity: capacity,
+        engine_workers: 1,
+        engine_gemm_threads: 1,
+        use_pjrt: false, // hermetic: engine backend only
+        overload: policy,
+        deadline,
+        ..ServerOpts::default()
+    }
+}
+
+fn start(opts: ServerOpts, seed: u64) -> Server {
+    let spec = small_spec();
+    let model = Arc::new(Model::synthetic(spec, seed));
+    Server::start_with_model(opts, model, None).unwrap()
+}
+
+fn img() -> Vec<f32> {
+    vec![0.1; 784]
+}
+
+#[test]
+fn empty_configs_is_a_startup_error() {
+    let model = Arc::new(Model::synthetic(small_spec(), 3));
+    let err = Server::start_with_model(
+        ServerOpts { configs: vec![], use_pjrt: false,
+                     ..ServerOpts::default() },
+        model,
+        None,
+    )
+    .err()
+    .expect("a server with nothing to serve must not start");
+    assert!(format!("{err:#}").contains("configs is empty"),
+            "{err:#}");
+}
+
+#[test]
+fn submit_after_shutdown_is_shutting_down_not_overload() {
+    let spec = small_spec();
+    let opts = serve_opts(vec![cfg(&spec, "FI(6,8)")],
+                          OverloadPolicy::Reject, 64, false, None);
+    let server = start(opts, 5);
+    let router = server.router.clone();
+    let metrics = server.metrics.clone();
+    server.shutdown().unwrap();
+    let (tx, _rx) = channel();
+    assert_eq!(router.submit(0, img(), None, tx),
+               Err(SubmitError::ShuttingDown));
+    assert_eq!(metrics.rejected.load(Ordering::Relaxed), 0,
+               "drain refusals must not count as overload");
+}
+
+#[test]
+fn backend_failures_are_typed_counted_and_excluded_from_latency() {
+    let spec = small_spec();
+    let mut opts = serve_opts(vec![cfg(&spec, "FI(6,8)")],
+                              OverloadPolicy::Reject, 64, false, None);
+    opts.inject_backend_failures = true;
+    let server = start(opts, 7);
+    let (tx, rx) = channel();
+    for _ in 0..5 {
+        server.router.submit(0, img(), None, tx.clone()).unwrap();
+    }
+    drop(tx);
+    for _ in 0..5 {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r.outcome, Outcome::Error(FailureKind::Backend));
+        assert_eq!(r.pred(), None);
+        assert!(!r.is_ok());
+    }
+    let m = &server.metrics;
+    assert_eq!(m.backend_failures.load(Ordering::Relaxed), 5);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 0,
+               "failures must not count as completions");
+    assert_eq!(m.percentile_us(99.0), 0,
+               "failures must stay out of the latency buckets");
+    assert_eq!(m.mean_latency_us(), 0.0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn reject_policy_counts_every_refusal() {
+    let spec = small_spec();
+    let server = start(serve_opts(vec![cfg(&spec, "FI(6,8)")],
+                                  OverloadPolicy::Reject, 1, true,
+                                  None),
+                       11);
+    let (tx, rx) = channel();
+    server.router.submit(0, img(), None, tx.clone()).unwrap();
+    assert_eq!(server.router.submit(0, img(), None, tx.clone()),
+               Err(SubmitError::Overloaded));
+    assert_eq!(server.router.submit(0, img(), None, tx.clone()),
+               Err(SubmitError::Overloaded));
+    drop(tx);
+    let metrics = server.metrics.clone();
+    server.shutdown().unwrap(); // flushes the held partial batch
+    let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(r.is_ok());
+    assert_eq!(metrics.submitted.load(Ordering::Relaxed), 1,
+               "submitted counts accepted admissions only");
+    assert_eq!(metrics.rejected.load(Ordering::Relaxed), 2);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn shed_policy_drops_newest_with_a_typed_answer() {
+    let spec = small_spec();
+    let server = start(serve_opts(vec![cfg(&spec, "FI(6,8)")],
+                                  OverloadPolicy::Shed, 1, true, None),
+                       13);
+    let (tx, rx) = channel();
+    for _ in 0..4 {
+        // all four are accepted: one queued, three shed at the door
+        server.router.submit(0, img(), None, tx.clone()).unwrap();
+    }
+    drop(tx);
+    for _ in 0..3 {
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r.outcome, Outcome::Error(FailureKind::Shed));
+    }
+    let metrics = server.metrics.clone();
+    server.shutdown().unwrap();
+    let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(r.is_ok(), "the queued request is served on drain");
+    let m = &metrics;
+    assert_eq!(m.shed.load(Ordering::Relaxed), 3);
+    assert_eq!(m.expired.load(Ordering::Relaxed), 0);
+    // the accounting identity: every accepted request resolves once
+    assert_eq!(
+        m.submitted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed)
+            + m.shed.load(Ordering::Relaxed)
+            + m.expired.load(Ordering::Relaxed)
+            + m.backend_failures.load(Ordering::Relaxed)
+    );
+}
+
+#[test]
+fn degrade_policy_reroutes_to_the_cheaper_config() {
+    let spec = small_spec();
+    // FL(4,9) (float-lattice PEs) sits above binxnor (LUT popcount)
+    // on the hw-cost ladder
+    let configs =
+        vec![cfg(&spec, "FL(4,9)"), cfg(&spec, "binxnor")];
+    let server = start(serve_opts(configs, OverloadPolicy::Degrade, 1,
+                                  true, None),
+                       17);
+    assert_eq!(server.router.ladder(0), &[1]);
+    let (tx, rx) = channel();
+    server.router.submit(0, img(), None, tx.clone()).unwrap();
+    // queue 0 full → re-routed to binxnor's queue, still accepted
+    server.router.submit(0, img(), None, tx.clone()).unwrap();
+    // every rung full → refused
+    assert_eq!(server.router.submit(0, img(), None, tx.clone()),
+               Err(SubmitError::Overloaded));
+    drop(tx);
+    let metrics = server.metrics.clone();
+    server.shutdown().unwrap();
+    for _ in 0..2 {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(r.is_ok(), "degraded requests are served, not dropped");
+    }
+    assert_eq!(metrics.submitted.load(Ordering::Relaxed), 2);
+    assert_eq!(metrics.degraded.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn queueing_deadlines_expire_and_per_request_overrides_win() {
+    let spec = small_spec();
+    // a 1ns server-wide default: every defaulted request has expired
+    // by the time the batcher first sees it
+    let mut opts = serve_opts(vec![cfg(&spec, "FI(6,8)")],
+                              OverloadPolicy::Reject, 64, false,
+                              Some(Duration::from_nanos(1)));
+    opts.max_batch = 1; // release immediately once admitted
+    let server = start(opts, 19);
+    let (tx, rx) = channel();
+    server.router.submit(0, img(), None, tx.clone()).unwrap();
+    let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!(r.outcome, Outcome::Error(FailureKind::Expired));
+    assert_eq!(r.pred(), None);
+    // a generous per-request deadline overrides the server default
+    server
+        .router
+        .submit(0, img(), Some(Duration::from_secs(3600)), tx.clone())
+        .unwrap();
+    drop(tx);
+    let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(r.is_ok(), "a live deadline must not expire: {:?}",
+            r.outcome);
+    let m = &server.metrics;
+    assert_eq!(m.expired.load(Ordering::Relaxed), 1);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    server.shutdown().unwrap();
+}

@@ -58,14 +58,15 @@ fn drive(server: &Server, n: usize, n_cfg: usize, input_len: usize) {
             .iter()
             .map(|&p| p as f32 / 255.0)
             .collect();
-        server.router.submit(i % n_cfg, img, tx.clone()).unwrap();
+        server.router.submit(i % n_cfg, img, None, tx.clone()).unwrap();
     }
     drop(tx);
     for _ in 0..n {
         let r = rx
             .recv_timeout(Duration::from_secs(120))
             .expect("response stream ended early");
-        assert!(r.pred < 10, "prediction {} out of range", r.pred);
+        let pred = r.pred().expect("serving failed");
+        assert!(pred < 10, "prediction {pred} out of range");
     }
 }
 
@@ -79,6 +80,7 @@ fn opts(configs: Vec<ReprMap>, workers: usize) -> ServerOpts {
         engine_gemm_threads: 1,
         plan_cache_bytes: 512 * 1024 * 1024,
         use_pjrt: false, // hermetic: engine backend only
+        ..ServerOpts::default()
     }
 }
 
@@ -125,13 +127,13 @@ fn two_conv_net_serves_and_matches_direct_inference() {
             .iter()
             .map(|&p| p as f32 / 255.0)
             .collect();
-        server.router.submit(0, img, tx.clone()).unwrap();
+        server.router.submit(0, img, None, tx.clone()).unwrap();
     }
     drop(tx);
     let mut preds = vec![usize::MAX; 8];
     for _ in 0..8 {
         let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
-        preds[r.id as usize] = r.pred;
+        preds[r.id as usize] = r.pred().expect("serving failed");
     }
     server.shutdown().unwrap();
 
@@ -176,7 +178,7 @@ fn router_rejects_wrong_sized_images_for_the_spec() {
         Server::start_with_model(opts(vec![cfg], 1), model, None)
             .unwrap();
     let (tx, _rx) = channel();
-    assert!(server.router.submit(0, vec![0.0; 100], tx).is_err(),
+    assert!(server.router.submit(0, vec![0.0; 100], None, tx).is_err(),
             "a 100-float image cannot feed a 784-input spec");
     server.shutdown().unwrap();
 }

@@ -162,6 +162,7 @@ fn serve_burst(model: &Arc<Model>, workers: usize) -> (u64, usize) {
             engine_gemm_threads: 1,
             plan_cache_bytes: 512 * 1024 * 1024,
             use_pjrt: false, // hermetic: no artifacts in tier-1
+            ..ServerOpts::default()
         },
         model.clone(),
         None,
@@ -176,7 +177,7 @@ fn serve_burst(model: &Arc<Model>, workers: usize) -> (u64, usize) {
             .iter()
             .map(|&p| p as f32 / 255.0)
             .collect();
-        server.router.submit(i % n_cfg, img, tx.clone()).unwrap();
+        server.router.submit(i % n_cfg, img, None, tx.clone()).unwrap();
     }
     drop(tx);
     for _ in 0..n {

@@ -36,6 +36,7 @@ fn opts(configs: Vec<ReprMap>, use_pjrt: bool) -> ServerOpts {
         engine_gemm_threads: 1,
         plan_cache_bytes: 512 * 1024 * 1024,
         use_pjrt,
+        ..ServerOpts::default()
     }
 }
 
@@ -62,13 +63,13 @@ fn pjrt_backend_serves_correct_predictions() {
     let server = Server::start(opts(vec![c.clone()], true)).unwrap();
     let (tx, rx) = channel();
     for img in &imgs {
-        server.router.submit(0, img.clone(), tx.clone()).unwrap();
+        server.router.submit(0, img.clone(), None, tx.clone()).unwrap();
     }
     drop(tx);
     let mut preds = vec![usize::MAX; imgs.len()];
     for _ in 0..imgs.len() {
         let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
-        preds[r.id as usize] = r.pred;
+        preds[r.id as usize] = r.pred().expect("serving failed");
     }
     server.shutdown().unwrap();
 
@@ -90,13 +91,13 @@ fn engine_backend_serves_approx_configs() {
         Server::start(opts(vec![cfg("H(6,8,12)")], true)).unwrap();
     let (tx, rx) = channel();
     for img in &imgs {
-        server.router.submit(0, img.clone(), tx.clone()).unwrap();
+        server.router.submit(0, img.clone(), None, tx.clone()).unwrap();
     }
     drop(tx);
     let mut correct = 0;
     for _ in 0..imgs.len() {
         let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
-        if r.pred == labels[r.id as usize] {
+        if r.pred() == Some(labels[r.id as usize]) {
             correct += 1;
         }
     }
@@ -115,13 +116,13 @@ fn mixed_backends_share_one_server() {
     let server = Server::start(opts(configs, true)).unwrap();
     let (tx, rx) = channel();
     for (i, img) in imgs.iter().enumerate() {
-        server.router.submit(i % 2, img.clone(), tx.clone()).unwrap();
+        server.router.submit(i % 2, img.clone(), None, tx.clone()).unwrap();
     }
     drop(tx);
     let mut got = 0;
     for _ in 0..imgs.len() {
         let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
-        assert!(r.pred < 10);
+        assert!(r.pred().expect("serving failed") < 10);
         got += 1;
     }
     assert_eq!(got, imgs.len());
@@ -137,7 +138,7 @@ fn no_pjrt_falls_back_to_engine_everywhere() {
     let server = Server::start(opts(vec![c.clone()], false)).unwrap();
     let (tx, rx) = channel();
     for img in &imgs {
-        server.router.submit(0, img.clone(), tx.clone()).unwrap();
+        server.router.submit(0, img.clone(), None, tx.clone()).unwrap();
     }
     drop(tx);
     let net = model.prepare(&c);
@@ -147,7 +148,8 @@ fn no_pjrt_falls_back_to_engine_everywhere() {
             vec![1, 28, 28, 1],
             imgs[r.id as usize].clone(),
         );
-        assert_eq!(r.pred, net.predict(&t, 1)[0]);
+        assert_eq!(r.pred().expect("serving failed"),
+                   net.predict(&t, 1)[0]);
     }
     server.shutdown().unwrap();
 }
@@ -163,7 +165,7 @@ fn warm_start_skips_reprepare() {
     // cold burst: the first batch pays quantization + prepacking once
     let (tx, rx) = channel();
     for img in &imgs[..4] {
-        server.router.submit(0, img.clone(), tx.clone()).unwrap();
+        server.router.submit(0, img.clone(), None, tx.clone()).unwrap();
     }
     for _ in 0..4 {
         rx.recv_timeout(Duration::from_secs(120)).unwrap();
@@ -175,7 +177,7 @@ fn warm_start_skips_reprepare() {
     // zero weight-side packing anywhere in the process
     let packs_before = weight_pack_count_global();
     for img in &imgs[4..] {
-        server.router.submit(0, img.clone(), tx.clone()).unwrap();
+        server.router.submit(0, img.clone(), None, tx.clone()).unwrap();
     }
     drop(tx);
     for _ in 0..4 {
