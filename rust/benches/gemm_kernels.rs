@@ -7,11 +7,18 @@
 //! * the same kernel on prepacked weight panels
 //!   (`GemmPlan::run_prepacked` — what `PreparedNet::forward` runs
 //!   after `prepare`), and
-//! * the pre-tiling `reference` kernel (the oracle),
+//! * the pre-tiling `reference` kernel (the oracle), and
+//! * the prepacked kernel with a **fused bias+ReLU epilogue**
+//!   (`run_prepacked_with`) vs the same GEMM followed by the two
+//!   standalone `vecmath` passes — the `dense+relu` layer both ways
+//!   (the §Perf iteration-11 win: the epilogue touches each output
+//!   tile while it is still cache-resident),
 //!
-//! reporting M MAC/s, the packed : reference speedup, and the
+//! reporting M MAC/s, the packed : reference speedup, the
 //! prepacked : per-call-repack speedup (the §Perf iteration-7 win; it
-//! is largest at batch 1, where weight packing dominates).
+//! is largest at batch 1, where weight packing dominates), and the
+//! fused : unfused epilogue speedup (`fused_speedup` in the JSON —
+//! CI's bench gate requires it present and positive).
 //!
 //! The ISA axis (§Perf iteration 9): with `LOP_FORCE_ISA` set, only
 //! that tier is benched (kernels are pinned process-wide anyway);
@@ -24,7 +31,8 @@
 
 use lop::approx::arith::ArithKind;
 use lop::nn::gemm::reference::gemm_reference;
-use lop::nn::gemm::{isa, GemmPlan, Isa};
+use lop::nn::gemm::{isa, Epilogue, GemmPlan, Isa};
+use lop::nn::vecmath;
 use lop::util::bench::{bench, header, write_bench_json};
 use lop::util::prng::Rng;
 
@@ -37,6 +45,8 @@ struct Row {
     packed_ns: f64,
     prepacked_ns: f64,
     reference_ns: f64,
+    fused_ns: f64,
+    unfused_ns: f64,
     mmacs_packed: f64,
     mmacs_prepacked: f64,
     mmacs_reference: f64,
@@ -103,6 +113,35 @@ fn run_shape(label: &str, tier: Isa, m: usize, k: usize, n: usize,
                 std::hint::black_box(&out);
             },
         );
+        // the fused-epilogue series: bias + ReLU applied per
+        // cache-resident output tile vs as two standalone vecmath
+        // passes over the finished (cold again) output — the
+        // `dense+relu` layer both ways
+        let bias: Vec<f32> =
+            (0..n).map(|j| ((j % 7) as f32 - 3.0) * 0.05).collect();
+        let ep = Epilogue::BiasRelu { bias: &bias };
+        let rf = bench(
+            &format!("{ks}@{tier} fused bias+relu (threads={threads})"),
+            1,
+            iters,
+            || {
+                plan.run_prepacked_with(&x, m, &mut out, *threads,
+                                        &ep);
+                std::hint::black_box(&out);
+            },
+        );
+        let ru = bench(
+            &format!("{ks}@{tier} unfused bias+relu \
+                      (threads={threads})"),
+            1,
+            iters,
+            || {
+                plan.run_prepacked(&x, m, &mut out, *threads);
+                vecmath::add_bias_in_place(&mut out, &bias);
+                vecmath::relu_in_place(&mut out);
+                std::hint::black_box(&out);
+            },
+        );
         let mm_p = macs / (rp.mean_ns() / 1e9) / 1e6;
         let mm_q = macs / (rq.mean_ns() / 1e9) / 1e6;
         let mm_r = macs / (rr.mean_ns() / 1e9) / 1e6;
@@ -113,6 +152,9 @@ fn run_shape(label: &str, tier: Isa, m: usize, k: usize, n: usize,
         println!("{}  -> {:.0} M MAC/s  (packed {:.2}x)",
                  rr.summary(), mm_r,
                  rr.mean_ns() / rp.mean_ns().max(1.0));
+        println!("{}  (fused vs unfused {:.2}x)",
+                 rf.summary(),
+                 ru.mean_ns() / rf.mean_ns().max(1.0));
         rows.push(Row {
             shape: label.to_string(),
             kind: ks.to_string(),
@@ -122,6 +164,8 @@ fn run_shape(label: &str, tier: Isa, m: usize, k: usize, n: usize,
             packed_ns: rp.mean_ns(),
             prepacked_ns: rq.mean_ns(),
             reference_ns: rr.mean_ns(),
+            fused_ns: rf.mean_ns(),
+            unfused_ns: ru.mean_ns(),
             mmacs_packed: mm_p,
             mmacs_prepacked: mm_q,
             mmacs_reference: mm_r,
@@ -139,8 +183,9 @@ fn write_json(rows: &[Row]) {
                  \"packed_mean_ns\": {:.0}, \"prepacked_mean_ns\": \
                  {:.0}, \"reference_mean_ns\": {:.0}, \
                  \"packed_mmacs\": {:.1}, \"prepacked_mmacs\": {:.1}, \
-                 \"reference_mmacs\": {:.1}, \"speedup\": {:.3}, \
-                 \"prepack_speedup\": {:.3}",
+                 \"reference_mmacs\": {:.1}, \"fused_mean_ns\": {:.0}, \
+                 \"unfused_mean_ns\": {:.0}, \"speedup\": {:.3}, \
+                 \"prepack_speedup\": {:.3}, \"fused_speedup\": {:.3}",
                 r.shape,
                 r.kind,
                 r.isa,
@@ -152,8 +197,11 @@ fn write_json(rows: &[Row]) {
                 r.mmacs_packed,
                 r.mmacs_prepacked,
                 r.mmacs_reference,
+                r.fused_ns,
+                r.unfused_ns,
                 r.reference_ns / r.packed_ns.max(1.0),
-                r.packed_ns / r.prepacked_ns.max(1.0)
+                r.packed_ns / r.prepacked_ns.max(1.0),
+                r.unfused_ns / r.fused_ns.max(1.0)
             )
         })
         .collect();

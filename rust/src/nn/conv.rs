@@ -7,7 +7,7 @@
 //! convolution onto the same packed, tiled kernels every other GEMM in
 //! the engine runs on (`nn::gemm::GemmPlan`).
 
-use super::gemm::GemmPlan;
+use super::gemm::{Epilogue, GemmPlan};
 use super::tensor::Tensor;
 
 /// Convolution as im2col + packed GEMM: `x` is [B,H,W,C], `w2` the
@@ -19,14 +19,23 @@ use super::tensor::Tensor;
 /// conditioned exactly once, at `prepare`.
 pub fn conv2d(plan: &GemmPlan, x: &Tensor, w2: &Tensor, kh: usize,
               kw: usize, pad: usize, threads: usize) -> Tensor {
+    conv2d_with(plan, x, w2, kh, kw, pad, &Epilogue::None, threads)
+}
+
+/// [`conv2d`] with a fused [`Epilogue`] applied per cache-resident
+/// output tile (per-channel bias indexed by `cout`, ReLU, requantize
+/// for the consumer layer) — the model forward loop's conv path.
+pub fn conv2d_with(plan: &GemmPlan, x: &Tensor, w2: &Tensor, kh: usize,
+                   kw: usize, pad: usize, ep: &Epilogue,
+                   threads: usize) -> Tensor {
     let cols = im2col(x, kh, kw, pad);
     let (m, k) = (cols.shape[0], cols.shape[1]);
     assert_eq!(w2.ndim(), 2, "conv weights must be [kh*kw*C, cout]");
     assert_eq!(w2.shape[0], k, "conv weight rows != patch length");
     let n = w2.shape[1];
     let mut out = Tensor::zeros(vec![m, n]);
-    plan.run_cached(&cols.data, &w2.data, m, k, n, &mut out.data,
-                    threads);
+    plan.run_cached_with(&cols.data, &w2.data, m, k, n, &mut out.data,
+                         threads, ep);
     out
 }
 

@@ -46,6 +46,7 @@
 use super::isa::Isa;
 use super::micro::MicroArith;
 use super::pack::{pack_a_bits, pack_a_block, pack_b_bits, pack_b_block};
+use crate::approx::arith::ArithKind;
 use std::any::Any;
 
 /// Row-block target: the A sub-block (~MC x KC) an inner sweep works
@@ -100,6 +101,113 @@ pub fn weight_fingerprint(w: &[f32]) -> u64 {
     h
 }
 
+/// Post-GEMM work fused into the blocked driver: applied to each
+/// finished output row segment immediately after its k reduction
+/// completes — while the segment is still cache-resident — instead of
+/// as separate full passes over the output tensor afterwards.
+///
+/// The bias reference is borrowed (one bias vector per layer, length
+/// `n`); [`Epilogue::BiasReluQuant`] additionally snaps the activation
+/// onto the *consumer* layer's representation lattice, so the next
+/// layer's pack step receives pre-conditioned data.
+///
+/// Bit-identity contract: per element, [`Epilogue::apply_row`]
+/// performs exactly the operations of the separate passes
+/// (`nn::vecmath::add_bias_in_place`, `nn::vecmath::relu_in_place`,
+/// `ArithKind::quantize`) in the same order, so a fused run equals
+/// separate-passes-over-the-same-GEMM-output bit for bit — for every
+/// provider, FMA or not (pinned by `tests/epilogue_differential.rs`).
+pub enum Epilogue<'a> {
+    /// Plain GEMM output, no post-work.  `run` with this epilogue is
+    /// byte-for-byte the pre-epilogue behavior.
+    None,
+    /// `out[r][j] += bias[j]`.
+    Bias { bias: &'a [f32] },
+    /// `out[r][j] = relu(out[r][j] + bias[j])`.
+    BiasRelu { bias: &'a [f32] },
+    /// `out[r][j] = quant(relu(out[r][j] + bias[j]))` — requantized in
+    /// the consumer layer's representation.
+    BiasReluQuant { bias: &'a [f32], quant: ArithKind },
+}
+
+impl Epilogue<'_> {
+    /// Whether this is [`Epilogue::None`] (no post-GEMM work).
+    pub fn is_none(&self) -> bool {
+        matches!(self, Epilogue::None)
+    }
+
+    /// The bias vector, when this epilogue carries one.
+    pub fn bias(&self) -> Option<&[f32]> {
+        match self {
+            Epilogue::None => None,
+            Epilogue::Bias { bias }
+            | Epilogue::BiasRelu { bias }
+            | Epilogue::BiasReluQuant { bias, .. } => Some(bias),
+        }
+    }
+
+    /// Assert the bias vector covers all `n` output columns
+    /// (`GemmPlan` calls this once per entry, before any tile work).
+    pub fn validate(&self, n: usize) {
+        if let Some(b) = self.bias() {
+            assert_eq!(
+                b.len(), n,
+                "epilogue bias has {} entries for {n} output columns",
+                b.len()
+            );
+        }
+    }
+
+    /// Apply this epilogue to one finished output row segment whose
+    /// first element is output column `col0`.
+    ///
+    /// The relu is the *branch* form (`if v < 0.0 { 0.0 }`), not
+    /// `max`: the branch keeps `-0.0` (as the standalone relu pass
+    /// always did) where `max(-0.0, 0.0)` would return `+0.0` — the
+    /// SIMD fast path in `super::simd` replicates the branch semantics
+    /// with a compare + andnot for the same reason.
+    #[inline]
+    pub fn apply_row(&self, row: &mut [f32], col0: usize) {
+        match self {
+            Epilogue::None => {}
+            Epilogue::Bias { bias } => {
+                for (v, b) in row.iter_mut().zip(&bias[col0..]) {
+                    *v += *b;
+                }
+            }
+            Epilogue::BiasRelu { bias } => {
+                for (v, b) in row.iter_mut().zip(&bias[col0..]) {
+                    *v += *b;
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            Epilogue::BiasReluQuant { bias, quant } => {
+                for (v, b) in row.iter_mut().zip(&bias[col0..]) {
+                    *v += *b;
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                    *v = quant.quantize(*v);
+                }
+            }
+        }
+    }
+}
+
+/// The signature of an epilogue row application: `(epilogue, row
+/// segment, first output column)`.  Like [`MicroFn`], a
+/// `BlockedKernel` binds one of these at construction — the portable
+/// [`epilogue_scalar`] by default, the AVX2 fast path from
+/// `super::simd` for the SIMD tiers.
+pub type EpilogueFn = fn(&Epilogue, &mut [f32], usize);
+
+/// The portable [`EpilogueFn`]: scalar [`Epilogue::apply_row`].
+pub fn epilogue_scalar(ep: &Epilogue, row: &mut [f32], col0: usize) {
+    ep.apply_row(row, col0);
+}
+
 /// The signature of a blocked microkernel step: `(arith, A panel
 /// slice, B panel slice, kc, accumulator tile at stride)`.  The
 /// scalar [`micro`] and the `super::simd` SIMD kernels all match it,
@@ -109,9 +217,12 @@ pub type MicroFn<A> = fn(&A, &[<A as MicroArith>::Elem],
                          &mut [<A as MicroArith>::Acc], usize);
 
 /// The signature of a binary word-panel drive: `(A word panels,
-/// B word panels, row0, output chunk, words, tail_mask, k, n)`.
+/// B word panels, row0, output chunk, words, tail_mask, k, n,
+/// epilogue)`.  The binary drive applies its epilogue through the
+/// scalar [`Epilogue::apply_row`] at every tier — the ±1 dot output is
+/// one f32 per tile cell, not a SIMD register tile.
 pub type BinaryDriveFn = fn(&[u64], &[u64], usize, &mut [f32], usize,
-                            u64, usize, usize);
+                            u64, usize, usize, &Epilogue);
 
 /// Prepacked, conditioned weight-side panels for one kernel — the
 /// output of [`Kernel::prepack_weights`], owned by `GemmPlan` (one per
@@ -221,12 +332,14 @@ pub trait Kernel: Send + Sync {
     /// Microkernel tile width.
     fn nr(&self) -> usize;
 
-    /// `out = cond(x) @ cond(w)`.  The caller (`GemmPlan::run`) checks
-    /// the shape invariants and short-circuits the m/n/k = 0 edges, so
-    /// implementations may assume `m, k, n >= 1` and exact slice
-    /// lengths.
+    /// `out = ep(cond(x) @ cond(w))` with `ep` applied per output tile
+    /// while it is cache-resident (pass [`Epilogue::None`] for a plain
+    /// GEMM).  The caller (`GemmPlan::run_with`) checks the shape
+    /// invariants (including the epilogue bias length) and
+    /// short-circuits the m/n/k = 0 edges, so implementations may
+    /// assume `m, k, n >= 1` and exact slice lengths.
     fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
-           out: &mut [f32], threads: usize);
+           out: &mut [f32], threads: usize, ep: &Epilogue);
 
     /// Condition `w` (`k` x `n`, row-major) into this kernel's panel
     /// layout once, for arbitrarily many [`Kernel::run_prepacked`]
@@ -236,7 +349,7 @@ pub trait Kernel: Send + Sync {
     fn prepack_weights(&self, w: &[f32], k: usize, n: usize)
                        -> PackedWeights;
 
-    /// `out = cond(x) @ panels` with the weight side already
+    /// `out = ep(cond(x) @ panels)` with the weight side already
     /// conditioned by [`Kernel::prepack_weights`] (which fixes `k` and
     /// `n`).  Same caller contract as [`Kernel::run`]: shapes checked
     /// and m/k/n = 0 short-circuited by `GemmPlan`, so implementations
@@ -244,7 +357,7 @@ pub trait Kernel: Send + Sync {
     /// was packed by a different kernel, provider configuration, or
     /// panel geometry.
     fn run_prepacked(&self, x: &[f32], pw: &PackedWeights, m: usize,
-                     out: &mut [f32], threads: usize);
+                     out: &mut [f32], threads: usize, ep: &Epilogue);
 }
 
 /// The generic blocked engine: one monomorphization per provider and
@@ -255,6 +368,10 @@ pub struct BlockedKernel<A: MicroArith, const MR: usize, const NR: usize> {
     name: &'static str,
     isa: Isa,
     micro_fn: MicroFn<A>,
+    /// Epilogue row application, bound like `micro_fn`: scalar
+    /// [`Epilogue::apply_row`] for portable kernels, the AVX2 fast
+    /// path for the SIMD tiers.
+    ep_fn: EpilogueFn,
 }
 
 impl<A: MicroArith, const MR: usize, const NR: usize>
@@ -265,15 +382,18 @@ impl<A: MicroArith, const MR: usize, const NR: usize>
     pub fn new(arith: A) -> Self {
         let name = arith.name();
         BlockedKernel { arith, name, isa: Isa::Scalar,
-                        micro_fn: micro::<A, MR, NR> }
+                        micro_fn: micro::<A, MR, NR>,
+                        ep_fn: epilogue_scalar }
     }
 
-    /// A kernel with an explicit (typically SIMD) microkernel bound.
+    /// A kernel with explicit (typically SIMD) microkernel and
+    /// epilogue implementations bound.
     /// `super::isa::select_kernel_isa` only calls this after verifying
     /// the target ISA is supported on this machine.
     pub(crate) fn with_micro(arith: A, name: &'static str, isa: Isa,
-                             micro_fn: MicroFn<A>) -> Self {
-        BlockedKernel { arith, name, isa, micro_fn }
+                             micro_fn: MicroFn<A>, ep_fn: EpilogueFn)
+                             -> Self {
+        BlockedKernel { arith, name, isa, micro_fn, ep_fn }
     }
 
     /// The engine proper, over already-packed B panels: pack A, split
@@ -281,24 +401,28 @@ impl<A: MicroArith, const MR: usize, const NR: usize>
     /// by `run` (packs B per call) and `run_prepacked` (cached panels),
     /// which is what makes the two entry points bit-identical.
     fn run_packed_b(&self, x: &[f32], bp: &[A::Elem], m: usize, k: usize,
-                    n: usize, out: &mut [f32], threads: usize) {
+                    n: usize, out: &mut [f32], threads: usize,
+                    ep: &Epilogue) {
         let ap = pack_a_block::<A, MR>(&self.arith, x, m, k);
         let threads = effective_threads(threads, m, n);
         if threads <= 1 {
             drive::<A, MR, NR>(&self.arith, self.micro_fn, &ap, bp, 0,
-                               out, k, n);
+                               out, k, n, ep, self.ep_fn);
             return;
         }
         // Chunk rows per thread, aligned to MR so no A panel straddles
-        // two threads.
+        // two threads.  Each chunk spans the full column width, so the
+        // per-column epilogue bias indexing is thread-independent.
         let rows_per = m.div_ceil(threads).next_multiple_of(MR);
         std::thread::scope(|s| {
             for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
                 let (ap, arith) = (&ap, &self.arith);
                 let micro_fn = self.micro_fn;
+                let ep_fn = self.ep_fn;
                 s.spawn(move || {
                     drive::<A, MR, NR>(arith, micro_fn, ap, bp,
-                                       t * rows_per, chunk, k, n);
+                                       t * rows_per, chunk, k, n, ep,
+                                       ep_fn);
                 });
             }
         });
@@ -325,9 +449,9 @@ impl<A: MicroArith, const MR: usize, const NR: usize> Kernel
     }
 
     fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
-           out: &mut [f32], threads: usize) {
+           out: &mut [f32], threads: usize, ep: &Epilogue) {
         let bp = pack_b_block::<A, NR>(&self.arith, w, k, n);
-        self.run_packed_b(x, &bp, m, k, n, out, threads);
+        self.run_packed_b(x, &bp, m, k, n, out, threads, ep);
     }
 
     fn prepack_weights(&self, w: &[f32], k: usize, n: usize)
@@ -348,19 +472,28 @@ impl<A: MicroArith, const MR: usize, const NR: usize> Kernel
     }
 
     fn run_prepacked(&self, x: &[f32], pw: &PackedWeights, m: usize,
-                     out: &mut [f32], threads: usize) {
+                     out: &mut [f32], threads: usize, ep: &Epilogue) {
         let bp = panels_of::<Vec<A::Elem>>(pw, self.name,
                                            self.arith.cfg_tag(), NR);
-        self.run_packed_b(x, bp, m, pw.k, pw.n, out, threads);
+        self.run_packed_b(x, bp, m, pw.k, pw.n, out, threads, ep);
     }
 }
 
 /// Blocked sweep over one thread's row chunk (`chunk` = rows
 /// `[row0, row0 + chunk.len()/n)` of the output).  `row0` is a
 /// multiple of MR.
+///
+/// The epilogue hook lives here: because the depth loop `pc` is
+/// innermost of the cache loops, each `(ic, jc)` output row segment is
+/// stored exactly once — with its k reduction complete — in the
+/// `finish` loop at the bottom.  `ep_fn` runs right after that store,
+/// while the segment is still cache-resident, with `jc` as the first
+/// output column (so the bias is indexed globally and row chunking
+/// across threads cannot skew it).
 fn drive<A: MicroArith, const MR: usize, const NR: usize>(
     arith: &A, micro_fn: MicroFn<A>, ap: &[A::Elem], bp: &[A::Elem],
-    row0: usize, chunk: &mut [f32], k: usize, n: usize,
+    row0: usize, chunk: &mut [f32], k: usize, n: usize, ep: &Epilogue,
+    ep_fn: EpilogueFn,
 ) {
     let (mcb, ncb) = eff_blocks(MR, NR);
     let mrows = chunk.len() / n;
@@ -401,6 +534,7 @@ fn drive<A: MicroArith, const MR: usize, const NR: usize>(
                 for (o, a) in orow.iter_mut().zip(arow) {
                     *o = arith.finish(*a);
                 }
+                ep_fn(ep, orow, jc);
             }
         }
     }
@@ -482,7 +616,8 @@ impl<const BMR: usize, const BNR: usize> BinaryKernel<BMR, BNR> {
     /// representation, so the cached panels carry the whole weight-side
     /// cost.
     fn run_packed_b(&self, x: &[f32], bp: &[u64], m: usize, k: usize,
-                    n: usize, out: &mut [f32], threads: usize) {
+                    n: usize, out: &mut [f32], threads: usize,
+                    ep: &Epilogue) {
         let words = k.div_ceil(64);
         // A: BMR-row word panels (same middle-axis layout as
         // pack::pack_a_block, 64 depth steps per word).
@@ -504,7 +639,7 @@ impl<const BMR: usize, const BNR: usize> BinaryKernel<BMR, BNR> {
                 let drive_fn = self.drive_fn;
                 let worker = move || {
                     drive_fn(ap, bp, t * rows_per, chunk, words,
-                             tail_mask, k, n);
+                             tail_mask, k, n, ep);
                 };
                 if threads <= 1 {
                     worker();
@@ -536,9 +671,9 @@ impl<const BMR: usize, const BNR: usize> Kernel
     }
 
     fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
-           out: &mut [f32], threads: usize) {
+           out: &mut [f32], threads: usize, ep: &Epilogue) {
         let bp = pack_b_bits::<BNR>(w, k, n);
-        self.run_packed_b(x, &bp, m, k, n, out, threads);
+        self.run_packed_b(x, &bp, m, k, n, out, threads, ep);
     }
 
     fn prepack_weights(&self, w: &[f32], k: usize, n: usize)
@@ -559,10 +694,10 @@ impl<const BMR: usize, const BNR: usize> Kernel
     }
 
     fn run_prepacked(&self, x: &[f32], pw: &PackedWeights, m: usize,
-                     out: &mut [f32], threads: usize) {
+                     out: &mut [f32], threads: usize, ep: &Epilogue) {
         let bp = panels_of::<Vec<u64>>(pw, self.name, BINARY_CFG_TAG,
                                        BNR);
-        self.run_packed_b(x, bp, m, pw.k, pw.n, out, threads);
+        self.run_packed_b(x, bp, m, pw.k, pw.n, out, threads, ep);
     }
 }
 
@@ -573,7 +708,7 @@ impl<const BMR: usize, const BNR: usize> Kernel
 #[inline(always)]
 pub(crate) fn binary_drive_impl<const BMR: usize, const BNR: usize>(
     ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
-    words: usize, tail_mask: u64, k: usize, n: usize,
+    words: usize, tail_mask: u64, k: usize, n: usize, ep: &Epilogue,
 ) {
     let mrows = chunk.len() / n;
     for ir in (0..mrows).step_by(BMR) {
@@ -594,12 +729,19 @@ pub(crate) fn binary_drive_impl<const BMR: usize, const BNR: usize>(
                     }
                 }
             }
-            // dot of ±1 vectors = agreements - disagreements
+            // dot of ±1 vectors = agreements - disagreements; the
+            // epilogue runs per finished tile row (the word sweep
+            // completed the whole k reduction for this tile), scalar
+            // at every tier — BNR f32 cells don't fill a vector.
             for i in 0..BMR.min(mrows - ir) {
-                for j in 0..BNR.min(n - jr) {
-                    chunk[(ir + i) * n + jr + j] =
-                        (2 * agree[i][j] as i64 - k as i64) as f32;
+                let jw = BNR.min(n - jr);
+                let o0 = (ir + i) * n + jr;
+                for (j, cell) in
+                    chunk[o0..o0 + jw].iter_mut().enumerate()
+                {
+                    *cell = (2 * agree[i][j] as i64 - k as i64) as f32;
                 }
+                ep.apply_row(&mut chunk[o0..o0 + jw], jr);
             }
         }
     }
@@ -609,10 +751,10 @@ pub(crate) fn binary_drive_impl<const BMR: usize, const BNR: usize>(
 /// [`binary_drive_impl`], matching [`BinaryDriveFn`].
 fn binary_drive_scalar<const BMR: usize, const BNR: usize>(
     ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
-    words: usize, tail_mask: u64, k: usize, n: usize,
+    words: usize, tail_mask: u64, k: usize, n: usize, ep: &Epilogue,
 ) {
     binary_drive_impl::<BMR, BNR>(ap, bp, row0, chunk, words, tail_mask,
-                                  k, n)
+                                  k, n, ep)
 }
 
 #[cfg(test)]
@@ -688,7 +830,8 @@ mod tests {
         let f32k = BlockedKernel::<_, 8, 8>::new(F32Micro);
         let pw = BinaryKernel::scalar().prepack_weights(&[1.0; 6], 2, 3);
         let mut out = [0.0f32; 3];
-        f32k.run_prepacked(&[1.0, 1.0], &pw, 1, &mut out, 1);
+        f32k.run_prepacked(&[1.0, 1.0], &pw, 1, &mut out, 1,
+                           &Epilogue::None);
     }
 
     #[test]
@@ -701,7 +844,8 @@ mod tests {
         let narrow = BlockedKernel::<_, 8, 4>::new(F32Micro);
         let pw = wide.prepack_weights(&[0.5f32; 12], 4, 3);
         let mut out = [0.0f32; 3];
-        narrow.run_prepacked(&[1.0; 4], &pw, 1, &mut out, 1);
+        narrow.run_prepacked(&[1.0; 4], &pw, 1, &mut out, 1,
+                             &Epilogue::None);
     }
 
     /// Regression for the former `MC % MR == 0` constructor assert:
@@ -734,7 +878,8 @@ mod tests {
                 gemm_reference(kind, &x, &w, m, k, n, &mut want, 1);
                 for threads in [1, 3] {
                     let mut got = vec![f32::NAN; m * n];
-                    kern.run(&x, &w, m, k, n, &mut got, threads);
+                    kern.run(&x, &w, m, k, n, &mut got, threads,
+                             &Epilogue::None);
                     for (i, (g, ww)) in got.iter().zip(&want).enumerate()
                     {
                         assert_eq!(
@@ -749,7 +894,7 @@ mod tests {
                     if m > 0 && k > 0 && n > 0 {
                         let mut pre = vec![f32::NAN; m * n];
                         kern.run_prepacked(&x, &pw, m, &mut pre,
-                                           threads);
+                                           threads, &Epilogue::None);
                         assert_eq!(pre, got, "{} prepacked diverged",
                                    kern.name());
                     }
@@ -772,7 +917,7 @@ mod tests {
             let w: Vec<f32> =
                 (0..k * n).map(|_| rng.normal() as f32).collect();
             let mut got = vec![f32::NAN; m * n];
-            kern.run(&x, &w, m, k, n, &mut got, 1);
+            kern.run(&x, &w, m, k, n, &mut got, 1, &Epilogue::None);
             for r in 0..m {
                 for j in 0..n {
                     let mut dot = 0f32;
@@ -787,5 +932,124 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn epilogue_apply_row_semantics() {
+        let bias = [10.0f32, -20.0, 0.5, 0.0];
+        let mut row = [1.0f32, 1.0, 1.0, 1.0];
+        Epilogue::Bias { bias: &bias }.apply_row(&mut row, 0);
+        assert_eq!(row, [11.0, -19.0, 1.5, 1.0]);
+
+        let mut row = [1.0f32, 1.0, 1.0, 1.0];
+        Epilogue::BiasRelu { bias: &bias }.apply_row(&mut row, 0);
+        assert_eq!(row, [11.0, 0.0, 1.5, 1.0]);
+
+        let quant = ArithKind::parse("FI(2,2)").unwrap(); // step 0.25
+        let mut row = [1.0f32, 1.0, 0.6, 1.0];
+        Epilogue::BiasReluQuant { bias: &bias, quant }
+            .apply_row(&mut row, 0);
+        assert_eq!(row, [quant.quantize(11.0), 0.0, 1.0, 1.0]);
+
+        // None leaves the row untouched
+        let mut row = [f32::NAN, -3.0];
+        Epilogue::None.apply_row(&mut row, 0);
+        assert!(row[0].is_nan() && row[1] == -3.0);
+    }
+
+    #[test]
+    fn epilogue_col0_offsets_into_bias() {
+        // a segment starting at output column 2 must read bias[2..]
+        let bias = [100.0f32, 200.0, 1.0, 2.0, 3.0];
+        let mut seg = [10.0f32, 10.0, 10.0];
+        Epilogue::Bias { bias: &bias }.apply_row(&mut seg, 2);
+        assert_eq!(seg, [11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn epilogue_relu_branch_keeps_negative_zero_and_nan() {
+        // branch relu (not max): -0.0 stays -0.0, NaN stays NaN —
+        // identical to the standalone relu pass it replaces
+        let bias = [0.0f32; 3];
+        let mut row = [-0.0f32, f32::NAN, -1.0];
+        Epilogue::BiasRelu { bias: &bias }.apply_row(&mut row, 0);
+        assert_eq!(row[0].to_bits(), (-0.0f32).to_bits());
+        assert!(row[1].is_nan());
+        assert_eq!(row[2], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "epilogue bias")]
+    fn epilogue_validate_rejects_short_bias() {
+        Epilogue::Bias { bias: &[1.0, 2.0] }.validate(3);
+    }
+
+    /// Fused epilogue through the full blocked driver == plain GEMM +
+    /// the same scalar passes, bit for bit — on an odd tile so the
+    /// per-segment `col0` bookkeeping crosses block boundaries.
+    #[test]
+    fn fused_run_matches_separate_passes_on_odd_tile() {
+        let kern = BlockedKernel::<_, 5, 7>::new(F32Micro);
+        let (m, k, n) = (13, 30, 300); // n crosses ncb=252
+        let mut rng = Rng::new(75);
+        let x: Vec<f32> =
+            (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..k * n).map(|_| rng.normal() as f32).collect();
+        let bias: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32).collect();
+        let quant = ArithKind::parse("FI(4,6)").unwrap();
+
+        let mut plain = vec![f32::NAN; m * n];
+        kern.run(&x, &w, m, k, n, &mut plain, 1, &Epilogue::None);
+        let mut want = plain.clone();
+        for row in want.chunks_mut(n) {
+            for (v, b) in row.iter_mut().zip(&bias) {
+                *v += *b;
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+                *v = quant.quantize(*v);
+            }
+        }
+        for threads in [1, 3] {
+            let mut got = vec![f32::NAN; m * n];
+            kern.run(&x, &w, m, k, n, &mut got, threads,
+                     &Epilogue::BiasReluQuant { bias: &bias, quant });
+            for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), ww.to_bits(),
+                           "t={threads} out[{i}]: {g} vs {ww}");
+            }
+        }
+    }
+
+    /// Same fusion check for the binary word-panel drive.
+    #[test]
+    fn fused_binary_matches_separate_passes() {
+        let kern = BinaryKernel::scalar();
+        let (m, k, n) = (7, 130, 11);
+        let mut rng = Rng::new(76);
+        let x: Vec<f32> =
+            (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..k * n).map(|_| rng.normal() as f32).collect();
+        let bias: Vec<f32> =
+            (0..n).map(|i| i as f32 - 5.0).collect();
+
+        let mut plain = vec![f32::NAN; m * n];
+        kern.run(&x, &w, m, k, n, &mut plain, 1, &Epilogue::None);
+        let mut want = plain.clone();
+        for row in want.chunks_mut(n) {
+            for (v, b) in row.iter_mut().zip(&bias) {
+                *v += *b;
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        let mut got = vec![f32::NAN; m * n];
+        kern.run(&x, &w, m, k, n, &mut got, 1,
+                 &Epilogue::BiasRelu { bias: &bias });
+        assert_eq!(got, want);
     }
 }

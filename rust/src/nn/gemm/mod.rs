@@ -57,7 +57,7 @@ pub mod reference;
 mod simd;
 
 pub use isa::Isa;
-pub use kernel::{default_threads, weight_fingerprint, Kernel,
+pub use kernel::{default_threads, weight_fingerprint, Epilogue, Kernel,
                  PackedWeights, KC, MC, NC};
 
 use crate::approx::arith::ArithKind;
@@ -155,17 +155,19 @@ fn select_avx2(kind: &ArithKind) -> Box<dyn Kernel> {
         ArithKind::Float32 => {
             Box::new(BlockedKernel::<_, 6, 16>::with_micro(
                 F32Micro, "packed-f32+avx2", Isa::Avx2,
-                simd::micro_f32_avx2))
+                simd::micro_f32_avx2, simd::epilogue_avx2))
         }
         ArithKind::FixedExact(rep) => {
             Box::new(BlockedKernel::<_, 4, 8>::with_micro(
                 FixedMicro::new(*rep), "packed-fi+avx2", Isa::Avx2,
-                simd::micro_i32_avx2::<FixedMicro>))
+                simd::micro_i32_avx2::<FixedMicro>,
+                simd::epilogue_avx2))
         }
         ArithKind::FixedDrum(d) => {
             Box::new(BlockedKernel::<_, 4, 8>::with_micro(
                 DrumMicro::new(*d), "packed-drum+avx2", Isa::Avx2,
-                simd::micro_i32_avx2::<DrumMicro>))
+                simd::micro_i32_avx2::<DrumMicro>,
+                simd::epilogue_avx2))
         }
         ArithKind::FloatExact(_) | ArithKind::FloatCfpu(_) => {
             select_scalar(kind)
@@ -300,17 +302,34 @@ impl GemmPlan {
     /// 0 means all cores.
     pub fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize,
                n: usize, out: &mut [f32], threads: usize) {
+        self.run_with(x, w, m, k, n, out, threads, &Epilogue::None);
+    }
+
+    /// [`GemmPlan::run`] with a fused [`Epilogue`] applied per output
+    /// tile while it is cache-resident.  With `Epilogue::None` this is
+    /// exactly `run`; with a bias-carrying epilogue the result is bit
+    /// for bit what `run` + the separate `vecmath` passes would
+    /// produce (pinned by `tests/epilogue_differential.rs`).
+    pub fn run_with(&self, x: &[f32], w: &[f32], m: usize, k: usize,
+                    n: usize, out: &mut [f32], threads: usize,
+                    ep: &Epilogue) {
         assert_eq!(x.len(), m * k, "x shape mismatch");
         assert_eq!(w.len(), k * n, "w shape mismatch");
         assert_eq!(out.len(), m * n, "out shape mismatch");
+        ep.validate(n);
         if m == 0 || n == 0 {
             return;
         }
         if k == 0 {
+            // empty reduction: the GEMM term is zero, but the epilogue
+            // still applies (bias, relu, quantize of the bias)
             out.fill(0.0);
+            for row in out.chunks_mut(n) {
+                ep.apply_row(row, 0);
+            }
             return;
         }
-        self.kernel.run(x, w, m, k, n, out, threads);
+        self.kernel.run(x, w, m, k, n, out, threads, ep);
     }
 
     /// Condition `w` (`k` x `n`, row-major, already quantized — the
@@ -348,6 +367,14 @@ impl GemmPlan {
     /// call.  Panics if the plan was never prepacked.
     pub fn run_prepacked(&self, x: &[f32], m: usize, out: &mut [f32],
                          threads: usize) {
+        self.run_prepacked_with(x, m, out, threads, &Epilogue::None);
+    }
+
+    /// [`GemmPlan::run_prepacked`] with a fused [`Epilogue`] (same
+    /// contract as [`GemmPlan::run_with`]).
+    pub fn run_prepacked_with(&self, x: &[f32], m: usize,
+                              out: &mut [f32], threads: usize,
+                              ep: &Epilogue) {
         let pw = self
             .packed
             .as_ref()
@@ -355,14 +382,18 @@ impl GemmPlan {
         let (k, n) = (pw.k(), pw.n());
         assert_eq!(x.len(), m * k, "x shape mismatch");
         assert_eq!(out.len(), m * n, "out shape mismatch");
+        ep.validate(n);
         if m == 0 || n == 0 {
             return;
         }
         if k == 0 {
             out.fill(0.0);
+            for row in out.chunks_mut(n) {
+                ep.apply_row(row, 0);
+            }
             return;
         }
-        self.kernel.run_prepacked(x, pw, m, out, threads);
+        self.kernel.run_prepacked(x, pw, m, out, threads, ep);
     }
 
     /// The layer entry point: run on the cached panels when the plan
@@ -371,6 +402,16 @@ impl GemmPlan {
     /// per call like [`GemmPlan::run`].
     pub fn run_cached(&self, x: &[f32], w: &[f32], m: usize, k: usize,
                       n: usize, out: &mut [f32], threads: usize) {
+        self.run_cached_with(x, w, m, k, n, out, threads,
+                             &Epilogue::None);
+    }
+
+    /// [`GemmPlan::run_cached`] with a fused [`Epilogue`] (same
+    /// contract as [`GemmPlan::run_with`]) — the fused-layer entry
+    /// point `layers::dense_with` / `conv::conv2d_with` drive.
+    pub fn run_cached_with(&self, x: &[f32], w: &[f32], m: usize,
+                           k: usize, n: usize, out: &mut [f32],
+                           threads: usize, ep: &Epilogue) {
         match &self.packed {
             Some(pw) => {
                 assert_eq!(
@@ -385,9 +426,9 @@ impl GemmPlan {
                     pw.fingerprint(),
                     "run_cached: w is not the prepacked weight matrix"
                 );
-                self.run_prepacked(x, m, out, threads);
+                self.run_prepacked_with(x, m, out, threads, ep);
             }
-            None => self.run(x, w, m, k, n, out, threads),
+            None => self.run_with(x, w, m, k, n, out, threads, ep),
         }
     }
 }

@@ -39,7 +39,7 @@
 //!
 //! [`Isa::Avx2`]: super::isa::Isa::Avx2
 
-use super::kernel::binary_drive_impl;
+use super::kernel::{binary_drive_impl, Epilogue};
 use super::micro::{F32Micro, MicroArith};
 use std::arch::x86_64::*;
 
@@ -165,13 +165,14 @@ unsafe fn micro_i32_4x8(apan: &[i32], bpan: &[i32], kc: usize,
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn binary_drive_popcnt<const BMR: usize, const BNR: usize>(
     ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
-    words: usize, tail_mask: u64, k: usize, n: usize,
+    words: usize, tail_mask: u64, k: usize, n: usize, ep: &Epilogue,
 ) {
     // SAFETY: see module docs — only constructed when Avx2 (which
     // requires popcnt) is supported.
     unsafe {
         binary_drive_popcnt_inner::<BMR, BNR>(ap, bp, row0, chunk,
-                                              words, tail_mask, k, n)
+                                              words, tail_mask, k, n,
+                                              ep)
     }
 }
 
@@ -181,18 +182,93 @@ pub(crate) fn binary_drive_popcnt<const BMR: usize, const BNR: usize>(
 #[target_feature(enable = "popcnt")]
 unsafe fn binary_drive_popcnt_inner<const BMR: usize, const BNR: usize>(
     ap: &[u64], bp: &[u64], row0: usize, chunk: &mut [f32],
-    words: usize, tail_mask: u64, k: usize, n: usize,
+    words: usize, tail_mask: u64, k: usize, n: usize, ep: &Epilogue,
 ) {
     binary_drive_impl::<BMR, BNR>(ap, bp, row0, chunk, words, tail_mask,
-                                  k, n)
+                                  k, n, ep)
+}
+
+// ---------------------------------------------------------------------------
+// epilogue: 8-lane AVX2 bias + relu, bound next to the SIMD microkernels
+// ---------------------------------------------------------------------------
+
+/// AVX2 epilogue row application, bound by `select_kernel_isa` into
+/// the f32 and integer AVX2 kernels (matches
+/// [`super::kernel::EpilogueFn`]).  FL/CFPU kernels stay scalar at
+/// every tier, so they keep [`super::kernel::epilogue_scalar`].
+///
+/// Bit-identical to the scalar [`Epilogue::apply_row`]:
+///
+/// * the bias add is `_mm256_add_ps` — IEEE single addition, the same
+///   operation per lane as the scalar `+`;
+/// * the relu is a compare + andnot (`v < 0.0 ? 0.0 : v`), not
+///   `_mm256_max_ps`: max would turn `-0.0` into `+0.0` (and its
+///   NaN-propagation depends on operand order), while `LT_OQ` is false
+///   for both `-0.0` (equal to zero) and NaN — so negative zeros and
+///   NaNs survive exactly as the scalar branch leaves them;
+/// * the quantize step of [`Epilogue::BiasReluQuant`] runs as a scalar
+///   sweep over the (still cache-resident) segment — the lattice snap
+///   is per-kind control flow, not yet profitably vectorizable.
+pub(crate) fn epilogue_avx2(ep: &Epilogue, row: &mut [f32],
+                            col0: usize) {
+    match ep {
+        Epilogue::None => {}
+        Epilogue::Bias { bias } => {
+            // SAFETY: see module docs — only bound into kernels
+            // constructed when Avx2 is supported.
+            unsafe { bias_relu_avx2(row, &bias[col0..], false) }
+        }
+        Epilogue::BiasRelu { bias } => {
+            // SAFETY: as above.
+            unsafe { bias_relu_avx2(row, &bias[col0..], true) }
+        }
+        Epilogue::BiasReluQuant { bias, quant } => {
+            // SAFETY: as above.
+            unsafe { bias_relu_avx2(row, &bias[col0..], true) }
+            for v in row.iter_mut() {
+                *v = quant.quantize(*v);
+            }
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2; `bias` covers `row.len()` entries.
+#[target_feature(enable = "avx2")]
+unsafe fn bias_relu_avx2(row: &mut [f32], bias: &[f32], relu: bool) {
+    debug_assert!(bias.len() >= row.len());
+    let n = row.len();
+    let zero = _mm256_setzero_ps();
+    let mut j = 0;
+    while j + 8 <= n {
+        let p = row.as_mut_ptr().add(j);
+        let mut v = _mm256_add_ps(_mm256_loadu_ps(p),
+                                  _mm256_loadu_ps(bias.as_ptr().add(j)));
+        if relu {
+            // keep v where !(v < 0), i.e. zero exactly the strictly
+            // negative lanes — -0.0 and NaN pass through untouched
+            let neg = _mm256_cmp_ps::<_CMP_LT_OQ>(v, zero);
+            v = _mm256_andnot_ps(neg, v);
+        }
+        _mm256_storeu_ps(p, v);
+        j += 8;
+    }
+    for (v, b) in row[j..].iter_mut().zip(&bias[j..]) {
+        *v += *b;
+        if relu && *v < 0.0 {
+            *v = 0.0;
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::epilogue_avx2;
     use crate::approx::arith::ArithKind;
     use crate::nn::gemm::isa::{supported, Isa};
     use crate::nn::gemm::reference::gemm_reference;
-    use crate::nn::gemm::{fma_f32_bound, select_kernel_isa, Kernel};
+    use crate::nn::gemm::{fma_f32_bound, select_kernel_isa, Epilogue,
+                          Kernel};
     use crate::util::prng::Rng;
 
     /// Tail-heavy shape: m, n not divisible by any tile in play (6,
@@ -225,7 +301,8 @@ mod tests {
                 let (x, w) =
                     rand_operands(41 + si as u64, &kind, m, k, n);
                 let mut got = vec![f32::NAN; m * n];
-                kern.run(&x, &w, m, k, n, &mut got, 1);
+                kern.run(&x, &w, m, k, n, &mut got, 1,
+                         &Epilogue::None);
                 let mut want = vec![f32::NAN; m * n];
                 gemm_reference(&kind, &x, &w, m, k, n, &mut want, 1);
                 for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
@@ -247,7 +324,7 @@ mod tests {
         for (si, &(m, k, n)) in SHAPES.iter().enumerate() {
             let (x, w) = rand_operands(51 + si as u64, &kind, m, k, n);
             let mut got = vec![f32::NAN; m * n];
-            kern.run(&x, &w, m, k, n, &mut got, 1);
+            kern.run(&x, &w, m, k, n, &mut got, 1, &Epilogue::None);
             let mut want = vec![f32::NAN; m * n];
             gemm_reference(&kind, &x, &w, m, k, n, &mut want, 1);
             let bound = fma_f32_bound(&x, &w, m, k, n);
@@ -258,6 +335,59 @@ mod tests {
                          reference {ww}, |err| = {err:e} > bound \
                          {:e}",
                         bound[i]);
+            }
+        }
+    }
+
+    /// The AVX2 epilogue must be *bitwise* the scalar
+    /// `Epilogue::apply_row` — including the awkward lanes: -0.0
+    /// (branch relu keeps it, max would not), NaN (kept), values that
+    /// cross zero only after the bias add, vector body + scalar tail,
+    /// and non-zero `col0` offsets into the bias.
+    #[test]
+    fn avx2_epilogue_bitwise_matches_scalar() {
+        if !supported(Isa::Avx2) {
+            return;
+        }
+        let mut rng = Rng::new(61);
+        let quant = ArithKind::parse("FI(4,6)").unwrap();
+        for len in [0usize, 1, 7, 8, 9, 16, 37] {
+            for col0 in [0usize, 3] {
+                let bias: Vec<f32> = (0..col0 + len)
+                    .map(|_| rng.normal() as f32)
+                    .collect();
+                let mut base: Vec<f32> = (0..len)
+                    .map(|_| (rng.normal() * 2.0) as f32)
+                    .collect();
+                // salt in the awkward values
+                for (i, v) in base.iter_mut().enumerate() {
+                    match i % 5 {
+                        0 => *v = -0.0,
+                        1 => *v = f32::NAN,
+                        2 => *v = -(v.abs() + 1.0),
+                        _ => {}
+                    }
+                }
+                let eps = [
+                    Epilogue::Bias { bias: &bias },
+                    Epilogue::BiasRelu { bias: &bias },
+                    Epilogue::BiasReluQuant { bias: &bias, quant },
+                ];
+                for ep in &eps {
+                    let mut scalar = base.clone();
+                    ep.apply_row(&mut scalar, col0);
+                    let mut simd = base.clone();
+                    epilogue_avx2(ep, &mut simd, col0);
+                    for (i, (s, v)) in
+                        scalar.iter().zip(&simd).enumerate()
+                    {
+                        assert_eq!(
+                            s.to_bits(), v.to_bits(),
+                            "len={len} col0={col0} lane {i}: scalar \
+                             {s} vs avx2 {v}"
+                        );
+                    }
+                }
             }
         }
     }

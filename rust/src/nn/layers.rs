@@ -1,47 +1,51 @@
 //! Layers: the GEMM-backed fully-connected layer plus elementwise /
 //! structural ops (bias add, ReLU, 2x2 max pooling, softmax).  All
 //! mirror `python/compile/model.py`; [`dense`] routes through the
-//! packed, tiled kernel selected by the layer's `GemmPlan`.
+//! packed, tiled kernel selected by the layer's `GemmPlan`, and every
+//! elementwise tensor walk routes through [`super::vecmath`] (one
+//! scalar definition per op, pass-counted).
 
-use super::gemm::GemmPlan;
+use super::gemm::{Epilogue, GemmPlan};
 use super::tensor::Tensor;
+use super::vecmath;
 
 /// Fully-connected layer: `x [m,k] @ w [k,n] + bias` on the packed
-/// GEMM path (`w` pre-quantized, as `Model::prepare` produces).  When
-/// the plan carries prepacked panels for `w` (`Model::prepare` builds
-/// them), the weight side is served from the cache — no per-call
-/// conditioning or packing.
+/// GEMM path (`w` pre-quantized, as `Model::prepare` produces), with
+/// the bias fused into the GEMM's per-tile epilogue — no standalone
+/// bias pass.  When the plan carries prepacked panels for `w`
+/// (`Model::prepare` builds them), the weight side is served from the
+/// cache — no per-call conditioning or packing.
 pub fn dense(plan: &GemmPlan, x: &Tensor, w: &Tensor, bias: &[f32],
              threads: usize) -> Tensor {
+    dense_with(plan, x, w, &Epilogue::Bias { bias }, threads)
+}
+
+/// [`dense`] with an explicit fused [`Epilogue`] — the model forward
+/// loop uses this to fold bias + ReLU + requantize-for-the-consumer
+/// into the GEMM's cache-resident tile store.
+pub fn dense_with(plan: &GemmPlan, x: &Tensor, w: &Tensor,
+                  ep: &Epilogue, threads: usize) -> Tensor {
     assert_eq!(x.ndim(), 2, "dense input must be [m, k]");
     assert_eq!(w.ndim(), 2, "dense weights must be [k, n]");
     let (m, k) = (x.shape[0], x.shape[1]);
     assert_eq!(w.shape[0], k, "dense weight rows != input cols");
     let n = w.shape[1];
     let mut out = Tensor::zeros(vec![m, n]);
-    plan.run_cached(&x.data, &w.data, m, k, n, &mut out.data, threads);
-    add_bias(&mut out, bias);
+    plan.run_cached_with(&x.data, &w.data, m, k, n, &mut out.data,
+                         threads, ep);
     out
 }
 
 /// ReLU in place.
 pub fn relu(t: &mut Tensor) {
-    for v in &mut t.data {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
+    vecmath::relu_in_place(&mut t.data);
 }
 
 /// Add a per-channel bias to the last axis.
 pub fn add_bias(t: &mut Tensor, bias: &[f32]) {
     let c = *t.shape.last().expect("bias needs >= 1 axis");
     assert_eq!(c, bias.len(), "bias length mismatch");
-    for row in t.data.chunks_mut(c) {
-        for (v, b) in row.iter_mut().zip(bias) {
-            *v += b;
-        }
-    }
+    vecmath::add_bias_in_place(&mut t.data, bias);
 }
 
 /// 2x2 max pooling, stride 2, [B,H,W,C] with even H and W.
@@ -68,22 +72,12 @@ pub fn maxpool2(x: &Tensor) -> Tensor {
     Tensor::new(vec![b, oh, ow, c], out)
 }
 
-/// Numerically-stable softmax over the last axis of a 2-D tensor.
+/// Numerically-stable softmax over the last axis of a 2-D tensor
+/// (routes through [`vecmath::softmax_in_place`]).
 pub fn softmax(t: &Tensor) -> Tensor {
     assert_eq!(t.ndim(), 2);
-    let c = t.shape[1];
     let mut out = t.data.clone();
-    for row in out.chunks_mut(c) {
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
-        for v in row.iter_mut() {
-            *v = (*v - mx).exp();
-            sum += *v;
-        }
-        for v in row.iter_mut() {
-            *v /= sum;
-        }
-    }
+    vecmath::softmax_in_place(&mut out, t.shape[1]);
     Tensor::new(t.shape.clone(), out)
 }
 

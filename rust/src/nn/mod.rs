@@ -19,6 +19,7 @@ pub mod network;
 pub mod quantizer;
 pub mod spec;
 pub mod tensor;
+pub mod vecmath;
 
 pub use network::{Dcnn, Model, PreparedNet};
 pub use spec::{NetSpec, ReprMap};

@@ -8,9 +8,9 @@
 //! a 2-conv net flows through the same prepare/forward/serve machinery
 //! (pinned by `rust/tests/netspec_topology.rs`).
 
-use super::conv::conv2d;
-use super::gemm::GemmPlan;
-use super::layers::{add_bias, dense, maxpool2, relu};
+use super::conv::conv2d_with;
+use super::gemm::{Epilogue, GemmPlan};
+use super::layers::{dense_with, maxpool2, relu};
 use super::quantizer::quantize_tensor;
 use super::spec::{Activation, LayerKind, NetSpec, ReprMap};
 use super::tensor::Tensor;
@@ -204,13 +204,54 @@ impl PreparedNet {
 
     /// Forward pass: `x` is `[B, h, w, c]` matching the spec's input
     /// shape; returns the last layer's output (e.g. logits `[B, n]`).
+    ///
+    /// Each `dense(..)+relu` / `conv(..)+relu` spec segment compiles
+    /// to **one fused pass**: bias, ReLU and — when a consumer layer
+    /// follows — requantization onto the consumer's representation all
+    /// run inside the GEMM's per-tile epilogue, so no standalone
+    /// `add_bias`/`relu` tensor walk happens (pinned by the
+    /// pass-counter assertion in `tests/epilogue_differential.rs`).
+    /// Pool stays a separate structural pass over the fused output.
     pub fn forward(&self, x: &Tensor, threads: usize) -> Tensor {
-        self.forward_capture(x, threads).0
+        self.forward_impl(x, threads, false).0
     }
 
     /// Forward returning per-layer pre-activation (min,max) as well.
+    /// Capture needs the *pre-ReLU* tensor per layer (Table 1 profiles
+    /// it), so this path fuses only the bias and applies ReLU as a
+    /// standalone pass after reading the range — the fully-fused fast
+    /// path is [`PreparedNet::forward`].
     pub fn forward_capture(&self, x: &Tensor, threads: usize)
                            -> (Tensor, Vec<(f32, f32)>) {
+        self.forward_impl(x, threads, true)
+    }
+
+    /// The epilogue for layer `li`: bias always; ReLU fused when the
+    /// layer activates and we are not capturing pre-ReLU ranges; the
+    /// consumer layer's lattice snap fused on top when a consumer
+    /// exists.  Requantizing here is sound because every provider's
+    /// pack-time conditioning is idempotent over its own lattice
+    /// (`cond(quantize(v)) == cond(v)`) and `maxpool2` commutes with
+    /// the monotone `quantize` — see DESIGN.md §gemm epilogue
+    /// contract.
+    fn epilogue_for(&self, li: usize, capture: bool) -> Epilogue<'_> {
+        let bias = &self.bq[li].data;
+        let relu_here = self.spec.layers()[li].activation
+            == Activation::Relu;
+        if capture || !relu_here {
+            return Epilogue::Bias { bias };
+        }
+        match self.cfg.kinds().get(li + 1) {
+            Some(consumer) => Epilogue::BiasReluQuant {
+                bias,
+                quant: *consumer,
+            },
+            None => Epilogue::BiasRelu { bias },
+        }
+    }
+
+    fn forward_impl(&self, x: &Tensor, threads: usize, capture: bool)
+                    -> (Tensor, Vec<(f32, f32)>) {
         assert_eq!(x.ndim(), 4, "input must be [B, h, w, c]");
         let ishape = self.spec.input_shape();
         assert_eq!(&x.shape[1..], &ishape[..],
@@ -219,17 +260,18 @@ impl PreparedNet {
         let mut ranges = Vec::with_capacity(self.spec.len());
         let mut cur: Option<Tensor> = None;
         for (li, layer) in self.spec.layers().iter().enumerate() {
+            let ep = self.epilogue_for(li, capture);
             let mut z = match layer.kind {
                 LayerKind::Conv2d { kh, kw, cout, pad, .. } => {
                     let inp = cur.as_ref().unwrap_or(x);
                     let (h, w) = (inp.shape[1], inp.shape[2]);
                     // im2col + packed GEMM -> [B*H*W, cout]; the
                     // quantization of the activations happens inside
-                    // gemm (the MAC entry point), matching model.py
-                    let mut z = conv2d(&self.plans[li], inp,
-                                       &self.wq[li], kh, kw, pad,
-                                       threads);
-                    add_bias(&mut z, &self.bq[li].data);
+                    // gemm (the MAC entry point), matching model.py;
+                    // bias (+ fused post-work) rides the epilogue
+                    let z = conv2d_with(&self.plans[li], inp,
+                                        &self.wq[li], kh, kw, pad, &ep,
+                                        threads);
                     z.reshape(vec![b, h, w, cout])
                 }
                 LayerKind::Dense { d_in, .. } => {
@@ -240,13 +282,16 @@ impl PreparedNet {
                         None => Tensor::new(vec![b, d_in],
                                             x.data.clone()),
                     };
-                    dense(&self.plans[li], &flat, &self.wq[li],
-                          &self.bq[li].data, threads)
+                    dense_with(&self.plans[li], &flat, &self.wq[li],
+                               &ep, threads)
                 }
             };
-            ranges.push(z.minmax());
-            if layer.activation == Activation::Relu {
-                relu(&mut z);
+            if capture {
+                // pre-ReLU ranges (the epilogue fused bias only)
+                ranges.push(z.minmax());
+                if layer.activation == Activation::Relu {
+                    relu(&mut z);
+                }
             }
             if layer.pool {
                 z = maxpool2(&z);

@@ -445,10 +445,29 @@ pub struct NetSpecBuilder {
 }
 
 impl NetSpecBuilder {
+    /// Record an error for a *layer-appending* op (conv2d/dense): the
+    /// failing layer is the one that was about to be pushed, at index
+    /// `layers.len() + 1`.
     fn fail(mut self, msg: String) -> Self {
         if self.err.is_none() {
             self.err = Some(format!("layer {}: {msg}",
                                     self.layers.len() + 1));
+        }
+        self
+    }
+
+    /// Record an error for a *modifier* op (relu/pool): these attach
+    /// to the layer already pushed, so the failing layer is the last
+    /// one — reported by index and name so a bad spec string (e.g. a
+    /// pool at odd spatial dims) fails at build/parse time pointing at
+    /// the offending layer, not mid-forward in `maxpool2`.
+    fn fail_on_last(mut self, msg: String) -> Self {
+        if self.err.is_none() {
+            self.err = Some(match self.layers.last() {
+                Some(l) => format!("layer {} ({}): {msg}",
+                                   self.layers.len(), l.name),
+                None => format!("layer 1: {msg}"),
+            });
         }
         self
     }
@@ -532,9 +551,9 @@ impl NetSpecBuilder {
             return self;
         }
         match self.layers.last_mut() {
-            None => self.fail("relu before any layer".into()),
+            None => self.fail_on_last("relu before any layer".into()),
             Some(l) if l.activation == Activation::Relu => {
-                self.fail("duplicate relu".into())
+                self.fail_on_last("duplicate relu".into())
             }
             Some(l) => {
                 l.activation = Activation::Relu;
@@ -552,20 +571,24 @@ impl NetSpecBuilder {
         let (h, w, c) = match self.state {
             State::Spatial(h, w, c) => (h, w, c),
             State::Flat(_) => {
-                return self.fail("pool on a flattened (dense) \
-                                  output"
-                    .into());
+                return self.fail_on_last(
+                    "pool on a flattened (dense) output".into());
             }
         };
         match self.layers.last_mut() {
-            None => self.fail("pool before any layer".into()),
-            Some(l) if l.pool => self.fail("duplicate pool".into()),
-            Some(l) if !matches!(l.kind, LayerKind::Conv2d { .. }) => {
-                self.fail("pool only follows conv layers".into())
+            None => self.fail_on_last("pool before any layer".into()),
+            Some(l) if l.pool => {
+                self.fail_on_last("duplicate pool".into())
             }
-            Some(_) if h % 2 != 0 || w % 2 != 0 => self.fail(format!(
-                "pool needs even spatial dims, have {h}x{w}"
-            )),
+            Some(l) if !matches!(l.kind, LayerKind::Conv2d { .. }) => {
+                self.fail_on_last("pool only follows conv layers"
+                    .into())
+            }
+            Some(_) if h % 2 != 0 || w % 2 != 0 => {
+                self.fail_on_last(format!(
+                    "pool needs even spatial dims, have {h}x{w}"
+                ))
+            }
             Some(l) => {
                 l.pool = true;
                 self.state = State::Spatial(h / 2, w / 2, c);
@@ -814,6 +837,57 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(e.contains("pool"), "{e}");
+    }
+
+    #[test]
+    fn modifier_errors_name_the_offending_layer() {
+        // Modifier (relu/pool) errors attach to the layer already
+        // pushed — index *and* name — so a bad spec fails at build
+        // time pointing at the right layer instead of panicking
+        // mid-forward in `maxpool2`.  28 -> 14 -> 7: the third pool
+        // sees odd 7x7 on conv3.
+        let e = NetSpec::builder([28, 28, 1])
+            .conv2d(3, 3, 4, 1)
+            .pool()
+            .conv2d(3, 3, 4, 1)
+            .pool()
+            .conv2d(3, 3, 4, 1)
+            .pool()
+            .build()
+            .unwrap_err();
+        assert!(
+            e.contains("layer 3 (conv3)")
+                && e.contains("pool needs even spatial dims, have 7x7"),
+            "{e}"
+        );
+        // same failure through the parse-level grammar
+        let e = NetSpec::parse(
+            "28x28x1: conv(3x3,4,pad=1)+pool | conv(3x3,4,pad=1)+pool \
+             | conv(3x3,4,pad=1)+pool | dense(10)",
+        )
+        .unwrap_err();
+        assert!(e.contains("conv3") && e.contains("7x7"), "{e}");
+        // duplicate relu names the dense layer it modifies
+        let e = NetSpec::builder([4, 4, 1])
+            .dense(2)
+            .relu()
+            .relu()
+            .build()
+            .unwrap_err();
+        assert!(e.contains("layer 1 (fc1)")
+                    && e.contains("duplicate relu"),
+                "{e}");
+        // pool on a dense output names the dense layer
+        let e = NetSpec::builder([4, 4, 1])
+            .dense(2)
+            .pool()
+            .build()
+            .unwrap_err();
+        assert!(e.contains("layer 1 (fc1)") && e.contains("flattened"),
+                "{e}");
+        // modifiers before any layer report layer 1 without a name
+        let e = NetSpec::builder([4, 4, 1]).relu().build().unwrap_err();
+        assert!(e.contains("layer 1: relu before any layer"), "{e}");
     }
 
     #[test]

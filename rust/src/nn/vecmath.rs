@@ -1,0 +1,233 @@
+//! Vectorized elementwise layer (rten-vecmath shape): every
+//! activation-tensor walk in the engine goes through one of the
+//! `_in_place` slice routines here, each a thin loop over the single
+//! scalar definition of the op — so fused GEMM epilogues
+//! (`gemm::Epilogue`), the standalone layer ops in [`super::layers`],
+//! and future heads (softmax, sigmoid for sequence models) share one
+//! semantics per op instead of re-deriving it per call site.
+//!
+//! # Pass counters
+//!
+//! Every `_in_place` call counts one *pass* over its slice, per op, in
+//! thread-local [`PassCounts`] (mirroring `gemm::pack`'s
+//! `weight_pack_count` pattern).  The fused epilogue path inside the
+//! blocked GEMM driver never routes through this module, so
+//! `tests/epilogue_differential.rs` pins the fusion contract
+//! structurally: a `dense+relu` / `conv+relu` forward must leave the
+//! `bias` and `relu` counters untouched — zero standalone tensor
+//! passes, not merely equal output.
+
+use crate::approx::arith::ArithKind;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// ---------------------------------------------------------------- scalar ops
+
+/// The relu: `if x < 0.0 { 0.0 } else { x }`.  The *branch* form, not
+/// `max`: the branch keeps `-0.0` and NaN untouched, and the fused
+/// epilogues (`gemm::Epilogue`, scalar and AVX2) replicate exactly
+/// these semantics — one definition, pinned bit-for-bit by
+/// `tests/epilogue_differential.rs`.
+#[inline]
+pub fn relu(x: f32) -> f32 {
+    if x < 0.0 {
+        0.0
+    } else {
+        x
+    }
+}
+
+/// The logistic sigmoid `1 / (1 + e^-x)` (future sequence-model heads;
+/// not yet fused into any epilogue).
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+// ----------------------------------------------------------- slice variants
+
+/// ReLU every element of `xs` (one counted pass).
+pub fn relu_in_place(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = relu(*v);
+    }
+    note(|c| c.relu += 1);
+}
+
+/// Broadcast-add `bias` over `xs` rows of `bias.len()` columns (one
+/// counted pass).  `xs.len()` must be a multiple of `bias.len()`.
+pub fn add_bias_in_place(xs: &mut [f32], bias: &[f32]) {
+    assert!(!bias.is_empty(), "empty bias");
+    assert_eq!(xs.len() % bias.len(), 0,
+               "tensor of {} elements is not rows of {} columns",
+               xs.len(), bias.len());
+    for row in xs.chunks_mut(bias.len()) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += *b;
+        }
+    }
+    note(|c| c.bias += 1);
+}
+
+/// Snap every element of `xs` onto `kind`'s representation lattice
+/// (one counted pass).
+pub fn quantize_in_place(kind: &ArithKind, xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = kind.quantize(*v);
+    }
+    note(|c| c.quantize += 1);
+}
+
+/// Numerically-stable softmax over rows of `width` columns, in place
+/// (one counted pass).  Max-shift, exponentiate, normalize — the same
+/// op order as the historical `layers::softmax`, which now routes
+/// through here.
+pub fn softmax_in_place(xs: &mut [f32], width: usize) {
+    assert!(width >= 1, "softmax needs >= 1 column");
+    assert_eq!(xs.len() % width, 0,
+               "tensor of {} elements is not rows of {width} columns",
+               xs.len());
+    for row in xs.chunks_mut(width) {
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    note(|c| c.softmax += 1);
+}
+
+/// Sigmoid every element of `xs` (one counted pass).
+pub fn sigmoid_in_place(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = sigmoid(*v);
+    }
+    note(|c| c.sigmoid += 1);
+}
+
+// ------------------------------------------------------------ pass counters
+
+/// Per-op tensor-pass counts (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PassCounts {
+    pub bias: u64,
+    pub relu: u64,
+    pub quantize: u64,
+    pub softmax: u64,
+    pub sigmoid: u64,
+}
+
+impl PassCounts {
+    /// Sum over all ops — handy for "no passes at all" assertions.
+    pub fn total(&self) -> u64 {
+        self.bias + self.relu + self.quantize + self.softmax
+            + self.sigmoid
+    }
+}
+
+thread_local! {
+    static PASSES: Cell<PassCounts> =
+        const { Cell::new(PassCounts { bias: 0, relu: 0, quantize: 0,
+                                       softmax: 0, sigmoid: 0 }) };
+}
+
+/// Cross-thread total (all ops, all threads) — the coarse companion to
+/// the precise thread-local [`pass_counts`], for tests whose layer
+/// work may run on pool threads.
+static PASSES_GLOBAL: AtomicU64 = AtomicU64::new(0);
+
+fn note(f: impl FnOnce(&mut PassCounts)) {
+    PASSES.with(|c| {
+        let mut v = c.get();
+        f(&mut v);
+        c.set(v);
+    });
+    PASSES_GLOBAL.fetch_add(1, Ordering::Relaxed);
+}
+
+/// This thread's per-op pass counts since thread start.  Tests
+/// snapshot before / after and compare deltas.
+pub fn pass_counts() -> PassCounts {
+    PASSES.with(|c| c.get())
+}
+
+/// Process-wide total passes across all ops and threads.
+pub fn pass_count_global() -> u64 {
+    PASSES_GLOBAL.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_branch_semantics() {
+        assert_eq!(relu(2.5), 2.5);
+        assert_eq!(relu(-2.5), 0.0);
+        assert_eq!(relu(0.0), 0.0);
+        // the branch keeps -0.0 (max would flip it to +0.0)
+        assert_eq!(relu(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert!(relu(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn slice_ops_match_scalar_defs() {
+        let before = pass_counts();
+        let mut xs = vec![-1.0f32, 0.5, -0.0, 3.0];
+        relu_in_place(&mut xs);
+        assert_eq!(xs, vec![0.0, 0.5, -0.0, 3.0]);
+
+        let mut xs = vec![0.0f32; 6];
+        add_bias_in_place(&mut xs, &[1.0, 2.0, 3.0]);
+        assert_eq!(xs, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+
+        let kind = ArithKind::parse("FI(2,2)").unwrap();
+        let mut xs = vec![0.3f32, -0.3, 10.0];
+        quantize_in_place(&kind, &mut xs);
+        assert_eq!(xs,
+                   vec![kind.quantize(0.3), kind.quantize(-0.3),
+                        kind.quantize(10.0)]);
+
+        let mut xs = vec![0.0f32, 1.0];
+        sigmoid_in_place(&mut xs);
+        assert_eq!(xs, vec![sigmoid(0.0), sigmoid(1.0)]);
+        assert_eq!(xs[0], 0.5);
+
+        let after = pass_counts();
+        assert_eq!(after.relu - before.relu, 1);
+        assert_eq!(after.bias - before.bias, 1);
+        assert_eq!(after.quantize - before.quantize, 1);
+        assert_eq!(after.sigmoid - before.sigmoid, 1);
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let before = pass_counts().softmax;
+        let mut xs = vec![1.0f32, 2.0, 3.0, -5.0, 0.0, 5.0];
+        softmax_in_place(&mut xs, 3);
+        for row in xs.chunks(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            assert!(row.iter().all(|&v| v > 0.0));
+        }
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+        assert_eq!(pass_counts().softmax - before, 1);
+    }
+
+    #[test]
+    fn global_counter_moves_with_any_pass() {
+        let g0 = pass_count_global();
+        relu_in_place(&mut [1.0, -1.0]);
+        assert!(pass_count_global() > g0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not rows of")]
+    fn bias_rejects_ragged_tensor() {
+        add_bias_in_place(&mut [0.0; 5], &[1.0, 2.0]);
+    }
+}

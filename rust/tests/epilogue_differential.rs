@@ -1,0 +1,468 @@
+//! Differential suite for the fused GEMM epilogues: applying
+//! bias / ReLU / requantize-for-the-consumer per cache-resident output
+//! tile (`gemm::Epilogue`) must be **bit-for-bit** what the unfused
+//! pipeline — the same GEMM followed by the standalone
+//! `nn::vecmath` passes — produces, for every `ArithKind`, at every
+//! ISA this machine can dispatch to (`isa::detected`), across edge
+//! shapes (m = 0, k = 0, n = 1, non-divisible-by-tile) and thread
+//! counts.
+//!
+//! Because fused and unfused run the *same kernel*, the bitwise
+//! contract holds for every kind including the AVX2+FMA f32 tier.
+//! Only the comparison against the scalar `reference` oracle applies
+//! the `fma_f32_bound` tolerance to that one kernel — the same policy
+//! as `tests/gemm_differential.rs`.
+//!
+//! The suite also pins the *structural* half of the fusion contract:
+//! a `dense(..)+relu` / `conv(..)+relu` forward pass performs ZERO
+//! standalone bias/relu tensor walks (`vecmath::pass_counts`), and a
+//! fully-fused network forward — including the
+//! requantize-for-the-consumer epilogue ahead of maxpool — equals a
+//! hand-built unfused forward bit-for-bit (sound because pack-time
+//! conditioning is idempotent over each provider's lattice and
+//! `maxpool2` commutes with the monotone `quantize`; both properties
+//! are themselves checked below).
+//!
+//! Run under `LOP_FORCE_ISA=scalar` to pin the portable epilogues on
+//! any machine (CI runs both legs).  Scale the randomized sweeps with
+//! `LOP_PROP_CASES=N`; failures print a replay snippet via
+//! `util::prop`.
+
+use lop::approx::arith::ArithKind;
+use lop::nn::conv::conv2d;
+use lop::nn::gemm::reference::gemm_reference;
+use lop::nn::gemm::{default_threads, fma_f32_bound, isa, Epilogue,
+                    GemmPlan, Isa};
+use lop::nn::layers::maxpool2;
+use lop::nn::quantizer::quantize_tensor;
+use lop::nn::spec::{Activation, LayerKind};
+use lop::nn::vecmath;
+use lop::nn::{Model, NetSpec, ReprMap, Tensor};
+use lop::util::prng::Rng;
+use lop::util::prop;
+
+/// One representative per `ArithKind` variant plus width variations —
+/// the same palette as `tests/gemm_differential.rs`.
+const KINDS: [&str; 11] = [
+    "float32",
+    "FI(6,8)",
+    "FI(3,4)",
+    "FI(8,11)",
+    "H(6,8,6)",
+    "H(8,8,14)",
+    "FL(4,9)",
+    "FL(5,10)",
+    "I(5,10)",
+    "I(4,9,2)",
+    "binxnor",
+];
+
+/// Consumer representations the `BiasReluQuant` epilogue snaps onto —
+/// one per provider family so the requantize leg covers every lattice.
+const CONSUMERS: [&str; 6] =
+    ["FI(3,4)", "float32", "FL(4,9)", "H(6,8,6)", "I(5,10)", "binxnor"];
+
+/// Epilogue shapes under test, by index: bias only, bias + ReLU,
+/// bias + ReLU + requantize-for-the-consumer.
+const VARIANTS: usize = 3;
+
+fn rand_operands(rng: &mut Rng, kind: &ArithKind, m: usize, k: usize,
+                 n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    // activations include exact zeros (zero-skip neutrality), weights
+    // pre-quantized per the layer contract; bias includes exact zeros
+    // and negatives so ReLU genuinely clamps some columns
+    let x: Vec<f32> = (0..m * k)
+        .map(|_| {
+            if rng.below(4) == 0 {
+                0.0
+            } else {
+                (rng.normal() * 2.0) as f32
+            }
+        })
+        .collect();
+    let w: Vec<f32> = (0..k * n)
+        .map(|_| kind.quantize(rng.normal() as f32))
+        .collect();
+    let bias: Vec<f32> = (0..n)
+        .map(|_| {
+            if rng.below(5) == 0 {
+                0.0
+            } else {
+                rng.normal() as f32
+            }
+        })
+        .collect();
+    (x, w, bias)
+}
+
+fn make_epilogue<'a>(variant: usize, bias: &'a [f32],
+                     quant: &ArithKind) -> Epilogue<'a> {
+    match variant {
+        0 => Epilogue::Bias { bias },
+        1 => Epilogue::BiasRelu { bias },
+        _ => Epilogue::BiasReluQuant { bias, quant: *quant },
+    }
+}
+
+/// The unfused pipeline the epilogue must reproduce bit-for-bit: the
+/// standalone `vecmath` passes, in epilogue order, over a finished
+/// GEMM output.
+fn separate_passes(variant: usize, out: &mut [f32], bias: &[f32],
+                   quant: &ArithKind) {
+    if out.is_empty() {
+        return;
+    }
+    vecmath::add_bias_in_place(out, bias);
+    if variant >= 1 {
+        vecmath::relu_in_place(out);
+    }
+    if variant >= 2 {
+        vecmath::quantize_in_place(quant, out);
+    }
+}
+
+/// Fused run (per-call-packed *and* prepacked weight paths) vs the
+/// same plan run unfused + `separate_passes`, bitwise, at every thread
+/// count.  The plan must already carry prepacked panels for (k, n).
+fn fused_vs_separate(plan: &GemmPlan, x: &[f32], w: &[f32],
+                     bias: &[f32], m: usize, k: usize, n: usize,
+                     variant: usize, quant: &ArithKind,
+                     thread_counts: &[usize]) -> Result<(), String> {
+    let ep = make_epilogue(variant, bias, quant);
+    let mut want = vec![f32::NAN; m * n];
+    plan.run(x, w, m, k, n, &mut want, 1);
+    separate_passes(variant, &mut want, bias, quant);
+    for &threads in thread_counts {
+        for prepacked in [false, true] {
+            let mut got = vec![f32::NAN; m * n];
+            if prepacked {
+                plan.run_prepacked_with(x, m, &mut got, threads, &ep);
+            } else {
+                plan.run_with(x, w, m, k, n, &mut got, threads, &ep);
+            }
+            for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+                if g.to_bits() != ww.to_bits() {
+                    return Err(format!(
+                        "variant {variant} [{}] ({m}x{k}x{n}, \
+                         threads={threads}, prepacked={prepacked}, \
+                         quant={}): out[{i}] = {g} ({:#010x}), \
+                         separate passes give {ww} ({:#010x})",
+                        plan.kernel_name(),
+                        quant.name(),
+                        g.to_bits(),
+                        ww.to_bits()
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// (m, k, n) edge shapes: empty output, empty reduction (epilogue
+/// still applies to the zero GEMM term), single column, single cell,
+/// exact tile multiples, tile + 1, and shapes crossing the KC = 256
+/// depth blocking.
+const EDGE_SHAPES: [(usize, usize, usize); 8] = [
+    (0, 5, 3),
+    (3, 0, 4),
+    (5, 7, 1),
+    (1, 1, 1),
+    (4, 64, 4),
+    (8, 129, 9),
+    (13, 300, 11),
+    (33, 257, 18),
+];
+
+#[test]
+fn fused_matches_separate_passes_edge_shapes_per_isa() {
+    let mut rng = Rng::new(0xE9);
+    for tier in isa::detected() {
+        for (ki, ks) in KINDS.iter().enumerate() {
+            let kind = ArithKind::parse(ks).unwrap();
+            for (si, &(m, k, n)) in EDGE_SHAPES.iter().enumerate() {
+                let (x, w, bias) =
+                    rand_operands(&mut rng, &kind, m, k, n);
+                let quant = ArithKind::parse(
+                    CONSUMERS[(ki + si) % CONSUMERS.len()])
+                    .unwrap();
+                let mut plan = GemmPlan::with_isa(&kind, tier);
+                plan.prepack(&w, k, n);
+                for variant in 0..VARIANTS {
+                    fused_vs_separate(&plan, &x, &w, &bias, m, k, n,
+                                      variant, &quant,
+                                      &[1, default_threads()])
+                        .unwrap();
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn randomized_fused_matches_separate_passes_per_isa() {
+    for tier in isa::detected() {
+        for (ki, ks) in KINDS.iter().enumerate() {
+            let kind = ArithKind::parse(ks).unwrap();
+            prop::check_msg(
+                &format!("fused == separate passes ({ks} @ {tier})"),
+                0xEF00 + ki as u64,
+                12,
+                |rng| {
+                    // m/n edges straddle the MR/NR tiles in play;
+                    // ~1 case in 5 is big enough that the
+                    // default-threads leg genuinely spawns threads
+                    let (m, n) = if rng.below(5) == 0 {
+                        (64 + rng.below(17) as usize,
+                         256 + rng.below(9) as usize)
+                    } else {
+                        (rng.below(34) as usize,
+                         1 + rng.below(32) as usize)
+                    };
+                    let k = rng.below(97) as usize;
+                    let variant = rng.below(VARIANTS as u64) as usize;
+                    let ci =
+                        rng.below(CONSUMERS.len() as u64) as usize;
+                    (m, k, n, variant, ci, rng.next_u64())
+                },
+                |&(m, k, n, variant, ci, seed)| {
+                    let mut rng = Rng::new(seed);
+                    let (x, w, bias) =
+                        rand_operands(&mut rng, &kind, m, k, n);
+                    let quant =
+                        ArithKind::parse(CONSUMERS[ci]).unwrap();
+                    let mut plan = GemmPlan::with_isa(&kind, tier);
+                    plan.prepack(&w, k, n);
+                    fused_vs_separate(&plan, &x, &w, &bias, m, k, n,
+                                      variant, &quant,
+                                      &[1, default_threads()])
+                },
+            );
+        }
+    }
+}
+
+/// Fused output vs the pre-tiling `reference` oracle + separate
+/// passes: bitwise for every kernel except AVX2+FMA f32, which is
+/// held to `fma_f32_bound` (bias adds the same term to both sides and
+/// ReLU is 1-Lipschitz, so the GEMM bound survives both; the
+/// requantize variant is excluded there — rounding can amplify a
+/// sub-bound difference across a lattice step — and is covered
+/// bitwise against the same-kernel pipeline above).
+#[test]
+fn fused_matches_reference_oracle_per_isa() {
+    let mut rng = Rng::new(0xAC);
+    for tier in isa::detected() {
+        for (ki, ks) in KINDS.iter().enumerate() {
+            let kind = ArithKind::parse(ks).unwrap();
+            let plan = GemmPlan::with_isa(&kind, tier);
+            let fma = kind == ArithKind::Float32
+                && plan.isa() != Isa::Scalar;
+            for (si, &(m, k, n)) in EDGE_SHAPES.iter().enumerate() {
+                let (x, w, bias) =
+                    rand_operands(&mut rng, &kind, m, k, n);
+                let quant = ArithKind::parse(
+                    CONSUMERS[(ki + si) % CONSUMERS.len()])
+                    .unwrap();
+                let bound = if fma {
+                    fma_f32_bound(&x, &w, m, k, n)
+                } else {
+                    Vec::new()
+                };
+                let variants = if fma { 2 } else { VARIANTS };
+                for variant in 0..variants {
+                    let mut want = vec![f32::NAN; m * n];
+                    gemm_reference(&kind, &x, &w, m, k, n, &mut want,
+                                   1);
+                    separate_passes(variant, &mut want, &bias, &quant);
+                    let ep = make_epilogue(variant, &bias, &quant);
+                    let mut got = vec![f32::NAN; m * n];
+                    plan.run_with(&x, &w, m, k, n, &mut got, 1, &ep);
+                    for (i, (g, ww)) in
+                        got.iter().zip(&want).enumerate()
+                    {
+                        let ok = if fma {
+                            (*g as f64 - *ww as f64).abs() <= bound[i]
+                        } else {
+                            g.to_bits() == ww.to_bits()
+                        };
+                        assert!(
+                            ok,
+                            "{ks}@{tier} variant {variant} \
+                             ({m}x{k}x{n}): out[{i}] = {g}, \
+                             reference pipeline gives {ww}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The soundness leg behind fusing the *consumer's* requantize into
+/// the producer's epilogue: every provider's `quantize` is idempotent
+/// over its own lattice and weakly monotone (so it commutes with
+/// `maxpool2`'s running max).
+#[test]
+fn quantize_is_idempotent_and_monotone() {
+    for ks in KINDS {
+        let kind = ArithKind::parse(ks).unwrap();
+        prop::check(
+            &format!("quantize idempotent + monotone ({ks})"),
+            0x1D + ks.len() as u64,
+            256,
+            |rng| {
+                let v = match rng.below(8) {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => (rng.normal() * 1000.0) as f32, // saturating
+                    _ => (rng.normal() * 4.0) as f32,
+                };
+                (v, (rng.normal() * 4.0) as f32)
+            },
+            |&(a, b)| {
+                let qa = kind.quantize(a);
+                let idem = kind.quantize(qa).to_bits() == qa.to_bits();
+                let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                let mono = kind.quantize(lo) <= kind.quantize(hi);
+                idem && mono
+            },
+        );
+    }
+}
+
+/// The structural acceptance pin: a fused `conv+relu` / `dense+relu`
+/// forward performs ZERO standalone elementwise tensor passes — bias,
+/// ReLU and the consumer requantize all ride the GEMM epilogue.
+/// `forward_capture` must still run the standalone ReLU (it profiles
+/// pre-activation ranges) but never a standalone bias pass.
+#[test]
+fn fused_forward_runs_zero_standalone_elementwise_passes() {
+    let spec = NetSpec::parse(
+        "8x8x1: conv(3x3,4,pad=1)+relu+pool | dense(6)+relu | dense(3)",
+    )
+    .unwrap();
+    let model = Model::synthetic(spec.clone(), 41);
+    let cfg =
+        ReprMap::parse_for(&spec, "FI(6,8)|FL(4,9)|float32").unwrap();
+    let net = model.prepare(&cfg);
+    let x = spec.synthetic_input(2, 42);
+
+    // threads = 1 keeps all layer work on this thread, so the
+    // thread-local counters see every standalone pass there is
+    let before = vecmath::pass_counts();
+    let out = net.forward(&x, 1);
+    let after = vecmath::pass_counts();
+    assert_eq!(out.shape, vec![2, 3]);
+    assert_eq!(
+        after, before,
+        "fused forward must not run any standalone vecmath pass"
+    );
+
+    let before = vecmath::pass_counts();
+    let (_, ranges) = net.forward_capture(&x, 1);
+    let after = vecmath::pass_counts();
+    assert_eq!(ranges.len(), 3);
+    assert_eq!(after.bias - before.bias, 0,
+               "capture must still fuse the bias");
+    assert_eq!(after.relu - before.relu, 2,
+               "capture applies standalone ReLU per activated layer");
+    assert_eq!(after.quantize - before.quantize, 0);
+}
+
+/// Hand-built unfused forward from the public pieces: per-call
+/// quantized weights, GEMM with `Epilogue::None`, then the standalone
+/// vecmath bias/ReLU passes and `maxpool2`.  No requantize pass — the
+/// next layer's GEMM conditions its activations on entry, which is
+/// where the idempotence + pool-commutation argument earns its keep.
+fn unfused_forward(model: &Model, cfg: &ReprMap, x: &Tensor,
+                   threads: usize) -> Tensor {
+    let spec = model.spec();
+    let b = x.shape[0];
+    let mut cur: Option<Tensor> = None;
+    for (li, layer) in spec.layers().iter().enumerate() {
+        let kind = cfg.kind(li);
+        let w = &model.params[&format!("{}_w", layer.name)];
+        let bias =
+            quantize_tensor(kind, &model.params
+                [&format!("{}_b", layer.name)]);
+        let plan = GemmPlan::new(kind);
+        let mut z = match layer.kind {
+            LayerKind::Conv2d { kh, kw, cout, pad, .. } => {
+                let inp = cur.as_ref().unwrap_or(x);
+                let (h, wd) = (inp.shape[1], inp.shape[2]);
+                let rows = w.len() / cout;
+                let w2 = quantize_tensor(kind, w)
+                    .reshape(vec![rows, cout]);
+                conv2d(&plan, inp, &w2, kh, kw, pad, threads)
+                    .reshape(vec![b, h, wd, cout])
+            }
+            LayerKind::Dense { d_in, d_out } => {
+                let flat = match cur.take() {
+                    Some(t) => t.reshape(vec![b, d_in]),
+                    None => {
+                        Tensor::new(vec![b, d_in], x.data.clone())
+                    }
+                };
+                let w2 = quantize_tensor(kind, w);
+                let mut out = Tensor::zeros(vec![b, d_out]);
+                plan.run(&flat.data, &w2.data, b, d_in, d_out,
+                         &mut out.data, threads);
+                out
+            }
+        };
+        vecmath::add_bias_in_place(&mut z.data, &bias.data);
+        if layer.activation == Activation::Relu {
+            vecmath::relu_in_place(&mut z.data);
+        }
+        if layer.pool {
+            z = maxpool2(&z);
+        }
+        cur = Some(z);
+    }
+    cur.expect("spec has at least one layer")
+}
+
+/// End-to-end: the fully-fused network forward — including the
+/// requantize-for-the-consumer epilogue running *before* maxpool —
+/// equals the hand-built unfused forward bit-for-bit, for uniform and
+/// mixed configurations, at every thread count.  Bitwise even for
+/// f32 at AVX2: both paths run the same kernels.
+#[test]
+fn fused_network_forward_matches_unfused_reference() {
+    let spec = NetSpec::parse(
+        "8x8x2: conv(3x3,4,pad=1)+relu+pool | \
+         conv(3x3,6,pad=1)+relu | dense(5)+relu | dense(3)",
+    )
+    .unwrap();
+    let model = Model::synthetic(spec.clone(), 71);
+    let x = spec.synthetic_input(3, 72);
+    for cs in [
+        "float32",
+        "FI(6,8)|FI(3,4)|H(6,8,6)|FL(4,9)",
+        "I(5,10)|binxnor|FI(6,8)|float32",
+    ] {
+        let cfg = if cs.contains('|') {
+            ReprMap::parse_for(&spec, cs).unwrap()
+        } else {
+            ReprMap::uniform_for(&spec,
+                                 ArithKind::parse(cs).unwrap())
+        };
+        let net = model.prepare(&cfg);
+        for threads in [1, default_threads()] {
+            let fused = net.forward(&x, threads);
+            let want = unfused_forward(&model, &cfg, &x, threads);
+            assert_eq!(fused.shape, want.shape, "{cs}");
+            for (i, (g, ww)) in
+                fused.data.iter().zip(&want.data).enumerate()
+            {
+                assert_eq!(
+                    g.to_bits(),
+                    ww.to_bits(),
+                    "{cs} (threads={threads}): logits[{i}] = {g}, \
+                     unfused reference gives {ww}"
+                );
+            }
+        }
+    }
+}
