@@ -1,12 +1,13 @@
-//! Design-space exploration (paper §4.2): the two-pass topological search
-//! over per-layer representations, with the hardware cost model as the
-//! pass-1 objective and accuracy as the constraint.
+//! Design-space exploration (paper §4.2, surrogate-guided): profile
+//! per-layer quality sensitivity once, score the whole candidate space
+//! through the analytic cost model, and only simulate the
+//! surrogate-predicted Pareto front through the real evaluator.
 //!
 //!     cargo run --release --example explore_dse
 
 use anyhow::Result;
 use lop::coordinator::eval::Evaluator;
-use lop::coordinator::explorer::{explore, ExploreOpts, Family};
+use lop::coordinator::explorer::{Explorer, ExploreOpts, Family};
 use lop::coordinator::ranges::profile_ranges;
 use lop::data::Dataset;
 use lop::hw::datapath::{Datapath, ARRIA10, N_PE};
@@ -42,35 +43,62 @@ fn main() -> Result<()> {
         second_pass: true,
         ..Default::default()
     };
-    println!("\nexploring: bound {:.0}%, frac BCI {:?}, families {:?}",
-             opts.accuracy_bound * 100.0, opts.frac_bci, opts.families);
-    let res = explore(&mut ev, &ranges, &opts)?;
+    println!("\nexploring: frac BCI {:?}, families {:?}, budget {:.0}%",
+             opts.frac_bci, opts.families,
+             (1.0 - opts.accuracy_bound) * 100.0);
+    let budget_frac = 1.0 - opts.accuracy_bound;
+    let front = Explorer::new(NetSpec::paper_dcnn())
+        .opts(opts)
+        .ranges(ranges)
+        .max_sims(8)
+        .calibration(64)
+        .run(&mut ev)?;
+    let baseline = front.baseline_accuracy();
 
-    println!("\nbaseline (subset) : {:.4}", res.baseline);
-    println!("pass-1 (cost-min) : {}  acc {:.4}", res.pass1.name(),
-             res.pass1_accuracy);
-    println!("pass-2 (recovery) : {}  acc {:.4}", res.chosen.name(),
-             res.accuracy);
-    println!("distinct configs evaluated: {}", res.evals);
+    println!("\nbaseline (subset) : {:.4}", baseline);
+    println!("candidate space   : {} configs", front.space());
+    println!("full simulations  : {} ({} saved by the surrogate)",
+             front.sims(),
+             front.space().saturating_sub(front.sims() as u64));
+    println!("\npareto front ({} cost model):", front.cost_source());
+    println!("  {:<44} {:>8} {:>8} {:>10} {:>8}  origin",
+             "config", "acc", "est", "lat(us)", "hw");
+    for p in front.points() {
+        println!("  {:<44} {:>8.4} {:>8.4} {:>10.1} {:>8.3}  {}",
+                 p.repr_map.name(), p.accuracy, p.est_accuracy,
+                 p.est_latency / 1_000.0, p.hw_cost,
+                 if p.simulated { "simulated" } else { "surrogate" });
+    }
+
     let cache = ev.plan_cache().stats();
-    println!("engine nets cached: {} ({:.2} MiB prepacked weight \
+    println!("\nengine nets cached: {} ({:.2} MiB prepacked weight \
               panels resident; {} prepares / {} hits / {} evictions \
               in the shared plan cache)",
              ev.prepared_nets(),
              ev.panel_bytes() as f64 / (1024.0 * 1024.0),
              cache.prepares, cache.hits, cache.evictions);
 
-    // hardware verdict on the chosen per-layer representations
-    println!("\nhardware cost of the chosen per-layer domains:");
-    for (li, kind) in res.chosen.kinds().iter().enumerate() {
-        let dp = Datapath::synthesize(kind, N_PE);
-        let (a, d) = dp.utilization(&ARRIA10);
-        println!(
-            "  layer {} {:<12} {:>8.0} ALMs ({:>4.1}%)  {:>4} DSPs \
-             ({:>4.1}%)  {:>6.2} Gops/J",
-            li, kind.name(), dp.alms, a * 100.0, dp.dsps, d * 100.0,
-            dp.gops_per_j
-        );
+    // hardware verdict on the cheapest config inside the budget
+    let budget = baseline * budget_frac;
+    match front.best_within(budget) {
+        Some(best) => {
+            println!("\ncheapest config with accuracy >= {budget:.4}: \
+                      {}  acc {:.4}",
+                     best.repr_map.name(), best.accuracy);
+            println!("hardware cost of its per-layer domains:");
+            for (li, kind) in best.repr_map.kinds().iter().enumerate() {
+                let dp = Datapath::synthesize(kind, N_PE);
+                let (a, d) = dp.utilization(&ARRIA10);
+                println!(
+                    "  layer {} {:<12} {:>8.0} ALMs ({:>4.1}%)  {:>4} \
+                     DSPs ({:>4.1}%)  {:>6.2} Gops/J",
+                    li, kind.name(), dp.alms, a * 100.0, dp.dsps,
+                    d * 100.0, dp.gops_per_j
+                );
+            }
+        }
+        None => println!("\nno front point met accuracy {budget:.4}; \
+                          widen the BCIs or loosen the bound"),
     }
     println!("\nexplore_dse OK");
     Ok(())

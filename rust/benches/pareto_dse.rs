@@ -1,0 +1,94 @@
+//! Surrogate-guided DSE end-to-end: how long one `Explorer::run` pass
+//! takes on a hermetic 3-layer MLP, and how many full-network
+//! simulations the surrogate front saves versus exhaustive
+//! enumeration of the same candidate space.
+//!
+//!     cargo bench --bench pareto_dse
+//!
+//! Emits `BENCH_pareto_dse.json` (override with
+//! `$LOP_PARETO_BENCH_JSON`) for CI trend tracking.
+
+use lop::coordinator::eval::Evaluator;
+use lop::coordinator::explorer::{Explorer, ExploreOpts, Family};
+use lop::coordinator::pareto::distill_labels;
+use lop::data::loader::{Dataset, Split};
+use lop::data::synth;
+use lop::nn::network::Model;
+use lop::nn::spec::NetSpec;
+use lop::util::bench::{fmt_ns, write_bench_json};
+use std::time::Instant;
+
+fn synth_dataset(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let (tr_imgs, tr_labels) = synth::generate(n_train, seed);
+    let (te_imgs, te_labels) = synth::generate(n_test, seed + 1);
+    Dataset {
+        h: 28,
+        w: 28,
+        train: Split { images: tr_imgs, labels: tr_labels },
+        test: Split { images: te_imgs, labels: te_labels },
+    }
+}
+
+fn main() {
+    let spec = NetSpec::parse(
+        "28x28x1: dense(32)+relu | dense(16)+relu | dense(10)",
+    )
+    .unwrap();
+    let model = Model::synthetic(spec.clone(), 42);
+    let mut ds = synth_dataset(256, 128, 4242);
+    // distilled labels: the float net's own predictions are ground
+    // truth, so accuracies measure representation error alone
+    distill_labels(&model, &mut ds, 0);
+    let mut ev = Evaluator::new(model, None, ds, 64, 0);
+
+    let opts = ExploreOpts {
+        accuracy_bound: 0.05,
+        frac_bci: (4, 8),
+        int_headroom: 1,
+        families: vec![Family::Fixed],
+        second_pass: true,
+        ..Default::default()
+    };
+
+    println!("pareto_dse: surrogate-guided DSE over '{spec}'\n");
+    let t0 = Instant::now();
+    let front = Explorer::new(spec.clone())
+        .opts(opts)
+        .max_sims(8)
+        .calibration(64)
+        .run(&mut ev)
+        .expect("explorer pass failed");
+    let elapsed = t0.elapsed();
+
+    let sims = front.sims() as u64;
+    let space = front.space();
+    assert!(sims < space,
+            "surrogate must save simulations ({sims} of {space})");
+    let saved = space - sims;
+    println!("candidate space    : {space} configs");
+    println!("full simulations   : {sims} ({saved} saved)");
+    println!("front points       : {}", front.points().len());
+    println!("baseline accuracy  : {:.4}", front.baseline_accuracy());
+    println!("cost model         : {}", front.cost_source());
+    println!("explorer wall time : {}",
+             fmt_ns(elapsed.as_nanos() as f64));
+    for p in front.points() {
+        println!("  {:<44} acc {:.4} lat {:>9.1} us hw {:.3} [{}]",
+                 p.repr_map.name(), p.accuracy,
+                 p.est_latency / 1_000.0, p.hw_cost,
+                 if p.simulated { "simulated" } else { "surrogate" });
+    }
+
+    let rows = vec![format!(
+        "\"series\": \"explorer_pass\", \"spec\": \"{spec}\", \
+         \"space\": {space}, \"front_points\": {}, \"sims\": {sims}, \
+         \"sims_saved\": {saved}, \"baseline\": {}, \
+         \"elapsed_ms\": {}, \"cost_source\": \"{}\"",
+        front.points().len(),
+        front.baseline_accuracy(),
+        elapsed.as_millis(),
+        front.cost_source()
+    )];
+    write_bench_json("pareto_dse", "LOP_PARETO_BENCH_JSON",
+                     "BENCH_pareto_dse.json", &rows);
+}

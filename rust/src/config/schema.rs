@@ -3,6 +3,7 @@
 
 use super::toml::TomlDoc;
 use crate::coordinator::explorer::{ExploreOpts, Family};
+use crate::coordinator::pareto::Objective;
 use crate::coordinator::router::OverloadPolicy;
 use crate::nn::spec::{NetSpec, ReprMap};
 use std::time::Duration;
@@ -30,6 +31,15 @@ pub struct ServeFileConfig {
     /// `deadline_ms` — server-wide default queueing deadline; absent
     /// means requests never expire in queue.
     pub deadline: Option<Duration>,
+    /// `auto = true` — pick the served config from a Pareto-front
+    /// artifact at startup instead of `configs`.
+    pub auto: bool,
+    /// `front` — path of the `pareto_front.json` artifact `auto`
+    /// loads (default `pareto_front.json`).
+    pub front: String,
+    /// `accuracy_budget` — the minimum accuracy `auto` selection must
+    /// meet (required when `auto = true` unless the CLI supplies it).
+    pub accuracy_budget: Option<f64>,
 }
 
 impl ServeFileConfig {
@@ -88,6 +98,15 @@ impl ServeFileConfig {
                     .to_string());
             }
         }
+        let accuracy_budget =
+            doc.get_float("serve", "accuracy_budget");
+        if let Some(b) = accuracy_budget {
+            if !(0.0..=1.0).contains(&b) {
+                return Err(format!(
+                    "serve.accuracy_budget {b} outside [0, 1]"
+                ));
+            }
+        }
         Ok(ServeFileConfig {
             spec,
             configs,
@@ -109,6 +128,12 @@ impl ServeFileConfig {
             use_pjrt,
             overload,
             deadline,
+            auto: doc.get_bool("serve", "auto").unwrap_or(false),
+            front: doc
+                .get_str("serve", "front")
+                .unwrap_or("pareto_front.json")
+                .to_string(),
+            accuracy_budget,
         })
     }
 }
@@ -118,6 +143,16 @@ impl ServeFileConfig {
 pub struct ExploreFileConfig {
     pub opts: ExploreOpts,
     pub subset: usize,
+    /// `objectives = ["accuracy", "latency", "hw"]` — the active
+    /// search dimensions (default: all three).
+    pub objectives: Vec<Objective>,
+    /// Cap on full-net simulations spent on the predicted front.
+    pub max_sims: usize,
+    /// Calibration batch size for the sensitivity sweep.
+    pub calib: usize,
+    /// Where to write the `pareto_front.json` artifact (`front_out`;
+    /// absent means don't write unless the CLI says so).
+    pub front_out: Option<String>,
 }
 
 impl ExploreFileConfig {
@@ -151,10 +186,39 @@ impl ExploreFileConfig {
                 })
                 .collect::<Result<Vec<_>, _>>()?;
         }
+        let objectives = match doc.get("explore", "objectives") {
+            Some(v) => {
+                let arr = v
+                    .as_array()
+                    .ok_or("explore.objectives must be array")?;
+                let names = arr
+                    .iter()
+                    .map(|o| {
+                        o.as_str()
+                            .ok_or("objective must be string")
+                            .map(str::to_string)
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                Objective::parse_list(&names.join(","))
+                    .map_err(|e| format!("explore.objectives: {e}"))?
+            }
+            None => {
+                crate::coordinator::pareto::ALL_OBJECTIVES.to_vec()
+            }
+        };
         Ok(ExploreFileConfig {
             opts,
             subset: doc.get_int("explore", "subset").unwrap_or(500)
                 as usize,
+            objectives,
+            max_sims: doc
+                .get_int("explore", "max_sims")
+                .unwrap_or(8) as usize,
+            calib: doc.get_int("explore", "calib").unwrap_or(64)
+                as usize,
+            front_out: doc
+                .get_str("explore", "front_out")
+                .map(str::to_string),
         })
     }
 }
@@ -271,6 +335,57 @@ second_pass = false
     }
 
     #[test]
+    fn explore_config_parses_surrogate_keys() {
+        let doc = TomlDoc::parse(
+            r#"
+[explore]
+objectives = ["accuracy", "hw"]
+max_sims = 4
+calib = 32
+front_out = "front.json"
+"#,
+        )
+        .unwrap();
+        let c = ExploreFileConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.objectives,
+                   vec![Objective::Accuracy, Objective::HwCost]);
+        assert_eq!(c.max_sims, 4);
+        assert_eq!(c.calib, 32);
+        assert_eq!(c.front_out.as_deref(), Some("front.json"));
+
+        let bad = TomlDoc::parse(
+            "[explore]\nobjectives = [\"speed\"]\n",
+        )
+        .unwrap();
+        let e = ExploreFileConfig::from_toml(&bad).unwrap_err();
+        assert!(e.contains("explore.objectives"), "{e}");
+    }
+
+    #[test]
+    fn serve_config_parses_auto_keys() {
+        let doc = TomlDoc::parse(
+            r#"
+[serve]
+auto = true
+front = "out/pareto_front.json"
+accuracy_budget = 0.9
+"#,
+        )
+        .unwrap();
+        let c = ServeFileConfig::from_toml(&doc).unwrap();
+        assert!(c.auto);
+        assert_eq!(c.front, "out/pareto_front.json");
+        assert_eq!(c.accuracy_budget, Some(0.9));
+
+        let bad = TomlDoc::parse(
+            "[serve]\naccuracy_budget = 1.5\n",
+        )
+        .unwrap();
+        let e = ServeFileConfig::from_toml(&bad).unwrap_err();
+        assert!(e.contains("accuracy_budget"), "{e}");
+    }
+
+    #[test]
     fn defaults_apply() {
         let doc = TomlDoc::parse("").unwrap();
         let c = ServeFileConfig::from_toml(&doc).unwrap();
@@ -280,7 +395,14 @@ second_pass = false
         // the pjrt default tracks the build: stub builds must not
         // plan for a worker that can never start
         assert_eq!(c.use_pjrt, cfg!(feature = "pjrt"));
+        assert!(!c.auto);
+        assert_eq!(c.front, "pareto_front.json");
+        assert_eq!(c.accuracy_budget, None);
         let e = ExploreFileConfig::from_toml(&doc).unwrap();
         assert_eq!(e.subset, 500);
+        assert_eq!(e.objectives.len(), 3);
+        assert_eq!(e.max_sims, 8);
+        assert_eq!(e.calib, 64);
+        assert_eq!(e.front_out, None);
     }
 }

@@ -1,29 +1,44 @@
-//! The paper's exploration strategy (§4.2), implemented verbatim:
+//! The design-space explorer.
 //!
-//! 1. Partition the network layer-wise; profile WBA value ranges
-//!    (Table 1) to lower-bound the range-determined field (integral bits /
-//!    exponent bits), widened for partial-sum growth.
-//! 2. Enumerate the accuracy-determined field (fractional / mantissa bits)
-//!    over a bit-count interval (BCI).
-//! 3. **Pass 1** (topological, input → output): per part, pick the
-//!    cheapest (hardware cost model) candidate whose accuracy loss is
-//!    within the bound — earlier parts frozen at their chosen configs,
-//!    later parts at full precision.
-//! 4. **Pass 2** (optional quality recovery): same order, later parts now
-//!    at their pass-1 configs; maximize accuracy subject to a bounded
-//!    hardware-cost increase (here: at most one extra accuracy bit, the
-//!    paper's own example of the constraint).
+//! Two search strategies share this module's candidate machinery:
+//!
+//! * [`Explorer`] (the supported API) — surrogate-guided,
+//!   multi-objective search: profile per-layer quality sensitivity and
+//!   an analytic/bench-calibrated cost model
+//!   ([`super::pareto`]), enumerate the predicted Pareto front by a
+//!   dominance-pruned layer DP, and spend the full-net `Evaluator`
+//!   budget only on predicted-front configs.  Returns a
+//!   [`ParetoFront`] artifact with per-point provenance.
+//! * [`explore`] (deprecated shim) — the paper's §4.2 two-pass greedy:
+//!   pass 1 picks the cheapest candidate within an accuracy bound,
+//!   pass 2 optionally widens by one accuracy bit.  Single-objective,
+//!   simulates every candidate; kept for one release for callers that
+//!   want the verbatim paper procedure.
+//!
+//! Candidate generation follows §4.2 in both: the range-determined
+//! field (integral/exponent bits) is lower-bounded by profiled WBA
+//! ranges, the accuracy-determined field (fraction/mantissa bits)
+//! enumerates a bit-count interval.  [`candidate_sets`] additionally
+//! consults each layer's parameter shapes — wider fan-in earns more
+//! partial-sum headroom — so non-paper topologies get per-layer, not
+//! broadcast, candidate sets.
 
 use super::eval::Evaluator;
-use super::ranges::{exp_bits_for, int_bits_for};
+use super::pareto::{
+    prune_nondominated, surrogate_front, CostModel, Objective,
+    ParetoFront, ParetoPoint, SensitivityProfile, ALL_OBJECTIVES,
+};
+use super::ranges::{exp_bits_for, int_bits_for, profile_ranges};
 use crate::approx::arith::ArithKind;
 use crate::approx::cfpu::CfpuMul;
 use crate::approx::drum::DrumMul;
 use crate::hw::datapath::{Datapath, ARRIA10, N_PE};
 use crate::nn::network::LayerRanges;
-use crate::nn::spec::ReprMap;
+use crate::nn::spec::{NetSpec, ReprMap};
 use crate::numeric::{FixedPoint, FloatRep};
-use anyhow::Result;
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
 
 /// Which representation families the search enumerates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,10 +56,11 @@ pub struct ExploreOpts {
     /// BCI for the accuracy-determined field (fraction / mantissa bits)
     pub frac_bci: (u32, u32),
     /// extra integral-bit headroom enumerated beyond the range bound
-    /// (partial-sum widening, §4.2)
+    /// (partial-sum widening, §4.2); [`candidate_sets`] adds a
+    /// per-layer fan-in term on top
     pub int_headroom: u32,
     pub families: Vec<Family>,
-    /// run the quality-recovery second pass
+    /// run the quality-recovery second pass (two-pass greedy only)
     pub second_pass: bool,
     /// DRUM widths / CFPU tuning widths enumerated for approx families
     pub drum_ts: Vec<u32>,
@@ -65,7 +81,7 @@ impl Default for ExploreOpts {
     }
 }
 
-/// One explored candidate at one part.
+/// One explored candidate at one part (two-pass greedy trace).
 #[derive(Clone, Debug)]
 pub struct TraceEntry {
     pub part: usize,
@@ -77,6 +93,7 @@ pub struct TraceEntry {
     pub pass: u8,
 }
 
+/// Result of the two-pass greedy [`explore`].
 #[derive(Clone, Debug)]
 pub struct ExploreResult {
     pub baseline: f64,
@@ -88,16 +105,21 @@ pub struct ExploreResult {
     pub trace: Vec<TraceEntry>,
 }
 
-/// Candidate providers for one part given its value range.
-pub fn candidates_for(range_mag: f64, opts: &ExploreOpts)
-                      -> Vec<ArithKind> {
+// ---------------------------------------------------------------------
+// candidate generation
+// ---------------------------------------------------------------------
+
+/// Enumerate candidate providers for one value-range magnitude with an
+/// explicit integral-bit headroom (the shared §4.2 core).
+fn candidates_for_mag(range_mag: f64, int_headroom: u32,
+                      opts: &ExploreOpts) -> Vec<ArithKind> {
     let mut out = Vec::new();
     let ilb = int_bits_for(range_mag);
     let elb = exp_bits_for(range_mag);
     for fam in &opts.families {
         match fam {
             Family::Fixed => {
-                for i in ilb..=ilb + opts.int_headroom {
+                for i in ilb..=ilb + int_headroom {
                     for f in opts.frac_bci.0..=opts.frac_bci.1 {
                         if i + f <= 22 {
                             out.push(ArithKind::FixedExact(
@@ -117,7 +139,7 @@ pub fn candidates_for(range_mag: f64, opts: &ExploreOpts)
                 }
             }
             Family::FixedDrum => {
-                for i in ilb..=ilb + opts.int_headroom {
+                for i in ilb..=ilb + int_headroom {
                     for f in opts.frac_bci.0..=opts.frac_bci.1 {
                         for &t in &opts.drum_ts {
                             if i + f <= 22 && t >= 2 && t <= i + f {
@@ -144,20 +166,370 @@ pub fn candidates_for(range_mag: f64, opts: &ExploreOpts)
     out
 }
 
+/// Candidate providers for one part given its value range.
+#[deprecated(
+    note = "use `candidate_sets` (per-layer, shape-aware) or the \
+            `Explorer` builder"
+)]
+pub fn candidates_for(range_mag: f64, opts: &ExploreOpts)
+                      -> Vec<ArithKind> {
+    candidates_for_mag(range_mag, opts.int_headroom, opts)
+}
+
+/// Extra integral-bit headroom a layer earns from its fan-in: a dot
+/// product of `k` terms can grow partial sums by up to `log2(k)` bits,
+/// of which roughly half materialize for centered data (§4.2's
+/// widening argument), capped so huge layers don't blow the 22-bit
+/// fixed budget.
+fn fanin_headroom(spec: &NetSpec, layer: usize) -> u32 {
+    let (wshape, _) = spec.layers()[layer].param_shapes();
+    let fan_in: usize =
+        wshape[..wshape.len() - 1].iter().product::<usize>().max(1);
+    (((fan_in as f64).log2().ceil() as u32) / 2).min(4)
+}
+
+/// Candidate providers for one layer: range-driven like
+/// [`candidates_for`], plus shape-aware integral headroom from the
+/// layer's parameter fan-in.
+pub fn layer_candidates(spec: &NetSpec, layer: usize,
+                        ranges: &[LayerRanges], opts: &ExploreOpts)
+                        -> Result<Vec<ArithKind>, String> {
+    let n = spec.len();
+    if layer >= n {
+        return Err(format!(
+            "layer {layer} out of range for the {n}-layer spec \
+             '{spec}'"
+        ));
+    }
+    if ranges.len() != n {
+        return Err(format!(
+            "layer {}/{n}: {} WBA range entries for the {n}-layer \
+             spec '{spec}' (profile one range per layer)",
+            layer + 1,
+            ranges.len()
+        ));
+    }
+    let mag = {
+        let c = ranges[layer].combined();
+        (c.0.abs()).max(c.1.abs()) as f64
+    };
+    let headroom = opts.int_headroom + fanin_headroom(spec, layer);
+    let cands = candidates_for_mag(mag, headroom, opts);
+    if cands.is_empty() {
+        return Err(format!(
+            "layer {}/{n} ('{}'): no candidates for range magnitude \
+             {mag} under the configured families/BCI",
+            layer + 1,
+            ranges[layer].layer
+        ));
+    }
+    Ok(cands)
+}
+
+/// Per-layer candidate sets for a whole spec (the bug-fixed
+/// replacement for broadcasting one `candidates_for` call): arity is
+/// checked against the spec and every layer's set reflects its own
+/// range *and* parameter shape.
+pub fn candidate_sets(spec: &NetSpec, ranges: &[LayerRanges],
+                      opts: &ExploreOpts)
+                      -> Result<Vec<Vec<ArithKind>>, String> {
+    if ranges.len() != spec.len() {
+        return Err(format!(
+            "{} WBA range entries for the {}-layer spec '{spec}' \
+             (profile one range per layer)",
+            ranges.len(),
+            spec.len()
+        ));
+    }
+    (0..spec.len())
+        .map(|l| layer_candidates(spec, l, ranges, opts))
+        .collect()
+}
+
 /// Hardware cost of a *uniform* datapath built from one part's provider —
 /// the per-part objective the greedy pass minimizes.
 fn part_cost(kind: &ArithKind) -> f64 {
     Datapath::synthesize(kind, N_PE).explore_cost(&ARRIA10)
 }
 
+// ---------------------------------------------------------------------
+// the fluent Explorer
+// ---------------------------------------------------------------------
+
+/// Fluent, surrogate-guided multi-objective explorer.
+///
+/// ```no_run
+/// # use lop::coordinator::explorer::Explorer;
+/// # use lop::coordinator::pareto::Objective;
+/// # fn demo(ev: &mut lop::coordinator::eval::Evaluator) {
+/// let front = Explorer::new(ev.spec().clone())
+///     .objectives(&[Objective::Accuracy, Objective::HwCost])
+///     .budget(0.9)
+///     .max_sims(8)
+///     .run(ev)
+///     .unwrap();
+/// println!("{} points, {} sims", front.points().len(), front.sims());
+/// # }
+/// ```
+///
+/// `run` profiles ranges (unless provided), builds per-layer candidate
+/// sets ([`candidate_sets`]), fits the quality/cost surrogates, prunes
+/// the space to the predicted front, and simulates at most
+/// [`Explorer::max_sims`] of those configs through the real evaluator.
+#[derive(Clone, Debug)]
+pub struct Explorer {
+    spec: NetSpec,
+    opts: ExploreOpts,
+    objectives: Vec<Objective>,
+    budget: Option<f64>,
+    max_sims: usize,
+    calib: usize,
+    beam: usize,
+    ranges: Option<Vec<LayerRanges>>,
+    candidates: Option<Vec<Vec<ArithKind>>>,
+    bench_json: Option<PathBuf>,
+}
+
+impl Explorer {
+    pub fn new(spec: NetSpec) -> Explorer {
+        Explorer {
+            spec,
+            opts: ExploreOpts::default(),
+            objectives: ALL_OBJECTIVES.to_vec(),
+            budget: None,
+            max_sims: 8,
+            calib: 64,
+            beam: 512,
+            ranges: None,
+            candidates: None,
+            bench_json: None,
+        }
+    }
+
+    /// Candidate-generation options (families, BCI, headroom).
+    pub fn opts(mut self, opts: ExploreOpts) -> Explorer {
+        self.opts = opts;
+        self
+    }
+
+    /// Active objectives (default: all three).  Duplicates collapse.
+    pub fn objectives(mut self, objectives: &[Objective]) -> Explorer {
+        let mut o = Vec::new();
+        for &x in objectives {
+            if !o.contains(&x) {
+                o.push(x);
+            }
+        }
+        if !o.is_empty() {
+            self.objectives = o;
+        }
+        self
+    }
+
+    /// Accuracy budget: the first simulation slot goes to the cheapest
+    /// predicted point meeting it, and [`ParetoFront::best_within`]
+    /// answers serving-time selection against the same number.
+    pub fn budget(mut self, accuracy_budget: f64) -> Explorer {
+        self.budget = Some(accuracy_budget);
+        self
+    }
+
+    /// Cap on full-net evaluator simulations spent on the predicted
+    /// front (the baseline float32 evaluation is not counted).
+    pub fn max_sims(mut self, max_sims: usize) -> Explorer {
+        self.max_sims = max_sims;
+        self
+    }
+
+    /// Calibration batch size for the perturbation sweep (drawn from
+    /// the head of the evaluator's subset, so calibration inputs are
+    /// a subset of what simulation measures).
+    pub fn calibration(mut self, n: usize) -> Explorer {
+        self.calib = n.max(1);
+        self
+    }
+
+    /// DP beam cap (kept points per layer step).
+    pub fn beam(mut self, beam: usize) -> Explorer {
+        self.beam = beam.max(1);
+        self
+    }
+
+    /// Use pre-profiled WBA ranges instead of profiling in `run`.
+    pub fn ranges(mut self, ranges: Vec<LayerRanges>) -> Explorer {
+        self.ranges = Some(ranges);
+        self
+    }
+
+    /// Override candidate generation entirely (AxOSyn-style extension
+    /// point: any per-layer `ArithKind` sets, e.g. for operators the
+    /// built-in families don't enumerate).
+    pub fn candidates(mut self, candidates: Vec<Vec<ArithKind>>)
+                      -> Explorer {
+        self.candidates = Some(candidates);
+        self
+    }
+
+    /// Calibrate the latency scale from a `BENCH_gemm_kernels.json`
+    /// (used only when every candidate kind has a measured row).
+    pub fn bench_json(mut self, path: PathBuf) -> Explorer {
+        self.bench_json = Some(path);
+        self
+    }
+
+    /// Run the search.  See the type-level docs for the pipeline.
+    pub fn run(self, ev: &mut Evaluator) -> Result<ParetoFront> {
+        if &self.spec != ev.spec() {
+            bail!("Explorer spec '{}' does not match the evaluator's \
+                   '{}'",
+                  self.spec, ev.spec());
+        }
+        let spec = self.spec;
+        let cands = match self.candidates {
+            Some(c) => {
+                if c.len() != spec.len() {
+                    bail!("{} candidate sets for the {}-layer spec \
+                           '{spec}'",
+                          c.len(), spec.len());
+                }
+                for (l, set) in c.iter().enumerate() {
+                    if set.is_empty() {
+                        bail!("layer {}/{}: empty candidate set",
+                              l + 1, spec.len());
+                    }
+                }
+                c
+            }
+            None => {
+                let ranges = match self.ranges {
+                    Some(r) => r,
+                    None => profile_ranges(ev.model(), ev.dataset(),
+                                           256, ev.threads),
+                };
+                match candidate_sets(&spec, &ranges, &self.opts) {
+                    Ok(c) => c,
+                    Err(e) => bail!("{e}"),
+                }
+            }
+        };
+        let cost = CostModel::calibrated(&spec, &cands,
+                                         self.bench_json.as_deref());
+
+        // baseline + calibration batch off the evaluator's own subset
+        let f32_cfg = ReprMap::uniform_for(&spec, ArithKind::Float32);
+        let baseline = ev.accuracy(&f32_cfg)?;
+        let calib_n = self.calib.min(ev.subset.len()).max(1);
+        let calib_idx: Vec<usize> =
+            ev.subset[..calib_n].to_vec();
+        let calib_x =
+            ev.dataset().batch(&ev.dataset().test, &calib_idx);
+        let profile = SensitivityProfile::profile(
+            ev.model(), &calib_x, &cands, ev.threads,
+        );
+
+        // surrogate-predicted front over the full space
+        let space = cands
+            .iter()
+            .fold(1u64, |a, c| a.saturating_mul(c.len() as u64));
+        let predicted = surrogate_front(&spec, &profile, &cost, &cands,
+                                        &self.objectives, self.beam);
+        let mut points: Vec<ParetoPoint> = predicted
+            .into_iter()
+            .map(|(repr_map, v)| {
+                let est = (baseline - v[0]).clamp(0.0, 1.0);
+                ParetoPoint {
+                    repr_map,
+                    accuracy: est,
+                    est_accuracy: est,
+                    est_latency: v[1],
+                    hw_cost: v[2],
+                    simulated: false,
+                }
+            })
+            .collect();
+        points.sort_by(|a, b| {
+            a.hw_cost
+                .total_cmp(&b.hw_cost)
+                .then(a.est_latency.total_cmp(&b.est_latency))
+        });
+
+        // spend the simulation budget: the budget-meeting pick first,
+        // then an even spread across the hw-sorted front
+        let mut picks: BTreeSet<usize> = BTreeSet::new();
+        if !points.is_empty() && self.max_sims > 0 {
+            if let Some(b) = self.budget {
+                if let Some(i) =
+                    points.iter().position(|p| p.est_accuracy >= b)
+                {
+                    picks.insert(i);
+                }
+            }
+            let last = points.len() - 1;
+            let slots = self.max_sims.min(points.len());
+            for s in 0..slots {
+                if picks.len() >= self.max_sims {
+                    break;
+                }
+                picks.insert(s * last / (slots - 1).max(1));
+            }
+            while picks.len() > self.max_sims {
+                let max = *picks.iter().next_back().unwrap();
+                picks.remove(&max);
+            }
+        }
+        let mut sims = 0;
+        for &i in &picks {
+            let acc = ev.accuracy(&points[i].repr_map)?;
+            points[i].accuracy = acc;
+            points[i].simulated = true;
+            sims += 1;
+        }
+
+        // measured accuracy can reorder the front — re-prune on the
+        // final (loss, latency, hw) vectors before emitting
+        let scored: Vec<(ParetoPoint, [f64; 3])> = points
+            .into_iter()
+            .map(|p| {
+                let v = [1.0 - p.accuracy, p.est_latency, p.hw_cost];
+                (p, v)
+            })
+            .collect();
+        let final_points: Vec<ParetoPoint> =
+            prune_nondominated(scored, &self.objectives)
+                .into_iter()
+                .map(|(p, _)| p)
+                .collect();
+
+        Ok(ParetoFront::from_points(&spec, final_points, baseline,
+                                    sims, space, cost.source()))
+    }
+}
+
+// ---------------------------------------------------------------------
+// the two-pass greedy (deprecated shim around the §4.2 procedure)
+// ---------------------------------------------------------------------
+
 /// Run the full §4.2 exploration over however many parts the
 /// evaluator's topology has (one part per layer — `spec.len()`, the
 /// arity `ranges` must match).
+#[deprecated(
+    note = "use the `Explorer` builder (surrogate-guided, \
+            multi-objective); this simulates every candidate"
+)]
 pub fn explore(ev: &mut Evaluator, ranges: &[LayerRanges],
                opts: &ExploreOpts) -> Result<ExploreResult> {
+    explore_greedy(ev, ranges, opts)
+}
+
+fn explore_greedy(ev: &mut Evaluator, ranges: &[LayerRanges],
+                  opts: &ExploreOpts) -> Result<ExploreResult> {
     let n_parts = ranges.len();
-    assert_eq!(n_parts, ev.spec().len(),
-               "one WBA range per layer-wise partition part");
+    let spec = ev.spec().clone();
+    if n_parts != spec.len() {
+        bail!("{} WBA range entries for the {}-layer spec '{spec}' \
+               (profile one range per layer)",
+              n_parts, spec.len());
+    }
     let f32_uniform = ReprMap::uniform(ArithKind::Float32, n_parts);
     let baseline = ev.accuracy(&f32_uniform)?;
     let floor = baseline * (1.0 - opts.accuracy_bound);
@@ -166,11 +538,10 @@ pub fn explore(ev: &mut Evaluator, ranges: &[LayerRanges],
     // ---------- pass 1: cost-min subject to accuracy ----------
     let mut cfg = f32_uniform;
     for part in 0..n_parts {
-        let mag = {
-            let c = ranges[part].combined();
-            (c.0.abs()).max(c.1.abs()) as f64
+        let cands = match layer_candidates(&spec, part, ranges, opts) {
+            Ok(c) => c,
+            Err(e) => bail!("{e}"),
         };
-        let cands = candidates_for(mag, opts);
         let mut best: Option<(f64, ArithKind, f64)> = None; // (cost, k, acc)
         let mut fallback: Option<(f64, ArithKind, f64)> = None; // max acc
         for cand in cands {
@@ -295,8 +666,8 @@ mod tests {
             int_headroom: 1,
             ..Default::default()
         };
-        let cands = candidates_for(9.85, &opts); // paper FC1 range
-        // i in {4, 5}, f in {4, 5, 6} -> 6 candidates
+        let cands = candidates_for_mag(9.85, opts.int_headroom, &opts);
+        // i in {4, 5}, f in {4, 5, 6} -> 6 candidates (paper FC1 range)
         assert_eq!(cands.len(), 6);
         for c in &cands {
             match c {
@@ -310,6 +681,21 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_matches_the_mag_core() {
+        let opts = ExploreOpts {
+            families: vec![Family::Fixed],
+            frac_bci: (4, 6),
+            int_headroom: 1,
+            ..Default::default()
+        };
+        assert_eq!(
+            candidates_for(9.85, &opts),
+            candidates_for_mag(9.85, opts.int_headroom, &opts)
+        );
+    }
+
+    #[test]
     fn float_candidates_have_range_determined_exponent() {
         let opts = ExploreOpts {
             families: vec![Family::Float],
@@ -317,7 +703,7 @@ mod tests {
             ..Default::default()
         };
         // paper FC2 range |35.76| -> e = 4 suffices (2^8 = 256)
-        for c in candidates_for(35.76, &opts) {
+        for c in candidates_for_mag(35.76, opts.int_headroom, &opts) {
             match c {
                 ArithKind::FloatExact(r) => assert_eq!(r.e_bits, 4),
                 _ => panic!(),
@@ -344,8 +730,69 @@ mod tests {
             cfpu_ws: vec![3],
             ..Default::default()
         };
-        let cands = candidates_for(9.85, &opts);
+        let cands = candidates_for_mag(9.85, opts.int_headroom, &opts);
         assert!(cands.iter().any(|c| c.name().starts_with("H(")));
         assert!(cands.iter().any(|c| c.name().starts_with("I(")));
+    }
+
+    fn ranges_for(spec: &NetSpec, mag: f32) -> Vec<LayerRanges> {
+        spec.layers()
+            .iter()
+            .map(|l| LayerRanges {
+                layer: l.name.clone(),
+                w: (-mag, mag),
+                b: (-mag, mag),
+                a: (-mag, mag),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn candidate_sets_are_per_layer_and_shape_aware() {
+        // conv fan-in 3*3*1 = 9 -> headroom 2; fc fan-in 1568 -> 4
+        let spec = NetSpec::parse(
+            "28x28x1: conv(3x3,8,pad=1)+relu+pool | dense(10)",
+        )
+        .unwrap();
+        let opts = ExploreOpts {
+            families: vec![Family::Fixed],
+            frac_bci: (4, 4),
+            int_headroom: 0,
+            ..Default::default()
+        };
+        let sets =
+            candidate_sets(&spec, &ranges_for(&spec, 9.85), &opts)
+                .unwrap();
+        assert_eq!(sets.len(), 2);
+        let max_i = |set: &[ArithKind]| {
+            set.iter()
+                .map(|k| match k {
+                    ArithKind::FixedExact(r) => r.i_bits,
+                    _ => panic!(),
+                })
+                .max()
+                .unwrap()
+        };
+        // same range, different shapes -> different candidate sets
+        assert_eq!(max_i(&sets[0]), 4 + 2);
+        assert_eq!(max_i(&sets[1]), 4 + 4);
+        assert!(sets[1].len() > sets[0].len());
+    }
+
+    #[test]
+    fn candidate_sets_reject_arity_mismatch() {
+        let spec = NetSpec::parse(
+            "28x28x1: dense(16)+relu | dense(10)",
+        )
+        .unwrap();
+        let opts = ExploreOpts::default();
+        let one = ranges_for(&spec, 1.0)[..1].to_vec();
+        let err = candidate_sets(&spec, &one, &opts).unwrap_err();
+        assert!(err.contains("1 WBA range entries"), "{err}");
+        assert!(err.contains("2-layer"), "{err}");
+        let err =
+            layer_candidates(&spec, 5, &ranges_for(&spec, 1.0), &opts)
+                .unwrap_err();
+        assert!(err.contains("layer 5"), "{err}");
     }
 }

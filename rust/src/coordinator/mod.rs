@@ -2,7 +2,13 @@
 //!
 //! * `ranges`   — WBA value-range profiling (paper Table 1, §4.2)
 //! * `eval`     — accuracy evaluation with backend selection + memoization
-//! * `explorer` — the two-pass topological exploration strategy (§4.2)
+//! * `explorer` — the fluent `Explorer` driver: the paper's two-pass
+//!   topological strategy (§4.2) plus the surrogate-guided
+//!   multi-objective search, per-layer candidate generation
+//! * `pareto`   — surrogate machinery for the explorer: quality
+//!   sensitivity profiles, the analytic/bench-calibrated cost model,
+//!   dominance pruning, and the `pareto_front.json` artifact that
+//!   `serve --auto` consumes
 //! * `batcher`/`server`/`router` — the inference serving runtime: request
 //!   routing with deadline-aware admission and an overload policy
 //!   (reject / shed / degrade-to-cheaper-config), per-config dynamic
@@ -17,6 +23,7 @@ pub mod batcher;
 pub mod eval;
 pub mod explorer;
 pub mod metrics;
+pub mod pareto;
 pub mod plan_cache;
 pub mod ranges;
 pub mod router;

@@ -1,0 +1,1001 @@
+//! Surrogate-guided, Pareto-front design-space exploration — the autoAx
+//! shape (PAPERS.md, arXiv 1902.10807) grafted onto the paper's §4.2
+//! layer-wise search:
+//!
+//! * **Quality surrogate** ([`SensitivityProfile`]): quantize one layer
+//!   at a time (every other layer at float32), run a small calibration
+//!   batch, and record the fraction of predictions that flip.  Under
+//!   the additive-independence assumption the predicted accuracy of a
+//!   mixed config is `baseline - sum(per-layer drops)` — one forward
+//!   pass per (layer, candidate) instead of per *combination*.
+//! * **Cost surrogate** ([`CostModel`]): analytic ns/MAC per
+//!   [`ArithKind`] from [`Datapath::synthesize`] fmax at [`N_PE`] PEs,
+//!   optionally re-calibrated from measured `BENCH_gemm_kernels.json`
+//!   throughput rows; latency is `sum(layer_macs[i] * ns_per_mac)`,
+//!   hardware cost the mean per-layer [`Datapath::explore_cost`].
+//! * **Dominance-pruned search** ([`surrogate_front`]): a layer-by-layer
+//!   dynamic program over (accuracy-drop, latency, hw-cost) triples.
+//!   Per-layer contributions are additive in all three objectives, so a
+//!   config whose prefix is dominated cannot re-enter the front — each
+//!   DP step prunes to the non-dominated set (plus a deterministic beam
+//!   cap) before the next cross-product.
+//! * **Provenance-carrying artifact** ([`ParetoFront`]): only
+//!   surrogate-predicted-front configs are simulated through the real
+//!   `Evaluator`/PlanCache path (the `Explorer` drives that), and every
+//!   emitted point says whether its accuracy is measured or predicted.
+//!   `serve --auto` re-loads the artifact via [`ParetoFront::from_json`]
+//!   and [`auto_config`] picks the cheapest config meeting an accuracy
+//!   budget at startup.
+//!
+//! The fluent driver that ties these to an `Evaluator` lives in
+//! [`super::explorer::Explorer`]; this module is the pure machinery so
+//! every piece is unit-testable without a dataset.
+
+use crate::approx::arith::ArithKind;
+use crate::data::loader::{Dataset, Split};
+use crate::hw::datapath::{Datapath, ARRIA10, N_PE};
+use crate::nn::network::Model;
+use crate::nn::spec::{NetSpec, ReprMap};
+use crate::nn::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Tie tolerance for dominance comparisons on measured quantities.
+pub const EPS: f64 = 1e-9;
+
+// ---------------------------------------------------------------------
+// objectives and dominance
+// ---------------------------------------------------------------------
+
+/// One search objective.  Internally every objective is *minimized*
+/// over a fixed `[f64; 3]` vector: index 0 is accuracy loss (predicted
+/// drop during the search, `1 - measured` afterwards), index 1 latency
+/// in ns, index 2 hardware cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    Accuracy,
+    Latency,
+    HwCost,
+}
+
+/// Every objective, in vector-index order.
+pub const ALL_OBJECTIVES: [Objective; 3] =
+    [Objective::Accuracy, Objective::Latency, Objective::HwCost];
+
+impl Objective {
+    /// Index into the minimized `[acc_loss, latency_ns, hw_cost]`
+    /// objective vector.
+    pub fn index(&self) -> usize {
+        match self {
+            Objective::Accuracy => 0,
+            Objective::Latency => 1,
+            Objective::HwCost => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Accuracy => "accuracy",
+            Objective::Latency => "latency",
+            Objective::HwCost => "hw",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Objective, String> {
+        match s.trim() {
+            "accuracy" | "acc" => Ok(Objective::Accuracy),
+            "latency" | "lat" => Ok(Objective::Latency),
+            "hw" | "hw_cost" | "cost" => Ok(Objective::HwCost),
+            other => Err(format!(
+                "unknown objective '{other}' \
+                 (expected accuracy, latency, or hw)"
+            )),
+        }
+    }
+
+    /// Parse a comma-separated objective list, e.g. `accuracy,hw`.
+    pub fn parse_list(s: &str) -> Result<Vec<Objective>, String> {
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            if part.trim().is_empty() {
+                continue;
+            }
+            let o = Objective::parse(part)?;
+            if !out.contains(&o) {
+                out.push(o);
+            }
+        }
+        if out.is_empty() {
+            return Err(format!("no objectives in '{s}'"));
+        }
+        Ok(out)
+    }
+}
+
+/// Strict Pareto dominance on full minimized vectors: `a` is no worse
+/// everywhere and strictly better somewhere.
+pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    dominates_on(a, b, &ALL_OBJECTIVES)
+}
+
+/// [`dominates`] restricted to the active objectives.
+pub fn dominates_on(a: &[f64; 3], b: &[f64; 3],
+                    objectives: &[Objective]) -> bool {
+    let mut strict = false;
+    for o in objectives {
+        let j = o.index();
+        if a[j] > b[j] {
+            return false;
+        }
+        if a[j] < b[j] {
+            strict = true;
+        }
+    }
+    strict
+}
+
+fn proj_eq(a: &[f64; 3], b: &[f64; 3], objectives: &[Objective]) -> bool {
+    objectives.iter().all(|o| a[o.index()] == b[o.index()])
+}
+
+/// Indices of the non-dominated points (ties kept, order preserved).
+/// This is the *reference* O(n^2) definition the tests and the CI gate
+/// check the pruned search against.
+pub fn pareto_front_indices(points: &[[f64; 3]]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, p)| j != i && dominates(p, &points[i]))
+        })
+        .collect()
+}
+
+/// Prune `items` to the non-dominated set under `objectives`,
+/// deduplicating points whose *projected* vectors are equal (the first
+/// in lexicographic full-vector order wins, which makes the result
+/// deterministic regardless of input order).
+pub fn prune_nondominated<T>(mut items: Vec<(T, [f64; 3])>,
+                             objectives: &[Objective])
+                             -> Vec<(T, [f64; 3])> {
+    items.sort_by(|a, b| {
+        a.1[0]
+            .total_cmp(&b.1[0])
+            .then(a.1[1].total_cmp(&b.1[1]))
+            .then(a.1[2].total_cmp(&b.1[2]))
+    });
+    let mut kept: Vec<(T, [f64; 3])> = Vec::new();
+    'next: for (t, v) in items {
+        for (_, kv) in &kept {
+            if dominates_on(kv, &v, objectives)
+                || proj_eq(kv, &v, objectives)
+            {
+                continue 'next;
+            }
+        }
+        // Sort order is lexicographic on the *full* vector, so under a
+        // projected objective set a later item can still dominate an
+        // earlier keep — the backward retain is load-bearing.
+        kept.retain(|(_, kv)| !dominates_on(&v, kv, objectives));
+        kept.push((t, v));
+    }
+    kept
+}
+
+// ---------------------------------------------------------------------
+// quality surrogate
+// ---------------------------------------------------------------------
+
+/// Per-layer quality sensitivity: for each layer, the prediction-flip
+/// fraction of each candidate kind measured with *only that layer*
+/// quantized (one-pass perturbation sweep on a calibration batch).
+#[derive(Clone, Debug)]
+pub struct SensitivityProfile {
+    drops: Vec<Vec<(ArithKind, f64)>>,
+}
+
+impl SensitivityProfile {
+    /// Run the perturbation sweep: one forward per (layer, candidate)
+    /// on `calib_x`, against the float32 baseline predictions.
+    pub fn profile(model: &Model, calib_x: &Tensor,
+                   candidates: &[Vec<ArithKind>], threads: usize)
+                   -> SensitivityProfile {
+        let spec = model.spec();
+        assert_eq!(candidates.len(), spec.len(),
+                   "one candidate set per layer");
+        let f32_cfg = ReprMap::uniform_for(spec, ArithKind::Float32);
+        let base = model.prepare(&f32_cfg).predict(calib_x, threads);
+        let n = base.len().max(1) as f64;
+        let mut drops = Vec::with_capacity(candidates.len());
+        for (layer, cands) in candidates.iter().enumerate() {
+            let mut row = Vec::with_capacity(cands.len());
+            for &kind in cands {
+                let drop = if kind == ArithKind::Float32 {
+                    0.0
+                } else {
+                    let mut cfg = f32_cfg.clone();
+                    cfg.set(layer, kind);
+                    let pred =
+                        model.prepare(&cfg).predict(calib_x, threads);
+                    let flips = pred
+                        .iter()
+                        .zip(&base)
+                        .filter(|(p, b)| p != b)
+                        .count();
+                    flips as f64 / n
+                };
+                row.push((kind, drop));
+            }
+            drops.push(row);
+        }
+        SensitivityProfile { drops }
+    }
+
+    /// Build a profile from precomputed drops (tests, replay).
+    pub fn from_drops(drops: Vec<Vec<(ArithKind, f64)>>)
+                      -> SensitivityProfile {
+        SensitivityProfile { drops }
+    }
+
+    /// Measured flip fraction for `kind` at `layer` (0.0 when the kind
+    /// was not profiled — float32 in particular).
+    pub fn drop_of(&self, layer: usize, kind: &ArithKind) -> f64 {
+        self.drops
+            .get(layer)
+            .and_then(|row| {
+                row.iter().find(|(k, _)| k == kind).map(|(_, d)| *d)
+            })
+            .unwrap_or(0.0)
+    }
+
+    /// Additive-independence accuracy prediction for a full config.
+    pub fn predict(&self, baseline: f64, cfg: &ReprMap) -> f64 {
+        let total: f64 = cfg
+            .kinds()
+            .iter()
+            .enumerate()
+            .map(|(i, k)| self.drop_of(i, k))
+            .sum();
+        (baseline - total).clamp(0.0, 1.0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// cost surrogate
+// ---------------------------------------------------------------------
+
+/// Analytic + optionally bench-calibrated latency/hw-cost model.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    macs: Vec<u64>,
+    ns_per_mac: HashMap<String, f64>,
+    source: &'static str,
+}
+
+/// ns per MAC from the synthesized datapath alone: [`N_PE`] parallel
+/// PEs, one MAC per PE per cycle at the kind's fmax.
+fn analytic_ns_per_mac(kind: &ArithKind) -> f64 {
+    let dp = Datapath::synthesize(kind, N_PE);
+    1000.0 / (dp.fmax_mhz * N_PE as f64)
+}
+
+/// Best measured prepacked throughput per kind from a
+/// `BENCH_gemm_kernels.json`, as ns/MAC.  Row kind strings are the
+/// bench's *parse* spellings (`FI(6,8)`); they are re-canonicalized
+/// through [`ArithKind::parse`] so lookups by [`ArithKind::name`]
+/// (`FI(6, 8)`) hit.  Unparseable or non-positive rows are skipped.
+fn bench_ns_per_mac(path: &Path) -> Result<HashMap<String, f64>> {
+    let raw = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    let json = Json::parse(&raw)
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+    let rows = json
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow!("{}: no rows array", path.display()))?;
+    let mut best: HashMap<String, f64> = HashMap::new();
+    for row in rows {
+        let kind = match row
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .map(ArithKind::parse)
+        {
+            Some(Ok(k)) => k.name(),
+            _ => continue,
+        };
+        let mmacs = row
+            .get("prepacked_mmacs")
+            .and_then(|m| m.as_f64())
+            .unwrap_or(0.0);
+        if mmacs <= 0.0 {
+            continue;
+        }
+        let e = best.entry(kind).or_insert(0.0);
+        if mmacs > *e {
+            *e = mmacs;
+        }
+    }
+    Ok(best
+        .into_iter()
+        .map(|(k, mmacs)| (k, 1000.0 / mmacs))
+        .collect())
+}
+
+impl CostModel {
+    /// Purely analytic model (no bench file).
+    pub fn analytic(spec: &NetSpec, candidates: &[Vec<ArithKind>])
+                    -> CostModel {
+        let mut ns = HashMap::new();
+        for row in candidates {
+            for kind in row {
+                ns.entry(kind.name())
+                    .or_insert_with(|| analytic_ns_per_mac(kind));
+            }
+        }
+        CostModel {
+            macs: spec.layer_macs(),
+            ns_per_mac: ns,
+            source: "analytic",
+        }
+    }
+
+    /// Analytic model, re-calibrated from a bench JSON when *every*
+    /// candidate kind has a measured row.  Partial coverage falls back
+    /// to fully analytic — mixing measured and analytic scales inside
+    /// one front would make cross-kind latency comparisons meaningless.
+    pub fn calibrated(spec: &NetSpec, candidates: &[Vec<ArithKind>],
+                      bench_json: Option<&Path>) -> CostModel {
+        let mut model = CostModel::analytic(spec, candidates);
+        let Some(path) = bench_json else { return model };
+        let Ok(bench) = bench_ns_per_mac(path) else { return model };
+        let covered = candidates.iter().flatten().all(|k| {
+            *k == ArithKind::Float32 || bench.contains_key(&k.name())
+        });
+        if !covered {
+            return model;
+        }
+        for (kind, ns) in bench {
+            model.ns_per_mac.insert(kind, ns);
+        }
+        model.source = "bench-calibrated";
+        model
+    }
+
+    /// Where the latency scale came from (`analytic` or
+    /// `bench-calibrated`) — recorded in the artifact.
+    pub fn source(&self) -> &'static str {
+        self.source
+    }
+
+    /// ns/MAC for `kind` (analytic fallback for kinds that were not in
+    /// any candidate set).
+    pub fn ns_per_mac(&self, kind: &ArithKind) -> f64 {
+        self.ns_per_mac
+            .get(&kind.name())
+            .copied()
+            .unwrap_or_else(|| analytic_ns_per_mac(kind))
+    }
+
+    /// Predicted latency contribution of one layer under `kind`.
+    pub fn layer_latency_ns(&self, layer: usize, kind: &ArithKind)
+                            -> f64 {
+        self.macs[layer] as f64 * self.ns_per_mac(kind)
+    }
+
+    /// Predicted single-sample latency of a full config.
+    pub fn latency_ns(&self, cfg: &ReprMap) -> f64 {
+        cfg.kinds()
+            .iter()
+            .enumerate()
+            .map(|(i, k)| self.layer_latency_ns(i, k))
+            .sum()
+    }
+
+    /// Per-kind datapath cost (the §4.2 greedy objective, reused as
+    /// the third search dimension).
+    pub fn unit_cost(kind: &ArithKind) -> f64 {
+        Datapath::synthesize(kind, N_PE).explore_cost(&ARRIA10)
+    }
+
+    /// Mean per-layer datapath cost of a config.
+    pub fn hw_cost(&self, cfg: &ReprMap) -> f64 {
+        let n = cfg.len().max(1) as f64;
+        cfg.kinds().iter().map(CostModel::unit_cost).sum::<f64>() / n
+    }
+}
+
+// ---------------------------------------------------------------------
+// dominance-pruned search
+// ---------------------------------------------------------------------
+
+/// Enumerate the surrogate-predicted Pareto front by a layer-wise
+/// dynamic program.  All three objectives are additive over layers
+/// (drop by the independence assumption, latency and mean-hw-cost by
+/// construction), so dominated prefixes cannot produce non-dominated
+/// completions and each step may safely prune.  `beam` caps the kept
+/// set per step (evenly-spaced downsample along the hw-cost sort) so
+/// the DP stays polynomial on adversarial fronts.
+///
+/// Returns `(config, [predicted_drop, latency_ns, hw_cost])` pairs.
+pub fn surrogate_front(spec: &NetSpec, profile: &SensitivityProfile,
+                       cost: &CostModel,
+                       candidates: &[Vec<ArithKind>],
+                       objectives: &[Objective], beam: usize)
+                       -> Vec<(ReprMap, [f64; 3])> {
+    assert_eq!(candidates.len(), spec.len(),
+               "one candidate set per layer");
+    let n = spec.len().max(1) as f64;
+    let beam = beam.max(1);
+    let mut partial: Vec<(Vec<ArithKind>, [f64; 3])> =
+        vec![(Vec::new(), [0.0; 3])];
+    for (layer, cands) in candidates.iter().enumerate() {
+        // Per-layer contribution vectors, pre-pruned: a per-layer
+        // dominated choice yields a dominated total against the same
+        // prefix, so it can never help.
+        let contribs: Vec<(ArithKind, [f64; 3])> = cands
+            .iter()
+            .map(|&k| {
+                (k, [
+                    profile.drop_of(layer, &k),
+                    cost.layer_latency_ns(layer, &k),
+                    CostModel::unit_cost(&k) / n,
+                ])
+            })
+            .collect();
+        let contribs = prune_nondominated(contribs, objectives);
+        let mut next = Vec::with_capacity(partial.len() * contribs.len());
+        for (prefix, acc) in &partial {
+            for (kind, c) in &contribs {
+                let mut kinds = prefix.clone();
+                kinds.push(*kind);
+                next.push((kinds, [
+                    acc[0] + c[0],
+                    acc[1] + c[1],
+                    acc[2] + c[2],
+                ]));
+            }
+        }
+        partial = prune_nondominated(next, objectives);
+        if partial.len() > beam {
+            // prune_nondominated returns hw-vector-lex-sorted keeps in
+            // insertion order of the lex sweep; re-sort on hw cost and
+            // keep `beam` evenly spaced points for a deterministic,
+            // spread-preserving cap.
+            partial.sort_by(|a, b| {
+                a.1[2]
+                    .total_cmp(&b.1[2])
+                    .then(a.1[1].total_cmp(&b.1[1]))
+                    .then(a.1[0].total_cmp(&b.1[0]))
+            });
+            let last = partial.len() - 1;
+            let picked: Vec<usize> = (0..beam)
+                .map(|s| s * last / (beam - 1).max(1))
+                .collect();
+            let mut keep = Vec::with_capacity(beam);
+            let mut prev = usize::MAX;
+            for i in picked {
+                if i != prev {
+                    keep.push(partial[i].clone());
+                    prev = i;
+                }
+            }
+            partial = keep;
+        }
+    }
+    partial
+        .into_iter()
+        .map(|(kinds, v)| (ReprMap::from_kinds(kinds), v))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// the artifact
+// ---------------------------------------------------------------------
+
+/// One point of the explored front.  `accuracy == est_accuracy` until
+/// the point is simulated through the real evaluator, after which
+/// `accuracy` is measured and `simulated` is true.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoPoint {
+    pub repr_map: ReprMap,
+    pub accuracy: f64,
+    pub est_accuracy: f64,
+    pub est_latency: f64,
+    pub hw_cost: f64,
+    pub simulated: bool,
+}
+
+/// The `pareto_front.json` artifact: the explored front plus enough
+/// provenance (baseline, simulation count, space size, cost-model
+/// source) to audit it.
+#[derive(Clone, Debug)]
+pub struct ParetoFront {
+    spec: String,
+    points: Vec<ParetoPoint>,
+    baseline_accuracy: f64,
+    sims: usize,
+    space: u64,
+    cost_source: String,
+}
+
+impl ParetoFront {
+    /// Assemble a front (points are re-sorted cheapest-hardware-first,
+    /// latency as tiebreak; an empty set is representable so failed
+    /// searches still round-trip).
+    pub fn from_points(spec: &NetSpec, mut points: Vec<ParetoPoint>,
+                       baseline_accuracy: f64, sims: usize, space: u64,
+                       cost_source: &str) -> ParetoFront {
+        points.sort_by(|a, b| {
+            a.hw_cost
+                .total_cmp(&b.hw_cost)
+                .then(a.est_latency.total_cmp(&b.est_latency))
+        });
+        ParetoFront {
+            spec: spec.to_string(),
+            points,
+            baseline_accuracy,
+            sims,
+            space,
+            cost_source: cost_source.to_string(),
+        }
+    }
+
+    pub fn points(&self) -> &[ParetoPoint] {
+        &self.points
+    }
+
+    /// Canonical grammar string of the topology the front was explored
+    /// on ([`auto_config`] refuses a mismatched spec).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    pub fn baseline_accuracy(&self) -> f64 {
+        self.baseline_accuracy
+    }
+
+    /// Full-net evaluator simulations the search spent.
+    pub fn sims(&self) -> usize {
+        self.sims
+    }
+
+    /// Size of the exhaustive configuration space the surrogates
+    /// searched (product of per-layer candidate counts, saturating).
+    pub fn space(&self) -> u64 {
+        self.space
+    }
+
+    pub fn cost_source(&self) -> &str {
+        &self.cost_source
+    }
+
+    /// Cheapest point whose accuracy meets `accuracy_budget`:
+    /// minimal hardware cost, then latency; a simulated point beats a
+    /// predicted-only point on an exact tie (trust measurements).
+    pub fn best_within(&self, accuracy_budget: f64)
+                       -> Option<&ParetoPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.accuracy + EPS >= accuracy_budget)
+            .min_by(|a, b| {
+                a.hw_cost
+                    .total_cmp(&b.hw_cost)
+                    .then(a.est_latency.total_cmp(&b.est_latency))
+                    .then(b.simulated.cmp(&a.simulated))
+            })
+    }
+
+    /// True when some front point is at least as good as
+    /// `(accuracy, latency_ns, hw_cost)` on all three objectives
+    /// (within [`EPS`]) — the acceptance check against exhaustive
+    /// enumeration.
+    pub fn dominates_or_ties(&self, accuracy: f64, latency_ns: f64,
+                             hw_cost: f64) -> bool {
+        self.points.iter().any(|p| {
+            p.accuracy + EPS >= accuracy
+                && p.est_latency <= latency_ns + EPS
+                && p.hw_cost <= hw_cost + EPS
+        })
+    }
+
+    /// Serialize to the versioned artifact schema.  `f64` values are
+    /// written via Rust's shortest-round-trip `Display`, so
+    /// [`ParetoFront::from_json`] reconstructs bit-identical numbers.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"artifact\": \"pareto_front\",\n");
+        s.push_str("  \"version\": 1,\n");
+        s.push_str(&format!("  \"spec\": {},\n", quote(&self.spec)));
+        s.push_str(&format!("  \"baseline_accuracy\": {},\n",
+                            self.baseline_accuracy));
+        s.push_str(&format!("  \"sims\": {},\n", self.sims));
+        s.push_str(&format!("  \"space\": {},\n", self.space));
+        s.push_str(&format!("  \"cost_source\": {},\n",
+                            quote(&self.cost_source)));
+        s.push_str("  \"points\": [");
+        for (i, p) in self.points.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"config\": {}, \"accuracy\": {}, \
+                 \"est_accuracy\": {}, \"est_latency_ns\": {}, \
+                 \"hw_cost\": {}, \"simulated\": {}}}",
+                quote(&p.repr_map.name()),
+                p.accuracy,
+                p.est_accuracy,
+                p.est_latency,
+                p.hw_cost,
+                p.simulated
+            ));
+        }
+        if !self.points.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+
+    /// Parse the artifact (schema-checked; point errors are indexed).
+    pub fn from_json(raw: &str) -> Result<ParetoFront> {
+        let json = Json::parse(raw)
+            .map_err(|e| anyhow!("pareto_front JSON: {e}"))?;
+        let artifact =
+            json.get("artifact").and_then(|a| a.as_str()).unwrap_or("");
+        if artifact != "pareto_front" {
+            bail!("not a pareto_front artifact (artifact = \
+                   '{artifact}')");
+        }
+        let version =
+            json.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if version != 1.0 {
+            bail!("unsupported pareto_front version {version}");
+        }
+        let spec_str = json
+            .get("spec")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow!("pareto_front: missing spec"))?
+            .to_string();
+        let spec = NetSpec::parse(&spec_str)
+            .map_err(|e| anyhow!("pareto_front spec: {e}"))?;
+        let num = |key: &str| -> Result<f64> {
+            json.get(key).and_then(|v| v.as_f64()).ok_or_else(|| {
+                anyhow!("pareto_front: missing number '{key}'")
+            })
+        };
+        let baseline_accuracy = num("baseline_accuracy")?;
+        let sims = num("sims")? as usize;
+        let space = num("space")? as u64;
+        let cost_source = json
+            .get("cost_source")
+            .and_then(|s| s.as_str())
+            .unwrap_or("analytic")
+            .to_string();
+        let rows = json
+            .get("points")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow!("pareto_front: missing points"))?;
+        let mut points = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            let perr =
+                |what: &str| anyhow!("pareto_front point {i}: {what}");
+            let config = row
+                .get("config")
+                .and_then(|c| c.as_str())
+                .ok_or_else(|| perr("missing config"))?;
+            let repr_map = ReprMap::parse_for(&spec, config)
+                .map_err(|e| perr(&e))?;
+            let pnum = |key: &str| -> Result<f64> {
+                row.get(key).and_then(|v| v.as_f64()).ok_or_else(|| {
+                    perr(&format!("missing number '{key}'"))
+                })
+            };
+            points.push(ParetoPoint {
+                repr_map,
+                accuracy: pnum("accuracy")?,
+                est_accuracy: pnum("est_accuracy")?,
+                est_latency: pnum("est_latency_ns")?,
+                hw_cost: pnum("hw_cost")?,
+                simulated: row
+                    .get("simulated")
+                    .and_then(|b| b.as_bool())
+                    .ok_or_else(|| perr("missing simulated flag"))?,
+            });
+        }
+        Ok(ParetoFront {
+            spec: spec_str,
+            points,
+            baseline_accuracy,
+            sims,
+            space,
+            cost_source,
+        })
+    }
+}
+
+/// JSON string literal (the artifact only ever holds grammar strings,
+/// but escape defensively).
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// The `serve --auto` contract: cheapest front config meeting the
+/// accuracy budget, with spec-mismatch and infeasible-budget errors
+/// that say what *was* available.
+pub fn auto_config(front: &ParetoFront, spec: &NetSpec, budget: f64)
+                   -> Result<ReprMap> {
+    let spec_str = spec.to_string();
+    if front.spec() != spec_str {
+        bail!("pareto front was explored on '{}' but the server is \
+               configured for '{spec_str}'",
+              front.spec());
+    }
+    if !(0.0..=1.0).contains(&budget) {
+        bail!("accuracy budget {budget} outside [0, 1]");
+    }
+    match front.best_within(budget) {
+        Some(p) => Ok(p.repr_map.clone()),
+        None => {
+            let best = front
+                .points()
+                .iter()
+                .map(|p| p.accuracy)
+                .fold(f64::NEG_INFINITY, f64::max);
+            if best.is_finite() {
+                bail!("no front point meets accuracy budget {budget} \
+                       (best available: {best:.4})");
+            }
+            bail!("pareto front is empty; re-run explore");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// label distillation (exact-surrogate test harness)
+// ---------------------------------------------------------------------
+
+/// Overwrite both splits' labels with the float32 model's own
+/// predictions.  The float32 baseline accuracy then equals 1.0 exactly
+/// and every quantized config's accuracy equals `1 - flip_fraction` —
+/// which is precisely what [`SensitivityProfile`] measures, so on a
+/// distilled dataset with calibration batch == eval subset the
+/// surrogate is *exact*, not approximate.  Used by the tier-1 DSE
+/// suite and the hermetic CI smoke flow.
+pub fn distill_labels(model: &Model, ds: &mut Dataset, threads: usize) {
+    let f32_cfg =
+        ReprMap::uniform_for(model.spec(), ArithKind::Float32);
+    let net = model.prepare(&f32_cfg);
+    let relabel = |split: &Split| -> Vec<u8> {
+        let mut labels = Vec::with_capacity(split.len());
+        let mut at = 0;
+        while at < split.len() {
+            let hi = (at + 64).min(split.len());
+            let idx: Vec<usize> = (at..hi).collect();
+            let x = ds.batch(split, &idx);
+            labels.extend(
+                net.predict(&x, threads).into_iter().map(|p| p as u8),
+            );
+            at = hi;
+        }
+        labels
+    };
+    let train = relabel(&ds.train);
+    let test = relabel(&ds.test);
+    ds.train.labels = train;
+    ds.test.labels = test;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::FixedPoint;
+
+    fn fi(i: u32, f: u32) -> ArithKind {
+        ArithKind::FixedExact(FixedPoint::new(i, f))
+    }
+
+    #[test]
+    fn dominance_is_strict_and_projectable() {
+        let a = [0.1, 10.0, 1.0];
+        let b = [0.2, 10.0, 1.0];
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &a)); // ties never dominate
+        // restricted to latency+hw the two are equal -> no dominance
+        let lh = [Objective::Latency, Objective::HwCost];
+        assert!(!dominates_on(&a, &b, &lh));
+        assert!(proj_eq(&a, &b, &lh));
+    }
+
+    #[test]
+    fn prune_keeps_exactly_the_front_and_dedupes() {
+        let pts = vec![
+            ("a", [0.0, 3.0, 1.0]),
+            ("b", [0.1, 2.0, 1.0]),
+            ("dup", [0.0, 3.0, 1.0]), // projected-equal to a
+            ("dom", [0.2, 3.0, 2.0]), // dominated by b
+        ];
+        let kept = prune_nondominated(pts, &ALL_OBJECTIVES);
+        let names: Vec<&str> = kept.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["a", "b"]);
+        // reference definition agrees
+        let all = [[0.0, 3.0, 1.0], [0.1, 2.0, 1.0], [0.0, 3.0, 1.0],
+                   [0.2, 3.0, 2.0]];
+        assert_eq!(pareto_front_indices(&all), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn cost_model_orders_kinds_by_width() {
+        let spec = NetSpec::paper_dcnn();
+        let cands = vec![vec![fi(4, 4), fi(4, 12)]; spec.len()];
+        let cm = CostModel::analytic(&spec, &cands);
+        assert_eq!(cm.source(), "analytic");
+        // narrower fixed point -> faster clock -> lower ns/MAC
+        assert!(cm.ns_per_mac(&fi(4, 4)) < cm.ns_per_mac(&fi(4, 12)));
+        let narrow = ReprMap::uniform_for(&spec, fi(4, 4));
+        let wide = ReprMap::uniform_for(&spec, fi(4, 12));
+        assert!(cm.latency_ns(&narrow) < cm.latency_ns(&wide));
+        assert!(cm.hw_cost(&narrow) < cm.hw_cost(&wide));
+        // latency is additive over the per-layer terms
+        let total: f64 = (0..spec.len())
+            .map(|l| cm.layer_latency_ns(l, &fi(4, 4)))
+            .sum();
+        assert!((cm.latency_ns(&narrow) - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sensitivity_prediction_is_additive_and_clamped() {
+        let spec = NetSpec::parse(
+            "28x28x1: dense(16)+relu | dense(10)",
+        )
+        .unwrap();
+        let p = SensitivityProfile::from_drops(vec![
+            vec![(fi(4, 4), 0.3), (ArithKind::Float32, 0.0)],
+            vec![(fi(4, 6), 0.2)],
+        ]);
+        let mut cfg =
+            ReprMap::uniform_for(&spec, ArithKind::Float32);
+        assert_eq!(p.predict(0.9, &cfg), 0.9);
+        cfg.set(0, fi(4, 4));
+        assert!((p.predict(0.9, &cfg) - 0.6).abs() < 1e-12);
+        cfg.set(1, fi(4, 6));
+        assert!((p.predict(0.9, &cfg) - 0.4).abs() < 1e-12);
+        // drops larger than the baseline clamp at zero
+        assert_eq!(p.predict(0.3, &cfg), 0.0);
+    }
+
+    #[test]
+    fn surrogate_front_matches_reference_on_a_small_space() {
+        let spec = NetSpec::parse(
+            "28x28x1: dense(16)+relu | dense(10)",
+        )
+        .unwrap();
+        let cands = vec![
+            vec![ArithKind::Float32, fi(4, 4), fi(4, 8)],
+            vec![ArithKind::Float32, fi(4, 6)],
+        ];
+        let profile = SensitivityProfile::from_drops(vec![
+            vec![(fi(4, 4), 0.25), (fi(4, 8), 0.05)],
+            vec![(fi(4, 6), 0.1)],
+        ]);
+        let cm = CostModel::analytic(&spec, &cands);
+        let front = surrogate_front(&spec, &profile, &cm, &cands,
+                                    &ALL_OBJECTIVES, 512);
+        assert!(!front.is_empty());
+        // reference: exhaustively score all 6 configs and prune
+        let mut all = Vec::new();
+        for &k0 in &cands[0] {
+            for &k1 in &cands[1] {
+                let cfg = ReprMap::from_kinds(vec![k0, k1]);
+                all.push([
+                    profile.drop_of(0, &k0) + profile.drop_of(1, &k1),
+                    cm.latency_ns(&cfg),
+                    cm.hw_cost(&cfg),
+                ]);
+            }
+        }
+        let reference = pareto_front_indices(&all);
+        // every DP-front vector appears in the reference front and
+        // vice versa (projection-dedupe may drop exact duplicates,
+        // none exist here)
+        assert_eq!(front.len(), reference.len());
+        for (_, v) in &front {
+            assert!(reference.iter().any(|&i| {
+                (all[i][0] - v[0]).abs() < 1e-12
+                    && (all[i][1] - v[1]).abs() < 1e-9
+                    && (all[i][2] - v[2]).abs() < 1e-12
+            }));
+        }
+    }
+
+    #[test]
+    fn front_json_round_trips_and_best_within_picks_cheapest() {
+        let spec = NetSpec::parse(
+            "28x28x1: dense(16)+relu | dense(10)",
+        )
+        .unwrap();
+        let point = |kind, acc: f64, lat: f64, hw: f64, sim| {
+            ParetoPoint {
+                repr_map: ReprMap::uniform_for(&spec, kind),
+                accuracy: acc,
+                est_accuracy: acc,
+                est_latency: lat,
+                hw_cost: hw,
+                simulated: sim,
+            }
+        };
+        let front = ParetoFront::from_points(
+            &spec,
+            vec![
+                point(fi(4, 8), 0.95, 200.0, 0.4, true),
+                point(fi(4, 4), 0.80, 100.0, 0.2, false),
+                point(ArithKind::Float32, 0.99, 900.0, 1.0, true),
+            ],
+            0.99,
+            2,
+            12,
+            "analytic",
+        );
+        // sorted cheapest-hw first
+        assert!(front.points()[0].hw_cost <= front.points()[1].hw_cost);
+        let back = ParetoFront::from_json(&front.to_json()).unwrap();
+        assert_eq!(back.points(), front.points());
+        assert_eq!(back.spec(), front.spec());
+        assert_eq!(back.sims(), 2);
+        assert_eq!(back.space(), 12);
+        assert_eq!(back.cost_source(), "analytic");
+        assert_eq!(back.baseline_accuracy(), 0.99);
+        // budget 0.9 -> FI(4, 8) (cheapest meeting it), not float32
+        let best = front.best_within(0.9).unwrap();
+        assert_eq!(best.repr_map.name(),
+                   ReprMap::uniform_for(&spec, fi(4, 8)).name());
+        // auto_config agrees and validates the spec
+        let cfg = auto_config(&front, &spec, 0.9).unwrap();
+        assert_eq!(cfg, best.repr_map);
+        let other =
+            NetSpec::parse("28x28x1: dense(10)").unwrap();
+        assert!(auto_config(&front, &other, 0.9).is_err());
+        assert!(auto_config(&front, &spec, 1.5).is_err());
+        // budget nobody meets names the best available accuracy
+        let e = auto_config(&front, &spec, 0.999).unwrap_err();
+        assert!(format!("{e}").contains("best available"),
+                "{e}");
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_artifacts() {
+        assert!(ParetoFront::from_json("{}").is_err());
+        assert!(ParetoFront::from_json("not json").is_err());
+        let wrong_version = r#"{"artifact": "pareto_front",
+            "version": 2, "spec": "28x28x1: dense(10)",
+            "baseline_accuracy": 1, "sims": 0, "space": 1,
+            "points": []}"#;
+        assert!(ParetoFront::from_json(wrong_version).is_err());
+        // a point with a bad config string errs with its index
+        let bad_point = r#"{"artifact": "pareto_front",
+            "version": 1, "spec": "28x28x1: dense(10)",
+            "baseline_accuracy": 1, "sims": 0, "space": 1,
+            "points": [{"config": "bogus", "accuracy": 1,
+                        "est_accuracy": 1, "est_latency_ns": 1,
+                        "hw_cost": 1, "simulated": false}]}"#;
+        let e = ParetoFront::from_json(bad_point).unwrap_err();
+        assert!(format!("{e}").contains("point 0"), "{e}");
+    }
+}

@@ -13,7 +13,10 @@ use lop::approx::arith::ArithKind;
 use lop::cli::Args;
 use lop::config::{ExploreFileConfig, ServeFileConfig, TomlDoc};
 use lop::coordinator::eval::Evaluator;
-use lop::coordinator::explorer::{explore, ExploreOpts, Family};
+use lop::coordinator::explorer::{Explorer, ExploreOpts, Family};
+use lop::coordinator::pareto::{
+    auto_config, distill_labels, Objective, ParetoFront,
+};
 use lop::coordinator::ranges::{format_table1, profile_ranges};
 use lop::coordinator::router::OverloadPolicy;
 use lop::coordinator::server::{Server, ServerOpts};
@@ -41,11 +44,15 @@ COMMANDS
   table4    [--n N]           Table 4: fixed-point configurations
   hw-report [--repr \"a;b\"]    Table 5: hardware cost model
   netlist   --repr C          ScaLop structural netlist (Verilog-flavored)
-  explore   [--bound 0.01] [--subset 400] [--with-approx]
-            [--no-second-pass] [--trace] [--config-file F]  §4.2 DSE
+  explore   [--subset 400] [--with-approx] [--model M]
+            [--objectives \"accuracy,latency,hw\"] [--max-sims 8]
+            [--front-out pareto_front.json] [--accuracy-budget B]
+            [--calib 64] [--bench-json F] [--config-file F]
+            surrogate-guided Pareto DSE (emits a front artifact)
   serve     [--requests 2000] [--rate 500] [--configs \"a;b\"]
             [--max-batch 16] [--max-wait-ms 2] [--engine-workers 2]
             [--overload reject|shed|degrade] [--deadline-ms D]
+            [--auto [--front pareto_front.json] --accuracy-budget B]
             [--no-pjrt] [--config-file F] [--model M]  serving benchmark
   help                        this message
 
@@ -279,9 +286,27 @@ fn cmd_netlist(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// A hermetic synthetic-digit dataset for non-paper explore/serve
+/// flows (no `make artifacts` needed).
+fn synth_dataset(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let (ti, tl) = synth::generate(n_train, seed);
+    let (ei, el) = synth::generate(n_test, seed + 1);
+    Dataset {
+        h: 28,
+        w: 28,
+        train: lop::data::loader::Split { images: ti, labels: tl },
+        test: lop::data::loader::Split { images: ei, labels: el },
+    }
+}
+
 fn cmd_explore(args: &Args) -> Result<()> {
     let mut opts = ExploreOpts::default();
     let mut subset = args.usize("subset", 400);
+    let mut objectives = lop::coordinator::pareto::ALL_OBJECTIVES
+        .to_vec();
+    let mut max_sims = 8;
+    let mut calib = 64;
+    let mut front_out: Option<String> = None;
     if let Some(f) = args.opt_str("config-file") {
         let doc = TomlDoc::parse(&std::fs::read_to_string(f)?)
             .map_err(|e| anyhow::anyhow!(e))?;
@@ -289,6 +314,10 @@ fn cmd_explore(args: &Args) -> Result<()> {
             .map_err(|e| anyhow::anyhow!(e))?;
         opts = fc.opts;
         subset = fc.subset;
+        objectives = fc.objectives;
+        max_sims = fc.max_sims;
+        calib = fc.calib;
+        front_out = fc.front_out;
     }
     opts.accuracy_bound = args.f64("bound", opts.accuracy_bound);
     if args.switch("with-approx") {
@@ -299,46 +328,122 @@ fn cmd_explore(args: &Args) -> Result<()> {
             Family::FloatCfpu,
         ];
     }
-    if args.switch("no-second-pass") {
-        opts.second_pass = false;
+    subset = args.usize("subset", subset);
+    if let Some(list) = args.opt_str("objectives") {
+        objectives = Objective::parse_list(list)
+            .map_err(|e| anyhow::anyhow!(e))?;
     }
+    max_sims = args.usize("max-sims", max_sims);
+    calib = args.usize("calib", calib);
+    if let Some(p) = args.opt_str("front-out") {
+        front_out = Some(p.to_string());
+    }
+    let budget = args.opt_str("accuracy-budget").map(|b| {
+        b.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("--accuracy-budget wants a number, \
+                             got '{b}'")
+        })
+    }).transpose()?;
     let threads = args.usize("threads", 0);
+    let spec = NetSpec::preset_or_parse(
+        args.opt_str("model").unwrap_or("paper_dcnn"),
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
 
-    let (_, model, ds) = load_all()?;
-    let ranges = profile_ranges(&model, &ds, 1_000, threads);
-    let mut ev = evaluator(subset, threads, !args.switch("engine"))?;
+    // Artifacts drive the paper topology; anything else explores a
+    // deterministic synthetic model on distilled synthetic digits
+    // (hermetic — same fixture the tier-1 suite pins).
+    let mut ev = if spec.is_paper_dcnn() {
+        evaluator(subset, threads, !args.switch("engine"))?
+    } else {
+        anyhow::ensure!(
+            spec.input_len() == 784,
+            "the synthetic digit set is 28x28x1; model '{spec}' wants \
+             {} inputs",
+            spec.input_len()
+        );
+        println!("model: {spec}");
+        println!("(non-paper topology: synthetic weights, distilled \
+                  labels, engine backend)");
+        let model = Model::synthetic(spec.clone(), 42);
+        let mut ds = synth_dataset(512, 256, 4242);
+        distill_labels(&model, &mut ds, threads);
+        Evaluator::new(model, None, ds, subset, threads)
+    };
 
-    println!("§4.2 exploration: bound {:.1}%, subset {}, families {:?}",
-             opts.accuracy_bound * 100.0, subset, opts.families);
-    let t0 = Instant::now();
-    let res = explore(&mut ev, &ranges, &opts)?;
-    println!("\nbaseline accuracy (subset): {:.4}", res.baseline);
-    println!("pass 1 choice : {}   (accuracy {:.4})", res.pass1.name(),
-             res.pass1_accuracy);
-    println!("pass 2 choice : {}   (accuracy {:.4})", res.chosen.name(),
-             res.accuracy);
-    println!("evaluations   : {} distinct configs in {:.1?}", res.evals,
-             t0.elapsed());
-
-    // re-score the frontier on the full test set
-    let full = ev.accuracy_full(&res.chosen)?;
-    let full_base = ev.accuracy_full(&ReprMap::uniform_for(
-        &NetSpec::paper_dcnn(),
-        ArithKind::Float32,
-    ))?;
-    println!("full test set : {:.4} (baseline {:.4}, relative {:.2}%)",
-             full, full_base, full / full_base * 100.0);
-
-    if args.switch("trace") {
-        println!("\ntrace:");
-        for t in &res.trace {
-            println!(
-                "  pass{} part{} {:<14} acc {:.4} cost {:.4} {}{}",
-                t.pass, t.part, t.candidate, t.accuracy, t.cost,
-                if t.feasible { "feasible" } else { "infeasible" },
-                if t.chosen { "  <= chosen" } else { "" }
+    let mut explorer = Explorer::new(spec.clone())
+        .opts(opts)
+        .objectives(&objectives)
+        .max_sims(max_sims)
+        .calibration(calib);
+    if let Some(b) = budget {
+        explorer = explorer.budget(b);
+    }
+    let bench = args
+        .opt_str("bench-json")
+        .map(std::path::PathBuf::from)
+        .or_else(|| {
+            let p = std::path::PathBuf::from(
+                "BENCH_gemm_kernels.json",
             );
+            p.exists().then_some(p)
+        });
+    if let Some(p) = bench {
+        println!("latency scale: calibrating from {}", p.display());
+        explorer = explorer.bench_json(p);
+    }
+
+    println!("surrogate-guided DSE: subset {subset}, calib {calib}, \
+              max sims {max_sims}, objectives {:?}",
+             objectives.iter().map(|o| o.name()).collect::<Vec<_>>());
+    let t0 = Instant::now();
+    let front = explorer.run(&mut ev)?;
+
+    println!("\nbaseline accuracy (subset): {:.4}",
+             front.baseline_accuracy());
+    println!(
+        "{:<44} {:>9} {:>9} {:>11} {:>8}  {}",
+        "config", "accuracy", "est_acc", "latency_us", "hw_cost",
+        "origin"
+    );
+    println!("{}", "-".repeat(92));
+    for p in front.points() {
+        println!(
+            "{:<44} {:>9.4} {:>9.4} {:>11.1} {:>8.4}  {}",
+            p.repr_map.name(),
+            p.accuracy,
+            p.est_accuracy,
+            p.est_latency / 1_000.0,
+            p.hw_cost,
+            if p.simulated { "simulated" } else { "surrogate" }
+        );
+    }
+    println!(
+        "\nspace {} configs -> {} front points, {} full-net sims \
+         ({} saved) in {:.1?}; cost model: {}",
+        front.space(),
+        front.points().len(),
+        front.sims(),
+        front.space().saturating_sub(front.sims() as u64),
+        t0.elapsed(),
+        front.cost_source()
+    );
+    if let Some(b) = budget {
+        match front.best_within(b) {
+            Some(p) => println!(
+                "cheapest config meeting accuracy {b}: {} \
+                 (accuracy {:.4}, hw {:.4})",
+                p.repr_map.name(), p.accuracy, p.hw_cost
+            ),
+            None => println!(
+                "no front point meets accuracy {b}"
+            ),
         }
+    }
+    if let Some(path) = front_out {
+        std::fs::write(&path, front.to_json())
+            .with_context(|| format!("writing {path}"))?;
+        println!("front artifact written to {path}");
     }
     Ok(())
 }
@@ -346,12 +451,18 @@ fn cmd_explore(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut sopts = ServerOpts::default();
     let mut spec = NetSpec::paper_dcnn();
+    let mut auto = false;
+    let mut front_path = "pareto_front.json".to_string();
+    let mut accuracy_budget: Option<f64> = None;
     if let Some(f) = args.opt_str("config-file") {
         let doc = TomlDoc::parse(&std::fs::read_to_string(f)?)
             .map_err(|e| anyhow::anyhow!(e))?;
         let fc = ServeFileConfig::from_toml(&doc)
             .map_err(|e| anyhow::anyhow!(e))?;
         spec = fc.spec;
+        auto = fc.auto;
+        front_path = fc.front;
+        accuracy_budget = fc.accuracy_budget;
         sopts.configs = fc.configs;
         sopts.max_batch = fc.max_batch;
         sopts.max_wait = fc.max_wait;
@@ -386,6 +497,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map(|s| ReprMap::parse_for(&spec, s.trim()))
             .collect::<Result<Vec<_>, _>>()
             .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    // --auto: pick the served config from an explored Pareto front
+    // (overrides any configured config list)
+    if args.switch("auto") {
+        auto = true;
+    }
+    if let Some(p) = args.opt_str("front") {
+        front_path = p.to_string();
+    }
+    if let Some(b) = args.opt_str("accuracy-budget") {
+        let b: f64 = b.parse().map_err(|_| {
+            anyhow::anyhow!("--accuracy-budget wants a number, \
+                             got '{b}'")
+        })?;
+        accuracy_budget = Some(b);
+    }
+    if auto {
+        let budget = accuracy_budget.context(
+            "--auto needs --accuracy-budget (or [serve] \
+             accuracy_budget in the config file)",
+        )?;
+        let raw = std::fs::read_to_string(&front_path)
+            .with_context(|| {
+                format!("--auto: reading {front_path} (run `lop \
+                         explore --front-out {front_path}` first)")
+            })?;
+        let front = ParetoFront::from_json(&raw)?;
+        let chosen = auto_config(&front, &spec, budget)?;
+        let detail = front
+            .points()
+            .iter()
+            .find(|p| p.repr_map == chosen)
+            .expect("auto_config returns a front point");
+        println!(
+            "auto: {} from {front_path} (accuracy {:.4} [{}], \
+             hw cost {:.4}, budget {budget})",
+            chosen.name(),
+            detail.accuracy,
+            if detail.simulated { "simulated" } else { "surrogate" },
+            detail.hw_cost
+        );
+        sopts.configs = vec![chosen];
     }
     sopts.max_batch = args.usize("max-batch", sopts.max_batch);
     sopts.max_wait = Duration::from_micros(

@@ -344,6 +344,32 @@ impl NetSpec {
                     (0..n).map(|_| rng.range_f32(0.0, 1.0)).collect())
     }
 
+    /// Multiply-accumulate count per layer for a single input sample —
+    /// the workload term of the explorer's analytic latency surrogate
+    /// (`coordinator::pareto::CostModel`).  Conv layers count the full
+    /// `same`-size im2col GEMM (`h*w * kh*kw*cin * cout` at the
+    /// layer's *input* spatial size); dense layers count
+    /// `d_in * d_out`.
+    pub fn layer_macs(&self) -> Vec<u64> {
+        let (mut h, mut w) = (self.input[0], self.input[1]);
+        let mut out = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            match l.kind {
+                LayerKind::Conv2d { kh, kw, cin, cout, .. } => {
+                    out.push((h * w * kh * kw * cin * cout) as u64);
+                    if l.pool {
+                        h /= 2;
+                        w /= 2;
+                    }
+                }
+                LayerKind::Dense { d_in, d_out } => {
+                    out.push((d_in * d_out) as u64);
+                }
+            }
+        }
+        out
+    }
+
     /// The canonical structural fingerprint of (this topology, `map`):
     /// the spec-grammar string plus every layer's full provider name.
     /// Injective over (structure, assignment) — two fingerprints are
@@ -966,6 +992,17 @@ mod tests {
         let e = ReprMap::parse_n("FI(6,8)|XX(1)|float32", 3)
             .unwrap_err();
         assert!(e.contains("layer 2/3") && e.contains("XX(1)"), "{e}");
+    }
+
+    #[test]
+    fn layer_macs_count_the_gemm_workload() {
+        // paper DCNN: conv1 28*28*5*5*1*32, conv2 14*14*5*5*32*64,
+        // fc1 3136*1024, fc2 1024*10
+        assert_eq!(NetSpec::paper_dcnn().layer_macs(),
+                   vec![627_200, 10_035_200, 3_211_264, 10_240]);
+        let mlp = NetSpec::parse("28x28x1: dense(64)+relu | dense(10)")
+            .unwrap();
+        assert_eq!(mlp.layer_macs(), vec![784 * 64, 64 * 10]);
     }
 
     #[test]

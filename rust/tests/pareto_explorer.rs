@@ -1,0 +1,360 @@
+//! Acceptance suite for the surrogate-guided Pareto explorer:
+//!
+//! * dominance pruning against a hand-computed 3-objective front;
+//! * surrogate-vs-simulated agreement, pinned *exactly* via label
+//!   distillation (labels := the float32 model's own predictions, so
+//!   baseline accuracy is 1.0 and measured accuracy is literally
+//!   `1 - flip_fraction` — the quantity the sensitivity profile
+//!   measures on the same images);
+//! * the headline acceptance claim: on the paper DCNN the explorer
+//!   spends strictly fewer full-net simulations than exhaustive
+//!   enumeration while its front dominates-or-ties every exhaustively
+//!   found point;
+//! * `ParetoFront` JSON round-trip of an explorer-produced artifact;
+//! * `best_within` edge cases (empty front, unmeetable budget, ties);
+//! * the full `serve --auto` startup path over a hermetic synthetic
+//!   dataset on a non-paper topology.
+//!
+//! Everything is hermetic: synthetic weights + synthetic digits,
+//! engine backend, no `make artifacts`.
+
+use lop::approx::arith::ArithKind;
+use lop::coordinator::eval::Evaluator;
+use lop::coordinator::explorer::Explorer;
+use lop::coordinator::pareto::{
+    auto_config, distill_labels, pareto_front_indices, CostModel,
+    ParetoFront, ParetoPoint, SensitivityProfile,
+};
+use lop::coordinator::server::{Server, ServerOpts};
+use lop::data::loader::{Dataset, Split};
+use lop::data::synth;
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
+use lop::numeric::FixedPoint;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fi(i: u32, f: u32) -> ArithKind {
+    ArithKind::FixedExact(FixedPoint::new(i, f))
+}
+
+fn synth_dataset(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let (tr_imgs, tr_labels) = synth::generate(n_train, seed);
+    let (te_imgs, te_labels) = synth::generate(n_test, seed + 1);
+    Dataset {
+        h: 28,
+        w: 28,
+        train: Split { images: tr_imgs, labels: tr_labels },
+        test: Split { images: te_imgs, labels: te_labels },
+    }
+}
+
+/// Model + evaluator over *distilled* labels: the float32 net's own
+/// predictions are ground truth, so its subset accuracy is exactly 1
+/// and every quantized config's accuracy is exactly
+/// `1 - prediction_flip_fraction` — making the additive surrogate
+/// exact for single-layer perturbations.
+fn distilled_evaluator(spec: &NetSpec, seed: u64, subset: usize)
+                       -> Evaluator {
+    let model = Model::synthetic(spec.clone(), seed);
+    let mut ds = synth_dataset(48, 16, seed + 100);
+    distill_labels(&model, &mut ds, 1);
+    Evaluator::new(model, None, ds, subset, 1)
+}
+
+#[test]
+fn dominance_pruning_matches_a_hand_computed_front() {
+    // minimized [acc_loss, latency, hw]; front computed by hand:
+    //   a: best loss          d: dominated by b (worse everywhere)
+    //   b: balanced           e: dominated by c (loss and hw worse,
+    //   c: best hw               latency equal)
+    //   f: best latency
+    let pts = [
+        [0.00, 40.0, 0.9], // a — front
+        [0.05, 30.0, 0.5], // b — front
+        [0.20, 50.0, 0.2], // c — front
+        [0.10, 45.0, 0.7], // d — dominated by b
+        [0.30, 50.0, 0.4], // e — dominated by c
+        [0.25, 10.0, 0.8], // f — front (fastest)
+    ];
+    assert_eq!(pareto_front_indices(&pts), vec![0, 1, 2, 5]);
+}
+
+#[test]
+fn surrogate_predictions_are_monotone_in_measured_drops() {
+    // a profile with strictly decreasing drops as precision grows
+    // must predict strictly non-decreasing accuracy — the ordering
+    // the simulated points later confirm
+    let profile = SensitivityProfile::from_drops(vec![vec![
+        (fi(4, 4), 0.40),
+        (fi(4, 6), 0.20),
+        (fi(4, 8), 0.05),
+        (fi(4, 10), 0.00),
+    ]]);
+    let spec = NetSpec::parse("28x28x1: dense(10)").unwrap();
+    let mut last = -1.0;
+    for f in [4, 6, 8, 10] {
+        let cfg = ReprMap::uniform_for(&spec, fi(4, f));
+        let pred = profile.predict(1.0, &cfg);
+        assert!(pred >= last,
+                "prediction must not degrade as f grows: {pred} after \
+                 {last}");
+        last = pred;
+    }
+    assert_eq!(last, 1.0, "a zero-drop config predicts the baseline");
+}
+
+/// The acceptance criterion, made deterministic: paper DCNN topology,
+/// three layers pinned to float32 and one varied over 4 fixed-point
+/// candidates (space = 4).  With distilled labels and calibration
+/// batch == evaluation subset the surrogate is exact, so the explorer
+/// must (a) simulate strictly fewer than 4 configs, and (b) produce a
+/// front that dominates-or-ties every exhaustively evaluated point.
+#[test]
+fn paper_dcnn_front_beats_exhaustive_with_fewer_sims() {
+    let spec = NetSpec::paper_dcnn();
+    let mut ev = distilled_evaluator(&spec, 3, 16);
+    let fc2 = vec![fi(4, 4), fi(4, 6), fi(4, 8), fi(4, 10)];
+    let candidates = vec![
+        vec![ArithKind::Float32],
+        vec![ArithKind::Float32],
+        vec![ArithKind::Float32],
+        fc2.clone(),
+    ];
+
+    let front = Explorer::new(spec.clone())
+        .candidates(candidates.clone())
+        .calibration(16)
+        .max_sims(2)
+        .run(&mut ev)
+        .unwrap();
+
+    assert_eq!(front.space(), 4);
+    assert!(front.sims() < 4,
+            "must simulate strictly fewer configs than exhaustive \
+             enumeration (sims = {})", front.sims());
+    assert!(front.sims() > 0);
+    assert_eq!(front.baseline_accuracy(), 1.0,
+               "distilled labels make the float32 baseline exact");
+
+    // every simulated point's measured accuracy equals its surrogate
+    // prediction exactly (the distillation construction)
+    let mut simulated = 0usize;
+    for p in front.points() {
+        if p.simulated {
+            simulated += 1;
+            assert!((p.accuracy - p.est_accuracy).abs() < 1e-9,
+                    "{}: measured {} vs predicted {}",
+                    p.repr_map.name(), p.accuracy, p.est_accuracy);
+        }
+    }
+    assert_eq!(simulated, front.sims());
+
+    // exhaustive ground truth: evaluate all 4 configs for real and
+    // score them with the same cost model
+    let cost = CostModel::analytic(&spec, &candidates);
+    for k in fc2 {
+        let mut cfg =
+            ReprMap::uniform_for(&spec, ArithKind::Float32);
+        cfg.set(3, k);
+        let acc = ev.accuracy(&cfg).unwrap();
+        let lat = cost.latency_ns(&cfg);
+        let hw = cost.hw_cost(&cfg);
+        assert!(front.dominates_or_ties(acc, lat, hw),
+                "front must dominate-or-tie exhaustive point {} \
+                 (acc {acc}, lat {lat}, hw {hw})",
+                cfg.name());
+    }
+}
+
+#[test]
+fn explorer_front_round_trips_through_json() {
+    let spec = NetSpec::parse(
+        "28x28x1: dense(16)+relu | dense(10)",
+    )
+    .unwrap();
+    let mut ev = distilled_evaluator(&spec, 7, 16);
+    let front = Explorer::new(spec.clone())
+        .candidates(vec![
+            vec![ArithKind::Float32, fi(4, 6)],
+            vec![ArithKind::Float32, fi(4, 8)],
+        ])
+        .calibration(16)
+        .max_sims(2)
+        .run(&mut ev)
+        .unwrap();
+    assert!(!front.points().is_empty());
+
+    let json = front.to_json();
+    let back = ParetoFront::from_json(&json).unwrap();
+    assert_eq!(back.points(), front.points(),
+               "f64 Display round-trips bit-exactly");
+    assert_eq!(back.spec(), front.spec());
+    assert_eq!(back.sims(), front.sims());
+    assert_eq!(back.space(), front.space());
+    assert_eq!(back.baseline_accuracy(), front.baseline_accuracy());
+    assert_eq!(back.cost_source(), front.cost_source());
+    // and the artifact is loadable JSON for the CI gate's parser
+    assert!(json.contains("\"artifact\": \"pareto_front\""));
+}
+
+#[test]
+fn best_within_edge_cases() {
+    let spec = NetSpec::parse("28x28x1: dense(10)").unwrap();
+    let point = |f: u32, acc: f64, lat: f64, hw: f64| ParetoPoint {
+        repr_map: ReprMap::uniform_for(&spec, fi(4, f)),
+        accuracy: acc,
+        est_accuracy: acc,
+        est_latency: lat,
+        hw_cost: hw,
+        simulated: true,
+    };
+
+    // empty front: nothing qualifies, auto_config reports emptiness
+    let empty = ParetoFront::from_points(&spec, vec![], 1.0, 0, 0,
+                                         "analytic");
+    assert!(empty.best_within(0.0).is_none());
+    let e = auto_config(&empty, &spec, 0.5).unwrap_err();
+    assert!(format!("{e}").contains("empty"), "{e}");
+
+    let front = ParetoFront::from_points(
+        &spec,
+        vec![
+            point(4, 0.70, 100.0, 0.2),
+            point(6, 0.90, 150.0, 0.2), // hw tie with f=8, lower lat
+            point(8, 0.90, 200.0, 0.2),
+            point(10, 0.99, 400.0, 0.8),
+        ],
+        1.0,
+        4,
+        16,
+        "analytic",
+    );
+    // budget tighter than every point -> None
+    assert!(front.best_within(0.995).is_none());
+    // loose budget -> the cheapest point outright
+    assert_eq!(front.best_within(0.0).unwrap().repr_map,
+               ReprMap::uniform_for(&spec, fi(4, 4)));
+    // hw-cost tie at 0.9 -> the lower-latency point wins
+    let b = front.best_within(0.9).unwrap();
+    assert_eq!(b.repr_map, ReprMap::uniform_for(&spec, fi(4, 6)));
+    assert_eq!(b.est_latency, 150.0);
+    // a budget exactly on a point's accuracy is met (EPS tolerance)
+    assert!(front.best_within(0.99).is_some());
+}
+
+#[test]
+fn explorer_rejects_malformed_candidate_sets() {
+    let spec = NetSpec::parse(
+        "28x28x1: dense(16)+relu | dense(10)",
+    )
+    .unwrap();
+    let mut ev = distilled_evaluator(&spec, 11, 8);
+    // wrong arity: one set for a two-layer spec
+    let e = Explorer::new(spec.clone())
+        .candidates(vec![vec![fi(4, 6)]])
+        .run(&mut ev)
+        .unwrap_err();
+    assert!(format!("{e}").contains("1 candidate sets"), "{e}");
+    // empty per-layer set names the layer
+    let e = Explorer::new(spec.clone())
+        .candidates(vec![vec![fi(4, 6)], vec![]])
+        .run(&mut ev)
+        .unwrap_err();
+    assert!(format!("{e}").contains("layer 2/2"), "{e}");
+    // spec mismatch against the evaluator is caught up front
+    let other = NetSpec::parse("28x28x1: dense(10)").unwrap();
+    let e = Explorer::new(other).run(&mut ev).unwrap_err();
+    assert!(format!("{e}").contains("does not match"), "{e}");
+}
+
+/// The full `serve --auto` startup path, hermetically: explore a
+/// non-paper topology, write the artifact, re-load it the way the CLI
+/// does, pick the cheapest config meeting the budget, and serve real
+/// requests with it.
+#[test]
+fn serve_auto_boots_from_an_emitted_front() {
+    let spec = NetSpec::parse(
+        "28x28x1: dense(16)+relu | dense(10)",
+    )
+    .unwrap();
+    let seed = 21;
+    let mut ev = distilled_evaluator(&spec, seed, 16);
+    let front = Explorer::new(spec.clone())
+        .candidates(vec![
+            vec![ArithKind::Float32, fi(4, 6), fi(4, 10)],
+            vec![ArithKind::Float32, fi(4, 8)],
+        ])
+        .calibration(16)
+        .max_sims(3)
+        .budget(0.5)
+        .run(&mut ev)
+        .unwrap();
+    assert!(!front.points().is_empty());
+
+    // write + re-load the artifact exactly as `lop serve --auto` does
+    let path = std::env::temp_dir().join(format!(
+        "lop_pareto_front_test_{}.json",
+        std::process::id()
+    ));
+    std::fs::write(&path, front.to_json()).unwrap();
+    let loaded =
+        ParetoFront::from_json(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // budget = the weakest point's accuracy, so selection always has
+    // at least one candidate and picks the cheapest meeting it
+    let budget = loaded
+        .points()
+        .iter()
+        .map(|p| p.accuracy)
+        .fold(f64::INFINITY, f64::min);
+    let chosen = auto_config(&loaded, &spec, budget).unwrap();
+    let cheapest_ok = loaded.best_within(budget).unwrap();
+    assert_eq!(chosen, cheapest_ok.repr_map);
+
+    // an unmeetable budget refuses with the best available accuracy
+    assert!(auto_config(&loaded, &spec, 1.0 + 1e-6).is_err());
+    // a different topology refuses even with a met budget
+    let other = NetSpec::parse("28x28x1: dense(10)").unwrap();
+    let e = auto_config(&loaded, &other, budget).unwrap_err();
+    assert!(format!("{e}").contains("explored on"), "{e}");
+
+    // boot a real server on the chosen config (same synthetic seed =
+    // same weights the explorer measured) and serve requests
+    let sopts = ServerOpts {
+        configs: vec![chosen],
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 1_024,
+        engine_workers: 1,
+        engine_gemm_threads: 1,
+        use_pjrt: false,
+        ..ServerOpts::default()
+    };
+    let server = Server::start_with_model(
+        sopts,
+        Arc::new(Model::synthetic(spec.clone(), seed)),
+        None,
+    )
+    .unwrap();
+    let (images, _) = synth::generate(8, 99);
+    let (tx, rx) = channel();
+    for i in 0..8 {
+        let img: Vec<f32> = images[i * 784..(i + 1) * 784]
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect();
+        server.router.submit(0, img, None, tx.clone()).unwrap();
+    }
+    drop(tx);
+    for _ in 0..8 {
+        let r = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("response stream ended early");
+        assert!(r.pred().expect("serving failed") < 10);
+    }
+    server.shutdown().unwrap();
+}
