@@ -15,7 +15,6 @@ use lop::data::synth;
 use lop::nn::spec::{NetSpec, ReprMap};
 use lop::runtime::execution_plan;
 use lop::util::prng::Rng;
-use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
@@ -145,8 +144,8 @@ fn main() -> Result<()> {
     }
     let wall = t0.elapsed();
     let depths = server.queue_depths();
-    let panels = metrics.panels_cached.load(Ordering::Relaxed);
-    let panel_bytes = metrics.panel_bytes.load(Ordering::Relaxed);
+    let panels = metrics.panels_cached.get();
+    let panel_bytes = metrics.panel_bytes.get();
     let cache = server.plan_cache.stats();
     server.shutdown()?;
 

@@ -44,6 +44,10 @@ struct Row {
     threads: usize,
     packed_ns: f64,
     prepacked_ns: f64,
+    // bucketed percentiles of the prepacked (serving-path) series,
+    // from the shared telemetry histogram inside BenchResult
+    prepacked_p50_ns: u64,
+    prepacked_p99_ns: u64,
     reference_ns: f64,
     fused_ns: f64,
     unfused_ns: f64,
@@ -163,6 +167,8 @@ fn run_shape(label: &str, tier: Isa, m: usize, k: usize, n: usize,
             threads: *threads,
             packed_ns: rp.mean_ns(),
             prepacked_ns: rq.mean_ns(),
+            prepacked_p50_ns: rq.percentile_ns(50.0),
+            prepacked_p99_ns: rq.percentile_ns(99.0),
             reference_ns: rr.mean_ns(),
             fused_ns: rf.mean_ns(),
             unfused_ns: ru.mean_ns(),
@@ -181,7 +187,9 @@ fn write_json(rows: &[Row]) {
                 "\"shape\": \"{}\", \"kind\": \"{}\", \"isa\": \
                  \"{}\", \"kernel\": \"{}\", \"threads\": {}, \
                  \"packed_mean_ns\": {:.0}, \"prepacked_mean_ns\": \
-                 {:.0}, \"reference_mean_ns\": {:.0}, \
+                 {:.0}, \"prepacked_p50_ns\": {}, \
+                 \"prepacked_p99_ns\": {}, \
+                 \"reference_mean_ns\": {:.0}, \
                  \"packed_mmacs\": {:.1}, \"prepacked_mmacs\": {:.1}, \
                  \"reference_mmacs\": {:.1}, \"fused_mean_ns\": {:.0}, \
                  \"unfused_mean_ns\": {:.0}, \"speedup\": {:.3}, \
@@ -193,6 +201,8 @@ fn write_json(rows: &[Row]) {
                 r.threads,
                 r.packed_ns,
                 r.prepacked_ns,
+                r.prepacked_p50_ns,
+                r.prepacked_p99_ns,
                 r.reference_ns,
                 r.mmacs_packed,
                 r.mmacs_prepacked,

@@ -40,6 +40,11 @@ pub struct ServeFileConfig {
     /// `accuracy_budget` — the minimum accuracy `auto` selection must
     /// meet (required when `auto = true` unless the CLI supplies it).
     pub accuracy_budget: Option<f64>,
+    /// `stats_every = N` — print a Prometheus-style telemetry
+    /// snapshot after every N answered requests (0, the default,
+    /// disables periodic printing; the shutdown snapshot always
+    /// prints).
+    pub stats_every: usize,
 }
 
 impl ServeFileConfig {
@@ -134,6 +139,9 @@ impl ServeFileConfig {
                 .unwrap_or("pareto_front.json")
                 .to_string(),
             accuracy_budget,
+            stats_every: doc
+                .get_int("serve", "stats_every")
+                .unwrap_or(0) as usize,
         })
     }
 }
@@ -237,6 +245,7 @@ max_batch = 32
 max_wait_ms = 1.5
 plan_cache_mb = 64
 use_pjrt = false
+stats_every = 50
 "#,
         )
         .unwrap();
@@ -250,6 +259,7 @@ use_pjrt = false
         assert!(!c.use_pjrt);
         assert_eq!(c.overload, OverloadPolicy::Reject);
         assert_eq!(c.deadline, None);
+        assert_eq!(c.stats_every, 50);
     }
 
     #[test]
@@ -398,6 +408,7 @@ accuracy_budget = 0.9
         assert!(!c.auto);
         assert_eq!(c.front, "pareto_front.json");
         assert_eq!(c.accuracy_budget, None);
+        assert_eq!(c.stats_every, 0);
         let e = ExploreFileConfig::from_toml(&doc).unwrap();
         assert_eq!(e.subset, 500);
         assert_eq!(e.objectives.len(), 3);

@@ -13,8 +13,8 @@
 //! stale — a released batch never contains an expired request.
 
 use super::metrics::Metrics;
+use crate::telemetry::StageBreakdown;
 use std::collections::VecDeque;
-use std::sync::atomic::Ordering;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -79,6 +79,13 @@ pub struct Response {
     /// server's latency histogram; failures carry their latency here
     /// but are counted in their own [`Metrics`] counters instead.
     pub latency: Duration,
+    /// Per-stage attribution of where this request's time went —
+    /// populated for served requests when `LOP_TRACE` tracing is on
+    /// (`None` otherwise, and always `None` for shed/expired/backend
+    /// failures, which never run the full stage pipeline).  Shared
+    /// `Arc` because every request in a batch shares the batch-level
+    /// stage costs.
+    pub breakdown: Option<Arc<StageBreakdown>>,
 }
 
 impl Response {
@@ -260,9 +267,7 @@ impl BatchQueue {
                     match q[i].deadline {
                         Some(d) if d <= now => {
                             let req = q.remove(i).unwrap();
-                            self.metrics
-                                .expired
-                                .fetch_add(1, Ordering::Relaxed);
+                            self.metrics.expired.inc();
                             let _ = req.reply.send(Response {
                                 id: req.id,
                                 outcome: Outcome::Error(
@@ -270,6 +275,7 @@ impl BatchQueue {
                                 ),
                                 latency:
                                     now.duration_since(req.submitted),
+                                breakdown: None,
                             });
                         }
                         Some(d) => {
@@ -515,7 +521,7 @@ mod tests {
         }
         ids.sort_unstable();
         assert_eq!(ids, vec![1, 2]);
-        assert_eq!(metrics.expired.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.expired.get(), 2);
     }
 
     #[test]
@@ -753,7 +759,7 @@ mod tests {
                     return Err(format!(
                         "expired replies {got:?} != {expired_ids:?}"));
                 }
-                let n = metrics.expired.load(Ordering::Relaxed);
+                let n = metrics.expired.get();
                 if n as usize != expired_ids.len() {
                     return Err(format!(
                         "metrics.expired {n} != {}", expired_ids.len()));

@@ -104,6 +104,9 @@ impl Evaluator {
         let acc = self.accuracy_on(cfg, &self.subset.clone())?;
         self.cache.insert(key, acc);
         self.eval_count += 1;
+        // process-wide companion to the per-evaluator `eval_count`,
+        // exported with telemetry snapshots
+        crate::telemetry::global().counter("explorer.evals").inc();
         Ok(acc)
     }
 

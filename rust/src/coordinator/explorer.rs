@@ -1,27 +1,29 @@
 //! The design-space explorer.
 //!
-//! Two search strategies share this module's candidate machinery:
+//! [`Explorer`] is the search API — surrogate-guided, multi-objective:
+//! profile per-layer quality sensitivity and an
+//! analytic/bench-calibrated cost model ([`super::pareto`]), enumerate
+//! the predicted Pareto front by a dominance-pruned layer DP, and
+//! spend the full-net `Evaluator` budget only on predicted-front
+//! configs.  Returns a [`ParetoFront`] artifact with per-point
+//! provenance.  (The paper's §4.2 two-pass greedy shipped as a
+//! deprecated `explore` shim through PR 9 and is gone; the surrogate
+//! search subsumes it — an accuracy [`Explorer::budget`] reproduces
+//! pass 1's bound, and the front's cheap end covers pass 2's
+//! widening.)
 //!
-//! * [`Explorer`] (the supported API) — surrogate-guided,
-//!   multi-objective search: profile per-layer quality sensitivity and
-//!   an analytic/bench-calibrated cost model
-//!   ([`super::pareto`]), enumerate the predicted Pareto front by a
-//!   dominance-pruned layer DP, and spend the full-net `Evaluator`
-//!   budget only on predicted-front configs.  Returns a
-//!   [`ParetoFront`] artifact with per-point provenance.
-//! * [`explore`] (deprecated shim) — the paper's §4.2 two-pass greedy:
-//!   pass 1 picks the cheapest candidate within an accuracy bound,
-//!   pass 2 optionally widens by one accuracy bit.  Single-objective,
-//!   simulates every candidate; kept for one release for callers that
-//!   want the verbatim paper procedure.
-//!
-//! Candidate generation follows §4.2 in both: the range-determined
+//! Candidate generation follows §4.2: the range-determined
 //! field (integral/exponent bits) is lower-bounded by profiled WBA
 //! ranges, the accuracy-determined field (fraction/mantissa bits)
 //! enumerates a bit-count interval.  [`candidate_sets`] additionally
 //! consults each layer's parameter shapes — wider fan-in earns more
 //! partial-sum headroom — so non-paper topologies get per-layer, not
 //! broadcast, candidate sets.
+//!
+//! The explorer publishes `explorer.evals` (full-net evaluator
+//! forwards, counted in [`super::eval`]) and `explorer.sims`
+//! (simulation slots spent on predicted-front configs) on the global
+//! telemetry registry.
 
 use super::eval::Evaluator;
 use super::pareto::{
@@ -32,7 +34,6 @@ use super::ranges::{exp_bits_for, int_bits_for, profile_ranges};
 use crate::approx::arith::ArithKind;
 use crate::approx::cfpu::CfpuMul;
 use crate::approx::drum::DrumMul;
-use crate::hw::datapath::{Datapath, ARRIA10, N_PE};
 use crate::nn::network::LayerRanges;
 use crate::nn::spec::{NetSpec, ReprMap};
 use crate::numeric::{FixedPoint, FloatRep};
@@ -60,7 +61,9 @@ pub struct ExploreOpts {
     /// per-layer fan-in term on top
     pub int_headroom: u32,
     pub families: Vec<Family>,
-    /// run the quality-recovery second pass (two-pass greedy only)
+    /// retained for config-file compatibility (the removed two-pass
+    /// greedy's quality-recovery switch); the surrogate explorer
+    /// ignores it
     pub second_pass: bool,
     /// DRUM widths / CFPU tuning widths enumerated for approx families
     pub drum_ts: Vec<u32>,
@@ -79,30 +82,6 @@ impl Default for ExploreOpts {
             cfpu_ws: vec![3],
         }
     }
-}
-
-/// One explored candidate at one part (two-pass greedy trace).
-#[derive(Clone, Debug)]
-pub struct TraceEntry {
-    pub part: usize,
-    pub candidate: String,
-    pub accuracy: f64,
-    pub cost: f64,
-    pub feasible: bool,
-    pub chosen: bool,
-    pub pass: u8,
-}
-
-/// Result of the two-pass greedy [`explore`].
-#[derive(Clone, Debug)]
-pub struct ExploreResult {
-    pub baseline: f64,
-    pub pass1: ReprMap,
-    pub pass1_accuracy: f64,
-    pub chosen: ReprMap,
-    pub accuracy: f64,
-    pub evals: usize,
-    pub trace: Vec<TraceEntry>,
 }
 
 // ---------------------------------------------------------------------
@@ -166,16 +145,6 @@ fn candidates_for_mag(range_mag: f64, int_headroom: u32,
     out
 }
 
-/// Candidate providers for one part given its value range.
-#[deprecated(
-    note = "use `candidate_sets` (per-layer, shape-aware) or the \
-            `Explorer` builder"
-)]
-pub fn candidates_for(range_mag: f64, opts: &ExploreOpts)
-                      -> Vec<ArithKind> {
-    candidates_for_mag(range_mag, opts.int_headroom, opts)
-}
-
 /// Extra integral-bit headroom a layer earns from its fan-in: a dot
 /// product of `k` terms can grow partial sums by up to `log2(k)` bits,
 /// of which roughly half materialize for centered data (§4.2's
@@ -188,9 +157,8 @@ fn fanin_headroom(spec: &NetSpec, layer: usize) -> u32 {
     (((fan_in as f64).log2().ceil() as u32) / 2).min(4)
 }
 
-/// Candidate providers for one layer: range-driven like
-/// [`candidates_for`], plus shape-aware integral headroom from the
-/// layer's parameter fan-in.
+/// Candidate providers for one layer: range-driven per §4.2, plus
+/// shape-aware integral headroom from the layer's parameter fan-in.
 pub fn layer_candidates(spec: &NetSpec, layer: usize,
                         ranges: &[LayerRanges], opts: &ExploreOpts)
                         -> Result<Vec<ArithKind>, String> {
@@ -227,7 +195,7 @@ pub fn layer_candidates(spec: &NetSpec, layer: usize,
 }
 
 /// Per-layer candidate sets for a whole spec (the bug-fixed
-/// replacement for broadcasting one `candidates_for` call): arity is
+/// replacement for broadcasting one range's candidates): arity is
 /// checked against the spec and every layer's set reflects its own
 /// range *and* parameter shape.
 pub fn candidate_sets(spec: &NetSpec, ranges: &[LayerRanges],
@@ -244,12 +212,6 @@ pub fn candidate_sets(spec: &NetSpec, ranges: &[LayerRanges],
     (0..spec.len())
         .map(|l| layer_candidates(spec, l, ranges, opts))
         .collect()
-}
-
-/// Hardware cost of a *uniform* datapath built from one part's provider —
-/// the per-part objective the greedy pass minimizes.
-fn part_cost(kind: &ArithKind) -> f64 {
-    Datapath::synthesize(kind, N_PE).explore_cost(&ARRIA10)
 }
 
 // ---------------------------------------------------------------------
@@ -477,11 +439,14 @@ impl Explorer {
                 picks.remove(&max);
             }
         }
+        let sim_counter =
+            crate::telemetry::global().counter("explorer.sims");
         let mut sims = 0;
         for &i in &picks {
             let acc = ev.accuracy(&points[i].repr_map)?;
             points[i].accuracy = acc;
             points[i].simulated = true;
+            sim_counter.inc();
             sims += 1;
         }
 
@@ -502,155 +467,6 @@ impl Explorer {
 
         Ok(ParetoFront::from_points(&spec, final_points, baseline,
                                     sims, space, cost.source()))
-    }
-}
-
-// ---------------------------------------------------------------------
-// the two-pass greedy (deprecated shim around the §4.2 procedure)
-// ---------------------------------------------------------------------
-
-/// Run the full §4.2 exploration over however many parts the
-/// evaluator's topology has (one part per layer — `spec.len()`, the
-/// arity `ranges` must match).
-#[deprecated(
-    note = "use the `Explorer` builder (surrogate-guided, \
-            multi-objective); this simulates every candidate"
-)]
-pub fn explore(ev: &mut Evaluator, ranges: &[LayerRanges],
-               opts: &ExploreOpts) -> Result<ExploreResult> {
-    explore_greedy(ev, ranges, opts)
-}
-
-fn explore_greedy(ev: &mut Evaluator, ranges: &[LayerRanges],
-                  opts: &ExploreOpts) -> Result<ExploreResult> {
-    let n_parts = ranges.len();
-    let spec = ev.spec().clone();
-    if n_parts != spec.len() {
-        bail!("{} WBA range entries for the {}-layer spec '{spec}' \
-               (profile one range per layer)",
-              n_parts, spec.len());
-    }
-    let f32_uniform = ReprMap::uniform(ArithKind::Float32, n_parts);
-    let baseline = ev.accuracy(&f32_uniform)?;
-    let floor = baseline * (1.0 - opts.accuracy_bound);
-    let mut trace = Vec::new();
-
-    // ---------- pass 1: cost-min subject to accuracy ----------
-    let mut cfg = f32_uniform;
-    for part in 0..n_parts {
-        let cands = match layer_candidates(&spec, part, ranges, opts) {
-            Ok(c) => c,
-            Err(e) => bail!("{e}"),
-        };
-        let mut best: Option<(f64, ArithKind, f64)> = None; // (cost, k, acc)
-        let mut fallback: Option<(f64, ArithKind, f64)> = None; // max acc
-        for cand in cands {
-            let mut trial = cfg.clone();
-            trial.set(part, cand);
-            let acc = ev.accuracy(&trial)?;
-            let cost = part_cost(&cand);
-            let feasible = acc >= floor;
-            trace.push(TraceEntry {
-                part,
-                candidate: cand.name(),
-                accuracy: acc,
-                cost,
-                feasible,
-                chosen: false,
-                pass: 1,
-            });
-            if feasible
-                && best.as_ref().map(|(c, _, _)| cost < *c).unwrap_or(true)
-            {
-                best = Some((cost, cand, acc));
-            }
-            if fallback
-                .as_ref()
-                .map(|(_, _, a)| acc > *a)
-                .unwrap_or(true)
-            {
-                fallback = Some((cost, cand, acc));
-            }
-        }
-        let (_, chosen_kind, _) = best.or(fallback).expect("no candidates");
-        cfg.set(part, chosen_kind);
-        let name = chosen_kind.name();
-        if let Some(t) = trace
-            .iter_mut()
-            .rev()
-            .find(|t| t.part == part && t.pass == 1 && t.candidate == name)
-        {
-            t.chosen = true;
-        }
-    }
-    let pass1 = cfg;
-    let pass1_accuracy = ev.accuracy(&pass1)?;
-
-    // ---------- pass 2: quality recovery under bounded cost ----------
-    let mut chosen = pass1.clone();
-    if opts.second_pass {
-        for part in 0..n_parts {
-            let mut best_acc = ev.accuracy(&chosen)?;
-            let mut best_kind = *chosen.kind(part);
-            for cand in widen_by_one(chosen.kind(part)) {
-                let mut trial = chosen.clone();
-                trial.set(part, cand);
-                let acc = ev.accuracy(&trial)?;
-                trace.push(TraceEntry {
-                    part,
-                    candidate: cand.name(),
-                    accuracy: acc,
-                    cost: part_cost(&cand),
-                    feasible: true,
-                    chosen: false,
-                    pass: 2,
-                });
-                if acc > best_acc {
-                    best_acc = acc;
-                    best_kind = cand;
-                }
-            }
-            chosen.set(part, best_kind);
-        }
-    }
-    let accuracy = ev.accuracy(&chosen)?;
-
-    Ok(ExploreResult {
-        baseline,
-        pass1,
-        pass1_accuracy,
-        chosen,
-        accuracy,
-        evals: ev.eval_count,
-        trace,
-    })
-}
-
-/// Pass-2 neighborhood: one extra bit on the accuracy-determined field
-/// (the paper's example of "bounded increase in hardware cost").
-fn widen_by_one(kind: &ArithKind) -> Vec<ArithKind> {
-    match kind {
-        ArithKind::FixedExact(r) if r.i_bits + r.f_bits < 22 => {
-            vec![ArithKind::FixedExact(FixedPoint::new(r.i_bits,
-                                                       r.f_bits + 1))]
-        }
-        ArithKind::FloatExact(r) if r.m_bits < 23 => {
-            vec![ArithKind::FloatExact(FloatRep::new(r.e_bits,
-                                                     r.m_bits + 1))]
-        }
-        ArithKind::FixedDrum(d) if d.rep.i_bits + d.rep.f_bits < 22 => {
-            vec![ArithKind::FixedDrum(DrumMul::new(
-                FixedPoint::new(d.rep.i_bits, d.rep.f_bits + 1),
-                d.t,
-            ))]
-        }
-        ArithKind::FloatCfpu(c) if c.rep.m_bits < 23 => {
-            vec![ArithKind::FloatCfpu(CfpuMul::new(
-                FloatRep::new(c.rep.e_bits, c.rep.m_bits + 1),
-                c.w,
-            ))]
-        }
-        _ => Vec::new(),
     }
 }
 
@@ -681,21 +497,6 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shim_matches_the_mag_core() {
-        let opts = ExploreOpts {
-            families: vec![Family::Fixed],
-            frac_bci: (4, 6),
-            int_headroom: 1,
-            ..Default::default()
-        };
-        assert_eq!(
-            candidates_for(9.85, &opts),
-            candidates_for_mag(9.85, opts.int_headroom, &opts)
-        );
-    }
-
-    #[test]
     fn float_candidates_have_range_determined_exponent() {
         let opts = ExploreOpts {
             families: vec![Family::Float],
@@ -709,15 +510,6 @@ mod tests {
                 _ => panic!(),
             }
         }
-    }
-
-    #[test]
-    fn widen_adds_one_accuracy_bit() {
-        let k = ArithKind::parse("FI(6,8)").unwrap();
-        assert_eq!(widen_by_one(&k)[0].name(), "FI(6, 9)");
-        let k = ArithKind::parse("FL(4,9)").unwrap();
-        assert_eq!(widen_by_one(&k)[0].name(), "FL(4, 10)");
-        assert!(widen_by_one(&ArithKind::Float32).is_empty());
     }
 
     #[test]

@@ -1,60 +1,78 @@
-//! Serving metrics: lock-free counters + a log-bucketed latency histogram
-//! (p50/p99 without storing every sample).
+//! Serving metrics: a private telemetry registry per server.
+//!
+//! Since PR 10 this is a thin, named view over [`crate::telemetry`]:
+//! every counter/gauge/histogram here is a registry handle, so the
+//! `serve` loop, the benches, and CI's sanity gates all read the same
+//! series through [`Metrics::snapshot`] — no private percentile math.
+//!
+//! Each `Metrics` owns its *own* [`Registry`] (not [`telemetry::
+//! global()`](crate::telemetry::global)): tests routinely run several
+//! `Server`s in one process, and their admission counts must not
+//! cross-pollute.  Genuinely process-wide series (GEMM pack counts,
+//! `stage.*` span histograms) live in the global registry instead.
+//!
+//! Plan-cache mirrors: the shared cache's hit/miss/evict counters are
+//! mirrored with [`Counter::store_max`] (monotone, so a stale store
+//! is a no-op), and its residency gauges with sequence-tagged
+//! [`Gauge::set_at`] fed by `PlanCache::gauge_snapshot()` — the
+//! PR-4-era racing plain stores could publish a stale snapshot over a
+//! fresher one until the next batch; now the registry rejects stale
+//! sequences outright.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::telemetry::{
+    Counter, Gauge, Histogram, Registry, TelemetrySnapshot,
+};
+use std::sync::Arc;
 use std::time::Duration;
-
-/// Log-bucketed histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
-const BUCKETS: usize = 40;
 
 #[derive(Debug)]
 pub struct Metrics {
+    registry: Registry,
     /// Requests *accepted* by the router (queued, degraded, or shed —
     /// everything that will eventually get a [`Response`]).  At drain,
     /// `submitted == completed + shed + expired + backend_failures`.
-    pub submitted: AtomicU64,
+    ///
+    /// [`Response`]: super::batcher::Response
+    pub submitted: Arc<Counter>,
     /// Requests served to an `Ok` prediction (== latency-histogram
     /// entries); failures are counted in their own counters below and
     /// never here.
-    pub completed: AtomicU64,
+    pub completed: Arc<Counter>,
     /// Admissions refused outright (`SubmitError::Overloaded`): the
     /// `Reject` policy's refusals, or `Degrade` with every rung full.
     /// The only admission outcome that does *not* produce a Response.
-    pub rejected: AtomicU64,
+    pub rejected: Arc<Counter>,
     /// Accepted, then dropped at the door by the `Shed` policy
     /// (answered `Error(Shed)`).
-    pub shed: AtomicU64,
+    pub shed: Arc<Counter>,
     /// Accepted onto a cheaper config's queue by the `Degrade`
     /// policy's cost ladder.
-    pub degraded: AtomicU64,
+    pub degraded: Arc<Counter>,
     /// Removed from a queue unserved because the queueing deadline
     /// passed (answered `Error(Expired)`).
-    pub expired: AtomicU64,
+    pub expired: Arc<Counter>,
     /// Reached a worker whose backend forward failed (answered
-    /// `Error(Backend)`; excluded from the latency histogram — the
-    /// pre-PR-7 path recorded these as completions under a sentinel
-    /// prediction).
-    pub backend_failures: AtomicU64,
-    pub batches: AtomicU64,
-    pub batched_items: AtomicU64,
+    /// `Error(Backend)`; excluded from the latency histogram).
+    pub backend_failures: Arc<Counter>,
+    pub batches: Arc<Counter>,
+    pub batched_items: Arc<Counter>,
     /// Weight panels resident in the shared plan cache (layers x
-    /// resident configs) — a *gauge*, synced from
-    /// `plan_cache::PlanCacheStats` by the engine workers; since PR 4
-    /// the pool shares one cache, so this no longer accumulates per
-    /// worker.
-    pub panels_cached: AtomicU64,
+    /// resident configs) — a sequence-tagged gauge synced from
+    /// `PlanCache::gauge_snapshot()` by the engine workers.
+    pub panels_cached: Arc<Gauge>,
     /// Bytes resident in those prepacked weight panels (gauge).
-    pub panel_bytes: AtomicU64,
-    /// Plan-cache gets served from a resident prepared net (gauge,
-    /// mirrored from the cache's own counters).
-    pub plan_hits: AtomicU64,
+    pub panel_bytes: Arc<Gauge>,
+    /// Plan-cache gets served from a resident prepared net (monotone
+    /// mirror of the cache's own counter).
+    pub plan_hits: Arc<Counter>,
     /// Plan-cache gets that prepared a network (== `Model::prepare`
-    /// runs across the whole worker pool; gauge).
-    pub plan_misses: AtomicU64,
-    /// Prepared nets dropped by the plan cache's byte cap (gauge).
-    pub plan_evictions: AtomicU64,
-    buckets: [AtomicU64; BUCKETS],
-    sum_us: AtomicU64,
+    /// runs across the whole worker pool; monotone mirror).
+    pub plan_misses: Arc<Counter>,
+    /// Prepared nets dropped by the plan cache's byte cap (monotone
+    /// mirror).
+    pub plan_evictions: Arc<Counter>,
+    /// End-to-end `Ok` latency in microseconds (submit -> response).
+    pub latency_us: Arc<Histogram>,
 }
 
 impl Default for Metrics {
@@ -65,93 +83,91 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Metrics {
+        let registry = Registry::new();
+        // handle registrations run before `registry` moves into the
+        // struct (field-init order is source order; it is last)
         Metrics {
-            submitted: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
-            degraded: AtomicU64::new(0),
-            expired: AtomicU64::new(0),
-            backend_failures: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            batched_items: AtomicU64::new(0),
-            panels_cached: AtomicU64::new(0),
-            panel_bytes: AtomicU64::new(0),
-            plan_hits: AtomicU64::new(0),
-            plan_misses: AtomicU64::new(0),
-            plan_evictions: AtomicU64::new(0),
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            sum_us: AtomicU64::new(0),
+            submitted: registry.counter("serving.submitted"),
+            completed: registry.counter("serving.completed"),
+            rejected: registry.counter("serving.rejected"),
+            shed: registry.counter("serving.shed"),
+            degraded: registry.counter("serving.degraded"),
+            expired: registry.counter("serving.expired"),
+            backend_failures: registry.counter("serving.backend_failures"),
+            batches: registry.counter("serving.batches"),
+            batched_items: registry.counter("serving.batched_items"),
+            panels_cached: registry.gauge("plan_cache.resident_panels"),
+            panel_bytes: registry.gauge("plan_cache.resident_bytes"),
+            plan_hits: registry.counter("plan_cache.hits"),
+            plan_misses: registry.counter("plan_cache.misses"),
+            plan_evictions: registry.counter("plan_cache.evictions"),
+            latency_us: registry.histogram("serving.latency_us"),
+            registry,
         }
     }
 
-    /// Publish the plan cache's current residency (`count` panel
-    /// layers totalling `bytes`).  Store semantics — every engine
-    /// worker syncs the same shared-cache snapshot, so the gauges are
-    /// idempotent across the pool (worker-count invariant), unlike the
-    /// pre-PR-4 per-worker accumulation.
-    pub fn set_panels(&self, count: u64, bytes: u64) {
-        self.panels_cached.store(count, Ordering::Relaxed);
-        self.panel_bytes.store(bytes, Ordering::Relaxed);
+    /// The registry behind the named handles (for snapshot-side
+    /// lookups; updates should go through the typed fields).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
     }
 
-    /// Publish the plan cache's hit/miss/eviction counters (same
-    /// store-a-snapshot discipline as [`Metrics::set_panels`]).
+    /// Export every serving series (deterministically name-ordered).
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        self.registry.snapshot()
+    }
+
+    /// Publish a plan-cache residency snapshot taken at sequence
+    /// `seq` (`count` panel layers totalling `bytes`).  Applies only
+    /// if `seq` is newer than the currently published snapshot, so
+    /// racing engine workers can never regress the gauges — the fix
+    /// for PR 4's "stale until the next batch" store race.
+    pub fn set_panels_at(&self, seq: u64, count: u64, bytes: u64) {
+        self.panels_cached.set_at(seq, count);
+        self.panel_bytes.set_at(seq, bytes);
+    }
+
+    /// Publish the plan cache's hit/miss/eviction counters.  These
+    /// are monotone at the source, so the mirror uses `store_max`:
+    /// stale stores are no-ops instead of regressions.
     pub fn set_plan_cache(&self, hits: u64, misses: u64,
                           evictions: u64) {
-        self.plan_hits.store(hits, Ordering::Relaxed);
-        self.plan_misses.store(misses, Ordering::Relaxed);
-        self.plan_evictions.store(evictions, Ordering::Relaxed);
+        self.plan_hits.store_max(hits);
+        self.plan_misses.store_max(misses);
+        self.plan_evictions.store_max(evictions);
     }
 
     pub fn record_latency(&self, d: Duration) {
         let us = d.as_micros().max(1) as u64;
-        let idx = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency_us.record(us);
+        self.completed.inc();
     }
 
     pub fn record_batch(&self, n: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+        self.batches.inc();
+        self.batched_items.add(n as u64);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.completed.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.latency_us.mean()
     }
 
-    /// Approximate percentile (upper bound of the bucket containing it).
+    /// Latency percentile in microseconds — the shared histogram's
+    /// read-out: in `[true, 2*true)`, clamped by the exact max.
     pub fn percentile_us(&self, p: f64) -> u64 {
-        let total = self.completed.load(Ordering::Relaxed);
-        if total == 0 {
-            return 0;
-        }
-        let target = ((p / 100.0) * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        1u64 << BUCKETS
+        self.latency_us.percentile(p)
     }
 
     pub fn mean_batch_size(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed);
+        let b = self.batches.get();
         if b == 0 {
             return 0.0;
         }
-        self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        self.batched_items.get() as f64 / b as f64
     }
 
     pub fn summary(&self, wall: Duration) -> String {
-        let n = self.completed.load(Ordering::Relaxed);
+        let n = self.completed.get();
         format!(
             "completed {} reqs in {:.2}s  ({:.1} req/s)\n\
              latency: mean {:.2} ms  p50 <= {:.2} ms  \
@@ -168,19 +184,18 @@ impl Metrics {
             self.percentile_us(50.0) as f64 / 1e3,
             self.percentile_us(99.0) as f64 / 1e3,
             self.percentile_us(99.9) as f64 / 1e3,
-            self.rejected.load(Ordering::Relaxed),
-            self.shed.load(Ordering::Relaxed),
-            self.degraded.load(Ordering::Relaxed),
-            self.expired.load(Ordering::Relaxed),
-            self.backend_failures.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
+            self.rejected.get(),
+            self.shed.get(),
+            self.degraded.get(),
+            self.expired.get(),
+            self.backend_failures.get(),
+            self.batches.get(),
             self.mean_batch_size(),
-            self.panels_cached.load(Ordering::Relaxed),
-            self.panel_bytes.load(Ordering::Relaxed) as f64
-                / (1024.0 * 1024.0),
-            self.plan_hits.load(Ordering::Relaxed),
-            self.plan_misses.load(Ordering::Relaxed),
-            self.plan_evictions.load(Ordering::Relaxed)
+            self.panels_cached.get(),
+            self.panel_bytes.get() as f64 / (1024.0 * 1024.0),
+            self.plan_hits.get(),
+            self.plan_misses.get(),
+            self.plan_evictions.get()
         )
     }
 }
@@ -217,9 +232,9 @@ mod tests {
         assert_eq!(m.percentile_us(99.9), 0);
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.mean_batch_size(), 0.0);
-        assert_eq!(m.panels_cached.load(Ordering::Relaxed), 0);
-        assert_eq!(m.rejected.load(Ordering::Relaxed), 0);
-        assert_eq!(m.backend_failures.load(Ordering::Relaxed), 0);
+        assert_eq!(m.panels_cached.get(), 0);
+        assert_eq!(m.rejected.get(), 0);
+        assert_eq!(m.backend_failures.get(), 0);
     }
 
     #[test]
@@ -234,18 +249,18 @@ mod tests {
         m.record_latency(Duration::from_secs(2));
         assert!(m.percentile_us(99.0) <= 256,
                 "p99 {}", m.percentile_us(99.0));
-        assert!(m.percentile_us(99.9) >= 2_000_000,
-                "p999 {}", m.percentile_us(99.9));
+        // the max clamp makes the tail read-out exact
+        assert_eq!(m.percentile_us(99.9), 2_000_000);
     }
 
     #[test]
     fn admission_counters_and_summary() {
         let m = Metrics::new();
-        m.rejected.fetch_add(3, Ordering::Relaxed);
-        m.shed.fetch_add(2, Ordering::Relaxed);
-        m.degraded.fetch_add(5, Ordering::Relaxed);
-        m.expired.fetch_add(1, Ordering::Relaxed);
-        m.backend_failures.fetch_add(4, Ordering::Relaxed);
+        m.rejected.add(3);
+        m.shed.add(2);
+        m.degraded.add(5);
+        m.expired.inc();
+        m.backend_failures.add(4);
         let s = m.summary(Duration::from_secs(1));
         assert!(s.contains("3 rejected, 2 shed, 5 degraded, \
                             1 expired, 4 backend failures"), "{s}");
@@ -253,21 +268,43 @@ mod tests {
     }
 
     #[test]
-    fn panel_gauges_take_the_latest_snapshot() {
+    fn panel_gauges_reject_stale_snapshots() {
         let m = Metrics::new();
-        // two workers syncing the same shared cache: gauges converge
-        // to the snapshot, they do not double-count the pool
-        m.set_panels(8, 14_000_000);
-        m.set_panels(8, 14_000_000);
-        assert_eq!(m.panels_cached.load(Ordering::Relaxed), 8);
-        assert_eq!(m.panel_bytes.load(Ordering::Relaxed), 14_000_000);
-        m.set_plan_cache(10, 2, 1);
+        // two workers publish shared-cache snapshots out of order:
+        // the later sequence wins regardless of arrival order
+        m.set_panels_at(5, 8, 14_000_000);
+        m.set_panels_at(3, 4, 7_000_000); // stale — must not apply
+        assert_eq!(m.panels_cached.get(), 8);
+        assert_eq!(m.panel_bytes.get(), 14_000_000);
+        m.set_panels_at(6, 10, 20_000_000);
+        assert_eq!(m.panels_cached.get(), 10);
+        // monotone mirrors: a lagging worker's store is a no-op
         m.set_plan_cache(11, 2, 1);
-        assert_eq!(m.plan_hits.load(Ordering::Relaxed), 11);
-        assert_eq!(m.plan_misses.load(Ordering::Relaxed), 2);
-        assert_eq!(m.plan_evictions.load(Ordering::Relaxed), 1);
+        m.set_plan_cache(10, 2, 1);
+        assert_eq!(m.plan_hits.get(), 11);
+        assert_eq!(m.plan_misses.get(), 2);
+        assert_eq!(m.plan_evictions.get(), 1);
         let s = m.summary(Duration::from_secs(1));
-        assert!(s.contains("8 weight panels"), "{s}");
+        assert!(!s.contains("8 weight panels"), "{s}");
+        assert!(s.contains("10 weight panels"), "{s}");
         assert!(s.contains("11 hits / 2 prepares / 1 evictions"), "{s}");
+    }
+
+    #[test]
+    fn snapshot_exports_the_named_series() {
+        let m = Metrics::new();
+        m.submitted.add(7);
+        m.record_latency(Duration::from_micros(300));
+        let snap = m.snapshot();
+        use crate::telemetry::MetricValue;
+        assert_eq!(snap.get("serving.submitted"),
+                   Some(&MetricValue::Counter(7)));
+        match snap.get("serving.latency_us") {
+            Some(MetricValue::Histogram(h)) => assert_eq!(h.count, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        // two servers in one process do not share registries
+        let other = Metrics::new();
+        assert_eq!(other.submitted.get(), 0);
     }
 }

@@ -533,6 +533,10 @@ impl ParetoFront {
                 .total_cmp(&b.hw_cost)
                 .then(a.est_latency.total_cmp(&b.est_latency))
         });
+        // size of the most recently assembled front, for snapshots
+        crate::telemetry::global()
+            .gauge("explorer.front_points")
+            .set(points.len() as u64);
         ParetoFront {
             spec: spec.to_string(),
             points,

@@ -339,15 +339,30 @@ impl PlanCache {
 
     /// Lock-free `(resident panel layers, resident panel bytes)` —
     /// mirrors maintained under the map lock at every residency
-    /// change, read here without it.  Lets the engine workers keep the
-    /// metric gauges fresh on every batch, so a stale store from a
-    /// racing cold-start cannot stick (it is overwritten by the next
-    /// batch's read).
+    /// change, read here without it.  The pair carries no ordering
+    /// information, so racing publishers of these values can briefly
+    /// publish stale state; metric mirroring should use
+    /// [`PlanCache::gauge_snapshot`] instead.
     pub fn resident_gauges(&self) -> (u64, u64) {
         (
             self.resident_panels_gauge.load(Ordering::Relaxed),
             self.resident_bytes_gauge.load(Ordering::Relaxed),
         )
+    }
+
+    /// Sequence-tagged residency snapshot for telemetry gauges:
+    /// `(seq, resident panel layers, resident panel bytes)`, read
+    /// under the map lock with a freshly bumped logical clock.  Every
+    /// snapshot carries a unique, monotonically increasing sequence
+    /// and the triple is internally consistent, so publishing it via
+    /// `telemetry::Gauge::set_at` closes the PR-4 staleness race: a
+    /// racing worker's older snapshot (smaller seq) can never
+    /// overwrite a fresher one.  Bumping the clock does not perturb
+    /// LRU order — entries keep their own `last_used` stamps.
+    pub fn gauge_snapshot(&self) -> (u64, u64, u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        (g.tick, g.resident_panels as u64, g.resident_bytes as u64)
     }
 
     /// Whether `cfg` is resident right now (does not touch LRU order).
@@ -427,6 +442,25 @@ mod tests {
         let one = cache.get(&cfg("FI(5,8)")).packed_panel_stats();
         assert_eq!(cache.stats().resident_bytes, one.1);
         assert_eq!(cache.stats().resident_panels, one.0);
+    }
+
+    #[test]
+    fn gauge_snapshots_carry_unique_increasing_sequences() {
+        let cache = PlanCache::new(paper(5));
+        let (s1, p1, b1) = cache.gauge_snapshot();
+        let (s2, p2, b2) = cache.gauge_snapshot();
+        assert!(s2 > s1, "sequences must strictly increase");
+        assert_eq!((p1, b1), (0, 0));
+        assert_eq!((p2, b2), (0, 0));
+        cache.get(&cfg("FI(6,8)"));
+        let (s3, p3, b3) = cache.gauge_snapshot();
+        assert!(s3 > s2);
+        assert_eq!(p3, 4);
+        assert!(b3 > 0);
+        // snapshot clock bumps do not disturb LRU eviction order:
+        // entries keep their own last_used stamps
+        let s = cache.stats();
+        assert_eq!(s.resident_configs, 1);
     }
 
     #[test]

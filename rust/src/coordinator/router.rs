@@ -184,6 +184,13 @@ impl Router {
         if image.len() != self.input_len {
             return Err(SubmitError::BadInput);
         }
+        // Admission time (policy + enqueue) under the `submit` stage.
+        // This overlaps the start of `queue_wait` (queueing is clocked
+        // from `submitted`), which is why per-request breakdowns and
+        // the CI stage-sum check use the interior stages only.
+        let _span = crate::telemetry::Span::enter(
+            crate::telemetry::Stage::Submit,
+        );
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let submitted = Instant::now();
         let deadline = deadline
@@ -199,12 +206,12 @@ impl Router {
         };
         match self.queue.admit(req, &self.ladders[config_id]) {
             Ok(Admitted::Queued) => {
-                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.submitted.inc();
                 Ok(id)
             }
             Ok(Admitted::Degraded(_)) => {
-                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-                self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                self.metrics.submitted.inc();
+                self.metrics.degraded.inc();
                 Ok(id)
             }
             Err(PushError::Closed(_)) => Err(SubmitError::ShuttingDown),
@@ -212,21 +219,18 @@ impl Router {
                 OverloadPolicy::Shed => {
                     // accepted-then-dropped: the client gets a typed
                     // answer now instead of an error or a stale result
-                    self.metrics
-                        .submitted
-                        .fetch_add(1, Ordering::Relaxed);
-                    self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.submitted.inc();
+                    self.metrics.shed.inc();
                     let _ = req.reply.send(Response {
                         id: req.id,
                         outcome: Outcome::Error(FailureKind::Shed),
                         latency: req.submitted.elapsed(),
+                        breakdown: None,
                     });
                     Ok(id)
                 }
                 _ => {
-                    self.metrics
-                        .rejected
-                        .fetch_add(1, Ordering::Relaxed);
+                    self.metrics.rejected.inc();
                     Err(SubmitError::Overloaded)
                 }
             },
@@ -304,15 +308,15 @@ mod tests {
         assert_eq!(r.submit(0, vec![0.0; 784], None, tx),
                    Err(SubmitError::Overloaded));
         // rejected submissions are visible: one accepted, two refused
-        assert_eq!(m.submitted.load(Ordering::Relaxed), 1);
-        assert_eq!(m.rejected.load(Ordering::Relaxed), 2);
+        assert_eq!(m.submitted.get(), 1);
+        assert_eq!(m.rejected.get(), 2);
         // client errors are not admission refusals
         let (tx2, _rx2) = channel();
         let (r2, _, m2) =
             mk_router_with(1, OverloadPolicy::Reject, None);
         assert_eq!(r2.submit(9, vec![0.0; 784], None, tx2),
                    Err(SubmitError::UnknownConfig));
-        assert_eq!(m2.rejected.load(Ordering::Relaxed), 0);
+        assert_eq!(m2.rejected.get(), 0);
     }
 
     #[test]
@@ -322,7 +326,7 @@ mod tests {
         q.close();
         assert_eq!(r.submit(0, vec![0.0; 784], None, tx),
                    Err(SubmitError::ShuttingDown));
-        assert_eq!(m.rejected.load(Ordering::Relaxed), 0,
+        assert_eq!(m.rejected.get(), 0,
                    "drain refusals are not overload rejections");
     }
 
@@ -336,9 +340,9 @@ mod tests {
         r.submit(0, vec![0.0; 784], None, tx).unwrap();
         let resp = rx.try_recv().expect("shed reply is immediate");
         assert_eq!(resp.outcome, Outcome::Error(FailureKind::Shed));
-        assert_eq!(m.submitted.load(Ordering::Relaxed), 2);
-        assert_eq!(m.shed.load(Ordering::Relaxed), 1);
-        assert_eq!(m.rejected.load(Ordering::Relaxed), 0);
+        assert_eq!(m.submitted.get(), 2);
+        assert_eq!(m.shed.get(), 1);
+        assert_eq!(m.rejected.get(), 0);
     }
 
     #[test]
@@ -359,11 +363,11 @@ mod tests {
         r.submit(0, vec![0.0; 784], None, tx.clone()).unwrap();
         assert_eq!(q.depth(0), 1);
         assert_eq!(q.depth(1), 1);
-        assert_eq!(metrics.degraded.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.degraded.get(), 1);
         // both rungs full → refuse, and count it
         assert_eq!(r.submit(0, vec![0.0; 784], None, tx),
                    Err(SubmitError::Overloaded));
-        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.rejected.get(), 1);
     }
 
     #[test]

@@ -23,8 +23,8 @@ use crate::nn::network::Model;
 use crate::nn::spec::{NetSpec, ReprMap};
 use crate::nn::tensor::Tensor;
 use crate::runtime::{execution_plan, ArtifactDir, ModelRunner};
+use crate::telemetry::{self, Stage, StageBreakdown};
 use anyhow::{bail, ensure, Context, Result};
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -239,15 +239,30 @@ impl Server {
     }
 }
 
-fn respond(batch: Vec<Request>, preds: &[usize], metrics: &Metrics) {
+/// Reply `Ok(pred)` to a whole batch, stamping each request's
+/// end-to-end latency.  `trace` is `Some` only when `LOP_TRACE` is on:
+/// per-request queue-wait microseconds plus the batch-level stage
+/// costs measured by the worker.  Each response gets its own
+/// breakdown (queue wait differs per request); the batch-level tail
+/// is copied from the shared slice.
+fn respond(batch: Vec<Request>, preds: &[usize], metrics: &Metrics,
+           trace: Option<(Vec<u64>, Vec<(&'static str, u64)>)>) {
+    let _span = telemetry::Span::enter(Stage::Reply);
     let now = Instant::now();
-    for (req, &pred) in batch.into_iter().zip(preds) {
+    for (i, (req, &pred)) in batch.into_iter().zip(preds).enumerate() {
         let latency = now.duration_since(req.submitted);
         metrics.record_latency(latency);
+        let breakdown = trace.as_ref().map(|(qw, shared)| {
+            let mut stages = Vec::with_capacity(shared.len() + 1);
+            stages.push((Stage::QueueWait.name(), qw[i]));
+            stages.extend_from_slice(shared);
+            Arc::new(StageBreakdown { stages })
+        });
         let _ = req.reply.send(Response {
             id: req.id,
             outcome: Outcome::Ok(pred),
             latency,
+            breakdown,
         });
     }
 }
@@ -261,11 +276,12 @@ fn respond(batch: Vec<Request>, preds: &[usize], metrics: &Metrics) {
 fn respond_failure(batch: Vec<Request>, metrics: &Metrics) {
     let now = Instant::now();
     for req in batch {
-        metrics.backend_failures.fetch_add(1, Ordering::Relaxed);
+        metrics.backend_failures.inc();
         let _ = req.reply.send(Response {
             id: req.id,
             outcome: Outcome::Error(FailureKind::Backend),
             latency: now.duration_since(req.submitted),
+            breakdown: None,
         });
     }
 }
@@ -307,7 +323,10 @@ fn pjrt_worker(art: ArtifactDir, cache: Arc<PlanCache>,
         match runner.forward(&configs[ci], &x) {
             Ok(logits) => {
                 metrics.record_batch(batch.len());
-                respond(batch, &logits.argmax_rows(), &metrics);
+                // No per-stage breakdown on the PJRT path: the XLA
+                // executable is opaque, so there is nothing finer
+                // than the end-to-end latency to report.
+                respond(batch, &logits.argmax_rows(), &metrics, None);
             }
             Err(e) => {
                 eprintln!("pjrt forward failed: {e:#}");
@@ -329,26 +348,72 @@ fn engine_worker(cache: Arc<PlanCache>, configs: Vec<ReprMap>,
             respond_failure(batch, &metrics);
             continue;
         }
+        let traced = telemetry::trace_enabled();
+        // Per-request queue wait is recorded before the `base`
+        // snapshot below, so the batch-level delta attributes only
+        // the shared stages (the queue-wait slot of the delta is
+        // zero by construction).
+        let queue_waits: Option<Vec<u64>> = if traced {
+            let now = Instant::now();
+            Some(batch.iter().map(|r| {
+                let us =
+                    now.duration_since(r.submitted).as_micros() as u64;
+                telemetry::record_stage(Stage::QueueWait, us);
+                us
+            }).collect())
+        } else {
+            None
+        };
+        let base = telemetry::local_stage_sums();
         // One shared Arc<PreparedNet> per config across the whole
         // pool: the first batch anywhere prepares it (single-flight),
         // every other worker's batches ride the same panels.  The Arc
         // is held only for the batch, so an eviction between batches
         // frees the memory as soon as in-flight work drains.
-        let net = cache.get(&configs[ci]);
-        // Mirror the cache counters and residency gauges every batch
-        // — all lock-free reads, so hit batches stay at a single
-        // cache lock and a stale store from a racing cold-start is
-        // overwritten by the next batch rather than sticking.
-        // Store semantics: idempotent across workers, so the metrics
-        // stay worker-count invariant.
+        let net = {
+            let _span = telemetry::Span::enter(Stage::PlanLookup);
+            cache.get(&configs[ci])
+        };
+        // Mirror the cache state every batch.  The monotone counters
+        // go through `store_max`, so a stale racing store is a no-op
+        // rather than a backwards jump; the residency gauges ride a
+        // sequence-tagged snapshot taken under the cache lock, so a
+        // slow worker's stale (panels, bytes) pair can never
+        // overwrite a fresher one (the PR-4 scheme let the last
+        // writer win and stayed wrong until the next batch).
         let (h, m, e) = cache.counters();
         metrics.set_plan_cache(h, m, e);
-        let (panels, bytes) = cache.resident_gauges();
-        metrics.set_panels(panels, bytes);
-        let x = batch_tensor(&batch, in_shape);
+        let (seq, panels, bytes) = cache.gauge_snapshot();
+        metrics.set_panels_at(seq, panels, bytes);
+        let x = {
+            let _span = telemetry::Span::enter(Stage::BatchAssemble);
+            batch_tensor(&batch, in_shape)
+        };
         let preds = net.predict(&x, threads);
         metrics.record_batch(batch.len());
-        respond(batch, &preds, &metrics);
+        let trace = queue_waits.map(|qw| {
+            // Batch-level stage costs: this thread's span-recorded
+            // microseconds since `base`.  Exact when the GEMM driver
+            // runs on this thread (engine_gemm_threads = 1, the
+            // default); a parallel driver's worker-thread time lands
+            // in the global stage histograms but not in this
+            // per-batch breakdown.
+            let after = telemetry::local_stage_sums();
+            let shared: Vec<(&'static str, u64)> = [
+                Stage::BatchAssemble,
+                Stage::PlanLookup,
+                Stage::GemmPack,
+                Stage::GemmKernel,
+                Stage::GemmEpilogue,
+            ]
+            .iter()
+            .map(|&s| {
+                (s.name(), after[s as usize] - base[s as usize])
+            })
+            .collect();
+            (qw, shared)
+        });
+        respond(batch, &preds, &metrics, trace);
     }
 }
 

@@ -27,6 +27,10 @@
 //! * [`coordinator`] — value-range profiling, accuracy evaluation, the
 //!   §4.2 design-space explorer, and the serving stack
 //!   (router → batcher → workers);
+//! * [`telemetry`] — process-wide observability: the metric registry
+//!   (counters / sequence-tagged gauges / lock-free log2 histograms),
+//!   `LOP_TRACE`-gated stage spans over the request path, and
+//!   versioned snapshot exporters (JSON artifact + Prometheus text);
 //! * [`data`] / [`config`] / [`util`] / [`cli`] — substrates: datasets,
 //!   TOML configs, PRNG/property-test/bench/JSON helpers, argument
 //!   parsing.
@@ -42,4 +46,5 @@ pub mod hw;
 pub mod nn;
 pub mod numeric;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;

@@ -53,8 +53,14 @@ COMMANDS
             [--max-batch 16] [--max-wait-ms 2] [--engine-workers 2]
             [--overload reject|shed|degrade] [--deadline-ms D]
             [--auto [--front pareto_front.json] --accuracy-budget B]
-            [--no-pjrt] [--config-file F] [--model M]  serving benchmark
+            [--stats-every N] [--no-pjrt] [--config-file F]
+            [--model M]       serving benchmark
   help                        this message
+
+Observability: serve prints a Prometheus-style telemetry snapshot on
+shutdown (and every N responses with --stats-every N) and writes it as
+JSON to TELEMETRY_serving.json ($LOP_TELEMETRY_JSON overrides the
+path).  LOP_TRACE=1 adds per-stage latency breakdowns to responses.
 
 Config syntax: float32 | FI(i,f) | FL(e,m) | H(i,f,t) | I(e,m[,w]) |
 binxnor — uniform, or 'a|b|...' with one segment per model layer.
@@ -454,6 +460,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut auto = false;
     let mut front_path = "pareto_front.json".to_string();
     let mut accuracy_budget: Option<f64> = None;
+    let mut stats_every = 0usize;
     if let Some(f) = args.opt_str("config-file") {
         let doc = TomlDoc::parse(&std::fs::read_to_string(f)?)
             .map_err(|e| anyhow::anyhow!(e))?;
@@ -472,6 +479,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sopts.use_pjrt = fc.use_pjrt;
         sopts.overload = fc.overload;
         sopts.deadline = fc.deadline;
+        stats_every = fc.stats_every;
     }
     if let Some(m) = args.opt_str("model") {
         spec = NetSpec::preset_or_parse(m)
@@ -568,6 +576,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let requests = args.usize("requests", 2_000);
     let rate = args.f64("rate", 500.0); // req/s, open loop
+    let stats_every = args.usize("stats-every", stats_every);
 
     println!("serving benchmark: {requests} requests at {rate} req/s \
               over configs {:?}",
@@ -633,6 +642,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut correct = 0usize;
     let mut served = 0usize;
     let mut got = 0usize;
+    // With LOP_TRACE=1 responses carry a per-stage latency breakdown;
+    // print the first few so a traced run shows where time goes
+    // without flooding 2000 lines.
+    let mut breakdowns_shown = 0usize;
     while got + rejected < requests {
         match rx.recv_timeout(Duration::from_secs(30)) {
             Ok(resp) => {
@@ -644,6 +657,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     if pred == lbl {
                         correct += 1;
                     }
+                }
+                if breakdowns_shown < 5 {
+                    if let Some(b) = &resp.breakdown {
+                        println!("trace req {}: total {:?} | {}",
+                                 resp.id, resp.latency, b.render());
+                        breakdowns_shown += 1;
+                    }
+                }
+                if stats_every > 0 && got % stats_every == 0 {
+                    println!("--- telemetry after {got} responses ---");
+                    print!("{}", metrics.snapshot()
+                        .merged_with(lop::telemetry::global()
+                            .snapshot())
+                        .render_prometheus());
                 }
             }
             Err(_) => break,
@@ -665,5 +692,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("stream accuracy {:.3}",
              correct as f64 / served.max(1) as f64);
     println!("{}", metrics.summary(wall));
+
+    // Shutdown telemetry: the serving registry merged with the
+    // process-global one (stage histograms, pack/vecmath counters),
+    // as Prometheus text on stdout and as the versioned JSON artifact
+    // CI's telemetry-sanity step validates.
+    let snap = metrics
+        .snapshot()
+        .merged_with(lop::telemetry::global().snapshot());
+    println!("\n--- telemetry (Prometheus exposition) ---");
+    print!("{}", snap.render_prometheus());
+    snap.write_json("LOP_TELEMETRY_JSON", "TELEMETRY_serving.json");
     Ok(())
 }

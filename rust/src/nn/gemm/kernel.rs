@@ -47,6 +47,7 @@ use super::isa::Isa;
 use super::micro::MicroArith;
 use super::pack::{pack_a_bits, pack_a_block, pack_b_bits, pack_b_block};
 use crate::approx::arith::ArithKind;
+use crate::telemetry::{Span, Stage};
 use std::any::Any;
 
 /// Row-block target: the A sub-block (~MC x KC) an inner sweep works
@@ -403,7 +404,10 @@ impl<A: MicroArith, const MR: usize, const NR: usize>
     fn run_packed_b(&self, x: &[f32], bp: &[A::Elem], m: usize, k: usize,
                     n: usize, out: &mut [f32], threads: usize,
                     ep: &Epilogue) {
-        let ap = pack_a_block::<A, MR>(&self.arith, x, m, k);
+        let ap = {
+            let _span = Span::enter(Stage::GemmPack);
+            pack_a_block::<A, MR>(&self.arith, x, m, k)
+        };
         let threads = effective_threads(threads, m, n);
         if threads <= 1 {
             drive::<A, MR, NR>(&self.arith, self.micro_fn, &ap, bp, 0,
@@ -450,13 +454,17 @@ impl<A: MicroArith, const MR: usize, const NR: usize> Kernel
 
     fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
            out: &mut [f32], threads: usize, ep: &Epilogue) {
-        let bp = pack_b_block::<A, NR>(&self.arith, w, k, n);
+        let bp = {
+            let _span = Span::enter(Stage::GemmPack);
+            pack_b_block::<A, NR>(&self.arith, w, k, n)
+        };
         self.run_packed_b(x, &bp, m, k, n, out, threads, ep);
     }
 
     fn prepack_weights(&self, w: &[f32], k: usize, n: usize)
                        -> PackedWeights {
         assert_eq!(w.len(), k * n, "w shape mismatch");
+        let _span = Span::enter(Stage::GemmPack);
         let bp = pack_b_block::<A, NR>(&self.arith, w, k, n);
         let bytes = bp.len() * std::mem::size_of::<A::Elem>();
         PackedWeights {
@@ -508,33 +516,44 @@ fn drive<A: MicroArith, const MR: usize, const NR: usize>(
             for a in acc[..mc_pad * nc_pad].iter_mut() {
                 *a = arith.zero_acc();
             }
-            for pc in (0..k).step_by(KC) {
-                let kc = KC.min(k - pc);
-                for ir in (0..mc_pad).step_by(MR) {
-                    // global A panel (row0, ic, ir all MR-aligned)
-                    let p = (row0 + ic + ir) / MR;
-                    let abase = p * MR * k + pc * MR;
-                    let apan = &ap[abase..abase + kc * MR];
-                    for jr in (0..nc_pad).step_by(NR) {
-                        let q = (jc + jr) / NR;
-                        let bbase = q * NR * k + pc * NR;
-                        let bpan = &bp[bbase..bbase + kc * NR];
-                        micro_fn(
-                            arith, apan, bpan, kc,
-                            &mut acc[ir * nc_pad + jr..],
-                            nc_pad,
-                        );
+            {
+                // One GemmKernel span per (ic, jc) block: the whole
+                // k reduction for this output block.  Inert (one
+                // relaxed load, no clock read) unless LOP_TRACE is
+                // on.
+                let _span = Span::enter(Stage::GemmKernel);
+                for pc in (0..k).step_by(KC) {
+                    let kc = KC.min(k - pc);
+                    for ir in (0..mc_pad).step_by(MR) {
+                        // global A panel (row0/ic/ir all MR-aligned)
+                        let p = (row0 + ic + ir) / MR;
+                        let abase = p * MR * k + pc * MR;
+                        let apan = &ap[abase..abase + kc * MR];
+                        for jr in (0..nc_pad).step_by(NR) {
+                            let q = (jc + jr) / NR;
+                            let bbase = q * NR * k + pc * NR;
+                            let bpan = &bp[bbase..bbase + kc * NR];
+                            micro_fn(
+                                arith, apan, bpan, kc,
+                                &mut acc[ir * nc_pad + jr..],
+                                nc_pad,
+                            );
+                        }
                     }
                 }
             }
-            for r in 0..mc {
-                let o0 = (ic + r) * n + jc;
-                let orow = &mut chunk[o0..o0 + nc];
-                let arow = &acc[r * nc_pad..r * nc_pad + nc];
-                for (o, a) in orow.iter_mut().zip(arow) {
-                    *o = arith.finish(*a);
+            {
+                // Narrowing store + fused epilogue for the block.
+                let _span = Span::enter(Stage::GemmEpilogue);
+                for r in 0..mc {
+                    let o0 = (ic + r) * n + jc;
+                    let orow = &mut chunk[o0..o0 + nc];
+                    let arow = &acc[r * nc_pad..r * nc_pad + nc];
+                    for (o, a) in orow.iter_mut().zip(arow) {
+                        *o = arith.finish(*a);
+                    }
+                    ep_fn(ep, orow, jc);
                 }
-                ep_fn(ep, orow, jc);
             }
         }
     }
@@ -621,7 +640,10 @@ impl<const BMR: usize, const BNR: usize> BinaryKernel<BMR, BNR> {
         let words = k.div_ceil(64);
         // A: BMR-row word panels (same middle-axis layout as
         // pack::pack_a_block, 64 depth steps per word).
-        let ap = pack_a_bits::<BMR>(x, m, k);
+        let ap = {
+            let _span = Span::enter(Stage::GemmPack);
+            pack_a_bits::<BMR>(x, m, k)
+        };
         // bits >= k in the last word must not count as agreements
         let tail_bits = k % 64;
         let tail_mask =
@@ -638,6 +660,11 @@ impl<const BMR: usize, const BNR: usize> BinaryKernel<BMR, BNR> {
                 let ap = &ap;
                 let drive_fn = self.drive_fn;
                 let worker = move || {
+                    // The word sweep applies the epilogue inline per
+                    // finished tile row, so on the binary path the
+                    // epilogue time lands under gemm_kernel rather
+                    // than gemm_epilogue.
+                    let _span = Span::enter(Stage::GemmKernel);
                     drive_fn(ap, bp, t * rows_per, chunk, words,
                              tail_mask, k, n, ep);
                 };
@@ -672,13 +699,17 @@ impl<const BMR: usize, const BNR: usize> Kernel
 
     fn run(&self, x: &[f32], w: &[f32], m: usize, k: usize, n: usize,
            out: &mut [f32], threads: usize, ep: &Epilogue) {
-        let bp = pack_b_bits::<BNR>(w, k, n);
+        let bp = {
+            let _span = Span::enter(Stage::GemmPack);
+            pack_b_bits::<BNR>(w, k, n)
+        };
         self.run_packed_b(x, &bp, m, k, n, out, threads, ep);
     }
 
     fn prepack_weights(&self, w: &[f32], k: usize, n: usize)
                        -> PackedWeights {
         assert_eq!(w.len(), k * n, "w shape mismatch");
+        let _span = Span::enter(Stage::GemmPack);
         let bp = pack_b_bits::<BNR>(w, k, n);
         let bytes = bp.len() * std::mem::size_of::<u64>();
         PackedWeights {

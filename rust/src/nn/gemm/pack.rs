@@ -26,8 +26,9 @@
 
 use super::micro::MicroArith;
 use crate::numeric::BinXnor;
+use crate::telemetry::{self, Counter};
 use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
 thread_local! {
     /// Weight-side (B-operand) packing operations performed by this
@@ -39,8 +40,13 @@ thread_local! {
 }
 
 /// Process-wide total of weight-side packing operations, across all
-/// threads.
-static WEIGHT_PACKS_GLOBAL: AtomicU64 = AtomicU64::new(0);
+/// threads — a `gemm.weight_packs` counter on the global telemetry
+/// registry, so serving snapshots export it alongside the stage
+/// histograms.
+fn weight_packs_global() -> &'static Arc<Counter> {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| telemetry::global().counter("gemm.weight_packs"))
+}
 
 /// How many weight-side packing operations ([`pack_b_block`] calls and
 /// binary weight-bitmap builds) this thread has performed.  The
@@ -59,12 +65,12 @@ pub fn weight_pack_count() -> u64 {
 /// serialize themselves: the test harness runs tests of one binary
 /// concurrently in a single process.
 pub fn weight_pack_count_global() -> u64 {
-    WEIGHT_PACKS_GLOBAL.load(Ordering::Relaxed)
+    weight_packs_global().get()
 }
 
 fn note_weight_pack() {
     WEIGHT_PACKS.with(|c| c.set(c.get() + 1));
-    WEIGHT_PACKS_GLOBAL.fetch_add(1, Ordering::Relaxed);
+    weight_packs_global().inc();
 }
 
 /// Pack all of row-major `x` (`m` x `k`, row stride `k`) into MR-row

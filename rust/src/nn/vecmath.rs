@@ -19,7 +19,7 @@
 
 use crate::approx::arith::ArithKind;
 use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
 // ---------------------------------------------------------------- scalar ops
 
@@ -137,8 +137,12 @@ thread_local! {
 
 /// Cross-thread total (all ops, all threads) — the coarse companion to
 /// the precise thread-local [`pass_counts`], for tests whose layer
-/// work may run on pool threads.
-static PASSES_GLOBAL: AtomicU64 = AtomicU64::new(0);
+/// work may run on pool threads.  Lives on the global telemetry
+/// registry as `vecmath.passes`, so serving snapshots export it.
+fn passes_global() -> &'static Arc<crate::telemetry::Counter> {
+    static C: OnceLock<Arc<crate::telemetry::Counter>> = OnceLock::new();
+    C.get_or_init(|| crate::telemetry::global().counter("vecmath.passes"))
+}
 
 fn note(f: impl FnOnce(&mut PassCounts)) {
     PASSES.with(|c| {
@@ -146,7 +150,7 @@ fn note(f: impl FnOnce(&mut PassCounts)) {
         f(&mut v);
         c.set(v);
     });
-    PASSES_GLOBAL.fetch_add(1, Ordering::Relaxed);
+    passes_global().inc();
 }
 
 /// This thread's per-op pass counts since thread start.  Tests
@@ -157,7 +161,7 @@ pub fn pass_counts() -> PassCounts {
 
 /// Process-wide total passes across all ops and threads.
 pub fn pass_count_global() -> u64 {
-    PASSES_GLOBAL.load(Ordering::Relaxed)
+    passes_global().get()
 }
 
 #[cfg(test)]

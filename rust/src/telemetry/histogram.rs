@@ -1,0 +1,328 @@
+//! Lock-free log2-bucketed histograms.
+//!
+//! Bucket `i` holds values `v` with `floor(log2(max(v, 1))) == i`,
+//! i.e. the half-open magnitude class `[2^i, 2^(i+1))` (with 0 folded
+//! into bucket 0).  64 buckets cover the whole `u64` range, so there
+//! is no clamping and no configuration: any latency in nanoseconds,
+//! microseconds, or request counts fits.
+//!
+//! Error bound: a percentile read-out returns the upper bound of the
+//! bucket holding the target rank, clamped by the exactly-tracked
+//! maximum.  For a true percentile value `t >= 1` in bucket `i`,
+//! `2^i <= t < 2^(i+1)` and the read-out is `min(2^(i+1), max)`, so
+//! the result lies in `[t, 2t)` — at most one binary order high,
+//! never low.  `max` (and hence p100) is exact; `count`/`sum`/`mean`
+//! are exact.
+//!
+//! All updates are single relaxed RMW atomics — safe from any thread,
+//! no locks on the record path.  Per-thread [`LocalHistogram`] shards
+//! (plain integers) can batch records entirely contention-free and
+//! merge in O(buckets).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: one per binary order of magnitude of `u64`.
+pub const BUCKETS: usize = 64;
+
+/// `floor(log2(v))` for `v >= 1`; 0 maps to bucket 0.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    (63 - v.max(1).leading_zeros()) as usize
+}
+
+/// Exclusive upper bound of bucket `i` (saturating at `u64::MAX`).
+#[inline]
+pub fn bucket_upper_bound(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        1u64 << (i + 1)
+    }
+}
+
+/// A lock-free latency/size histogram (see the module docs for the
+/// bucket scheme and error bound).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.  Wait-free: four relaxed RMWs.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max_value(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Exact arithmetic mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Percentile read-out, `p` in percent (50.0, 99.0, 99.9, 100.0).
+    ///
+    /// Walks the cumulative bucket counts to the rank
+    /// `ceil(p/100 * count)` (at least 1) and returns that bucket's
+    /// upper bound clamped by the exact maximum; 0 when empty.  The
+    /// result is in `[true, 2*true)` — see the module docs.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for i in 0..BUCKETS {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            if cum >= target {
+                return bucket_upper_bound(i).min(self.max_value());
+            }
+        }
+        // p > 100 walks off the end; answer with the exact max.
+        self.max_value()
+    }
+
+    /// Raw per-bucket counts (a consistent-enough relaxed snapshot;
+    /// concurrent recorders may be mid-flight).
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Add every observation of `other` into `self` in O(buckets).
+    pub fn merge_from(&self, other: &Histogram) {
+        for i in 0..BUCKETS {
+            let n = other.buckets[i].load(Ordering::Relaxed);
+            if n > 0 {
+                self.buckets[i].fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max
+            .fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Clone for Histogram {
+    fn clone(&self) -> Histogram {
+        let h = Histogram::new();
+        h.merge_from(self);
+        h
+    }
+}
+
+impl fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Histogram {{ count: {}, sum: {}, max: {} }}",
+            self.count(),
+            self.sum(),
+            self.max_value()
+        )
+    }
+}
+
+/// A plain-integer per-thread shard: record without any atomics, then
+/// [`LocalHistogram::merge_into`] a shared [`Histogram`] once.
+#[derive(Clone)]
+pub struct LocalHistogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl LocalHistogram {
+    pub fn new() -> LocalHistogram {
+        LocalHistogram { buckets: [0; BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Flush this shard into a shared histogram and reset it.
+    pub fn merge_into(&mut self, target: &Histogram) {
+        for i in 0..BUCKETS {
+            if self.buckets[i] > 0 {
+                target.buckets[i].fetch_add(self.buckets[i], Ordering::Relaxed);
+            }
+        }
+        target.count.fetch_add(self.count, Ordering::Relaxed);
+        target.sum.fetch_add(self.sum, Ordering::Relaxed);
+        target.max.fetch_max(self.max, Ordering::Relaxed);
+        *self = LocalHistogram::new();
+    }
+}
+
+impl Default for LocalHistogram {
+    fn default() -> LocalHistogram {
+        LocalHistogram::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_matches_the_scalar_oracle() {
+        // oracle: position of the highest set bit (integer math; a
+        // float log2 rounds wrong near 2^64)
+        let oracle = |v: u64| (64 - v.max(1).leading_zeros() - 1) as usize;
+        for v in 0..=1026u64 {
+            assert_eq!(bucket_index(v), oracle(v), "v={v}");
+        }
+        for i in 0..64u32 {
+            let b = 1u64 << i;
+            assert_eq!(bucket_index(b), i as usize);
+            assert_eq!(bucket_index(b + (b >> 1)), i as usize);
+            if b > 2 {
+                assert_eq!(bucket_index(b - 1), (i - 1) as usize);
+            }
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), 63);
+    }
+
+    #[test]
+    fn percentiles_never_underestimate_and_p100_is_exact() {
+        let h = Histogram::new();
+        for v in [3u64, 17, 120, 900, 7_000, 100_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.max_value(), 100_000);
+        assert_eq!(h.percentile(100.0), 100_000); // exact: max clamp
+        // p50 rank = 3 -> value 120 in bucket 6 -> upper bound 128
+        assert_eq!(h.percentile(50.0), 128);
+        for (p, t) in [(50.0, 120u64), (99.0, 100_000), (99.9, 100_000)] {
+            let r = h.percentile(p);
+            assert!(r >= t && r < 2 * t, "p{p}: {r} vs true {t}");
+        }
+        // monotone in p
+        assert!(h.percentile(50.0) <= h.percentile(99.0));
+        assert!(h.percentile(99.0) <= h.percentile(99.9));
+        assert!(h.percentile(99.9) <= h.percentile(100.0));
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.percentile(100.0), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn zero_values_count_but_do_not_inflate() {
+        let h = Histogram::new();
+        h.record(0);
+        h.record(0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 0);
+        // bucket 0's upper bound is 2 but the max clamp keeps it honest
+        assert_eq!(h.percentile(50.0), 0);
+    }
+
+    #[test]
+    fn local_shard_merges_exactly() {
+        let shared = Histogram::new();
+        let mut local = LocalHistogram::new();
+        for v in [1u64, 2, 3, 1000, 65_536] {
+            local.record(v);
+        }
+        assert_eq!(local.count(), 5);
+        local.merge_into(&shared);
+        assert_eq!(local.count(), 0); // reset after flush
+        assert_eq!(shared.count(), 5);
+        assert_eq!(shared.sum(), 1 + 2 + 3 + 1000 + 65_536);
+        assert_eq!(shared.max_value(), 65_536);
+    }
+
+    #[test]
+    fn merge_from_conserves_totals() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in 1..=100u64 {
+            a.record(v);
+            b.record(v * 10);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max_value(), 1000);
+        let direct = Histogram::new();
+        for v in 1..=100u64 {
+            direct.record(v);
+            direct.record(v * 10);
+        }
+        assert_eq!(a.bucket_counts(), direct.bucket_counts());
+        assert_eq!(a.percentile(99.0), direct.percentile(99.0));
+    }
+
+    #[test]
+    fn clone_is_a_snapshot() {
+        let h = Histogram::new();
+        h.record(42);
+        let snap = h.clone();
+        h.record(7);
+        assert_eq!(snap.count(), 1);
+        assert_eq!(h.count(), 2);
+    }
+}

@@ -1,0 +1,44 @@
+//! Process-wide observability: registry, histograms, spans, snapshots.
+//!
+//! The serving/exploration stack measures representation tradeoffs for
+//! a living, which makes its own instrumentation load-bearing: bench
+//! tables, CI gates, and the `serve` loop must all agree on what "p99"
+//! means.  This module is the single definition.
+//!
+//! * [`Histogram`] — a lock-free, fixed 64-bucket log2 latency
+//!   histogram (atomic counters, mergeable per-thread
+//!   [`LocalHistogram`] shards).  `max` is exact; any percentile
+//!   read-out lands in `[true, 2*true)` — never an underestimate
+//!   (see `histogram.rs` for the bound proof sketch).
+//! * [`Registry`] — named counters / gauges / histograms handed out as
+//!   `Arc` handles.  [`global()`] hosts genuinely process-wide series
+//!   (GEMM pack counts, vecmath passes, `stage.*` span histograms);
+//!   per-[`crate::coordinator::metrics::Metrics`] instances own a
+//!   private registry so multiple servers in one process (tests!)
+//!   don't cross-pollute.
+//! * [`Span`] — stage-scoped RAII timers over the request path
+//!   ([`Stage`] names every stop: submit, queue_wait, batch_assemble,
+//!   plan_lookup, gemm_pack, gemm_kernel, gemm_epilogue, reply),
+//!   env-gated by `LOP_TRACE=1` (or [`set_trace`] in tests) so the
+//!   untraced hot path pays one relaxed atomic load per span site.
+//! * [`TelemetrySnapshot`] — a versioned export of a registry: JSON
+//!   artifact in the `util::bench::write_bench_json` shape (consumed
+//!   by the CI `telemetry-sanity` gate) and a Prometheus-style text
+//!   rendering (`serve --stats-every N`, shutdown summary).
+
+mod histogram;
+mod registry;
+mod snapshot;
+mod span;
+
+pub use histogram::{
+    bucket_index, bucket_upper_bound, Histogram, LocalHistogram, BUCKETS,
+};
+pub use registry::{global, Counter, Gauge, Metric, Registry};
+pub use snapshot::{
+    HistogramSnapshot, MetricValue, TelemetrySnapshot, SCHEMA_VERSION,
+};
+pub use span::{
+    local_stage_sums, record_stage, set_trace, trace_enabled, Span, Stage,
+    StageBreakdown, STAGES,
+};

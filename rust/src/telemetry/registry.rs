@@ -1,0 +1,262 @@
+//! Named metric registry: counters, gauges, histograms as `Arc` handles.
+//!
+//! A registry is a name -> metric map behind a mutex; the mutex guards
+//! only registration and snapshotting, never the update path — handles
+//! are `Arc`s onto lock-free (counter/histogram) or tiny-critical-
+//! section (gauge) state, so callers register once and update forever
+//! without touching the map.
+//!
+//! [`global()`] is the process-wide registry for series that are
+//! genuinely per-process (GEMM pack counts, vecmath pass counts, the
+//! `stage.*` span histograms, explorer totals).  Serving state lives
+//! in per-`Metrics` private registries instead, so two `Server`s in
+//! one process — the normal situation in tests — never share counts.
+
+use super::histogram::Histogram;
+use super::snapshot::{MetricValue, TelemetrySnapshot};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise the counter to `v` if it is currently lower (`fetch_max`).
+    /// The right primitive for mirroring an external monotone series:
+    /// racing stale stores can never lower the published value.
+    #[inline]
+    pub fn store_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time value published with a monotonic sequence tag.
+///
+/// Gauges mirror snapshots of external state (e.g. `PlanCache`
+/// residency) taken by racing workers.  Two separate atomics cannot
+/// publish a (seq, value) pair atomically, so the pair lives behind
+/// one mutex with a microscopic critical section; [`Gauge::set_at`]
+/// applies a snapshot only if its sequence is newer than the one
+/// already published — a stale snapshot can never overwrite a fresher
+/// one, closing the PR-4 "self-heals next batch" staleness race.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    inner: Mutex<(u64, u64)>, // (seq, value)
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge { inner: Mutex::new((0, 0)) }
+    }
+
+    /// Unconditional set (for single-writer gauges); bumps the
+    /// internal sequence so it still orders against `set_at` callers.
+    pub fn set(&self, v: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.0 += 1;
+        g.1 = v;
+    }
+
+    /// Publish `(seq, v)` iff `seq` is strictly newer than the
+    /// currently published sequence.  Returns whether it applied.
+    pub fn set_at(&self, seq: u64, v: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if seq > g.0 {
+            *g = (seq, v);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.inner.lock().unwrap().1
+    }
+
+    /// Sequence tag of the currently published value.
+    pub fn seq(&self) -> u64 {
+        self.inner.lock().unwrap().0
+    }
+}
+
+/// One registered metric (handles are cheap `Arc` clones).
+#[derive(Clone, Debug)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Name -> metric map.  See the module docs for the locking story.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get-or-create the named counter.
+    ///
+    /// Panics if `name` is already registered as a different metric
+    /// type — that is a wiring bug, not a runtime condition.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.inner.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())))
+        {
+            Metric::Counter(c) => c.clone(),
+            other => panic!(
+                "metric '{name}' already registered as {other:?}, not a \
+                 counter"
+            ),
+        }
+    }
+
+    /// Get-or-create the named gauge (panics on a type clash).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.inner.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())))
+        {
+            Metric::Gauge(g) => g.clone(),
+            other => panic!(
+                "metric '{name}' already registered as {other:?}, not a \
+                 gauge"
+            ),
+        }
+    }
+
+    /// Get-or-create the named histogram (panics on a type clash).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.inner.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new())))
+        {
+            Metric::Histogram(h) => h.clone(),
+            other => panic!(
+                "metric '{name}' already registered as {other:?}, not a \
+                 histogram"
+            ),
+        }
+    }
+
+    /// Look up an existing metric without creating one.
+    pub fn get(&self, name: &str) -> Option<Metric> {
+        self.inner.lock().unwrap().get(name).cloned()
+    }
+
+    /// Registered names in deterministic (sorted) order.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Export every registered metric.  Deterministically ordered by
+    /// name (the map is a BTreeMap), so renders diff cleanly.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let m = self.inner.lock().unwrap();
+        let entries = m
+            .iter()
+            .map(|(name, metric)| {
+                let v = match metric {
+                    Metric::Counter(c) => MetricValue::Counter(c.get()),
+                    Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Metric::Histogram(h) => {
+                        MetricValue::Histogram(h.as_ref().into())
+                    }
+                };
+                (name.clone(), v)
+            })
+            .collect();
+        TelemetrySnapshot::new(entries)
+    }
+}
+
+/// The process-wide registry (see the module docs for what belongs
+/// here vs in a per-`Metrics` registry).
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_per_name() {
+        let r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(r.get("x").is_some());
+        assert!(r.get("y").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn type_clash_panics() {
+        let r = Registry::new();
+        r.counter("x");
+        r.gauge("x");
+    }
+
+    #[test]
+    fn counter_store_max_ignores_stale_values() {
+        let c = Counter::new();
+        c.store_max(10);
+        c.store_max(7); // stale mirror of a monotone series
+        assert_eq!(c.get(), 10);
+        c.store_max(12);
+        assert_eq!(c.get(), 12);
+    }
+
+    #[test]
+    fn gauge_rejects_stale_sequences() {
+        let g = Gauge::new();
+        assert!(g.set_at(5, 500));
+        assert!(!g.set_at(3, 300)); // older snapshot arrives late
+        assert_eq!(g.get(), 500);
+        assert_eq!(g.seq(), 5);
+        assert!(g.set_at(6, 600));
+        assert_eq!(g.get(), 600);
+    }
+
+    #[test]
+    fn names_are_sorted() {
+        let r = Registry::new();
+        r.counter("b");
+        r.histogram("a");
+        r.gauge("c");
+        assert_eq!(r.names(), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,349 @@
+//! Versioned registry exports: JSON artifact + Prometheus-style text.
+//!
+//! The JSON artifact uses the repo's standard bench shape
+//! (`util::bench::write_bench_json`: `{"bench": "telemetry", "rows":
+//! [{...}, ...]}`) so CI's sanity gates parse serving benches and
+//! telemetry snapshots with the same code.  The first row is a meta
+//! row carrying [`SCHEMA_VERSION`]; every following row is one metric
+//! (`"kind"`: `"counter"` / `"gauge"` / `"histogram"`).  Histogram
+//! rows embed the *cumulative* per-bucket counts — monotonicity of
+//! that array is a cheap structural invariant the CI gate asserts.
+
+use super::histogram::{Histogram, BUCKETS};
+use crate::util::bench::write_bench_json;
+use crate::util::json::Json;
+
+/// Version of the snapshot row schema.  Bump when row fields change
+/// meaning; the CI `telemetry-sanity` gate pins it.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Point-in-time export of one histogram.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+    /// Cumulative bucket counts (`BUCKETS` entries, monotone
+    /// non-decreasing; the last entry equals `count` once recording
+    /// has quiesced).
+    pub cumulative: Vec<u64>,
+}
+
+impl From<&Histogram> for HistogramSnapshot {
+    fn from(h: &Histogram) -> HistogramSnapshot {
+        let mut cumulative = Vec::with_capacity(BUCKETS);
+        let mut cum = 0u64;
+        for c in h.bucket_counts() {
+            cum += c;
+            cumulative.push(cum);
+        }
+        HistogramSnapshot {
+            count: h.count(),
+            sum: h.sum(),
+            max: h.max_value(),
+            p50: h.percentile(50.0),
+            p99: h.percentile(99.0),
+            p999: h.percentile(99.9),
+            cumulative,
+        }
+    }
+}
+
+/// Exported value of one registered metric.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(u64),
+    Histogram(HistogramSnapshot),
+}
+
+/// A versioned, name-ordered export of a [`super::Registry`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub version: u64,
+    pub entries: Vec<(String, MetricValue)>,
+}
+
+impl TelemetrySnapshot {
+    pub fn new(entries: Vec<(String, MetricValue)>) -> TelemetrySnapshot {
+        TelemetrySnapshot { version: SCHEMA_VERSION, entries }
+    }
+
+    /// Look up an exported value by metric name.
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    /// Merge another snapshot into this one (e.g. a server's serving
+    /// series plus the process-global registry's stage histograms),
+    /// restoring deterministic name order.  `other` wins on a name
+    /// clash.
+    pub fn merged_with(mut self, other: TelemetrySnapshot)
+                       -> TelemetrySnapshot {
+        for (name, v) in other.entries {
+            match self.entries.iter_mut().find(|(n, _)| *n == name) {
+                Some(slot) => slot.1 = v,
+                None => self.entries.push((name, v)),
+            }
+        }
+        self.entries.sort_by(|a, b| a.0.cmp(&b.0));
+        self
+    }
+
+    /// Serialize to `write_bench_json` row bodies (no braces): one
+    /// meta row, then one row per metric.
+    pub fn to_rows(&self) -> Vec<String> {
+        let mut rows = Vec::with_capacity(self.entries.len() + 1);
+        rows.push(format!(
+            "\"name\": \"_meta\", \"kind\": \"meta\", \"version\": {}",
+            self.version
+        ));
+        for (name, v) in &self.entries {
+            rows.push(match v {
+                MetricValue::Counter(c) => format!(
+                    "\"name\": \"{name}\", \"kind\": \"counter\", \
+                     \"value\": {c}"
+                ),
+                MetricValue::Gauge(g) => format!(
+                    "\"name\": \"{name}\", \"kind\": \"gauge\", \
+                     \"value\": {g}"
+                ),
+                MetricValue::Histogram(h) => {
+                    let cum = h
+                        .cumulative
+                        .iter()
+                        .map(|c| c.to_string())
+                        .collect::<Vec<_>>()
+                        .join(", ");
+                    format!(
+                        "\"name\": \"{name}\", \"kind\": \"histogram\", \
+                         \"count\": {}, \"sum\": {}, \"max\": {}, \
+                         \"p50\": {}, \"p99\": {}, \"p999\": {}, \
+                         \"cumulative\": [{cum}]",
+                        h.count, h.sum, h.max, h.p50, h.p99, h.p999
+                    )
+                }
+            });
+        }
+        rows
+    }
+
+    /// The full artifact as an in-memory string (same layout
+    /// `write_bench_json` writes to disk).
+    pub fn to_json(&self) -> String {
+        let rows = self.to_rows();
+        let mut body =
+            String::from("{\n  \"bench\": \"telemetry\",\n  \"rows\": [\n");
+        for (i, row) in rows.iter().enumerate() {
+            body.push_str(&format!(
+                "    {{{row}}}{}\n",
+                if i + 1 == rows.len() { "" } else { "," }
+            ));
+        }
+        body.push_str("  ]\n}\n");
+        body
+    }
+
+    /// Write the artifact to `default_path` (or `$<env_override>`)
+    /// through the shared bench-JSON writer.
+    pub fn write_json(&self, env_override: &str, default_path: &str) {
+        write_bench_json("telemetry", env_override, default_path,
+                         &self.to_rows());
+    }
+
+    /// Parse an artifact back (the JSON round-trip counterpart of
+    /// [`TelemetrySnapshot::to_json`]).  Values survive exactly up to
+    /// f64 integer precision (2^53), far above any latency count.
+    pub fn from_json(s: &str) -> Result<TelemetrySnapshot, String> {
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        let rows = j
+            .get("rows")
+            .and_then(|r| r.as_arr())
+            .ok_or("no 'rows' array")?;
+        let num = |row: &Json, key: &str| -> Result<u64, String> {
+            row.get(key)
+                .and_then(|v| v.as_f64())
+                .map(|v| v as u64)
+                .ok_or_else(|| format!("row missing numeric '{key}'"))
+        };
+        let mut version = None;
+        let mut entries = Vec::new();
+        for row in rows {
+            let kind = row
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or("row missing 'kind'")?;
+            if kind == "meta" {
+                version = Some(num(row, "version")?);
+                continue;
+            }
+            let name = row
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or("row missing 'name'")?
+                .to_string();
+            let v = match kind {
+                "counter" => MetricValue::Counter(num(row, "value")?),
+                "gauge" => MetricValue::Gauge(num(row, "value")?),
+                "histogram" => {
+                    let cumulative = row
+                        .get("cumulative")
+                        .and_then(|c| c.as_arr())
+                        .ok_or("histogram row missing 'cumulative'")?
+                        .iter()
+                        .map(|v| v.as_f64().map(|f| f as u64))
+                        .collect::<Option<Vec<u64>>>()
+                        .ok_or("non-numeric cumulative entry")?;
+                    MetricValue::Histogram(HistogramSnapshot {
+                        count: num(row, "count")?,
+                        sum: num(row, "sum")?,
+                        max: num(row, "max")?,
+                        p50: num(row, "p50")?,
+                        p99: num(row, "p99")?,
+                        p999: num(row, "p999")?,
+                        cumulative,
+                    })
+                }
+                other => return Err(format!("unknown row kind '{other}'")),
+            };
+            entries.push((name, v));
+        }
+        let version = version.ok_or("no meta row with a schema version")?;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "snapshot schema version {version}, expected \
+                 {SCHEMA_VERSION}"
+            ));
+        }
+        Ok(TelemetrySnapshot { version, entries })
+    }
+
+    /// Prometheus-style exposition text.  Metric names are prefixed
+    /// `lop_` with non-alphanumeric characters folded to `_`;
+    /// histograms render as summaries (quantile labels plus
+    /// `_sum`/`_count`/`_max` series).
+    pub fn render_prometheus(&self) -> String {
+        let sanitize = |name: &str| -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect()
+        };
+        let mut out = String::new();
+        for (name, v) in &self.entries {
+            let n = sanitize(name);
+            match v {
+                MetricValue::Counter(c) => {
+                    out.push_str(&format!("lop_{n} {c}\n"));
+                }
+                MetricValue::Gauge(g) => {
+                    out.push_str(&format!("lop_{n} {g}\n"));
+                }
+                MetricValue::Histogram(h) => {
+                    for (q, val) in [
+                        ("0.5", h.p50),
+                        ("0.99", h.p99),
+                        ("0.999", h.p999),
+                    ] {
+                        out.push_str(&format!(
+                            "lop_{n}{{quantile=\"{q}\"}} {val}\n"
+                        ));
+                    }
+                    out.push_str(&format!("lop_{n}_sum {}\n", h.sum));
+                    out.push_str(&format!("lop_{n}_count {}\n", h.count));
+                    out.push_str(&format!("lop_{n}_max {}\n", h.max));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    fn sample() -> TelemetrySnapshot {
+        let r = Registry::new();
+        r.counter("serving.submitted").add(100);
+        r.gauge("plan_cache.resident_panels").set_at(7, 3);
+        let h = r.histogram("serving.latency_us");
+        for v in [100u64, 200, 400, 800, 100_000] {
+            h.record(v);
+        }
+        r.snapshot()
+    }
+
+    #[test]
+    fn snapshot_reads_back_registered_values() {
+        let s = sample();
+        assert_eq!(s.version, SCHEMA_VERSION);
+        assert_eq!(s.get("serving.submitted"),
+                   Some(&MetricValue::Counter(100)));
+        assert_eq!(s.get("plan_cache.resident_panels"),
+                   Some(&MetricValue::Gauge(3)));
+        match s.get("serving.latency_us") {
+            Some(MetricValue::Histogram(h)) => {
+                assert_eq!(h.count, 5);
+                assert_eq!(h.max, 100_000);
+                assert_eq!(h.p50, 512);
+                assert_eq!(h.cumulative.len(), BUCKETS);
+                assert_eq!(*h.cumulative.last().unwrap(), 5);
+                assert!(h.cumulative.windows(2).all(|w| w[0] <= w[1]));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_unions_and_overrides_by_name() {
+        let a = TelemetrySnapshot::new(vec![
+            ("b.one".into(), MetricValue::Counter(1)),
+            ("d.two".into(), MetricValue::Gauge(2)),
+        ]);
+        let b = TelemetrySnapshot::new(vec![
+            ("a.zero".into(), MetricValue::Counter(9)),
+            ("b.one".into(), MetricValue::Counter(5)),
+        ]);
+        let m = a.merged_with(b);
+        let names: Vec<&str> =
+            m.entries.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["a.zero", "b.one", "d.two"]);
+        assert_eq!(m.get("b.one"), Some(&MetricValue::Counter(5)));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let s = sample();
+        let text = s.to_json();
+        let back = TelemetrySnapshot::from_json(&text).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn from_json_rejects_versions_from_the_future() {
+        let s = sample().to_json().replace(
+            &format!("\"version\": {SCHEMA_VERSION}"),
+            "\"version\": 999",
+        );
+        let err = TelemetrySnapshot::from_json(&s).unwrap_err();
+        assert!(err.contains("999"), "{err}");
+    }
+
+    #[test]
+    fn prometheus_render_has_every_series() {
+        let text = sample().render_prometheus();
+        assert!(text.contains("lop_serving_submitted 100"), "{text}");
+        assert!(text.contains("lop_plan_cache_resident_panels 3"),
+                "{text}");
+        assert!(text.contains(
+            "lop_serving_latency_us{quantile=\"0.5\"} 512"
+        ), "{text}");
+        assert!(text.contains("lop_serving_latency_us_count 5"), "{text}");
+        assert!(text.contains("lop_serving_latency_us_max 100000"),
+                "{text}");
+    }
+}

@@ -1,0 +1,266 @@
+//! Stage-scoped spans over the request path.
+//!
+//! Every stop a request makes between `Router::submit` and its reply
+//! has a [`Stage`] label; a [`Span`] is an RAII timer that records
+//! its stage's elapsed microseconds on drop (including during a panic
+//! unwind) into the global `stage.<name>_us` histogram *and* a
+//! thread-local accumulator that lets the engine worker assemble a
+//! per-request [`StageBreakdown`] without any shared state.
+//!
+//! Tracing is off by default: `Span::enter` then costs one relaxed
+//! atomic load and takes no timestamp.  It turns on process-wide via
+//! `LOP_TRACE=1` (read once, lazily) or [`set_trace`] from tests.
+//!
+//! Stage taxonomy (units: microseconds):
+//!
+//! | label            | covers                                        |
+//! |------------------|-----------------------------------------------|
+//! | `submit`         | `Router::submit` admission (policy + enqueue) |
+//! | `queue_wait`     | admit -> batch release (per request)          |
+//! | `batch_assemble` | gathering the released batch into a tensor    |
+//! | `plan_lookup`    | `PlanCache` get-or-prepare for the config     |
+//! | `gemm_pack`      | A/B panel packing inside the blocked driver   |
+//! | `gemm_kernel`    | the blocked k-reduction macrokernel loops     |
+//! | `gemm_epilogue`  | fused bias/ReLU/requantize finish sweeps      |
+//! | `reply`          | delivering responses to waiting callers       |
+//!
+//! `submit` overlaps `queue_wait` (admission happens while the clock
+//! on queueing starts) and `reply` lands after the end-to-end latency
+//! stamp, so accounting identities over breakdowns should sum the six
+//! interior stages only — the CI `telemetry-sanity` gate does.
+
+use super::histogram::Histogram;
+use super::registry::global;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// One stop on the request path (see the module-level taxonomy table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Submit,
+    QueueWait,
+    BatchAssemble,
+    PlanLookup,
+    GemmPack,
+    GemmKernel,
+    GemmEpilogue,
+    Reply,
+}
+
+/// Every stage, in request-path order.
+pub const STAGES: [Stage; 8] = [
+    Stage::Submit,
+    Stage::QueueWait,
+    Stage::BatchAssemble,
+    Stage::PlanLookup,
+    Stage::GemmPack,
+    Stage::GemmKernel,
+    Stage::GemmEpilogue,
+    Stage::Reply,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchAssemble => "batch_assemble",
+            Stage::PlanLookup => "plan_lookup",
+            Stage::GemmPack => "gemm_pack",
+            Stage::GemmKernel => "gemm_kernel",
+            Stage::GemmEpilogue => "gemm_epilogue",
+            Stage::Reply => "reply",
+        }
+    }
+
+    /// Registry name of this stage's global histogram.
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            Stage::Submit => "stage.submit_us",
+            Stage::QueueWait => "stage.queue_wait_us",
+            Stage::BatchAssemble => "stage.batch_assemble_us",
+            Stage::PlanLookup => "stage.plan_lookup_us",
+            Stage::GemmPack => "stage.gemm_pack_us",
+            Stage::GemmKernel => "stage.gemm_kernel_us",
+            Stage::GemmEpilogue => "stage.gemm_epilogue_us",
+            Stage::Reply => "stage.reply_us",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+// 0 = uninitialized, 1 = off, 2 = on.  Lazily seeded from LOP_TRACE
+// so library users never pay the env lookup unless a span site runs.
+static TRACE: AtomicU8 = AtomicU8::new(0);
+
+/// Is stage tracing on?  (`LOP_TRACE=1`, or forced via [`set_trace`].)
+#[inline]
+pub fn trace_enabled() -> bool {
+    match TRACE.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let on = std::env::var("LOP_TRACE")
+                .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+                .unwrap_or(false);
+            TRACE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Force tracing on/off process-wide (tests, `serve` wiring).
+pub fn set_trace(on: bool) {
+    TRACE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// The global per-stage histograms, registered once.
+fn stage_hist(stage: Stage) -> &'static Arc<Histogram> {
+    static HISTS: OnceLock<[Arc<Histogram>; 8]> = OnceLock::new();
+    let hists = HISTS.get_or_init(|| {
+        std::array::from_fn(|i| global().histogram(STAGES[i].metric_name()))
+    });
+    &hists[stage.index()]
+}
+
+thread_local! {
+    // Per-thread running total of traced microseconds per stage; the
+    // engine worker diffs this around a batch to build breakdowns.
+    static STAGE_SUMS: Cell<[u64; 8]> = const { Cell::new([0; 8]) };
+}
+
+/// Record `us` microseconds against `stage`: global histogram plus
+/// the calling thread's breakdown accumulator.
+pub fn record_stage(stage: Stage, us: u64) {
+    stage_hist(stage).record(us);
+    STAGE_SUMS.with(|c| {
+        let mut sums = c.get();
+        sums[stage.index()] += us;
+        c.set(sums);
+    });
+}
+
+/// This thread's cumulative traced microseconds, indexed like
+/// [`STAGES`].  Diff two readings to attribute work done in between.
+pub fn local_stage_sums() -> [u64; 8] {
+    STAGE_SUMS.with(|c| c.get())
+}
+
+/// RAII stage timer: times its own drop scope when tracing is on,
+/// does nothing (no timestamp taken) when off.  Records on unwind
+/// too — a panicking batch still accounts its partial stages.
+pub struct Span {
+    stage: Stage,
+    start: Option<Instant>,
+}
+
+impl Span {
+    #[inline]
+    pub fn enter(stage: Stage) -> Span {
+        let start = if trace_enabled() { Some(Instant::now()) } else { None };
+        Span { stage, start }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            record_stage(self.stage, t0.elapsed().as_micros() as u64);
+        }
+    }
+}
+
+/// Per-request stage attribution, attached to a `Response` when
+/// tracing is on.  Stage order follows [`STAGES`]; only stages that
+/// actually ran appear.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageBreakdown {
+    pub stages: Vec<(&'static str, u64)>,
+}
+
+impl StageBreakdown {
+    pub fn total_us(&self) -> u64 {
+        self.stages.iter().map(|(_, us)| us).sum()
+    }
+
+    /// One-line rendering: `queue_wait=120us plan_lookup=4us ...`.
+    pub fn render(&self) -> String {
+        self.stages
+            .iter()
+            .map(|(name, us)| format!("{name}={us}us"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test owns the process-global trace flag: splitting the
+    // off/on halves into separate #[test]s would race under the
+    // parallel test runner.
+    #[test]
+    fn spans_gate_on_the_trace_flag() {
+        set_trace(false);
+        let before = stage_hist(Stage::Submit).count();
+        {
+            let _s = Span::enter(Stage::Submit);
+        }
+        assert_eq!(stage_hist(Stage::Submit).count(), before);
+        assert!(!trace_enabled());
+
+        set_trace(true);
+        let hist_before = stage_hist(Stage::PlanLookup).count();
+        let local_before = local_stage_sums();
+        {
+            let _s = Span::enter(Stage::PlanLookup);
+        }
+        {
+            let _s = Span::enter(Stage::PlanLookup);
+        }
+        assert_eq!(stage_hist(Stage::PlanLookup).count(), hist_before + 2);
+        let local_after = local_stage_sums();
+        let i = Stage::PlanLookup.index();
+        assert!(local_after[i] >= local_before[i]);
+        for (j, (a, b)) in
+            local_before.iter().zip(local_after.iter()).enumerate()
+        {
+            if j != i {
+                assert_eq!(a, b, "stage {j} moved");
+            }
+        }
+        set_trace(false);
+    }
+
+    #[test]
+    fn stage_names_are_stable() {
+        // the CI sanity gate and DESIGN.md both key on these strings
+        let names: Vec<&str> = STAGES.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "submit", "queue_wait", "batch_assemble", "plan_lookup",
+                "gemm_pack", "gemm_kernel", "gemm_epilogue", "reply",
+            ]
+        );
+        for s in STAGES {
+            assert_eq!(s.metric_name(),
+                       format!("stage.{}_us", s.name()).as_str());
+        }
+    }
+
+    #[test]
+    fn breakdown_totals_and_renders() {
+        let b = StageBreakdown {
+            stages: vec![("queue_wait", 120), ("gemm_kernel", 40)],
+        };
+        assert_eq!(b.total_us(), 160);
+        assert_eq!(b.render(), "queue_wait=120us gemm_kernel=40us");
+    }
+}

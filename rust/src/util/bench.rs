@@ -2,30 +2,35 @@
 //!
 //! `cargo bench` targets are declared with `harness = false` and drive this
 //! module: warmup, timed iterations, and a summary with mean / p50 / p99.
+//!
+//! Iteration times land in a [`crate::telemetry::Histogram`] (log2
+//! buckets), so bench percentiles come from the same read-out the
+//! serving metrics use: a percentile is the covering bucket's upper
+//! bound clamped to the observed max — within 2x of the true sample
+//! value, exact at p100.  No bench keeps a private sorted-`Vec`
+//! percentile path.
 
+use crate::telemetry::Histogram;
 use std::time::Instant;
 
-/// Result of one benchmark: per-iteration wall times in nanoseconds.
+/// Result of one benchmark: per-iteration wall times in nanoseconds,
+/// accumulated in a shared-shape telemetry histogram.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
-    pub ns: Vec<u64>,
+    pub hist: Histogram,
 }
 
 impl BenchResult {
     pub fn mean_ns(&self) -> f64 {
-        self.ns.iter().sum::<u64>() as f64 / self.ns.len().max(1) as f64
+        self.hist.mean()
     }
 
+    /// Bucketed percentile in nanoseconds (see the module docs for
+    /// the error bound).
     pub fn percentile_ns(&self, p: f64) -> u64 {
-        if self.ns.is_empty() {
-            return 0;
-        }
-        let mut v = self.ns.clone();
-        v.sort_unstable();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
+        self.hist.percentile(p)
     }
 
     pub fn summary(&self) -> String {
@@ -58,13 +63,13 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
     for _ in 0..warmup {
         f();
     }
-    let mut ns = Vec::with_capacity(iters);
+    let hist = Histogram::new();
     for _ in 0..iters {
         let t0 = Instant::now();
         f();
-        ns.push(t0.elapsed().as_nanos() as u64);
+        hist.record(t0.elapsed().as_nanos() as u64);
     }
-    BenchResult { name: name.to_string(), iters, ns }
+    BenchResult { name: name.to_string(), iters, hist }
 }
 
 /// Print the standard header row for a bench table.
@@ -119,20 +124,25 @@ mod tests {
         let r = bench("noop", 2, 16, || {
             black_box(1 + 1);
         });
-        assert_eq!(r.ns.len(), 16);
+        assert_eq!(r.hist.count(), 16);
         assert!(r.mean_ns() >= 0.0);
     }
 
     #[test]
     fn percentiles_ordered() {
-        let r = BenchResult {
-            name: "x".into(),
-            iters: 5,
-            ns: vec![50, 10, 30, 20, 40],
-        };
-        assert_eq!(r.percentile_ns(0.0), 10);
-        assert_eq!(r.percentile_ns(50.0), 30);
-        assert_eq!(r.percentile_ns(100.0), 50);
+        let hist = Histogram::new();
+        for v in [50, 10, 30, 20, 40] {
+            hist.record(v);
+        }
+        let r = BenchResult { name: "x".into(), iters: 5, hist };
+        // bucketed semantics: each read-out covers its true sample
+        // (within 2x) and p100 is the exact max
+        let (p50, p99, p100) = (r.percentile_ns(50.0),
+                                r.percentile_ns(99.0),
+                                r.percentile_ns(100.0));
+        assert!((30..=50).contains(&p50), "p50 = {p50}");
+        assert!(p50 <= p99 && p99 <= p100, "{p50} {p99} {p100}");
+        assert_eq!(p100, 50);
     }
 
     #[test]

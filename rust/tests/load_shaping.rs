@@ -14,7 +14,6 @@ use lop::coordinator::router::{OverloadPolicy, SubmitError};
 use lop::coordinator::server::{Server, ServerOpts};
 use lop::nn::network::Model;
 use lop::nn::spec::{NetSpec, ReprMap};
-use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
@@ -87,7 +86,7 @@ fn submit_after_shutdown_is_shutting_down_not_overload() {
     let (tx, _rx) = channel();
     assert_eq!(router.submit(0, img(), None, tx),
                Err(SubmitError::ShuttingDown));
-    assert_eq!(metrics.rejected.load(Ordering::Relaxed), 0,
+    assert_eq!(metrics.rejected.get(), 0,
                "drain refusals must not count as overload");
 }
 
@@ -110,8 +109,8 @@ fn backend_failures_are_typed_counted_and_excluded_from_latency() {
         assert!(!r.is_ok());
     }
     let m = &server.metrics;
-    assert_eq!(m.backend_failures.load(Ordering::Relaxed), 5);
-    assert_eq!(m.completed.load(Ordering::Relaxed), 0,
+    assert_eq!(m.backend_failures.get(), 5);
+    assert_eq!(m.completed.get(), 0,
                "failures must not count as completions");
     assert_eq!(m.percentile_us(99.0), 0,
                "failures must stay out of the latency buckets");
@@ -137,10 +136,10 @@ fn reject_policy_counts_every_refusal() {
     server.shutdown().unwrap(); // flushes the held partial batch
     let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
     assert!(r.is_ok());
-    assert_eq!(metrics.submitted.load(Ordering::Relaxed), 1,
+    assert_eq!(metrics.submitted.get(), 1,
                "submitted counts accepted admissions only");
-    assert_eq!(metrics.rejected.load(Ordering::Relaxed), 2);
-    assert_eq!(metrics.completed.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.rejected.get(), 2);
+    assert_eq!(metrics.completed.get(), 1);
 }
 
 #[test]
@@ -164,15 +163,15 @@ fn shed_policy_drops_newest_with_a_typed_answer() {
     let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
     assert!(r.is_ok(), "the queued request is served on drain");
     let m = &metrics;
-    assert_eq!(m.shed.load(Ordering::Relaxed), 3);
-    assert_eq!(m.expired.load(Ordering::Relaxed), 0);
+    assert_eq!(m.shed.get(), 3);
+    assert_eq!(m.expired.get(), 0);
     // the accounting identity: every accepted request resolves once
     assert_eq!(
-        m.submitted.load(Ordering::Relaxed),
-        m.completed.load(Ordering::Relaxed)
-            + m.shed.load(Ordering::Relaxed)
-            + m.expired.load(Ordering::Relaxed)
-            + m.backend_failures.load(Ordering::Relaxed)
+        m.submitted.get(),
+        m.completed.get()
+            + m.shed.get()
+            + m.expired.get()
+            + m.backend_failures.get()
     );
 }
 
@@ -201,10 +200,10 @@ fn degrade_policy_reroutes_to_the_cheaper_config() {
         let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         assert!(r.is_ok(), "degraded requests are served, not dropped");
     }
-    assert_eq!(metrics.submitted.load(Ordering::Relaxed), 2);
-    assert_eq!(metrics.degraded.load(Ordering::Relaxed), 1);
-    assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
-    assert_eq!(metrics.completed.load(Ordering::Relaxed), 2);
+    assert_eq!(metrics.submitted.get(), 2);
+    assert_eq!(metrics.degraded.get(), 1);
+    assert_eq!(metrics.rejected.get(), 1);
+    assert_eq!(metrics.completed.get(), 2);
 }
 
 #[test]
@@ -232,7 +231,7 @@ fn queueing_deadlines_expire_and_per_request_overrides_win() {
     assert!(r.is_ok(), "a live deadline must not expire: {:?}",
             r.outcome);
     let m = &server.metrics;
-    assert_eq!(m.expired.load(Ordering::Relaxed), 1);
-    assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.expired.get(), 1);
+    assert_eq!(m.completed.get(), 1);
     server.shutdown().unwrap();
 }

@@ -1,0 +1,317 @@
+//! Tier-1 acceptance for `lop::telemetry`: bucket math against a
+//! scalar oracle, concurrent record/merge conservation, span RAII
+//! (nesting and panic unwind), snapshot JSON round-trip, and the
+//! serving accounting identity read through registry counters alone.
+//!
+//! The trace flag is process-global, so exactly one test here owns
+//! it ([`spans_nest_and_record_on_unwind`]); everything it asserts
+//! about global state is monotone (`>=`), and its exact claims read
+//! this thread's local stage sums, which no other test can touch.
+
+use lop::coordinator::batcher::{FailureKind, Outcome};
+use lop::coordinator::router::OverloadPolicy;
+use lop::coordinator::server::{Server, ServerOpts};
+use lop::nn::network::Model;
+use lop::nn::spec::{NetSpec, ReprMap};
+use lop::telemetry::{
+    bucket_index, bucket_upper_bound, local_stage_sums, set_trace,
+    Histogram, LocalHistogram, MetricValue, Registry, Span, Stage,
+    TelemetrySnapshot, BUCKETS, STAGES,
+};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// histogram: bucket boundaries and the [true, 2*true) bound
+// ---------------------------------------------------------------------
+
+#[test]
+fn bucket_boundaries_match_the_scalar_oracle() {
+    // oracle: floor(log2(v)) as the highest-set-bit position, in
+    // integer math (a float log2 rounds wrong near 2^53 and above)
+    let oracle = |v: u64| (64 - v.max(1).leading_zeros() - 1) as usize;
+    for i in 1..64u32 {
+        let b = 1u64 << i;
+        for v in [b - 1, b, b + 1, b + (b >> 1)] {
+            assert_eq!(bucket_index(v), oracle(v), "v={v}");
+        }
+    }
+    assert_eq!(bucket_index(0), 0);
+    assert_eq!(bucket_index(1), 0);
+    assert_eq!(bucket_index(u64::MAX), 63);
+    assert_eq!(bucket_upper_bound(0), 2);
+    assert_eq!(bucket_upper_bound(62), 1u64 << 63);
+    assert_eq!(bucket_upper_bound(63), u64::MAX);
+    // exactly one bucket per value: upper bound of bucket i is the
+    // first value that lands in bucket i+1
+    for i in 0..62usize {
+        let ub = bucket_upper_bound(i);
+        assert_eq!(bucket_index(ub - 1), i);
+        assert_eq!(bucket_index(ub), i + 1);
+    }
+    // a single-observation histogram reads exact at every percentile
+    // (the max clamp collapses the bucket bound onto the value)
+    for v in [1u64, 2, 3, 1023, 1024, 1025, 1 << 40, u64::MAX] {
+        let h = Histogram::new();
+        h.record(v);
+        assert_eq!(h.percentile(50.0), v, "v={v}");
+        assert_eq!(h.percentile(100.0), v, "v={v}");
+    }
+}
+
+#[test]
+fn concurrent_recording_and_shard_merges_conserve_counts() {
+    // 8 threads, 5000 observations each: even threads batch through a
+    // LocalHistogram shard, odd threads hit the shared atomics
+    // directly.  The result must equal a single-threaded oracle.
+    let shared = Arc::new(Histogram::new());
+    let val = |t: u64, i: u64| (i * (t + 1)) % 250_000 + 1;
+    std::thread::scope(|scope| {
+        for t in 0..8u64 {
+            let shared = Arc::clone(&shared);
+            scope.spawn(move || {
+                if t % 2 == 0 {
+                    let mut local = LocalHistogram::new();
+                    for i in 1..=5000u64 {
+                        local.record(val(t, i));
+                    }
+                    local.merge_into(&shared);
+                    assert_eq!(local.count(), 0, "shard reset on flush");
+                } else {
+                    for i in 1..=5000u64 {
+                        shared.record(val(t, i));
+                    }
+                }
+            });
+        }
+    });
+    let oracle = Histogram::new();
+    let mut all: Vec<u64> = Vec::with_capacity(40_000);
+    for t in 0..8u64 {
+        for i in 1..=5000u64 {
+            oracle.record(val(t, i));
+            all.push(val(t, i));
+        }
+    }
+    assert_eq!(shared.count(), 40_000);
+    assert_eq!(shared.count(), oracle.count());
+    assert_eq!(shared.sum(), oracle.sum());
+    assert_eq!(shared.max_value(), oracle.max_value());
+    assert_eq!(shared.bucket_counts(), oracle.bucket_counts());
+    // percentile read-outs respect [true, 2*true) vs the sorted oracle
+    all.sort_unstable();
+    for p in [50.0, 99.0, 99.9] {
+        let rank = ((p / 100.0) * all.len() as f64).ceil() as usize;
+        let truth = all[rank - 1];
+        let read = shared.percentile(p);
+        assert!(read >= truth && read < 2 * truth,
+                "p{p}: read {read} vs true {truth}");
+    }
+    assert_eq!(shared.percentile(100.0), *all.last().unwrap());
+}
+
+// ---------------------------------------------------------------------
+// spans: nesting and RAII on panic (sole owner of the trace flag)
+// ---------------------------------------------------------------------
+
+fn idx(s: Stage) -> usize {
+    STAGES.iter().position(|&x| x == s).unwrap()
+}
+
+#[test]
+fn spans_nest_and_record_on_unwind() {
+    // traced off: entering a span records nothing on this thread
+    set_trace(false);
+    let base = local_stage_sums();
+    {
+        let _s = Span::enter(Stage::BatchAssemble);
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(local_stage_sums(), base, "untraced span recorded");
+
+    set_trace(true);
+    // nesting: the outer span's scope encloses the inner one, so its
+    // recorded time must be at least the inner stage's
+    let base = local_stage_sums();
+    {
+        let _outer = Span::enter(Stage::BatchAssemble);
+        std::thread::sleep(Duration::from_millis(4));
+        {
+            let _inner = Span::enter(Stage::PlanLookup);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let after = local_stage_sums();
+    let outer = after[idx(Stage::BatchAssemble)]
+        - base[idx(Stage::BatchAssemble)];
+    let inner =
+        after[idx(Stage::PlanLookup)] - base[idx(Stage::PlanLookup)];
+    assert!(inner >= 1_000, "inner span lost time: {inner}us");
+    assert!(outer >= inner,
+            "outer {outer}us must enclose inner {inner}us");
+
+    // RAII on panic: a span dropped during unwind still records
+    let base = local_stage_sums();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        let _s = Span::enter(Stage::GemmEpilogue);
+        std::thread::sleep(Duration::from_millis(2));
+        panic!("batch blew up mid-stage");
+    }));
+    assert!(r.is_err());
+    let after = local_stage_sums();
+    let us = after[idx(Stage::GemmEpilogue)]
+        - base[idx(Stage::GemmEpilogue)];
+    assert!(us >= 1_000, "unwound span lost time: {us}us");
+    set_trace(false);
+}
+
+// ---------------------------------------------------------------------
+// snapshots: JSON round-trip and structural invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn snapshot_round_trips_and_orders_percentiles() {
+    let r = Registry::new();
+    r.counter("serving.submitted").add(512);
+    r.gauge("plan_cache.resident_panels").set_at(9, 6);
+    let h = r.histogram("serving.latency_us");
+    for i in 1..=500u64 {
+        h.record(i * 37 % 90_000 + 1);
+    }
+    h.record(2_000_000); // one straggler to spread the tail
+    let snap = r.snapshot();
+
+    let text = snap.to_json();
+    let back = TelemetrySnapshot::from_json(&text).unwrap();
+    assert_eq!(snap, back, "JSON round-trip must be lossless");
+
+    match back.get("serving.latency_us") {
+        Some(MetricValue::Histogram(hs)) => {
+            assert_eq!(hs.count, 501);
+            assert_eq!(hs.cumulative.len(), BUCKETS);
+            assert_eq!(*hs.cumulative.last().unwrap(), hs.count);
+            assert!(hs.cumulative.windows(2).all(|w| w[0] <= w[1]),
+                    "cumulative buckets must be monotone");
+            assert!(hs.p50 <= hs.p99 && hs.p99 <= hs.p999
+                        && hs.p999 <= hs.max,
+                    "p50 {} p99 {} p999 {} max {}",
+                    hs.p50, hs.p99, hs.p999, hs.max);
+            assert_eq!(hs.p999, 2_000_000, "max clamp: exact tail");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(back.get("serving.submitted"),
+               Some(&MetricValue::Counter(512)));
+}
+
+// ---------------------------------------------------------------------
+// the serving accounting identity, via registry counters alone
+// ---------------------------------------------------------------------
+
+fn small_spec() -> NetSpec {
+    NetSpec::parse("28x28x1: dense(8)+relu | dense(10)").unwrap()
+}
+
+fn start(opts: ServerOpts, seed: u64) -> Server {
+    let model = Arc::new(Model::synthetic(small_spec(), seed));
+    Server::start_with_model(opts, model, None).unwrap()
+}
+
+fn counter_of(snap: &TelemetrySnapshot, name: &str) -> u64 {
+    match snap.get(name) {
+        Some(MetricValue::Counter(v)) => *v,
+        other => panic!("{name}: expected a counter, got {other:?}"),
+    }
+}
+
+#[test]
+fn accounting_identity_holds_through_the_registry() {
+    // Shed leg: capacity 1 with a held queue (max_batch 2, max_wait
+    // 5s) deterministically sheds 3 of 4 accepted requests; shutdown
+    // flushes the held one to completion.
+    let spec = small_spec();
+    let opts = ServerOpts {
+        configs: vec![ReprMap::parse_for(&spec, "FI(6,8)").unwrap()],
+        max_batch: 2,
+        max_wait: Duration::from_secs(5),
+        queue_capacity: 1,
+        engine_workers: 1,
+        engine_gemm_threads: 1,
+        use_pjrt: false,
+        overload: OverloadPolicy::Shed,
+        ..ServerOpts::default()
+    };
+    let server = start(opts, 23);
+    let (tx, rx) = channel();
+    for _ in 0..4 {
+        server.router.submit(0, vec![0.1; 784], None, tx.clone())
+            .unwrap();
+    }
+    drop(tx);
+    for _ in 0..3 {
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r.outcome, Outcome::Error(FailureKind::Shed));
+    }
+    let metrics = server.metrics.clone();
+    server.shutdown().unwrap();
+    assert!(rx.recv_timeout(Duration::from_secs(60)).unwrap().is_ok());
+
+    // read every term from the exported snapshot, not typed fields —
+    // the registry is the system of record
+    let snap = metrics.snapshot();
+    let c = |name: &str| counter_of(&snap, name);
+    assert_eq!(c("serving.submitted"), 4);
+    assert_eq!(c("serving.shed"), 3);
+    assert_eq!(c("serving.completed"), 1);
+    assert_eq!(
+        c("serving.submitted"),
+        c("serving.completed") + c("serving.shed")
+            + c("serving.expired") + c("serving.backend_failures"),
+        "every accepted request must resolve exactly once"
+    );
+
+    // Backend leg: injected forward failures resolve as
+    // backend_failures and keep the identity intact.
+    let spec = small_spec();
+    let opts = ServerOpts {
+        configs: vec![ReprMap::parse_for(&spec, "FI(6,8)").unwrap()],
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 64,
+        engine_workers: 1,
+        engine_gemm_threads: 1,
+        use_pjrt: false,
+        overload: OverloadPolicy::Reject,
+        inject_backend_failures: true,
+        ..ServerOpts::default()
+    };
+    let server = start(opts, 29);
+    let (tx, rx) = channel();
+    for _ in 0..5 {
+        server.router.submit(0, vec![0.1; 784], None, tx.clone())
+            .unwrap();
+    }
+    drop(tx);
+    for _ in 0..5 {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r.outcome, Outcome::Error(FailureKind::Backend));
+    }
+    let metrics = server.metrics.clone();
+    server.shutdown().unwrap();
+    let snap = metrics.snapshot();
+    let c = |name: &str| counter_of(&snap, name);
+    assert_eq!(c("serving.backend_failures"), 5);
+    assert_eq!(c("serving.completed"), 0);
+    assert_eq!(
+        c("serving.submitted"),
+        c("serving.completed") + c("serving.shed")
+            + c("serving.expired") + c("serving.backend_failures")
+    );
+    // failures stay out of the latency histogram
+    match snap.get("serving.latency_us") {
+        Some(MetricValue::Histogram(h)) => assert_eq!(h.count, 0),
+        other => panic!("unexpected {other:?}"),
+    }
+}
